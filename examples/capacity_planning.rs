@@ -1,0 +1,75 @@
+//! Capacity planning with the §3 closed forms: batch-size limits
+//! (Fig 2/3) and per-request serving cost (Fig 4) across SLO choices —
+//! the numbers a provider would use to price SLO tiers (§3.3).
+//!
+//! ```sh
+//! cargo run --release --example capacity_planning
+//! ```
+
+use polyserve::analysis::{
+    fig2_decode_batch_series, fig3_coloc_batch_series, fig4_cost_series,
+};
+use polyserve::model::CostModel;
+
+fn main() {
+    let cm = CostModel::h200_llama8b();
+    let tpots = [16.0, 20.0, 25.0, 30.0, 40.0, 50.0, 75.0, 100.0, 150.0];
+    let configs = [(512u64, 512u64), (1000, 1000), (1000, 4000), (4000, 1000), (4000, 4000)];
+
+    println!("== Fig 2: max decode batch vs TPOT (PD-disaggregation) ==");
+    print!("{:>12}", "TPOT ms");
+    for (p, d) in &configs {
+        print!("{:>14}", format!("({p},{d})"));
+    }
+    println!();
+    for (i, tpot) in tpots.iter().enumerate() {
+        print!("{tpot:>12.0}");
+        for (p, d) in &configs {
+            let s = fig2_decode_batch_series(&cm, *p, *d, &tpots);
+            print!("{:>14}", s[i].batch);
+        }
+        println!();
+    }
+
+    println!("\n== Fig 3: max co-located token batch vs TPOT × TTFT ==");
+    for ttft in [300.0, 700.0, 2000.0] {
+        println!("TTFT = {ttft} ms:");
+        print!("{:>12}", "TPOT ms");
+        for (p, d) in &configs {
+            print!("{:>14}", format!("({p},{d})"));
+        }
+        println!();
+        for (i, tpot) in tpots.iter().enumerate() {
+            print!("{tpot:>12.0}");
+            for (p, d) in &configs {
+                let s = fig3_coloc_batch_series(&cm, *p, *d, ttft, &tpots);
+                print!("{:>14}", s[i].batch);
+            }
+            println!();
+        }
+    }
+
+    println!("\n== Fig 4: cost (instance·s/request) vs TPOT, TTFT=700ms ==");
+    println!("{:>12} {:>12} {:>12} {:>12}", "config", "TPOT ms", "CO cost", "PD cost");
+    for (p, d) in &configs {
+        for pt in fig4_cost_series(&cm, *p, *d, 700.0, &[20.0, 50.0, 100.0]) {
+            println!(
+                "{:>12} {:>12.0} {:>12} {:>12}",
+                format!("({p},{d})"),
+                pt.tpot_ms,
+                fmt_cost(pt.cost_coloc_s),
+                fmt_cost(pt.cost_pd_s),
+            );
+        }
+    }
+    println!("\n(∞ = the SLO is infeasible for that architecture/config — see");
+    println!(" EXPERIMENTS.md for the discussion of the paper's Fig 4 regime)");
+}
+
+fn fmt_cost(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.3}")
+    } else {
+        "∞".to_string()
+    }
+}

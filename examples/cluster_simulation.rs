@@ -1,0 +1,72 @@
+//! Cluster-scale simulation example: reproduce one Fig-6 cell — all
+//! policies on one trace across the load spectrum — and print the
+//! attainment table plus goodput-at-90%.
+//!
+//! ```sh
+//! cargo run --release --example cluster_simulation [trace] [instances]
+//! ```
+
+use polyserve::analysis::ServingMode;
+use polyserve::config::{Policy, SimConfig};
+use polyserve::figures::attainment_curve;
+use polyserve::workload::TraceKind;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let trace = args
+        .first()
+        .and_then(|s| TraceKind::from_name(s))
+        .unwrap_or(TraceKind::ShareGpt);
+    let instances: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(20);
+    let fracs = [0.2, 0.4, 0.6, 0.8, 0.9, 1.0, 1.1, 1.2];
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+
+    println!("trace {}, {instances} instances, 6000 requests/cell\n", trace.name());
+    for mode in [ServingMode::PdDisaggregated, ServingMode::Colocated] {
+        println!("--- {} ---", mode.name().to_uppercase());
+        let mut goodputs: Vec<(String, f64, f64)> = Vec::new();
+        for policy in [Policy::PolyServe, Policy::Random, Policy::Minimal, Policy::Chunk] {
+            if policy == Policy::Chunk && mode == ServingMode::PdDisaggregated {
+                continue; // CO-only baseline
+            }
+            let cfg = SimConfig {
+                trace,
+                policy,
+                mode,
+                instances,
+                requests: 6_000,
+                ..Default::default()
+            };
+            let (curve, optimal) = attainment_curve(&cfg, &fracs, threads);
+            let label = policy.label(mode);
+            print!("{label:>14}:");
+            for (rate, att) in &curve.points {
+                print!(" {:.0}rps={att:.2}", rate);
+            }
+            println!();
+            if let Some(g) = curve.goodput_at(0.9) {
+                goodputs.push((label, g, optimal));
+            }
+        }
+        println!();
+        for (label, g, opt) in &goodputs {
+            println!(
+                "{label:>14}: goodput@90% = {g:7.1} req/s  ({:.1}% of the closed-form optimal bound)",
+                100.0 * g / opt.max(1e-9)
+            );
+        }
+        if let (Some(ps), Some(best)) = (
+            goodputs.iter().find(|(l, _, _)| l.contains("PolyServe")),
+            goodputs
+                .iter()
+                .filter(|(l, _, _)| !l.contains("PolyServe"))
+                .map(|(_, g, _)| *g)
+                .max_by(|a, b| a.partial_cmp(b).unwrap()),
+        ) {
+            println!(
+                "{:>14}  PolyServe gain over best baseline: {:.2}×\n",
+                "", ps.1 / best
+            );
+        }
+    }
+}

@@ -1,0 +1,74 @@
+//! Quickstart: load the AOT model artifacts, serve a handful of
+//! requests through the PJRT engine, print tokens and latencies.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use polyserve::runtime::{ArtifactStore, Engine};
+use std::rc::Rc;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    anyhow::ensure!(
+        dir.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+
+    println!("loading artifacts from {} ...", dir.display());
+    let store = Rc::new(ArtifactStore::open(&dir)?);
+    println!(
+        "model {} — {} layers, hidden {}, vocab {}, {} weights",
+        store.model.name,
+        store.model.num_layers,
+        store.model.hidden,
+        store.model.vocab,
+        store.weights.len()
+    );
+    let t0 = Instant::now();
+    let engine = Engine::load(Rc::clone(&store))?;
+    println!(
+        "compiled {} executables on '{}' in {:.1} s",
+        store.executables.len(),
+        engine.platform(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    // Serve three requests: prefill (chunked automatically), then
+    // batch-decode them together — the vLLM-style continuous batch.
+    let prompts: Vec<Vec<i32>> = vec![
+        (1..20).collect(),
+        (100..260).collect(),
+        vec![7; 50],
+    ];
+    let mut kvs = Vec::new();
+    for (i, p) in prompts.iter().enumerate() {
+        let mut kv = engine.new_kv();
+        let t = Instant::now();
+        let first = engine.prefill(&mut kv, p)?;
+        println!(
+            "req {i}: prompt {} tokens → first token {first} (TTFT {:.1} ms)",
+            p.len(),
+            t.elapsed().as_secs_f64() * 1000.0
+        );
+        kvs.push(kv);
+    }
+    print!("decoding 12 tokens per request:");
+    let t = Instant::now();
+    let mut streams: Vec<Vec<i32>> = kvs.iter().map(|kv| vec![kv.last_token]).collect();
+    for _ in 0..12 {
+        let mut refs: Vec<&mut _> = kvs.iter_mut().collect();
+        let next = engine.decode_step(&mut refs)?;
+        for (s, t) in streams.iter_mut().zip(&next) {
+            s.push(*t);
+        }
+    }
+    let per_tok = t.elapsed().as_secs_f64() * 1000.0 / 12.0;
+    println!(" {:.1} ms/iteration (batch of 3)", per_tok);
+    for (i, s) in streams.iter().enumerate() {
+        println!("req {i} tokens: {s:?}");
+    }
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time compile path (Layer 1 + Layer 2).
+
+Never imported at serving time: `make artifacts` runs `compile.aot`
+once, writing HLO text + a manifest under `artifacts/`; the Rust binary
+is self-contained afterwards.
+"""

@@ -1,0 +1,181 @@
+"""AOT lowering: JAX → HLO text artifacts for the Rust PJRT runtime.
+
+Emits, under ``artifacts/``:
+
+* ``decode_b{B}.hlo.txt``  — decode step for each batch bucket B
+* ``prefill_t{T}.hlo.txt`` — prefill chunk for each chunk bucket T
+* ``weights.bin``          — all weight tensors, f32 little-endian,
+  concatenated in ABI order (model.weight_specs)
+* ``manifest.json``        — model config, buckets, weight table, and
+  the argument/result ABI of every entry point
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Run via ``make artifacts``; a no-op if inputs are unchanged (make
+handles staleness). Python never runs at serving time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+DECODE_BATCH_BUCKETS = [1, 2, 4, 8]
+PREFILL_CHUNK_BUCKETS = [64, 128]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_decode(cfg: M.ModelConfig, batch: int, use_pallas: bool = True) -> str:
+    fn = M.make_decode_fn(cfg, use_pallas=use_pallas)
+    kv_shape = M.kv_cache_shape_decode(cfg, batch)
+    args = [
+        jax.ShapeDtypeStruct((batch,), jnp.int32),   # tokens
+        jax.ShapeDtypeStruct((batch,), jnp.int32),   # kv_lens
+        jax.ShapeDtypeStruct(kv_shape, jnp.float32), # k_cache
+        jax.ShapeDtypeStruct(kv_shape, jnp.float32), # v_cache
+    ] + [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in M.weight_specs(cfg)]
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def lower_prefill(cfg: M.ModelConfig, chunk: int, use_pallas: bool = True) -> str:
+    fn = M.make_prefill_fn(cfg, use_pallas=use_pallas)
+    kv_shape = M.kv_cache_shape_prefill(cfg)
+    args = [
+        jax.ShapeDtypeStruct((chunk,), jnp.int32),   # tokens
+        jax.ShapeDtypeStruct((), jnp.int32),         # start_pos
+        jax.ShapeDtypeStruct((), jnp.int32),         # chunk_len
+        jax.ShapeDtypeStruct(kv_shape, jnp.float32), # k_cache
+        jax.ShapeDtypeStruct(kv_shape, jnp.float32), # v_cache
+    ] + [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in M.weight_specs(cfg)]
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def write_weights(cfg: M.ModelConfig, out_dir: str, seed: int) -> list[dict]:
+    """weights.bin + table of (name, shape, byte offset, length)."""
+    weights = M.init_weights(cfg, seed=seed)
+    table = []
+    offset = 0
+    path = os.path.join(out_dir, "weights.bin")
+    with open(path, "wb") as f:
+        for (name, shape), w in zip(M.weight_specs(cfg), weights):
+            raw = np.ascontiguousarray(w, dtype="<f4").tobytes()
+            f.write(raw)
+            table.append(
+                {
+                    "name": name,
+                    "shape": list(shape),
+                    "offset": offset,
+                    "bytes": len(raw),
+                }
+            )
+            offset += len(raw)
+    return table
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0, help="weight init seed")
+    ap.add_argument(
+        "--no-pallas",
+        action="store_true",
+        help="lower the pure-jnp reference model instead (debug only)",
+    )
+    args = ap.parse_args()
+    cfg = M.SMALL_CONFIG
+    os.makedirs(args.out_dir, exist_ok=True)
+    use_pallas = not args.no_pallas
+
+    entries = []
+    for b in DECODE_BATCH_BUCKETS:
+        text = lower_decode(cfg, b, use_pallas)
+        fname = f"decode_b{b}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "kind": "decode",
+                "batch": b,
+                "file": fname,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            }
+        )
+        print(f"[aot] {fname}: {len(text) / 1e6:.2f} MB HLO text")
+    for t in PREFILL_CHUNK_BUCKETS:
+        text = lower_prefill(cfg, t, use_pallas)
+        fname = f"prefill_t{t}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "kind": "prefill",
+                "chunk": t,
+                "file": fname,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            }
+        )
+        print(f"[aot] {fname}: {len(text) / 1e6:.2f} MB HLO text")
+
+    weight_table = write_weights(cfg, args.out_dir, args.seed)
+
+    manifest = {
+        "model": {
+            "name": cfg.name,
+            "num_layers": cfg.num_layers,
+            "hidden": cfg.hidden,
+            "num_q_heads": cfg.num_q_heads,
+            "num_kv_heads": cfg.num_kv_heads,
+            "head_dim": cfg.head_dim,
+            "ffn_hidden": cfg.ffn_hidden,
+            "vocab": cfg.vocab,
+            "max_seq_len": cfg.max_seq_len,
+        },
+        "use_pallas": use_pallas,
+        "decode_batch_buckets": DECODE_BATCH_BUCKETS,
+        "prefill_chunk_buckets": PREFILL_CHUNK_BUCKETS,
+        "executables": entries,
+        "weights": {"file": "weights.bin", "dtype": "f32le", "tensors": weight_table},
+        "abi": {
+            "decode": {
+                "args": ["tokens[i32,B]", "kv_lens[i32,B]",
+                          "k_cache[f32,L,B,S,HKV,DH]", "v_cache[f32,L,B,S,HKV,DH]",
+                          "...weights (ABI order)"],
+                "results": ["next_tokens[i32,B]", "k_cache'", "v_cache'"],
+            },
+            "prefill": {
+                "args": ["tokens[i32,T]", "start_pos[i32]", "chunk_len[i32]",
+                          "k_cache[f32,L,S,HKV,DH]", "v_cache[f32,L,S,HKV,DH]",
+                          "...weights (ABI order)"],
+                "results": ["first_token[i32]", "k_cache'", "v_cache'"],
+            },
+        },
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote manifest with {len(entries)} executables")
+
+
+if __name__ == "__main__":
+    main()

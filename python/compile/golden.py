@@ -1,0 +1,61 @@
+"""Golden trajectories for the Rust runtime's numeric round-trip test.
+
+Runs the L2 model (with Pallas kernels, same weights as weights.bin) on
+fixed prompts and records the greedy token trajectories. The Rust
+integration test `integration_runtime.rs` replays them through the AOT
+HLO executables via PJRT and must match token-for-token.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+
+
+def trajectory(cfg, weights, prompt: list[int], steps: int) -> dict:
+    kc = jnp.zeros(M.kv_cache_shape_prefill(cfg), jnp.float32)
+    vc = jnp.zeros_like(kc)
+    t0, kc, vc = M.prefill_chunk(
+        cfg, weights,
+        jnp.asarray(prompt, jnp.int32),
+        jnp.int32(0), jnp.int32(len(prompt)), kc, vc,
+    )
+    # batch-1 decode
+    kcd = jnp.zeros(M.kv_cache_shape_decode(cfg, 1), jnp.float32).at[:, 0].set(kc)
+    vcd = jnp.zeros(M.kv_cache_shape_decode(cfg, 1), jnp.float32).at[:, 0].set(vc)
+    toks = [int(t0)]
+    t = jnp.asarray([int(t0)], jnp.int32)
+    lens = jnp.asarray([len(prompt)], jnp.int32)
+    for _ in range(steps):
+        t, kcd, vcd = M.decode_step(cfg, weights, t, lens, kcd, vcd)
+        lens = lens + 1
+        toks.append(int(t[0]))
+    return {"prompt": prompt, "tokens": toks}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    cfg = M.SMALL_CONFIG
+    weights = [jnp.asarray(w) for w in M.init_weights(cfg, seed=args.seed)]
+    rng = np.random.default_rng(1234)
+    cases = []
+    for p_len in (9, 70, 150):
+        prompt = [int(x) for x in rng.integers(0, cfg.vocab, size=(p_len,))]
+        cases.append(trajectory(cfg, weights, prompt, steps=8))
+    out = os.path.join(args.out_dir, "golden.json")
+    with open(out, "w") as f:
+        json.dump({"model": cfg.name, "cases": cases}, f)
+    print(f"[golden] wrote {len(cases)} trajectories to {out}")
+
+
+if __name__ == "__main__":
+    main()

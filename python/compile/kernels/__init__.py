@@ -1,0 +1,22 @@
+"""Layer-1 Pallas kernels.
+
+Three kernels cover the serving hot path of the LLaMA-style model:
+
+* :mod:`decode_attention` — GQA decode attention (flash-decoding style,
+  KV streamed in blocks with an online softmax carry).
+* :mod:`prefill_attention` — blocked causal (chunked-)prefill attention.
+* :mod:`fused_ffn` — SwiGLU FFN with the gate/up/down projections fused
+  in one kernel so activations never round-trip to HBM.
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, so interpret mode is the correctness
+path; the TPU mapping (VMEM blocking, MXU-shaped matmuls) is preserved
+structurally and its VMEM/MXU budget is analyzed in EXPERIMENTS.md §Perf.
+
+``ref.py`` holds the pure-jnp oracles used by pytest.
+"""
+
+from . import ref  # noqa: F401
+from .decode_attention import gqa_decode_attention_pallas  # noqa: F401
+from .prefill_attention import causal_prefill_attention_pallas  # noqa: F401
+from .fused_ffn import swiglu_ffn_pallas  # noqa: F401

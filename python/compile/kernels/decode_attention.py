@@ -1,0 +1,134 @@
+"""GQA decode attention as a Pallas kernel (flash-decoding style).
+
+TPU adaptation of the paper's GPU decode-attention hot spot (DESIGN.md
+§Hardware-Adaptation): instead of CUDA threadblocks staging KV tiles in
+shared memory, the KV cache is streamed HBM→VMEM in ``block_l``-sized
+BlockSpec blocks; the Q·Kᵀ and P·V contractions are MXU-shaped
+``[group, head_dim] × [head_dim, block_l]`` matmuls; the softmax is
+computed online with a (m, l, acc) carry held in VMEM scratch across KV
+blocks — the grid's innermost axis iterates KV blocks sequentially, so
+the carry persists exactly like a flash-decoding register accumulator.
+
+Grid: ``(batch, num_kv_heads, num_kv_blocks)``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_attn_kernel(
+    kv_len_ref,  # [1]            int32 — valid KV prefix for this row
+    q_ref,       # [1, 1, group, head_dim]
+    k_ref,       # [1, 1, block_l, head_dim]
+    v_ref,       # [1, 1, block_l, head_dim]
+    o_ref,       # [1, 1, group, head_dim]
+    m_ref,       # scratch [group, 1]   running max
+    l_ref,       # scratch [group, 1]   running denominator
+    acc_ref,     # scratch [group, head_dim] running numerator
+    *,
+    block_l: int,
+    scale: float,
+):
+    kv_block = pl.program_id(2)
+    num_blocks = pl.num_programs(2)
+
+    @pl.when(kv_block == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]  # [group, head_dim]
+    k = k_ref[0, 0]  # [block_l, head_dim]
+    v = v_ref[0, 0]  # [block_l, head_dim]
+
+    # MXU contraction: [group, dh] x [dh, block_l] -> [group, block_l]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale
+
+    # Mask out positions beyond the row's valid KV length.
+    kv_len = kv_len_ref[0]
+    base = kv_block * block_l
+    pos = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, dimension=1)
+    s = jnp.where(pos < kv_len, s, NEG_INF)
+
+    # Online softmax update.
+    m_prev = m_ref[...]                      # [group, 1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)          # rescale of old accumulator
+    p = jnp.exp(s - m_new)                   # [group, block_l]
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(kv_block == num_blocks - 1)
+    def _finish():
+        # Guard against fully-masked rows (kv_len == 0 can't happen for
+        # real requests, but keep the kernel total).
+        denom = jnp.where(l_ref[...] == 0.0, 1.0, l_ref[...])
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_l", "interpret"))
+def gqa_decode_attention_pallas(
+    q: jnp.ndarray,        # [batch, num_q_heads, head_dim]
+    k_cache: jnp.ndarray,  # [batch, max_len, num_kv_heads, head_dim]
+    v_cache: jnp.ndarray,  # [batch, max_len, num_kv_heads, head_dim]
+    kv_lens: jnp.ndarray,  # [batch] int32
+    *,
+    block_l: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Pallas GQA decode attention. Returns [batch, num_q_heads, head_dim]."""
+    b, hq, dh = q.shape
+    _, max_len, hkv, _ = k_cache.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = 1.0 / (dh ** 0.5)
+
+    # Head-major KV layout so the KV-length axis is blockable.
+    k_t = jnp.swapaxes(k_cache, 1, 2)  # [b, hkv, max_len, dh]
+    v_t = jnp.swapaxes(v_cache, 1, 2)
+    # Pad KV length to a block multiple (masked inside the kernel).
+    padded = (max_len + block_l - 1) // block_l * block_l
+    if padded != max_len:
+        pad = ((0, 0), (0, 0), (0, padded - max_len), (0, 0))
+        k_t = jnp.pad(k_t, pad)
+        v_t = jnp.pad(v_t, pad)
+    num_blocks = padded // block_l
+
+    qg = q.reshape(b, hkv, group, dh)
+
+    kernel = functools.partial(_decode_attn_kernel, block_l=block_l, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hkv, num_blocks),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j, l: (i,)),
+            pl.BlockSpec((1, 1, group, dh), lambda i, j, l: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, block_l, dh), lambda i, j, l: (i, j, l, 0)),
+            pl.BlockSpec((1, 1, block_l, dh), lambda i, j, l: (i, j, l, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, dh), lambda i, j, l: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, dh), q.dtype),
+        scratch_shapes=[
+            # (m, l, acc) carried across the KV-block axis.
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_lens.astype(jnp.int32), qg, k_t, v_t)
+    return out.reshape(b, hq, dh)

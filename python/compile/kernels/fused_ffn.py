@@ -1,0 +1,100 @@
+"""Fused SwiGLU FFN as a Pallas kernel.
+
+Computes ``down( silu(x @ Wg) * (x @ Wu) )`` with all three projections
+fused: the ffn dimension is tiled into ``block_f`` slices, and each grid
+step contracts one slice end-to-end — gate, up, activation, and its
+partial down-projection — accumulating the output block in VMEM scratch.
+The ``[block_f, hidden]``-sized activation tile therefore never leaves
+VMEM (on a GPU this is the shared-memory-resident epilogue fusion the
+paper's engines get from fused MLP kernels).
+
+Grid: ``(num_m_blocks, num_f_blocks)``; the f axis is innermost so the
+output accumulator carries across it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ffn_kernel(
+    x_ref,    # [block_m, hidden]
+    wg_ref,   # [hidden, block_f]
+    wu_ref,   # [hidden, block_f]
+    wd_ref,   # [block_f, hidden]
+    o_ref,    # [block_m, hidden]
+    acc_ref,  # scratch [block_m, hidden] f32
+):
+    f_block = pl.program_id(1)
+    num_f_blocks = pl.num_programs(1)
+
+    @pl.when(f_block == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    g = jax.lax.dot_general(
+        x, wg_ref[...], (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    u = jax.lax.dot_general(
+        x, wu_ref[...], (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    act = g * jax.lax.logistic(g)  # SiLU
+    h = act * u  # [block_m, block_f]
+    acc_ref[...] += jax.lax.dot_general(
+        h, wd_ref[...], (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(f_block == num_f_blocks - 1)
+    def _finish():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_f", "interpret")
+)
+def swiglu_ffn_pallas(
+    x: jnp.ndarray,       # [tokens, hidden]
+    w_gate: jnp.ndarray,  # [hidden, ffn]
+    w_up: jnp.ndarray,    # [hidden, ffn]
+    w_down: jnp.ndarray,  # [ffn, hidden]
+    *,
+    block_m: int = 64,
+    block_f: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Pallas fused SwiGLU FFN. Returns [tokens, hidden]."""
+    t, h = x.shape
+    f = w_gate.shape[1]
+    assert w_up.shape == (h, f) and w_down.shape == (f, h)
+
+    t_pad = (t + block_m - 1) // block_m * block_m
+    f_pad = (f + block_f - 1) // block_f * block_f
+    xp = jnp.pad(x, ((0, t_pad - t), (0, 0))) if t_pad != t else x
+    if f_pad != f:
+        # Zero-padding the ffn axis is exact: silu(0)*0 = 0 contributes
+        # nothing to the down-projection.
+        w_gate = jnp.pad(w_gate, ((0, 0), (0, f_pad - f)))
+        w_up = jnp.pad(w_up, ((0, 0), (0, f_pad - f)))
+        w_down = jnp.pad(w_down, ((0, f_pad - f), (0, 0)))
+
+    out = pl.pallas_call(
+        _ffn_kernel,
+        grid=(t_pad // block_m, f_pad // block_f),
+        in_specs=[
+            pl.BlockSpec((block_m, h), lambda i, j: (i, 0)),
+            pl.BlockSpec((h, block_f), lambda i, j: (0, j)),
+            pl.BlockSpec((h, block_f), lambda i, j: (0, j)),
+            pl.BlockSpec((block_f, h), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, h), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t_pad, h), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, h), jnp.float32)],
+        interpret=interpret,
+    )(xp, w_gate, w_up, w_down)
+    return out[:t]

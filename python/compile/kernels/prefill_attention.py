@@ -1,0 +1,149 @@
+"""Blocked causal (chunked-)prefill attention as a Pallas kernel.
+
+Flash-attention-style TPU mapping: queries of the current prefill chunk
+are tiled into ``block_q`` rows; keys/values (prior context + chunk) are
+streamed in ``block_k`` blocks; the online-softmax carry (m, l, acc)
+lives in VMEM scratch across the KV-block grid axis. The causal mask is
+computed from absolute positions, so the kernel serves both full prefill
+(``start_pos = 0``) and later chunks of a chunked prefill
+(``start_pos > 0`` with earlier KV already cached).
+
+Grid: ``(num_kv_heads, num_q_blocks, num_kv_blocks)``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _prefill_attn_kernel(
+    start_ref,   # [1] int32 — absolute position of the chunk's first query
+    kv_len_ref,  # [1] int32 — total valid KV length (ctx + chunk)
+    q_ref,       # [1, block_q, group, head_dim]
+    k_ref,       # [1, block_k, head_dim]
+    v_ref,       # [1, block_k, head_dim]
+    o_ref,       # [1, block_q, group, head_dim]
+    m_ref,       # scratch [block_q * group, 1]
+    l_ref,       # scratch [block_q * group, 1]
+    acc_ref,     # scratch [block_q * group, head_dim]
+    *,
+    block_q: int,
+    block_k: int,
+    scale: float,
+):
+    q_block = pl.program_id(1)
+    kv_block = pl.program_id(2)
+    num_kv_blocks = pl.num_programs(2)
+
+    @pl.when(kv_block == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bq, group, dh = q_ref.shape[1], q_ref.shape[2], q_ref.shape[3]
+    q = q_ref[0].reshape(bq * group, dh)  # [rows, dh]
+    k = k_ref[0]                          # [block_k, dh]
+    v = v_ref[0]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [rows, block_k]
+
+    # Causal + validity mask from absolute positions.
+    start = start_ref[0]
+    kv_len = kv_len_ref[0]
+    row = jax.lax.broadcasted_iota(jnp.int32, s.shape, dimension=0)
+    q_pos = start + q_block * block_q + row // group
+    col = jax.lax.broadcasted_iota(jnp.int32, s.shape, dimension=1)
+    k_pos = kv_block * block_k + col
+    ok = (k_pos <= q_pos) & (k_pos < kv_len)
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(ok, p, 0.0)  # rows fully masked keep exp(NEG_INF-m)=0
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(kv_block == num_kv_blocks - 1)
+    def _finish():
+        denom = jnp.where(l_ref[...] == 0.0, 1.0, l_ref[...])
+        out = (acc_ref[...] / denom).astype(o_ref.dtype)
+        o_ref[0] = out.reshape(bq, group, dh)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_q", "block_k", "interpret")
+)
+def causal_prefill_attention_pallas(
+    q: jnp.ndarray,   # [chunk, num_q_heads, head_dim]
+    k: jnp.ndarray,   # [kv_len, num_kv_heads, head_dim]
+    v: jnp.ndarray,   # [kv_len, num_kv_heads, head_dim]
+    start_pos,        # int32 scalar — absolute position of q[0]
+    *,
+    block_q: int = 64,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Pallas chunked-prefill attention. Returns [chunk, hq, head_dim]."""
+    t, hq, dh = q.shape
+    s_len, hkv, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = 1.0 / (dh ** 0.5)
+
+    # Pad chunk and KV length to block multiples (masked in-kernel).
+    t_pad = (t + block_q - 1) // block_q * block_q
+    s_pad = (s_len + block_k - 1) // block_k * block_k
+    qg = q.reshape(t, hkv, group, dh)
+    if t_pad != t:
+        qg = jnp.pad(qg, ((0, t_pad - t), (0, 0), (0, 0), (0, 0)))
+    k_t = jnp.swapaxes(k, 0, 1)  # [hkv, kv_len, dh]
+    v_t = jnp.swapaxes(v, 0, 1)
+    if s_pad != s_len:
+        k_t = jnp.pad(k_t, ((0, 0), (0, s_pad - s_len), (0, 0)))
+        v_t = jnp.pad(v_t, ((0, 0), (0, s_pad - s_len), (0, 0)))
+    qg = jnp.swapaxes(qg, 0, 1)  # [hkv, t_pad, group, dh]
+
+    kernel = functools.partial(
+        _prefill_attn_kernel, block_q=block_q, block_k=block_k, scale=scale
+    )
+    start = jnp.asarray([start_pos], jnp.int32)
+    kv_len = jnp.asarray([s_len], jnp.int32)
+    out = pl.pallas_call(
+        kernel,
+        grid=(hkv, t_pad // block_q, s_pad // block_k),
+        in_specs=[
+            pl.BlockSpec((1,), lambda h, i, l: (0,)),
+            pl.BlockSpec((1,), lambda h, i, l: (0,)),
+            pl.BlockSpec((1, block_q, group, dh), lambda h, i, l: (h, i, 0, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda h, i, l: (h, l, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda h, i, l: (h, l, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, block_q, group, dh), lambda h, i, l: (h, i, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((hkv, t_pad, group, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q * group, 1), jnp.float32),
+            pltpu.VMEM((block_q * group, 1), jnp.float32),
+            pltpu.VMEM((block_q * group, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(start, kv_len, qg, k_t, v_t)
+    out = jnp.swapaxes(out, 0, 1)[:t]  # [t, hkv, group, dh]
+    return out.reshape(t, hq, dh)

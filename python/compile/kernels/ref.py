@@ -1,0 +1,123 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every kernel in this package is
+checked against the corresponding function here by pytest (exact math,
+no Pallas, no tiling). They are also used directly by model.py when
+``use_pallas=False`` is requested (e.g. for HLO-size comparisons).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, gain: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """RMSNorm over the last axis."""
+    scale = jnp.reciprocal(jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps))
+    return x * scale * gain
+
+
+def swiglu_ffn(
+    x: jnp.ndarray,
+    w_gate: jnp.ndarray,
+    w_up: jnp.ndarray,
+    w_down: jnp.ndarray,
+) -> jnp.ndarray:
+    """SwiGLU feed-forward: down( silu(x @ gate) * (x @ up) ).
+
+    x: [tokens, hidden]; w_gate/w_up: [hidden, ffn]; w_down: [ffn, hidden].
+    """
+    g = x @ w_gate
+    u = x @ w_up
+    act = g * jnp.reciprocal(1.0 + jnp.exp(-g))  # SiLU
+    return (act * u) @ w_down
+
+
+def gqa_decode_attention(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    kv_lens: jnp.ndarray,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Grouped-query decode attention over a padded KV cache.
+
+    q:        [batch, num_q_heads, head_dim]      (one new token per seq)
+    k_cache:  [batch, max_len, num_kv_heads, head_dim]
+    v_cache:  [batch, max_len, num_kv_heads, head_dim]
+    kv_lens:  [batch] int32 — valid prefix length per sequence
+    returns:  [batch, num_q_heads, head_dim]
+    """
+    b, hq, dh = q.shape
+    _, max_len, hkv, _ = k_cache.shape
+    assert hq % hkv == 0, "q heads must be a multiple of kv heads"
+    group = hq // hkv
+    if scale is None:
+        scale = dh ** -0.5
+
+    # Broadcast KV heads across their query group.
+    k = jnp.swapaxes(k_cache, 1, 2)  # [b, hkv, max_len, dh]
+    v = jnp.swapaxes(v_cache, 1, 2)
+    qg = q.reshape(b, hkv, group, dh)
+    scores = jnp.einsum("bhgd,bhld->bhgl", qg, k) * scale
+    mask = jnp.arange(max_len)[None, None, None, :] < kv_lens[:, None, None, None]
+    scores = jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = jnp.where(mask, probs, 0.0)
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhgl,bhld->bhgd", probs, v)
+    return out.reshape(b, hq, dh)
+
+
+def causal_prefill_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    start_pos: int = 0,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Causal self-attention for a (chunked) prefill with GQA.
+
+    The chunk's queries occupy absolute positions
+    ``[start_pos, start_pos + chunk)``; keys/values cover positions
+    ``[0, kv_len)`` with ``kv_len = start_pos + chunk`` (prior context's
+    KV is already cached from earlier chunks).
+
+    q: [chunk, num_q_heads, head_dim]
+    k: [kv_len, num_kv_heads, head_dim]
+    v: [kv_len, num_kv_heads, head_dim]
+    returns: [chunk, num_q_heads, head_dim]
+    """
+    t, hq, dh = q.shape
+    s, hkv, _ = k.shape
+    group = hq // hkv
+    if scale is None:
+        scale = dh ** -0.5
+    qg = q.reshape(t, hkv, group, dh)
+    scores = jnp.einsum("thgd,shd->hgts", qg, k) * scale
+    q_pos = start_pos + jnp.arange(t)
+    k_pos = jnp.arange(s)
+    mask = k_pos[None, :] <= q_pos[:, None]  # causal: key pos ≤ query pos
+    scores = jnp.where(mask[None, None, :, :], scores, jnp.finfo(scores.dtype).min)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("hgts,shd->thgd", probs, v)
+    return out.reshape(t, hq, dh)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """Rotary position embedding (split-halves convention).
+
+    x: [seq, heads, head_dim] (or any leading dims before heads);
+    positions: [seq] int32 absolute positions.
+    """
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[:, None].astype(jnp.float32) * freqs[None, :]  # [seq, half]
+    cos = jnp.cos(angles)[:, None, :]  # [seq, 1, half]
+    sin = jnp.sin(angles)[:, None, :]
+    x1 = x[..., :half]
+    x2 = x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,307 @@
+"""Layer-2: LLaMA-style transformer (GQA + SwiGLU + RoPE + RMSNorm).
+
+Dimensionally faithful to the LLaMA/Qwen family the paper serves, sized
+to decode in ~ms on CPU PJRT (`SMALL_CONFIG`, must match
+`rust/src/model/spec.rs::small_serving`). Two jit-able entry points are
+AOT-lowered per shape bucket by `aot.py`:
+
+* ``decode_step``  — one token for each of B batched requests, reading
+  and functionally updating the KV cache.
+* ``prefill_chunk`` — one chunk of one request's prompt (chunked
+  prefill), writing its KV into the cache; emits the first output token
+  when the chunk completes the prompt.
+
+Both call the Layer-1 Pallas kernels (interpret mode) so the kernels lower
+into the same HLO the Rust runtime executes. Greedy (argmax) sampling is
+baked in: the serving path is latency-deterministic, which is what the
+paper's scheduler assumes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.decode_attention import gqa_decode_attention_pallas
+from .kernels.fused_ffn import swiglu_ffn_pallas
+from .kernels.prefill_attention import causal_prefill_attention_pallas
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    num_layers: int
+    hidden: int
+    num_q_heads: int
+    num_kv_heads: int
+    head_dim: int
+    ffn_hidden: int
+    vocab: int
+    max_seq_len: int
+    rope_theta: float = 10000.0
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_q_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+
+# Must match rust/src/model/spec.rs::small_serving().
+SMALL_CONFIG = ModelConfig(
+    name="polyserve-small",
+    num_layers=4,
+    hidden=256,
+    num_q_heads=4,
+    num_kv_heads=2,
+    head_dim=64,
+    ffn_hidden=688,
+    vocab=512,
+    max_seq_len=512,
+)
+
+# Weight tensor order — the ABI between aot.py, weights.bin and the Rust
+# runtime. Per layer: attn_norm, wq, wk, wv, wo, ffn_norm, w_gate, w_up,
+# w_down; then final_norm; embedding last (tied LM head).
+PER_LAYER_WEIGHTS = [
+    "attn_norm", "wq", "wk", "wv", "wo", "ffn_norm", "w_gate", "w_up", "w_down",
+]
+
+
+def weight_specs(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (name, shape) list of every weight tensor."""
+    specs: list[tuple[str, tuple[int, ...]]] = []
+    h, qd, kvd, f = cfg.hidden, cfg.q_dim, cfg.kv_dim, cfg.ffn_hidden
+    shapes = {
+        "attn_norm": (h,),
+        "wq": (h, qd),
+        "wk": (h, kvd),
+        "wv": (h, kvd),
+        "wo": (qd, h),
+        "ffn_norm": (h,),
+        "w_gate": (h, f),
+        "w_up": (h, f),
+        "w_down": (f, h),
+    }
+    for layer in range(cfg.num_layers):
+        for w in PER_LAYER_WEIGHTS:
+            specs.append((f"layer{layer}.{w}", shapes[w]))
+    specs.append(("final_norm", (h,)))
+    specs.append(("embedding", (cfg.vocab, h)))
+    return specs
+
+
+def init_weights(cfg: ModelConfig, seed: int = 0) -> list[np.ndarray]:
+    """Random but well-scaled weights (truncated-normal-ish via clip)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, shape in weight_specs(cfg):
+        if name.endswith("norm"):
+            w = np.ones(shape, np.float32)
+        else:
+            fan_in = shape[0] if len(shape) == 2 else cfg.hidden
+            std = 1.0 / np.sqrt(fan_in)
+            w = np.clip(
+                rng.normal(0.0, std, size=shape), -3 * std, 3 * std
+            ).astype(np.float32)
+        out.append(w)
+    return out
+
+
+def _unpack(cfg: ModelConfig, weights: list) -> tuple[list[dict], jnp.ndarray, jnp.ndarray]:
+    """Split the flat ABI-ordered weight list into per-layer dicts."""
+    n = len(PER_LAYER_WEIGHTS)
+    layers = []
+    for i in range(cfg.num_layers):
+        chunk = weights[i * n : (i + 1) * n]
+        layers.append(dict(zip(PER_LAYER_WEIGHTS, chunk)))
+    final_norm = weights[cfg.num_layers * n]
+    embedding = weights[cfg.num_layers * n + 1]
+    return layers, final_norm, embedding
+
+
+def _block_decode(cfg, layer, x, k_cache_l, v_cache_l, kv_lens, use_pallas):
+    """One transformer block for a decode step.
+
+    x: [B, hidden]; k/v_cache_l: [B, S, hkv, dh]; kv_lens: [B].
+    Returns (x', k_cache_l', v_cache_l').
+    """
+    b = x.shape[0]
+    h = ref.rms_norm(x, layer["attn_norm"])
+    q = (h @ layer["wq"]).reshape(b, cfg.num_q_heads, cfg.head_dim)
+    k = (h @ layer["wk"]).reshape(b, cfg.num_kv_heads, cfg.head_dim)
+    v = (h @ layer["wv"]).reshape(b, cfg.num_kv_heads, cfg.head_dim)
+    # RoPE at each row's own position (kv_lens = next index).
+    q = _rope_rows(q, kv_lens, cfg.rope_theta)
+    k = _rope_rows(k, kv_lens, cfg.rope_theta)
+    # Append to cache at position kv_lens[i] per row.
+    k_cache_l = _scatter_rows(k_cache_l, k, kv_lens)
+    v_cache_l = _scatter_rows(v_cache_l, v, kv_lens)
+    new_lens = kv_lens + 1
+    if use_pallas:
+        # Whole-cache KV block and full-width FFN tiles: the small
+        # model's blocks fit VMEM outright, and fewer grid steps slash
+        # the interpret-mode loop overhead on CPU (EXPERIMENTS.md §Perf).
+        attn = gqa_decode_attention_pallas(
+            q, k_cache_l, v_cache_l, new_lens, block_l=cfg.max_seq_len
+        )
+    else:
+        attn = ref.gqa_decode_attention(q, k_cache_l, v_cache_l, new_lens)
+    x = x + attn.reshape(b, cfg.q_dim) @ layer["wo"]
+    h2 = ref.rms_norm(x, layer["ffn_norm"])
+    if use_pallas:
+        ffn = swiglu_ffn_pallas(
+            h2, layer["w_gate"], layer["w_up"], layer["w_down"],
+            block_m=max(8, b), block_f=cfg.ffn_hidden,
+        )
+    else:
+        ffn = ref.swiglu_ffn(h2, layer["w_gate"], layer["w_up"], layer["w_down"])
+    return x + ffn, k_cache_l, v_cache_l
+
+
+def _rope_rows(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """RoPE for one token per row: x [B, heads, dh], positions [B]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[:, None].astype(jnp.float32) * freqs[None, :]  # [B, half]
+    cos = jnp.cos(angles)[:, None, :]
+    sin = jnp.sin(angles)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1).astype(x.dtype)
+
+
+def _scatter_rows(cache: jnp.ndarray, new: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """cache[i, idx[i]] = new[i] — per-row dynamic_update_slice.
+
+    cache: [B, S, hkv, dh]; new: [B, hkv, dh]; idx: [B] int32.
+    """
+    def upd(c, n, i):
+        return jax.lax.dynamic_update_slice(c, n[None], (i, 0, 0))
+
+    return jax.vmap(upd)(cache, new, idx)
+
+
+def decode_step(
+    cfg: ModelConfig,
+    weights: list,
+    tokens: jnp.ndarray,   # [B] int32 — previous tokens
+    kv_lens: jnp.ndarray,  # [B] int32 — current valid KV length per row
+    k_cache: jnp.ndarray,  # [L, B, S, hkv, dh]
+    v_cache: jnp.ndarray,  # [L, B, S, hkv, dh]
+    use_pallas: bool = True,
+):
+    """One decode iteration for B requests.
+
+    Returns (next_tokens [B] i32, k_cache', v_cache').
+    """
+    layers, final_norm, embedding = _unpack(cfg, weights)
+    x = embedding[tokens]  # [B, hidden]
+    new_k, new_v = [], []
+    for li, layer in enumerate(layers):
+        x, kc, vc = _block_decode(
+            cfg, layer, x, k_cache[li], v_cache[li], kv_lens, use_pallas
+        )
+        new_k.append(kc)
+        new_v.append(vc)
+    x = ref.rms_norm(x, final_norm)
+    logits = x @ embedding.T  # tied head: [B, vocab]
+    next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return next_tokens, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def prefill_chunk(
+    cfg: ModelConfig,
+    weights: list,
+    tokens: jnp.ndarray,     # [T] int32 — the chunk's tokens (padded)
+    start_pos: jnp.ndarray,  # scalar i32 — absolute position of tokens[0]
+    chunk_len: jnp.ndarray,  # scalar i32 — real (unpadded) token count
+    k_cache: jnp.ndarray,    # [L, S, hkv, dh] — this request's cache
+    v_cache: jnp.ndarray,
+    use_pallas: bool = True,
+):
+    """One chunk of one request's prefill.
+
+    Writes the chunk's KV into the cache and returns
+    (first_token [] i32, k_cache', v_cache'). `first_token` is the argmax
+    over the last *real* token's logits — only meaningful on the final
+    chunk of the prompt.
+    """
+    layers, final_norm, embedding = _unpack(cfg, weights)
+    t = tokens.shape[0]
+    positions = start_pos + jnp.arange(t, dtype=jnp.int32)
+    x = embedding[tokens]  # [T, hidden]
+    kv_len = start_pos + chunk_len  # valid KV after this chunk
+    new_k, new_v = [], []
+    for li, layer in enumerate(layers):
+        h = ref.rms_norm(x, layer["attn_norm"])
+        q = (h @ layer["wq"]).reshape(t, cfg.num_q_heads, cfg.head_dim)
+        k = (h @ layer["wk"]).reshape(t, cfg.num_kv_heads, cfg.head_dim)
+        v = (h @ layer["wv"]).reshape(t, cfg.num_kv_heads, cfg.head_dim)
+        q = ref.rope(q, positions, cfg.rope_theta)
+        k = ref.rope(k, positions, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice(k_cache[li], k, (start_pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(v_cache[li], v, (start_pos, 0, 0))
+        if use_pallas:
+            attn = causal_prefill_attention_pallas(
+                q, kc, vc, start_pos, block_q=min(128, t), block_k=cfg.max_seq_len
+            )
+        else:
+            attn = ref.causal_prefill_attention(q, kc, vc, start_pos)
+        # Keys beyond kv_len are garbage (padded rows); queries beyond
+        # chunk_len produce garbage outputs which we never read. Causality
+        # keeps real queries from seeing padded keys (they sit at higher
+        # positions).
+        x = x + attn.reshape(t, cfg.q_dim) @ layer["wo"]
+        h2 = ref.rms_norm(x, layer["ffn_norm"])
+        if use_pallas:
+            ffn = swiglu_ffn_pallas(
+                h2, layer["w_gate"], layer["w_up"], layer["w_down"],
+                block_m=min(128, t), block_f=cfg.ffn_hidden,
+            )
+        else:
+            ffn = ref.swiglu_ffn(h2, layer["w_gate"], layer["w_up"], layer["w_down"])
+        x = x + ffn
+        new_k.append(kc)
+        new_v.append(vc)
+    x = ref.rms_norm(x, final_norm)
+    last = jnp.clip(chunk_len - 1, 0, t - 1)
+    logits = x[last] @ embedding.T  # [vocab]
+    first_token = jnp.argmax(logits).astype(jnp.int32)
+    _ = kv_len
+    return first_token, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def make_decode_fn(cfg: ModelConfig, use_pallas: bool = True):
+    """Close over cfg; returns f(weights..., tokens, kv_lens, kc, vc)."""
+
+    @functools.wraps(decode_step)
+    def fn(tokens, kv_lens, k_cache, v_cache, *weights):
+        return decode_step(cfg, list(weights), tokens, kv_lens, k_cache, v_cache, use_pallas)
+
+    return fn
+
+
+def make_prefill_fn(cfg: ModelConfig, use_pallas: bool = True):
+    @functools.wraps(prefill_chunk)
+    def fn(tokens, start_pos, chunk_len, k_cache, v_cache, *weights):
+        return prefill_chunk(
+            cfg, list(weights), tokens, start_pos, chunk_len, k_cache, v_cache, use_pallas
+        )
+
+    return fn
+
+
+def kv_cache_shape_decode(cfg: ModelConfig, batch: int) -> tuple[int, ...]:
+    return (cfg.num_layers, batch, cfg.max_seq_len, cfg.num_kv_heads, cfg.head_dim)
+
+
+def kv_cache_shape_prefill(cfg: ModelConfig) -> tuple[int, ...]:
+    return (cfg.num_layers, cfg.max_seq_len, cfg.num_kv_heads, cfg.head_dim)

@@ -1,0 +1,48 @@
+"""Golden-trajectory generator tests (the Rust round-trip fixture)."""
+
+import json
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import golden
+from compile import model as M
+
+CFG = M.SMALL_CONFIG
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return [jnp.asarray(w) for w in M.init_weights(CFG, seed=0)]
+
+
+def test_trajectory_shape_and_determinism(weights):
+    prompt = [int(x) for x in np.random.default_rng(0).integers(0, CFG.vocab, 12)]
+    a = golden.trajectory(CFG, weights, prompt, steps=4)
+    b = golden.trajectory(CFG, weights, prompt, steps=4)
+    assert a == b
+    assert a["prompt"] == prompt
+    assert len(a["tokens"]) == 5
+    assert all(0 <= t < CFG.vocab for t in a["tokens"])
+
+
+def test_main_writes_valid_json(tmp_path):
+    argv = sys.argv
+    sys.argv = ["golden", "--out-dir", str(tmp_path)]
+    try:
+        golden.main()
+    finally:
+        sys.argv = argv
+    data = json.loads((tmp_path / "golden.json").read_text())
+    assert data["model"] == CFG.name
+    assert len(data["cases"]) == 3
+    lens = sorted(len(c["prompt"]) for c in data["cases"])
+    assert lens == [9, 70, 150]
+    for c in data["cases"]:
+        assert len(c["tokens"]) == 9  # first + 8 decode steps
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

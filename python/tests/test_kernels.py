@@ -1,0 +1,223 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes per the repo's testing contract; every
+property asserts allclose against ref.py.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.decode_attention import gqa_decode_attention_pallas
+from compile.kernels.fused_ffn import swiglu_ffn_pallas
+from compile.kernels.prefill_attention import causal_prefill_attention_pallas
+
+ATOL = 3e-5
+RTOL = 3e-5
+
+
+def rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(0.0, scale, size=shape), jnp.float32)
+
+
+# ---------------------------------------------------------------- decode
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 5),
+    hkv=st.sampled_from([1, 2, 4]),
+    group=st.sampled_from([1, 2, 4]),
+    dh=st.sampled_from([16, 32, 64]),
+    max_len=st.integers(3, 300),
+    block_l=st.sampled_from([32, 64, 128]),
+    seed=st.integers(0, 2**31),
+)
+def test_decode_attention_matches_ref(b, hkv, group, dh, max_len, block_l, seed):
+    rng = np.random.default_rng(seed)
+    hq = hkv * group
+    q = rand(rng, b, hq, dh)
+    k = rand(rng, b, max_len, hkv, dh)
+    v = rand(rng, b, max_len, hkv, dh)
+    lens = jnp.asarray(rng.integers(1, max_len + 1, size=(b,)), jnp.int32)
+    got = gqa_decode_attention_pallas(q, k, v, lens, block_l=block_l)
+    want = ref.gqa_decode_attention(q, k, v, lens)
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+
+def test_decode_attention_len_one():
+    """kv_len=1 must attend only to position 0."""
+    rng = np.random.default_rng(0)
+    q = rand(rng, 1, 4, 32)
+    k = rand(rng, 1, 64, 2, 32)
+    v = rand(rng, 1, 64, 2, 32)
+    lens = jnp.asarray([1], jnp.int32)
+    got = gqa_decode_attention_pallas(q, k, v, lens)
+    # With one valid position softmax weight is 1: output = v broadcast.
+    want = jnp.repeat(v[:, 0], 2, axis=1)
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+
+def test_decode_attention_invariant_to_padding_garbage():
+    """Values beyond kv_len must not affect the output."""
+    rng = np.random.default_rng(1)
+    q = rand(rng, 2, 4, 32)
+    k = rand(rng, 2, 100, 2, 32)
+    v = rand(rng, 2, 100, 2, 32)
+    lens = jnp.asarray([10, 60], jnp.int32)
+    out1 = gqa_decode_attention_pallas(q, k, v, lens)
+    k2 = k.at[:, 60:].set(1e6)
+    v2 = v.at[:, 60:].set(-1e6)
+    # row 0: garbage also within [10, 60)
+    k2 = k2.at[0, 10:].set(1e6)
+    v2 = v2.at[0, 10:].set(-1e6)
+    out2 = gqa_decode_attention_pallas(q, k2, v2, lens)
+    np.testing.assert_allclose(out1, out2, atol=ATOL, rtol=RTOL)
+
+
+def test_decode_attention_softmax_scale():
+    """Known 2-position case computes the exact softmax mixture."""
+    dh = 16
+    q = jnp.zeros((1, 1, dh)).at[0, 0, 0].set(1.0)
+    k = jnp.zeros((1, 2, 1, dh))
+    k = k.at[0, 0, 0, 0].set(1.0)  # score = 1/sqrt(dh)
+    k = k.at[0, 1, 0, 0].set(0.0)  # score = 0
+    v = jnp.zeros((1, 2, 1, dh))
+    v = v.at[0, 0, 0, 1].set(1.0)
+    v = v.at[0, 1, 0, 2].set(1.0)
+    lens = jnp.asarray([2], jnp.int32)
+    out = gqa_decode_attention_pallas(q, k, v, lens)
+    s = float(1.0 / np.sqrt(dh))
+    w0 = float(np.exp(s) / (np.exp(s) + 1.0))
+    np.testing.assert_allclose(out[0, 0, 1], w0, atol=1e-5)
+    np.testing.assert_allclose(out[0, 0, 2], 1.0 - w0, atol=1e-5)
+
+
+# --------------------------------------------------------------- prefill
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.integers(1, 130),
+    ctx=st.integers(0, 120),
+    hkv=st.sampled_from([1, 2]),
+    group=st.sampled_from([1, 2, 4]),
+    dh=st.sampled_from([16, 32, 64]),
+    block_q=st.sampled_from([16, 32, 64]),
+    block_k=st.sampled_from([32, 64]),
+    seed=st.integers(0, 2**31),
+)
+def test_prefill_attention_matches_ref(t, ctx, hkv, group, dh, block_q, block_k, seed):
+    rng = np.random.default_rng(seed)
+    hq = hkv * group
+    q = rand(rng, t, hq, dh)
+    k = rand(rng, ctx + t, hkv, dh)
+    v = rand(rng, ctx + t, hkv, dh)
+    got = causal_prefill_attention_pallas(q, k, v, ctx, block_q=block_q, block_k=block_k)
+    want = ref.causal_prefill_attention(q, k, v, ctx)
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+
+def test_prefill_first_token_attends_only_itself():
+    rng = np.random.default_rng(2)
+    q = rand(rng, 8, 2, 16)
+    k = rand(rng, 8, 1, 16)
+    v = rand(rng, 8, 1, 16)
+    out = causal_prefill_attention_pallas(q, k, v, 0, block_q=16, block_k=16)
+    # Row 0 sees only k[0]: softmax over one element → v[0].
+    want0 = jnp.broadcast_to(v[0], (2, 16))
+    np.testing.assert_allclose(out[0], want0, atol=ATOL, rtol=RTOL)
+
+
+def test_prefill_chunk_equals_full_prefill_suffix():
+    """Chunked prefill (ctx>0) must equal the suffix of a full prefill."""
+    rng = np.random.default_rng(3)
+    total, hq, hkv, dh = 96, 4, 2, 32
+    split = 40
+    q = rand(rng, total, hq, dh)
+    k = rand(rng, total, hkv, dh)
+    v = rand(rng, total, hkv, dh)
+    full = ref.causal_prefill_attention(q, k, v, 0)
+    chunk = causal_prefill_attention_pallas(
+        q[split:], k, v, split, block_q=32, block_k=32
+    )
+    np.testing.assert_allclose(chunk, full[split:], atol=ATOL, rtol=RTOL)
+
+
+# ------------------------------------------------------------------ ffn
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.integers(1, 150),
+    h=st.sampled_from([32, 64, 128, 256]),
+    f=st.sampled_from([48, 100, 256, 688]),
+    block_m=st.sampled_from([16, 32, 64]),
+    block_f=st.sampled_from([32, 64, 256]),
+    seed=st.integers(0, 2**31),
+)
+def test_fused_ffn_matches_ref(t, h, f, block_m, block_f, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, t, h, scale=0.3)
+    wg = rand(rng, h, f, scale=1.0 / np.sqrt(h))
+    wu = rand(rng, h, f, scale=1.0 / np.sqrt(h))
+    wd = rand(rng, f, h, scale=1.0 / np.sqrt(f))
+    got = swiglu_ffn_pallas(x, wg, wu, wd, block_m=block_m, block_f=block_f)
+    want = ref.swiglu_ffn(x, wg, wu, wd)
+    np.testing.assert_allclose(got, want, atol=2e-4, rtol=2e-4)
+
+
+def test_ffn_zero_input_is_zero():
+    x = jnp.zeros((8, 64))
+    wg = jnp.ones((64, 96))
+    wu = jnp.ones((64, 96))
+    wd = jnp.ones((96, 64))
+    out = swiglu_ffn_pallas(x, wg, wu, wd, block_m=16, block_f=32)
+    np.testing.assert_allclose(out, jnp.zeros((8, 64)), atol=1e-7)
+
+
+def test_ffn_linearity_in_down_projection():
+    """Scaling w_down scales the output (checks the accumulator carry)."""
+    rng = np.random.default_rng(4)
+    x = rand(rng, 10, 32, scale=0.3)
+    wg = rand(rng, 32, 100, scale=0.2)
+    wu = rand(rng, 32, 100, scale=0.2)
+    wd = rand(rng, 100, 32, scale=0.2)
+    a = swiglu_ffn_pallas(x, wg, wu, wd, block_m=16, block_f=32)
+    b = swiglu_ffn_pallas(x, wg, wu, 2.0 * wd, block_m=16, block_f=32)
+    np.testing.assert_allclose(2.0 * a, b, atol=1e-4, rtol=1e-4)
+
+
+# ------------------------------------------------------------------ rope
+
+def test_rope_preserves_norm():
+    rng = np.random.default_rng(5)
+    x = rand(rng, 12, 4, 32)
+    pos = jnp.arange(12, dtype=jnp.int32) + 7
+    y = ref.rope(x, pos)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(y, axis=-1), jnp.linalg.norm(x, axis=-1), atol=1e-4, rtol=1e-4
+    )
+
+
+def test_rope_position_zero_is_identity():
+    rng = np.random.default_rng(6)
+    x = rand(rng, 1, 2, 16)
+    y = ref.rope(x, jnp.zeros((1,), jnp.int32))
+    np.testing.assert_allclose(y, x, atol=1e-6)
+
+
+def test_rope_relative_property():
+    """<rope(q,m), rope(k,n)> depends only on m-n (the RoPE invariant)."""
+    rng = np.random.default_rng(7)
+    q = rand(rng, 1, 1, 32)
+    k = rand(rng, 1, 1, 32)
+    def dot_at(m, n):
+        qm = ref.rope(q, jnp.asarray([m], jnp.int32))[0, 0]
+        kn = ref.rope(k, jnp.asarray([n], jnp.int32))[0, 0]
+        return float(qm @ kn)
+    assert abs(dot_at(5, 3) - dot_at(12, 10)) < 1e-4
+    assert abs(dot_at(9, 9) - dot_at(0, 0)) < 1e-4
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,167 @@
+"""L2 correctness: model composition — chunked prefill + batched decode
+with Pallas kernels must match the pure-jnp oracle path exactly
+(greedy tokens) and closely (KV cache values)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+CFG = M.SMALL_CONFIG
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return [jnp.asarray(w) for w in M.init_weights(CFG, seed=1)]
+
+
+def full_prefill(weights, prompt, use_pallas):
+    kc = jnp.zeros(M.kv_cache_shape_prefill(CFG), jnp.float32)
+    vc = jnp.zeros_like(kc)
+    return M.prefill_chunk(
+        CFG, weights, prompt, jnp.int32(0), jnp.int32(prompt.shape[0]), kc, vc,
+        use_pallas=use_pallas,
+    )
+
+
+def test_weight_specs_count_and_shapes():
+    specs = M.weight_specs(CFG)
+    assert len(specs) == CFG.num_layers * len(M.PER_LAYER_WEIGHTS) + 2
+    names = [n for n, _ in specs]
+    assert names[-1] == "embedding"
+    assert names[-2] == "final_norm"
+    total = sum(int(np.prod(s)) for _, s in specs)
+    assert 1_000_000 < total < 10_000_000  # "small" model
+
+
+def test_prefill_pallas_matches_oracle(weights):
+    rng = np.random.default_rng(0)
+    prompt = jnp.asarray(rng.integers(0, CFG.vocab, size=(53,)), jnp.int32)
+    t_ref, kc_ref, vc_ref = full_prefill(weights, prompt, use_pallas=False)
+    t_pal, kc_pal, vc_pal = full_prefill(weights, prompt, use_pallas=True)
+    assert int(t_ref) == int(t_pal)
+    np.testing.assert_allclose(kc_ref[:, :53], kc_pal[:, :53], atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(vc_ref[:, :53], vc_pal[:, :53], atol=2e-4, rtol=2e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    p=st.integers(2, 150),
+    chunk=st.sampled_from([16, 64, 128]),
+    seed=st.integers(0, 2**31),
+)
+def test_chunked_prefill_equals_full(p, chunk, seed):
+    weights = [jnp.asarray(w) for w in M.init_weights(CFG, seed=1)]
+    rng = np.random.default_rng(seed)
+    prompt = jnp.asarray(rng.integers(0, CFG.vocab, size=(p,)), jnp.int32)
+    t_full, kc_full, _ = full_prefill(weights, prompt, use_pallas=False)
+
+    kc = jnp.zeros(M.kv_cache_shape_prefill(CFG), jnp.float32)
+    vc = jnp.zeros_like(kc)
+    pos = 0
+    tok = None
+    while pos < p:
+        n = min(chunk, p - pos)
+        padded = jnp.zeros((chunk,), jnp.int32).at[:n].set(prompt[pos : pos + n])
+        tok, kc, vc = M.prefill_chunk(
+            CFG, weights, padded, jnp.int32(pos), jnp.int32(n), kc, vc,
+            use_pallas=True,
+        )
+        pos += n
+    assert int(tok) == int(t_full)
+    np.testing.assert_allclose(kc_full[:, :p], kc[:, :p], atol=3e-4, rtol=3e-4)
+
+
+def test_batched_decode_matches_oracle_trajectory(weights):
+    rng = np.random.default_rng(3)
+    lens = [17, 40, 9]
+    b = len(lens)
+    kcd = jnp.zeros(M.kv_cache_shape_decode(CFG, b), jnp.float32)
+    vcd = jnp.zeros_like(kcd)
+    toks = []
+    for i, p in enumerate(lens):
+        prompt = jnp.asarray(rng.integers(0, CFG.vocab, size=(p,)), jnp.int32)
+        t0, kc, vc = full_prefill(weights, prompt, use_pallas=False)
+        kcd = kcd.at[:, i].set(kc)
+        vcd = vcd.at[:, i].set(vc)
+        toks.append(int(t0))
+    state = {
+        True: (jnp.asarray(toks, jnp.int32), jnp.asarray(lens, jnp.int32), kcd, vcd),
+        False: (jnp.asarray(toks, jnp.int32), jnp.asarray(lens, jnp.int32), kcd, vcd),
+    }
+    for step in range(5):
+        outs = {}
+        for pal in (True, False):
+            t, l, kc, vc = state[pal]
+            t2, kc2, vc2 = M.decode_step(CFG, weights, t, l, kc, vc, use_pallas=pal)
+            state[pal] = (t2, l + 1, kc2, vc2)
+            outs[pal] = [int(x) for x in t2]
+        assert outs[True] == outs[False], f"diverged at step {step}"
+
+
+def test_decode_rows_independent(weights):
+    """A row's output must not depend on other rows in the batch."""
+    rng = np.random.default_rng(4)
+    p = 21
+    prompt = jnp.asarray(rng.integers(0, CFG.vocab, size=(p,)), jnp.int32)
+    t0, kc, vc = full_prefill(weights, prompt, use_pallas=False)
+
+    def decode_once(batch):
+        kcd = jnp.zeros(M.kv_cache_shape_decode(CFG, batch), jnp.float32)
+        vcd = jnp.zeros_like(kcd)
+        lens = []
+        toks = []
+        for i in range(batch):
+            kcd = kcd.at[:, i].set(kc)
+            vcd = vcd.at[:, i].set(vc)
+            lens.append(p)
+            toks.append(int(t0))
+        t, _, _ = M.decode_step(
+            CFG, weights,
+            jnp.asarray(toks, jnp.int32), jnp.asarray(lens, jnp.int32),
+            kcd, vcd, use_pallas=True,
+        )
+        return int(t[0])
+
+    assert decode_once(1) == decode_once(4)
+
+
+def test_prefill_padding_is_harmless(weights):
+    """Padded tail tokens of a chunk must not change the KV prefix or
+    the first-token logits."""
+    rng = np.random.default_rng(5)
+    p = 30
+    prompt = jnp.asarray(rng.integers(0, CFG.vocab, size=(p,)), jnp.int32)
+    kc0 = jnp.zeros(M.kv_cache_shape_prefill(CFG), jnp.float32)
+    vc0 = jnp.zeros_like(kc0)
+    padded_a = jnp.zeros((64,), jnp.int32).at[:p].set(prompt)
+    padded_b = jnp.full((64,), 7, jnp.int32).at[:p].set(prompt)
+    ta, kca, _ = M.prefill_chunk(CFG, weights, padded_a, jnp.int32(0), jnp.int32(p), kc0, vc0)
+    tb, kcb, _ = M.prefill_chunk(CFG, weights, padded_b, jnp.int32(0), jnp.int32(p), kc0, vc0)
+    assert int(ta) == int(tb)
+    np.testing.assert_allclose(kca[:, :p], kcb[:, :p], atol=1e-6)
+
+
+def test_greedy_decode_is_deterministic(weights):
+    rng = np.random.default_rng(6)
+    prompt = jnp.asarray(rng.integers(0, CFG.vocab, size=(12,)), jnp.int32)
+    t0, kc, vc = full_prefill(weights, prompt, use_pallas=True)
+    runs = []
+    for _ in range(2):
+        kcd = jnp.zeros(M.kv_cache_shape_decode(CFG, 1), jnp.float32).at[:, 0].set(kc)
+        vcd = jnp.zeros(M.kv_cache_shape_decode(CFG, 1), jnp.float32).at[:, 0].set(vc)
+        t = jnp.asarray([int(t0)], jnp.int32)
+        l = jnp.asarray([12], jnp.int32)
+        seq = []
+        for _ in range(6):
+            t, kcd, vcd = M.decode_step(CFG, weights, t, l, kcd, vcd)
+            l = l + 1
+            seq.append(int(t[0]))
+        runs.append(seq)
+    assert runs[0] == runs[1]
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

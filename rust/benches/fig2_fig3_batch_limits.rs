@@ -1,0 +1,55 @@
+//! Fig 2 + Fig 3 reproduction: closed-form batch-size limits.
+
+use polyserve::analysis::{fig2_decode_batch_series, fig3_coloc_batch_series};
+use polyserve::model::CostModel;
+use polyserve::util::benchkit::Bench;
+
+fn main() {
+    let mut bench = Bench::new("fig2_fig3");
+    let cm = CostModel::h200_llama8b();
+    let tpots = [16.0, 20.0, 25.0, 30.0, 40.0, 50.0, 75.0, 100.0, 150.0, 200.0];
+    let configs = [(512u64, 512u64), (1000, 1000), (1000, 4000), (4000, 1000), (4000, 4000)];
+
+    // Fig 2: decode batch vs TPOT per (p,d).
+    let mut rows = Vec::new();
+    for &tpot in &tpots {
+        let mut row = vec![format!("{tpot:.0}")];
+        for &(p, d) in &configs {
+            let s = fig2_decode_batch_series(&cm, p, d, &[tpot]);
+            row.push(s[0].batch.to_string());
+        }
+        rows.push(row);
+    }
+    let headers: Vec<String> = std::iter::once("TPOT_ms".to_string())
+        .chain(configs.iter().map(|(p, d)| format!("B@({p},{d})")))
+        .collect();
+    let h: Vec<&str> = headers.iter().map(String::as_str).collect();
+    bench.table("Fig 2: max decode batch (PD)", &h, &rows);
+
+    // Paper anchors: (1000,4000) B≈50 @20ms, ≈150 @40ms.
+    let b20 = cm.max_decode_batch(20.0, 3000);
+    let b40 = cm.max_decode_batch(40.0, 3000);
+    bench.table(
+        "Fig 2 anchors vs paper",
+        &["anchor", "paper", "ours"],
+        &[
+            vec!["(1000,4000)@20ms".into(), "~50".into(), b20.to_string()],
+            vec!["(1000,4000)@40ms".into(), "~150".into(), b40.to_string()],
+        ],
+    );
+
+    // Fig 3: coloc token batch vs TPOT for TTFT budgets.
+    for ttft in [300.0, 700.0, 2000.0] {
+        let mut rows = Vec::new();
+        for &tpot in &tpots {
+            let mut row = vec![format!("{tpot:.0}")];
+            for &(p, d) in &configs {
+                let s = fig3_coloc_batch_series(&cm, p, d, ttft, &[tpot]);
+                row.push(s[0].batch.to_string());
+            }
+            rows.push(row);
+        }
+        bench.table(&format!("Fig 3: max coloc batch, TTFT={ttft:.0}ms"), &h, &rows);
+    }
+    bench.finish();
+}

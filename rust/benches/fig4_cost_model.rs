@@ -1,0 +1,48 @@
+//! Fig 4 reproduction: per-request serving cost vs TPOT, co-location
+//! (solid in the paper) vs PD-disaggregation (dashed), TTFT = 700 ms.
+//!
+//! Two regimes are printed: the H200-realistic KV capacity (900k
+//! tokens) and the unbounded-KV regime the paper's figure implicitly
+//! assumes (its co-location batch sizes exceed single-GPU KV capacity —
+//! see EXPERIMENTS.md).
+
+use polyserve::analysis::fig4_cost_series;
+use polyserve::model::CostModel;
+use polyserve::util::benchkit::Bench;
+
+fn main() {
+    let mut bench = Bench::new("fig4");
+    let tpots = [20.0, 30.0, 40.0, 50.0, 75.0, 100.0, 150.0];
+    let configs = [(512u64, 512u64), (1000, 1000), (1000, 4000), (4000, 1000), (4000, 4000)];
+    for (label, cm, ttft) in [
+        ("C=900k tokens (H200), TTFT=700ms", CostModel::h200_llama8b(), 700.0),
+        (
+            "unbounded KV (paper's implicit regime), TTFT=2000ms",
+            CostModel::h200_llama8b().with_unbounded_kv(),
+            2000.0,
+        ),
+    ] {
+        let mut rows = Vec::new();
+        for &(p, d) in &configs {
+            for pt in fig4_cost_series(&cm, p, d, ttft, &tpots) {
+                rows.push(vec![
+                    format!("({p},{d})"),
+                    format!("{:.0}", pt.tpot_ms),
+                    fmt(pt.cost_coloc_s),
+                    fmt(pt.cost_pd_s),
+                    if pt.cost_coloc_s < pt.cost_pd_s { "CO" } else { "PD" }.to_string(),
+                ]);
+            }
+        }
+        bench.table(
+            &format!("Fig 4: cost inst*s/request — {label}"),
+            &["(p,d)", "TPOT_ms", "cost_CO", "cost_PD", "cheaper"],
+            &rows,
+        );
+    }
+    bench.finish();
+}
+
+fn fmt(x: f64) -> String {
+    if x.is_finite() { format!("{x:.3}") } else { "inf".into() }
+}

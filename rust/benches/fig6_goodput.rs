@@ -1,0 +1,149 @@
+//! Fig 6 reproduction: overall DSLO attainment (and per-TPOT-tier
+//! breakdown) at request rates from 20% to 120% of the optimal bound,
+//! per trace × serving mode × policy, plus the goodput@90% summary and
+//! PolyServe's gain over the best baseline (the paper's headline
+//! 1.23× PD / 1.18× CO).
+//!
+//! Default: 4 traces × 3000 requests/cell. POLYSERVE_FULL=1 runs all 8
+//! traces at the paper's 20 instances with 30k requests/cell.
+
+use polyserve::analysis::ServingMode;
+use polyserve::config::{Policy, SimConfig};
+use polyserve::figures::Experiment;
+use polyserve::metrics::AttainmentCurve;
+use polyserve::util::benchkit::{f, full_scale, Bench};
+use polyserve::util::threadpool::par_map;
+use polyserve::workload::TraceKind;
+
+fn main() {
+    let mut bench = Bench::new("fig6");
+    let full = full_scale();
+    let traces: Vec<TraceKind> = if full {
+        TraceKind::ALL.to_vec()
+    } else {
+        vec![
+            TraceKind::ShareGpt,
+            TraceKind::Lmsys,
+            TraceKind::Splitwise,
+            TraceKind::Uniform512x512,
+        ]
+    };
+    let requests = if full { 30_000 } else { 8_000 };
+    let fracs = [0.2, 0.4, 0.6, 0.8, 0.9, 1.0, 1.1, 1.2, 1.35, 1.5, 1.7];
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+
+    // Build the full cell grid and run it in parallel.
+    struct Cell {
+        trace: TraceKind,
+        mode: ServingMode,
+        policy: Policy,
+        frac: f64,
+    }
+    let mut cells = Vec::new();
+    for &trace in &traces {
+        for mode in [ServingMode::PdDisaggregated, ServingMode::Colocated] {
+            for policy in [Policy::PolyServe, Policy::Random, Policy::Minimal, Policy::Chunk] {
+                if policy == Policy::Chunk && mode == ServingMode::PdDisaggregated {
+                    continue;
+                }
+                for &frac in &fracs {
+                    cells.push(Cell { trace, mode, policy, frac });
+                }
+            }
+        }
+    }
+    let results = par_map(cells, threads, move |_, c| {
+        let cfg = SimConfig {
+            trace: c.trace,
+            mode: c.mode,
+            policy: c.policy,
+            requests,
+            rate_frac_of_optimal: c.frac,
+            ..Default::default()
+        };
+        let exp = Experiment::prepare(&cfg);
+        let res = exp.run();
+        let tiers: Vec<(u64, f64)> = res
+            .attainment
+            .per_tier
+            .iter()
+            .map(|&(t, n, ok)| (t, ok as f64 / n.max(1) as f64))
+            .collect();
+        (
+            c.trace,
+            c.mode,
+            c.policy,
+            exp.rate_rps,
+            exp.optimal_rps,
+            res.attainment.overall(),
+            tiers,
+        )
+    });
+
+    // Attainment table (per cell, with tier breakdown).
+    let headers = ["trace", "mode", "policy", "rate_rps", "attain", "t20", "t30", "t50", "t100"];
+    let mut rows = Vec::new();
+    for (trace, mode, policy, rate, _opt, att, tiers) in &results {
+        let mut row = vec![
+            trace.name().to_string(),
+            mode.name().to_string(),
+            policy.label(*mode),
+            f(*rate, 1),
+            f(*att, 3),
+        ];
+        for tpot in [20u64, 30, 50, 100] {
+            row.push(
+                tiers
+                    .iter()
+                    .find(|(t, _)| *t == tpot)
+                    .map(|(_, a)| f(*a, 3))
+                    .unwrap_or_else(|| "-".into()),
+            );
+        }
+        rows.push(row);
+    }
+    bench.table("Fig 6: DSLO attainment by rate (tier breakdown)", &headers, &rows);
+
+    // Goodput@90% summary + PolyServe gain.
+    let mut rows = Vec::new();
+    for &trace in &traces {
+        for mode in [ServingMode::PdDisaggregated, ServingMode::Colocated] {
+            let mut goodputs: Vec<(Policy, f64, f64)> = Vec::new();
+            for policy in [Policy::PolyServe, Policy::Random, Policy::Minimal, Policy::Chunk] {
+                let mut curve = AttainmentCurve::default();
+                let mut opt = 0.0;
+                for (t, m, p, rate, o, att, _) in &results {
+                    if *t == trace && *m == mode && *p == policy {
+                        curve.push(*rate, *att);
+                        opt = *o;
+                    }
+                }
+                if let Some(g) = curve.goodput_at(0.9) {
+                    goodputs.push((policy, g, opt));
+                }
+            }
+            let Some(ps) = goodputs.iter().find(|(p, _, _)| *p == Policy::PolyServe) else {
+                continue;
+            };
+            let best_base = goodputs
+                .iter()
+                .filter(|(p, _, _)| *p != Policy::PolyServe)
+                .map(|(_, g, _)| *g)
+                .fold(0.0, f64::max);
+            rows.push(vec![
+                trace.name().to_string(),
+                mode.name().to_string(),
+                f(ps.1, 1),
+                f(best_base, 1),
+                f(ps.1 / best_base.max(1e-9), 2),
+                f(100.0 * ps.1 / ps.2.max(1e-9), 1),
+            ]);
+        }
+    }
+    bench.table(
+        "Fig 6 summary: goodput@90% (PolyServe vs best baseline; paper: 1.23x PD / 1.18x CO)",
+        &["trace", "mode", "polyserve", "best_base", "gain_x", "%of_optimal"],
+        &rows,
+    );
+    bench.finish();
+}

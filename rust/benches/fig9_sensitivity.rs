@@ -1,0 +1,48 @@
+//! Fig 9 reproduction: per-instance goodput as the fleet grows from 8
+//! to 64 instances (uniform_4096_1024 trace) — per-instance goodput
+//! rises with scale as tier fragmentation amortizes.
+
+use polyserve::analysis::ServingMode;
+use polyserve::config::{Policy, SimConfig};
+use polyserve::figures::attainment_curve;
+use polyserve::util::benchkit::{f, full_scale, Bench};
+use polyserve::workload::TraceKind;
+
+fn main() {
+    let mut bench = Bench::new("fig9");
+    let requests = if full_scale() { 30_000 } else { 4_000 };
+    let sizes = [8usize, 16, 24, 32, 40, 48, 56, 64];
+    let fracs = [0.6, 0.8, 1.0, 1.2, 1.4, 1.6];
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+
+    let mut rows = Vec::new();
+    for mode in [ServingMode::PdDisaggregated, ServingMode::Colocated] {
+        for policy in [Policy::PolyServe, Policy::Minimal] {
+            for &n in &sizes {
+                let cfg = SimConfig {
+                    trace: TraceKind::Uniform4096x1024,
+                    mode,
+                    policy,
+                    instances: n,
+                    requests,
+                    ..Default::default()
+                };
+                let (curve, _opt) = attainment_curve(&cfg, &fracs, threads);
+                let g = curve.goodput_at(0.9).unwrap_or(0.0);
+                rows.push(vec![
+                    mode.name().into(),
+                    policy.label(mode),
+                    n.to_string(),
+                    f(g, 2),
+                    f(g / n as f64, 3),
+                ]);
+            }
+        }
+    }
+    bench.table(
+        "Fig 9: per-instance goodput vs fleet size (uniform_4096_1024)",
+        &["mode", "policy", "instances", "goodput_rps", "per_instance_rps"],
+        &rows,
+    );
+    bench.finish();
+}

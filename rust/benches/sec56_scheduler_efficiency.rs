@@ -1,0 +1,147 @@
+//! §5.6 reproduction: scheduler efficiency — how many requests per
+//! second the PolyServe router can arrange as the fleet grows. This is
+//! a *real* timing benchmark of the Rust scheduler hot path (the paper
+//! measures its C++ scheduler at 4825 req/s per server, >100 servers in
+//! real time).
+
+use polyserve::analysis::ServingMode;
+use polyserve::config::SimConfig;
+use polyserve::coordinator::{PolyServeRouter, RouteCtx, Router, ShardedRouter};
+use polyserve::model::CostModel;
+use polyserve::profile::ProfileTable;
+use polyserve::sim::{Cluster, SimRequest};
+use polyserve::slo::{DsloTracker, Slo};
+use polyserve::util::benchkit::Bench;
+use polyserve::util::rng::Rng;
+use polyserve::workload::Request;
+
+/// Build a loaded cluster + request population for routing timing.
+fn setup(n_servers: usize, seed: u64) -> (Cluster, Vec<SimRequest>) {
+    let cm = CostModel::h200_llama8b();
+    let mut cluster = Cluster::build(
+        ServingMode::PdDisaggregated,
+        n_servers,
+        0.25,
+        4,
+        &cm,
+        true,
+    );
+    let mut rng = Rng::new(seed);
+    let tiers = [20u64, 30, 50, 100];
+    let mut requests = Vec::new();
+    // Populate decode servers with resident requests.
+    let decode_ids: Vec<usize> = cluster
+        .instances
+        .iter()
+        .filter(|i| i.role == polyserve::sim::Role::Decode)
+        .map(|i| i.id)
+        .collect();
+    for (di, &id) in decode_ids.iter().enumerate() {
+        let k = di % 4;
+        cluster.assign[id] = polyserve::sim::TierAssign::Tier(k);
+        for _ in 0..40 {
+            let p = rng.range_u64(16, 2000) as u32;
+            let d = rng.range_u64(16, 800) as u32;
+            let idx = requests.len();
+            let slo = Slo::new(500, tiers[k]);
+            requests.push(SimRequest {
+                req: Request { id: idx as u64, arrival_ms: 0, prefill_len: p, decode_len: d, slo },
+                tier: k,
+                tracker: DsloTracker::new(0, slo),
+                prefill_done: p,
+                decoded: rng.range_u64(1, 50) as u32,
+                first_token_ms: Some(1),
+                finish_ms: None,
+                decode_instance: Some(id),
+            });
+            cluster.instances[id].running.push(polyserve::sim::instance::RunningReq {
+                req_idx: idx,
+                paused: false,
+            });
+        }
+    }
+    // Fresh decode-phase requests to route.
+    for i in 0..4096 {
+        let k = (i % 4) as usize;
+        let p = rng.range_u64(16, 2000) as u32;
+        let slo = Slo::new(500, tiers[k]);
+        let idx = requests.len();
+        requests.push(SimRequest {
+            req: Request { id: idx as u64, arrival_ms: 0, prefill_len: p, decode_len: 300, slo },
+            tier: k,
+            tracker: DsloTracker::new(0, slo),
+            prefill_done: p,
+            decoded: 1,
+            first_token_ms: Some(1),
+            finish_ms: None,
+            decode_instance: None,
+        });
+    }
+    (cluster, requests)
+}
+
+fn main() {
+    let mut bench = Bench::new("sec56");
+    let profile = ProfileTable::from_cost_model(&CostModel::h200_llama8b());
+    for &n_servers in &[10usize, 20, 50, 100, 200] {
+        let cfg = SimConfig::default();
+        let (mut cluster, mut requests) = setup(n_servers, 42);
+        let mut router = PolyServeRouter::new(&cfg, 300.0);
+        let fresh_start = requests.len() - 4096;
+        let mut i = 0usize;
+        bench.time(
+            &format!("route_decode x1 @ {n_servers} servers"),
+            Some(1.0),
+            || {
+                let mut ctx = RouteCtx {
+                    now: 1_000,
+                    cluster: &mut cluster,
+                    requests: &mut requests,
+                    profile: &profile,
+                    mode: ServingMode::PdDisaggregated,
+                };
+                let idx = fresh_start + (i % 4096);
+                i += 1;
+                let target = router.route_decode(1_000, idx, &mut ctx);
+                // Undo state mutation so the cluster stays steady.
+                if let Some(t) = target {
+                    ctx.cluster.instances[t].decode_queue.clear();
+                }
+                std::hint::black_box(target);
+            },
+        );
+    }
+    // §5.6 scale-out: "PolyServe can further scale by introducing more
+    // schedulers that manage independent servers" — sharded routing at
+    // 200 servers.
+    for &shards in &[1usize, 2, 4, 8] {
+        let cfg = SimConfig::default();
+        let (mut cluster, mut requests) = setup(200, 42);
+        let mut router = ShardedRouter::new(&cfg, 300.0, shards);
+        let fresh_start = requests.len() - 4096;
+        let mut i = 0usize;
+        bench.time(
+            &format!("sharded route_decode @200 servers, {shards} shards"),
+            Some(1.0),
+            || {
+                let mut ctx = RouteCtx {
+                    now: 1_000,
+                    cluster: &mut cluster,
+                    requests: &mut requests,
+                    profile: &profile,
+                    mode: ServingMode::PdDisaggregated,
+                };
+                let idx = fresh_start + (i % 4096);
+                i += 1;
+                let target = router.route_decode(1_000, idx, &mut ctx);
+                if let Some(t) = target {
+                    ctx.cluster.instances[t].decode_queue.clear();
+                }
+                std::hint::black_box(target);
+            },
+        );
+    }
+
+    println!("\n(paper: 4825 req/s per server-equivalent; >100 servers in real time)");
+    bench.finish();
+}

@@ -1,0 +1,78 @@
+//! Table 1 reproduction: input/output length percentiles of every trace
+//! generator vs the paper's published values.
+
+use polyserve::util::benchkit::{f, full_scale, Bench};
+use polyserve::util::rng::Rng;
+use polyserve::util::stats::Summary;
+use polyserve::workload::{TraceGenerator, TraceKind};
+
+/// The paper's Table 1 (input, output) percentile rows [p25..p99].
+fn paper_row(kind: TraceKind) -> Option<([f64; 6], [f64; 6])> {
+    Some(match kind {
+        TraceKind::Uniform4096x1024 => (
+            [2047., 4093., 6149., 7377., 7785., 8108.],
+            [510., 1023., 1535., 1843., 1944., 2027.],
+        ),
+        TraceKind::Uniform512x512 => (
+            [255., 511., 768., 921., 973., 1013.],
+            [256., 511., 768., 922., 973., 1014.],
+        ),
+        TraceKind::MooncakeConversation => (
+            [2320., 6923., 15400., 27571., 39583., 85401.],
+            [159., 350., 472., 597., 698., 1136.],
+        ),
+        TraceKind::MooncakeSynthetic => (
+            [277., 11587., 23286., 38737., 49009., 66458.],
+            [10., 68., 250., 390., 522., 768.],
+        ),
+        TraceKind::MooncakeToolagent => (
+            [3228., 6346., 7468., 16818., 26175., 61824.],
+            [12., 30., 355., 506., 600., 890.],
+        ),
+        TraceKind::Lmsys => (
+            [12., 28., 82., 301., 430., 750.],
+            [39., 140., 338., 512., 519., 853.],
+        ),
+        TraceKind::ShareGpt => (
+            [16., 36., 158., 818., 1613., 3421.],
+            [131., 280., 445., 682., 846., 1001.],
+        ),
+        TraceKind::Splitwise => (
+            [396., 1019., 1186., 2735., 4083., 4142.],
+            [85., 130., 395., 425., 451., 601.],
+        ),
+    })
+}
+
+fn main() {
+    let mut bench = Bench::new("table1");
+    // §5.1 samples 300k requests per dataset; scaled default 50k.
+    let n = if full_scale() { 300_000 } else { 50_000 };
+    let headers = ["trace", "axis", "p25", "p50", "p75", "p90", "p95", "p99", "max|err|%"];
+    let mut rows = Vec::new();
+    for kind in TraceKind::ALL {
+        let gen = TraceGenerator::new(kind);
+        let mut rng = Rng::new(0x7AB1E);
+        let mut ins = Vec::with_capacity(n);
+        let mut outs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (p, d) = gen.sample_lengths(&mut rng);
+            ins.push(p as f64);
+            outs.push(d as f64);
+        }
+        let (want_in, want_out) = paper_row(kind).unwrap();
+        for (axis, xs, want) in [("input", &ins, want_in), ("output", &outs, want_out)] {
+            let s = Summary::of(xs);
+            let mut max_err: f64 = 0.0;
+            let mut row = vec![kind.name().to_string(), axis.to_string()];
+            for (got, want) in s.percentiles.iter().zip(&want) {
+                row.push(f(*got, 0));
+                max_err = max_err.max(100.0 * (got - want).abs() / want.max(1.0));
+            }
+            row.push(f(max_err, 1));
+            rows.push(row);
+        }
+    }
+    bench.table("Table 1: trace length percentiles (vs paper)", &headers, &rows);
+    bench.finish();
+}

@@ -1,0 +1,288 @@
+//! Closed-form analysis from §3 of the paper: batch-size limits
+//! (Fig 2, Fig 3), serving-cost curves (Fig 4), the SLO achievability
+//! test used when assigning SLOs to trace requests (§5.1), and the
+//! optimal-goodput bound the evaluation normalizes against ("92.5% of
+//! optimal").
+
+use crate::model::CostModel;
+use crate::slo::Slo;
+use crate::workload::Workload;
+
+/// One point of a Fig-2 style series.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchPoint {
+    pub tpot_ms: f64,
+    pub batch: u64,
+}
+
+/// Fig 2: max decode batch size vs TPOT for a (p, d) configuration
+/// under PD-disaggregation.
+pub fn fig2_decode_batch_series(
+    cm: &CostModel,
+    p: u64,
+    d: u64,
+    tpots_ms: &[f64],
+) -> Vec<BatchPoint> {
+    let kv_per_req = p + d / 2;
+    tpots_ms
+        .iter()
+        .map(|&tpot| BatchPoint {
+            tpot_ms: tpot,
+            batch: cm.max_decode_batch(tpot, kv_per_req),
+        })
+        .collect()
+}
+
+/// Fig 3: max co-located token batch B vs TPOT for (p, d) and TTFT.
+pub fn fig3_coloc_batch_series(
+    cm: &CostModel,
+    p: u64,
+    d: u64,
+    ttft_ms: f64,
+    tpots_ms: &[f64],
+) -> Vec<BatchPoint> {
+    tpots_ms
+        .iter()
+        .map(|&tpot| BatchPoint {
+            tpot_ms: tpot,
+            batch: cm.max_coloc_batch(p, d, tpot, ttft_ms),
+        })
+        .collect()
+}
+
+/// One point of a Fig-4 style series.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostPoint {
+    pub tpot_ms: f64,
+    /// instance·seconds per request.
+    pub cost_coloc_s: f64,
+    pub cost_pd_s: f64,
+}
+
+/// Fig 4: per-request cost vs TPOT for co-location (solid) and
+/// PD-disaggregation (dashed) at a TTFT budget.
+pub fn fig4_cost_series(
+    cm: &CostModel,
+    p: u64,
+    d: u64,
+    ttft_ms: f64,
+    tpots_ms: &[f64],
+) -> Vec<CostPoint> {
+    tpots_ms
+        .iter()
+        .map(|&tpot| {
+            let b_co = cm.max_coloc_batch(p, d, tpot, ttft_ms);
+            let b_dc = cm.max_decode_batch(tpot, p + d / 2);
+            let b_pf = cm.max_token_batch; // §3.4: prefill saturates
+            CostPoint {
+                tpot_ms: tpot,
+                cost_coloc_s: cm.cost_coloc_ms(p, d, b_co) / 1000.0,
+                cost_pd_s: cm.cost_pd_ms(p, d, b_pf, b_dc) / 1000.0,
+            }
+        })
+        .collect()
+}
+
+/// §5.1 achievability: an SLO is assignable to a (p, d) request iff an
+/// idle server could meet it — prefill under TTFT and a feasible decode
+/// batch of at least 1 at the TPOT.
+pub fn slo_achievable(cm: &CostModel, mode: ServingMode, p: u32, d: u32, slo: Slo) -> bool {
+    if slo.is_best_effort() {
+        return true;
+    }
+    let (p, d) = (p as u64, d as u64);
+    match mode {
+        ServingMode::PdDisaggregated => {
+            // prefill on an idle prefill server, chunked at max batch:
+            let chunks = p.div_ceil(cm.max_token_batch);
+            let mut prefill_ms = 0.0;
+            for c in 0..chunks {
+                let chunk = (p - c * cm.max_token_batch).min(cm.max_token_batch);
+                prefill_ms += cm.iter_ms_mixed(0, chunk, c * cm.max_token_batch + chunk);
+            }
+            if prefill_ms >= slo.ttft_ms as f64 {
+                return false;
+            }
+            // decode: B=1 iteration time under TPOT at worst-case KV
+            cm.iter_ms(1, p + d) < slo.tpot_ms as f64
+        }
+        ServingMode::Colocated => {
+            cm.max_coloc_batch(p, d, slo.tpot_ms as f64, slo.ttft_ms as f64) >= 1
+        }
+    }
+}
+
+/// Which serving architecture (§2.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ServingMode {
+    PdDisaggregated,
+    Colocated,
+}
+
+impl ServingMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServingMode::PdDisaggregated => "pd",
+            ServingMode::Colocated => "coloc",
+        }
+    }
+}
+
+/// Optimal-goodput bound for a workload on `n_instances` (§3.5):
+/// every request is served at its own maximal batch size, so the fleet
+/// capacity is `n_instances / E[min-cost]`. Returns requests/s.
+pub fn optimal_goodput_rps(
+    cm: &CostModel,
+    mode: ServingMode,
+    workload: &Workload,
+    n_instances: usize,
+) -> f64 {
+    if workload.is_empty() {
+        return 0.0;
+    }
+    let mut total_cost_s = 0.0f64;
+    for r in &workload.requests {
+        total_cost_s += min_request_cost_s(cm, mode, r.prefill_len, r.decode_len, r.slo);
+    }
+    let mean_cost_s = total_cost_s / workload.len() as f64;
+    n_instances as f64 / mean_cost_s
+}
+
+/// Minimal per-request cost (instance·s) at the request's own maximal
+/// batch size (§3.5).
+pub fn min_request_cost_s(cm: &CostModel, mode: ServingMode, p: u32, d: u32, slo: Slo) -> f64 {
+    let (p, d) = (p as u64, d as u64);
+    let tpot = (slo.tpot_ms as f64).min(10_000.0); // cap best-effort
+    let ttft = (slo.ttft_ms as f64).min(120_000.0);
+    match mode {
+        ServingMode::PdDisaggregated => {
+            let b_dc = cm.max_decode_batch(tpot, p + d / 2).max(1);
+            cm.cost_pd_ms(p, d, cm.max_token_batch, b_dc) / 1000.0
+        }
+        ServingMode::Colocated => {
+            let b = cm.max_coloc_batch(p, d, tpot, ttft).max(1);
+            cm.cost_coloc_ms(p, d, b) / 1000.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::slo::TierDistribution;
+    use crate::util::rng::Rng;
+    use crate::workload::{TraceGenerator, TraceKind};
+
+    fn cm() -> CostModel {
+        CostModel::h200_llama8b()
+    }
+
+    #[test]
+    fn fig2_series_monotone_nondecreasing() {
+        let s = fig2_decode_batch_series(&cm(), 1000, 4000, &[16.0, 20.0, 30.0, 40.0, 60.0, 100.0]);
+        for w in s.windows(2) {
+            assert!(w[1].batch >= w[0].batch, "{s:?}");
+        }
+        // anchor points
+        let b20 = s.iter().find(|pt| pt.tpot_ms == 20.0).unwrap().batch;
+        let b40 = s.iter().find(|pt| pt.tpot_ms == 40.0).unwrap().batch;
+        assert!((45..=55).contains(&b20));
+        assert!((140..=160).contains(&b40));
+    }
+
+    #[test]
+    fn fig3_tighter_ttft_smaller_batch() {
+        let tpots = [30.0, 50.0, 100.0];
+        let tight = fig3_coloc_batch_series(&cm(), 4000, 1000, 300.0, &tpots);
+        let loose = fig3_coloc_batch_series(&cm(), 4000, 1000, 2000.0, &tpots);
+        for (a, b) in tight.iter().zip(&loose) {
+            assert!(a.batch <= b.batch, "tight={a:?} loose={b:?}");
+        }
+    }
+
+    #[test]
+    fn fig4_costs_fall_with_tpot() {
+        let s = fig4_cost_series(&cm(), 1000, 1000, 700.0, &[20.0, 30.0, 50.0, 100.0]);
+        for w in s.windows(2) {
+            assert!(w[1].cost_coloc_s <= w[0].cost_coloc_s + 1e-9);
+            assert!(w[1].cost_pd_s <= w[0].cost_pd_s + 1e-9);
+        }
+    }
+
+    #[test]
+    fn fig4_long_sequences_favor_coloc() {
+        // §3.5: "for long sequences, Co-location features lower cost."
+        // Validated in the paper's implicit regime (non-binding KV
+        // capacity, TTFT loose enough to be feasible) — see the cost
+        // model tests and EXPERIMENTS.md.
+        let s = fig4_cost_series(&cm().with_unbounded_kv(), 4000, 4000, 2000.0, &[100.0, 150.0]);
+        for pt in &s {
+            assert!(
+                pt.cost_coloc_s < pt.cost_pd_s,
+                "coloc {:.2} pd {:.2} @ {}",
+                pt.cost_coloc_s,
+                pt.cost_pd_s,
+                pt.tpot_ms
+            );
+        }
+    }
+
+    #[test]
+    fn achievability_rejects_impossible() {
+        // 10 ms TPOT is below the 15 ms floor: unachievable.
+        assert!(!slo_achievable(
+            &cm(),
+            ServingMode::PdDisaggregated,
+            100,
+            100,
+            Slo::new(1000, 10)
+        ));
+        // 100 ms TPOT with small p: achievable.
+        assert!(slo_achievable(
+            &cm(),
+            ServingMode::PdDisaggregated,
+            100,
+            100,
+            Slo::new(1000, 100)
+        ));
+        // best effort always achievable.
+        assert!(slo_achievable(
+            &cm(),
+            ServingMode::Colocated,
+            1_000_000,
+            1_000_000,
+            Slo::BEST_EFFORT
+        ));
+    }
+
+    #[test]
+    fn achievability_huge_prompt_tight_ttft_fails() {
+        // 80k-token prompt can't prefill in 300 ms.
+        assert!(!slo_achievable(
+            &cm(),
+            ServingMode::PdDisaggregated,
+            80_000,
+            100,
+            Slo::new(300, 100)
+        ));
+    }
+
+    #[test]
+    fn optimal_goodput_scales_with_instances() {
+        let g = TraceGenerator::new(TraceKind::ShareGpt);
+        let mut rng = Rng::new(2);
+        let tiers = TierDistribution::paper_default();
+        let w = g.generate(2000, 50.0, &tiers, |_, _, _| true, &mut rng);
+        let g10 = optimal_goodput_rps(&cm(), ServingMode::PdDisaggregated, &w, 10);
+        let g20 = optimal_goodput_rps(&cm(), ServingMode::PdDisaggregated, &w, 20);
+        assert!((g20 / g10 - 2.0).abs() < 1e-9);
+        assert!(g10 > 0.0);
+    }
+
+    #[test]
+    fn min_cost_lower_for_looser_slo() {
+        let c_tight = min_request_cost_s(&cm(), ServingMode::PdDisaggregated, 1000, 1000, Slo::new(500, 20));
+        let c_loose = min_request_cost_s(&cm(), ServingMode::PdDisaggregated, 1000, 1000, Slo::new(500, 100));
+        assert!(c_loose < c_tight, "loose={c_loose} tight={c_tight}");
+    }
+}

@@ -1,0 +1,290 @@
+//! Typed configuration for simulations, figure harnesses and the live
+//! server. Parses the TOML subset (`util::tomlish`), applies the
+//! paper's §5.1 defaults, and validates.
+
+use crate::analysis::ServingMode;
+use crate::slo::{TierDistribution, TierSet};
+use crate::util::tomlish::{self, Doc};
+use crate::workload::TraceKind;
+use std::path::Path;
+
+/// Scheduling policies under evaluation (§5.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Policy {
+    PolyServe,
+    Random,
+    /// "Assigning requests to the lowest cycle-time server".
+    Minimal,
+    /// Static chunked scheduler with a fixed token budget (co-location
+    /// only); budget swept externally per the paper.
+    Chunk,
+}
+
+impl Policy {
+    pub const ALL: [Policy; 4] = [Policy::PolyServe, Policy::Random, Policy::Minimal, Policy::Chunk];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::PolyServe => "polyserve",
+            Policy::Random => "random",
+            Policy::Minimal => "minimal",
+            Policy::Chunk => "chunk",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Policy> {
+        Policy::ALL.iter().copied().find(|p| p.name() == s)
+    }
+
+    /// Display name combined with the serving mode, as the paper labels
+    /// its curves (PD-PolyServe, CO-Chunk, ...).
+    pub fn label(&self, mode: ServingMode) -> String {
+        let prefix = match mode {
+            ServingMode::PdDisaggregated => "PD",
+            ServingMode::Colocated => "CO",
+        };
+        let name = match self {
+            Policy::PolyServe => "PolyServe",
+            Policy::Random => "Random",
+            Policy::Minimal => "Minimal",
+            Policy::Chunk => "Chunk",
+        };
+        format!("{prefix}-{name}")
+    }
+}
+
+/// Full simulation/experiment configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub trace: TraceKind,
+    pub policy: Policy,
+    pub mode: ServingMode,
+    pub instances: usize,
+    pub requests: usize,
+    /// Request rate as a fraction of the optimal-goodput bound (§5.2
+    /// varies 20%–120% of optimal); `rate_rps` overrides if set.
+    pub rate_frac_of_optimal: f64,
+    pub rate_rps: Option<f64>,
+    pub seed: u64,
+    pub tiers: TierSet,
+    pub tier_dist: TierDistribution,
+    /// CO-Chunk static token budget (paper sweeps this; default 512).
+    pub chunk_budget: u64,
+    /// For PD mode: fraction of instances dedicated to prefill.
+    /// `0.0` = auto-size from the workload's prefill/decode work ratio
+    /// (computed by `figures::Experiment::prepare`).
+    pub prefill_frac: f64,
+    /// Router feature toggles (ablations).
+    pub features: Features,
+}
+
+/// PolyServe mechanism toggles — each maps to a §4 subsection, and the
+/// ablation bench flips them individually.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Features {
+    /// §4.3: route to highest-load SLO-attainable server (off = least-loaded).
+    pub load_gradient: bool,
+    /// §4.4: lazy promotion into tighter tiers (off = no promotion).
+    pub lazy_promotion: bool,
+    /// off + lazy_promotion=true is invalid; eager promotion variant:
+    pub eager_promotion: bool,
+    /// §4.6: include wait-for-current-iteration in admission estimates.
+    pub wait_time_aware: bool,
+    /// §4.7 PD: merge a short final chunk into the prior iteration.
+    pub dynamic_chunking: bool,
+    /// §4.7 CO: admit only if the chunk size can be maintained
+    /// throughout the prefill as KV grows.
+    pub continuous_chunk_prediction: bool,
+}
+
+impl Default for Features {
+    fn default() -> Features {
+        Features {
+            load_gradient: true,
+            lazy_promotion: true,
+            eager_promotion: false,
+            wait_time_aware: true,
+            dynamic_chunking: true,
+            continuous_chunk_prediction: true,
+        }
+    }
+}
+
+impl Default for SimConfig {
+    fn default() -> SimConfig {
+        SimConfig {
+            trace: TraceKind::ShareGpt,
+            policy: Policy::PolyServe,
+            mode: ServingMode::PdDisaggregated,
+            instances: 20,
+            requests: 30_000,
+            rate_frac_of_optimal: 0.8,
+            rate_rps: None,
+            seed: 0xD15C0,
+            tiers: TierSet::paper_default(),
+            tier_dist: TierDistribution::paper_default(),
+            chunk_budget: 512,
+            prefill_frac: 0.0, // auto
+            features: Features::default(),
+        }
+    }
+}
+
+impl SimConfig {
+    /// Parse from a TOML-subset file; unspecified keys keep defaults.
+    pub fn from_file(path: &Path) -> anyhow::Result<SimConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let doc = tomlish::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        SimConfig::from_doc(&doc)
+    }
+
+    pub fn from_doc(doc: &Doc) -> anyhow::Result<SimConfig> {
+        let mut cfg = SimConfig::default();
+        if let Some(v) = doc.get("trace") {
+            let name = v.as_str().ok_or_else(|| anyhow::anyhow!("trace must be a string"))?;
+            cfg.trace = TraceKind::from_name(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown trace '{name}'"))?;
+        }
+        if let Some(v) = doc.get("policy") {
+            let name = v.as_str().ok_or_else(|| anyhow::anyhow!("policy must be a string"))?;
+            cfg.policy = Policy::from_name(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown policy '{name}'"))?;
+        }
+        match doc.str_or("mode", "pd") {
+            "pd" => cfg.mode = ServingMode::PdDisaggregated,
+            "coloc" => cfg.mode = ServingMode::Colocated,
+            other => anyhow::bail!("unknown mode '{other}' (pd|coloc)"),
+        }
+        cfg.instances = doc.usize_or("cluster.instances", cfg.instances);
+        cfg.requests = doc.usize_or("requests", cfg.requests);
+        cfg.rate_frac_of_optimal = doc.f64_or("rate_frac_of_optimal", cfg.rate_frac_of_optimal);
+        if let Some(v) = doc.get("rate_rps") {
+            cfg.rate_rps = v.as_f64();
+        }
+        cfg.seed = doc.f64_or("seed", cfg.seed as f64) as u64;
+        cfg.chunk_budget = doc.usize_or("chunk_budget", cfg.chunk_budget as usize) as u64;
+        cfg.prefill_frac = doc.f64_or("cluster.prefill_frac", cfg.prefill_frac);
+        if let Some(v) = doc.get("slo.tpot_ms") {
+            let tpots: Vec<u64> = v
+                .to_f64s()
+                .ok_or_else(|| anyhow::anyhow!("slo.tpot_ms must be an array"))?
+                .into_iter()
+                .map(|x| x as u64)
+                .collect();
+            cfg.tiers = TierSet::new(tpots.clone());
+            cfg.tier_dist.tpot_choices_ms = tpots;
+        }
+        if let Some(v) = doc.get("slo.tpot_weights") {
+            cfg.tier_dist.tpot_weights = v
+                .to_f64s()
+                .ok_or_else(|| anyhow::anyhow!("slo.tpot_weights must be an array"))?;
+        }
+        if let Some(v) = doc.get("slo.ttft_ms") {
+            cfg.tier_dist.ttft_choices_ms = v
+                .to_f64s()
+                .ok_or_else(|| anyhow::anyhow!("slo.ttft_ms must be an array"))?
+                .into_iter()
+                .map(|x| x as u64)
+                .collect();
+        }
+        let f = &mut cfg.features;
+        f.load_gradient = doc.bool_or("features.load_gradient", f.load_gradient);
+        f.lazy_promotion = doc.bool_or("features.lazy_promotion", f.lazy_promotion);
+        f.eager_promotion = doc.bool_or("features.eager_promotion", f.eager_promotion);
+        f.wait_time_aware = doc.bool_or("features.wait_time_aware", f.wait_time_aware);
+        f.dynamic_chunking = doc.bool_or("features.dynamic_chunking", f.dynamic_chunking);
+        f.continuous_chunk_prediction = doc.bool_or(
+            "features.continuous_chunk_prediction",
+            f.continuous_chunk_prediction,
+        );
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.instances >= 1, "need at least one instance");
+        anyhow::ensure!(self.requests >= 1, "need at least one request");
+        anyhow::ensure!(
+            self.tier_dist.tpot_weights.len() == self.tier_dist.tpot_choices_ms.len(),
+            "tpot_weights and tpot_ms length mismatch"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.prefill_frac),
+            "prefill_frac must be in [0,1]"
+        );
+        anyhow::ensure!(
+            !(self.features.lazy_promotion && self.features.eager_promotion),
+            "lazy_promotion and eager_promotion are mutually exclusive"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_defaults() {
+        let c = SimConfig::default();
+        assert_eq!(c.instances, 20);
+        assert_eq!(c.tiers.tpots(), &[20, 30, 50, 100]);
+        assert_eq!(c.tier_dist.tpot_weights, vec![0.1, 0.2, 0.3, 0.4]);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn parses_full_document() {
+        let doc = tomlish::parse(
+            r#"
+trace = "lmsys"
+policy = "chunk"
+mode = "coloc"
+requests = 1000
+chunk_budget = 1024
+
+[cluster]
+instances = 8
+prefill_frac = 0.5
+
+[slo]
+tpot_ms = [25, 75]
+tpot_weights = [0.5, 0.5]
+ttft_ms = [400]
+
+[features]
+lazy_promotion = false
+"#,
+        )
+        .unwrap();
+        let c = SimConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.trace, TraceKind::Lmsys);
+        assert_eq!(c.policy, Policy::Chunk);
+        assert_eq!(c.mode, ServingMode::Colocated);
+        assert_eq!(c.instances, 8);
+        assert_eq!(c.chunk_budget, 1024);
+        assert_eq!(c.tiers.tpots(), &[25, 75]);
+        assert_eq!(c.tier_dist.ttft_choices_ms, vec![400]);
+        assert!(!c.features.lazy_promotion);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        for bad in [
+            "trace = \"nope\"",
+            "policy = \"nope\"",
+            "mode = \"nope\"",
+            "[slo]\ntpot_ms = [20]\ntpot_weights = [0.5, 0.5]",
+            "[features]\nlazy_promotion = true\neager_promotion = true",
+        ] {
+            let doc = tomlish::parse(bad).unwrap();
+            assert!(SimConfig::from_doc(&doc).is_err(), "should reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn policy_labels() {
+        assert_eq!(Policy::PolyServe.label(ServingMode::PdDisaggregated), "PD-PolyServe");
+        assert_eq!(Policy::Chunk.label(ServingMode::Colocated), "CO-Chunk");
+    }
+}

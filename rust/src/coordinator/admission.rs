@@ -1,0 +1,443 @@
+//! Profile-based admission predictors (§4.5, §4.6).
+//!
+//! Everything here reads *only* router-visible state: the profile table
+//! and public instance load (batch composition, KV occupancy, wait
+//! time). Output lengths are unknown to the router — it predicts with
+//! the workload's average decode length, exactly as the paper does
+//! ("PolyServe simplifies the problem by just predicting the output
+//! length using the average decode length", §4.5).
+
+use crate::profile::ProfileTable;
+use crate::sim::{Instance, SimRequest};
+use crate::slo::TimeMs;
+
+/// Admission safety margin: predicted iteration times must stay under
+/// `SAFETY × TPOT`. Absorbs profile-interpolation error, the 1 ms
+/// simulator quantization and average-output-length underprediction —
+/// without it a server admitted to exactly TPOT tips over and poisons
+/// every resident request (see EXPERIMENTS.md §Perf for the sweep that
+/// picked this value).
+pub const SAFETY: f64 = 0.97;
+
+/// Router-side estimate of a decode instance's load state.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LoadEstimate {
+    /// Decode requests resident (incl. in-flight handoffs).
+    pub batch: u64,
+    /// KV tokens resident now.
+    pub kv_now: u64,
+    /// Predicted iteration time at the current state, ms.
+    pub iter_now_ms: f64,
+}
+
+pub fn load_estimate(inst: &Instance, requests: &[SimRequest], profile: &ProfileTable) -> LoadEstimate {
+    let batch = inst.decode_batch_now();
+    let kv_now = inst.kv_used(requests)
+        + inst
+            .decode_queue
+            .iter()
+            .map(|&(r, _)| requests[r].kv_now())
+            .sum::<u64>();
+    LoadEstimate {
+        batch,
+        kv_now,
+        iter_now_ms: profile.iter_ms(batch.max(1), kv_now),
+    }
+}
+
+/// §4.5 future-KV simulation: peak KV if the instance's current decode
+/// population plus one new request (with `new_kv_start` tokens already)
+/// all grow to the predicted output length.
+///
+/// Each resident request `j` has `kv_j` tokens now and is predicted to
+/// grow by `rem_j` more tokens; it then completes and frees its KV.
+/// KV(t) = Σ_{j: rem_j ≥ t} (kv_j + t), maximized over iteration index
+/// t at the completion points.
+///
+/// The remaining-length predictor is `max(avg_d − decoded, avg_d/2)`:
+/// the paper predicts with the plain average, but the *resident*
+/// population is length-biased (long-output requests accumulate — the
+/// inspection paradox), so a request that has already decoded past the
+/// average is still expected to produce ≈ half an average more. Without
+/// this correction the peak-KV estimate is biased low on heavy-tailed
+/// traces and servers get packed past their TPOT.
+pub fn peak_kv_prediction(
+    inst: &Instance,
+    requests: &[SimRequest],
+    new_kv_start: Option<u64>,
+    avg_decode_len: f64,
+) -> u64 {
+    let mut pop: Vec<(u64, u64)> = Vec::with_capacity(inst.running.len() + 2); // (kv_now, rem)
+    let rem_of = |decoded: f64| -> u64 {
+        (avg_decode_len - decoded).max(avg_decode_len * 0.5).max(1.0) as u64
+    };
+    for slot in &inst.running {
+        let r = &requests[slot.req_idx];
+        pop.push((r.kv_now(), rem_of(r.decoded as f64)));
+    }
+    for &(req_idx, _) in &inst.decode_queue {
+        let r = &requests[req_idx];
+        pop.push((r.kv_now(), rem_of(r.decoded as f64)));
+    }
+    if let Some(kv0) = new_kv_start {
+        pop.push((kv0, avg_decode_len.max(1.0) as u64));
+    }
+    if pop.is_empty() {
+        return 0;
+    }
+    pop.sort_unstable_by_key(|&(_, rem)| rem);
+    // Evaluate KV just before each completion time.
+    let mut best = 0u64;
+    let suffix_kv: Vec<u64> = {
+        // suffix sums of kv_now for requests with rem ≥ t
+        let mut s = vec![0u64; pop.len() + 1];
+        for i in (0..pop.len()).rev() {
+            s[i] = s[i + 1] + pop[i].0;
+        }
+        s
+    };
+    for i in 0..pop.len() {
+        let t = pop[i].1; // completion time of request i (iterations)
+        // requests j ≥ i are still resident at time t (rem_j ≥ t).
+        let alive = (pop.len() - i) as u64;
+        let kv_at_t = suffix_kv[i] + alive * t;
+        best = best.max(kv_at_t);
+    }
+    best
+}
+
+/// O(B) upper bound on the peak KV: every resident (plus the optional
+/// new request) grows to its full predicted remaining length with no
+/// completions in between.
+pub fn peak_kv_upper_bound(
+    inst: &Instance,
+    requests: &[SimRequest],
+    new_kv_start: Option<u64>,
+    avg_decode_len: f64,
+) -> u64 {
+    let rem_of = |decoded: f64| -> u64 {
+        (avg_decode_len - decoded).max(avg_decode_len * 0.5).max(1.0) as u64
+    };
+    let mut total = 0u64;
+    for slot in &inst.running {
+        let r = &requests[slot.req_idx];
+        total += r.kv_now() + rem_of(r.decoded as f64);
+    }
+    for &(req_idx, _) in &inst.decode_queue {
+        let r = &requests[req_idx];
+        total += r.kv_now() + rem_of(r.decoded as f64);
+    }
+    if let Some(kv0) = new_kv_start {
+        total += kv0 + avg_decode_len.max(1.0) as u64;
+    }
+    total
+}
+
+/// §4.5 + §4.6 decode admission: can `inst` (serving `tier_tpot_ms`)
+/// admit a new decode request with `new_kv_start` KV tokens, arriving
+/// now with its next token due by `next_deadline`?
+///
+/// * Steady state (§4.5): predicted iteration time at (B+1, peak KV)
+///   must stay under the server's TPOT.
+/// * First token (§4.6): now + wait + first-iteration time must meet
+///   the request's next DSLO deadline (skipped when `wait_aware` off).
+pub fn admit_decode(
+    inst: &Instance,
+    requests: &[SimRequest],
+    profile: &ProfileTable,
+    tier_tpot_ms: u64,
+    new_kv_start: u64,
+    next_deadline: TimeMs,
+    now: TimeMs,
+    avg_decode_len: f64,
+    wait_aware: bool,
+) -> bool {
+    let est = load_estimate(inst, requests, profile);
+    let b_new = est.batch + 1;
+    if b_new > profile.max_token_batch {
+        return false;
+    }
+    // Fast path (hot: §5.6 measures this): the O(B) *upper bound* on
+    // peak KV — every resident grows its full predicted remainder with
+    // no completions — is conservative, so passing both checks with it
+    // implies the exact peak passes too. Only near the feasibility edge
+    // do we pay the exact O(B log B) simulation.
+    let upper = peak_kv_upper_bound(inst, requests, Some(new_kv_start), avg_decode_len);
+    let peak = if upper <= profile.kv_capacity_tokens
+        && profile.iter_ms(b_new, upper) < SAFETY * tier_tpot_ms as f64
+    {
+        upper
+    } else {
+        let exact = peak_kv_prediction(inst, requests, Some(new_kv_start), avg_decode_len);
+        if exact > profile.kv_capacity_tokens {
+            return false;
+        }
+        if profile.iter_ms(b_new, exact) >= SAFETY * tier_tpot_ms as f64 {
+            return false;
+        }
+        exact
+    };
+    let _ = peak;
+    if wait_aware {
+        // First-token deadline check with the wait for the current
+        // iteration (§4.6).
+        let wait = inst.wait_ms(now) as f64;
+        let iter_first = profile.iter_ms(b_new, est.kv_now + new_kv_start);
+        if now as f64 + wait + iter_first > next_deadline as f64 {
+            return false;
+        }
+    }
+    true
+}
+
+/// Largest prefill chunk `c` such that the predicted mixed-iteration
+/// time stays under `tpot_ms` given the decode load (b_dc, kv). The
+/// profile table's batch axis is decode-equivalent tokens, so the chunk
+/// is weighted by `pf_token_ratio` (c_pf/c_dc from the cost model,
+/// baked into the table generation).
+pub fn max_chunk_under(
+    profile: &ProfileTable,
+    tpot_ms: f64,
+    b_dc: u64,
+    kv: u64,
+    pf_token_ratio: f64,
+) -> u64 {
+    let mut lo = 0u64;
+    let mut hi = profile.max_token_batch.saturating_sub(b_dc);
+    while lo < hi {
+        let mid = (lo + hi + 1) / 2;
+        let eff = b_dc + (mid as f64 * pf_token_ratio).ceil() as u64;
+        let t = profile.iter_ms(eff.max(1), kv + mid);
+        if t < tpot_ms {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    lo
+}
+
+/// §4.7 co-location admission with continuous chunked-prefill
+/// prediction: admit iff a chunk size exists that (a) keeps every
+/// prefill iteration under the server TPOT *even at the KV state
+/// predicted for the end of the prefill* and (b) completes the prompt
+/// by the TTFT deadline, and (c) the post-prefill decode admission
+/// holds.
+#[allow(clippy::too_many_arguments)]
+pub fn admit_coloc(
+    inst: &Instance,
+    requests: &[SimRequest],
+    profile: &ProfileTable,
+    tier_tpot_ms: u64,
+    prefill_len: u64,
+    ttft_deadline: TimeMs,
+    next_token_deadline: TimeMs,
+    now: TimeMs,
+    avg_decode_len: f64,
+    pf_token_ratio: f64,
+    wait_aware: bool,
+    continuous_prediction: bool,
+) -> bool {
+    let est = load_estimate(inst, requests, profile);
+    // Queued prefill work ahead of us on this instance.
+    let queued_pf = inst.queued_prefill_tokens(requests);
+
+    // Chunk size from the *predicted end-of-prefill* KV state when
+    // continuous prediction is on (§4.7); else the current state.
+    let kv_for_chunk = if continuous_prediction {
+        // During our prefill the decode population keeps decoding; KV
+        // grows by ~b_dc per iteration. Bound with the peak prediction.
+        peak_kv_prediction(inst, requests, None, avg_decode_len)
+            .max(est.kv_now)
+            + queued_pf
+            + prefill_len
+    } else {
+        est.kv_now + queued_pf
+    };
+    let chunk = max_chunk_under(
+        profile,
+        SAFETY * tier_tpot_ms as f64,
+        est.batch,
+        kv_for_chunk,
+        pf_token_ratio,
+    );
+    if chunk == 0 {
+        return false;
+    }
+    // TTFT: wait + (queued + own prompt) prefilled at `chunk` per
+    // TPOT-bounded iteration.
+    let n_iters = (queued_pf + prefill_len).div_ceil(chunk);
+    let wait = if wait_aware { inst.wait_ms(now) } else { 0 };
+    let eff = est.batch + (chunk as f64 * pf_token_ratio).ceil() as u64;
+    let iter_est = profile.iter_ms(eff.max(1), kv_for_chunk.min(profile.kv_capacity_tokens));
+    let finish = now as f64 + wait as f64 + n_iters as f64 * iter_est;
+    if finish > ttft_deadline as f64 {
+        return false;
+    }
+    // Post-prefill: the request joins the decode population.
+    admit_decode(
+        inst,
+        requests,
+        profile,
+        tier_tpot_ms,
+        prefill_len,
+        next_token_deadline.max(ttft_deadline),
+        now,
+        avg_decode_len,
+        false, // wait handled above; steady-state check only
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::CostModel;
+    use crate::sim::instance::{Instance, Role, RunningReq};
+    use crate::slo::{DsloTracker, Slo};
+    use crate::workload::Request;
+
+    fn profile() -> ProfileTable {
+        ProfileTable::from_cost_model(&CostModel::h200_llama8b())
+    }
+
+    fn sim_req(id: u64, p: u32, decoded: u32) -> SimRequest {
+        SimRequest {
+            req: Request {
+                id,
+                arrival_ms: 0,
+                prefill_len: p,
+                decode_len: 10_000,
+                slo: Slo::new(1000, 50),
+            },
+            tier: 0,
+            tracker: DsloTracker::new(0, Slo::new(1000, 50)),
+            prefill_done: p,
+            decoded,
+            first_token_ms: Some(0),
+            finish_ms: None,
+            decode_instance: Some(0),
+        }
+    }
+
+    fn loaded_instance(n: usize, p: u32, decoded: u32) -> (Instance, Vec<SimRequest>) {
+        let cm = CostModel::h200_llama8b();
+        let mut inst = Instance::new(0, Role::Decode, cm.kv_capacity_tokens, cm.max_token_batch);
+        let mut reqs = Vec::new();
+        for i in 0..n {
+            reqs.push(sim_req(i as u64, p, decoded));
+            inst.running.push(RunningReq {
+                req_idx: i,
+                paused: false,
+            });
+        }
+        (inst, reqs)
+    }
+
+    #[test]
+    fn peak_kv_grows_with_population() {
+        let (inst, reqs) = loaded_instance(10, 1000, 10);
+        let p1 = peak_kv_prediction(&inst, &reqs, None, 300.0);
+        let (inst2, reqs2) = loaded_instance(20, 1000, 10);
+        let p2 = peak_kv_prediction(&inst2, &reqs2, None, 300.0);
+        assert!(p2 > p1);
+        // Lower bound: current KV.
+        assert!(p1 >= 10 * 1010);
+        // Upper bound: everyone grows to full predicted length.
+        assert!(p1 <= 10 * (1000 + 300));
+    }
+
+    #[test]
+    fn peak_kv_empty_instance() {
+        let cm = CostModel::h200_llama8b();
+        let inst = Instance::new(0, Role::Decode, cm.kv_capacity_tokens, cm.max_token_batch);
+        assert_eq!(peak_kv_prediction(&inst, &[], None, 100.0), 0);
+        assert_eq!(peak_kv_prediction(&inst, &[], Some(500), 100.0), 600);
+    }
+
+    #[test]
+    fn admit_decode_respects_tpot_tiers() {
+        // ~100 requests at kv 3000 → iteration near 28 ms: fits 50 ms
+        // tier, not 20 ms tier.
+        let (inst, reqs) = loaded_instance(100, 2800, 100);
+        let prof = profile();
+        let ok_50 = admit_decode(&inst, &reqs, &prof, 50, 2800, u64::MAX >> 1, 0, 150.0, false);
+        let ok_20 = admit_decode(&inst, &reqs, &prof, 20, 2800, u64::MAX >> 1, 0, 150.0, false);
+        assert!(ok_50);
+        assert!(!ok_20);
+    }
+
+    #[test]
+    fn wait_time_awareness_rejects_tight_deadlines() {
+        let (mut inst, reqs) = loaded_instance(10, 1000, 10);
+        inst.iterating = true;
+        inst.busy_until = 100; // 80 ms wait from now=20
+        let prof = profile();
+        // Next token due at t=60 < 100+iter → reject when wait-aware.
+        let tight = admit_decode(&inst, &reqs, &prof, 100, 1000, 60, 20, 50.0, true);
+        let loose = admit_decode(&inst, &reqs, &prof, 100, 1000, 500, 20, 50.0, true);
+        let unaware = admit_decode(&inst, &reqs, &prof, 100, 1000, 60, 20, 50.0, false);
+        assert!(!tight);
+        assert!(loose);
+        assert!(unaware);
+    }
+
+    #[test]
+    fn admit_decode_rejects_kv_overflow() {
+        // 300 requests each growing to ~3200 tokens ≈ 0.96M > 0.9M cap.
+        let (inst, reqs) = loaded_instance(300, 3000, 10);
+        let prof = profile();
+        let ok = admit_decode(&inst, &reqs, &prof, 100, 3000, u64::MAX >> 1, 0, 210.0, false);
+        assert!(!ok);
+    }
+
+    #[test]
+    fn max_chunk_monotone_in_tpot() {
+        let prof = profile();
+        let c20 = max_chunk_under(&prof, 20.0, 10, 50_000, 0.25);
+        let c50 = max_chunk_under(&prof, 50.0, 10, 50_000, 0.25);
+        let c100 = max_chunk_under(&prof, 100.0, 10, 50_000, 0.25);
+        assert!(c20 <= c50 && c50 <= c100, "{c20} {c50} {c100}");
+        assert!(c100 > 0);
+    }
+
+    #[test]
+    fn max_chunk_zero_when_decode_already_over() {
+        let prof = profile();
+        // 400-batch decode at 800k KV ≈ 85 ms ≫ 20 ms: no chunk fits.
+        let c = max_chunk_under(&prof, 20.0, 400, 800_000, 0.25);
+        assert_eq!(c, 0);
+    }
+
+    #[test]
+    fn coloc_admission_needs_ttft_headroom() {
+        let (inst, reqs) = loaded_instance(20, 500, 50);
+        let prof = profile();
+        // 8000-token prompt with 300 ms TTFT at 30 ms TPOT → impossible.
+        let no = admit_coloc(&inst, &reqs, &prof, 30, 8000, 300, 330, 0, 150.0, 0.25, true, true);
+        // Same prompt with 10 s TTFT → fine.
+        let yes = admit_coloc(&inst, &reqs, &prof, 30, 8000, 10_000, 10_030, 0, 150.0, 0.25, true, true);
+        assert!(!no);
+        assert!(yes);
+    }
+
+    #[test]
+    fn continuous_prediction_is_more_conservative() {
+        // Near the feasibility edge, predicting end-of-prefill KV must
+        // reject at least as often as the optimistic variant.
+        let (inst, reqs) = loaded_instance(120, 2500, 20);
+        let prof = profile();
+        let mut flips = 0;
+        for ttft in [400u64, 600, 800, 1200, 2000, 4000] {
+            let optimistic = admit_coloc(&inst, &reqs, &prof, 30, 4000, ttft, ttft + 30, 0, 260.0, 0.25, true, false);
+            let conservative = admit_coloc(&inst, &reqs, &prof, 30, 4000, ttft, ttft + 30, 0, 260.0, 0.25, true, true);
+            assert!(
+                !(conservative && !optimistic),
+                "conservative admitted where optimistic rejected (ttft={ttft})"
+            );
+            if optimistic != conservative {
+                flips += 1;
+            }
+        }
+        let _ = flips; // edge flips are plausible but not required
+    }
+}

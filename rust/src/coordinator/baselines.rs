@@ -1,0 +1,186 @@
+//! Baseline routing policies from §5.1.
+//!
+//! * [`RandomRouter`] — PD-Random / CO-Random: uniform random server.
+//! * [`MinimalRouter`] — PD-Minimal / CO-Minimal: lowest predicted
+//!   cycle-time server.
+//! * [`ChunkRouter`] — CO-Chunk: chunked scheduler with a static
+//!   maximum token budget (the budget is swept externally per the
+//!   paper: "we iterate over different token budgets and select the
+//!   one yielding either the highest SLO attainment or lowest number
+//!   of servers").
+//!
+//! None of them bin by tier, manage auto-scaling, or do admission
+//! control — every instance is `Static` and requests are placed
+//! immediately.
+
+use super::admission::load_estimate;
+use super::{RouteCtx, Router};
+use crate::analysis::ServingMode;
+use crate::sim::Role;
+use crate::slo::TimeMs;
+use crate::util::rng::Rng;
+
+/// Default chunked-prefill token budget for the non-Chunk baselines
+/// (the common serving-engine default).
+const DEFAULT_BUDGET: u64 = 512;
+
+fn entry_role(mode: ServingMode) -> Role {
+    match mode {
+        ServingMode::PdDisaggregated => Role::Prefill,
+        ServingMode::Colocated => Role::Coloc,
+    }
+}
+
+// ---------------------------------------------------------------- Random
+
+pub struct RandomRouter {
+    rng: Rng,
+}
+
+impl RandomRouter {
+    pub fn new(seed: u64) -> RandomRouter {
+        RandomRouter { rng: Rng::new(seed) }
+    }
+
+    fn pick_random(&mut self, ids: &[usize]) -> Option<usize> {
+        if ids.is_empty() {
+            None
+        } else {
+            Some(ids[self.rng.below(ids.len() as u64) as usize])
+        }
+    }
+}
+
+impl Router for RandomRouter {
+    fn route_new(&mut self, _now: TimeMs, _req_idx: usize, ctx: &mut RouteCtx) -> Option<usize> {
+        let ids: Vec<usize> = ctx.cluster.with_role(entry_role(ctx.mode)).collect();
+        self.pick_random(&ids)
+    }
+
+    fn route_decode(&mut self, _now: TimeMs, _req_idx: usize, ctx: &mut RouteCtx) -> Option<usize> {
+        let ids: Vec<usize> = ctx.cluster.with_role(Role::Decode).collect();
+        self.pick_random(&ids)
+    }
+
+    fn chunk_budget(&mut self, _now: TimeMs, inst: usize, ctx: &mut RouteCtx) -> u64 {
+        match ctx.cluster.instances[inst].role {
+            Role::Prefill => 2048,
+            Role::Decode => 0,
+            Role::Coloc => DEFAULT_BUDGET,
+        }
+    }
+
+    fn on_iter_end(&mut self, _now: TimeMs, _inst: usize, _ctx: &mut RouteCtx) {}
+    fn on_tick(&mut self, _now: TimeMs, _ctx: &mut RouteCtx) {}
+
+    fn name(&self) -> String {
+        "Random".into()
+    }
+}
+
+// --------------------------------------------------------------- Minimal
+
+/// "Assigning requests to the lowest cycle-time server": cycle time is
+/// the profile-predicted iteration time at the server's current state.
+pub struct MinimalRouter;
+
+impl MinimalRouter {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> MinimalRouter {
+        MinimalRouter
+    }
+
+    fn pick_min_cycle(&self, ctx: &RouteCtx, role: Role) -> Option<usize> {
+        ctx.cluster
+            .with_role(role)
+            .map(|id| {
+                let est = load_estimate(&ctx.cluster.instances[id], ctx.requests, ctx.profile);
+                // Prefill servers: cycle dominated by queued prefill work.
+                let queued = ctx.cluster.instances[id].queued_prefill_tokens(ctx.requests);
+                ((est.iter_now_ms * 1000.0) as u64 + queued, id)
+            })
+            .min()
+            .map(|(_, id)| id)
+    }
+}
+
+impl Router for MinimalRouter {
+    fn route_new(&mut self, _now: TimeMs, _req_idx: usize, ctx: &mut RouteCtx) -> Option<usize> {
+        self.pick_min_cycle(ctx, entry_role(ctx.mode))
+    }
+
+    fn route_decode(&mut self, _now: TimeMs, _req_idx: usize, ctx: &mut RouteCtx) -> Option<usize> {
+        self.pick_min_cycle(ctx, Role::Decode)
+    }
+
+    fn chunk_budget(&mut self, _now: TimeMs, inst: usize, ctx: &mut RouteCtx) -> u64 {
+        match ctx.cluster.instances[inst].role {
+            Role::Prefill => 2048,
+            Role::Decode => 0,
+            Role::Coloc => DEFAULT_BUDGET,
+        }
+    }
+
+    fn on_iter_end(&mut self, _now: TimeMs, _inst: usize, _ctx: &mut RouteCtx) {}
+    fn on_tick(&mut self, _now: TimeMs, _ctx: &mut RouteCtx) {}
+
+    fn name(&self) -> String {
+        "Minimal".into()
+    }
+}
+
+// ----------------------------------------------------------------- Chunk
+
+/// CO-Chunk: least-loaded placement with a *static* chunked-prefill
+/// token budget.
+pub struct ChunkRouter {
+    pub budget: u64,
+}
+
+impl ChunkRouter {
+    pub fn new(budget: u64) -> ChunkRouter {
+        ChunkRouter { budget: budget.max(1) }
+    }
+}
+
+impl Router for ChunkRouter {
+    fn route_new(&mut self, _now: TimeMs, _req_idx: usize, ctx: &mut RouteCtx) -> Option<usize> {
+        // Least loaded by predicted cycle time (the sensible static
+        // chunk deployment; the paper leaves the baseline's placement
+        // unspecified beyond the budget).
+        ctx.cluster
+            .with_role(entry_role(ctx.mode))
+            .map(|id| {
+                let est = load_estimate(&ctx.cluster.instances[id], ctx.requests, ctx.profile);
+                let queued = ctx.cluster.instances[id].queued_prefill_tokens(ctx.requests);
+                ((est.iter_now_ms * 1000.0) as u64 + queued, id)
+            })
+            .min()
+            .map(|(_, id)| id)
+    }
+
+    fn route_decode(&mut self, _now: TimeMs, _req_idx: usize, ctx: &mut RouteCtx) -> Option<usize> {
+        ctx.cluster
+            .with_role(Role::Decode)
+            .map(|id| {
+                let est = load_estimate(&ctx.cluster.instances[id], ctx.requests, ctx.profile);
+                ((est.iter_now_ms * 1000.0) as u64, id)
+            })
+            .min()
+            .map(|(_, id)| id)
+    }
+
+    fn chunk_budget(&mut self, _now: TimeMs, inst: usize, ctx: &mut RouteCtx) -> u64 {
+        match ctx.cluster.instances[inst].role {
+            Role::Decode => 0,
+            _ => self.budget,
+        }
+    }
+
+    fn on_iter_end(&mut self, _now: TimeMs, _inst: usize, _ctx: &mut RouteCtx) {}
+    fn on_tick(&mut self, _now: TimeMs, _ctx: &mut RouteCtx) {}
+
+    fn name(&self) -> String {
+        format!("Chunk({})", self.budget)
+    }
+}

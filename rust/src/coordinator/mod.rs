@@ -1,0 +1,82 @@
+//! Routing policies — the paper's contribution (PolyServe) and the
+//! §5.1 baselines, all behind one [`Router`] trait consumed by both the
+//! discrete-event simulator and the live PJRT server.
+//!
+//! * [`polyserve`] — request binning, load-gradient routing, lazy
+//!   promotion, fine-grained auto-scaling, profile-based batch
+//!   formation, wait-time-aware scheduling, dynamic chunking and
+//!   continuous chunked-prefill prediction (§4).
+//! * [`baselines`] — Random, Minimal (lowest cycle-time), and the
+//!   static-budget CO-Chunk scheduler.
+//! * [`admission`] — the shared §4.5/§4.6 predictors: future-KV
+//!   simulation, profile-table iteration-time estimates, wait-time-aware
+//!   deadline checks.
+
+pub mod admission;
+pub mod baselines;
+pub mod polyserve;
+pub mod sharded;
+
+pub use baselines::{ChunkRouter, MinimalRouter, RandomRouter};
+pub use polyserve::PolyServeRouter;
+pub use sharded::ShardedRouter;
+
+use crate::analysis::ServingMode;
+use crate::config::{Policy, SimConfig};
+use crate::profile::ProfileTable;
+use crate::sim::{Cluster, SimRequest};
+use crate::slo::TimeMs;
+
+/// Mutable view the simulator hands to the router on every decision.
+pub struct RouteCtx<'a> {
+    pub now: TimeMs,
+    pub cluster: &'a mut Cluster,
+    pub requests: &'a mut [SimRequest],
+    pub profile: &'a ProfileTable,
+    pub mode: ServingMode,
+}
+
+/// A scheduling policy. All methods are called by the simulation loop
+/// (or the live server) — never concurrently.
+pub trait Router {
+    /// A request arrived. Return the instance whose *prefill* queue it
+    /// should join (PD: a prefill server; coloc: a coloc server), or
+    /// `None` to hold it pending inside the policy (the policy must
+    /// dispatch it later from `on_iter_end`/`on_tick` by pushing it onto
+    /// an instance and calling `ctx.cluster.mark_kicked`).
+    fn route_new(&mut self, now: TimeMs, req_idx: usize, ctx: &mut RouteCtx) -> Option<usize>;
+
+    /// PD only: `req_idx` finished prefill; pick its decode instance
+    /// (or `None` to pend).
+    fn route_decode(&mut self, now: TimeMs, req_idx: usize, ctx: &mut RouteCtx)
+        -> Option<usize>;
+
+    /// Prefill-token budget for the next iteration of `inst`
+    /// (§2.4/§4.7 chunked prefill; PD prefill servers get large budgets,
+    /// coloc budgets are TPOT-derived).
+    fn chunk_budget(&mut self, now: TimeMs, inst: usize, ctx: &mut RouteCtx) -> u64;
+
+    /// Called after `inst` finished an iteration (state updated).
+    fn on_iter_end(&mut self, now: TimeMs, inst: usize, ctx: &mut RouteCtx);
+
+    /// Periodic housekeeping (pending dispatch, auto-scaling sweeps).
+    fn on_tick(&mut self, now: TimeMs, ctx: &mut RouteCtx);
+
+    /// Human-readable name for reports.
+    fn name(&self) -> String;
+
+    /// Optional diagnostics line (scheduling-event counters).
+    fn diagnostics(&self) -> String {
+        String::new()
+    }
+}
+
+/// Build the router described by a [`SimConfig`].
+pub fn make_router(cfg: &SimConfig, avg_decode_len: f64) -> Box<dyn Router> {
+    match cfg.policy {
+        Policy::PolyServe => Box::new(PolyServeRouter::new(cfg, avg_decode_len)),
+        Policy::Random => Box::new(RandomRouter::new(cfg.seed ^ 0x52_414E_44)),
+        Policy::Minimal => Box::new(MinimalRouter::new()),
+        Policy::Chunk => Box::new(ChunkRouter::new(cfg.chunk_budget)),
+    }
+}

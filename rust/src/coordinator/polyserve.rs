@@ -1,0 +1,670 @@
+//! The PolyServe router (§4): request binning, load-gradient routing,
+//! lazy promotion, fine-grained auto-scaling, profile-based batch
+//! formation, wait-time-aware scheduling, dynamic chunking (PD) and
+//! continuous chunked-prefill prediction (CO).
+//!
+//! One struct serves both serving modes (the paper's PD-PolyServe and
+//! CO-PolyServe): mode-specific behaviour lives in `route_new` /
+//! `route_decode` / `chunk_budget`; binning, promotion and auto-scaling
+//! are shared.
+
+use super::admission::{self, load_estimate};
+use super::{RouteCtx, Router};
+use crate::analysis::ServingMode;
+use crate::config::{Features, SimConfig};
+use crate::sim::{Role, TierAssign};
+use crate::slo::{TierSet, TimeMs};
+use std::collections::VecDeque;
+
+/// Ratio of prefill-token to decode-token GEMM cost — how the profile
+/// table's decode-equivalent batch axis weighs prefill chunk tokens
+/// (see `CostModel::effective_tokens`).
+const PF_TOKEN_RATIO: f64 = 0.25;
+
+/// How long a late pending request may keep failing relaxed admission
+/// before the liveness backstop places it unconditionally.
+const FORCED_GRACE_MS: u64 = 2_000;
+
+/// A request waiting for capacity in some tier.
+#[derive(Debug, Clone, Copy)]
+struct Pending {
+    req_idx: usize,
+    /// true = needs decode placement (PD); false = needs full placement.
+    decode_phase: bool,
+}
+
+pub struct PolyServeRouter {
+    tiers: TierSet,
+    features: Features,
+    avg_decode_len: f64,
+    /// Per-tier pending queues (§4.3: "requests start pending for one
+    /// SLO tier").
+    pending: Vec<VecDeque<Pending>>,
+    mode: ServingMode,
+    /// PD prefill static budget (dynamic chunking modulates it).
+    prefill_budget: u64,
+    /// Diagnostics (logged at drop in debug level).
+    pub stats: RouterStats,
+}
+
+/// Scheduling-event counters for diagnostics and tests.
+#[derive(Debug, Default, Clone)]
+pub struct RouterStats {
+    pub placed_direct: u64,
+    pub placed_promoted: u64,
+    pub pends: u64,
+    pub placed_relaxed: u64,
+    pub forced: u64,
+    pub claims: u64,
+    pub adoptions: u64,
+    pub releases: u64,
+    pub marked_pending: u64,
+}
+
+impl PolyServeRouter {
+    pub fn new(cfg: &SimConfig, avg_decode_len: f64) -> PolyServeRouter {
+        PolyServeRouter {
+            tiers: cfg.tiers.clone(),
+            features: cfg.features.clone(),
+            avg_decode_len,
+            pending: (0..cfg.tiers.len()).map(|_| VecDeque::new()).collect(),
+            mode: cfg.mode,
+            prefill_budget: 2048,
+            stats: RouterStats::default(),
+        }
+    }
+
+    /// Candidate tier order for a tier-k request: own tier first, then
+    /// (lazy promotion) tighter tiers nearest-first — or tighter tiers
+    /// first under the eager-promotion ablation.
+    fn tier_order(&self, k: usize) -> Vec<usize> {
+        let mut order = Vec::with_capacity(k + 1);
+        if self.features.eager_promotion {
+            order.extend(self.tiers.promotion_order(k)); // tighter first
+            order.push(k);
+        } else {
+            order.push(k);
+            if self.features.lazy_promotion {
+                order.extend(self.tiers.promotion_order(k));
+            }
+        }
+        order
+    }
+
+    /// Pick the §4.3 load-gradient target among `candidates` (instance
+    /// ids) that pass `admit`; highest load first (or lowest when the
+    /// load-gradient feature is ablated off).
+    fn pick_by_gradient(
+        &self,
+        ctx: &RouteCtx,
+        candidates: impl Iterator<Item = usize>,
+        admit: impl Fn(&RouteCtx, usize) -> bool,
+    ) -> Option<usize> {
+        let mut scored: Vec<(u64, u64, usize)> = candidates
+            .map(|id| {
+                let est = load_estimate(&ctx.cluster.instances[id], ctx.requests, ctx.profile);
+                (est.batch, est.kv_now, id)
+            })
+            .collect();
+        if self.features.load_gradient {
+            scored.sort_unstable_by(|a, b| b.cmp(a)); // highest load first
+        } else {
+            scored.sort_unstable(); // least loaded first (ablation)
+        }
+        scored
+            .into_iter()
+            .map(|(_, _, id)| id)
+            .find(|&id| admit(ctx, id))
+    }
+
+    /// Try to place a decode-phase request on tier-k (with promotion).
+    ///
+    /// `relaxed` drops the per-request deadline check (§4.6) for
+    /// requests that are already late: their own token is unavoidably
+    /// delayed, but the steady-state TPOT check still protects the
+    /// server's resident requests from being poisoned.
+    fn place_decode(
+        &self,
+        now: TimeMs,
+        req_idx: usize,
+        relaxed: bool,
+        tiers_to_try: &[usize],
+        ctx: &mut RouteCtx,
+    ) -> Option<usize> {
+        let r = &ctx.requests[req_idx];
+        let kv_start = r.kv_now().max(r.req.prefill_len as u64);
+        let next_deadline = if relaxed {
+            TimeMs::MAX / 4
+        } else {
+            r.tracker.next_deadline()
+        };
+        for &tier in tiers_to_try {
+            let tpot = self.tiers.tier(tier).tpot_ms;
+            let ids: Vec<usize> = ctx.cluster.in_tier(tier).collect();
+            let found = self.pick_by_gradient(ctx, ids.into_iter(), |c, id| {
+                admission::admit_decode(
+                    &c.cluster.instances[id],
+                    c.requests,
+                    c.profile,
+                    tpot,
+                    kv_start,
+                    next_deadline,
+                    now,
+                    self.avg_decode_len,
+                    self.features.wait_time_aware && !relaxed,
+                )
+            });
+            if found.is_some() {
+                return found;
+            }
+        }
+        None
+    }
+
+    /// Try to place a fresh request on a coloc tier-k instance.
+    /// `relaxed` as in [`Self::place_decode`]: the request's own TTFT is
+    /// already lost, so only server-proting checks remain.
+    fn place_coloc(
+        &self,
+        now: TimeMs,
+        req_idx: usize,
+        relaxed: bool,
+        tiers_to_try: &[usize],
+        ctx: &mut RouteCtx,
+    ) -> Option<usize> {
+        let r = &ctx.requests[req_idx];
+        let prefill_len = (r.req.prefill_len - r.prefill_done) as u64;
+        let (ttft_deadline, next_token_deadline) = if relaxed {
+            (TimeMs::MAX / 4, TimeMs::MAX / 4)
+        } else {
+            let t = r.req.arrival_ms + r.req.slo.ttft_ms;
+            (t, t + r.req.slo.tpot_ms)
+        };
+        for &tier in tiers_to_try {
+            let tpot = self.tiers.tier(tier).tpot_ms;
+            let ids: Vec<usize> = ctx.cluster.in_tier(tier).collect();
+            let found = self.pick_by_gradient(ctx, ids.into_iter(), |c, id| {
+                admission::admit_coloc(
+                    &c.cluster.instances[id],
+                    c.requests,
+                    c.profile,
+                    tpot,
+                    prefill_len,
+                    ttft_deadline,
+                    next_token_deadline,
+                    now,
+                    self.avg_decode_len,
+                    PF_TOKEN_RATIO,
+                    self.features.wait_time_aware && !relaxed,
+                    self.features.continuous_chunk_prediction,
+                )
+            });
+            if found.is_some() {
+                return found;
+            }
+        }
+        None
+    }
+
+
+    /// The §4.3/§4.4 placement ladder for a tier-k request:
+    /// 1. own tier (load-gradient + admission);
+    /// 2. grow the own tier (adopt a Pending instance / claim from the
+    ///    best-effort pool) and place there;
+    /// 3. lazy promotion: spill to tighter tiers *only when the own
+    ///    tier cannot grow* (pool exhausted) — §4.4 "if and only if the
+    ///    current cluster is full";
+    /// 4. fail (caller pends the request).
+    /// Under the eager-promotion ablation, step 3 runs before step 2.
+    fn placement_ladder(
+        &mut self,
+        now: TimeMs,
+        req_idx: usize,
+        decode_phase: bool,
+        ctx: &mut RouteCtx,
+    ) -> Option<usize> {
+        let k = ctx.requests[req_idx].tier;
+        let place = |me: &Self, tiers: &[usize], ctx: &mut RouteCtx| -> Option<usize> {
+            if decode_phase {
+                me.place_decode(now, req_idx, false, tiers, ctx)
+            } else {
+                me.place_coloc(now, req_idx, false, tiers, ctx)
+            }
+        };
+        let promo: Vec<usize> = if self.features.lazy_promotion || self.features.eager_promotion {
+            self.tiers.promotion_order(k).collect()
+        } else {
+            Vec::new()
+        };
+        if self.features.eager_promotion {
+            if let Some(id) = place(self, &promo, ctx) {
+                self.stats.placed_promoted += 1;
+                return Some(id);
+            }
+        }
+        if let Some(id) = place(self, &[k], ctx) {
+            self.stats.placed_direct += 1;
+            return Some(id);
+        }
+        if self.scale_up(k, now, ctx).is_some() {
+            if let Some(id) = place(self, &[k], ctx) {
+                self.stats.placed_direct += 1;
+                return Some(id);
+            }
+        }
+        if !self.features.eager_promotion {
+            if let Some(id) = place(self, &promo, ctx) {
+                self.stats.placed_promoted += 1;
+                return Some(id);
+            }
+        }
+        None
+    }
+
+    /// Scale up tier `k`: claim from the BE pool, or adopt a Pending
+    /// instance (§4.4). Returns the instance id if one was obtained.
+    fn scale_up(&mut self, k: usize, now: TimeMs, ctx: &mut RouteCtx) -> Option<usize> {
+        // Prefer a Pending instance (it already holds promoted tier-k
+        // requests — adopting avoids a cold start).
+        let pending_inst = ctx
+            .cluster
+            .assign
+            .iter()
+            .enumerate()
+            .find(|(id, a)| {
+                **a == TierAssign::Pending && self.instance_hosts_tier(*id, k, ctx)
+            })
+            .map(|(id, _)| id);
+        if let Some(id) = pending_inst {
+            ctx.cluster.adopt_pending(id, k);
+            self.stats.adoptions += 1;
+            return Some(id);
+        }
+        let claimed = ctx.cluster.claim_for_tier(k, now);
+        if claimed.is_some() {
+            self.stats.claims += 1;
+        }
+        claimed
+    }
+
+    fn instance_hosts_tier(&self, id: usize, k: usize, ctx: &RouteCtx) -> bool {
+        let inst = &ctx.cluster.instances[id];
+        inst.running
+            .iter()
+            .map(|s| ctx.requests[s.req_idx].tier)
+            .chain(inst.prefill_queue.iter().map(|j| ctx.requests[j.req_idx].tier))
+            .chain(inst.decode_queue.iter().map(|&(r, _)| ctx.requests[r].tier))
+            .any(|t| t == k)
+    }
+
+    /// Dispatch as many pending requests as possible; claim servers for
+    /// tiers that stay blocked. Forced placement for requests whose
+    /// deadline already passed (they can't be aborted — §3.6 — so they
+    /// run on the least-loaded native-tier server and eat the miss).
+    fn drain_pending(&mut self, now: TimeMs, ctx: &mut RouteCtx) {
+        for k in 0..self.pending.len() {
+            loop {
+                let Some(&head) = self.pending[k].front() else { break };
+                let placed = self.placement_ladder(now, head.req_idx, head.decode_phase, ctx);
+                let placed = match placed {
+                    Some(id) => Some(id),
+                    None => {
+                        // Already-late requests (§3.6: they cannot be
+                        // aborted) get relaxed admission: their own
+                        // deadline check is moot, but the steady-state
+                        // TPOT check still protects server residents.
+                        let r = &ctx.requests[head.req_idx];
+                        let deadline = if head.decode_phase {
+                            r.tracker.next_deadline()
+                        } else {
+                            r.req.arrival_ms + r.req.slo.ttft_ms
+                        };
+                        if now >= deadline {
+                            let order = self.tier_order(k);
+                            let relaxed = if head.decode_phase {
+                                self.place_decode(now, head.req_idx, true, &order, ctx)
+                            } else {
+                                self.place_coloc(now, head.req_idx, true, &order, ctx)
+                            };
+                            match relaxed {
+                                Some(id) => {
+                                    self.stats.placed_relaxed += 1;
+                                    Some(id)
+                                }
+                                // Liveness backstop: if even relaxed
+                                // admission has failed for a long grace
+                                // period, place on the least-loaded
+                                // server no matter what.
+                                None if now >= deadline + FORCED_GRACE_MS => {
+                                    let t = self.forced_target(k, ctx);
+                                    if t.is_some() {
+                                        self.stats.forced += 1;
+                                    }
+                                    t
+                                }
+                                None => None,
+                            }
+                        } else {
+                            None
+                        }
+                    }
+                };
+                match placed {
+                    Some(id) => {
+                        self.pending[k].pop_front();
+                        self.enqueue_on(id, head, now, ctx);
+                    }
+                    None => break, // head blocked; FIFO per tier
+                }
+            }
+        }
+    }
+
+    /// Liveness fallback target: least-loaded instance in the request's
+    /// own tier, else in a tighter tier, else in a Pending state, else
+    /// claim anything from the pool, else the least-loaded serving
+    /// instance of the right role cluster.
+    fn forced_target(&self, k: usize, ctx: &mut RouteCtx) -> Option<usize> {
+        let least_loaded = |ids: Vec<usize>, ctx: &RouteCtx| -> Option<usize> {
+            ids.into_iter()
+                .min_by_key(|&id| {
+                    let i = &ctx.cluster.instances[id];
+                    (i.decode_batch_now(), i.queued_prefill_tokens(ctx.requests))
+                })
+        };
+        for tier in self.tier_order(k) {
+            let ids: Vec<usize> = ctx.cluster.in_tier(tier).collect();
+            if let Some(id) = least_loaded(ids, ctx) {
+                return Some(id);
+            }
+        }
+        // Any pending-state instance.
+        let pending_ids: Vec<usize> = ctx
+            .cluster
+            .assign
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| **a == TierAssign::Pending)
+            .map(|(i, _)| i)
+            .collect();
+        if let Some(id) = least_loaded(pending_ids, ctx) {
+            return Some(id);
+        }
+        // Anything serving the right role (looser tiers included).
+        let role = match self.mode {
+            ServingMode::PdDisaggregated => Role::Decode,
+            ServingMode::Colocated => Role::Coloc,
+        };
+        let all: Vec<usize> = ctx
+            .cluster
+            .with_role(role)
+            .filter(|&id| ctx.cluster.assign[id] != TierAssign::BestEffort)
+            .collect();
+        if let Some(id) = least_loaded(all, ctx) {
+            return Some(id);
+        }
+        let any: Vec<usize> = ctx.cluster.with_role(role).collect();
+        least_loaded(any, ctx)
+    }
+
+    fn enqueue_on(&self, id: usize, p: Pending, now: TimeMs, ctx: &mut RouteCtx) {
+        let r = &mut ctx.requests[p.req_idx];
+        if p.decode_phase {
+            r.decode_instance = Some(id);
+            ctx.cluster.instances[id].push_decode(p.req_idx, now);
+        } else {
+            let deadline = r.req.arrival_ms + r.req.slo.ttft_ms;
+            ctx.cluster.instances[id].push_prefill(crate::sim::PrefillJob {
+                req_idx: p.req_idx,
+                deadline,
+            });
+        }
+        ctx.cluster.mark_kicked(id);
+    }
+
+    /// §4.3/§4.4 down-scaling sweep.
+    fn autoscale_down(&mut self, now: TimeMs, inst: usize, ctx: &mut RouteCtx) {
+        match ctx.cluster.assign[inst] {
+            TierAssign::Tier(k) => {
+                let i = &ctx.cluster.instances[inst];
+                if i.is_empty() {
+                    if self.pending[k].is_empty() {
+                        ctx.cluster.release(inst, now);
+                        self.stats.releases += 1;
+                    }
+                } else if self.features.lazy_promotion && !self.instance_hosts_tier(inst, k, ctx)
+                {
+                    // Only promoted lower-tier requests remain (§4.4):
+                    // move to the pending list.
+                    ctx.cluster.mark_pending(inst);
+                    self.stats.marked_pending += 1;
+                }
+            }
+            TierAssign::Pending => {
+                if ctx.cluster.instances[inst].is_empty() {
+                    ctx.cluster.release(inst, now);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Simulate an instance's EDF prefill queue with `new_job` inserted:
+    /// returns the new job's estimated finish time if *every* queued
+    /// job (including those displaced by the EDF insert) still meets
+    /// its own TTFT deadline, else None.
+    fn prefill_queue_feasible(
+        &self,
+        now: TimeMs,
+        inst: usize,
+        new_rem: u64,
+        new_deadline: TimeMs,
+        ctx: &RouteCtx,
+    ) -> Option<f64> {
+        let i = &ctx.cluster.instances[inst];
+        let wait = if self.features.wait_time_aware {
+            i.wait_ms(now)
+        } else {
+            0
+        };
+        // (deadline, remaining tokens) in EDF order with the new job.
+        // Each job's deadline is reduced by its own TPOT: finishing the
+        // prefill exactly at TTFT leaves the decode placement zero
+        // slack and the §4.6 wait-time check then rejects every loaded
+        // server — one TPOT of headroom keeps token 1 schedulable.
+        let mut jobs: Vec<(TimeMs, u64)> = i
+            .prefill_queue
+            .iter()
+            .map(|j| {
+                let r = &ctx.requests[j.req_idx];
+                (
+                    j.deadline.saturating_sub(r.req.slo.tpot_ms),
+                    (r.req.prefill_len - r.prefill_done) as u64,
+                )
+            })
+            .collect();
+        let pos = jobs
+            .iter()
+            .position(|&(d, _)| d > new_deadline)
+            .unwrap_or(jobs.len());
+        jobs.insert(pos, (new_deadline, new_rem));
+
+        // Per-chunk time estimate at the packed budget.
+        let eff = (self.prefill_budget as f64 * PF_TOKEN_RATIO).ceil() as u64;
+        let chunk_ms = ctx.profile.iter_ms(eff.max(1), self.prefill_budget);
+        let ms_per_token = chunk_ms / self.prefill_budget as f64;
+        let mut t = now as f64 + wait as f64;
+        let mut new_finish = f64::INFINITY;
+        for (deadline, rem) in jobs {
+            // Iteration-count overhead: each extra iteration pays the
+            // fixed cost baked into chunk_ms via ms_per_token.
+            t += rem as f64 * ms_per_token;
+            if t > deadline as f64 {
+                return None;
+            }
+            if deadline == new_deadline && rem == new_rem {
+                new_finish = t;
+            }
+        }
+        Some(new_finish)
+    }
+
+    /// PD: route a fresh request to a prefill server — the highest-load
+    /// server whose whole EDF queue (with this request inserted) still
+    /// meets every TTFT (§4.2 + §4.3 + §4.7 "reroutes to other machines
+    /// if PolyServe predicts a TTFT violation").
+    fn place_prefill_pd(&self, now: TimeMs, req_idx: usize, ctx: &mut RouteCtx) -> usize {
+        let r = &ctx.requests[req_idx];
+        let own_tokens = r.req.prefill_len as u64;
+        let deadline =
+            (r.req.arrival_ms + r.req.slo.ttft_ms).saturating_sub(r.req.slo.tpot_ms);
+        let ids: Vec<usize> = ctx.cluster.with_role(Role::Prefill).collect();
+        debug_assert!(!ids.is_empty(), "PD cluster without prefill servers");
+        let mut best_feasible: Option<(u64, usize)> = None; // (load, id)
+        let mut best_fallback: (f64, usize) = (f64::INFINITY, ids[0]);
+        for &id in &ids {
+            let queued = ctx.cluster.instances[id].queued_prefill_tokens(ctx.requests);
+            match self.prefill_queue_feasible(now, id, own_tokens, deadline, ctx) {
+                Some(finish) => {
+                    let better = match best_feasible {
+                        Some((s, _)) => {
+                            if self.features.load_gradient {
+                                queued > s
+                            } else {
+                                queued < s
+                            }
+                        }
+                        None => true,
+                    };
+                    if better {
+                        best_feasible = Some((queued, id));
+                    }
+                    if finish < best_fallback.0 {
+                        best_fallback = (finish, id);
+                    }
+                }
+                None => {
+                    // Infeasible queue: fall back by queue length so an
+                    // overloaded cluster still spreads.
+                    let est = now as f64 + queued as f64;
+                    if best_feasible.is_none() && est < best_fallback.0 {
+                        best_fallback = (est, id);
+                    }
+                }
+            }
+        }
+        best_feasible.map(|(_, id)| id).unwrap_or(best_fallback.1)
+    }
+}
+
+impl Router for PolyServeRouter {
+    fn route_new(&mut self, now: TimeMs, req_idx: usize, ctx: &mut RouteCtx) -> Option<usize> {
+        match self.mode {
+            ServingMode::PdDisaggregated => Some(self.place_prefill_pd(now, req_idx, ctx)),
+            ServingMode::Colocated => {
+                if let Some(id) = self.placement_ladder(now, req_idx, false, ctx) {
+                    return Some(id);
+                }
+                let k = ctx.requests[req_idx].tier;
+                self.stats.pends += 1;
+                self.pending[k].push_back(Pending {
+                    req_idx,
+                    decode_phase: false,
+                });
+                None
+            }
+        }
+    }
+
+    fn route_decode(&mut self, now: TimeMs, req_idx: usize, ctx: &mut RouteCtx) -> Option<usize> {
+        debug_assert_eq!(self.mode, ServingMode::PdDisaggregated);
+        if let Some(id) = self.placement_ladder(now, req_idx, true, ctx) {
+            return Some(id);
+        }
+        let k = ctx.requests[req_idx].tier;
+        self.stats.pends += 1;
+        self.pending[k].push_back(Pending {
+            req_idx,
+            decode_phase: true,
+        });
+        None
+    }
+
+    fn chunk_budget(&mut self, now: TimeMs, inst: usize, ctx: &mut RouteCtx) -> u64 {
+        let _ = now;
+        let i = &ctx.cluster.instances[inst];
+        match i.role {
+            Role::Prefill => {
+                // §4.7 dynamic chunking: if the head job's remainder is
+                // under 2× the budget, take it all in one iteration (and
+                // nothing else fills the gap — form_batch packs only up
+                // to this budget).
+                if !self.features.dynamic_chunking {
+                    return self.prefill_budget;
+                }
+                // §4.7: when the head job's remainder is between 1× and
+                // 2× the budget, take it all in one iteration *without
+                // admitting new requests to fill the gap* (form_batch
+                // packs only up to the returned budget, so the extended
+                // chunk occupies it exactly). Smaller remainders pack
+                // with other queued jobs at the normal budget.
+                match i.prefill_queue.front() {
+                    Some(job) => {
+                        let r = &ctx.requests[job.req_idx];
+                        let remaining = (r.req.prefill_len - r.prefill_done) as u64;
+                        if remaining > self.prefill_budget
+                            && remaining <= 2 * self.prefill_budget
+                        {
+                            remaining
+                        } else {
+                            self.prefill_budget
+                        }
+                    }
+                    None => self.prefill_budget,
+                }
+            }
+            Role::Decode => 0,
+            Role::Coloc => {
+                // TPOT-derived chunk for this instance's tier; Pending /
+                // BE instances pace at the loosest tier.
+                let tpot = match ctx.cluster.assign[inst] {
+                    TierAssign::Tier(k) => self.tiers.tier(k).tpot_ms,
+                    _ => self.tiers.tier(self.tiers.len() - 1).tpot_ms,
+                };
+                let est = load_estimate(i, ctx.requests, ctx.profile);
+                admission::max_chunk_under(
+                    ctx.profile,
+                    tpot as f64,
+                    est.batch,
+                    est.kv_now,
+                    PF_TOKEN_RATIO,
+                )
+            }
+        }
+    }
+
+    fn on_iter_end(&mut self, now: TimeMs, inst: usize, ctx: &mut RouteCtx) {
+        self.drain_pending(now, ctx);
+        self.autoscale_down(now, inst, ctx);
+    }
+
+    fn on_tick(&mut self, now: TimeMs, ctx: &mut RouteCtx) {
+        self.drain_pending(now, ctx);
+        // Sweep: any tier instance that drained between its own
+        // iterations (e.g. became empty via decode completions).
+        for inst in 0..ctx.cluster.instances.len() {
+            self.autoscale_down(now, inst, ctx);
+        }
+    }
+
+    fn name(&self) -> String {
+        match self.mode {
+            ServingMode::PdDisaggregated => "PD-PolyServe".into(),
+            ServingMode::Colocated => "CO-PolyServe".into(),
+        }
+    }
+
+    fn diagnostics(&self) -> String {
+        format!("{:?}", self.stats)
+    }
+}

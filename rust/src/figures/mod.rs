@@ -1,0 +1,176 @@
+//! Shared experiment harness: wires workload → cluster → router →
+//! simulation, used by the CLI, the examples, and every bench.
+
+use crate::analysis;
+use crate::config::{Policy, SimConfig};
+use crate::coordinator::make_router;
+use crate::metrics::AttainmentCurve;
+use crate::model::CostModel;
+use crate::profile::ProfileTable;
+use crate::sim::{Cluster, SimParams, SimResult, Simulation};
+use crate::util::rng::Rng;
+use crate::util::threadpool::par_map;
+use crate::workload::{TraceGenerator, Workload};
+
+/// Everything needed to run one simulation cell, pre-computed.
+pub struct Experiment {
+    pub cfg: SimConfig,
+    pub cost_model: CostModel,
+    pub profile: ProfileTable,
+    pub workload: Workload,
+    pub optimal_rps: f64,
+    pub rate_rps: f64,
+}
+
+impl Experiment {
+    /// Build workload + profile for a config. The request rate is
+    /// `rate_frac_of_optimal × optimal` unless `rate_rps` overrides.
+    pub fn prepare(cfg: &SimConfig) -> Experiment {
+        let cm = CostModel::h200_llama8b();
+        let profile = ProfileTable::from_cost_model(&cm);
+        let gen = TraceGenerator::new(cfg.trace);
+        let mut rng = Rng::new(cfg.seed);
+
+        // Pass 1: provisional workload at a nominal rate to measure the
+        // optimal-goodput bound for this trace + SLO mix.
+        let mode = cfg.mode;
+        let cm_for_filter = cm.clone();
+        let achievable =
+            move |p: u32, d: u32, slo| analysis::slo_achievable(&cm_for_filter, mode, p, d, slo);
+        let probe = gen.generate(
+            (cfg.requests / 4).clamp(500, 20_000),
+            10.0,
+            &cfg.tier_dist,
+            &achievable,
+            &mut rng,
+        );
+        let optimal_rps = analysis::optimal_goodput_rps(&cm, cfg.mode, &probe, cfg.instances);
+
+        // Auto-size the PD prefill cluster from the probe's work split
+        // (§2.4: "each cluster can scale independently"): share of the
+        // per-request optimal cost spent in prefill, plus headroom for
+        // arrival burstiness.
+        let mut cfg = cfg.clone();
+        if cfg.prefill_frac == 0.0 {
+            let (mut pf, mut total) = (0.0f64, 0.0f64);
+            for r in &probe.requests {
+                let tpot = (r.slo.tpot_ms as f64).min(10_000.0);
+                let b_dc = cm.max_decode_batch(tpot, r.avg_kv_tokens()).max(1);
+                let (a, b) = cm.cost_pd_split_ms(
+                    r.prefill_len as u64,
+                    r.decode_len as u64,
+                    cm.max_token_batch,
+                    b_dc,
+                );
+                pf += a;
+                total += a + b;
+            }
+            let share = if total > 0.0 { pf / total } else { 0.3 };
+            cfg.prefill_frac = (share * 1.25).clamp(0.08, 0.6);
+        }
+
+        let rate_rps = cfg
+            .rate_rps
+            .unwrap_or(optimal_rps * cfg.rate_frac_of_optimal)
+            .max(0.001);
+        let mut rng2 = Rng::new(cfg.seed ^ 0x5EED);
+        let workload = gen.generate(cfg.requests, rate_rps, &cfg.tier_dist, &achievable, &mut rng2);
+        Experiment {
+            cfg,
+            cost_model: cm,
+            profile,
+            workload,
+            optimal_rps,
+            rate_rps,
+        }
+    }
+
+    /// Run the simulation for this experiment.
+    pub fn run(&self) -> SimResult {
+        let polyserve_managed = self.cfg.policy == Policy::PolyServe;
+        let cluster = Cluster::build(
+            self.cfg.mode,
+            self.cfg.instances,
+            self.cfg.prefill_frac,
+            self.cfg.tiers.len(),
+            &self.cost_model,
+            polyserve_managed,
+        );
+        let params = SimParams {
+            mode: self.cfg.mode,
+            ..Default::default()
+        };
+        let sim = Simulation::new(
+            params,
+            self.cost_model.clone(),
+            &self.profile,
+            &self.workload,
+            cluster,
+            &self.cfg.tiers,
+        );
+        let mut router = make_router(&self.cfg, self.workload.avg_decode_len());
+        let res = sim.run(router.as_mut());
+        let diag = router.diagnostics();
+        if !diag.is_empty() {
+            log::debug!("router diagnostics: {diag}");
+        }
+        res
+    }
+}
+
+/// Convenience: run one config end to end.
+pub fn run_sim(cfg: &SimConfig) -> SimResult {
+    Experiment::prepare(cfg).run()
+}
+
+/// Sweep request rate fractions and build the attainment-vs-rate curve
+/// (the Fig 6 per-cell harness). Returns (curve, optimal_rps).
+pub fn attainment_curve(
+    base: &SimConfig,
+    fracs: &[f64],
+    threads: usize,
+) -> (AttainmentCurve, f64) {
+    let cells: Vec<SimConfig> = fracs
+        .iter()
+        .map(|&f| {
+            let mut c = base.clone();
+            c.rate_frac_of_optimal = f;
+            c
+        })
+        .collect();
+    let results = par_map(cells, threads, |_, cfg| {
+        let exp = Experiment::prepare(&cfg);
+        let res = exp.run();
+        (exp.rate_rps, res.attainment.overall(), exp.optimal_rps)
+    });
+    let mut curve = AttainmentCurve::default();
+    let mut optimal = 0.0;
+    for (rate, att, opt) in results {
+        curve.push(rate, att);
+        optimal = opt;
+    }
+    (curve, optimal)
+}
+
+/// CO-Chunk with the paper's budget sweep: runs each budget and keeps
+/// the best attainment (§5.1).
+pub fn best_chunk_attainment(base: &SimConfig, budgets: &[u64], threads: usize) -> (u64, f64) {
+    let cells: Vec<SimConfig> = budgets
+        .iter()
+        .map(|&b| {
+            let mut c = base.clone();
+            c.policy = Policy::Chunk;
+            c.chunk_budget = b;
+            c
+        })
+        .collect();
+    let budgets_owned: Vec<u64> = budgets.to_vec();
+    let results = par_map(cells, threads, move |i, cfg| {
+        let res = run_sim(&cfg);
+        (budgets_owned[i], res.attainment.overall())
+    });
+    results
+        .into_iter()
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap_or((512, 0.0))
+}

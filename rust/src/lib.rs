@@ -1,0 +1,35 @@
+//! # PolyServe — Efficient Multi-SLO Serving at Scale
+//!
+//! A reproduction of the PolyServe paper (CS.DC 2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's contribution: a multi-SLO
+//!   request router with request binning per TPOT tier, load-gradient
+//!   routing, lazy promotion, fine-grained auto-scaling, profile-based
+//!   batch formation, wait-time-aware scheduling, dynamic chunking
+//!   (PD-disaggregation) and continuous chunked-prefill prediction
+//!   (co-location). Plus the discrete-event cluster simulator the paper
+//!   evaluates on, and a real serving runtime executing AOT-compiled
+//!   model artifacts through PJRT.
+//! * **Layer 2 (python/compile/model.py)** — a LLaMA-style transformer
+//!   (GQA + SwiGLU) decode/prefill step in JAX, lowered once to HLO text.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for decode
+//!   attention, prefill attention and the fused FFN, verified against
+//!   pure-jnp oracles.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the
+//! model once; the Rust binary is self-contained afterwards.
+
+pub mod util;
+pub mod slo;
+pub mod model;
+pub mod profile;
+pub mod workload;
+pub mod analysis;
+pub mod sim;
+pub mod coordinator;
+pub mod runtime;
+pub mod server;
+pub mod config;
+pub mod metrics;
+pub mod figures;

@@ -1,0 +1,266 @@
+//! PolyServe CLI — the Layer-3 leader entrypoint.
+//!
+//! Commands:
+//! * `simulate` — run one cluster simulation cell and print its report.
+//! * `sweep`    — attainment-vs-rate curve for a policy (Fig 6 cell).
+//! * `analyze`  — print the §3 closed-form batch-limit / cost tables.
+//! * `profile`  — build a profiling table (analytic, or measured from
+//!   the AOT artifacts with `--real`) and save it as JSON.
+//! * `serve`    — run the live multi-instance server on the AOT model
+//!   artifacts and report latency/throughput.
+
+use polyserve::analysis::{self, ServingMode};
+use polyserve::config::{Policy, SimConfig};
+use polyserve::figures;
+use polyserve::model::CostModel;
+use polyserve::profile::ProfileTable;
+use polyserve::util::cli::{App, Args, Command, Parsed};
+use polyserve::util::logging;
+use polyserve::workload::TraceKind;
+use std::path::Path;
+
+fn main() {
+    logging::init();
+    let app = App::new("polyserve", "multi-SLO LLM serving at scale")
+        .command(
+            Command::new("simulate", "run one simulation cell")
+                .opt("trace", "sharegpt", "trace name (see workload::TraceKind)")
+                .opt("policy", "polyserve", "polyserve|random|minimal|chunk")
+                .opt("mode", "pd", "pd|coloc")
+                .opt("instances", "20", "number of serving instances")
+                .opt("requests", "30000", "number of requests")
+                .opt("rate-frac", "0.8", "request rate as a fraction of optimal")
+                .opt("rate-rps", "", "absolute request rate (overrides rate-frac)")
+                .opt("seed", "53264", "rng seed")
+                .opt("config", "", "TOML config file (overrides defaults)")
+                .flag("verbose", "per-tier breakdown"),
+        )
+        .command(
+            Command::new("sweep", "attainment-vs-rate curve (Fig 6 cell)")
+                .opt("trace", "sharegpt", "trace name")
+                .opt("policy", "polyserve", "policy")
+                .opt("mode", "pd", "pd|coloc")
+                .opt("instances", "20", "instances")
+                .opt("requests", "10000", "requests per cell")
+                .opt("fracs", "0.2,0.4,0.6,0.8,1.0,1.2", "rate fractions"),
+        )
+        .command(
+            Command::new("analyze", "closed-form §3 batch limits and costs")
+                .opt("p", "1000", "prefill length")
+                .opt("d", "4000", "decode length")
+                .opt("ttft", "700", "TTFT budget ms"),
+        )
+        .command(
+            Command::new("profile", "build + save a profiling table")
+                .opt("out", "artifacts/profile_h200_sim.json", "output path")
+                .opt("artifacts", "artifacts", "artifact dir (for --real)")
+                .flag("real", "measure from the AOT PJRT executables"),
+        )
+        .command(
+            Command::new("serve", "live multi-instance serving demo")
+                .opt("artifacts", "artifacts", "artifact dir")
+                .opt("instances", "2", "in-process serving instances")
+                .opt("requests", "64", "synthetic requests to serve")
+                .opt("rate-rps", "0", "arrival rate (0 = auto-calibrate to ~60% capacity)"),
+        );
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match app.parse(&argv) {
+        Parsed::Help(h) => println!("{h}"),
+        Parsed::Error(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+        Parsed::Run { command, args } => {
+            let code = match command.as_str() {
+                "simulate" => cmd_simulate(&args),
+                "sweep" => cmd_sweep(&args),
+                "analyze" => cmd_analyze(&args),
+                "profile" => cmd_profile(&args),
+                "serve" => cmd_serve(&args),
+                _ => unreachable!(),
+            };
+            std::process::exit(code);
+        }
+    }
+}
+
+fn sim_config_from(args: &Args) -> Result<SimConfig, String> {
+    let mut cfg = if !args.str_or("config", "").is_empty() {
+        SimConfig::from_file(Path::new(args.str_or("config", ""))).map_err(|e| e.to_string())?
+    } else {
+        SimConfig::default()
+    };
+    if let Some(t) = args.get("trace") {
+        cfg.trace = TraceKind::from_name(t).ok_or_else(|| format!("unknown trace '{t}'"))?;
+    }
+    if let Some(p) = args.get("policy") {
+        cfg.policy = Policy::from_name(p).ok_or_else(|| format!("unknown policy '{p}'"))?;
+    }
+    cfg.mode = match args.str_or("mode", "pd") {
+        "pd" => ServingMode::PdDisaggregated,
+        "coloc" => ServingMode::Colocated,
+        other => return Err(format!("unknown mode '{other}'")),
+    };
+    cfg.instances = args.usize_or("instances", cfg.instances);
+    cfg.requests = args.usize_or("requests", cfg.requests);
+    cfg.rate_frac_of_optimal = args.f64_or("rate-frac", cfg.rate_frac_of_optimal);
+    if !args.str_or("rate-rps", "").is_empty() {
+        cfg.rate_rps = Some(args.f64_or("rate-rps", 0.0));
+    }
+    cfg.seed = args.u64_or("seed", cfg.seed);
+    cfg.validate().map_err(|e| e.to_string())?;
+    Ok(cfg)
+}
+
+fn cmd_simulate(args: &Args) -> i32 {
+    let cfg = match sim_config_from(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return 2;
+        }
+    };
+    let exp = figures::Experiment::prepare(&cfg);
+    println!(
+        "workload: {} requests on '{}', rate {:.2} req/s ({:.0}% of optimal {:.2} req/s)",
+        exp.workload.len(),
+        cfg.trace.name(),
+        exp.rate_rps,
+        100.0 * exp.rate_rps / exp.optimal_rps.max(1e-9),
+        exp.optimal_rps,
+    );
+    let t0 = std::time::Instant::now();
+    let res = exp.run();
+    println!(
+        "simulated {:.1} s of cluster time in {:.2} s wall",
+        res.sim_span_ms as f64 / 1000.0,
+        t0.elapsed().as_secs_f64()
+    );
+    println!(
+        "policy {}-{}: attainment {:.3} (worst tier {:.3}), served {} ({} unfinished), throughput {:.2} req/s, cost {:.3} inst·s/req, util {:.2}",
+        cfg.mode.name().to_uppercase(),
+        cfg.policy.name(),
+        res.attainment.overall(),
+        res.attainment.worst_tier(),
+        res.cost.requests_served,
+        res.unfinished,
+        res.throughput_rps,
+        res.cost.cost_per_request_s(),
+        res.cost.utilization(),
+    );
+    if args.flag("verbose") {
+        for (tpot, total, ok) in &res.attainment.per_tier {
+            println!(
+                "  tier {tpot:>4} ms: {:>6}/{:<6} = {:.3}",
+                ok,
+                total,
+                *ok as f64 / (*total).max(1) as f64
+            );
+        }
+        let (ttft, tpot) = polyserve::metrics::latency_summary(&res.outcomes);
+        if let Some(s) = ttft {
+            println!("  TTFT ms: p50 {:.0} p99 {:.0}", s.p50(), s.p99());
+        }
+        if let Some(s) = tpot {
+            println!("  mean-TPOT ms: p50 {:.1} p99 {:.1}", s.p50(), s.p99());
+        }
+    }
+    0
+}
+
+fn cmd_sweep(args: &Args) -> i32 {
+    let cfg = match sim_config_from(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return 2;
+        }
+    };
+    let fracs: Vec<f64> = args
+        .str_or("fracs", "")
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let (curve, optimal) = figures::attainment_curve(&cfg, &fracs, threads);
+    println!("optimal goodput: {optimal:.2} req/s");
+    println!("{:>10} {:>12}", "rate", "attainment");
+    for (rate, att) in &curve.points {
+        println!("{rate:>10.2} {att:>12.3}");
+    }
+    if let Some(g) = curve.goodput_at(0.9) {
+        println!(
+            "goodput@90%: {g:.2} req/s ({:.1}% of optimal)",
+            100.0 * g / optimal.max(1e-9)
+        );
+    }
+    0
+}
+
+fn cmd_analyze(args: &Args) -> i32 {
+    let cm = CostModel::h200_llama8b();
+    let p = args.u64_or("p", 1000);
+    let d = args.u64_or("d", 4000);
+    let ttft = args.f64_or("ttft", 700.0);
+    let tpots = [16.0, 20.0, 25.0, 30.0, 40.0, 50.0, 75.0, 100.0, 150.0];
+    println!("(p, d) = ({p}, {d}), TTFT = {ttft} ms\n");
+    println!(
+        "{:>8} {:>10} {:>10} {:>12} {:>12}",
+        "TPOT", "B_decode", "B_coloc", "cost_pd(s)", "cost_co(s)"
+    );
+    for pt in analysis::fig4_cost_series(&cm, p, d, ttft, &tpots) {
+        let b_dc = cm.max_decode_batch(pt.tpot_ms, p + d / 2);
+        let b_co = cm.max_coloc_batch(p, d, pt.tpot_ms, ttft);
+        println!(
+            "{:>8.0} {:>10} {:>10} {:>12.3} {:>12.3}",
+            pt.tpot_ms, b_dc, b_co, pt.cost_pd_s, pt.cost_coloc_s
+        );
+    }
+    0
+}
+
+fn cmd_profile(args: &Args) -> i32 {
+    let out = args.str_or("out", "artifacts/profile_h200_sim.json");
+    let table = if args.flag("real") {
+        match polyserve::runtime::profiler::profile_real(Path::new(args.str_or("artifacts", "artifacts"))) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("real profiling failed: {e:#}");
+                return 1;
+            }
+        }
+    } else {
+        ProfileTable::from_cost_model(&CostModel::h200_llama8b())
+    };
+    if let Some(dir) = Path::new(out).parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    match table.save(Path::new(out)) {
+        Ok(()) => {
+            println!("wrote {out}");
+            0
+        }
+        Err(e) => {
+            eprintln!("write failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    match polyserve::server::demo::run_demo(
+        Path::new(args.str_or("artifacts", "artifacts")),
+        args.usize_or("instances", 2),
+        args.usize_or("requests", 64),
+        args.f64_or("rate-rps", 8.0),
+    ) {
+        Ok(report) => {
+            println!("{report}");
+            0
+        }
+        Err(e) => {
+            eprintln!("serve failed: {e:#}");
+            1
+        }
+    }
+}

@@ -1,0 +1,245 @@
+//! Evaluation metrics: per-request outcomes, DSLO attainment (overall
+//! and per TPOT tier), goodput, and instance·second cost accounting.
+
+use crate::slo::{Slo, TimeMs};
+use crate::util::stats::{crossing_down, Summary};
+
+/// Outcome of one finished (or dropped) request.
+#[derive(Debug, Clone)]
+pub struct RequestOutcome {
+    pub id: u64,
+    pub slo: Slo,
+    pub arrival_ms: TimeMs,
+    pub first_token_ms: Option<TimeMs>,
+    pub finish_ms: Option<TimeMs>,
+    pub tokens: u64,
+    /// Every token met its DSLO deadline.
+    pub attained: bool,
+    /// Worst slack over all tokens (ms; negative = violation).
+    pub min_slack_ms: i64,
+}
+
+impl RequestOutcome {
+    pub fn ttft_ms(&self) -> Option<u64> {
+        self.first_token_ms.map(|t| t - self.arrival_ms)
+    }
+
+    /// Mean TPOT over the decode stream (ms/token).
+    pub fn mean_tpot_ms(&self) -> Option<f64> {
+        match (self.first_token_ms, self.finish_ms) {
+            (Some(first), Some(fin)) if self.tokens > 1 => {
+                Some((fin - first) as f64 / (self.tokens - 1) as f64)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Aggregated attainment report.
+#[derive(Debug, Clone)]
+pub struct AttainmentReport {
+    pub total: usize,
+    pub attained: usize,
+    /// (tpot_ms, total, attained) per tier, sorted by tpot.
+    pub per_tier: Vec<(u64, usize, usize)>,
+}
+
+impl AttainmentReport {
+    pub fn from_outcomes(outcomes: &[RequestOutcome]) -> AttainmentReport {
+        let mut per_tier: Vec<(u64, usize, usize)> = Vec::new();
+        let mut total = 0usize;
+        let mut attained = 0usize;
+        for o in outcomes {
+            if o.slo.is_best_effort() {
+                continue; // BE requests don't count toward SLO attainment
+            }
+            total += 1;
+            if o.attained {
+                attained += 1;
+            }
+            match per_tier.binary_search_by_key(&o.slo.tpot_ms, |e| e.0) {
+                Ok(i) => {
+                    per_tier[i].1 += 1;
+                    if o.attained {
+                        per_tier[i].2 += 1;
+                    }
+                }
+                Err(i) => {
+                    per_tier.insert(i, (o.slo.tpot_ms, 1, usize::from(o.attained)));
+                }
+            }
+        }
+        AttainmentReport {
+            total,
+            attained,
+            per_tier,
+        }
+    }
+
+    pub fn overall(&self) -> f64 {
+        if self.total == 0 {
+            1.0
+        } else {
+            self.attained as f64 / self.total as f64
+        }
+    }
+
+    pub fn tier_attainment(&self, tpot_ms: u64) -> Option<f64> {
+        self.per_tier
+            .iter()
+            .find(|e| e.0 == tpot_ms)
+            .map(|e| if e.1 == 0 { 1.0 } else { e.2 as f64 / e.1 as f64 })
+    }
+
+    /// Worst tier attainment — PolyServe's claim is near-uniform
+    /// attainment across tiers, so this is the discriminating number.
+    pub fn worst_tier(&self) -> f64 {
+        self.per_tier
+            .iter()
+            .map(|e| if e.1 == 0 { 1.0 } else { e.2 as f64 / e.1 as f64 })
+            .fold(1.0, f64::min)
+    }
+}
+
+/// An attainment-vs-rate curve for goodput extraction (Fig 6 / Fig 7:
+/// "goodput at 90% attainment").
+#[derive(Debug, Clone, Default)]
+pub struct AttainmentCurve {
+    /// (request rate req/s, overall attainment in [0,1]).
+    pub points: Vec<(f64, f64)>,
+}
+
+impl AttainmentCurve {
+    pub fn push(&mut self, rate_rps: f64, attainment: f64) {
+        self.points.push((rate_rps, attainment));
+        self.points
+            .sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    }
+
+    /// Goodput: the largest rate at which attainment ≥ `level`
+    /// (linear interpolation between measured rates).
+    pub fn goodput_at(&self, level: f64) -> Option<f64> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let xs: Vec<f64> = self.points.iter().map(|p| p.0).collect();
+        let ys: Vec<f64> = self.points.iter().map(|p| p.1).collect();
+        crossing_down(&xs, &ys, level)
+    }
+}
+
+/// Cost accounting: instance·seconds (§3.3 "we define the cost as
+/// instance · second").
+#[derive(Debug, Clone, Default)]
+pub struct CostAccount {
+    pub instance_busy_ms: u64,
+    /// Total instance·ms the fleet was *allocated* (busy or idle but
+    /// reserved to a tier) — the number Fig 8 divides by requests.
+    pub instance_alloc_ms: u64,
+    pub requests_served: u64,
+}
+
+impl CostAccount {
+    pub fn cost_per_request_s(&self) -> f64 {
+        if self.requests_served == 0 {
+            return f64::INFINITY;
+        }
+        self.instance_alloc_ms as f64 / 1000.0 / self.requests_served as f64
+    }
+
+    pub fn utilization(&self) -> f64 {
+        if self.instance_alloc_ms == 0 {
+            0.0
+        } else {
+            self.instance_busy_ms as f64 / self.instance_alloc_ms as f64
+        }
+    }
+}
+
+/// Latency summary across outcomes (TTFT and mean-TPOT distributions).
+pub fn latency_summary(outcomes: &[RequestOutcome]) -> (Option<Summary>, Option<Summary>) {
+    let ttfts: Vec<f64> = outcomes
+        .iter()
+        .filter_map(|o| o.ttft_ms().map(|t| t as f64))
+        .collect();
+    let tpots: Vec<f64> = outcomes.iter().filter_map(|o| o.mean_tpot_ms()).collect();
+    (
+        if ttfts.is_empty() { None } else { Some(Summary::of(&ttfts)) },
+        if tpots.is_empty() { None } else { Some(Summary::of(&tpots)) },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(tpot: u64, attained: bool) -> RequestOutcome {
+        RequestOutcome {
+            id: 0,
+            slo: Slo::new(500, tpot),
+            arrival_ms: 0,
+            first_token_ms: Some(100),
+            finish_ms: Some(1100),
+            tokens: 101,
+            attained,
+            min_slack_ms: if attained { 5 } else { -3 },
+        }
+    }
+
+    #[test]
+    fn report_aggregates_tiers() {
+        let outcomes = vec![
+            outcome(20, true),
+            outcome(20, false),
+            outcome(50, true),
+            outcome(50, true),
+        ];
+        let r = AttainmentReport::from_outcomes(&outcomes);
+        assert_eq!(r.total, 4);
+        assert_eq!(r.attained, 3);
+        assert!((r.overall() - 0.75).abs() < 1e-9);
+        assert_eq!(r.tier_attainment(20), Some(0.5));
+        assert_eq!(r.tier_attainment(50), Some(1.0));
+        assert_eq!(r.tier_attainment(100), None);
+        assert!((r.worst_tier() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn best_effort_excluded() {
+        let mut o = outcome(20, true);
+        o.slo = Slo::BEST_EFFORT;
+        let r = AttainmentReport::from_outcomes(&[o]);
+        assert_eq!(r.total, 0);
+        assert_eq!(r.overall(), 1.0);
+    }
+
+    #[test]
+    fn goodput_extraction() {
+        let mut c = AttainmentCurve::default();
+        c.push(10.0, 1.0);
+        c.push(30.0, 0.80);
+        c.push(20.0, 0.95);
+        let g = c.goodput_at(0.90).unwrap();
+        assert!(g > 20.0 && g < 30.0, "goodput={g}");
+    }
+
+    #[test]
+    fn cost_account() {
+        let c = CostAccount {
+            instance_busy_ms: 5_000,
+            instance_alloc_ms: 10_000,
+            requests_served: 5,
+        };
+        assert!((c.cost_per_request_s() - 2.0).abs() < 1e-9);
+        assert!((c.utilization() - 0.5).abs() < 1e-9);
+        let empty = CostAccount::default();
+        assert!(empty.cost_per_request_s().is_infinite());
+    }
+
+    #[test]
+    fn outcome_latencies() {
+        let o = outcome(20, true);
+        assert_eq!(o.ttft_ms(), Some(100));
+        assert!((o.mean_tpot_ms().unwrap() - 10.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,442 @@
+//! H200-calibrated analytic iteration-time model.
+//!
+//! The paper's simulator replays vLLM kernel profiling from an H200
+//! serving LLaMA-3.1-8B; we cannot profile that hardware, so this module
+//! provides an analytic surrogate calibrated to every number the paper
+//! publishes (see DESIGN.md §3 for the derivation):
+//!
+//! ```text
+//! iter_ms(B_dc, B_pf, KV) = t_fixed
+//!                         + max(t_weight, c_dc·B_dc + c_pf·B_pf)
+//!                         + c_attn · KV
+//! ```
+//!
+//! * `B_dc` — decode tokens in the batch (= decode requests; each incurs
+//!   per-request work: sampling, KV paging, launch bookkeeping).
+//! * `B_pf` — prefill-chunk tokens (a single request's contiguous chunk
+//!   amortizes per-request work, so its per-token GEMM coefficient is the
+//!   compute-bound rate — 4× cheaper than a decode token's effective rate).
+//! * `KV`   — KV-cache tokens read by attention this iteration.
+//! * `t_fixed`  — launch/collective overhead per iteration.
+//! * `t_weight` — weight-load floor (GEMMs are memory-bound until the
+//!   token term exceeds it — the "batching effect" of §2.2).
+//! * `c_attn`   — per-KV-token attention cost; prefill attention is
+//!   modeled as decode attention at equal KV footprint (§3.4).
+//!
+//! Calibration anchors (paper §3.6/§5.1): 15 ms min per-token latency at
+//! B=1; Fig 2's (p,d)=(1000,4000) points B≈50 @ 20 ms and B≈150 @ 40 ms;
+//! H200 KV capacity ≈ 900k tokens for 8B bf16; prefill rate ≈ 30k tok/s
+//! (2048-token chunk in ≈ 73 ms, the vLLM chunked-prefill ballpark).
+//!
+//! Everything downstream (simulator, scheduler, analysis) consumes this
+//! through either the closed-form methods here or a sampled
+//! [`crate::profile::ProfileTable`] — the scheduler only ever sees the
+//! table, mirroring the paper's profiling-driven design.
+
+/// Analytic cost model parameters. Times in ms, sizes in tokens.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostModel {
+    /// Per-iteration fixed overhead (launch, collectives, sampling).
+    pub t_fixed_ms: f64,
+    /// Weight-load floor for the GEMM bundle.
+    pub t_weight_ms: f64,
+    /// Incremental GEMM cost per *decode* batch token once compute-bound.
+    pub c_gemm_ms_per_token: f64,
+    /// Incremental GEMM cost per *prefill-chunk* token (compute-bound).
+    pub c_gemm_prefill_ms_per_token: f64,
+    /// Attention cost per KV token resident in the batch.
+    pub c_attn_ms_per_kv_token: f64,
+    /// KV-cache capacity in tokens (the paper's `C`).
+    pub kv_capacity_tokens: u64,
+    /// Max GEMM token batch per iteration (prefill saturation, §3.4:
+    /// "prefill batch size can easily reach 2048").
+    pub max_token_batch: u64,
+}
+
+impl CostModel {
+    /// The H200 / LLaMA-3.1-8B calibration from DESIGN.md §3.
+    pub fn h200_llama8b() -> CostModel {
+        CostModel {
+            t_fixed_ms: 5.0,
+            t_weight_ms: 10.0,
+            c_gemm_ms_per_token: 0.1333,
+            c_gemm_prefill_ms_per_token: 0.0333,
+            c_attn_ms_per_kv_token: 3.333e-5,
+            kv_capacity_tokens: 900_000,
+            max_token_batch: 2048,
+        }
+    }
+
+    /// Variant with the KV-capacity constraint lifted — the regime the
+    /// paper's Fig 3/4 plots implicitly assume (its co-location batch
+    /// sizes exceed any single-GPU KV capacity; see EXPERIMENTS.md).
+    pub fn with_unbounded_kv(&self) -> CostModel {
+        CostModel {
+            kv_capacity_tokens: u64::MAX / 4,
+            ..self.clone()
+        }
+    }
+
+    /// Effective decode-equivalent token count of a mixed batch — the
+    /// single "batch size" axis of the profiling table.
+    #[inline]
+    pub fn effective_tokens(&self, b_dc: u64, b_pf: u64) -> f64 {
+        b_dc as f64
+            + b_pf as f64 * (self.c_gemm_prefill_ms_per_token / self.c_gemm_ms_per_token)
+    }
+
+    /// GEMM bundle time for a decode-token batch of `b` (paper's GEMM(B)).
+    #[inline]
+    pub fn gemm_ms(&self, b: u64) -> f64 {
+        self.t_weight_ms.max(self.c_gemm_ms_per_token * b as f64)
+    }
+
+    /// GEMM bundle time for a mixed decode/prefill batch.
+    #[inline]
+    pub fn gemm_ms_mixed(&self, b_dc: u64, b_pf: u64) -> f64 {
+        self.t_weight_ms.max(
+            self.c_gemm_ms_per_token * b_dc as f64
+                + self.c_gemm_prefill_ms_per_token * b_pf as f64,
+        )
+    }
+
+    /// GEMM time for a pure prefill chunk of `b` tokens.
+    #[inline]
+    pub fn gemm_prefill_ms(&self, b: u64) -> f64 {
+        self.t_weight_ms
+            .max(self.c_gemm_prefill_ms_per_token * b as f64)
+    }
+
+    /// Decode-attention time for `kv_tokens` total resident KV
+    /// (the paper's DcAttn(·)).
+    #[inline]
+    pub fn dc_attn_ms(&self, kv_tokens: u64) -> f64 {
+        self.c_attn_ms_per_kv_token * kv_tokens as f64
+    }
+
+    /// Prefill-attention time. §3.4: "its execution time is comparable
+    /// to decode attention with the same existing KV-cache length", so
+    /// we reuse the same coefficient.
+    #[inline]
+    pub fn pf_attn_ms(&self, kv_tokens: u64) -> f64 {
+        self.dc_attn_ms(kv_tokens)
+    }
+
+    /// Iteration time for a decode-only batch `b` with `kv_tokens`
+    /// resident.
+    #[inline]
+    pub fn iter_ms(&self, b: u64, kv_tokens: u64) -> f64 {
+        if b == 0 {
+            return 0.0;
+        }
+        self.t_fixed_ms + self.gemm_ms(b) + self.dc_attn_ms(kv_tokens)
+    }
+
+    /// Iteration time for a mixed batch.
+    #[inline]
+    pub fn iter_ms_mixed(&self, b_dc: u64, b_pf: u64, kv_tokens: u64) -> f64 {
+        if b_dc == 0 && b_pf == 0 {
+            return 0.0;
+        }
+        self.t_fixed_ms + self.gemm_ms_mixed(b_dc, b_pf) + self.dc_attn_ms(kv_tokens)
+    }
+
+    /// Iteration time rounded up to the simulator's 1 ms resolution.
+    #[inline]
+    pub fn iter_ms_quantized(&self, b: u64, kv_tokens: u64) -> u64 {
+        self.iter_ms(b, kv_tokens).ceil() as u64
+    }
+
+    /// The decode batch size at which GEMM transitions from weight-bound
+    /// to compute-bound (the knee of the batching-effect curve).
+    pub fn gemm_knee(&self) -> u64 {
+        (self.t_weight_ms / self.c_gemm_ms_per_token).ceil() as u64
+    }
+
+    /// Largest decode batch size meeting `tpot_ms` for PD-disaggregation
+    /// with per-request KV footprint `kv_per_req` tokens (§3.4:
+    /// GEMM(B) + DcAttn(B·(p + d/2)) < TPOT and B·(p + d/2) < C).
+    /// Returns 0 if even B=1 misses.
+    pub fn max_decode_batch(&self, tpot_ms: f64, kv_per_req: u64) -> u64 {
+        let mut lo = 0u64;
+        let mut hi = self.max_token_batch.max(4096);
+        // KV capacity bound
+        if kv_per_req > 0 {
+            hi = hi.min(self.kv_capacity_tokens / kv_per_req);
+        }
+        while lo < hi {
+            let mid = (lo + hi + 1) / 2;
+            let t = self.iter_ms(mid, mid.saturating_mul(kv_per_req));
+            if t < tpot_ms {
+                lo = mid;
+            } else {
+                hi = mid - 1;
+            }
+        }
+        lo
+    }
+
+    /// Largest co-located token batch `B` meeting both TPOT and TTFT for
+    /// a (p, d) workload (§3.4 co-location derivation):
+    ///
+    /// * decode: `iter(B_dc, B_pf, d/(p+d)·B·(p+d/2) + p) < TPOT`
+    ///   with `B_dc = d/(p+d)·B`, `B_pf = p/(p+d)·B`
+    /// * prefill: `N_iter · iter = (p+d)/B · iter < TTFT`
+    /// * memory: `d/(p+d)·B·(p+d/2) + p < C`
+    pub fn max_coloc_batch(&self, p: u64, d: u64, tpot_ms: f64, ttft_ms: f64) -> u64 {
+        let pd = (p + d) as f64;
+        let split = |b: u64| -> (u64, u64) {
+            let b_dc = (d as f64 / pd * b as f64).round() as u64;
+            (b_dc, b - b_dc.min(b))
+        };
+        let kv_of = |b: u64| -> u64 {
+            let (b_dc, _) = split(b);
+            (b_dc as f64 * (p as f64 + d as f64 / 2.0)) as u64 + p
+        };
+        // TPOT + memory predicate is monotone in B; binary search it,
+        // then verify TTFT by scanning down (TTFT improves with larger
+        // B, so violations at the top mean total infeasibility — but we
+        // scan defensively for robustness near the boundary).
+        let tpot_ok = |b: u64| -> bool {
+            let kv = kv_of(b);
+            if kv >= self.kv_capacity_tokens {
+                return false;
+            }
+            let (b_dc, b_pf) = split(b);
+            self.iter_ms_mixed(b_dc, b_pf, kv) < tpot_ms
+        };
+        let ttft_ok = |b: u64| -> bool {
+            let (b_dc, b_pf) = split(b);
+            let t = self.iter_ms_mixed(b_dc, b_pf, kv_of(b));
+            (pd / b as f64) * t < ttft_ms
+        };
+        let mut lo = 0u64;
+        let mut hi = self.max_token_batch;
+        while lo < hi {
+            let mid = (lo + hi + 1) / 2;
+            if tpot_ok(mid) {
+                lo = mid;
+            } else {
+                hi = mid - 1;
+            }
+        }
+        let mut b = lo;
+        while b > 0 && !ttft_ok(b) {
+            b -= 1;
+        }
+        b
+    }
+
+    /// Per-request serving cost (instance·ms) for PD-disaggregation at
+    /// decode batch `b_dc` and prefill batch `b_pf` (§3.5), split into
+    /// (prefill, decode) components:
+    ///
+    /// `p·GEMM_pf(B_pf)/B_pf + PF(p)` and `d·GEMM(B_dc)/B_dc + DcAttn(d(p+d/2))`
+    pub fn cost_pd_split_ms(&self, p: u64, d: u64, b_pf: u64, b_dc: u64) -> (f64, f64) {
+        if b_pf == 0 || b_dc == 0 {
+            return (f64::INFINITY, f64::INFINITY);
+        }
+        let prefill = p as f64
+            * ((self.t_fixed_ms + self.gemm_prefill_ms(b_pf)) / b_pf as f64)
+            + self.pf_attn_ms(p);
+        let decode = d as f64 * ((self.t_fixed_ms + self.gemm_ms(b_dc)) / b_dc as f64)
+            + self.dc_attn_ms(d * (p + d / 2));
+        (prefill, decode)
+    }
+
+    /// Total PD per-request cost (instance·ms).
+    pub fn cost_pd_ms(&self, p: u64, d: u64, b_pf: u64, b_dc: u64) -> f64 {
+        let (a, b) = self.cost_pd_split_ms(p, d, b_pf, b_dc);
+        a + b
+    }
+
+    /// Per-request serving cost (instance·ms) for co-location at token
+    /// batch `b` (§3.5): `(p+d)·GEMM(B)/B + PF(p) + DcAttn(d(p+d/2))`.
+    pub fn cost_coloc_ms(&self, p: u64, d: u64, b: u64) -> f64 {
+        if b == 0 {
+            return f64::INFINITY;
+        }
+        let pd = (p + d) as f64;
+        let b_dc = (d as f64 / pd * b as f64).round() as u64;
+        let b_pf = b - b_dc.min(b);
+        let gemm = self.t_fixed_ms + self.gemm_ms_mixed(b_dc, b_pf);
+        pd * (gemm / b as f64) + self.pf_attn_ms(p) + self.dc_attn_ms(d * (p + d / 2))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> CostModel {
+        CostModel::h200_llama8b()
+    }
+
+    #[test]
+    fn calibration_anchor_b1() {
+        // §5.1: min per-token latency ≈ 15 ms at B=1, ctx=1.
+        let t = m().iter_ms(1, 1);
+        assert!((t - 15.0).abs() < 0.1, "iter(1,1) = {t}");
+    }
+
+    #[test]
+    fn calibration_anchor_fig2_20ms() {
+        // Fig 2 @ (p,d)=(1000,4000): B≈50 at 20 ms TPOT.
+        let b = m().max_decode_batch(20.0, 1000 + 4000 / 2);
+        assert!((45..=55).contains(&b), "B@20ms = {b}");
+    }
+
+    #[test]
+    fn calibration_anchor_fig2_40ms() {
+        // Fig 2 @ (p,d)=(1000,4000): B≈150 at 40 ms TPOT.
+        let b = m().max_decode_batch(40.0, 3000);
+        assert!((140..=160).contains(&b), "B@40ms = {b}");
+    }
+
+    #[test]
+    fn paper_cost_ratio_anchor() {
+        // §3.6: dropping from B=150 (40 ms) to B=50 (20 ms) is a "near
+        // 1.5× cost increase" — per-token time 0.4 vs 0.267 ms.
+        let mm = m();
+        let per_tok_50 = mm.iter_ms(50, 50 * 3000) / 50.0;
+        let per_tok_150 = mm.iter_ms(150, 150 * 3000) / 150.0;
+        let ratio = per_tok_50 / per_tok_150;
+        assert!((1.35..=1.65).contains(&ratio), "ratio = {ratio}");
+    }
+
+    #[test]
+    fn batch_size_monotone_in_tpot() {
+        let mm = m();
+        let mut last = 0;
+        for tpot in [16.0, 20.0, 30.0, 50.0, 100.0] {
+            let b = mm.max_decode_batch(tpot, 3000);
+            assert!(b >= last, "tpot={tpot} b={b} last={last}");
+            last = b;
+        }
+    }
+
+    #[test]
+    fn below_floor_tpot_gives_zero_batch() {
+        // 14 ms < 15 ms floor → nothing schedulable.
+        assert_eq!(m().max_decode_batch(14.0, 3000), 0);
+    }
+
+    #[test]
+    fn kv_capacity_caps_batch() {
+        let mm = m();
+        // Enormous per-request KV: capacity, not latency, binds.
+        let b = mm.max_decode_batch(100.0, 200_000);
+        assert_eq!(b, mm.kv_capacity_tokens / 200_000);
+    }
+
+    #[test]
+    fn prefill_tokens_cheaper_than_decode_tokens() {
+        let mm = m();
+        assert!(mm.gemm_prefill_ms(2048) < mm.gemm_ms(2048));
+        // 2048-token chunk ≈ 68 ms GEMM → ~30k tok/s prefill.
+        let t = mm.gemm_prefill_ms(2048);
+        assert!((60.0..80.0).contains(&t), "chunk gemm = {t}");
+    }
+
+    #[test]
+    fn coloc_batch_increases_with_tpot() {
+        let mm = m();
+        let b20 = mm.max_coloc_batch(1000, 1000, 20.0, 2000.0);
+        let b50 = mm.max_coloc_batch(1000, 1000, 50.0, 2000.0);
+        assert!(b50 > b20, "b20={b20} b50={b50}");
+    }
+
+    #[test]
+    fn coloc_ttft_binds_for_long_prompts() {
+        let mm = m();
+        // Long prompt + tight TTFT forces infeasibility (or tiny batch).
+        let loose = mm.max_coloc_batch(8000, 1000, 50.0, 10_000.0);
+        let tight = mm.max_coloc_batch(8000, 1000, 50.0, 700.0);
+        assert!(tight <= loose, "tight={tight} loose={loose}");
+    }
+
+    #[test]
+    fn cost_decreases_with_batch() {
+        let mm = m();
+        let c1 = mm.cost_pd_ms(1000, 1000, 2048, 10);
+        let c2 = mm.cost_pd_ms(1000, 1000, 2048, 100);
+        assert!(c2 < c1);
+    }
+
+    #[test]
+    fn cost_zero_batch_is_infinite() {
+        assert!(m().cost_pd_ms(100, 100, 0, 10).is_infinite());
+        assert!(m().cost_coloc_ms(100, 100, 0).is_infinite());
+    }
+
+    #[test]
+    fn fig4_short_sequences_near_parity() {
+        // §3.5: "For short sequences, Co-location and PD-Disaggregate do
+        // not incur a large difference."
+        let mm = m();
+        let (p, d) = (512u64, 512u64);
+        let b_co = mm.max_coloc_batch(p, d, 50.0, 700.0);
+        let b_dc = mm.max_decode_batch(50.0, p + d / 2);
+        let cost_co = mm.cost_coloc_ms(p, d, b_co);
+        let cost_pd = mm.cost_pd_ms(p, d, mm.max_token_batch, b_dc);
+        let ratio = cost_co / cost_pd;
+        assert!(
+            (0.6..=1.4).contains(&ratio),
+            "co={cost_co:.0} pd={cost_pd:.0} ratio={ratio:.2}"
+        );
+    }
+
+    #[test]
+    fn fig4_long_sequences_favor_coloc_when_memory_unbound() {
+        // §3.5: "for long sequences, Co-location features lower cost."
+        // The mechanism: PD pays decode GEMM at a small (memory/TPOT
+        // capped) B_dc, while co-location amortizes all p+d tokens at the
+        // large mixed batch. The paper's Fig 3/4 batch sizes imply a
+        // non-binding KV capacity, so we validate the claim in that
+        // regime (see EXPERIMENTS.md for the discussion).
+        let mm = m().with_unbounded_kv();
+        let (p, d) = (4000u64, 4000u64);
+        let tpot = 100.0;
+        let ttft = 2000.0;
+        let b_co = mm.max_coloc_batch(p, d, tpot, ttft);
+        let b_dc = mm.max_decode_batch(tpot, p + d / 2);
+        let cost_co = mm.cost_coloc_ms(p, d, b_co);
+        let cost_pd = mm.cost_pd_ms(p, d, mm.max_token_batch, b_dc);
+        assert!(
+            cost_co < cost_pd,
+            "cost_co={cost_co:.0} cost_pd={cost_pd:.0} (b_co={b_co}, b_dc={b_dc})"
+        );
+    }
+
+    #[test]
+    fn gemm_knee_location() {
+        let mm = m();
+        assert_eq!(mm.gemm_knee(), 76); // 10 / 0.1333 ≈ 75.02 → 76
+        assert_eq!(mm.gemm_ms(10), mm.t_weight_ms);
+        assert!(mm.gemm_ms(200) > mm.t_weight_ms);
+    }
+
+    #[test]
+    fn effective_tokens_weights_prefill_down() {
+        let mm = m();
+        let eff = mm.effective_tokens(100, 400);
+        // 100 + 400·(0.0333/0.1333) ≈ 100 + 99.9
+        assert!((eff - 200.0).abs() < 1.0, "eff={eff}");
+    }
+
+    #[test]
+    fn mixed_iter_cheaper_than_all_decode() {
+        let mm = m();
+        let mixed = mm.iter_ms_mixed(100, 400, 10_000);
+        let all_dc = mm.iter_ms(500, 10_000);
+        assert!(mixed < all_dc);
+    }
+
+    #[test]
+    fn quantized_rounds_up() {
+        let mm = m();
+        let t = mm.iter_ms(1, 1); // 15.00003...
+        assert_eq!(mm.iter_ms_quantized(1, 1), t.ceil() as u64);
+        assert_eq!(mm.iter_ms_quantized(0, 0), 0);
+    }
+}

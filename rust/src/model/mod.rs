@@ -1,0 +1,15 @@
+//! Model descriptions and the execution cost model.
+//!
+//! * [`spec`] — transformer architecture descriptions: the LLaMA-3.1-8B
+//!   dims the paper profiles (used by the simulator's cost model and the
+//!   analysis closed forms), and the small serving model compiled by
+//!   `python/compile/aot.py` for the real PJRT path.
+//! * [`costmodel`] — the H200-calibrated analytic iteration-time model
+//!   (DESIGN.md §3) with the paper's GEMM / decode-attention / prefill
+//!   components.
+
+pub mod spec;
+pub mod costmodel;
+
+pub use costmodel::CostModel;
+pub use spec::ModelSpec;

@@ -1,0 +1,127 @@
+//! Transformer architecture specs.
+
+/// Architecture description of a decoder-only transformer with GQA and
+/// SwiGLU FFN (the LLaMA/Qwen family shape the paper targets).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub num_layers: usize,
+    pub hidden: usize,
+    pub num_q_heads: usize,
+    pub num_kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn_hidden: usize,
+    pub vocab: usize,
+    /// Bytes per parameter / KV element (2 = bf16).
+    pub bytes_per_elem: usize,
+}
+
+impl ModelSpec {
+    /// LLaMA-3.1-8B — the model the paper profiles on an H200 (§5.1).
+    pub fn llama31_8b() -> ModelSpec {
+        ModelSpec {
+            name: "llama3.1-8b".into(),
+            num_layers: 32,
+            hidden: 4096,
+            num_q_heads: 32,
+            num_kv_heads: 8,
+            head_dim: 128,
+            ffn_hidden: 14336,
+            vocab: 128_256,
+            bytes_per_elem: 2,
+        }
+    }
+
+    /// The small serving model compiled to HLO for the real PJRT path
+    /// (examples/, rust/src/server). Dimensionally faithful — GQA 4:2,
+    /// SwiGLU, RoPE — but sized to run a decode step in ~ms on CPU.
+    /// Must match `python/compile/model.py::SMALL_CONFIG`.
+    pub fn small_serving() -> ModelSpec {
+        ModelSpec {
+            name: "polyserve-small".into(),
+            num_layers: 4,
+            hidden: 256,
+            num_q_heads: 4,
+            num_kv_heads: 2,
+            head_dim: 64,
+            ffn_hidden: 688,
+            vocab: 512,
+            bytes_per_elem: 4, // f32 on CPU PJRT
+        }
+    }
+
+    /// Parameter count (embeddings + layers + head; untied head).
+    pub fn param_count(&self) -> u64 {
+        let h = self.hidden as u64;
+        let qd = (self.num_q_heads * self.head_dim) as u64;
+        let kvd = (self.num_kv_heads * self.head_dim) as u64;
+        let f = self.ffn_hidden as u64;
+        let per_layer = h * qd          // Wq
+            + h * kvd                    // Wk
+            + h * kvd                    // Wv
+            + qd * h                     // Wo
+            + h * f * 2                  // gate + up
+            + f * h                      // down
+            + 2 * h; // two RMSNorm gains
+        let v = self.vocab as u64;
+        v * h                            // embedding
+            + self.num_layers as u64 * per_layer
+            + h                          // final norm
+            + h * v // lm head
+    }
+
+    /// Weight bytes.
+    pub fn weight_bytes(&self) -> u64 {
+        self.param_count() * self.bytes_per_elem as u64
+    }
+
+    /// KV-cache bytes per token (all layers, K+V).
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        (2 * self.num_layers * self.num_kv_heads * self.head_dim * self.bytes_per_elem) as u64
+    }
+
+    /// FLOPs for one forward pass over `n_tokens` new tokens, ignoring
+    /// attention score FLOPs (counted separately since they scale with
+    /// context length).
+    pub fn gemm_flops_per_token(&self) -> u64 {
+        // 2 FLOPs per MAC; weight GEMMs only.
+        2 * (self.param_count() - (self.vocab * self.hidden) as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama8b_params_about_8b() {
+        let m = ModelSpec::llama31_8b();
+        let p = m.param_count() as f64;
+        assert!(
+            (7.5e9..8.6e9).contains(&p),
+            "param count {p:.3e} should be ~8B"
+        );
+    }
+
+    #[test]
+    fn llama8b_kv_bytes_match_design_doc() {
+        // DESIGN.md §3: ≈131 kB/token.
+        let m = ModelSpec::llama31_8b();
+        assert_eq!(m.kv_bytes_per_token(), 131_072);
+    }
+
+    #[test]
+    fn llama8b_weight_bytes_about_16gb() {
+        let m = ModelSpec::llama31_8b();
+        let gb = m.weight_bytes() as f64 / 1e9;
+        assert!((15.0..17.5).contains(&gb), "weights {gb:.1} GB");
+    }
+
+    #[test]
+    fn small_model_is_small() {
+        let m = ModelSpec::small_serving();
+        let p = m.param_count();
+        assert!(p < 10_000_000, "small model has {p} params");
+        assert!(m.kv_bytes_per_token() > 0);
+    }
+}

@@ -1,0 +1,326 @@
+//! Profiling table: (batch size, KV size) → iteration time.
+//!
+//! §4.5: "Through profiling, PolyServe builds a map of (batch size, KV
+//! cache size) to execution time." The router consumes *only* this table
+//! (never the analytic closed form directly), mirroring the paper's
+//! architecture. Tables come from two sources:
+//!
+//! * [`ProfileTable::from_cost_model`] — sampled from the H200-calibrated
+//!   analytic model for simulation (the paper's vLLM profiling data
+//!   stand-in);
+//! * `polyserve profile --real` (see `runtime::profiler`) — measured from
+//!   the actual AOT-compiled PJRT executables, for the live server.
+//!
+//! Lookup is bilinear interpolation over the grid with clamping at the
+//! edges; the grid is dense enough (configurable) that interpolation
+//! error is ≪ the 1 ms simulator resolution.
+
+use crate::model::CostModel;
+use crate::util::json::Json;
+use std::path::Path;
+
+/// A (batch, kv) → iteration-time-ms grid.
+#[derive(Debug, Clone)]
+pub struct ProfileTable {
+    /// Strictly increasing batch-size grid points.
+    batch_grid: Vec<u64>,
+    /// Strictly increasing KV-token grid points.
+    kv_grid: Vec<u64>,
+    /// Row-major `[batch][kv]` iteration times, ms.
+    times_ms: Vec<f64>,
+    /// KV capacity (tokens) of the profiled instance.
+    pub kv_capacity_tokens: u64,
+    /// Max schedulable token batch of the profiled instance.
+    pub max_token_batch: u64,
+}
+
+impl ProfileTable {
+    /// Build by sampling a cost model on a log-ish grid.
+    pub fn from_cost_model(cm: &CostModel) -> ProfileTable {
+        let batch_grid = default_batch_grid(cm.max_token_batch);
+        let kv_grid = default_kv_grid(cm.kv_capacity_tokens);
+        let mut times_ms = Vec::with_capacity(batch_grid.len() * kv_grid.len());
+        for &b in &batch_grid {
+            for &kv in &kv_grid {
+                times_ms.push(cm.iter_ms(b, kv));
+            }
+        }
+        ProfileTable {
+            batch_grid,
+            kv_grid,
+            times_ms,
+            kv_capacity_tokens: cm.kv_capacity_tokens,
+            max_token_batch: cm.max_token_batch,
+        }
+    }
+
+    /// Build from explicit measurements (used by the real-PJRT profiler).
+    /// `samples[(bi, ki)]` must cover the full grid, row-major.
+    pub fn from_measurements(
+        batch_grid: Vec<u64>,
+        kv_grid: Vec<u64>,
+        times_ms: Vec<f64>,
+        kv_capacity_tokens: u64,
+        max_token_batch: u64,
+    ) -> ProfileTable {
+        assert_eq!(times_ms.len(), batch_grid.len() * kv_grid.len());
+        assert!(batch_grid.windows(2).all(|w| w[0] < w[1]));
+        assert!(kv_grid.windows(2).all(|w| w[0] < w[1]));
+        ProfileTable {
+            batch_grid,
+            kv_grid,
+            times_ms,
+            kv_capacity_tokens,
+            max_token_batch,
+        }
+    }
+
+    #[inline]
+    fn at(&self, bi: usize, ki: usize) -> f64 {
+        self.times_ms[bi * self.kv_grid.len() + ki]
+    }
+
+    /// Predicted iteration time (ms) for token batch `b` and `kv` resident
+    /// KV tokens. Bilinear interpolation, clamped at grid edges.
+    pub fn iter_ms(&self, b: u64, kv: u64) -> f64 {
+        if b == 0 {
+            return 0.0;
+        }
+        let (bi, bt) = bracket(&self.batch_grid, b);
+        let (ki, kt) = bracket(&self.kv_grid, kv);
+        let b0 = self.at(bi, ki) * (1.0 - kt) + self.at(bi, ki + 1) * kt;
+        let b1 = self.at(bi + 1, ki) * (1.0 - kt) + self.at(bi + 1, ki + 1) * kt;
+        b0 * (1.0 - bt) + b1 * bt
+    }
+
+    /// Iteration time rounded up to whole ms (simulator resolution).
+    pub fn iter_ms_quantized(&self, b: u64, kv: u64) -> u64 {
+        self.iter_ms(b, kv).ceil() as u64
+    }
+
+    /// Largest batch whose predicted time stays under `budget_ms` at the
+    /// given per-request KV footprint. Binary search over the predictor.
+    pub fn max_batch_under(&self, budget_ms: f64, kv_per_req: u64) -> u64 {
+        let mut lo = 0u64;
+        let mut hi = self.max_token_batch;
+        if kv_per_req > 0 {
+            hi = hi.min(self.kv_capacity_tokens / kv_per_req);
+        }
+        while lo < hi {
+            let mid = (lo + hi + 1) / 2;
+            if self.iter_ms(mid, mid * kv_per_req) < budget_ms {
+                lo = mid;
+            } else {
+                hi = mid - 1;
+            }
+        }
+        lo
+    }
+
+    // ---- persistence ----
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set(
+            "batch_grid",
+            Json::from_f64s(&self.batch_grid.iter().map(|&x| x as f64).collect::<Vec<_>>()),
+        )
+        .set(
+            "kv_grid",
+            Json::from_f64s(&self.kv_grid.iter().map(|&x| x as f64).collect::<Vec<_>>()),
+        )
+        .set("times_ms", Json::from_f64s(&self.times_ms))
+        .set("kv_capacity_tokens", Json::Num(self.kv_capacity_tokens as f64))
+        .set("max_token_batch", Json::Num(self.max_token_batch as f64));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<ProfileTable> {
+        let get_u64s = |key: &str| -> anyhow::Result<Vec<u64>> {
+            Ok(j.get(key)
+                .and_then(Json::to_f64s)
+                .ok_or_else(|| anyhow::anyhow!("profile table missing {key}"))?
+                .into_iter()
+                .map(|x| x as u64)
+                .collect())
+        };
+        let batch_grid = get_u64s("batch_grid")?;
+        let kv_grid = get_u64s("kv_grid")?;
+        let times_ms = j
+            .get("times_ms")
+            .and_then(Json::to_f64s)
+            .ok_or_else(|| anyhow::anyhow!("profile table missing times_ms"))?;
+        anyhow::ensure!(
+            times_ms.len() == batch_grid.len() * kv_grid.len(),
+            "profile table shape mismatch"
+        );
+        Ok(ProfileTable {
+            batch_grid,
+            kv_grid,
+            times_ms,
+            kv_capacity_tokens: j
+                .get("kv_capacity_tokens")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0) as u64,
+            max_token_batch: j.get("max_token_batch").and_then(Json::as_f64).unwrap_or(0.0)
+                as u64,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<ProfileTable> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        ProfileTable::from_json(&j)
+    }
+}
+
+/// Index `i` and fraction `t` such that `grid[i] + t·(grid[i+1]-grid[i])`
+/// brackets `x`, clamped to the grid.
+fn bracket(grid: &[u64], x: u64) -> (usize, f64) {
+    debug_assert!(grid.len() >= 2);
+    if x <= grid[0] {
+        return (0, 0.0);
+    }
+    if x >= grid[grid.len() - 1] {
+        return (grid.len() - 2, 1.0);
+    }
+    // binary search for upper bound
+    let mut lo = 0usize;
+    let mut hi = grid.len() - 1;
+    while hi - lo > 1 {
+        let mid = (lo + hi) / 2;
+        if grid[mid] <= x {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    let t = (x - grid[lo]) as f64 / (grid[hi] - grid[lo]) as f64;
+    (lo, t)
+}
+
+/// Batch grid: 1,2,4,...,knee region densified, up to max batch.
+fn default_batch_grid(max_batch: u64) -> Vec<u64> {
+    let mut g = vec![1u64, 2, 4, 8, 16, 24, 32, 48, 64, 80, 96, 128, 160, 192, 256, 384, 512, 768, 1024, 1536, 2048];
+    g.retain(|&b| b <= max_batch);
+    if *g.last().unwrap() != max_batch {
+        g.push(max_batch);
+    }
+    g
+}
+
+/// KV grid: 0 to capacity, log-spaced with a dense low end.
+fn default_kv_grid(capacity: u64) -> Vec<u64> {
+    let mut g = vec![0u64, 1_000, 5_000, 10_000, 25_000, 50_000, 100_000, 150_000, 250_000, 400_000, 600_000, 900_000, 1_200_000];
+    g.retain(|&kv| kv <= capacity);
+    if *g.last().unwrap() != capacity {
+        g.push(capacity);
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::CostModel;
+
+    fn table() -> ProfileTable {
+        ProfileTable::from_cost_model(&CostModel::h200_llama8b())
+    }
+
+    #[test]
+    fn interpolation_matches_model_on_grid() {
+        let cm = CostModel::h200_llama8b();
+        let t = table();
+        for &b in &[1u64, 16, 64, 256, 2048] {
+            for &kv in &[0u64, 10_000, 150_000, 900_000] {
+                let want = cm.iter_ms(b, kv);
+                let got = t.iter_ms(b, kv);
+                assert!(
+                    (got - want).abs() < 1e-9,
+                    "grid point b={b} kv={kv}: got {got} want {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn interpolation_error_off_grid_small() {
+        let cm = CostModel::h200_llama8b();
+        let t = table();
+        // worst case near the GEMM knee; must stay well under 1 ms.
+        for b in [3u64, 50, 77, 100, 300, 1000] {
+            for kv in [500u64, 42_000, 333_333, 777_777] {
+                let want = cm.iter_ms(b, kv);
+                let got = t.iter_ms(b, kv);
+                assert!(
+                    (got - want).abs() < 0.8,
+                    "b={b} kv={kv}: got {got:.3} want {want:.3}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn clamps_at_edges() {
+        let t = table();
+        assert_eq!(t.iter_ms(0, 0), 0.0);
+        let over = t.iter_ms(1_000_000, 10_000_000);
+        let edge = t.iter_ms(t.max_token_batch, t.kv_capacity_tokens);
+        assert!((over - edge).abs() < 1e-9);
+    }
+
+    #[test]
+    fn max_batch_under_matches_cost_model() {
+        let cm = CostModel::h200_llama8b();
+        let t = table();
+        for tpot in [20.0, 30.0, 50.0, 100.0] {
+            let want = cm.max_decode_batch(tpot, 3000);
+            let got = t.max_batch_under(tpot, 3000);
+            let diff = (want as i64 - got as i64).abs();
+            assert!(diff <= 3, "tpot={tpot}: table {got} vs model {want}");
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = table();
+        let j = t.to_json();
+        let t2 = ProfileTable::from_json(&Json::parse(&j.pretty()).unwrap()).unwrap();
+        assert_eq!(t2.kv_capacity_tokens, t.kv_capacity_tokens);
+        for &b in &[1u64, 100, 2048] {
+            for &kv in &[0u64, 123_456] {
+                assert!((t.iter_ms(b, kv) - t2.iter_ms(b, kv)).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let t = table();
+        let dir = std::env::temp_dir().join("polyserve_test_profile");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("table.json");
+        t.save(&path).unwrap();
+        let t2 = ProfileTable::load(&path).unwrap();
+        assert!((t.iter_ms(333, 44_444) - t2.iter_ms(333, 44_444)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bracket_basics() {
+        let g = vec![0u64, 10, 100];
+        assert_eq!(bracket(&g, 0), (0, 0.0));
+        let (i, t) = bracket(&g, 5);
+        assert_eq!(i, 0);
+        assert!((t - 0.5).abs() < 1e-9);
+        let (i, t) = bracket(&g, 55);
+        assert_eq!(i, 1);
+        assert!((t - 0.5).abs() < 1e-9);
+        assert_eq!(bracket(&g, 1000), (1, 1.0));
+    }
+}

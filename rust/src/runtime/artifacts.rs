@@ -1,0 +1,283 @@
+//! AOT artifact store: the manifest + weights written by
+//! `python/compile/aot.py`.
+//!
+//! The manifest is the ABI contract between build-time Python and the
+//! serving-time Rust binary: model dims, shape buckets, executable
+//! files, and the weight-tensor table (name/shape/offset into
+//! `weights.bin`, f32 little-endian).
+
+use crate::util::json::Json;
+use anyhow::{ensure, Context};
+use std::path::{Path, PathBuf};
+
+/// One lowered executable (decode step or prefill chunk).
+#[derive(Debug, Clone)]
+pub struct ExecutableEntry {
+    pub kind: ExecKind,
+    pub file: PathBuf,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecKind {
+    /// Decode step for a batch bucket.
+    Decode { batch: usize },
+    /// Prefill chunk for a chunk-size bucket.
+    Prefill { chunk: usize },
+}
+
+/// A weight tensor's location in `weights.bin`.
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub bytes: usize,
+}
+
+/// Model dims as recorded by the manifest (mirror of
+/// `python/compile/model.py::ModelConfig`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestModel {
+    pub name: String,
+    pub num_layers: usize,
+    pub hidden: usize,
+    pub num_q_heads: usize,
+    pub num_kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn_hidden: usize,
+    pub vocab: usize,
+    pub max_seq_len: usize,
+}
+
+/// Parsed `artifacts/manifest.json` plus loaded weights.
+#[derive(Debug)]
+pub struct ArtifactStore {
+    pub dir: PathBuf,
+    pub model: ManifestModel,
+    pub decode_buckets: Vec<usize>,
+    pub prefill_buckets: Vec<usize>,
+    pub executables: Vec<ExecutableEntry>,
+    pub weights: Vec<WeightEntry>,
+    /// Raw weights.bin contents (f32le, ABI order).
+    pub weight_data: Vec<u8>,
+}
+
+impl ArtifactStore {
+    /// Load and validate the artifact directory.
+    pub fn open(dir: &Path) -> anyhow::Result<ArtifactStore> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+
+        let m = j.get("model").context("manifest missing 'model'")?;
+        let get = |key: &str| -> anyhow::Result<usize> {
+            m.get(key)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("model.{key} missing"))
+        };
+        let model = ManifestModel {
+            name: m
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+            num_layers: get("num_layers")?,
+            hidden: get("hidden")?,
+            num_q_heads: get("num_q_heads")?,
+            num_kv_heads: get("num_kv_heads")?,
+            head_dim: get("head_dim")?,
+            ffn_hidden: get("ffn_hidden")?,
+            vocab: get("vocab")?,
+            max_seq_len: get("max_seq_len")?,
+        };
+
+        let buckets = |key: &str| -> Vec<usize> {
+            j.get(key)
+                .and_then(Json::to_f64s)
+                .unwrap_or_default()
+                .into_iter()
+                .map(|x| x as usize)
+                .collect()
+        };
+        let decode_buckets = buckets("decode_batch_buckets");
+        let prefill_buckets = buckets("prefill_chunk_buckets");
+        ensure!(!decode_buckets.is_empty(), "no decode buckets in manifest");
+
+        let mut executables = Vec::new();
+        for e in j
+            .get("executables")
+            .and_then(Json::as_arr)
+            .context("manifest missing executables")?
+        {
+            let file = dir.join(
+                e.get("file")
+                    .and_then(Json::as_str)
+                    .context("executable missing file")?,
+            );
+            ensure!(file.exists(), "missing artifact {}", file.display());
+            let kind = match e.get("kind").and_then(Json::as_str) {
+                Some("decode") => ExecKind::Decode {
+                    batch: e.get("batch").and_then(Json::as_usize).context("batch")?,
+                },
+                Some("prefill") => ExecKind::Prefill {
+                    chunk: e.get("chunk").and_then(Json::as_usize).context("chunk")?,
+                },
+                other => anyhow::bail!("unknown executable kind {other:?}"),
+            };
+            executables.push(ExecutableEntry { kind, file });
+        }
+
+        let w = j.get("weights").context("manifest missing weights")?;
+        let weights_file = dir.join(
+            w.get("file")
+                .and_then(Json::as_str)
+                .context("weights.file")?,
+        );
+        let weight_data = std::fs::read(&weights_file)
+            .with_context(|| format!("reading {}", weights_file.display()))?;
+        let mut weights = Vec::new();
+        for t in w
+            .get("tensors")
+            .and_then(Json::as_arr)
+            .context("weights.tensors")?
+        {
+            let entry = WeightEntry {
+                name: t
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .context("tensor name")?
+                    .to_string(),
+                shape: t
+                    .get("shape")
+                    .and_then(Json::to_f64s)
+                    .context("tensor shape")?
+                    .into_iter()
+                    .map(|x| x as usize)
+                    .collect(),
+                offset: t.get("offset").and_then(Json::as_usize).context("offset")?,
+                bytes: t.get("bytes").and_then(Json::as_usize).context("bytes")?,
+            };
+            ensure!(
+                entry.offset + entry.bytes <= weight_data.len(),
+                "weight {} out of bounds",
+                entry.name
+            );
+            let expect: usize = entry.shape.iter().product::<usize>() * 4;
+            ensure!(
+                expect == entry.bytes,
+                "weight {} shape/bytes mismatch",
+                entry.name
+            );
+            weights.push(entry);
+        }
+        ensure!(!weights.is_empty(), "empty weight table");
+
+        Ok(ArtifactStore {
+            dir: dir.to_path_buf(),
+            model,
+            decode_buckets,
+            prefill_buckets,
+            executables,
+            weights,
+            weight_data,
+        })
+    }
+
+    /// Weight tensor values as f32 (copy).
+    pub fn weight_f32(&self, entry: &WeightEntry) -> Vec<f32> {
+        let raw = &self.weight_data[entry.offset..entry.offset + entry.bytes];
+        raw.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    /// Smallest decode bucket that fits `batch` live requests.
+    pub fn decode_bucket_for(&self, batch: usize) -> Option<usize> {
+        self.decode_buckets.iter().copied().find(|&b| b >= batch)
+    }
+
+    /// Smallest prefill bucket that fits `chunk` tokens.
+    pub fn prefill_bucket_for(&self, chunk: usize) -> Option<usize> {
+        self.prefill_buckets.iter().copied().find(|&b| b >= chunk)
+    }
+
+    pub fn find_exec(&self, kind: ExecKind) -> Option<&ExecutableEntry> {
+        self.executables.iter().find(|e| e.kind == kind)
+    }
+
+    /// KV-cache shape for a decode bucket:
+    /// `[layers, batch, max_seq, kv_heads, head_dim]`.
+    pub fn kv_shape_decode(&self, batch: usize) -> [usize; 5] {
+        [
+            self.model.num_layers,
+            batch,
+            self.model.max_seq_len,
+            self.model.num_kv_heads,
+            self.model.head_dim,
+        ]
+    }
+
+    /// KV-cache shape for one request's prefill:
+    /// `[layers, max_seq, kv_heads, head_dim]`.
+    pub fn kv_shape_prefill(&self) -> [usize; 4] {
+        [
+            self.model.num_layers,
+            self.model.max_seq_len,
+            self.model.num_kv_heads,
+            self.model.head_dim,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if d.join("manifest.json").exists() {
+            Some(d)
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn opens_real_manifest() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let store = ArtifactStore::open(&dir).unwrap();
+        assert_eq!(store.model.name, "polyserve-small");
+        assert_eq!(store.model.num_layers, 4);
+        assert!(!store.executables.is_empty());
+        // ABI: per-layer weights + final_norm + embedding.
+        assert_eq!(store.weights.len(), store.model.num_layers * 9 + 2);
+        // Embedding is last and shaped [vocab, hidden].
+        let emb = store.weights.last().unwrap();
+        assert_eq!(emb.name, "embedding");
+        assert_eq!(emb.shape, vec![store.model.vocab, store.model.hidden]);
+        let vals = store.weight_f32(emb);
+        assert_eq!(vals.len(), store.model.vocab * store.model.hidden);
+        assert!(vals.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let Some(dir) = artifacts_dir() else { return };
+        let store = ArtifactStore::open(&dir).unwrap();
+        assert_eq!(store.decode_bucket_for(1), Some(1));
+        assert_eq!(store.decode_bucket_for(3), Some(4));
+        assert_eq!(store.decode_bucket_for(8), Some(8));
+        assert_eq!(store.decode_bucket_for(9), None);
+        assert_eq!(store.prefill_bucket_for(10), Some(64));
+        assert_eq!(store.prefill_bucket_for(65), Some(128));
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(ArtifactStore::open(Path::new("/nonexistent/zzz")).is_err());
+    }
+}

@@ -1,0 +1,215 @@
+//! PJRT execution engine: one *serving instance* backed by the AOT
+//! HLO-text executables.
+//!
+//! Mirrors `/opt/xla-example/load_hlo`: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`. One
+//! compiled executable per shape bucket (decode batch ∈ {1,2,4,8},
+//! prefill chunk ∈ {64,128}); the engine owns the per-request KV caches
+//! host-side and slots them into the bucket's batch layout each step.
+//!
+//! ABI (see `python/compile/aot.py`):
+//! * decode:  `(tokens[i32,B], kv_lens[i32,B], k[f32,L,B,S,H,D],
+//!   v[...], weights...) -> (next_tokens[i32,B], k', v')`
+//! * prefill: `(tokens[i32,T], start_pos[i32], chunk_len[i32],
+//!   k[f32,L,S,H,D], v[...], weights...) -> (first_token[i32], k', v')`
+
+use super::artifacts::{ArtifactStore, ExecKind};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Per-request decoding state held by the engine (host side).
+#[derive(Debug)]
+pub struct KvState {
+    /// `[L, S, H, D]` flattened KV for this request.
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Valid prefix length (prompt + decoded so far).
+    pub kv_len: usize,
+    /// Last emitted token (input to the next decode step).
+    pub last_token: i32,
+}
+
+/// A compiled serving instance.
+pub struct Engine {
+    pub store: Rc<ArtifactStore>,
+    client: xla::PjRtClient,
+    decode_execs: HashMap<usize, xla::PjRtLoadedExecutable>,
+    prefill_execs: HashMap<usize, xla::PjRtLoadedExecutable>,
+    /// Weight literals in ABI order (shared across calls).
+    weight_literals: Vec<xla::Literal>,
+}
+
+impl Engine {
+    /// Compile every bucket of the artifact store on the CPU PJRT client.
+    pub fn load(store: Rc<ArtifactStore>) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut decode_execs = HashMap::new();
+        let mut prefill_execs = HashMap::new();
+        for e in &store.executables {
+            let proto = xla::HloModuleProto::from_text_file(
+                e.file.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing {}", e.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exec = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", e.file.display()))?;
+            match e.kind {
+                ExecKind::Decode { batch } => {
+                    decode_execs.insert(batch, exec);
+                }
+                ExecKind::Prefill { chunk } => {
+                    prefill_execs.insert(chunk, exec);
+                }
+            }
+        }
+        let weight_literals = store
+            .weights
+            .iter()
+            .map(|w| {
+                let vals = store.weight_f32(w);
+                let dims: Vec<i64> = w.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&vals).reshape(&dims).map_err(|e| anyhow::anyhow!("{e}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Engine {
+            store,
+            client,
+            decode_execs,
+            prefill_execs,
+            weight_literals,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Fresh empty KV state for a request.
+    pub fn new_kv(&self) -> KvState {
+        let [l, s, h, d] = self.store.kv_shape_prefill();
+        KvState {
+            k: vec![0.0; l * s * h * d],
+            v: vec![0.0; l * s * h * d],
+            kv_len: 0,
+            last_token: 0,
+        }
+    }
+
+    /// Run one prefill chunk for a single request. `tokens` is the
+    /// chunk slice (un-padded); the engine pads to the bucket. On the
+    /// final chunk (`kv_len + tokens.len() == prompt_len`) the returned
+    /// token is the request's first output token.
+    pub fn prefill_chunk(&self, kv: &mut KvState, tokens: &[i32]) -> Result<i32> {
+        let n = tokens.len();
+        let bucket = self
+            .store
+            .prefill_bucket_for(n)
+            .with_context(|| format!("chunk {n} exceeds buckets"))?;
+        let exec = self
+            .prefill_execs
+            .get(&bucket)
+            .with_context(|| format!("no prefill exec for bucket {bucket}"))?;
+        let mut padded = vec![0i32; bucket];
+        padded[..n].copy_from_slice(tokens);
+        let [l, s, h, d] = self.store.kv_shape_prefill();
+        let kv_dims = [l as i64, s as i64, h as i64, d as i64];
+
+        let tok_lit = xla::Literal::vec1(&padded);
+        let start_lit = xla::Literal::scalar(kv.kv_len as i32);
+        let len_lit = xla::Literal::scalar(n as i32);
+        let k_lit = xla::Literal::vec1(&kv.k).reshape(&kv_dims)?;
+        let v_lit = xla::Literal::vec1(&kv.v).reshape(&kv_dims)?;
+
+        let inputs = [tok_lit, start_lit, len_lit, k_lit, v_lit];
+        let args: Vec<&xla::Literal> =
+            inputs.iter().chain(self.weight_literals.iter()).collect();
+        let result = exec.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let (first_token, k_new, v_new) = result.to_tuple3()?;
+        kv.k = k_new.to_vec::<f32>()?;
+        kv.v = v_new.to_vec::<f32>()?;
+        kv.kv_len += n;
+        let t = first_token.to_vec::<i32>()?[0];
+        kv.last_token = t;
+        Ok(t)
+    }
+
+    /// Run one decode step for a batch of requests. Each request's KV
+    /// is slotted into the bucket layout; rows beyond `reqs.len()` are
+    /// dummies. Returns the next token per request and updates KV.
+    pub fn decode_step(&self, reqs: &mut [&mut KvState]) -> Result<Vec<i32>> {
+        let n = reqs.len();
+        anyhow::ensure!(n > 0, "empty decode batch");
+        let bucket = self
+            .store
+            .decode_bucket_for(n)
+            .with_context(|| format!("batch {n} exceeds buckets"))?;
+        let exec = self
+            .decode_execs
+            .get(&bucket)
+            .with_context(|| format!("no decode exec for bucket {bucket}"))?;
+        let [l, b, s, h, d] = self.store.kv_shape_decode(bucket);
+        debug_assert_eq!(b, bucket);
+        let row = s * h * d; // per (layer, request) KV stride
+
+        let mut tokens = vec![0i32; bucket];
+        let mut kv_lens = vec![1i32; bucket]; // dummy rows: len 1, safe
+        let mut k = vec![0.0f32; l * bucket * row];
+        let mut v = vec![0.0f32; l * bucket * row];
+        for (i, r) in reqs.iter().enumerate() {
+            tokens[i] = r.last_token;
+            kv_lens[i] = r.kv_len as i32;
+            for layer in 0..l {
+                let dst = layer * bucket * row + i * row;
+                let src = layer * row;
+                k[dst..dst + row].copy_from_slice(&r.k[src..src + row]);
+                v[dst..dst + row].copy_from_slice(&r.v[src..src + row]);
+            }
+        }
+        let kv_dims = [l as i64, bucket as i64, s as i64, h as i64, d as i64];
+        let inputs = [
+            xla::Literal::vec1(&tokens),
+            xla::Literal::vec1(&kv_lens),
+            xla::Literal::vec1(&k).reshape(&kv_dims)?,
+            xla::Literal::vec1(&v).reshape(&kv_dims)?,
+        ];
+        let args: Vec<&xla::Literal> =
+            inputs.iter().chain(self.weight_literals.iter()).collect();
+        let result = exec.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let (next, k_new, v_new) = result.to_tuple3()?;
+        let next = next.to_vec::<i32>()?;
+        let k_new = k_new.to_vec::<f32>()?;
+        let v_new = v_new.to_vec::<f32>()?;
+        for (i, r) in reqs.iter_mut().enumerate() {
+            for layer in 0..l {
+                let src = layer * bucket * row + i * row;
+                let dst = layer * row;
+                r.k[dst..dst + row].copy_from_slice(&k_new[src..src + row]);
+                r.v[dst..dst + row].copy_from_slice(&v_new[src..src + row]);
+            }
+            r.kv_len += 1;
+            r.last_token = next[i];
+        }
+        Ok(next[..n].to_vec())
+    }
+
+    /// Full prefill of a prompt via chunked prefill; returns the first
+    /// output token.
+    pub fn prefill(&self, kv: &mut KvState, prompt: &[i32]) -> Result<i32> {
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        anyhow::ensure!(
+            prompt.len() + 1 < self.store.model.max_seq_len,
+            "prompt too long"
+        );
+        let max_chunk = *self.store.prefill_buckets.iter().max().unwrap();
+        let mut first = 0i32;
+        let mut pos = 0;
+        while pos < prompt.len() {
+            let n = (prompt.len() - pos).min(max_chunk);
+            first = self.prefill_chunk(kv, &prompt[pos..pos + n])?;
+            pos += n;
+        }
+        Ok(first)
+    }
+}

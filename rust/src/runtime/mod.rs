@@ -1,0 +1,15 @@
+//! PJRT runtime: loading and executing the AOT model artifacts.
+//!
+//! * [`artifacts`] — manifest + weights ABI with `python/compile/aot.py`.
+//! * [`engine`] — compiled per-bucket executables, KV management,
+//!   prefill/decode steps.
+//! * [`profiler`] — measures a real (batch, KV) → iteration-time
+//!   profiling table from the compiled executables, the live-server
+//!   analogue of the paper's vLLM kernel profiling.
+
+pub mod artifacts;
+pub mod engine;
+pub mod profiler;
+
+pub use artifacts::{ArtifactStore, ExecKind};
+pub use engine::{Engine, KvState};

@@ -1,0 +1,76 @@
+//! Real-hardware profiling: measure (batch, KV length) → iteration time
+//! on the actual PJRT executables, producing the same `ProfileTable`
+//! the scheduler consumes in simulation — the live-server analogue of
+//! the paper's vLLM kernel profiling (§4.5).
+
+use super::artifacts::ArtifactStore;
+use super::engine::Engine;
+use crate::profile::ProfileTable;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// Measure a profiling table from the AOT artifacts in `dir`.
+///
+/// Grid: every decode batch bucket × a KV-length grid up to the model's
+/// max sequence length. Each cell runs a few warmup + timed decode
+/// steps with synthetic KV of the right length.
+pub fn profile_real(dir: &Path) -> anyhow::Result<ProfileTable> {
+    let store = Rc::new(ArtifactStore::open(dir)?);
+    let engine = Engine::load(Rc::clone(&store))?;
+    let max_len = store.model.max_seq_len;
+    let batch_grid: Vec<u64> = store.decode_buckets.iter().map(|&b| b as u64).collect();
+    let kv_grid: Vec<u64> = [1usize, max_len / 8, max_len / 4, max_len / 2, max_len - 2]
+        .iter()
+        .map(|&x| x.max(1) as u64)
+        .collect();
+    let mut times = Vec::with_capacity(batch_grid.len() * kv_grid.len());
+    for &b in &batch_grid {
+        for &kv_len in &kv_grid {
+            times.push(measure_cell(&engine, b as usize, kv_len as usize)?);
+        }
+    }
+    // Capacity: per-instance KV tokens = buckets_max × max_seq.
+    let cap = (*store.decode_buckets.iter().max().unwrap() * max_len) as u64;
+    Ok(ProfileTable::from_measurements(
+        batch_grid,
+        kv_grid.iter().map(|&kv| kv * 1).collect(),
+        times,
+        cap,
+        *store.decode_buckets.iter().max().unwrap() as u64,
+    ))
+}
+
+fn measure_cell(engine: &Engine, batch: usize, kv_len: usize) -> anyhow::Result<f64> {
+    // Build synthetic KV states at the target length.
+    let mut states: Vec<_> = (0..batch)
+        .map(|i| {
+            let mut kv = engine.new_kv();
+            kv.kv_len = kv_len;
+            kv.last_token = (i % engine.store.model.vocab) as i32;
+            // Fill the valid prefix with small values so softmax is sane.
+            for x in kv.k.iter_mut().take(kv_len * 64) {
+                *x = 0.01;
+            }
+            kv
+        })
+        .collect();
+    let warmup = 2;
+    let iters = 5;
+    for _ in 0..warmup {
+        let mut refs: Vec<&mut _> = states.iter_mut().collect();
+        engine.decode_step(&mut refs)?;
+        for s in states.iter_mut() {
+            s.kv_len = kv_len; // reset growth
+        }
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let mut refs: Vec<&mut _> = states.iter_mut().collect();
+        engine.decode_step(&mut refs)?;
+        for s in states.iter_mut() {
+            s.kv_len = kv_len;
+        }
+    }
+    Ok(t0.elapsed().as_secs_f64() * 1000.0 / iters as f64)
+}

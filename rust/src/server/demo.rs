@@ -1,0 +1,186 @@
+//! The `polyserve serve` demo: a real serving run over the AOT model.
+//!
+//! Calibrates TPOT tiers to the measured decode floor of this machine
+//! (the paper's tiers are H200-relative; CPU PJRT needs its own scale),
+//! then serves a Poisson-arrival synthetic workload across N in-process
+//! instances with the PolyServe-style leader and reports throughput,
+//! latency percentiles and DSLO attainment.
+
+use super::leader::{LiveServer, ServeConfig};
+use crate::runtime::{ArtifactStore, Engine};
+use crate::slo::{Slo, TierSet};
+use crate::util::rng::Rng;
+use std::fmt::Write as _;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// Measured per-iteration floors on this machine (ms).
+#[derive(Debug, Clone, Copy)]
+pub struct Floors {
+    /// Decode step, batch = 1.
+    pub decode_ms: f64,
+    /// Decode step, batch = 4 (amortization probe).
+    pub decode_b4_ms: f64,
+    /// Prefill chunk of 128 tokens.
+    pub prefill128_ms: f64,
+}
+
+/// Measure decode/prefill iteration floors (one engine load).
+pub fn measure_floors(artifacts: &Path) -> anyhow::Result<Floors> {
+    let store = Rc::new(ArtifactStore::open(artifacts)?);
+    let engine = Engine::load(store)?;
+    let prompt: Vec<i32> = (1..40).collect();
+
+    let time_decode = |batch: usize| -> anyhow::Result<f64> {
+        let mut kvs: Vec<_> = (0..batch)
+            .map(|_| {
+                let mut kv = engine.new_kv();
+                engine.prefill(&mut kv, &prompt).map(|_| kv)
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        for _ in 0..3 {
+            let mut refs: Vec<&mut _> = kvs.iter_mut().collect();
+            engine.decode_step(&mut refs)?;
+        }
+        let iters = 10;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            let mut refs: Vec<&mut _> = kvs.iter_mut().collect();
+            engine.decode_step(&mut refs)?;
+        }
+        Ok(t0.elapsed().as_secs_f64() * 1000.0 / iters as f64)
+    };
+    let decode_ms = time_decode(1)?;
+    let decode_b4_ms = time_decode(4)?;
+
+    let chunk: Vec<i32> = (0..128).map(|i| (i % 500) as i32).collect();
+    // warmup + timed prefill chunks on fresh caches
+    let mut kv = engine.new_kv();
+    engine.prefill_chunk(&mut kv, &chunk)?;
+    let iters = 5;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let mut kv = engine.new_kv();
+        engine.prefill_chunk(&mut kv, &chunk)?;
+    }
+    let prefill128_ms = t0.elapsed().as_secs_f64() * 1000.0 / iters as f64;
+    Ok(Floors {
+        decode_ms,
+        decode_b4_ms,
+        prefill128_ms,
+    })
+}
+
+/// Run the full serving demo; returns a human-readable report.
+pub fn run_demo(
+    artifacts: &Path,
+    instances: usize,
+    requests: usize,
+    rate_rps: f64,
+) -> anyhow::Result<String> {
+    anyhow::ensure!(
+        artifacts.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    let mut out = String::new();
+    let floors = measure_floors(artifacts)?;
+    let floor = floors.decode_ms;
+    let _ = writeln!(
+        out,
+        "floors: decode {floor:.2} ms (b=1), {:.2} ms (b=4), prefill128 {:.2} ms",
+        floors.decode_b4_ms, floors.prefill128_ms
+    );
+
+    // Two TPOT tiers at 6× and 14× the floor (room for batch growth),
+    // TTFTs sized for chunked prefill of ~500-token prompts.
+    let tight = (floor * 6.0).ceil() as u64;
+    let loose = (floor * 14.0).ceil() as u64;
+    let tiers = TierSet::new(vec![tight, loose]);
+    let ttft = (floor * 120.0).ceil() as u64;
+    let _ = writeln!(
+        out,
+        "SLO tiers: TPOT {{{tight}, {loose}}} ms, TTFT {ttft} ms; {instances} instances"
+    );
+
+    let mut server = LiveServer::start(ServeConfig {
+        artifacts: artifacts.to_path_buf(),
+        instances,
+        chunk_tokens: 128,
+        tiers: tiers.clone(),
+    })?;
+
+    // Auto-calibrate the arrival rate when requested (rate_rps <= 0):
+    // per-request service time ≈ prefill chunks + decode tokens at the
+    // batch-4 amortized iteration cost, targeting ~60% utilization.
+    let avg_p = 104.0f64; // mean of range_u64(8, 200)
+    let avg_d = 26.0f64; // mean of range_u64(4, 48)
+    // CPU PJRT shows little decode-batch amortization (the KV staging
+    // copies scale with the bucket — see EXPERIMENTS.md §Perf), so use
+    // the measured batch-4 per-token cost directly and target modest
+    // utilization to keep queues short.
+    let per_req_ms =
+        (avg_p / 128.0).ceil() * floors.prefill128_ms + avg_d * floors.decode_b4_ms / 4.0;
+    let capacity_rps = instances as f64 * 1000.0 / per_req_ms;
+    let rate_rps = if rate_rps > 0.0 {
+        rate_rps
+    } else {
+        0.35 * capacity_rps
+    };
+    let _ = writeln!(
+        out,
+        "estimated capacity {capacity_rps:.2} req/s; offering {rate_rps:.2} req/s"
+    );
+
+    let mut rng = Rng::new(0xFEED);
+    let vocab = 512u64;
+    let mut submitted = 0usize;
+    let t0 = Instant::now();
+    let mut next_arrival = 0.0f64;
+    while submitted < requests {
+        // Poisson arrivals in real time.
+        next_arrival += rng.exp(rate_rps);
+        let now = t0.elapsed().as_secs_f64();
+        if next_arrival > now {
+            std::thread::sleep(std::time::Duration::from_secs_f64(next_arrival - now));
+        }
+        let p_len = rng.range_u64(8, 200) as usize;
+        let d_len = rng.range_u64(4, 48) as usize;
+        let prompt: Vec<i32> = (0..p_len).map(|_| rng.below(vocab) as i32).collect();
+        let tpot = if rng.chance(0.3) { tight } else { loose };
+        server.submit(prompt, d_len, Slo::new(ttft, tpot));
+        submitted += 1;
+    }
+    let report = server.finish()?;
+
+    let _ = writeln!(
+        out,
+        "served {} requests / {} tokens in {:.2} s  ({:.2} req/s, {:.1} tok/s, {} iterations)",
+        report.outcomes.len(),
+        report.total_tokens,
+        report.wall_s,
+        report.throughput_rps(),
+        report.token_throughput(),
+        report.iterations,
+    );
+    let _ = writeln!(out, "DSLO attainment: {:.3}", report.attainment());
+    if let Some(s) = report.ttft_ms() {
+        let _ = writeln!(
+            out,
+            "TTFT ms: p50 {:.0}  p90 {:.0}  p99 {:.0}",
+            s.p50(),
+            s.percentiles[3],
+            s.p99()
+        );
+    }
+    if let Some(s) = report.mean_tpot_ms() {
+        let _ = writeln!(
+            out,
+            "mean TPOT ms: p50 {:.1}  p90 {:.1}  p99 {:.1}",
+            s.p50(),
+            s.percentiles[3],
+            s.p99()
+        );
+    }
+    Ok(out)
+}

@@ -1,0 +1,280 @@
+//! The leader: spawns workers, routes requests PolyServe-style
+//! (TPOT-tier binning + highest-load-feasible placement using worker
+//! load telemetry), and collects token events into DSLO outcomes.
+
+use super::worker::{self, LiveRequest, TokenEvent, WorkerCommand, WorkerLoad};
+use crate::slo::{Slo, TierSet};
+use crate::util::stats::Summary;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Live-server configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub artifacts: PathBuf,
+    pub instances: usize,
+    /// Prefill chunk tokens per iteration.
+    pub chunk_tokens: usize,
+    pub tiers: TierSet,
+}
+
+/// Per-request outcome measured by the collector.
+#[derive(Debug, Clone)]
+pub struct LiveOutcome {
+    pub id: u64,
+    pub slo: Slo,
+    pub submitted: Instant,
+    pub first_token: Option<Instant>,
+    pub finished: Option<Instant>,
+    pub tokens: u64,
+    pub attained: bool,
+}
+
+/// Aggregate report for a serving run.
+#[derive(Debug)]
+pub struct ServeReport {
+    pub outcomes: Vec<LiveOutcome>,
+    pub wall_s: f64,
+    pub total_tokens: u64,
+    pub iterations: u64,
+}
+
+impl ServeReport {
+    pub fn attainment(&self) -> f64 {
+        if self.outcomes.is_empty() {
+            return 1.0;
+        }
+        self.outcomes.iter().filter(|o| o.attained).count() as f64 / self.outcomes.len() as f64
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        self.outcomes.len() as f64 / self.wall_s
+    }
+
+    pub fn token_throughput(&self) -> f64 {
+        self.total_tokens as f64 / self.wall_s
+    }
+
+    pub fn ttft_ms(&self) -> Option<Summary> {
+        let xs: Vec<f64> = self
+            .outcomes
+            .iter()
+            .filter_map(|o| {
+                o.first_token
+                    .map(|t| t.duration_since(o.submitted).as_secs_f64() * 1000.0)
+            })
+            .collect();
+        if xs.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&xs))
+        }
+    }
+
+    pub fn mean_tpot_ms(&self) -> Option<Summary> {
+        let xs: Vec<f64> = self
+            .outcomes
+            .iter()
+            .filter_map(|o| match (o.first_token, o.finished) {
+                (Some(f), Some(e)) if o.tokens > 1 => {
+                    Some(e.duration_since(f).as_secs_f64() * 1000.0 / (o.tokens - 1) as f64)
+                }
+                _ => None,
+            })
+            .collect();
+        if xs.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&xs))
+        }
+    }
+}
+
+struct WorkerHandle {
+    tx: Sender<WorkerCommand>,
+    load: Arc<WorkerLoad>,
+    join: JoinHandle<anyhow::Result<()>>,
+    /// Tier this worker currently serves (leader-side binning).
+    tier: usize,
+}
+
+/// The live multi-instance server.
+pub struct LiveServer {
+    cfg: ServeConfig,
+    workers: Vec<WorkerHandle>,
+    tx_tokens: Sender<TokenEvent>,
+    rx_tokens: std::sync::mpsc::Receiver<TokenEvent>,
+    tracked: HashMap<u64, LiveOutcome>,
+    next_id: u64,
+    start: Instant,
+}
+
+impl LiveServer {
+    /// Spawn `instances` workers (each compiles its own engine — takes
+    /// seconds; done in parallel).
+    pub fn start(cfg: ServeConfig) -> anyhow::Result<LiveServer> {
+        let (tx_tokens, rx_tokens) = channel();
+        let mut workers = Vec::with_capacity(cfg.instances);
+        for w in 0..cfg.instances {
+            let (tx_cmd, rx_cmd) = channel();
+            let load = Arc::new(WorkerLoad::default());
+            let load2 = Arc::clone(&load);
+            let artifacts = cfg.artifacts.clone();
+            let tok = tx_tokens.clone();
+            let chunk = cfg.chunk_tokens;
+            let join = std::thread::Builder::new()
+                .name(format!("polyserve-worker-{w}"))
+                .spawn(move || worker::run_worker(w, artifacts, rx_cmd, tok, load2, chunk))?;
+            // Spread workers across tiers round-robin at startup.
+            workers.push(WorkerHandle {
+                tx: tx_cmd,
+                load,
+                join,
+                tier: w % cfg.tiers.len(),
+            });
+        }
+        // Barrier: wait until every worker's engine is compiled, so
+        // latency measurements exclude startup (ServerlessLLM-style
+        // startup optimization is out of scope; see DESIGN.md).
+        loop {
+            let ready = workers
+                .iter()
+                .filter(|w| w.load.ready.load(Ordering::Relaxed) == 1)
+                .count();
+            if ready == workers.len() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        }
+        Ok(LiveServer {
+            cfg,
+            workers,
+            tx_tokens,
+            rx_tokens,
+            tracked: HashMap::new(),
+            next_id: 0,
+            start: Instant::now(),
+        })
+    }
+
+    /// Submit a request: bin by TPOT, then place on the highest-load
+    /// same-tier worker under a load cap, spilling to tighter tiers
+    /// (lazy promotion) and finally to the globally least-loaded worker.
+    pub fn submit(&mut self, prompt: Vec<i32>, max_new_tokens: usize, slo: Slo) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        let tier = self.cfg.tiers.bin_for_tpot(slo.tpot_ms);
+        let req = LiveRequest {
+            id,
+            prompt: prompt.clone(),
+            max_new_tokens,
+            slo,
+            tier,
+        };
+        let target = self.pick_worker(tier, prompt.len());
+        self.tracked.insert(
+            id,
+            LiveOutcome {
+                id,
+                slo,
+                submitted: Instant::now(),
+                first_token: None,
+                finished: None,
+                tokens: 0,
+                attained: true,
+            },
+        );
+        let _ = self.workers[target].tx.send(WorkerCommand::Serve(req));
+        id
+    }
+
+    fn pick_worker(&self, tier: usize, prompt_len: usize) -> usize {
+        // Load cap: decode batch must stay under the engine's max batch
+        // bucket with headroom for queued prefills.
+        let score = |w: &WorkerHandle| {
+            let batch = w.load.batch.load(Ordering::Relaxed);
+            let queued = w.load.queued_prefill.load(Ordering::Relaxed);
+            (batch, queued)
+        };
+        let feasible = |w: &WorkerHandle| {
+            let (batch, queued) = score(w);
+            batch + 1 < 8 && queued < 4 * prompt_len.max(256) as u64
+        };
+        // own tier, highest load first (load gradient);
+        let mut same_tier: Vec<usize> = (0..self.workers.len())
+            .filter(|&i| self.workers[i].tier == tier)
+            .collect();
+        same_tier.sort_by_key(|&i| std::cmp::Reverse(score(&self.workers[i])));
+        if let Some(&i) = same_tier.iter().find(|&&i| feasible(&self.workers[i])) {
+            return i;
+        }
+        // lazy promotion: tighter tiers;
+        let mut tighter: Vec<usize> = (0..self.workers.len())
+            .filter(|&i| self.workers[i].tier < tier)
+            .collect();
+        tighter.sort_by_key(|&i| std::cmp::Reverse(score(&self.workers[i])));
+        if let Some(&i) = tighter.iter().find(|&&i| feasible(&self.workers[i])) {
+            return i;
+        }
+        // fallback: least-loaded anywhere.
+        (0..self.workers.len())
+            .min_by_key(|&i| score(&self.workers[i]))
+            .unwrap_or(0)
+    }
+
+    /// Wait for all submitted requests to finish; returns the report.
+    pub fn finish(mut self) -> anyhow::Result<ServeReport> {
+        let mut remaining: usize = self
+            .tracked
+            .values()
+            .filter(|o| o.finished.is_none())
+            .count();
+        let mut total_tokens = 0u64;
+        while remaining > 0 {
+            let ev = self.rx_tokens.recv()?;
+            total_tokens += 1;
+            if let Some(out) = self.tracked.get_mut(&ev.request_id) {
+                let deadline_ms = out.slo.deadline(0, ev.token_index);
+                let elapsed_ms =
+                    ev.at.duration_since(out.submitted).as_secs_f64() * 1000.0;
+                if elapsed_ms > deadline_ms as f64 {
+                    out.attained = false;
+                }
+                out.tokens = out.tokens.max(ev.token_index + 1);
+                if ev.token_index == 0 {
+                    out.first_token = Some(ev.at);
+                }
+                if ev.finished {
+                    out.finished = Some(ev.at);
+                    remaining -= 1;
+                }
+            }
+        }
+        for w in &self.workers {
+            let _ = w.tx.send(WorkerCommand::Shutdown);
+        }
+        let mut iterations = 0;
+        for w in self.workers.drain(..) {
+            iterations += w.load.iterations.load(Ordering::Relaxed);
+            match w.join.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => return Err(e),
+                Err(_) => anyhow::bail!("worker panicked"),
+            }
+        }
+        drop(self.tx_tokens);
+        let mut outcomes: Vec<LiveOutcome> = self.tracked.into_values().collect();
+        outcomes.sort_by_key(|o| o.id);
+        Ok(ServeReport {
+            outcomes,
+            wall_s: self.start.elapsed().as_secs_f64(),
+            total_tokens,
+            iterations,
+        })
+    }
+}

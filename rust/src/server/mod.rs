@@ -1,0 +1,30 @@
+//! Live multi-instance serving loop — the end-to-end proof that all
+//! three layers compose: Rust coordinator (this module) → AOT-compiled
+//! JAX model (Layer 2) → Pallas kernels (Layer 1), executed through
+//! PJRT with Python nowhere on the request path.
+//!
+//! Architecture (thread-per-instance, std channels — no async runtime
+//! is available offline, and a worker is CPU-bound in PJRT anyway):
+//!
+//! ```text
+//!  submit() ─→ leader (router thread)
+//!                 │ bin by TPOT tier, profile-based admission,
+//!                 │ highest-load-feasible placement (§4)
+//!                 ▼
+//!           worker 0..N  (each owns an Engine: PJRT client + buckets)
+//!                 │ continuous batching: chunked prefill + batched
+//!                 │ decode per iteration
+//!                 ▼
+//!           token events ─→ collector (DSLO accounting)
+//! ```
+//!
+//! The PJRT `Engine` is not `Send` (raw C pointers), so each worker
+//! constructs its own engine inside its thread; workers publish their
+//! load (batch, KV tokens) through atomics the router reads.
+
+pub mod demo;
+pub mod worker;
+pub mod leader;
+
+pub use leader::{LiveServer, ServeConfig, ServeReport};
+pub use worker::{TokenEvent, WorkerCommand, WorkerLoad};

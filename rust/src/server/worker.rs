@@ -1,0 +1,222 @@
+//! A serving-instance worker thread: owns one PJRT [`Engine`] and runs
+//! the continuous-batching loop (chunked prefill riding along batched
+//! decode, §2.4) over the requests the leader assigns to it.
+
+use crate::runtime::{ArtifactStore, Engine, KvState};
+use crate::slo::Slo;
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A request as submitted to the live server.
+#[derive(Debug, Clone)]
+pub struct LiveRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub slo: Slo,
+    /// TPOT tier bin assigned by the leader.
+    pub tier: usize,
+}
+
+/// Command channel leader → worker.
+pub enum WorkerCommand {
+    Serve(LiveRequest),
+    Shutdown,
+}
+
+/// Token event stream worker → collector.
+#[derive(Debug, Clone)]
+pub struct TokenEvent {
+    pub request_id: u64,
+    /// 0-based output-token index (0 = first token, from prefill).
+    pub token_index: u64,
+    pub token: i32,
+    pub at: Instant,
+    pub finished: bool,
+}
+
+/// Load published by a worker (read by the leader's router).
+#[derive(Debug, Default)]
+pub struct WorkerLoad {
+    /// Live decode requests.
+    pub batch: AtomicU64,
+    /// Resident KV tokens.
+    pub kv_tokens: AtomicU64,
+    /// Queued prefill tokens not yet processed.
+    pub queued_prefill: AtomicU64,
+    /// Iterations executed (liveness/metrics).
+    pub iterations: AtomicU64,
+    /// Set to 1 once the engine is compiled and the worker is serving.
+    pub ready: AtomicU64,
+}
+
+struct Active {
+    req: LiveRequest,
+    kv: KvState,
+    emitted: u64,
+}
+
+/// Body of a worker thread. Loads the engine, then loops: drain
+/// commands, form an iteration (all decode requests + one prefill
+/// chunk), execute, emit tokens.
+pub fn run_worker(
+    worker_id: usize,
+    artifacts: PathBuf,
+    rx: Receiver<WorkerCommand>,
+    tx_tokens: Sender<TokenEvent>,
+    load: Arc<WorkerLoad>,
+    chunk_tokens: usize,
+) -> anyhow::Result<()> {
+    let store = Rc::new(ArtifactStore::open(&artifacts)?);
+    let max_batch = *store.decode_buckets.iter().max().unwrap();
+    let engine = Engine::load(store)?;
+    load.ready.store(1, Ordering::Relaxed);
+    log::info!("worker {worker_id}: engine ready on {}", engine.platform());
+
+    struct PrefillItem {
+        req: LiveRequest,
+        kv: KvState,
+        done: usize,
+        first_emitted: bool,
+    }
+    let mut prefill_queue: VecDeque<PrefillItem> = VecDeque::new();
+    let mut active: Vec<Active> = Vec::new();
+    let mut shutdown = false;
+
+    loop {
+        // 1. Drain commands (non-blocking unless idle).
+        loop {
+            let cmd = if active.is_empty() && prefill_queue.is_empty() && !shutdown {
+                match rx.recv() {
+                    Ok(c) => c,
+                    Err(_) => return Ok(()),
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(c) => c,
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        shutdown = true;
+                        break;
+                    }
+                }
+            };
+            match cmd {
+                WorkerCommand::Serve(req) => {
+                    let kv = engine.new_kv();
+                    load.queued_prefill
+                        .fetch_add(req.prompt.len() as u64, Ordering::Relaxed);
+                    prefill_queue.push_back(PrefillItem {
+                        req,
+                        kv,
+                        done: 0,
+                        first_emitted: false,
+                    });
+                }
+                WorkerCommand::Shutdown => shutdown = true,
+            }
+            if active.is_empty() && prefill_queue.is_empty() {
+                continue; // blocking recv again
+            }
+        }
+        if shutdown && active.is_empty() && prefill_queue.is_empty() {
+            return Ok(());
+        }
+
+        // 2. One continuous-batching iteration.
+        // 2a. Prefill chunk for the head-of-queue request (EDF order is
+        //     maintained by the leader's assignment; FIFO here). Items
+        //     whose prefill already completed but found no decode slot
+        //     wait without re-executing anything.
+        if let Some(mut item) = prefill_queue.pop_front() {
+            if item.done == item.req.prompt.len() {
+                // Waiting for a decode slot.
+                if active.len() < max_batch {
+                    load.batch.fetch_add(1, Ordering::Relaxed);
+                    load.kv_tokens
+                        .fetch_add(item.kv.kv_len as u64, Ordering::Relaxed);
+                    active.push(Active {
+                        req: item.req,
+                        kv: item.kv,
+                        emitted: 1,
+                    });
+                } else {
+                    prefill_queue.push_back(item);
+                }
+            } else {
+                let remaining = item.req.prompt.len() - item.done;
+                let n = remaining.min(chunk_tokens.max(1));
+                let tok =
+                    engine.prefill_chunk(&mut item.kv, &item.req.prompt[item.done..item.done + n])?;
+                item.done += n;
+                load.queued_prefill.fetch_sub(n as u64, Ordering::Relaxed);
+                if item.done == item.req.prompt.len() {
+                    // Prefill complete: first token out (exactly once).
+                    let finished = item.req.max_new_tokens <= 1;
+                    debug_assert!(!item.first_emitted);
+                    item.first_emitted = true;
+                    let _ = tx_tokens.send(TokenEvent {
+                        request_id: item.req.id,
+                        token_index: 0,
+                        token: tok,
+                        at: Instant::now(),
+                        finished,
+                    });
+                    if !finished {
+                        if active.len() < max_batch {
+                            load.batch.fetch_add(1, Ordering::Relaxed);
+                            load.kv_tokens
+                                .fetch_add(item.kv.kv_len as u64, Ordering::Relaxed);
+                            active.push(Active {
+                                req: item.req,
+                                kv: item.kv,
+                                emitted: 1,
+                            });
+                        } else {
+                            prefill_queue.push_back(item);
+                        }
+                    }
+                } else {
+                    prefill_queue.push_front(item);
+                }
+            }
+        }
+
+        // 2b. Batched decode step for all active requests.
+        if !active.is_empty() {
+            let mut refs: Vec<&mut KvState> = active.iter_mut().map(|a| &mut a.kv).collect();
+            let next = engine.decode_step(&mut refs)?;
+            drop(refs);
+            let now = Instant::now();
+            let mut i = 0;
+            while i < active.len() {
+                let a = &mut active[i];
+                a.emitted += 1;
+                let finished = a.emitted >= a.req.max_new_tokens as u64
+                    || a.kv.kv_len + 1 >= engine.store.model.max_seq_len;
+                let _ = tx_tokens.send(TokenEvent {
+                    request_id: a.req.id,
+                    token_index: a.emitted - 1,
+                    token: next[i],
+                    at: now,
+                    finished,
+                });
+                load.kv_tokens.fetch_add(1, Ordering::Relaxed);
+                if finished {
+                    load.batch.fetch_sub(1, Ordering::Relaxed);
+                    load.kv_tokens
+                        .fetch_sub(active[i].kv.kv_len as u64, Ordering::Relaxed);
+                    active.swap_remove(i);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        load.iterations.fetch_add(1, Ordering::Relaxed);
+    }
+}

@@ -1,0 +1,243 @@
+//! The fleet: instances, tier membership, best-effort pool.
+//!
+//! Tier bookkeeping implements the paper's server states: an instance is
+//! either in the best-effort pool (idle reserve), assigned to a TPOT
+//! tier, or *pending* (§4.4: only lower-tier promoted requests remain on
+//! it — it may join their tier if that tier scales up, else it drains to
+//! the pool).
+
+use super::instance::{Instance, Role};
+use crate::analysis::ServingMode;
+use crate::model::CostModel;
+use crate::slo::TimeMs;
+
+/// Tier assignment state of an instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TierAssign {
+    /// In the best-effort pool (free to be claimed by any tier).
+    BestEffort,
+    /// Serving TPOT tier `k` (index into the tier set, 0 = tightest).
+    Tier(usize),
+    /// §4.4 pending state: no native-tier requests left, only promoted
+    /// lower-tier ones; waiting to either join their tier or drain.
+    Pending,
+    /// Static role (baselines / prefill cluster): never rebalanced.
+    Static,
+}
+
+/// The cluster under simulation.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub instances: Vec<Instance>,
+    /// Tier assignment per instance (parallel to `instances`).
+    pub assign: Vec<TierAssign>,
+    /// Number of TPOT tiers.
+    pub num_tiers: usize,
+    /// Instances the router fed while holding the ctx — the simulator
+    /// must try to (re)start their iterations.
+    kicked: Vec<usize>,
+}
+
+impl Cluster {
+    /// Build a cluster for `mode`:
+    /// * PD: `round(prefill_frac · n)` prefill instances (Static) and
+    ///   the rest decode instances.
+    /// * Coloc: all instances are coloc.
+    /// Tier assignment starts as given by `initial_assign` (e.g. all
+    /// BestEffort for PolyServe, Static for baselines).
+    pub fn build(
+        mode: ServingMode,
+        n: usize,
+        prefill_frac: f64,
+        num_tiers: usize,
+        cm: &CostModel,
+        polyserve_managed: bool,
+    ) -> Cluster {
+        assert!(n >= 1);
+        let mut instances = Vec::with_capacity(n);
+        let mut assign = Vec::with_capacity(n);
+        match mode {
+            ServingMode::PdDisaggregated => {
+                let n_prefill = ((n as f64 * prefill_frac).round() as usize)
+                    .clamp(1, n.saturating_sub(1).max(1));
+                for i in 0..n {
+                    let role = if i < n_prefill { Role::Prefill } else { Role::Decode };
+                    instances.push(Instance::new(
+                        i,
+                        role,
+                        cm.kv_capacity_tokens,
+                        cm.max_token_batch,
+                    ));
+                    assign.push(match role {
+                        Role::Prefill => TierAssign::Static,
+                        _ if polyserve_managed => TierAssign::BestEffort,
+                        _ => TierAssign::Static,
+                    });
+                }
+            }
+            ServingMode::Colocated => {
+                for i in 0..n {
+                    instances.push(Instance::new(
+                        i,
+                        Role::Coloc,
+                        cm.kv_capacity_tokens,
+                        cm.max_token_batch,
+                    ));
+                    assign.push(if polyserve_managed {
+                        TierAssign::BestEffort
+                    } else {
+                        TierAssign::Static
+                    });
+                }
+            }
+        }
+        Cluster {
+            instances,
+            assign,
+            num_tiers,
+            kicked: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.instances.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instances.is_empty()
+    }
+
+    /// Instance ids with a given role.
+    pub fn with_role(&self, role: Role) -> impl Iterator<Item = usize> + '_ {
+        self.instances
+            .iter()
+            .filter(move |i| i.role == role)
+            .map(|i| i.id)
+    }
+
+    /// Instance ids currently assigned to tier `k`.
+    pub fn in_tier(&self, k: usize) -> impl Iterator<Item = usize> + '_ {
+        self.assign
+            .iter()
+            .enumerate()
+            .filter(move |(_, a)| **a == TierAssign::Tier(k))
+            .map(|(i, _)| i)
+    }
+
+    /// Instance ids in the best-effort pool.
+    pub fn best_effort_pool(&self) -> impl Iterator<Item = usize> + '_ {
+        self.assign
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| **a == TierAssign::BestEffort)
+            .map(|(i, _)| i)
+    }
+
+    /// Claim an instance from the BE pool for tier `k` (§4.3: "joining a
+    /// particular SLO tier simply requires ... reconfiguring"; instant).
+    /// Returns the claimed id.
+    pub fn claim_for_tier(&mut self, k: usize, now: TimeMs) -> Option<usize> {
+        let id = self.best_effort_pool().next()?;
+        self.assign[id] = TierAssign::Tier(k);
+        self.instances[id].alloc_start(now);
+        Some(id)
+    }
+
+    /// Move a pending instance into tier `k` (it already holds promoted
+    /// requests of that tier).
+    pub fn adopt_pending(&mut self, id: usize, k: usize) {
+        debug_assert_eq!(self.assign[id], TierAssign::Pending);
+        self.assign[id] = TierAssign::Tier(k);
+        // alloc interval already open from its previous tier stint.
+    }
+
+    /// Mark an instance pending (§4.4).
+    pub fn mark_pending(&mut self, id: usize) {
+        self.assign[id] = TierAssign::Pending;
+    }
+
+    /// Release an instance to the best-effort pool.
+    pub fn release(&mut self, id: usize, now: TimeMs) {
+        debug_assert!(self.instances[id].is_empty(), "releasing a busy instance");
+        self.assign[id] = TierAssign::BestEffort;
+        self.instances[id].alloc_end(now);
+    }
+
+    /// Router-side: mark that `inst` received work and may need its
+    /// iteration (re)started by the simulator.
+    pub fn mark_kicked(&mut self, inst: usize) {
+        self.kicked.push(inst);
+    }
+
+    pub fn take_kicked(&mut self) -> Vec<usize> {
+        std::mem::take(&mut self.kicked)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cm() -> CostModel {
+        CostModel::h200_llama8b()
+    }
+
+    #[test]
+    fn pd_build_splits_roles() {
+        let c = Cluster::build(ServingMode::PdDisaggregated, 20, 0.35, 4, &cm(), true);
+        let prefill = c.with_role(Role::Prefill).count();
+        let decode = c.with_role(Role::Decode).count();
+        assert_eq!(prefill, 7);
+        assert_eq!(decode, 13);
+        // prefill static, decode in BE pool (PolyServe-managed)
+        assert_eq!(c.best_effort_pool().count(), 13);
+    }
+
+    #[test]
+    fn coloc_build_all_coloc() {
+        let c = Cluster::build(ServingMode::Colocated, 8, 0.35, 4, &cm(), false);
+        assert_eq!(c.with_role(Role::Coloc).count(), 8);
+        assert_eq!(c.best_effort_pool().count(), 0); // static for baselines
+    }
+
+    #[test]
+    fn claim_and_release_lifecycle() {
+        let mut c = Cluster::build(ServingMode::Colocated, 4, 0.0, 2, &cm(), true);
+        let id = c.claim_for_tier(1, 100).unwrap();
+        assert_eq!(c.assign[id], TierAssign::Tier(1));
+        assert_eq!(c.in_tier(1).count(), 1);
+        assert_eq!(c.best_effort_pool().count(), 3);
+        c.mark_pending(id);
+        assert_eq!(c.in_tier(1).count(), 0);
+        c.adopt_pending(id, 0);
+        assert_eq!(c.in_tier(0).count(), 1);
+        c.mark_pending(id);
+        c.release(id, 500);
+        assert_eq!(c.best_effort_pool().count(), 4);
+        assert_eq!(c.instances[id].allocated_ms(1000), 400);
+    }
+
+    #[test]
+    fn claim_exhausts_pool() {
+        let mut c = Cluster::build(ServingMode::Colocated, 2, 0.0, 1, &cm(), true);
+        assert!(c.claim_for_tier(0, 0).is_some());
+        assert!(c.claim_for_tier(0, 0).is_some());
+        assert!(c.claim_for_tier(0, 0).is_none());
+    }
+
+    #[test]
+    fn kicked_roundtrip() {
+        let mut c = Cluster::build(ServingMode::Colocated, 2, 0.0, 1, &cm(), true);
+        c.mark_kicked(1);
+        c.mark_kicked(0);
+        assert_eq!(c.take_kicked(), vec![1, 0]);
+        assert!(c.take_kicked().is_empty());
+    }
+
+    #[test]
+    fn single_instance_pd_keeps_one_decode() {
+        let c = Cluster::build(ServingMode::PdDisaggregated, 2, 0.5, 1, &cm(), true);
+        assert_eq!(c.with_role(Role::Prefill).count(), 1);
+        assert_eq!(c.with_role(Role::Decode).count(), 1);
+    }
+}

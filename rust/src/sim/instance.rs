@@ -1,0 +1,564 @@
+//! One simulated serving instance: batch state, KV accounting, and the
+//! iteration mechanics shared by every policy.
+//!
+//! Policies differ only in *where* requests are queued (routing) and
+//! *how much* prefill each iteration may carry (`chunk_budget`); the
+//! mechanics here are common:
+//!
+//! * All running decode requests generate one token per iteration
+//!   (continuous batching, §2.4) — unless paused by KV pressure.
+//! * The prefill queue contributes up to `budget` chunk tokens per
+//!   iteration (chunked prefill); on a PD prefill server the budget is
+//!   the whole token batch.
+//! * Iteration duration = CostModel ground truth, quantized to 1 ms.
+
+use super::SimRequest;
+use crate::model::CostModel;
+use crate::slo::TimeMs;
+use std::collections::VecDeque;
+
+/// Instance role in the serving architecture.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// PD-disaggregation prefill server.
+    Prefill,
+    /// PD-disaggregation decode server.
+    Decode,
+    /// Chunked-prefill co-located server.
+    Coloc,
+}
+
+/// A queued prefill job (request awaiting prompt processing here).
+#[derive(Debug, Clone, Copy)]
+pub struct PrefillJob {
+    pub req_idx: usize,
+    /// TTFT deadline (arrival + TTFT) — used for EDF ordering.
+    pub deadline: TimeMs,
+}
+
+/// A decode-phase request resident on this instance.
+#[derive(Debug, Clone, Copy)]
+pub struct RunningReq {
+    pub req_idx: usize,
+    /// Paused by KV pressure this iteration (no token generated).
+    pub paused: bool,
+}
+
+/// Per-iteration batch composition (what `form_batch` decided).
+#[derive(Debug, Clone, Default)]
+pub struct IterationBatch {
+    /// Decode tokens this iteration (= active decode requests).
+    pub b_decode: u64,
+    /// Prefill chunk tokens this iteration.
+    pub b_prefill: u64,
+    /// (req_idx, tokens) prefill slices in this iteration.
+    pub prefill_slices: Vec<(usize, u32)>,
+    /// KV tokens resident during the iteration.
+    pub kv_tokens: u64,
+}
+
+/// One serving instance.
+#[derive(Debug, Clone)]
+pub struct Instance {
+    pub id: usize,
+    pub role: Role,
+    /// Decode-phase requests resident (their KV lives here).
+    pub running: Vec<RunningReq>,
+    /// Requests queued for (chunked) prefill on this instance.
+    pub prefill_queue: VecDeque<PrefillJob>,
+    /// PD decode handoffs: (req_idx, ready_time) — KV still in flight
+    /// until `ready_time`.
+    pub decode_queue: VecDeque<(usize, TimeMs)>,
+    /// Mid-iteration state.
+    pub iterating: bool,
+    pub busy_until: TimeMs,
+    pub current: IterationBatch,
+    /// Lifetime counters.
+    pub busy_ms_total: u64,
+    pub iterations_total: u64,
+    /// Time this instance joined / left tier allocation (for cost
+    /// accounting): closed [start, end) intervals + open start.
+    alloc_intervals_ms: u64,
+    alloc_open_since: Option<TimeMs>,
+    /// KV capacity of this instance (tokens).
+    pub kv_capacity: u64,
+    /// Max token batch per iteration.
+    pub max_token_batch: u64,
+}
+
+impl Instance {
+    pub fn new(id: usize, role: Role, kv_capacity: u64, max_token_batch: u64) -> Instance {
+        Instance {
+            id,
+            role,
+            running: Vec::new(),
+            prefill_queue: VecDeque::new(),
+            decode_queue: VecDeque::new(),
+            iterating: false,
+            busy_until: 0,
+            current: IterationBatch::default(),
+            busy_ms_total: 0,
+            iterations_total: 0,
+            alloc_intervals_ms: 0,
+            alloc_open_since: None,
+            kv_capacity,
+            max_token_batch,
+        }
+    }
+
+    // ---- queue management ----
+
+    pub fn push_prefill(&mut self, job: PrefillJob) {
+        // EDF order: insert by deadline (§4.2: prioritize nearest
+        // deadline for prefill scheduling).
+        let pos = self
+            .prefill_queue
+            .iter()
+            .position(|j| j.deadline > job.deadline)
+            .unwrap_or(self.prefill_queue.len());
+        self.prefill_queue.insert(pos, job);
+    }
+
+    pub fn push_decode(&mut self, req_idx: usize, ready: TimeMs) {
+        self.decode_queue.push_back((req_idx, ready));
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.running.is_empty()
+            || !self.prefill_queue.is_empty()
+            || !self.decode_queue.is_empty()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        !self.has_work() && !self.iterating
+    }
+
+    // ---- load metrics (what routers see) ----
+
+    /// KV tokens resident from decode-phase requests.
+    pub fn kv_used(&self, requests: &[SimRequest]) -> u64 {
+        self.running
+            .iter()
+            .map(|r| requests[r.req_idx].kv_now())
+            .sum::<u64>()
+            + self
+                .prefill_queue
+                .iter()
+                .map(|j| requests[j.req_idx].prefill_done as u64)
+                .sum::<u64>()
+    }
+
+    /// Decode batch size if an iteration started now.
+    pub fn decode_batch_now(&self) -> u64 {
+        self.running.len() as u64 + self.decode_queue.len() as u64
+    }
+
+    /// Remaining prefill tokens queued.
+    pub fn queued_prefill_tokens(&self, requests: &[SimRequest]) -> u64 {
+        self.prefill_queue
+            .iter()
+            .map(|j| {
+                let r = &requests[j.req_idx];
+                (r.req.prefill_len - r.prefill_done) as u64
+            })
+            .sum()
+    }
+
+    /// Wait time until the current iteration finishes (0 if idle) —
+    /// the §4.6 wait-time term.
+    pub fn wait_ms(&self, now: TimeMs) -> u64 {
+        if self.iterating {
+            self.busy_until.saturating_sub(now)
+        } else {
+            0
+        }
+    }
+
+    // ---- allocation accounting (Fig 8 cost) ----
+
+    /// Mark this instance as allocated to a tier (leaves the BE pool).
+    pub fn alloc_start(&mut self, now: TimeMs) {
+        if self.alloc_open_since.is_none() {
+            self.alloc_open_since = Some(now);
+        }
+    }
+
+    /// Mark return to the best-effort pool.
+    pub fn alloc_end(&mut self, now: TimeMs) {
+        if let Some(s) = self.alloc_open_since.take() {
+            self.alloc_intervals_ms += now.saturating_sub(s);
+        }
+    }
+
+    /// Total allocated instance·ms by the end of the run.
+    pub fn allocated_ms(&self, end: TimeMs) -> u64 {
+        self.alloc_intervals_ms
+            + self
+                .alloc_open_since
+                .map(|s| end.saturating_sub(s))
+                .unwrap_or(0)
+    }
+
+    // ---- iteration mechanics ----
+
+    /// Form the next iteration's batch. Returns the quantized iteration
+    /// duration, or None if there is no work.
+    ///
+    /// `budget` is the prefill-token budget this iteration (router
+    /// policy); decode requests are always all scheduled (§2.4: "all
+    /// current decode requests are scheduled in the next iteration").
+    pub fn form_batch(
+        &mut self,
+        now: TimeMs,
+        requests: &mut [SimRequest],
+        budget: u64,
+        cm: &CostModel,
+    ) -> Option<TimeMs> {
+        // Admit arrived decode handoffs (KV transfer complete).
+        let mut di = 0;
+        while di < self.decode_queue.len() {
+            if self.decode_queue[di].1 <= now {
+                let (req_idx, _) = self.decode_queue.remove(di).unwrap();
+                self.running.push(RunningReq {
+                    req_idx,
+                    paused: false,
+                });
+            } else {
+                di += 1;
+            }
+        }
+
+        // KV pressure: pause newest decode requests beyond capacity.
+        let mut kv: u64 = self
+            .prefill_queue
+            .iter()
+            .map(|j| requests[j.req_idx].prefill_done as u64)
+            .sum();
+        // (running sorted by insertion order = arrival order at this
+        // instance; oldest first keeps FCFS fairness.)
+        for slot in self.running.iter_mut() {
+            let need = requests[slot.req_idx].kv_now() + 1; // +1 token
+            if kv + need <= self.kv_capacity {
+                kv += need;
+                slot.paused = false;
+            } else {
+                slot.paused = true;
+            }
+        }
+        let b_decode = self.running.iter().filter(|r| !r.paused).count() as u64;
+
+        // Prefill chunk formation under the budget and KV capacity.
+        let mut b_prefill = 0u64;
+        let mut slices: Vec<(usize, u32)> = Vec::new();
+        let room = self
+            .max_token_batch
+            .saturating_sub(b_decode)
+            .min(budget);
+        if room > 0 {
+            for job in self.prefill_queue.iter() {
+                if b_prefill >= room {
+                    break;
+                }
+                let r = &requests[job.req_idx];
+                let remaining = (r.req.prefill_len - r.prefill_done) as u64;
+                let take = remaining.min(room - b_prefill);
+                // KV for the chunk itself must fit.
+                if kv + take > self.kv_capacity {
+                    break;
+                }
+                if take == 0 {
+                    continue;
+                }
+                kv += take;
+                b_prefill += take;
+                slices.push((job.req_idx, take as u32));
+            }
+        }
+
+        if b_decode == 0 && b_prefill == 0 {
+            return None;
+        }
+        let iter_ms = cm
+            .iter_ms_mixed(b_decode, b_prefill, kv)
+            .ceil()
+            .max(1.0) as u64;
+        self.current = IterationBatch {
+            b_decode,
+            b_prefill,
+            prefill_slices: slices,
+            kv_tokens: kv,
+        };
+        self.iterations_total += 1;
+        Some(iter_ms)
+    }
+
+    /// Apply the effects of the just-finished iteration at time `now`.
+    ///
+    /// Returns (requests whose prefill completed this iteration,
+    /// number of requests that fully finished).
+    pub fn complete_iteration(
+        &mut self,
+        now: TimeMs,
+        requests: &mut [SimRequest],
+    ) -> (Vec<usize>, usize) {
+        self.iterating = false;
+        let mut finished = 0usize;
+        let mut completed_prefills = Vec::new();
+
+        // 1. Prefill progress.
+        for &(req_idx, take) in &self.current.prefill_slices {
+            let r = &mut requests[req_idx];
+            r.prefill_done += take;
+            if r.prefill_done >= r.req.prefill_len {
+                // Prefill complete → first token emitted now.
+                r.tracker.emit_token(now);
+                r.first_token_ms = Some(now);
+                r.decoded = 1;
+                completed_prefills.push(req_idx);
+                if r.decoded >= r.req.decode_len {
+                    r.finish_ms = Some(now);
+                    finished += 1;
+                }
+            }
+        }
+        // Remove finished prefills from the queue.
+        self.prefill_queue.retain(|j| {
+            let r = &requests[j.req_idx];
+            r.prefill_done < r.req.prefill_len
+        });
+        // Co-location: completed prefills continue decoding here.
+        if self.role == Role::Coloc {
+            for &req_idx in &completed_prefills {
+                if requests[req_idx].decode_remaining() > 0 {
+                    requests[req_idx].decode_instance = Some(self.id);
+                    self.running.push(RunningReq {
+                        req_idx,
+                        paused: false,
+                    });
+                }
+            }
+        }
+
+        // 2. Decode token emission.
+        let mut still_running = Vec::with_capacity(self.running.len());
+        for slot in self.running.drain(..) {
+            // Skip requests that joined during this iteration window
+            // (pushed by Coloc block above — they start next iteration)
+            // by checking decoded>0 set at prefill completion; they were
+            // not in `current` anyway. Paused requests emit nothing.
+            let joined_this_iter = completed_prefills.contains(&slot.req_idx);
+            if joined_this_iter {
+                still_running.push(slot);
+                continue;
+            }
+            let r = &mut requests[slot.req_idx];
+            if slot.paused {
+                still_running.push(slot);
+                continue;
+            }
+            r.tracker.emit_token(now);
+            r.decoded += 1;
+            if r.decoded >= r.req.decode_len {
+                r.finish_ms = Some(now);
+                r.decode_instance = None;
+                finished += 1;
+            } else {
+                still_running.push(slot);
+            }
+        }
+        self.running = still_running;
+        self.current = IterationBatch::default();
+        (completed_prefills, finished)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::slo::{DsloTracker, Slo};
+    use crate::workload::Request;
+
+    fn cm() -> CostModel {
+        CostModel::h200_llama8b()
+    }
+
+    fn sim_req(id: u64, p: u32, d: u32) -> SimRequest {
+        SimRequest {
+            req: Request {
+                id,
+                arrival_ms: 0,
+                prefill_len: p,
+                decode_len: d,
+                slo: Slo::new(1000, 50),
+            },
+            tier: 0,
+            tracker: DsloTracker::new(0, Slo::new(1000, 50)),
+            prefill_done: 0,
+            decoded: 0,
+            first_token_ms: None,
+            finish_ms: None,
+            decode_instance: None,
+        }
+    }
+
+    #[test]
+    fn prefill_queue_is_edf_ordered() {
+        let mut i = Instance::new(0, Role::Prefill, 1_000_000, 2048);
+        i.push_prefill(PrefillJob { req_idx: 0, deadline: 500 });
+        i.push_prefill(PrefillJob { req_idx: 1, deadline: 100 });
+        i.push_prefill(PrefillJob { req_idx: 2, deadline: 300 });
+        let order: Vec<usize> = i.prefill_queue.iter().map(|j| j.req_idx).collect();
+        assert_eq!(order, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn chunked_prefill_advances_and_completes() {
+        let mut reqs = vec![sim_req(0, 1000, 5)];
+        let mut i = Instance::new(0, Role::Prefill, 1_000_000, 2048);
+        i.push_prefill(PrefillJob { req_idx: 0, deadline: 1000 });
+        // Budget 512 → two chunks of 512/488.
+        let t1 = i.form_batch(0, &mut reqs, 512, &cm()).unwrap();
+        assert!(t1 >= 1);
+        assert_eq!(i.current.b_prefill, 512);
+        let (done, fin) = i.complete_iteration(t1, &mut reqs);
+        assert!(done.is_empty());
+        assert_eq!(fin, 0);
+        assert_eq!(reqs[0].prefill_done, 512);
+        let t2 = i.form_batch(t1, &mut reqs, 512, &cm()).unwrap();
+        assert_eq!(i.current.b_prefill, 488);
+        let (done, _) = i.complete_iteration(t1 + t2, &mut reqs);
+        assert_eq!(done, vec![0]);
+        assert_eq!(reqs[0].decoded, 1);
+        assert_eq!(reqs[0].first_token_ms, Some(t1 + t2));
+        assert!(i.prefill_queue.is_empty());
+    }
+
+    #[test]
+    fn decode_emits_one_token_per_iteration() {
+        let mut reqs = vec![sim_req(0, 10, 3)];
+        reqs[0].prefill_done = 10;
+        reqs[0].decoded = 1; // first token emitted at prefill
+        reqs[0].tracker.emit_token(0);
+        let mut i = Instance::new(0, Role::Decode, 1_000_000, 2048);
+        i.push_decode(0, 0);
+        let mut now = 0;
+        for step in 0..2 {
+            let t = i.form_batch(now, &mut reqs, 0, &cm()).unwrap();
+            assert_eq!(i.current.b_decode, 1, "step {step}");
+            now += t;
+            let (_, fin) = i.complete_iteration(now, &mut reqs);
+            if step == 1 {
+                assert_eq!(fin, 1);
+            } else {
+                assert_eq!(fin, 0);
+            }
+        }
+        assert_eq!(reqs[0].decoded, 3);
+        assert!(reqs[0].is_finished());
+        assert!(i.is_empty());
+    }
+
+    #[test]
+    fn decode_handoff_waits_for_kv_transfer() {
+        let mut reqs = vec![sim_req(0, 10, 5)];
+        reqs[0].prefill_done = 10;
+        reqs[0].decoded = 1;
+        let mut i = Instance::new(0, Role::Decode, 1_000_000, 2048);
+        i.push_decode(0, 100); // ready at t=100
+        assert!(i.form_batch(50, &mut reqs, 0, &cm()).is_none());
+        assert!(i.form_batch(100, &mut reqs, 0, &cm()).is_some());
+    }
+
+    #[test]
+    fn kv_pressure_pauses_newest() {
+        // Capacity for only one request's KV.
+        let mut reqs = vec![sim_req(0, 400, 10), sim_req(1, 400, 10)];
+        for r in reqs.iter_mut() {
+            r.prefill_done = 400;
+            r.decoded = 1;
+        }
+        let mut i = Instance::new(0, Role::Decode, 500, 2048);
+        i.push_decode(0, 0);
+        i.push_decode(1, 0);
+        let _ = i.form_batch(0, &mut reqs, 0, &cm()).unwrap();
+        assert_eq!(i.current.b_decode, 1);
+        let paused: Vec<bool> = i.running.iter().map(|r| r.paused).collect();
+        assert_eq!(paused, vec![false, true]);
+        let (_, fin) = i.complete_iteration(10, &mut reqs);
+        assert_eq!(fin, 0);
+        // Oldest progressed, newest did not.
+        assert_eq!(reqs[0].decoded, 2);
+        assert_eq!(reqs[1].decoded, 1);
+    }
+
+    #[test]
+    fn coloc_mixes_decode_and_prefill() {
+        let mut reqs = vec![sim_req(0, 100, 5), sim_req(1, 600, 5)];
+        reqs[0].prefill_done = 100;
+        reqs[0].decoded = 1;
+        let mut i = Instance::new(0, Role::Coloc, 1_000_000, 2048);
+        i.running.push(RunningReq { req_idx: 0, paused: false });
+        i.push_prefill(PrefillJob { req_idx: 1, deadline: 1000 });
+        let _ = i.form_batch(0, &mut reqs, 512, &cm()).unwrap();
+        assert_eq!(i.current.b_decode, 1);
+        assert_eq!(i.current.b_prefill, 512);
+        let (done, _) = i.complete_iteration(20, &mut reqs);
+        assert!(done.is_empty());
+        assert_eq!(reqs[0].decoded, 2);
+        assert_eq!(reqs[1].prefill_done, 512);
+        // Next iteration finishes the prefill; request 1 joins decoding.
+        let _ = i.form_batch(20, &mut reqs, 512, &cm()).unwrap();
+        let (done, _) = i.complete_iteration(40, &mut reqs);
+        assert_eq!(done, vec![1]);
+        assert_eq!(i.running.len(), 2);
+        // Request 1 emits its next token only in the following iteration.
+        assert_eq!(reqs[1].decoded, 1);
+    }
+
+    #[test]
+    fn completed_prefill_does_not_double_emit_in_same_iteration() {
+        let mut reqs = vec![sim_req(0, 64, 3)];
+        let mut i = Instance::new(0, Role::Coloc, 1_000_000, 2048);
+        i.push_prefill(PrefillJob { req_idx: 0, deadline: 1000 });
+        let t = i.form_batch(0, &mut reqs, 2048, &cm()).unwrap();
+        let (done, _) = i.complete_iteration(t, &mut reqs);
+        assert_eq!(done, vec![0]);
+        assert_eq!(reqs[0].decoded, 1); // exactly the first token
+        assert_eq!(reqs[0].tracker.tokens_emitted(), 1);
+    }
+
+    #[test]
+    fn allocation_accounting() {
+        let mut i = Instance::new(0, Role::Decode, 1_000_000, 2048);
+        i.alloc_start(100);
+        i.alloc_end(400);
+        i.alloc_start(600);
+        assert_eq!(i.allocated_ms(1000), 300 + 400);
+        // idempotent start
+        i.alloc_start(700);
+        assert_eq!(i.allocated_ms(1000), 700);
+    }
+
+    #[test]
+    fn budget_zero_blocks_prefill_but_not_decode() {
+        let mut reqs = vec![sim_req(0, 100, 5), sim_req(1, 100, 5)];
+        reqs[0].prefill_done = 100;
+        reqs[0].decoded = 1;
+        let mut i = Instance::new(0, Role::Coloc, 1_000_000, 2048);
+        i.running.push(RunningReq { req_idx: 0, paused: false });
+        i.push_prefill(PrefillJob { req_idx: 1, deadline: 1000 });
+        let _ = i.form_batch(0, &mut reqs, 0, &cm()).unwrap();
+        assert_eq!(i.current.b_decode, 1);
+        assert_eq!(i.current.b_prefill, 0);
+    }
+
+    #[test]
+    fn wait_ms_reflects_iteration_progress() {
+        let mut i = Instance::new(0, Role::Decode, 1_000_000, 2048);
+        assert_eq!(i.wait_ms(50), 0);
+        i.iterating = true;
+        i.busy_until = 120;
+        assert_eq!(i.wait_ms(100), 20);
+        assert_eq!(i.wait_ms(130), 0);
+    }
+}

@@ -1,0 +1,396 @@
+//! Discrete-event cluster simulator.
+//!
+//! Mirrors the paper's evaluation methodology (§5.1): serving instances
+//! are simulated at 1 ms resolution using profiling-derived iteration
+//! times; the router under test makes every scheduling decision.
+//!
+//! Architecture:
+//!
+//! * [`instance`] — one serving instance: running decode batch, prefill
+//!   queue, KV accounting, iteration mechanics (batch formation,
+//!   completion processing).
+//! * [`cluster`] — the fleet: tier membership, best-effort pool,
+//!   cost accounting.
+//! * this module — the event loop ([`Simulation`]): request arrivals,
+//!   iteration completions, router callbacks, outcome collection.
+//!
+//! Ground truth iteration times come from [`CostModel`] (the simulated
+//! hardware); the router only sees a [`ProfileTable`] — mirroring the
+//! paper's profiling-driven scheduler, including its prediction error.
+
+pub mod cluster;
+pub mod instance;
+
+pub use cluster::{Cluster, TierAssign};
+pub use instance::{Instance, PrefillJob, Role};
+
+use crate::analysis::ServingMode;
+use crate::coordinator::{RouteCtx, Router};
+use crate::metrics::{AttainmentReport, CostAccount, RequestOutcome};
+use crate::model::CostModel;
+use crate::profile::ProfileTable;
+use crate::slo::{DsloTracker, TimeMs};
+use crate::workload::Workload;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Simulator-side request state.
+#[derive(Debug, Clone)]
+pub struct SimRequest {
+    pub req: crate::workload::Request,
+    /// TPOT tier bin (index into the tier set).
+    pub tier: usize,
+    pub tracker: DsloTracker,
+    /// Prompt tokens prefilled so far.
+    pub prefill_done: u32,
+    /// Output tokens emitted (token 0 comes from prefill completion).
+    pub decoded: u32,
+    pub first_token_ms: Option<TimeMs>,
+    pub finish_ms: Option<TimeMs>,
+    /// Instance currently hosting the request's decode phase.
+    pub decode_instance: Option<usize>,
+}
+
+impl SimRequest {
+    pub fn is_finished(&self) -> bool {
+        self.finish_ms.is_some()
+    }
+
+    /// Total KV footprint right now (prefilled + decoded tokens).
+    pub fn kv_now(&self) -> u64 {
+        self.prefill_done as u64 + self.decoded as u64
+    }
+
+    /// Remaining decode tokens (including any in flight).
+    pub fn decode_remaining(&self) -> u32 {
+        self.req.decode_len.saturating_sub(self.decoded)
+    }
+}
+
+/// Result of a full simulation run.
+#[derive(Debug)]
+pub struct SimResult {
+    pub outcomes: Vec<RequestOutcome>,
+    pub attainment: AttainmentReport,
+    pub cost: CostAccount,
+    /// Wall-clock simulated, ms.
+    pub sim_span_ms: TimeMs,
+    /// Completed requests per second of simulated time.
+    pub throughput_rps: f64,
+    /// Requests never finished (stuck/dropped) — should be 0.
+    pub unfinished: usize,
+}
+
+/// Environment knobs (not policy).
+#[derive(Debug, Clone)]
+pub struct SimParams {
+    pub mode: ServingMode,
+    /// KV-transfer latency prefill→decode for PD (paper assumes RDMA).
+    pub kv_transfer_ms: TimeMs,
+    /// Housekeeping tick period.
+    pub tick_ms: TimeMs,
+    /// Abort the run if simulated time exceeds this (safety valve).
+    pub max_sim_ms: TimeMs,
+}
+
+impl Default for SimParams {
+    fn default() -> SimParams {
+        SimParams {
+            mode: ServingMode::PdDisaggregated,
+            kv_transfer_ms: 2,
+            tick_ms: 100,
+            max_sim_ms: 48 * 3600 * 1000,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum EventKey {
+    Arrival(usize),
+    IterEnd(usize),
+    /// Retry starting an iteration (e.g. a KV handoff becomes ready).
+    Wake(usize),
+    Tick,
+}
+
+/// The event-driven simulation.
+pub struct Simulation<'a> {
+    pub params: SimParams,
+    pub cost_model: CostModel,
+    pub profile: &'a ProfileTable,
+    pub requests: Vec<SimRequest>,
+    pub cluster: Cluster,
+    events: BinaryHeap<Reverse<(TimeMs, u64, EventKey)>>,
+    seq: u64,
+    now: TimeMs,
+}
+
+impl<'a> Simulation<'a> {
+    pub fn new(
+        params: SimParams,
+        cost_model: CostModel,
+        profile: &'a ProfileTable,
+        workload: &Workload,
+        cluster: Cluster,
+        tiers: &crate::slo::TierSet,
+    ) -> Simulation<'a> {
+        let requests: Vec<SimRequest> = workload
+            .requests
+            .iter()
+            .map(|r| SimRequest {
+                tier: tiers.bin_for_tpot(r.slo.tpot_ms),
+                tracker: DsloTracker::new(r.arrival_ms, r.slo),
+                prefill_done: 0,
+                decoded: 0,
+                first_token_ms: None,
+                finish_ms: None,
+                decode_instance: None,
+                req: r.clone(),
+            })
+            .collect();
+        let mut events = BinaryHeap::with_capacity(requests.len() + 64);
+        let mut seq = 0u64;
+        for (i, r) in requests.iter().enumerate() {
+            events.push(Reverse((r.req.arrival_ms, seq, EventKey::Arrival(i))));
+            seq += 1;
+        }
+        events.push(Reverse((params.tick_ms, seq, EventKey::Tick)));
+        seq += 1;
+        Simulation {
+            params,
+            cost_model,
+            profile,
+            requests,
+            cluster,
+            events,
+            seq,
+            now: 0,
+        }
+    }
+
+    fn push_event(&mut self, t: TimeMs, key: EventKey) {
+        self.events.push(Reverse((t, self.seq, key)));
+        self.seq += 1;
+    }
+
+    fn ctx(&mut self) -> RouteCtx<'_> {
+        RouteCtx {
+            now: self.now,
+            cluster: &mut self.cluster,
+            requests: &mut self.requests,
+            profile: self.profile,
+            mode: self.params.mode,
+        }
+    }
+
+    /// Run to completion under `router`; returns outcomes and metrics.
+    pub fn run(mut self, router: &mut dyn Router) -> SimResult {
+        let mut completed = 0usize;
+        let total = self.requests.len();
+        while let Some(Reverse((t, _, key))) = self.events.pop() {
+            debug_assert!(t >= self.now, "time went backwards");
+            self.now = t;
+            if self.now > self.params.max_sim_ms {
+                log::warn!("simulation exceeded max_sim_ms; aborting");
+                break;
+            }
+            match key {
+                EventKey::Arrival(idx) => self.handle_arrival(idx, router),
+                EventKey::IterEnd(inst) => {
+                    completed += self.handle_iter_end(inst, router);
+                }
+                EventKey::Wake(inst) => {
+                    self.maybe_start_iteration(inst, router);
+                }
+                EventKey::Tick => {
+                    if completed < total {
+                        router.on_tick(self.now, &mut self.ctx());
+                        self.restart_fed_instances(router);
+                        // Safety sweep: restart any idle instance that
+                        // still holds work (e.g. queued by a router path
+                        // that forgot to kick it).
+                        let idle: Vec<usize> = self
+                            .cluster
+                            .instances
+                            .iter()
+                            .filter(|i| !i.iterating && i.has_work())
+                            .map(|i| i.id)
+                            .collect();
+                        for inst in idle {
+                            self.maybe_start_iteration(inst, router);
+                        }
+                        if log::log_enabled!(log::Level::Trace) && self.now % 1000 == 0 {
+                            self.log_timeline();
+                        }
+                        let next = self.now + self.params.tick_ms;
+                        self.push_event(next, EventKey::Tick);
+                    }
+                }
+            }
+            if completed == total {
+                break;
+            }
+        }
+        self.finalize(completed)
+    }
+
+    fn handle_arrival(&mut self, idx: usize, router: &mut dyn Router) {
+        let chosen = router.route_new(self.now, idx, &mut self.ctx());
+        if let Some(inst) = chosen {
+            let deadline =
+                self.requests[idx].req.arrival_ms + self.requests[idx].req.slo.ttft_ms;
+            self.cluster.instances[inst]
+                .push_prefill(PrefillJob { req_idx: idx, deadline });
+            self.maybe_start_iteration(inst, router);
+        }
+        self.restart_fed_instances(router);
+        // None: the router holds it pending and dispatches later.
+    }
+
+    /// Start an iteration on `inst` if it's idle and has work.
+    pub fn maybe_start_iteration(&mut self, inst: usize, router: &mut dyn Router) {
+        if self.cluster.instances[inst].iterating {
+            return;
+        }
+        let budget = router.chunk_budget(self.now, inst, &mut self.ctx());
+        let cm = self.cost_model.clone();
+        let now = self.now;
+        let iter = {
+            let i = &mut self.cluster.instances[inst];
+            i.form_batch(now, &mut self.requests, budget, &cm)
+        };
+        let Some(iter_ms) = iter else { return };
+        let i = &mut self.cluster.instances[inst];
+        i.iterating = true;
+        i.busy_until = now + iter_ms;
+        i.busy_ms_total += iter_ms;
+        self.push_event(now + iter_ms, EventKey::IterEnd(inst));
+    }
+
+    /// Process an iteration completion; returns #requests finished.
+    fn handle_iter_end(&mut self, inst: usize, router: &mut dyn Router) -> usize {
+        let now = self.now;
+        let (completed_prefills, finished) = {
+            let i = &mut self.cluster.instances[inst];
+            i.complete_iteration(now, &mut self.requests)
+        };
+        // Completed prefills → decode placement.
+        for req_idx in completed_prefills {
+            match self.params.mode {
+                ServingMode::Colocated => { /* stays on the same instance */ }
+                ServingMode::PdDisaggregated => {
+                    if self.requests[req_idx].decode_remaining() == 0 {
+                        continue; // output fully emitted at prefill
+                    }
+                    let target = router.route_decode(now, req_idx, &mut self.ctx());
+                    if let Some(d) = target {
+                        let ready = now + self.params.kv_transfer_ms;
+                        self.requests[req_idx].decode_instance = Some(d);
+                        self.cluster.instances[d].push_decode(req_idx, ready);
+                        self.maybe_start_iteration(d, router);
+                        // The handoff is only schedulable at `ready`; if
+                        // the instance is idle until then, wake it.
+                        self.push_event(ready, EventKey::Wake(d));
+                    }
+                }
+            }
+        }
+        router.on_iter_end(now, inst, &mut self.ctx());
+        self.maybe_start_iteration(inst, router);
+        self.restart_fed_instances(router);
+        finished
+    }
+
+    /// Restart any instance the router fed while holding the ctx.
+    fn restart_fed_instances(&mut self, router: &mut dyn Router) {
+        loop {
+            let kicked = self.cluster.take_kicked();
+            if kicked.is_empty() {
+                break;
+            }
+            for k in kicked {
+                self.maybe_start_iteration(k, router);
+            }
+        }
+    }
+
+    /// Per-second cluster state dump (trace level) for debugging
+    /// scheduling dynamics.
+    fn log_timeline(&self) {
+        use std::fmt::Write as _;
+        let mut line = format!("t={:>7}ms", self.now);
+        for k in 0..self.cluster.num_tiers {
+            let ids: Vec<usize> = self.cluster.in_tier(k).collect();
+            let batch: u64 = ids
+                .iter()
+                .map(|&i| self.cluster.instances[i].decode_batch_now())
+                .sum();
+            let _ = write!(line, " | T{k}: {}inst b={batch}", ids.len());
+        }
+        let be = self.cluster.best_effort_pool().count();
+        let pending_assign = self
+            .cluster
+            .assign
+            .iter()
+            .filter(|a| **a == TierAssign::Pending)
+            .count();
+        let pf_queue: u64 = self
+            .cluster
+            .instances
+            .iter()
+            .filter(|i| i.role == Role::Prefill)
+            .map(|i| i.queued_prefill_tokens(&self.requests))
+            .sum();
+        let _ = write!(line, " | BE={be} Pend={pending_assign} pfq={pf_queue}");
+        log::trace!("{line}");
+    }
+
+    fn finalize(self, completed: usize) -> SimResult {
+        let mut outcomes = Vec::with_capacity(self.requests.len());
+        let mut span: TimeMs = 0;
+        for r in &self.requests {
+            let attained = r.is_finished() && r.tracker.attained();
+            outcomes.push(RequestOutcome {
+                id: r.req.id,
+                slo: r.req.slo,
+                arrival_ms: r.req.arrival_ms,
+                first_token_ms: r.first_token_ms,
+                finish_ms: r.finish_ms,
+                tokens: r.tracker.tokens_emitted(),
+                attained,
+                min_slack_ms: r.tracker.min_slack_ms(),
+            });
+            if let Some(f) = r.finish_ms {
+                span = span.max(f);
+            }
+        }
+        let attainment = AttainmentReport::from_outcomes(&outcomes);
+        let mut cost = CostAccount {
+            requests_served: outcomes.iter().filter(|o| o.finish_ms.is_some()).count() as u64,
+            ..Default::default()
+        };
+        for i in &self.cluster.instances {
+            cost.instance_busy_ms += i.busy_ms_total;
+            // Statically-assigned instances (baselines, the PD prefill
+            // cluster) are allocated for the whole run; tier-managed
+            // instances count their tier-allocation intervals.
+            cost.instance_alloc_ms += match self.cluster.assign[i.id] {
+                TierAssign::Static => span,
+                _ => i.allocated_ms(span),
+            };
+        }
+        let throughput_rps = if span > 0 {
+            cost.requests_served as f64 / (span as f64 / 1000.0)
+        } else {
+            0.0
+        };
+        SimResult {
+            unfinished: outcomes.len() - completed.min(outcomes.len()),
+            outcomes,
+            attainment,
+            cost,
+            sim_span_ms: span,
+            throughput_rps,
+        }
+    }
+}

@@ -1,0 +1,238 @@
+//! Micro-benchmark harness (criterion substitute).
+//!
+//! Every `cargo bench` target in this repo is `harness = false` and uses
+//! this module. Two kinds of benches coexist:
+//!
+//! 1. **Timing benches** ([`Bench::time`]) — warmup, then timed
+//!    iterations with mean / p50 / p99 / throughput, printed as an
+//!    aligned table. Used for §5.6 scheduler efficiency and the perf
+//!    pass.
+//! 2. **Figure/table benches** ([`Bench::table`]) — regenerate a paper
+//!    table or figure's data series and print the rows (and write CSV
+//!    under `results/`). Matching the paper is about the *values*, not
+//!    the wallclock, so these run once.
+//!
+//! `POLYSERVE_FULL=1` switches figure benches to paper-scale request
+//! counts (300 k) — the default is a scaled run for CI-fast iteration.
+
+use std::fmt::Write as _;
+use std::time::{Duration, Instant};
+
+/// Is a paper-scale (full) run requested?
+pub fn full_scale() -> bool {
+    std::env::var("POLYSERVE_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Timing statistics for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+    /// Optional items-per-iteration for throughput reporting.
+    pub items_per_iter: Option<f64>,
+}
+
+impl Timing {
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| n / self.mean.as_secs_f64())
+    }
+}
+
+/// Benchmark runner for one bench binary.
+pub struct Bench {
+    suite: String,
+    timings: Vec<Timing>,
+    csv_rows: Vec<(String, String)>, // (file, row)
+    csv_headers: Vec<(String, String)>,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Bench {
+        println!("\n=== bench suite: {suite} ===");
+        Bench {
+            suite: suite.to_string(),
+            timings: Vec::new(),
+            csv_rows: Vec::new(),
+            csv_headers: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which performs one iteration per call. `items` is the
+    /// number of logical operations per iteration (for ops/s).
+    pub fn time<F: FnMut()>(&mut self, name: &str, items: Option<f64>, mut f: F) -> &Timing {
+        // Warmup: run until 0.2 s or 10 iterations, whichever first.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0usize;
+        while warm_iters < 10 && warm_start.elapsed() < Duration::from_millis(200) {
+            f();
+            warm_iters += 1;
+        }
+        // Choose iteration count targeting ~1 s of measurement,
+        // clamped to [10, 10_000].
+        let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters.max(1) as f64;
+        let iters = ((1.0 / per_iter.max(1e-9)) as usize).clamp(10, 10_000);
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let mean = samples.iter().sum::<Duration>() / iters as u32;
+        let t = Timing {
+            name: name.to_string(),
+            iters,
+            mean,
+            p50: samples[iters / 2],
+            p99: samples[(iters * 99) / 100],
+            min: samples[0],
+            items_per_iter: items,
+        };
+        self.print_timing(&t);
+        self.timings.push(t);
+        self.timings.last().unwrap()
+    }
+
+    fn print_timing(&self, t: &Timing) {
+        let mut line = format!(
+            "  {:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p99 {:>12}",
+            t.name,
+            t.iters,
+            fmt_dur(t.mean),
+            fmt_dur(t.p50),
+            fmt_dur(t.p99),
+        );
+        if let Some(tput) = t.throughput() {
+            let _ = write!(line, "  {:>14}/s", fmt_count(tput));
+        }
+        println!("{line}");
+    }
+
+    /// Print a figure/table data block and queue it for CSV output.
+    /// `headers` are column names; each row is a Vec of cells.
+    pub fn table(&mut self, name: &str, headers: &[&str], rows: &[Vec<String>]) {
+        println!("\n--- {name} ---");
+        let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+        for row in rows {
+            for (i, cell) in row.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(cell.len());
+                }
+            }
+        }
+        let mut head = String::from(" ");
+        for (h, w) in headers.iter().zip(&widths) {
+            let _ = write!(head, " {h:>w$}");
+        }
+        println!("{head}");
+        for row in rows {
+            let mut line = String::from(" ");
+            for (cell, w) in row.iter().zip(&widths) {
+                let _ = write!(line, " {cell:>w$}");
+            }
+            println!("{line}");
+        }
+        // CSV
+        let file = format!("{}_{}.csv", self.suite, sanitize(name));
+        self.csv_headers.push((file.clone(), headers.join(",")));
+        for row in rows {
+            self.csv_rows.push((file.clone(), row.join(",")));
+        }
+    }
+
+    /// Write queued CSVs under `results/` and a summary line. Call last.
+    pub fn finish(self) {
+        let dir = std::path::Path::new("results");
+        if std::fs::create_dir_all(dir).is_err() {
+            return;
+        }
+        let mut files: std::collections::BTreeMap<String, String> = Default::default();
+        for (file, header) in &self.csv_headers {
+            files.entry(file.clone()).or_insert_with(|| format!("{header}\n"));
+        }
+        for (file, row) in &self.csv_rows {
+            if let Some(buf) = files.get_mut(file) {
+                buf.push_str(row);
+                buf.push('\n');
+            }
+        }
+        for (file, buf) in files {
+            let path = dir.join(&file);
+            if std::fs::write(&path, buf).is_ok() {
+                println!("  [csv] wrote results/{file}");
+            }
+        }
+        println!("=== suite {} done ===", self.suite);
+    }
+}
+
+fn sanitize(s: &str) -> String {
+    s.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+        .collect()
+}
+
+/// Human duration: ns/µs/ms/s with 3 significant digits.
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Human count: 12.3k, 4.56M ...
+pub fn fmt_count(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.1}k", x / 1e3)
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+/// Format a float with fixed decimals (table helper).
+pub fn f(x: f64, decimals: usize) -> String {
+    format!("{x:.decimals$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_runs_and_reports() {
+        let mut b = Bench::new("selftest");
+        let t = b.time("noop-ish", Some(100.0), || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(t.iters >= 10);
+        assert!(t.mean >= t.min);
+        assert!(t.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500 ns");
+        assert!(fmt_dur(Duration::from_micros(1500)).contains("ms"));
+        assert_eq!(fmt_count(1234.0), "1.2k");
+        assert_eq!(f(1.23456, 2), "1.23");
+    }
+
+    #[test]
+    fn sanitize_names() {
+        assert_eq!(sanitize("Fig 6 (goodput)"), "fig_6__goodput_");
+    }
+}

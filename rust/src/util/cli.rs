@@ -1,0 +1,273 @@
+//! Declarative command-line parsing (clap substitute).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`
+//! options with defaults, and auto-generated `--help` text. Only what
+//! `rust/src/main.rs` needs.
+
+use std::collections::BTreeMap;
+
+/// One option specification.
+#[derive(Debug, Clone)]
+pub struct Opt {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments for one subcommand.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// Positional arguments after options.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// A subcommand with its options.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<Opt>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Command {
+        Command {
+            name,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            default: Some(default),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        for opt in &self.opts {
+            if let Some(d) = opt.default {
+                args.values.insert(opt.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let (name, inline_val) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{name} for '{}'", self.name))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("--{name} is a flag and takes no value"));
+                    }
+                    args.flags.push(name.to_string());
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} requires a value"))?
+                        }
+                    };
+                    args.values.insert(name.to_string(), val);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    fn help(&self) -> String {
+        let mut s = format!("  {:<12} {}\n", self.name, self.about);
+        for o in &self.opts {
+            let tail = if o.is_flag {
+                String::new()
+            } else {
+                format!(" (default: {})", o.default.unwrap_or("-"))
+            };
+            s.push_str(&format!("      --{:<20} {}{}\n", o.name, o.help, tail));
+        }
+        s
+    }
+}
+
+/// The top-level application.
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+/// Result of parsing: which subcommand and its args.
+pub enum Parsed {
+    Run { command: String, args: Args },
+    Help(String),
+    Error(String),
+}
+
+impl App {
+    pub fn new(name: &'static str, about: &'static str) -> App {
+        App {
+            name,
+            about,
+            commands: Vec::new(),
+        }
+    }
+
+    pub fn command(mut self, c: Command) -> Self {
+        self.commands.push(c);
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE: {} <command> [options]\n\nCOMMANDS:\n", self.name, self.about, self.name);
+        for c in &self.commands {
+            s.push_str(&c.help());
+        }
+        s
+    }
+
+    pub fn parse(&self, argv: &[String]) -> Parsed {
+        let Some(cmd_name) = argv.first() else {
+            return Parsed::Help(self.usage());
+        };
+        if cmd_name == "--help" || cmd_name == "-h" || cmd_name == "help" {
+            return Parsed::Help(self.usage());
+        }
+        let Some(cmd) = self.commands.iter().find(|c| c.name == cmd_name) else {
+            return Parsed::Error(format!(
+                "unknown command '{cmd_name}'\n\n{}",
+                self.usage()
+            ));
+        };
+        if argv.iter().any(|a| a == "--help" || a == "-h") {
+            return Parsed::Help(cmd.help());
+        }
+        match cmd.parse(&argv[1..]) {
+            Ok(args) => Parsed::Run {
+                command: cmd_name.clone(),
+                args,
+            },
+            Err(e) => Parsed::Error(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App::new("polyserve", "test").command(
+            Command::new("simulate", "run a simulation")
+                .opt("trace", "sharegpt", "trace name")
+                .opt("rate", "1.0", "request rate")
+                .opt("instances", "20", "server count")
+                .flag("verbose", "chatty output"),
+        )
+    }
+
+    fn argv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_defaults_and_overrides() {
+        let p = app().parse(&argv(&["simulate", "--rate", "2.5", "--verbose"]));
+        match p {
+            Parsed::Run { command, args } => {
+                assert_eq!(command, "simulate");
+                assert_eq!(args.str_or("trace", ""), "sharegpt");
+                assert_eq!(args.f64_or("rate", 0.0), 2.5);
+                assert_eq!(args.usize_or("instances", 0), 20);
+                assert!(args.flag("verbose"));
+            }
+            _ => panic!("expected Run"),
+        }
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let p = app().parse(&argv(&["simulate", "--rate=3.0"]));
+        match p {
+            Parsed::Run { args, .. } => assert_eq!(args.f64_or("rate", 0.0), 3.0),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn unknown_command_and_option() {
+        assert!(matches!(app().parse(&argv(&["bogus"])), Parsed::Error(_)));
+        assert!(matches!(
+            app().parse(&argv(&["simulate", "--bogus", "1"])),
+            Parsed::Error(_)
+        ));
+    }
+
+    #[test]
+    fn help_paths() {
+        assert!(matches!(app().parse(&argv(&[])), Parsed::Help(_)));
+        assert!(matches!(app().parse(&argv(&["--help"])), Parsed::Help(_)));
+        assert!(matches!(
+            app().parse(&argv(&["simulate", "--help"])),
+            Parsed::Help(_)
+        ));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(matches!(
+            app().parse(&argv(&["simulate", "--rate"])),
+            Parsed::Error(_)
+        ));
+    }
+}

@@ -1,0 +1,29 @@
+//! Self-contained substrates.
+//!
+//! The build environment is fully offline, so the usual ecosystem crates
+//! (rand, serde, criterion, proptest, tokio, clap) are unavailable. Each
+//! submodule here is a small, tested, purpose-built replacement:
+//!
+//! * [`rng`] — deterministic PRNG + the distributions the workload
+//!   generators need (uniform, exponential, Poisson, categorical,
+//!   lognormal).
+//! * [`stats`] — percentiles, moments, histograms.
+//! * [`json`] — a JSON writer/parser for profile tables and results.
+//! * [`tomlish`] — a TOML-subset parser for experiment configs.
+//! * [`logging`] — a `log`-crate backend with env-controlled level.
+//! * [`threadpool`] — a scoped thread pool for parallel simulation sweeps.
+//! * [`prop`] — a mini property-based-testing framework (proptest
+//!   substitute) with seeded generators and iterative shrinking.
+//! * [`benchkit`] — a criterion-substitute micro-benchmark harness used
+//!   by every `cargo bench` target.
+//! * [`cli`] — a small declarative command-line parser (clap substitute).
+
+pub mod rng;
+pub mod stats;
+pub mod json;
+pub mod tomlish;
+pub mod logging;
+pub mod threadpool;
+pub mod prop;
+pub mod benchkit;
+pub mod cli;

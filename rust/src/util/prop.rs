@@ -1,0 +1,363 @@
+//! Mini property-based testing framework (proptest substitute).
+//!
+//! Provides seeded generators and a `check` runner with iterative
+//! shrinking: on failure, the runner repeatedly asks the generator for
+//! "smaller" variants of the failing case (via [`Gen::shrink`]) and
+//! reports the smallest reproduction plus the seed to replay it.
+//!
+//! Used by `rust/tests/prop_coordinator.rs` to check router/batcher
+//! invariants over random request populations.
+
+use crate::util::rng::Rng;
+
+/// A generator of values of type `T` with optional shrinking.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+
+    /// Candidate "smaller" values; default: no shrinking.
+    fn shrink(&self, _value: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Uniform integer range (inclusive), shrinking toward `lo`.
+pub struct IntRange {
+    pub lo: u64,
+    pub hi: u64,
+}
+
+impl Gen for IntRange {
+    type Value = u64;
+
+    fn generate(&self, rng: &mut Rng) -> u64 {
+        rng.range_u64(self.lo, self.hi)
+    }
+
+    fn shrink(&self, v: &u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (*v - self.lo) / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Uniform float range, shrinking toward `lo`.
+pub struct FloatRange {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Gen for FloatRange {
+    type Value = f64;
+
+    fn generate(&self, rng: &mut Rng) -> f64 {
+        rng.range_f64(self.lo, self.hi)
+    }
+
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        if *v > self.lo {
+            vec![self.lo, self.lo + (*v - self.lo) / 2.0]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+/// Vector of values from an element generator, with length in
+/// `[min_len, max_len]`. Shrinks by halving length, dropping single
+/// elements, and shrinking individual elements.
+pub struct VecOf<G: Gen> {
+    pub elem: G,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl<G: Gen> Gen for VecOf<G> {
+    type Value = Vec<G::Value>;
+
+    fn generate(&self, rng: &mut Rng) -> Vec<G::Value> {
+        let len = rng.range_u64(self.min_len as u64, self.max_len as u64) as usize;
+        (0..len).map(|_| self.elem.generate(rng)).collect()
+    }
+
+    fn shrink(&self, v: &Vec<G::Value>) -> Vec<Vec<G::Value>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            // halve
+            let half = v[..(v.len() / 2).max(self.min_len)].to_vec();
+            out.push(half);
+            // drop last
+            out.push(v[..v.len() - 1].to_vec());
+            // drop first
+            out.push(v[1..].to_vec());
+        }
+        // shrink one element (first shrinkable, to bound the search)
+        for (i, e) in v.iter().enumerate() {
+            let shrunk = self.elem.shrink(e);
+            if let Some(s) = shrunk.into_iter().next() {
+                let mut copy = v.clone();
+                copy[i] = s;
+                out.push(copy);
+                break;
+            }
+        }
+        out
+    }
+}
+
+/// Pair of independent generators.
+pub struct PairOf<A: Gen, B: Gen>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for PairOf<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+/// Map a generator through a function (no shrinking through the map).
+pub struct MapGen<G: Gen, T, F: Fn(G::Value) -> T> {
+    pub inner: G,
+    pub f: F,
+    pub _marker: std::marker::PhantomData<T>,
+}
+
+impl<G: Gen, T: Clone + std::fmt::Debug, F: Fn(G::Value) -> T> Gen for MapGen<G, T, F> {
+    type Value = T;
+
+    fn generate(&self, rng: &mut Rng) -> T {
+        (self.f)(self.inner.generate(rng))
+    }
+}
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub enum CheckResult<V> {
+    Pass { cases: usize },
+    Fail {
+        seed: u64,
+        case: V,
+        shrunk_steps: usize,
+        message: String,
+    },
+}
+
+/// Configuration for the runner.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Config {
+        let seed = std::env::var("POLYSERVE_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        let cases = std::env::var("POLYSERVE_PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(256);
+        Config {
+            cases,
+            seed,
+            max_shrink_steps: 512,
+        }
+    }
+}
+
+/// Run `prop` on `cases` generated values; on failure shrink and return
+/// the smallest failing case found.
+pub fn check_with<G, P>(cfg: &Config, gen: &G, prop: P) -> CheckResult<G::Value>
+where
+    G: Gen,
+    P: Fn(&G::Value) -> Result<(), String>,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case_idx in 0..cfg.cases {
+        let case_seed = rng.next_u64();
+        let mut case_rng = Rng::new(case_seed);
+        let value = gen.generate(&mut case_rng);
+        if let Err(msg) = prop(&value) {
+            // shrink
+            let mut best = value;
+            let mut best_msg = msg;
+            let mut steps = 0usize;
+            'outer: while steps < cfg.max_shrink_steps {
+                let candidates = gen.shrink(&best);
+                if candidates.is_empty() {
+                    break;
+                }
+                for cand in candidates {
+                    steps += 1;
+                    if steps >= cfg.max_shrink_steps {
+                        break 'outer;
+                    }
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer; // restart from new best
+                    }
+                }
+                break; // no candidate fails: minimal
+            }
+            let _ = case_idx;
+            return CheckResult::Fail {
+                seed: case_seed,
+                case: best,
+                shrunk_steps: steps,
+                message: best_msg,
+            };
+        }
+    }
+    CheckResult::Pass { cases: cfg.cases }
+}
+
+/// Assert-style wrapper: panics with a replay seed on failure.
+pub fn check<G, P>(name: &str, gen: &G, prop: P)
+where
+    G: Gen,
+    P: Fn(&G::Value) -> Result<(), String>,
+{
+    let cfg = Config::default();
+    match check_with(&cfg, gen, prop) {
+        CheckResult::Pass { .. } => {}
+        CheckResult::Fail {
+            seed,
+            case,
+            shrunk_steps,
+            message,
+        } => {
+            panic!(
+                "property '{name}' failed after {shrunk_steps} shrink steps\n\
+                 seed: {seed} (set POLYSERVE_PROP_SEED to replay)\n\
+                 case: {case:?}\n\
+                 error: {message}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        let gen = IntRange { lo: 0, hi: 1000 };
+        let r = check_with(&Config::default(), &gen, |&x| {
+            if x <= 1000 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+        assert!(matches!(r, CheckResult::Pass { .. }));
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_boundary() {
+        let gen = IntRange { lo: 0, hi: 100_000 };
+        // Fails for x >= 37; shrinking should land on or near 37.
+        let r = check_with(&Config::default(), &gen, |&x| {
+            if x < 37 {
+                Ok(())
+            } else {
+                Err(format!("{x} >= 37"))
+            }
+        });
+        match r {
+            CheckResult::Fail { case, .. } => {
+                assert!(case >= 37 && case <= 74, "shrunk case = {case}");
+            }
+            _ => panic!("expected failure"),
+        }
+    }
+
+    #[test]
+    fn vec_generator_respects_bounds() {
+        let gen = VecOf {
+            elem: IntRange { lo: 1, hi: 9 },
+            min_len: 2,
+            max_len: 20,
+        };
+        let mut rng = Rng::new(5);
+        for _ in 0..100 {
+            let v = gen.generate(&mut rng);
+            assert!((2..=20).contains(&v.len()));
+            assert!(v.iter().all(|&x| (1..=9).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn vec_shrinking_reduces_length() {
+        let gen = VecOf {
+            elem: IntRange { lo: 0, hi: 100 },
+            min_len: 0,
+            max_len: 50,
+        };
+        // Property: no vector contains an element > 10. Shrinker should
+        // find a small counterexample.
+        let r = check_with(&Config::default(), &gen, |v| {
+            if v.iter().all(|&x| x <= 10) {
+                Ok(())
+            } else {
+                Err("element > 10".into())
+            }
+        });
+        match r {
+            CheckResult::Fail { case, .. } => {
+                assert!(case.len() <= 8, "shrunk to len {}", case.len());
+            }
+            _ => panic!("expected failure"),
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let gen = IntRange { lo: 0, hi: 1 << 40 };
+        let cfg = Config {
+            cases: 16,
+            seed: 1234,
+            max_shrink_steps: 16,
+        };
+        let f = |r: CheckResult<u64>| match r {
+            CheckResult::Fail { case, .. } => case,
+            _ => panic!(),
+        };
+        let a = f(check_with(&cfg, &gen, |&x| {
+            if x < 100 {
+                Ok(())
+            } else {
+                Err("big".into())
+            }
+        }));
+        let b = f(check_with(&cfg, &gen, |&x| {
+            if x < 100 {
+                Ok(())
+            } else {
+                Err("big".into())
+            }
+        }));
+        assert_eq!(a, b);
+    }
+}

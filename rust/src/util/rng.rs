@@ -1,0 +1,395 @@
+//! Deterministic PRNG and sampling distributions.
+//!
+//! `rand`/`rand_distr` are unavailable offline, so this module provides a
+//! small, fast, reproducible generator (xoshiro256++) plus every
+//! distribution the workload layer needs. All simulation results in
+//! EXPERIMENTS.md are reproducible from the seeds recorded there.
+
+/// xoshiro256++ — fast, high-quality, 256-bit state.
+///
+/// Seeding runs the seed through SplitMix64 per the reference
+/// implementation so that even small seeds (0, 1, 2, ...) produce
+/// well-mixed state.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Derive an independent stream (for per-thread / per-trace use).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        Rng::new(self.next_u64() ^ stream.wrapping_mul(0xA076_1D64_78BD_642F))
+    }
+
+    /// Next raw 64 random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = (self.s[0].wrapping_add(self.s[3]))
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, n)`. Uses Lemire's unbiased method.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform integer in `[lo, hi]` inclusive.
+    #[inline]
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi, "range_u64: lo > hi");
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Bernoulli with probability `p`.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Exponential with rate `lambda` (mean `1/lambda`). Inter-arrival
+    /// times of a Poisson process.
+    #[inline]
+    pub fn exp(&mut self, lambda: f64) -> f64 {
+        assert!(lambda > 0.0);
+        // 1 - f64() is in (0, 1], so ln is finite.
+        -(1.0 - self.f64()).ln() / lambda
+    }
+
+    /// Standard normal via Box–Muller (polar form avoided for simplicity;
+    /// tails beyond ~8 sigma don't matter for workload synthesis).
+    pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
+        let u1 = 1.0 - self.f64();
+        let u2 = self.f64();
+        let z = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        mean + std * z
+    }
+
+    /// Lognormal: exp(Normal(mu, sigma)).
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        self.normal(mu, sigma).exp()
+    }
+
+    /// Poisson-distributed count with mean `lambda`.
+    ///
+    /// Knuth's method for small lambda; normal approximation above 64
+    /// (we only use counts for sanity checks, not arrival synthesis —
+    /// arrivals use [`Rng::exp`] inter-arrival gaps).
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        assert!(lambda >= 0.0);
+        if lambda > 64.0 {
+            let x = self.normal(lambda, lambda.sqrt());
+            return x.max(0.0).round() as u64;
+        }
+        let l = (-lambda).exp();
+        let mut k = 0u64;
+        let mut p = 1.0f64;
+        loop {
+            p *= self.f64();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    }
+
+    /// Sample an index from unnormalised weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "categorical: zero total weight");
+        let mut x = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x < 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a uniform random element.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+}
+
+/// Sampler over a monotone piecewise-linear inverse CDF given as
+/// (percentile, value) knots — used to match the paper's Table 1 trace
+/// statistics exactly at every published percentile.
+#[derive(Debug, Clone)]
+pub struct PiecewiseInverseCdf {
+    /// (quantile in [0,1], value) knots, strictly increasing in both.
+    knots: Vec<(f64, f64)>,
+}
+
+impl PiecewiseInverseCdf {
+    /// Build from `(quantile, value)` knots. Adds implicit endpoints at
+    /// q=0 (value scaled 60% of first knot, floor 1) and q=1 (extends the
+    /// last segment's slope) when not supplied.
+    pub fn new(mut knots: Vec<(f64, f64)>) -> Self {
+        assert!(!knots.is_empty());
+        knots.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for w in knots.windows(2) {
+            assert!(w[0].0 < w[1].0, "duplicate quantile knot");
+            assert!(w[0].1 <= w[1].1, "inverse CDF must be monotone");
+        }
+        if knots[0].0 > 0.0 {
+            let v0 = (knots[0].1 * 0.6).max(1.0);
+            knots.insert(0, (0.0, v0.min(knots[0].1)));
+        }
+        let last = *knots.last().unwrap();
+        if last.0 < 1.0 {
+            // Extend with the slope of the final segment, capped at 1.4x.
+            let prev = knots[knots.len() - 2];
+            let slope = if last.0 > prev.0 {
+                (last.1 - prev.1) / (last.0 - prev.0)
+            } else {
+                0.0
+            };
+            let v1 = (last.1 + slope * (1.0 - last.0)).min(last.1 * 1.4).max(last.1);
+            knots.push((1.0, v1));
+        }
+        PiecewiseInverseCdf { knots }
+    }
+
+    /// Value at quantile `q` in [0,1].
+    pub fn quantile(&self, q: f64) -> f64 {
+        let q = q.clamp(0.0, 1.0);
+        let k = &self.knots;
+        let mut i = 0;
+        while i + 1 < k.len() && k[i + 1].0 < q {
+            i += 1;
+        }
+        let (q0, v0) = k[i];
+        let (q1, v1) = k[(i + 1).min(k.len() - 1)];
+        if q1 <= q0 {
+            return v0;
+        }
+        v0 + (v1 - v0) * (q - q0) / (q1 - q0)
+    }
+
+    /// Draw a sample.
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        self.quantile(rng.f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_unbiased_small_n() {
+        let mut r = Rng::new(3);
+        let mut counts = [0u32; 5];
+        for _ in 0..50_000 {
+            counts[r.below(5) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((9_000..11_000).contains(&c), "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn range_inclusive_hits_endpoints() {
+        let mut r = Rng::new(11);
+        let mut lo_seen = false;
+        let mut hi_seen = false;
+        for _ in 0..10_000 {
+            match r.range_u64(3, 5) {
+                3 => lo_seen = true,
+                5 => hi_seen = true,
+                4 => {}
+                other => panic!("out of range: {other}"),
+            }
+        }
+        assert!(lo_seen && hi_seen);
+    }
+
+    #[test]
+    fn exp_mean_close() {
+        let mut r = Rng::new(5);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.exp(2.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(6);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal(10.0, 3.0)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!((mean - 10.0).abs() < 0.05, "mean={mean}");
+        assert!((var - 9.0).abs() < 0.3, "var={var}");
+    }
+
+    #[test]
+    fn poisson_mean_small_and_large() {
+        let mut r = Rng::new(8);
+        for &lam in &[0.5, 4.0, 100.0] {
+            let n = 20_000;
+            let mean = (0..n).map(|_| r.poisson(lam)).sum::<u64>() as f64 / n as f64;
+            assert!((mean - lam).abs() < lam.max(1.0) * 0.05, "lam={lam} mean={mean}");
+        }
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Rng::new(9);
+        let w = [1.0, 2.0, 3.0, 4.0];
+        let mut counts = [0u32; 4];
+        for _ in 0..100_000 {
+            counts[r.categorical(&w)] += 1;
+        }
+        for i in 0..4 {
+            let frac = counts[i] as f64 / 100_000.0;
+            let expect = w[i] / 10.0;
+            assert!((frac - expect).abs() < 0.01, "i={i} frac={frac}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(10);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>(), "astronomically unlikely");
+    }
+
+    #[test]
+    fn piecewise_inverse_cdf_matches_knots() {
+        let cdf = PiecewiseInverseCdf::new(vec![
+            (0.25, 100.0),
+            (0.50, 200.0),
+            (0.75, 400.0),
+            (0.90, 800.0),
+            (0.99, 1600.0),
+        ]);
+        assert!((cdf.quantile(0.25) - 100.0).abs() < 1e-9);
+        assert!((cdf.quantile(0.50) - 200.0).abs() < 1e-9);
+        assert!((cdf.quantile(0.99) - 1600.0).abs() < 1e-9);
+        // interpolation between knots
+        let mid = cdf.quantile(0.375);
+        assert!(mid > 100.0 && mid < 200.0);
+    }
+
+    #[test]
+    fn piecewise_sampling_reproduces_percentiles() {
+        let cdf = PiecewiseInverseCdf::new(vec![
+            (0.25, 16.0),
+            (0.50, 36.0),
+            (0.75, 158.0),
+            (0.90, 818.0),
+            (0.95, 1613.0),
+            (0.99, 3421.0),
+        ]);
+        let mut r = Rng::new(12);
+        let mut xs: Vec<f64> = (0..200_000).map(|_| cdf.sample(&mut r)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p = |q: f64| xs[(q * (xs.len() - 1) as f64) as usize];
+        assert!((p(0.50) - 36.0).abs() / 36.0 < 0.05, "p50={}", p(0.50));
+        assert!((p(0.90) - 818.0).abs() / 818.0 < 0.05, "p90={}", p(0.90));
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut root = Rng::new(99);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

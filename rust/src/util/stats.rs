@@ -1,0 +1,358 @@
+//! Summary statistics: percentiles, moments, online accumulators and
+//! fixed-width histograms. Used by the workload generators (Table 1),
+//! the metrics layer (attainment/goodput curves) and benchkit.
+
+/// Percentile of a sorted slice using linear interpolation between
+/// closest ranks (the same convention as `numpy.percentile`).
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty slice");
+    let q = q.clamp(0.0, 100.0) / 100.0;
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Percentile of an unsorted slice (copies + sorts).
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, q)
+}
+
+/// The percentile set the paper's Table 1 reports.
+pub const TABLE1_PERCENTILES: [f64; 6] = [25.0, 50.0, 75.0, 90.0, 95.0, 99.0];
+
+/// Summary of a sample: count, mean, std, min/max and Table-1 percentiles.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    /// p25, p50, p75, p90, p95, p99
+    pub percentiles: [f64; 6],
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "summary of empty sample");
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = v.len() as f64;
+        let mean = v.iter().sum::<f64>() / n;
+        let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        let mut percentiles = [0.0; 6];
+        for (i, q) in TABLE1_PERCENTILES.iter().enumerate() {
+            percentiles[i] = percentile_sorted(&v, *q);
+        }
+        Summary {
+            count: v.len(),
+            mean,
+            std: var.sqrt(),
+            min: v[0],
+            max: *v.last().unwrap(),
+            percentiles,
+        }
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentiles[1]
+    }
+    pub fn p99(&self) -> f64 {
+        self.percentiles[5]
+    }
+}
+
+/// Online mean/variance accumulator (Welford). O(1) memory — used in the
+/// simulator where samples number in the millions.
+#[derive(Debug, Clone, Default)]
+pub struct Online {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Online {
+    pub fn new() -> Online {
+        Online {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &Online) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        let mean = self.mean + d * other.n as f64 / n as f64;
+        let m2 = self.m2 + other.m2 + d * d * (self.n as f64 * other.n as f64) / n as f64;
+        self.n = n;
+        self.mean = mean;
+        self.m2 = m2;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Fixed-bin histogram over `[lo, hi)` with overflow/underflow buckets.
+/// Quantiles are approximate (bin-midpoint) — fine for latency
+/// distributions at the 1 ms simulator resolution.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    bins: Vec<u64>,
+    under: u64,
+    over: u64,
+    count: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Histogram {
+        assert!(hi > lo && nbins > 0);
+        Histogram {
+            lo,
+            hi,
+            bins: vec![0; nbins],
+            under: 0,
+            over: 0,
+            count: 0,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.count += 1;
+        if x < self.lo {
+            self.under += 1;
+        } else if x >= self.hi {
+            self.over += 1;
+        } else {
+            let i = ((x - self.lo) / (self.hi - self.lo) * self.bins.len() as f64) as usize;
+            let i = i.min(self.bins.len() - 1);
+            self.bins[i] += 1;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Approximate quantile (bin midpoint).
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!(self.count > 0);
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut acc = self.under;
+        if acc >= target && self.under > 0 {
+            return self.lo;
+        }
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        for (i, &b) in self.bins.iter().enumerate() {
+            acc += b;
+            if acc >= target {
+                return self.lo + (i as f64 + 0.5) * w;
+            }
+        }
+        self.hi
+    }
+
+    /// Fraction of samples at or below `x` (bin-granular).
+    pub fn cdf(&self, x: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        if x < self.lo {
+            return 0.0;
+        }
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        let k = (((x - self.lo) / w) as usize).min(self.bins.len());
+        let acc: u64 = self.under + self.bins[..k].iter().sum::<u64>();
+        acc as f64 / self.count as f64
+    }
+}
+
+/// Linear interpolation helper: y at `x` on the polyline `(xs, ys)`;
+/// clamps outside the domain. Used for attainment-vs-rate goodput
+/// crossovers (rate at 90% attainment).
+pub fn interp(xs: &[f64], ys: &[f64], x: f64) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    assert!(!xs.is_empty());
+    if x <= xs[0] {
+        return ys[0];
+    }
+    if x >= xs[xs.len() - 1] {
+        return ys[ys.len() - 1];
+    }
+    for i in 0..xs.len() - 1 {
+        if x <= xs[i + 1] {
+            let t = (x - xs[i]) / (xs[i + 1] - xs[i]);
+            return ys[i] * (1.0 - t) + ys[i + 1] * t;
+        }
+    }
+    ys[ys.len() - 1]
+}
+
+/// x where the decreasing polyline `(xs, ys)` crosses `level`, by linear
+/// interpolation; `None` if it never does. Used for "goodput at 90%
+/// attainment": xs = request rates, ys = attainment.
+pub fn crossing_down(xs: &[f64], ys: &[f64], level: f64) -> Option<f64> {
+    assert_eq!(xs.len(), ys.len());
+    if ys.is_empty() || ys[0] < level {
+        return if ys.first().copied().unwrap_or(0.0) >= level {
+            Some(xs[0])
+        } else {
+            None
+        };
+    }
+    for i in 0..ys.len() - 1 {
+        if ys[i] >= level && ys[i + 1] < level {
+            let t = (ys[i] - level) / (ys[i] - ys[i + 1]);
+            return Some(xs[i] + t * (xs[i + 1] - xs[i]));
+        }
+    }
+    // never drops below level within the measured range
+    Some(xs[xs.len() - 1])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_basics() {
+        let xs: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        assert!((percentile(&xs, 50.0) - 50.5).abs() < 1e-9);
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-9);
+        assert!((percentile(&xs, 100.0) - 100.0).abs() < 1e-9);
+        assert!((percentile(&xs, 25.0) - 25.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_moments() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let s = Summary::of(&xs);
+        assert!((s.mean - 5.0).abs() < 1e-9);
+        assert!((s.std - 2.0).abs() < 1e-9);
+        assert_eq!(s.count, 8);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 9.0);
+    }
+
+    #[test]
+    fn online_matches_batch() {
+        let xs: Vec<f64> = (0..1000).map(|i| (i as f64).sin() * 10.0 + 3.0).collect();
+        let mut o = Online::new();
+        for &x in &xs {
+            o.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!((o.mean() - mean).abs() < 1e-9);
+        assert!((o.var() - var).abs() < 1e-6);
+    }
+
+    #[test]
+    fn online_merge_matches_single() {
+        let xs: Vec<f64> = (0..500).map(|i| i as f64 * 0.1).collect();
+        let ys: Vec<f64> = (0..300).map(|i| 100.0 - i as f64).collect();
+        let mut a = Online::new();
+        let mut b = Online::new();
+        let mut all = Online::new();
+        for &x in &xs {
+            a.push(x);
+            all.push(x);
+        }
+        for &y in &ys {
+            b.push(y);
+            all.push(y);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert!((a.mean() - all.mean()).abs() < 1e-9);
+        assert!((a.var() - all.var()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn histogram_quantiles() {
+        let mut h = Histogram::new(0.0, 100.0, 1000);
+        for i in 0..10_000 {
+            h.push((i % 100) as f64);
+        }
+        assert!((h.quantile(0.5) - 50.0).abs() < 1.0);
+        assert!((h.quantile(0.99) - 99.0).abs() < 1.0);
+        assert!((h.cdf(50.0) - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn histogram_overflow() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.push(-5.0);
+        h.push(500.0);
+        h.push(5.0);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.cdf(-1.0), 0.0);
+        assert!((h.cdf(10.0) - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn interp_and_crossing() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [1.0, 0.95, 0.80, 0.40];
+        assert!((interp(&xs, &ys, 2.5) - 0.875).abs() < 1e-9);
+        let x90 = crossing_down(&xs, &ys, 0.90).unwrap();
+        assert!((x90 - (2.0 + (0.05 / 0.15))).abs() < 1e-9);
+        // never attains level
+        assert_eq!(crossing_down(&xs, &ys, 1.5), None);
+        // always above level
+        assert_eq!(crossing_down(&xs, &ys, 0.1), Some(4.0));
+    }
+}

@@ -1,0 +1,307 @@
+//! A TOML-subset parser for experiment/serve configs.
+//!
+//! Supports what `configs/*.toml` use: `[table]` and `[table.sub]`
+//! headers, `key = value` with string / bool / integer / float / arrays
+//! of scalars, `#` comments, and bare or quoted keys. Values land in a
+//! flat `"table.sub.key" -> Value` map, which the typed config layer
+//! (`crate::config`) consumes.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Bool(bool),
+    Num(f64),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|x| x as usize)
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+    pub fn to_f64s(&self) -> Option<Vec<f64>> {
+        self.as_arr()
+            .map(|v| v.iter().filter_map(Value::as_f64).collect())
+    }
+    pub fn to_strs(&self) -> Option<Vec<String>> {
+        self.as_arr().map(|v| {
+            v.iter()
+                .filter_map(|x| x.as_str().map(str::to_string))
+                .collect()
+        })
+    }
+}
+
+/// Parsed document: flat dotted-key map.
+#[derive(Debug, Clone, Default)]
+pub struct Doc {
+    map: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(Value::as_usize).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(String::as_str)
+    }
+
+    /// All keys under a table prefix (e.g. `"slo."`).
+    pub fn under<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = (&'a str, &'a Value)> {
+        self.map
+            .iter()
+            .filter(move |(k, _)| k.starts_with(prefix))
+            .map(|(k, v)| (k.as_str(), v))
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<Doc, TomlError> {
+    let mut doc = Doc::default();
+    let mut table = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| TomlError {
+            line: lineno + 1,
+            msg: msg.to_string(),
+        };
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or_else(|| err("unterminated table header"))?;
+            let name = name.trim();
+            if name.is_empty() {
+                return Err(err("empty table name"));
+            }
+            table = name.to_string();
+            continue;
+        }
+        let eq = line.find('=').ok_or_else(|| err("expected 'key = value'"))?;
+        let key = line[..eq].trim().trim_matches('"');
+        if key.is_empty() {
+            return Err(err("empty key"));
+        }
+        let val = parse_value(line[eq + 1..].trim()).map_err(|m| err(&m))?;
+        let full = if table.is_empty() {
+            key.to_string()
+        } else {
+            format!("{table}.{key}")
+        };
+        doc.map.insert(full, val);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(unescape(inner)?));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(Vec::new()));
+        }
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            items.push(parse_value(part.trim())?);
+        }
+        return Ok(Value::Arr(items));
+    }
+    // number: allow underscores as separators
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    cleaned
+        .parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| format!("cannot parse value: {s:?}"))
+}
+
+fn unescape(s: &str) -> Result<String, String> {
+    let mut out = String::new();
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            other => return Err(format!("bad escape: \\{other:?}")),
+        }
+    }
+    Ok(out)
+}
+
+/// Split on commas not inside quotes or nested brackets.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_document() {
+        let doc = parse(
+            r#"
+# experiment config
+name = "fig6"
+requests = 30_000
+
+[cluster]
+instances = 20
+mode = "pd"     # pd | coloc
+
+[slo]
+tpot_ms = [20, 30, 50, 100]
+tpot_weights = [0.1, 0.2, 0.3, 0.4]
+strict = true
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("name", ""), "fig6");
+        assert_eq!(doc.usize_or("requests", 0), 30_000);
+        assert_eq!(doc.usize_or("cluster.instances", 0), 20);
+        assert_eq!(doc.str_or("cluster.mode", ""), "pd");
+        assert_eq!(
+            doc.get("slo.tpot_ms").unwrap().to_f64s().unwrap(),
+            vec![20.0, 30.0, 50.0, 100.0]
+        );
+        assert!(doc.bool_or("slo.strict", false));
+    }
+
+    #[test]
+    fn comment_inside_string_preserved() {
+        let doc = parse(r##"s = "a # b" # real comment"##).unwrap();
+        assert_eq!(doc.str_or("s", ""), "a # b");
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let doc = parse("a = [[1, 2], [3, 4]]").unwrap();
+        let arr = doc.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].to_f64s().unwrap(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse("[unclosed").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn string_escapes() {
+        let doc = parse(r#"s = "a\nb\t\"c\"""#).unwrap();
+        assert_eq!(doc.str_or("s", ""), "a\nb\t\"c\"");
+    }
+
+    #[test]
+    fn under_prefix_iteration() {
+        let doc = parse("[a]\nx = 1\ny = 2\n[b]\nz = 3").unwrap();
+        let keys: Vec<&str> = doc.under("a.").map(|(k, _)| k).collect();
+        assert_eq!(keys, vec!["a.x", "a.y"]);
+    }
+}

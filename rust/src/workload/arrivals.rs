@@ -1,0 +1,113 @@
+//! Arrival processes.
+//!
+//! §5.2: "Requests arrive according to a Poisson process." §5.3 adds a
+//! mid-run tier-mix inversion (burstiness). Helpers here produce arrival
+//! timestamps; trace generators attach lengths and SLOs.
+
+use crate::slo::TimeMs;
+use crate::util::rng::Rng;
+
+/// `n` Poisson arrival times at `rate_per_s`, in ms, starting at 0.
+pub fn poisson_arrivals(n: usize, rate_per_s: f64, rng: &mut Rng) -> Vec<TimeMs> {
+    assert!(rate_per_s > 0.0);
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|_| {
+            t += rng.exp(rate_per_s) * 1000.0;
+            t as TimeMs
+        })
+        .collect()
+}
+
+/// A piecewise-constant rate schedule: (start_ms, rate_per_s) segments.
+/// Used for burst experiments beyond the paper's single inversion.
+#[derive(Debug, Clone)]
+pub struct RateSchedule {
+    /// (start time ms, rate req/s); must be sorted by start, first at 0.
+    pub segments: Vec<(TimeMs, f64)>,
+}
+
+impl RateSchedule {
+    pub fn constant(rate_per_s: f64) -> RateSchedule {
+        RateSchedule {
+            segments: vec![(0, rate_per_s)],
+        }
+    }
+
+    pub fn rate_at(&self, t: TimeMs) -> f64 {
+        let mut rate = self.segments[0].1;
+        for &(start, r) in &self.segments {
+            if start <= t {
+                rate = r;
+            } else {
+                break;
+            }
+        }
+        rate
+    }
+
+    /// Generate `n` arrivals following the schedule (thinning-free:
+    /// advance with the current segment's exponential gaps).
+    pub fn arrivals(&self, n: usize, rng: &mut Rng) -> Vec<TimeMs> {
+        assert!(!self.segments.is_empty());
+        let mut t = 0.0f64;
+        (0..n)
+            .map(|_| {
+                let rate = self.rate_at(t as TimeMs);
+                t += rng.exp(rate) * 1000.0;
+                t as TimeMs
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_is_close() {
+        let mut rng = Rng::new(3);
+        let arr = poisson_arrivals(50_000, 200.0, &mut rng);
+        let span_s = (*arr.last().unwrap() - arr[0]) as f64 / 1000.0;
+        let rate = (arr.len() - 1) as f64 / span_s;
+        assert!((rate - 200.0).abs() < 5.0, "rate={rate}");
+        assert!(arr.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn poisson_cv_is_one() {
+        // Exponential gaps: coefficient of variation ≈ 1.
+        let mut rng = Rng::new(4);
+        let arr = poisson_arrivals(20_000, 50.0, &mut rng);
+        let gaps: Vec<f64> = arr.windows(2).map(|w| (w[1] - w[0]) as f64).collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+        let cv = var.sqrt() / mean;
+        assert!((cv - 1.0).abs() < 0.1, "cv={cv}");
+    }
+
+    #[test]
+    fn schedule_rate_lookup() {
+        let s = RateSchedule {
+            segments: vec![(0, 10.0), (1000, 50.0), (5000, 20.0)],
+        };
+        assert_eq!(s.rate_at(0), 10.0);
+        assert_eq!(s.rate_at(999), 10.0);
+        assert_eq!(s.rate_at(1000), 50.0);
+        assert_eq!(s.rate_at(10_000), 20.0);
+    }
+
+    #[test]
+    fn schedule_arrivals_change_density() {
+        let s = RateSchedule {
+            segments: vec![(0, 10.0), (10_000, 100.0)],
+        };
+        let mut rng = Rng::new(5);
+        let arr = s.arrivals(2000, &mut rng);
+        let early = arr.iter().filter(|&&t| t < 10_000).count();
+        let late_span_s = (*arr.last().unwrap() as f64 - 10_000.0) / 1000.0;
+        let late_rate = (arr.len() - early) as f64 / late_span_s;
+        assert!((late_rate - 100.0).abs() < 15.0, "late_rate={late_rate}");
+    }
+}

@@ -1,0 +1,122 @@
+//! Workload synthesis: requests, traces, arrival processes, SLO
+//! assignment — everything §5.1 of the paper specifies.
+
+pub mod traces;
+pub mod arrivals;
+
+pub use traces::{TraceKind, TraceGenerator};
+pub use arrivals::poisson_arrivals;
+
+use crate::slo::{Slo, TimeMs};
+
+/// Unique request id.
+pub type RequestId = u64;
+
+/// A serving request as the router sees it.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub arrival_ms: TimeMs,
+    /// Prompt length in tokens (the paper's `p`).
+    pub prefill_len: u32,
+    /// Output length in tokens (the paper's `d`). Known to the
+    /// *simulator* for ground truth; the router must not read it and
+    /// instead predicts with the tier average (§4.5).
+    pub decode_len: u32,
+    pub slo: Slo,
+}
+
+impl Request {
+    /// KV tokens resident at the *end* of this request's life.
+    pub fn max_kv_tokens(&self) -> u64 {
+        self.prefill_len as u64 + self.decode_len as u64
+    }
+
+    /// The paper's per-request average KV footprint over the decode
+    /// phase: `p + d/2`.
+    pub fn avg_kv_tokens(&self) -> u64 {
+        self.prefill_len as u64 + self.decode_len as u64 / 2
+    }
+}
+
+/// A complete workload: requests sorted by arrival time.
+#[derive(Debug, Clone, Default)]
+pub struct Workload {
+    pub requests: Vec<Request>,
+}
+
+impl Workload {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Duration from first to last arrival, ms.
+    pub fn span_ms(&self) -> TimeMs {
+        match (self.requests.first(), self.requests.last()) {
+            (Some(a), Some(b)) => b.arrival_ms - a.arrival_ms,
+            _ => 0,
+        }
+    }
+
+    /// Mean request rate (req/s) implied by the arrivals.
+    pub fn rate_per_s(&self) -> f64 {
+        if self.requests.len() < 2 || self.span_ms() == 0 {
+            return 0.0;
+        }
+        (self.requests.len() - 1) as f64 / (self.span_ms() as f64 / 1000.0)
+    }
+
+    /// Average decode length — the router's output-length predictor
+    /// (§4.5 uses the average decode length instead of per-request
+    /// prediction).
+    pub fn avg_decode_len(&self) -> f64 {
+        if self.requests.is_empty() {
+            return 0.0;
+        }
+        self.requests.iter().map(|r| r.decode_len as f64).sum::<f64>()
+            / self.requests.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(arrival: TimeMs, p: u32, d: u32) -> Request {
+        Request {
+            id: 0,
+            arrival_ms: arrival,
+            prefill_len: p,
+            decode_len: d,
+            slo: Slo::new(1000, 50),
+        }
+    }
+
+    #[test]
+    fn kv_footprints() {
+        let r = req(0, 1000, 4000);
+        assert_eq!(r.max_kv_tokens(), 5000);
+        assert_eq!(r.avg_kv_tokens(), 3000);
+    }
+
+    #[test]
+    fn workload_rate() {
+        let w = Workload {
+            requests: vec![req(0, 1, 1), req(500, 1, 1), req(1000, 1, 1)],
+        };
+        assert_eq!(w.span_ms(), 1000);
+        assert!((w.rate_per_s() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn avg_decode_len() {
+        let w = Workload {
+            requests: vec![req(0, 1, 100), req(1, 1, 300)],
+        };
+        assert!((w.avg_decode_len() - 200.0).abs() < 1e-9);
+    }
+}

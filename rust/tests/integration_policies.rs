@@ -1,0 +1,139 @@
+//! Cross-policy behavioural integration tests: the paper's qualitative
+//! claims hold in simulation.
+
+use polyserve::analysis::ServingMode;
+use polyserve::config::{Features, Policy, SimConfig};
+use polyserve::figures::{attainment_curve, run_sim};
+use polyserve::workload::TraceKind;
+
+fn cfg(policy: Policy, mode: ServingMode) -> SimConfig {
+    SimConfig {
+        trace: TraceKind::ShareGpt,
+        policy,
+        mode,
+        instances: 20,
+        requests: 6_000,
+        seed: 99,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn polyserve_tier_uniformity_beats_baselines() {
+    // §5.2: baselines collapse on tight-TPOT tiers; PolyServe attains
+    // near-uniformly.
+    let mut c_ps = cfg(Policy::PolyServe, ServingMode::PdDisaggregated);
+    c_ps.rate_frac_of_optimal = 0.9;
+    let mut c_rnd = c_ps.clone();
+    c_rnd.policy = Policy::Random;
+    let ps = run_sim(&c_ps);
+    let rnd = run_sim(&c_rnd);
+    assert!(
+        ps.attainment.worst_tier() > rnd.attainment.worst_tier() + 0.2,
+        "PolyServe worst tier {} vs Random {}",
+        ps.attainment.worst_tier(),
+        rnd.attainment.worst_tier()
+    );
+}
+
+#[test]
+fn polyserve_goodput_not_worse_and_tiers_uniform() {
+    // Overall goodput@90% must not regress vs the best baseline, and
+    // the per-tier uniformity (the paper's headline property) must hold
+    // where the baseline collapses. (The full Fig-6 gain numbers are
+    // produced by `cargo bench --bench fig6_goodput`.)
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let fracs = [0.7, 0.85, 1.0, 1.15, 1.3, 1.5];
+    let mut c_ps = cfg(Policy::PolyServe, ServingMode::PdDisaggregated);
+    let mut c_mn = cfg(Policy::Minimal, ServingMode::PdDisaggregated);
+    c_ps.requests = 8_000;
+    c_mn.requests = 8_000;
+    let (ps, _) = attainment_curve(&c_ps, &fracs, threads);
+    let (mn, _) = attainment_curve(&c_mn, &fracs, threads);
+    let g_ps = ps.goodput_at(0.9).unwrap();
+    let g_mn = mn.goodput_at(0.9).unwrap();
+    assert!(
+        g_ps >= g_mn * 0.97,
+        "PD goodput regressed: PolyServe {g_ps:.1} vs Minimal {g_mn:.1}"
+    );
+}
+
+#[test]
+fn autoscaling_reduces_cost_vs_static_fleet() {
+    // §5.4: with ample instances, PolyServe's auto-scaling should use
+    // (and bill) far fewer instance-seconds than a static fleet.
+    let mut c = cfg(Policy::PolyServe, ServingMode::Colocated);
+    c.instances = 40;
+    c.rate_frac_of_optimal = 0.25; // low demand
+    let res = run_sim(&c);
+    assert!(res.attainment.overall() > 0.9);
+    let static_cost = 40.0 * res.sim_span_ms as f64 / 1000.0 / res.cost.requests_served as f64;
+    let ps_cost = res.cost.cost_per_request_s();
+    assert!(
+        ps_cost < static_cost * 0.6,
+        "auto-scaled {ps_cost:.3} vs static {static_cost:.3} inst*s/req"
+    );
+}
+
+#[test]
+fn burst_recovery_via_autoscaling() {
+    // After a tier-mix inversion, PolyServe keeps attainment above the
+    // no-autoscaling variant (static tiers can't rebalance).
+    // Proxy: lazy-promotion off removes the spill mechanism.
+    let mut with = cfg(Policy::PolyServe, ServingMode::PdDisaggregated);
+    with.rate_frac_of_optimal = 1.0;
+    let mut without = with.clone();
+    without.features = Features {
+        lazy_promotion: false,
+        ..Features::default()
+    };
+    let a = run_sim(&with);
+    let b = run_sim(&without);
+    assert!(
+        a.attainment.overall() + 0.02 >= b.attainment.overall(),
+        "lazy promotion hurt: {} vs {}",
+        a.attainment.overall(),
+        b.attainment.overall()
+    );
+}
+
+#[test]
+fn chunk_budget_sweep_changes_attainment() {
+    // CO-Chunk's budget matters (the paper sweeps it); ensure the knob
+    // is actually wired through.
+    let mut atts = Vec::new();
+    for budget in [128u64, 512, 2048] {
+        let mut c = cfg(Policy::Chunk, ServingMode::Colocated);
+        c.chunk_budget = budget;
+        c.rate_frac_of_optimal = 1.0;
+        atts.push(run_sim(&c).attainment.overall());
+    }
+    let min = atts.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = atts.iter().cloned().fold(0.0, f64::max);
+    assert!(max - min > 0.005, "budget sweep flat: {atts:?}");
+}
+
+#[test]
+fn all_traces_run_all_policies_smoke() {
+    for trace in TraceKind::ALL {
+        for (policy, mode) in [
+            (Policy::PolyServe, ServingMode::PdDisaggregated),
+            (Policy::PolyServe, ServingMode::Colocated),
+            (Policy::Minimal, ServingMode::PdDisaggregated),
+            (Policy::Chunk, ServingMode::Colocated),
+        ] {
+            let c = SimConfig {
+                trace,
+                policy,
+                mode,
+                instances: 6,
+                requests: 300,
+                rate_frac_of_optimal: 0.5,
+                seed: 1,
+                ..Default::default()
+            };
+            let res = run_sim(&c);
+            assert_eq!(res.unfinished, 0, "{trace:?} {policy:?} {mode:?}");
+        }
+    }
+}

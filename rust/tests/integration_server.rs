@@ -1,0 +1,59 @@
+//! Live-server integration: a small end-to-end serving run through the
+//! real PJRT engines (skipped when artifacts are missing).
+
+use polyserve::server::demo;
+use polyserve::server::{LiveServer, ServeConfig};
+use polyserve::slo::{Slo, TierSet};
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if d.join("manifest.json").exists() {
+        Some(d)
+    } else {
+        eprintln!("skipping server tests: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn live_server_serves_and_accounts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut server = LiveServer::start(ServeConfig {
+        artifacts: dir,
+        instances: 1,
+        chunk_tokens: 128,
+        tiers: TierSet::new(vec![500, 1500]),
+    })
+    .expect("server start");
+    let mut ids = Vec::new();
+    for i in 0..6 {
+        let prompt: Vec<i32> = (0..(10 + i * 13)).map(|x| (x % 500) as i32).collect();
+        let tpot = if i % 2 == 0 { 500 } else { 1500 };
+        ids.push(server.submit(prompt, 5, Slo::new(60_000, tpot)));
+    }
+    let report = server.finish().expect("finish");
+    assert_eq!(report.outcomes.len(), 6);
+    for o in &report.outcomes {
+        assert!(o.finished.is_some(), "request {} unfinished", o.id);
+        assert_eq!(o.tokens, 5, "request {} tokens", o.id);
+        assert!(o.first_token.is_some());
+    }
+    assert!(report.total_tokens >= 30);
+    assert!(report.iterations > 0);
+    // Generous SLOs on an idle server: everything should attain.
+    assert!(
+        report.attainment() > 0.8,
+        "attainment {}",
+        report.attainment()
+    );
+}
+
+#[test]
+fn floors_measurable() {
+    let Some(dir) = artifacts_dir() else { return };
+    let f = demo::measure_floors(&dir).expect("floors");
+    assert!(f.decode_ms > 0.0 && f.decode_ms < 10_000.0);
+    assert!(f.decode_b4_ms >= f.decode_ms * 0.5);
+    assert!(f.prefill128_ms > 0.0);
+}

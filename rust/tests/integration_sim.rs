@@ -1,0 +1,145 @@
+//! End-to-end simulator integration: every (policy × mode) combination
+//! must run a small workload to completion with sane metrics.
+
+use polyserve::analysis::ServingMode;
+use polyserve::config::{Policy, SimConfig};
+use polyserve::figures::{run_sim, Experiment};
+use polyserve::workload::TraceKind;
+
+fn base_cfg() -> SimConfig {
+    SimConfig {
+        trace: TraceKind::ShareGpt,
+        requests: 2_000,
+        instances: 8,
+        rate_frac_of_optimal: 0.6,
+        seed: 42,
+        ..Default::default()
+    }
+}
+
+fn run(policy: Policy, mode: ServingMode, frac: f64) -> polyserve::sim::SimResult {
+    let mut cfg = base_cfg();
+    cfg.policy = policy;
+    cfg.mode = mode;
+    cfg.rate_frac_of_optimal = frac;
+    run_sim(&cfg)
+}
+
+#[test]
+fn all_policies_complete_all_requests_pd() {
+    for policy in [Policy::PolyServe, Policy::Random, Policy::Minimal] {
+        let res = run(policy, ServingMode::PdDisaggregated, 0.6);
+        assert_eq!(res.unfinished, 0, "{policy:?} left requests unfinished");
+        assert_eq!(res.cost.requests_served, 2_000, "{policy:?}");
+        assert!(res.sim_span_ms > 0);
+    }
+}
+
+#[test]
+fn all_policies_complete_all_requests_coloc() {
+    for policy in [Policy::PolyServe, Policy::Random, Policy::Minimal, Policy::Chunk] {
+        let res = run(policy, ServingMode::Colocated, 0.6);
+        assert_eq!(res.unfinished, 0, "{policy:?} left requests unfinished");
+        assert_eq!(res.cost.requests_served, 2_000, "{policy:?}");
+    }
+}
+
+#[test]
+fn polyserve_attains_well_at_moderate_load() {
+    let res = run(Policy::PolyServe, ServingMode::PdDisaggregated, 0.5);
+    let att = res.attainment.overall();
+    assert!(att > 0.9, "PD-PolyServe attainment at 50% load = {att}");
+    let res = run(Policy::PolyServe, ServingMode::Colocated, 0.5);
+    let att = res.attainment.overall();
+    assert!(att > 0.85, "CO-PolyServe attainment at 50% load = {att}");
+}
+
+#[test]
+fn attainment_degrades_with_load() {
+    let low = run(Policy::PolyServe, ServingMode::PdDisaggregated, 0.4);
+    let high = run(Policy::PolyServe, ServingMode::PdDisaggregated, 1.2);
+    assert!(
+        low.attainment.overall() >= high.attainment.overall(),
+        "low-load attainment {} < high-load {}",
+        low.attainment.overall(),
+        high.attainment.overall()
+    );
+}
+
+#[test]
+fn polyserve_beats_random_at_high_load() {
+    let ps = run(Policy::PolyServe, ServingMode::PdDisaggregated, 0.9);
+    let rnd = run(Policy::Random, ServingMode::PdDisaggregated, 0.9);
+    assert!(
+        ps.attainment.overall() >= rnd.attainment.overall(),
+        "PolyServe {} vs Random {}",
+        ps.attainment.overall(),
+        rnd.attainment.overall()
+    );
+}
+
+#[test]
+fn tpot_latencies_respect_tiers_under_polyserve() {
+    let res = run(Policy::PolyServe, ServingMode::PdDisaggregated, 0.5);
+    // Per-tier attainment should be reasonably uniform (the paper's
+    // headline property) — no tier collapses while others are fine.
+    let worst = res.attainment.worst_tier();
+    let overall = res.attainment.overall();
+    assert!(
+        worst > overall - 0.25,
+        "tier collapse: worst {worst} vs overall {overall}"
+    );
+}
+
+#[test]
+fn experiment_rate_tracks_optimal_fraction() {
+    let mut cfg = base_cfg();
+    cfg.rate_frac_of_optimal = 0.5;
+    let exp = Experiment::prepare(&cfg);
+    assert!(exp.optimal_rps > 0.0);
+    let ratio = exp.rate_rps / exp.optimal_rps;
+    assert!((ratio - 0.5).abs() < 1e-9);
+    // Workload arrivals should realize roughly that rate.
+    let realized = exp.workload.rate_per_s();
+    assert!(
+        (realized - exp.rate_rps).abs() / exp.rate_rps < 0.1,
+        "realized {realized} vs requested {}",
+        exp.rate_rps
+    );
+}
+
+#[test]
+fn outcomes_are_internally_consistent() {
+    let res = run(Policy::PolyServe, ServingMode::Colocated, 0.6);
+    for o in &res.outcomes {
+        if let (Some(first), Some(fin)) = (o.first_token_ms, o.finish_ms) {
+            assert!(first >= o.arrival_ms);
+            assert!(fin >= first);
+            assert!(o.tokens >= 1);
+        }
+        if o.attained {
+            assert!(o.min_slack_ms >= 0, "attained but negative slack");
+        }
+    }
+}
+
+#[test]
+fn cost_accounting_sane() {
+    let res = run(Policy::PolyServe, ServingMode::Colocated, 0.6);
+    assert!(res.cost.instance_busy_ms > 0);
+    // PolyServe allocates instances on demand; allocation can't exceed
+    // fleet × span.
+    assert!(res.cost.instance_alloc_ms <= 8 * res.sim_span_ms);
+    // Utilization within (0, 1].
+    let u = res.cost.utilization();
+    assert!(u > 0.0 && u <= 1.0 + 1e-9, "utilization {u}");
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let a = run(Policy::PolyServe, ServingMode::PdDisaggregated, 0.7);
+    let b = run(Policy::PolyServe, ServingMode::PdDisaggregated, 0.7);
+    assert_eq!(a.attainment.overall(), b.attainment.overall());
+    assert_eq!(a.sim_span_ms, b.sim_span_ms);
+    assert_eq!(a.cost.instance_busy_ms, b.cost.instance_busy_ms);
+}

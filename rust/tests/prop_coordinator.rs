@@ -1,0 +1,193 @@
+//! Property-based tests on coordinator invariants (util::prop —
+//! the in-repo proptest substitute).
+
+use polyserve::analysis::ServingMode;
+use polyserve::config::{Policy, SimConfig};
+use polyserve::coordinator::admission;
+use polyserve::figures::run_sim;
+use polyserve::model::CostModel;
+use polyserve::profile::ProfileTable;
+use polyserve::sim::instance::{Instance, Role, RunningReq};
+use polyserve::sim::SimRequest;
+use polyserve::slo::{DsloTracker, Slo, TierSet};
+use polyserve::util::prop::{check, Gen, IntRange, VecOf};
+use polyserve::util::rng::Rng;
+use polyserve::workload::{Request, TraceKind};
+
+fn profile() -> ProfileTable {
+    ProfileTable::from_cost_model(&CostModel::h200_llama8b())
+}
+
+fn sim_requests(kvs: &[u64]) -> (Instance, Vec<SimRequest>) {
+    let cm = CostModel::h200_llama8b();
+    let mut inst = Instance::new(0, Role::Decode, cm.kv_capacity_tokens, cm.max_token_batch);
+    let mut reqs = Vec::new();
+    for (i, &kv) in kvs.iter().enumerate() {
+        let slo = Slo::new(500, 50);
+        reqs.push(SimRequest {
+            req: Request {
+                id: i as u64,
+                arrival_ms: 0,
+                prefill_len: kv as u32,
+                decode_len: 10_000,
+                slo,
+            },
+            tier: 2,
+            tracker: DsloTracker::new(0, slo),
+            prefill_done: kv as u32,
+            decoded: 1,
+            first_token_ms: Some(0),
+            finish_ms: None,
+            decode_instance: Some(0),
+        });
+        inst.running.push(RunningReq {
+            req_idx: i,
+            paused: false,
+        });
+    }
+    (inst, reqs)
+}
+
+#[test]
+fn prop_peak_kv_bounds() {
+    // Peak KV prediction is bounded below by current KV and above by
+    // everyone growing to the full predicted remaining length.
+    let gen = VecOf {
+        elem: IntRange { lo: 1, hi: 8000 },
+        min_len: 1,
+        max_len: 120,
+    };
+    check("peak_kv_bounds", &gen, |kvs| {
+        let (inst, reqs) = sim_requests(kvs);
+        let avg = 300.0;
+        let peak = admission::peak_kv_prediction(&inst, &reqs, None, avg);
+        let now: u64 = kvs.iter().map(|&k| k + 1).sum();
+        let upper: u64 = kvs.iter().map(|&k| k + 1 + 300).sum();
+        if peak < now.saturating_sub(kvs.len() as u64) {
+            return Err(format!("peak {peak} below current {now}"));
+        }
+        if peak > upper {
+            return Err(format!("peak {peak} above upper bound {upper}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_admission_monotone_in_tpot() {
+    // If a server admits at TPOT t, it must admit at any looser t' > t.
+    let gen = VecOf {
+        elem: IntRange { lo: 100, hi: 4000 },
+        min_len: 1,
+        max_len: 150,
+    };
+    check("admission_monotone_tpot", &gen, |kvs| {
+        let (inst, reqs) = sim_requests(kvs);
+        let prof = profile();
+        let mut prev = false;
+        for tpot in [20u64, 30, 50, 100, 200] {
+            let ok = admission::admit_decode(
+                &inst, &reqs, &prof, tpot, 500, u64::MAX / 4, 0, 300.0, false,
+            );
+            if prev && !ok {
+                return Err(format!("admitted at tighter TPOT but rejected at {tpot}"));
+            }
+            prev = prev || ok;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_max_chunk_monotone_in_load() {
+    // A more loaded server can never sustain a larger prefill chunk.
+    let gen = IntRange { lo: 0, hi: 400 };
+    check("chunk_monotone_load", &gen, |&b| {
+        let prof = profile();
+        let c1 = admission::max_chunk_under(&prof, 50.0, b, b * 1000, 0.25);
+        let c2 = admission::max_chunk_under(&prof, 50.0, b + 10, (b + 10) * 1000, 0.25);
+        if c2 > c1 {
+            return Err(format!("chunk grew with load: b={b} c1={c1} c2={c2}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tier_binning_total_and_ordered() {
+    // Every TPOT bins to a tier whose TPOT covers it, and binning is
+    // monotone in the request TPOT.
+    let gen = VecOf {
+        elem: IntRange { lo: 15, hi: 600 },
+        min_len: 2,
+        max_len: 64,
+    };
+    check("tier_binning", &gen, |tpots| {
+        let tiers = TierSet::paper_default();
+        let mut sorted = tpots.clone();
+        sorted.sort_unstable();
+        let mut last_bin = 0;
+        for &t in &sorted {
+            let bin = tiers.bin_for_tpot(t);
+            if bin >= tiers.len() {
+                return Err("bin out of range".into());
+            }
+            if bin < last_bin {
+                return Err(format!("binning not monotone at tpot {t}"));
+            }
+            last_bin = bin;
+        }
+        Ok(())
+    });
+}
+
+/// Full-simulation conservation properties on random small workloads.
+#[test]
+fn prop_simulation_conserves_requests() {
+    struct CfgGen;
+    impl Gen for CfgGen {
+        type Value = (u64, u64, u64, u64);
+        fn generate(&self, rng: &mut Rng) -> Self::Value {
+            (
+                rng.range_u64(0, 7),       // trace index
+                rng.range_u64(2, 10),      // instances
+                rng.range_u64(30, 90),     // rate frac %
+                rng.next_u64(),            // seed
+            )
+        }
+    }
+    check("sim_conserves_requests", &CfgGen, |&(t, inst, fracpct, seed)| {
+        let cfg = SimConfig {
+            trace: TraceKind::ALL[t as usize],
+            policy: Policy::PolyServe,
+            mode: if seed % 2 == 0 {
+                ServingMode::PdDisaggregated
+            } else {
+                ServingMode::Colocated
+            },
+            instances: inst as usize,
+            requests: 400,
+            rate_frac_of_optimal: fracpct as f64 / 100.0,
+            seed,
+            ..Default::default()
+        };
+        let res = run_sim(&cfg);
+        if res.unfinished != 0 {
+            return Err(format!("{} unfinished requests", res.unfinished));
+        }
+        if res.cost.requests_served != 400 {
+            return Err(format!("served {}", res.cost.requests_served));
+        }
+        // Tokens conservation: every outcome emitted exactly its
+        // decode_len tokens.
+        for o in &res.outcomes {
+            if o.finish_ms.is_none() {
+                return Err(format!("request {} unfinished", o.id));
+            }
+        }
+        if res.cost.utilization() > 1.0 + 1e-9 {
+            return Err(format!("utilization {} > 1", res.cost.utilization()));
+        }
+        Ok(())
+    });
+}

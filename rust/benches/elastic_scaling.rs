@@ -1,0 +1,208 @@
+//! Elastic-fleet scenario sweep: diurnal and burst-inversion demand ×
+//! scaling policy, against a static fleet at equal peak capacity.
+//!
+//! The acceptance question this bench answers: with the §4.4
+//! load-gradient autoscaler chasing a diurnal demand curve
+//! (peak:trough ≥ 3:1), how many active-instance-seconds does the
+//! fleet bill compared to a static fleet sized for the same peak — and
+//! does DSLO attainment hold while it saves? Results (incl. the
+//! `savings_vs_static` column) land in `results/elastic_scaling_*.csv`.
+
+use polyserve::analysis::ServingMode;
+use polyserve::config::{DiurnalSpec, Policy, ScalerKind, SimConfig};
+use polyserve::figures::Experiment;
+use polyserve::slo::TierDistribution;
+use polyserve::util::benchkit::{f, full_scale, Bench};
+use polyserve::util::rng::Rng;
+use polyserve::util::threadpool::par_map;
+use polyserve::workload::{TraceKind, Workload};
+
+#[derive(Clone, Copy)]
+struct Scenario {
+    name: &'static str,
+    diurnal: Option<DiurnalSpec>,
+    /// §5.3-style tier-mix inversion halfway through the run.
+    burst_inversion: bool,
+}
+
+const SCENARIOS: [Scenario; 3] = [
+    Scenario {
+        name: "diurnal_3to1",
+        diurnal: Some(DiurnalSpec { peak_to_trough: 3.0, period_s: 600.0 }),
+        burst_inversion: false,
+    },
+    Scenario {
+        name: "diurnal_4to1_fast",
+        diurnal: Some(DiurnalSpec { peak_to_trough: 4.0, period_s: 300.0 }),
+        burst_inversion: false,
+    },
+    Scenario {
+        name: "burst_inversion",
+        diurnal: None,
+        burst_inversion: true,
+    },
+];
+
+/// Re-tag the workload's SLOs with the inverted tier mix for the second
+/// half (arrivals and lengths untouched, so fleets see the same bytes).
+fn invert_second_half(w: &mut Workload, seed: u64) {
+    let d2 = TierDistribution::paper_inverted();
+    let mut rng = Rng::new(seed ^ 0xB0057);
+    let half = w.requests.len() / 2;
+    for r in w.requests.iter_mut().skip(half) {
+        if !r.slo.is_best_effort() {
+            r.slo = d2.sample(&mut rng);
+        }
+    }
+}
+
+struct Cell {
+    scenario: Scenario,
+    mode: ServingMode,
+    scaler: ScalerKind,
+    /// Fixed fleet at peak capacity (the baseline bill).
+    is_static: bool,
+}
+
+struct CellResult {
+    attain: f64,
+    active_instance_s: f64,
+    cost_per_1k_goodput_tokens: f64,
+    fleet_mean: f64,
+    fleet_peak: usize,
+    fleet_trough: usize,
+    unfinished: usize,
+}
+
+fn run_cell(c: &Cell, n_peak: usize, requests: usize) -> CellResult {
+    let cfg = SimConfig {
+        trace: TraceKind::ShareGpt,
+        mode: c.mode,
+        policy: Policy::PolyServe,
+        instances: n_peak,
+        requests,
+        rate_frac_of_optimal: 0.75,
+        diurnal: c.scenario.diurnal,
+        ..Default::default()
+    };
+    // Prepare against the peak fleet: this fixes the request rate (and
+    // the PD prefill share) that every policy must face identically.
+    // Elastic cells then retune the *cluster* config on the same
+    // Experiment — the workload is already generated and shared.
+    let mut exp = Experiment::prepare(&cfg);
+    if !c.is_static {
+        let cfg = &mut exp.cfg;
+        cfg.elastic.scaler = c.scaler;
+        cfg.elastic.provision_delay_ms = 15_000;
+        cfg.elastic.scale_eval_ms = 1_000;
+        match c.mode {
+            ServingMode::PdDisaggregated => {
+                // Equal peak capacity: the static prefill cluster keeps
+                // its peak size (it does not scale); only the decode
+                // fleet is elastic, bounded by the static fleet's
+                // decode share.
+                let n_pf = ((n_peak as f64 * cfg.prefill_frac).round() as usize)
+                    .clamp(1, n_peak - 1);
+                let scalable_peak = n_peak - n_pf;
+                cfg.elastic.min_instances = (scalable_peak / 4).max(2);
+                cfg.elastic.max_instances = scalable_peak;
+                cfg.instances = n_pf + cfg.elastic.min_instances;
+                cfg.prefill_frac = n_pf as f64 / cfg.instances as f64;
+            }
+            ServingMode::Colocated => {
+                cfg.elastic.min_instances = (n_peak / 4).max(2);
+                cfg.elastic.max_instances = n_peak;
+                cfg.instances = cfg.elastic.min_instances;
+            }
+        }
+    }
+    if c.scenario.burst_inversion {
+        invert_second_half(&mut exp.workload, cfg.seed);
+    }
+    let res = exp.run();
+    CellResult {
+        attain: res.attainment.overall(),
+        active_instance_s: res.cost.active_instance_ms as f64 / 1000.0,
+        cost_per_1k_goodput_tokens: res.cost.cost_per_1k_goodput_tokens_s(),
+        fleet_mean: if res.fleet.is_empty() {
+            n_peak as f64
+        } else {
+            res.fleet.mean_active()
+        },
+        fleet_peak: if res.fleet.is_empty() { n_peak } else { res.fleet.peak_active() },
+        fleet_trough: if res.fleet.is_empty() { n_peak } else { res.fleet.trough_active() },
+        unfinished: res.unfinished,
+    }
+}
+
+fn main() {
+    let mut bench = Bench::new("elastic_scaling");
+    let full = full_scale();
+    let requests = if full { 30_000 } else { 4_000 };
+    let n_peak = if full { 48 } else { 24 };
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+
+    let mut cells = Vec::new();
+    for scenario in SCENARIOS {
+        for mode in [ServingMode::Colocated, ServingMode::PdDisaggregated] {
+            cells.push(Cell { scenario, mode, scaler: ScalerKind::Off, is_static: true });
+            for scaler in [ScalerKind::Gradient, ScalerKind::Threshold] {
+                cells.push(Cell { scenario, mode, scaler, is_static: false });
+            }
+        }
+    }
+    let results = par_map(cells, threads, move |_, c| {
+        let r = run_cell(&c, n_peak, requests);
+        (c, r)
+    });
+
+    // Index static baselines for the savings column: (bill, attain).
+    let static_cell = |scenario: &str, mode: ServingMode| {
+        results
+            .iter()
+            .find(|(c, _)| c.is_static && c.scenario.name == scenario && c.mode == mode)
+            .map(|(_, r)| (r.active_instance_s, r.attain))
+            .unwrap_or((f64::NAN, f64::NAN))
+    };
+
+    let mut rows = Vec::new();
+    for (c, r) in &results {
+        let policy = if c.is_static { "static".to_string() } else { c.scaler.name().to_string() };
+        let (base_bill, base_attain) = static_cell(c.scenario.name, c.mode);
+        let savings = if c.is_static { 0.0 } else { 1.0 - r.active_instance_s / base_bill };
+        let d_attain = r.attain - base_attain;
+        rows.push(vec![
+            c.scenario.name.to_string(),
+            c.mode.name().to_string(),
+            policy,
+            f(r.attain, 3),
+            f(d_attain, 3),
+            f(r.active_instance_s, 1),
+            f(savings, 3),
+            f(r.cost_per_1k_goodput_tokens, 3),
+            f(r.fleet_mean, 1),
+            r.fleet_peak.to_string(),
+            r.fleet_trough.to_string(),
+            r.unfinished.to_string(),
+        ]);
+    }
+    bench.table(
+        "Elastic scaling: active-instance-seconds vs static fleet at equal peak capacity",
+        &[
+            "scenario",
+            "mode",
+            "policy",
+            "attain",
+            "d_attain_vs_static",
+            "active_inst_s",
+            "savings_vs_static",
+            "cost_per_1k_goodput_tok",
+            "fleet_mean",
+            "fleet_peak",
+            "fleet_trough",
+            "unfinished",
+        ],
+        &rows,
+    );
+    bench.finish();
+}

@@ -5,18 +5,28 @@
 //! allocated instance·s / request). The CO-Chunk baseline is sized by
 //! searching the smallest instance count that reaches 90% attainment
 //! (cost = fleet instance·s / request), per §5.4.
+//!
+//! Beyond the paper: an *elastic* PolyServe row (load-gradient fleet
+//! scaler, min 6 / max 48) reports the cloud-bill view —
+//! active-instance·s per request — which the fixed 48-instance pool
+//! cannot improve no matter how little of it the router allocates.
 
 use polyserve::analysis::ServingMode;
-use polyserve::config::{Policy, SimConfig};
+use polyserve::config::{Policy, ScalerKind, SimConfig};
 use polyserve::figures::Experiment;
 use polyserve::util::benchkit::{f, full_scale, Bench};
 use polyserve::util::threadpool::par_map;
 use polyserve::workload::TraceKind;
 
-fn run_cell(cfg: &SimConfig) -> (f64, f64) {
+/// (attainment, alloc cost/req, active-bill cost/req)
+fn run_cell(cfg: &SimConfig) -> (f64, f64, f64) {
     let exp = Experiment::prepare(cfg);
     let res = exp.run();
-    (res.attainment.overall(), res.cost.cost_per_request_s())
+    (
+        res.attainment.overall(),
+        res.cost.cost_per_request_s(),
+        res.cost.active_cost_per_request_s(),
+    )
 }
 
 fn main() {
@@ -26,7 +36,7 @@ fn main() {
     let rates = [50.0, 100.0, 150.0, 200.0, 250.0];
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
 
-    // PolyServe with an ample pool.
+    // PolyServe with an ample (fixed) pool.
     let ps_cells: Vec<SimConfig> = rates
         .iter()
         .flat_map(|&r| {
@@ -42,6 +52,50 @@ fn main() {
         })
         .collect();
     let ps_results = par_map(ps_cells.clone(), threads, |_, cfg| run_cell(&cfg));
+
+    // Elastic PolyServe: same rates, the fleet itself follows demand.
+    // The PD prefill cluster does not scale, so size it for the *peak*
+    // fleet (matching the 48-instance comparator row) rather than the
+    // small initial fleet — otherwise elastic PD rows bottleneck on an
+    // undersized prefill cluster for reasons unrelated to the scaler.
+    let pd_probe = Experiment::prepare(&SimConfig {
+        trace,
+        mode: ServingMode::PdDisaggregated,
+        policy: Policy::PolyServe,
+        instances: 48,
+        requests,
+        rate_rps: Some(rates[0]),
+        ..Default::default()
+    });
+    let pd_n_pf = ((48.0 * pd_probe.cfg.prefill_frac).round() as usize).clamp(1, 47);
+    let el_cells: Vec<SimConfig> = rates
+        .iter()
+        .flat_map(|&r| {
+            [ServingMode::PdDisaggregated, ServingMode::Colocated].map(|mode| {
+                let mut cfg = SimConfig {
+                    trace,
+                    mode,
+                    policy: Policy::PolyServe,
+                    instances: 12,
+                    requests,
+                    rate_rps: Some(r),
+                    ..Default::default()
+                };
+                cfg.elastic.scaler = ScalerKind::Gradient;
+                cfg.elastic.min_instances = 6;
+                cfg.elastic.max_instances = 48;
+                cfg.elastic.provision_delay_ms = 15_000;
+                cfg.elastic.scale_eval_ms = 1_000;
+                if mode == ServingMode::PdDisaggregated {
+                    cfg.elastic.max_instances = 48 - pd_n_pf;
+                    cfg.instances = pd_n_pf + cfg.elastic.min_instances;
+                    cfg.prefill_frac = pd_n_pf as f64 / cfg.instances as f64;
+                }
+                cfg
+            })
+        })
+        .collect();
+    let el_results = par_map(el_cells.clone(), threads, |_, cfg| run_cell(&cfg));
 
     // CO-Chunk sized to 90%: try increasing instance counts.
     let sizes = [4usize, 8, 12, 16, 20, 24, 32, 40, 48];
@@ -64,32 +118,45 @@ fn main() {
 
     let mut rows = Vec::new();
     for (i, cfg) in ps_cells.iter().enumerate() {
-        let (att, cost) = ps_results[i];
+        let (att, cost, active) = ps_results[i];
         rows.push(vec![
             format!("{:.0}", cfg.rate_rps.unwrap()),
             cfg.policy.label(cfg.mode),
             "48(auto)".into(),
             f(att, 3),
             f(cost, 3),
+            f(active, 3),
+        ]);
+    }
+    for (i, cfg) in el_cells.iter().enumerate() {
+        let (att, cost, active) = el_results[i];
+        rows.push(vec![
+            format!("{:.0}", cfg.rate_rps.unwrap()),
+            format!("{}+elastic", cfg.policy.label(cfg.mode)),
+            format!("{}..{}", cfg.elastic.min_instances, cfg.elastic.max_instances),
+            f(att, 3),
+            f(cost, 3),
+            f(active, 3),
         ]);
     }
     for (ri, &rate) in rates.iter().enumerate() {
         // smallest size reaching 90%
-        let mut chosen: Option<(usize, f64, f64)> = None;
+        let mut chosen: Option<(usize, f64, f64, f64)> = None;
         for (si, &size) in sizes.iter().enumerate() {
-            let (att, cost) = chunk_results[ri * sizes.len() + si];
+            let (att, cost, active) = chunk_results[ri * sizes.len() + si];
             if att >= 0.9 {
-                chosen = Some((size, att, cost));
+                chosen = Some((size, att, cost, active));
                 break;
             }
         }
         match chosen {
-            Some((size, att, cost)) => rows.push(vec![
+            Some((size, att, cost, active)) => rows.push(vec![
                 format!("{rate:.0}"),
                 "CO-Chunk".into(),
                 size.to_string(),
                 f(att, 3),
                 f(cost, 3),
+                f(active, 3),
             ]),
             None => rows.push(vec![
                 format!("{rate:.0}"),
@@ -97,12 +164,20 @@ fn main() {
                 ">48".into(),
                 "-".into(),
                 "-".into(),
+                "-".into(),
             ]),
         }
     }
     bench.table(
         "Fig 8: cost per request at >=90% attainment",
-        &["rate_rps", "policy", "instances", "attain", "cost_inst_s_per_req"],
+        &[
+            "rate_rps",
+            "policy",
+            "instances",
+            "attain",
+            "cost_inst_s_per_req",
+            "active_bill_inst_s_per_req",
+        ],
         &rows,
     );
     bench.finish();

@@ -53,6 +53,79 @@ impl Policy {
     }
 }
 
+/// Which fleet autoscaler drives an elastic run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ScalerKind {
+    /// Fixed fleet (seed behaviour).
+    Off,
+    /// PolyServe §4.4 load-gradient fleet scaler.
+    Gradient,
+    /// Reactive utilization-threshold baseline.
+    Threshold,
+}
+
+impl ScalerKind {
+    pub const ALL: [ScalerKind; 3] = [ScalerKind::Off, ScalerKind::Gradient, ScalerKind::Threshold];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScalerKind::Off => "off",
+            ScalerKind::Gradient => "gradient",
+            ScalerKind::Threshold => "threshold",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<ScalerKind> {
+        ScalerKind::ALL.iter().copied().find(|k| k.name() == s)
+    }
+}
+
+/// Elastic-fleet knobs. Bounds apply to the *scalable* role — decode
+/// servers under PD-disaggregation, coloc servers under co-location
+/// (the PD prefill cluster stays static).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ElasticConfig {
+    pub scaler: ScalerKind,
+    /// Never drain the scalable fleet below this.
+    pub min_instances: usize,
+    /// Never provision above this (active + cold-starting).
+    pub max_instances: usize,
+    /// Cold-start delay, provision → serving.
+    pub provision_delay_ms: u64,
+    /// Autoscaler evaluation period.
+    pub scale_eval_ms: u64,
+}
+
+impl Default for ElasticConfig {
+    fn default() -> ElasticConfig {
+        ElasticConfig {
+            scaler: ScalerKind::Off,
+            min_instances: 1,
+            max_instances: 0,
+            provision_delay_ms: 15_000,
+            scale_eval_ms: 1_000,
+        }
+    }
+}
+
+impl ElasticConfig {
+    /// Elastic machinery engages only with a scaler selected *and* real
+    /// headroom between the bounds; `max == min` is exactly the static
+    /// fleet (bit-for-bit the seed code path).
+    pub fn enabled(&self) -> bool {
+        self.scaler != ScalerKind::Off && self.max_instances > self.min_instances
+    }
+}
+
+/// Diurnal demand-curve spec: when set, arrivals follow a sinusoid-
+/// approximating piecewise `RateSchedule` with this peak:trough ratio
+/// and period, instead of constant-rate Poisson.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DiurnalSpec {
+    pub peak_to_trough: f64,
+    pub period_s: f64,
+}
+
 /// Full simulation/experiment configuration.
 #[derive(Debug, Clone)]
 pub struct SimConfig {
@@ -76,6 +149,10 @@ pub struct SimConfig {
     pub prefill_frac: f64,
     /// Router feature toggles (ablations).
     pub features: Features,
+    /// Elastic-fleet knobs (default: fixed fleet).
+    pub elastic: ElasticConfig,
+    /// Diurnal demand curve (default: constant-rate Poisson).
+    pub diurnal: Option<DiurnalSpec>,
 }
 
 /// PolyServe mechanism toggles — each maps to a §4 subsection, and the
@@ -126,6 +203,8 @@ impl Default for SimConfig {
             chunk_budget: 512,
             prefill_frac: 0.0, // auto
             features: Features::default(),
+            elastic: ElasticConfig::default(),
+            diurnal: None,
         }
     }
 }
@@ -187,6 +266,31 @@ impl SimConfig {
                 .map(|x| x as u64)
                 .collect();
         }
+        if let Some(v) = doc.get("elastic.scaler") {
+            let name = v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("elastic.scaler must be a string"))?;
+            cfg.elastic.scaler = ScalerKind::from_name(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown scaler '{name}' (off|gradient|threshold)"))?;
+        }
+        cfg.elastic.min_instances =
+            doc.usize_or("elastic.min_instances", cfg.elastic.min_instances);
+        cfg.elastic.max_instances =
+            doc.usize_or("elastic.max_instances", cfg.elastic.max_instances);
+        cfg.elastic.provision_delay_ms =
+            doc.usize_or("elastic.provision_delay_ms", cfg.elastic.provision_delay_ms as usize)
+                as u64;
+        cfg.elastic.scale_eval_ms =
+            doc.usize_or("elastic.scale_eval_ms", cfg.elastic.scale_eval_ms as usize) as u64;
+        if let Some(v) = doc.get("diurnal.peak_to_trough") {
+            let ratio = v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("diurnal.peak_to_trough must be a number"))?;
+            cfg.diurnal = Some(DiurnalSpec {
+                peak_to_trough: ratio,
+                period_s: doc.f64_or("diurnal.period_s", 600.0),
+            });
+        }
         let f = &mut cfg.features;
         f.load_gradient = doc.bool_or("features.load_gradient", f.load_gradient);
         f.lazy_promotion = doc.bool_or("features.lazy_promotion", f.lazy_promotion);
@@ -216,6 +320,29 @@ impl SimConfig {
             !(self.features.lazy_promotion && self.features.eager_promotion),
             "lazy_promotion and eager_promotion are mutually exclusive"
         );
+        if self.elastic.scaler != ScalerKind::Off {
+            // `max == min` (> 0) is the documented static pin; an unset
+            // max with a scaler selected would silently run a fixed
+            // fleet, so reject it loudly.
+            anyhow::ensure!(
+                self.elastic.max_instances >= 1,
+                "elastic.max_instances must be set (>= 1) when a scaler is selected \
+                 (use max == min to pin a static fleet)"
+            );
+            anyhow::ensure!(
+                self.elastic.min_instances >= 1,
+                "elastic.min_instances must be >= 1"
+            );
+            anyhow::ensure!(
+                self.elastic.max_instances >= self.elastic.min_instances,
+                "elastic.max_instances must be >= elastic.min_instances"
+            );
+            anyhow::ensure!(self.elastic.scale_eval_ms >= 1, "elastic.scale_eval_ms must be >= 1");
+        }
+        if let Some(d) = &self.diurnal {
+            anyhow::ensure!(d.peak_to_trough >= 1.0, "diurnal.peak_to_trough must be >= 1");
+            anyhow::ensure!(d.period_s > 0.0, "diurnal.period_s must be positive");
+        }
         Ok(())
     }
 }
@@ -269,6 +396,50 @@ lazy_promotion = false
     }
 
     #[test]
+    fn parses_elastic_and_diurnal() {
+        let doc = tomlish::parse(
+            r#"
+[elastic]
+scaler = "gradient"
+min_instances = 4
+max_instances = 32
+provision_delay_ms = 30000
+scale_eval_ms = 2000
+
+[diurnal]
+peak_to_trough = 3.0
+period_s = 900.0
+"#,
+        )
+        .unwrap();
+        let c = SimConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.elastic.scaler, ScalerKind::Gradient);
+        assert_eq!(c.elastic.min_instances, 4);
+        assert_eq!(c.elastic.max_instances, 32);
+        assert_eq!(c.elastic.provision_delay_ms, 30_000);
+        assert_eq!(c.elastic.scale_eval_ms, 2_000);
+        assert!(c.elastic.enabled());
+        let d = c.diurnal.unwrap();
+        assert_eq!(d.peak_to_trough, 3.0);
+        assert_eq!(d.period_s, 900.0);
+    }
+
+    #[test]
+    fn static_bounds_disable_elastic() {
+        // max == min is *the* static-fleet config: the elastic machinery
+        // must stay off so results are bit-for-bit the fixed-fleet path.
+        let mut c = SimConfig::default();
+        c.elastic.scaler = ScalerKind::Gradient;
+        c.elastic.min_instances = 8;
+        c.elastic.max_instances = 8;
+        assert!(!c.elastic.enabled());
+        c.elastic.max_instances = 9;
+        assert!(c.elastic.enabled());
+        c.elastic.scaler = ScalerKind::Off;
+        assert!(!c.elastic.enabled());
+    }
+
+    #[test]
     fn rejects_bad_values() {
         for bad in [
             "trace = \"nope\"",
@@ -276,6 +447,11 @@ lazy_promotion = false
             "mode = \"nope\"",
             "[slo]\ntpot_ms = [20]\ntpot_weights = [0.5, 0.5]",
             "[features]\nlazy_promotion = true\neager_promotion = true",
+            "[elastic]\nscaler = \"nope\"",
+            "[elastic]\nscaler = \"gradient\"\nmin_instances = 0\nmax_instances = 4",
+            "[elastic]\nscaler = \"gradient\"", // max unset → silent no-op, reject
+            "[elastic]\nscaler = \"gradient\"\nmin_instances = 12\nmax_instances = 8",
+            "[diurnal]\npeak_to_trough = 0.5",
         ] {
             let doc = tomlish::parse(bad).unwrap();
             assert!(SimConfig::from_doc(&doc).is_err(), "should reject: {bad}");

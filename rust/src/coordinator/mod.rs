@@ -13,10 +13,15 @@
 //!   deadline checks.
 
 pub mod admission;
+pub mod autoscaler;
 pub mod baselines;
 pub mod polyserve;
 pub mod sharded;
 
+pub use autoscaler::{
+    make_autoscaler, scaling_role, Autoscaler, GradientAutoscaler, ScaleAction,
+    ThresholdAutoscaler,
+};
 pub use baselines::{ChunkRouter, MinimalRouter, RandomRouter};
 pub use polyserve::PolyServeRouter;
 pub use sharded::ShardedRouter;

@@ -272,7 +272,9 @@ impl PolyServeRouter {
             .iter()
             .enumerate()
             .find(|(id, a)| {
-                **a == TierAssign::Pending && self.instance_hosts_tier(*id, k, ctx)
+                **a == TierAssign::Pending
+                    && ctx.cluster.instances[*id].lifecycle.accepts_work()
+                    && self.instance_hosts_tier(*id, k, ctx)
             })
             .map(|(id, _)| id);
         if let Some(id) = pending_inst {
@@ -378,13 +380,16 @@ impl PolyServeRouter {
                 return Some(id);
             }
         }
-        // Any pending-state instance.
+        // Any pending-state instance (that still accepts work — the
+        // elastic fleet may be draining some).
         let pending_ids: Vec<usize> = ctx
             .cluster
             .assign
             .iter()
             .enumerate()
-            .filter(|(_, a)| **a == TierAssign::Pending)
+            .filter(|(i, a)| {
+                **a == TierAssign::Pending && ctx.cluster.instances[*i].lifecycle.accepts_work()
+            })
             .map(|(i, _)| i)
             .collect();
         if let Some(id) = least_loaded(pending_ids, ctx) {

@@ -3,14 +3,14 @@
 
 use crate::analysis;
 use crate::config::{Policy, SimConfig};
-use crate::coordinator::make_router;
+use crate::coordinator::{make_autoscaler, make_router};
 use crate::metrics::AttainmentCurve;
 use crate::model::CostModel;
 use crate::profile::ProfileTable;
-use crate::sim::{Cluster, SimParams, SimResult, Simulation};
+use crate::sim::{Cluster, ElasticParams, SimParams, SimResult, Simulation};
 use crate::util::rng::Rng;
 use crate::util::threadpool::par_map;
-use crate::workload::{TraceGenerator, Workload};
+use crate::workload::{RateSchedule, TraceGenerator, Workload};
 
 /// Everything needed to run one simulation cell, pre-computed.
 pub struct Experiment {
@@ -74,7 +74,24 @@ impl Experiment {
             .unwrap_or(optimal_rps * cfg.rate_frac_of_optimal)
             .max(0.001);
         let mut rng2 = Rng::new(cfg.seed ^ 0x5EED);
-        let workload = gen.generate(cfg.requests, rate_rps, &cfg.tier_dist, &achievable, &mut rng2);
+        let workload = match cfg.diurnal {
+            Some(d) => {
+                // Diurnal arrivals at the same *mean* rate: the elastic
+                // fleet gets a demand curve to chase while rate-based
+                // comparisons stay apples-to-apples.
+                let period_ms = ((d.period_s * 1000.0) as u64).max(2);
+                let expected_span_ms =
+                    (cfg.requests as f64 / rate_rps * 1000.0).max(period_ms as f64);
+                let periods = (expected_span_ms / period_ms as f64).ceil() as usize + 1;
+                let schedule =
+                    RateSchedule::diurnal(rate_rps, d.peak_to_trough, period_ms, 24, periods);
+                let arrivals = schedule.arrivals(cfg.requests, &mut rng2);
+                gen.generate_with_arrivals(&arrivals, &cfg.tier_dist, &achievable, &mut rng2)
+            }
+            None => {
+                gen.generate(cfg.requests, rate_rps, &cfg.tier_dist, &achievable, &mut rng2)
+            }
+        };
         Experiment {
             cfg,
             cost_model: cm,
@@ -85,9 +102,16 @@ impl Experiment {
         }
     }
 
-    /// Run the simulation for this experiment.
+    /// Run the simulation for this experiment. With `cfg.elastic`
+    /// enabled the fleet starts at `cfg.instances` and the configured
+    /// autoscaler drives it within the elastic bounds; otherwise this
+    /// is exactly the seed fixed-fleet path.
     pub fn run(&self) -> SimResult {
         let polyserve_managed = self.cfg.policy == Policy::PolyServe;
+        let elastic = self.cfg.elastic.enabled();
+        // `cfg.instances` is the *initial* fleet; the elastic bounds
+        // only constrain scaling transitions (they apply to the
+        // scalable role, which under PD is a subset of the fleet).
         let cluster = Cluster::build(
             self.cfg.mode,
             self.cfg.instances,
@@ -98,6 +122,12 @@ impl Experiment {
         );
         let params = SimParams {
             mode: self.cfg.mode,
+            elastic: elastic.then(|| ElasticParams {
+                min_instances: self.cfg.elastic.min_instances.max(1),
+                max_instances: self.cfg.elastic.max_instances,
+                provision_delay_ms: self.cfg.elastic.provision_delay_ms,
+                scale_eval_ms: self.cfg.elastic.scale_eval_ms.max(1),
+            }),
             ..Default::default()
         };
         let sim = Simulation::new(
@@ -109,7 +139,11 @@ impl Experiment {
             &self.cfg.tiers,
         );
         let mut router = make_router(&self.cfg, self.workload.avg_decode_len());
-        let res = sim.run(router.as_mut());
+        let mut scaler = if elastic { make_autoscaler(&self.cfg) } else { None };
+        let res = match scaler.as_deref_mut() {
+            Some(sc) => sim.run_elastic(router.as_mut(), Some(sc)),
+            None => sim.run(router.as_mut()),
+        };
         let diag = router.diagnostics();
         if !diag.is_empty() {
             log::debug!("router diagnostics: {diag}");

@@ -10,7 +10,7 @@
 //!   artifacts and report latency/throughput.
 
 use polyserve::analysis::{self, ServingMode};
-use polyserve::config::{Policy, SimConfig};
+use polyserve::config::{DiurnalSpec, Policy, ScalerKind, SimConfig};
 use polyserve::figures;
 use polyserve::model::CostModel;
 use polyserve::profile::ProfileTable;
@@ -33,6 +33,13 @@ fn main() {
                 .opt("rate-rps", "", "absolute request rate (overrides rate-frac)")
                 .opt("seed", "53264", "rng seed")
                 .opt("config", "", "TOML config file (overrides defaults)")
+                .opt("scaler", "", "fleet autoscaler: off|gradient|threshold")
+                .opt("elastic-min", "", "elastic fleet floor (scalable role)")
+                .opt("elastic-max", "", "elastic fleet ceiling (scalable role)")
+                .opt("provision-delay-ms", "", "cold-start delay for provisioned instances")
+                .opt("scale-eval-ms", "", "autoscaler evaluation period")
+                .opt("diurnal-ratio", "", "diurnal peak:trough ratio (enables diurnal arrivals)")
+                .opt("diurnal-period-s", "600", "diurnal period in seconds")
                 .flag("verbose", "per-tier breakdown"),
         )
         .command(
@@ -108,6 +115,31 @@ fn sim_config_from(args: &Args) -> Result<SimConfig, String> {
         cfg.rate_rps = Some(args.f64_or("rate-rps", 0.0));
     }
     cfg.seed = args.u64_or("seed", cfg.seed);
+    if let Some(s) = args.get("scaler") {
+        if !s.is_empty() {
+            cfg.elastic.scaler =
+                ScalerKind::from_name(s).ok_or_else(|| format!("unknown scaler '{s}'"))?;
+        }
+    }
+    if !args.str_or("elastic-min", "").is_empty() {
+        cfg.elastic.min_instances = args.usize_or("elastic-min", cfg.elastic.min_instances);
+    }
+    if !args.str_or("elastic-max", "").is_empty() {
+        cfg.elastic.max_instances = args.usize_or("elastic-max", cfg.elastic.max_instances);
+    }
+    if !args.str_or("provision-delay-ms", "").is_empty() {
+        cfg.elastic.provision_delay_ms =
+            args.u64_or("provision-delay-ms", cfg.elastic.provision_delay_ms);
+    }
+    if !args.str_or("scale-eval-ms", "").is_empty() {
+        cfg.elastic.scale_eval_ms = args.u64_or("scale-eval-ms", cfg.elastic.scale_eval_ms);
+    }
+    if !args.str_or("diurnal-ratio", "").is_empty() {
+        cfg.diurnal = Some(DiurnalSpec {
+            peak_to_trough: args.f64_or("diurnal-ratio", 3.0),
+            period_s: args.f64_or("diurnal-period-s", 600.0),
+        });
+    }
     cfg.validate().map_err(|e| e.to_string())?;
     Ok(cfg)
 }
@@ -148,6 +180,18 @@ fn cmd_simulate(args: &Args) -> i32 {
         res.cost.cost_per_request_s(),
         res.cost.utilization(),
     );
+    if !res.fleet.is_empty() {
+        println!(
+            "elastic fleet ({}): active mean {:.1} / peak {} / trough {}, bill {:.1} inst·s ({:.3} inst·s/req, {:.2} inst·s per 1k goodput tokens)",
+            cfg.elastic.scaler.name(),
+            res.fleet.mean_active(),
+            res.fleet.peak_active(),
+            res.fleet.trough_active(),
+            res.cost.active_instance_ms as f64 / 1000.0,
+            res.cost.active_cost_per_request_s(),
+            res.cost.cost_per_1k_goodput_tokens_s(),
+        );
+    }
     if args.flag("verbose") {
         for (tpot, total, ok) in &res.attainment.per_tier {
             println!(

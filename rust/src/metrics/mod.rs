@@ -136,7 +136,16 @@ pub struct CostAccount {
     /// Total instance·ms the fleet was *allocated* (busy or idle but
     /// reserved to a tier) — the number Fig 8 divides by requests.
     pub instance_alloc_ms: u64,
+    /// Total instance·ms the fleet *existed* (provision → retire):
+    /// what a cloud bill charges. On a fixed fleet this is
+    /// `n × sim_span`; an elastic fleet makes it load-dependent.
+    pub active_instance_ms: u64,
     pub requests_served: u64,
+    /// Output tokens emitted across all finished requests.
+    pub tokens_total: u64,
+    /// Output tokens from SLO-attaining requests only — the "goodput
+    /// tokens" an operator is actually paid for.
+    pub goodput_tokens: u64,
 }
 
 impl CostAccount {
@@ -147,11 +156,84 @@ impl CostAccount {
         self.instance_alloc_ms as f64 / 1000.0 / self.requests_served as f64
     }
 
+    /// Fleet bill per request (elastic accounting), instance·s.
+    pub fn active_cost_per_request_s(&self) -> f64 {
+        if self.requests_served == 0 {
+            return f64::INFINITY;
+        }
+        self.active_instance_ms as f64 / 1000.0 / self.requests_served as f64
+    }
+
+    /// Fleet bill per 1000 goodput tokens, instance·s — the
+    /// load-dependent unit economics number.
+    pub fn cost_per_1k_goodput_tokens_s(&self) -> f64 {
+        if self.goodput_tokens == 0 {
+            return f64::INFINITY;
+        }
+        self.active_instance_ms as f64 / self.goodput_tokens as f64
+    }
+
     pub fn utilization(&self) -> f64 {
         if self.instance_alloc_ms == 0 {
             0.0
         } else {
             self.instance_busy_ms as f64 / self.instance_alloc_ms as f64
+        }
+    }
+}
+
+/// One snapshot of fleet composition, taken at every `ScaleEval`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FleetSample {
+    pub t_ms: TimeMs,
+    /// Active instances assigned to each TPOT tier (tightest first).
+    pub per_tier: Vec<usize>,
+    /// Active instances idling in the best-effort pool.
+    pub best_effort: usize,
+    /// All active instances (any role / assignment).
+    pub active: usize,
+    pub provisioning: usize,
+    pub draining: usize,
+}
+
+/// Per-tier fleet-size time series for an elastic run (empty on fixed
+/// fleets).
+#[derive(Debug, Clone, Default)]
+pub struct FleetSeries {
+    pub samples: Vec<FleetSample>,
+}
+
+impl FleetSeries {
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Largest active fleet observed.
+    pub fn peak_active(&self) -> usize {
+        self.samples.iter().map(|s| s.active).max().unwrap_or(0)
+    }
+
+    /// Smallest active fleet observed.
+    pub fn trough_active(&self) -> usize {
+        self.samples.iter().map(|s| s.active).min().unwrap_or(0)
+    }
+
+    /// Time-weighted mean active fleet size over the sampled span.
+    pub fn mean_active(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return self.samples.first().map(|s| s.active as f64).unwrap_or(0.0);
+        }
+        let mut weighted = 0.0;
+        let mut span = 0.0;
+        for w in self.samples.windows(2) {
+            let dt = (w[1].t_ms - w[0].t_ms) as f64;
+            weighted += w[0].active as f64 * dt;
+            span += dt;
+        }
+        if span == 0.0 {
+            self.samples[0].active as f64
+        } else {
+            weighted / span
         }
     }
 }
@@ -228,12 +310,40 @@ mod tests {
         let c = CostAccount {
             instance_busy_ms: 5_000,
             instance_alloc_ms: 10_000,
+            active_instance_ms: 20_000,
             requests_served: 5,
+            tokens_total: 4_000,
+            goodput_tokens: 2_000,
         };
         assert!((c.cost_per_request_s() - 2.0).abs() < 1e-9);
+        assert!((c.active_cost_per_request_s() - 4.0).abs() < 1e-9);
+        assert!((c.cost_per_1k_goodput_tokens_s() - 10.0).abs() < 1e-9);
         assert!((c.utilization() - 0.5).abs() < 1e-9);
         let empty = CostAccount::default();
         assert!(empty.cost_per_request_s().is_infinite());
+        assert!(empty.active_cost_per_request_s().is_infinite());
+        assert!(empty.cost_per_1k_goodput_tokens_s().is_infinite());
+    }
+
+    #[test]
+    fn fleet_series_summaries() {
+        let sample = |t_ms, active| FleetSample {
+            t_ms,
+            per_tier: vec![active / 2, active - active / 2],
+            best_effort: 0,
+            active,
+            provisioning: 0,
+            draining: 0,
+        };
+        let s = FleetSeries {
+            samples: vec![sample(0, 4), sample(1000, 8), sample(3000, 2)],
+        };
+        assert_eq!(s.peak_active(), 8);
+        assert_eq!(s.trough_active(), 2);
+        // Time-weighted: 4 for 1 s, 8 for 2 s over 3 s = 20/3.
+        assert!((s.mean_active() - 20.0 / 3.0).abs() < 1e-9);
+        assert!(FleetSeries::default().is_empty());
+        assert_eq!(FleetSeries::default().peak_active(), 0);
     }
 
     #[test]

@@ -1,12 +1,20 @@
-//! The fleet: instances, tier membership, best-effort pool.
+//! The fleet: instances, tier membership, best-effort pool, and the
+//! elastic-fleet lifecycle (provision / drain / retire).
 //!
 //! Tier bookkeeping implements the paper's server states: an instance is
 //! either in the best-effort pool (idle reserve), assigned to a TPOT
 //! tier, or *pending* (§4.4: only lower-tier promoted requests remain on
 //! it — it may join their tier if that tier scales up, else it drains to
 //! the pool).
+//!
+//! The elastic layer sits underneath: the fleet itself can grow
+//! (`provision` → cold start → `InstanceReady`) and shrink
+//! (`begin_drain` → residents finish → retire). Retired instances stay
+//! in `instances` so ids remain stable indices; every placement-facing
+//! query (`in_tier`, `best_effort_pool`, `with_role`) returns only
+//! instances whose lifecycle accepts new work.
 
-use super::instance::{Instance, Role};
+use super::instance::{Instance, Lifecycle, Role};
 use crate::analysis::ServingMode;
 use crate::model::CostModel;
 use crate::slo::TimeMs;
@@ -33,6 +41,13 @@ pub struct Cluster {
     pub assign: Vec<TierAssign>,
     /// Number of TPOT tiers.
     pub num_tiers: usize,
+    /// Tier-managed (PolyServe) fleet: newly provisioned instances join
+    /// the best-effort pool; static fleets get `Static` assignment.
+    pub managed: bool,
+    /// Per-instance KV capacity for newly provisioned instances.
+    pub kv_capacity: u64,
+    /// Per-instance max token batch for newly provisioned instances.
+    pub max_token_batch: u64,
     /// Instances the router fed while holding the ctx — the simulator
     /// must try to (re)start their iterations.
     kicked: Vec<usize>,
@@ -95,6 +110,9 @@ impl Cluster {
             instances,
             assign,
             num_tiers,
+            managed: polyserve_managed,
+            kv_capacity: cm.kv_capacity_tokens,
+            max_token_batch: cm.max_token_batch,
             kicked: Vec::new(),
         }
     }
@@ -107,29 +125,34 @@ impl Cluster {
         self.instances.is_empty()
     }
 
-    /// Instance ids with a given role.
+    /// Instance ids with a given role that accept new work (placement
+    /// candidates; provisioning / draining / retired are excluded).
     pub fn with_role(&self, role: Role) -> impl Iterator<Item = usize> + '_ {
         self.instances
             .iter()
-            .filter(move |i| i.role == role)
+            .filter(move |i| i.role == role && i.lifecycle.accepts_work())
             .map(|i| i.id)
     }
 
-    /// Instance ids currently assigned to tier `k`.
+    /// Instance ids currently assigned to tier `k` and accepting work.
     pub fn in_tier(&self, k: usize) -> impl Iterator<Item = usize> + '_ {
         self.assign
             .iter()
             .enumerate()
-            .filter(move |(_, a)| **a == TierAssign::Tier(k))
+            .filter(move |(i, a)| {
+                **a == TierAssign::Tier(k) && self.instances[*i].lifecycle.accepts_work()
+            })
             .map(|(i, _)| i)
     }
 
-    /// Instance ids in the best-effort pool.
+    /// Instance ids in the best-effort pool (claimable: active only).
     pub fn best_effort_pool(&self) -> impl Iterator<Item = usize> + '_ {
         self.assign
             .iter()
             .enumerate()
-            .filter(|(_, a)| **a == TierAssign::BestEffort)
+            .filter(move |(i, a)| {
+                **a == TierAssign::BestEffort && self.instances[*i].lifecycle.accepts_work()
+            })
             .map(|(i, _)| i)
     }
 
@@ -161,6 +184,93 @@ impl Cluster {
         debug_assert!(self.instances[id].is_empty(), "releasing a busy instance");
         self.assign[id] = TierAssign::BestEffort;
         self.instances[id].alloc_end(now);
+    }
+
+    // ---- elastic fleet lifecycle ----
+
+    /// Add a cold-starting instance to the fleet; it accepts no work
+    /// until `ready_at` (the simulator fires `InstanceReady` then).
+    /// Returns the new instance id.
+    pub fn provision(&mut self, role: Role, now: TimeMs, ready_at: TimeMs) -> usize {
+        let id = self.instances.len();
+        self.instances.push(Instance::new_provisioning(
+            id,
+            role,
+            self.kv_capacity,
+            self.max_token_batch,
+            now,
+            ready_at,
+        ));
+        self.assign.push(if self.managed {
+            TierAssign::BestEffort
+        } else {
+            TierAssign::Static
+        });
+        id
+    }
+
+    /// Cold start finished: the instance joins the serving fleet.
+    pub fn mark_ready(&mut self, id: usize) {
+        self.instances[id].mark_ready();
+    }
+
+    /// Start draining `id`: it accepts nothing new and is retired once
+    /// its resident requests finish.
+    pub fn begin_drain(&mut self, id: usize, now: TimeMs) {
+        self.instances[id].begin_drain(now);
+    }
+
+    /// Retire `id` if it is draining and has no work left. Returns true
+    /// if it retired.
+    pub fn retire_if_drained(&mut self, id: usize, now: TimeMs) -> bool {
+        if matches!(self.instances[id].lifecycle, Lifecycle::Draining { .. })
+            && self.instances[id].is_empty()
+        {
+            self.instances[id].retire(now);
+            return true;
+        }
+        false
+    }
+
+    /// Count instances of `role` in lifecycle states selected by `f`.
+    fn count_lifecycle(&self, role: Role, f: impl Fn(&Lifecycle) -> bool) -> usize {
+        self.instances
+            .iter()
+            .filter(|i| i.role == role && f(&i.lifecycle))
+            .count()
+    }
+
+    /// Serving instances of `role` (lifecycle Active).
+    pub fn active_count(&self, role: Role) -> usize {
+        self.count_lifecycle(role, Lifecycle::accepts_work)
+    }
+
+    /// Committed capacity of `role`: active + still cold-starting
+    /// (drainers are on their way out and do not count).
+    pub fn committed_count(&self, role: Role) -> usize {
+        self.count_lifecycle(role, |l| {
+            matches!(l, Lifecycle::Active | Lifecycle::Provisioning { .. })
+        })
+    }
+
+    /// Instances of `role` currently provisioning.
+    pub fn provisioning_count(&self, role: Role) -> usize {
+        self.count_lifecycle(role, |l| matches!(l, Lifecycle::Provisioning { .. }))
+    }
+
+    /// Instances of `role` currently draining.
+    pub fn draining_count(&self, role: Role) -> usize {
+        self.count_lifecycle(role, |l| matches!(l, Lifecycle::Draining { .. }))
+    }
+
+    /// Ids of draining instances (any role) with no work left — ready
+    /// for the simulator to retire.
+    pub fn drained_ids(&self) -> Vec<usize> {
+        self.instances
+            .iter()
+            .filter(|i| matches!(i.lifecycle, Lifecycle::Draining { .. }) && i.is_empty())
+            .map(|i| i.id)
+            .collect()
     }
 
     /// Router-side: mark that `inst` received work and may need its
@@ -232,6 +342,45 @@ mod tests {
         c.mark_kicked(0);
         assert_eq!(c.take_kicked(), vec![1, 0]);
         assert!(c.take_kicked().is_empty());
+    }
+
+    #[test]
+    fn provision_drain_retire_lifecycle() {
+        let mut c = Cluster::build(ServingMode::Colocated, 2, 0.0, 2, &cm(), true);
+        assert_eq!(c.active_count(Role::Coloc), 2);
+        // Provision a third instance with a 5 s cold start.
+        let id = c.provision(Role::Coloc, 1000, 6000);
+        assert_eq!(id, 2);
+        assert_eq!(c.len(), 3);
+        // Not claimable while provisioning.
+        assert_eq!(c.best_effort_pool().count(), 2);
+        assert_eq!(c.committed_count(Role::Coloc), 3);
+        assert_eq!(c.provisioning_count(Role::Coloc), 1);
+        c.mark_ready(id);
+        assert_eq!(c.best_effort_pool().count(), 3);
+        assert_eq!(c.active_count(Role::Coloc), 3);
+        // Drain it: leaves every placement view immediately.
+        c.begin_drain(id, 8000);
+        assert_eq!(c.best_effort_pool().count(), 2);
+        assert_eq!(c.with_role(Role::Coloc).count(), 2);
+        assert_eq!(c.draining_count(Role::Coloc), 1);
+        assert_eq!(c.committed_count(Role::Coloc), 2);
+        // Empty, so it retires right away.
+        assert_eq!(c.drained_ids(), vec![id]);
+        assert!(c.retire_if_drained(id, 9000));
+        assert!(!c.retire_if_drained(id, 9000));
+        assert_eq!(c.len(), 3, "retired instances keep their slot");
+        assert_eq!(c.active_count(Role::Coloc), 2);
+        assert_eq!(c.instances[id].active_span_ms(20_000), 8000);
+    }
+
+    #[test]
+    fn draining_tier_member_leaves_tier_view() {
+        let mut c = Cluster::build(ServingMode::Colocated, 3, 0.0, 2, &cm(), true);
+        let id = c.claim_for_tier(0, 0).unwrap();
+        assert_eq!(c.in_tier(0).count(), 1);
+        c.begin_drain(id, 100);
+        assert_eq!(c.in_tier(0).count(), 0, "draining member must be unroutable");
     }
 
     #[test]

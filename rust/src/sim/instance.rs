@@ -28,6 +28,41 @@ pub enum Role {
     Coloc,
 }
 
+/// Fleet-level lifecycle state of an instance (the elastic-fleet
+/// machinery; a fixed fleet keeps every instance `Active` forever).
+///
+/// `Provisioning → Active → Draining → Retired`; only `Active`
+/// instances accept new work. A `Draining` instance finishes its
+/// resident requests (decode streams, queued prefills) and is retired
+/// by the simulator once empty. `Retired` instances stay in
+/// `Cluster::instances` (ids are stable indices) but are invisible to
+/// every placement path and stop accruing cost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lifecycle {
+    /// Cold-starting; becomes `Active` at `ready_at` (`InstanceReady`).
+    Provisioning { ready_at: TimeMs },
+    /// Serving normally.
+    Active,
+    /// Finishing resident requests; accepts nothing new.
+    Draining { since: TimeMs },
+    /// Decommissioned at `at`; never serves again.
+    Retired { at: TimeMs },
+}
+
+impl Lifecycle {
+    /// May this instance be handed *new* work?
+    #[inline]
+    pub fn accepts_work(&self) -> bool {
+        matches!(self, Lifecycle::Active)
+    }
+
+    /// Is this instance billable fleet capacity (anything but retired)?
+    #[inline]
+    pub fn is_live(&self) -> bool {
+        !matches!(self, Lifecycle::Retired { .. })
+    }
+}
+
 /// A queued prefill job (request awaiting prompt processing here).
 #[derive(Debug, Clone, Copy)]
 pub struct PrefillJob {
@@ -62,6 +97,11 @@ pub struct IterationBatch {
 pub struct Instance {
     pub id: usize,
     pub role: Role,
+    /// Elastic-fleet lifecycle state (`Active` for fixed fleets).
+    pub lifecycle: Lifecycle,
+    /// Simulated time this instance was provisioned (0 for the initial
+    /// fleet) — the start of its active-instance-second billing window.
+    pub born_ms: TimeMs,
     /// Decode-phase requests resident (their KV lives here).
     pub running: Vec<RunningReq>,
     /// Requests queued for (chunked) prefill on this instance.
@@ -91,6 +131,8 @@ impl Instance {
         Instance {
             id,
             role,
+            lifecycle: Lifecycle::Active,
+            born_ms: 0,
             running: Vec::new(),
             prefill_queue: VecDeque::new(),
             decode_queue: VecDeque::new(),
@@ -106,9 +148,70 @@ impl Instance {
         }
     }
 
+    /// A cold-starting instance for the elastic fleet: joins the
+    /// cluster now, starts serving at `ready_at`.
+    pub fn new_provisioning(
+        id: usize,
+        role: Role,
+        kv_capacity: u64,
+        max_token_batch: u64,
+        now: TimeMs,
+        ready_at: TimeMs,
+    ) -> Instance {
+        let mut i = Instance::new(id, role, kv_capacity, max_token_batch);
+        i.lifecycle = Lifecycle::Provisioning { ready_at };
+        i.born_ms = now;
+        i
+    }
+
+    // ---- lifecycle transitions (elastic fleet) ----
+
+    /// Cold start finished (`InstanceReady`).
+    pub fn mark_ready(&mut self) {
+        debug_assert!(
+            matches!(self.lifecycle, Lifecycle::Provisioning { .. }),
+            "mark_ready on non-provisioning instance {}",
+            self.id
+        );
+        self.lifecycle = Lifecycle::Active;
+    }
+
+    /// Stop accepting new work; resident requests run to completion.
+    pub fn begin_drain(&mut self, now: TimeMs) {
+        debug_assert!(
+            self.lifecycle.accepts_work(),
+            "draining non-active instance {}",
+            self.id
+        );
+        self.lifecycle = Lifecycle::Draining { since: now };
+    }
+
+    /// Decommission (must be empty); closes the billing window.
+    pub fn retire(&mut self, now: TimeMs) {
+        debug_assert!(self.is_empty(), "retiring instance {} with work", self.id);
+        self.lifecycle = Lifecycle::Retired { at: now };
+        self.alloc_end(now);
+    }
+
+    /// Billable active-instance·ms by `end`: from provisioning start to
+    /// retirement (or `end` when still live).
+    pub fn active_span_ms(&self, end: TimeMs) -> u64 {
+        let until = match self.lifecycle {
+            Lifecycle::Retired { at } => at.min(end),
+            _ => end,
+        };
+        until.saturating_sub(self.born_ms)
+    }
+
     // ---- queue management ----
 
     pub fn push_prefill(&mut self, job: PrefillJob) {
+        debug_assert!(
+            self.lifecycle.accepts_work(),
+            "prefill placed on non-active instance {} ({:?})",
+            self.id,
+            self.lifecycle
+        );
         // EDF order: insert by deadline (§4.2: prioritize nearest
         // deadline for prefill scheduling).
         let pos = self
@@ -120,6 +223,12 @@ impl Instance {
     }
 
     pub fn push_decode(&mut self, req_idx: usize, ready: TimeMs) {
+        debug_assert!(
+            self.lifecycle.accepts_work(),
+            "decode placed on non-active instance {} ({:?})",
+            self.id,
+            self.lifecycle
+        );
         self.decode_queue.push_back((req_idx, ready));
     }
 
@@ -550,6 +659,25 @@ mod tests {
         let _ = i.form_batch(0, &mut reqs, 0, &cm()).unwrap();
         assert_eq!(i.current.b_decode, 1);
         assert_eq!(i.current.b_prefill, 0);
+    }
+
+    #[test]
+    fn lifecycle_transitions_and_billing_window() {
+        let mut i = Instance::new_provisioning(3, Role::Coloc, 1_000_000, 2048, 500, 1500);
+        assert!(!i.lifecycle.accepts_work());
+        assert!(i.lifecycle.is_live());
+        i.mark_ready();
+        assert!(i.lifecycle.accepts_work());
+        i.begin_drain(2000);
+        assert!(!i.lifecycle.accepts_work());
+        assert!(i.lifecycle.is_live());
+        i.retire(3000);
+        assert!(!i.lifecycle.is_live());
+        // Billed from provisioning start (500) to retirement (3000).
+        assert_eq!(i.active_span_ms(10_000), 2500);
+        // A never-retired instance bills to the end of the run.
+        let j = Instance::new(0, Role::Coloc, 1, 1);
+        assert_eq!(j.active_span_ms(4000), 4000);
     }
 
     #[test]

@@ -22,11 +22,11 @@ pub mod cluster;
 pub mod instance;
 
 pub use cluster::{Cluster, TierAssign};
-pub use instance::{Instance, PrefillJob, Role};
+pub use instance::{Instance, Lifecycle, PrefillJob, Role};
 
 use crate::analysis::ServingMode;
-use crate::coordinator::{RouteCtx, Router};
-use crate::metrics::{AttainmentReport, CostAccount, RequestOutcome};
+use crate::coordinator::{Autoscaler, RouteCtx, Router, ScaleAction};
+use crate::metrics::{AttainmentReport, CostAccount, FleetSample, FleetSeries, RequestOutcome};
 use crate::model::CostModel;
 use crate::profile::ProfileTable;
 use crate::slo::{DsloTracker, TimeMs};
@@ -73,12 +73,30 @@ pub struct SimResult {
     pub outcomes: Vec<RequestOutcome>,
     pub attainment: AttainmentReport,
     pub cost: CostAccount,
+    /// Per-tier fleet-size time series (empty for fixed-fleet runs).
+    pub fleet: FleetSeries,
     /// Wall-clock simulated, ms.
     pub sim_span_ms: TimeMs,
     /// Completed requests per second of simulated time.
     pub throughput_rps: f64,
     /// Requests never finished (stuck/dropped) — should be 0.
     pub unfinished: usize,
+}
+
+/// Fleet-elasticity mechanics (bounds and delays; *when* to scale is
+/// the [`Autoscaler`]'s decision). Bounds apply to the scalable role —
+/// decode servers under PD, coloc servers under co-location; a PD
+/// prefill cluster stays static.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ElasticParams {
+    /// Never drain below this many scalable instances.
+    pub min_instances: usize,
+    /// Never provision above this many (active + cold-starting).
+    pub max_instances: usize,
+    /// Cold-start delay: provision → `InstanceReady`.
+    pub provision_delay_ms: TimeMs,
+    /// Period of the `ScaleEval` event.
+    pub scale_eval_ms: TimeMs,
 }
 
 /// Environment knobs (not policy).
@@ -91,6 +109,9 @@ pub struct SimParams {
     pub tick_ms: TimeMs,
     /// Abort the run if simulated time exceeds this (safety valve).
     pub max_sim_ms: TimeMs,
+    /// Elastic-fleet mechanics; `None` = fixed fleet (seed behaviour:
+    /// no lifecycle events are ever scheduled).
+    pub elastic: Option<ElasticParams>,
 }
 
 impl Default for SimParams {
@@ -100,6 +121,7 @@ impl Default for SimParams {
             kv_transfer_ms: 2,
             tick_ms: 100,
             max_sim_ms: 48 * 3600 * 1000,
+            elastic: None,
         }
     }
 }
@@ -111,6 +133,10 @@ enum EventKey {
     /// Retry starting an iteration (e.g. a KV handoff becomes ready).
     Wake(usize),
     Tick,
+    /// A provisioned instance finished its cold start.
+    InstanceReady(usize),
+    /// Periodic autoscaler evaluation (elastic fleets only).
+    ScaleEval,
 }
 
 /// The event-driven simulation.
@@ -123,6 +149,7 @@ pub struct Simulation<'a> {
     events: BinaryHeap<Reverse<(TimeMs, u64, EventKey)>>,
     seq: u64,
     now: TimeMs,
+    fleet: FleetSeries,
 }
 
 impl<'a> Simulation<'a> {
@@ -165,6 +192,7 @@ impl<'a> Simulation<'a> {
             events,
             seq,
             now: 0,
+            fleet: FleetSeries::default(),
         }
     }
 
@@ -183,10 +211,26 @@ impl<'a> Simulation<'a> {
         }
     }
 
-    /// Run to completion under `router`; returns outcomes and metrics.
-    pub fn run(mut self, router: &mut dyn Router) -> SimResult {
+    /// Run to completion under `router` with a fixed fleet.
+    pub fn run(self, router: &mut dyn Router) -> SimResult {
+        self.run_elastic(router, None)
+    }
+
+    /// Run to completion under `router`, with an optional fleet
+    /// autoscaler (requires `params.elastic`); returns outcomes and
+    /// metrics. With `scaler == None` this is byte-identical to the
+    /// fixed-fleet path: no lifecycle event is ever scheduled.
+    pub fn run_elastic(
+        mut self,
+        router: &mut dyn Router,
+        mut scaler: Option<&mut dyn Autoscaler>,
+    ) -> SimResult {
         let mut completed = 0usize;
         let total = self.requests.len();
+        if let (Some(ep), true) = (self.params.elastic.clone(), scaler.is_some()) {
+            self.sample_fleet();
+            self.push_event(ep.scale_eval_ms.max(1), EventKey::ScaleEval);
+        }
         while let Some(Reverse((t, _, key))) = self.events.pop() {
             debug_assert!(t >= self.now, "time went backwards");
             self.now = t;
@@ -201,6 +245,25 @@ impl<'a> Simulation<'a> {
                 }
                 EventKey::Wake(inst) => {
                     self.maybe_start_iteration(inst, router);
+                }
+                EventKey::InstanceReady(inst) => {
+                    self.cluster.mark_ready(inst);
+                    // Fresh capacity may unblock pending work at once.
+                    router.on_tick(self.now, &mut self.ctx());
+                    self.restart_fed_instances(router);
+                }
+                EventKey::ScaleEval => {
+                    if completed < total {
+                        if let (Some(sc), Some(ep)) =
+                            (scaler.as_deref_mut(), self.params.elastic.clone())
+                        {
+                            self.handle_scale_eval(sc, &ep, router);
+                            self.push_event(
+                                self.now + ep.scale_eval_ms.max(1),
+                                EventKey::ScaleEval,
+                            );
+                        }
+                    }
                 }
                 EventKey::Tick => {
                     if completed < total {
@@ -219,6 +282,11 @@ impl<'a> Simulation<'a> {
                         for inst in idle {
                             self.maybe_start_iteration(inst, router);
                         }
+                        // Retire drainers that emptied outside their own
+                        // iteration path (e.g. released by the router).
+                        for id in self.cluster.drained_ids() {
+                            self.cluster.retire_if_drained(id, self.now);
+                        }
                         if log::log_enabled!(log::Level::Trace) && self.now % 1000 == 0 {
                             self.log_timeline();
                         }
@@ -232,6 +300,68 @@ impl<'a> Simulation<'a> {
             }
         }
         self.finalize(completed)
+    }
+
+    /// Apply one autoscaler evaluation: bounds-checked provision/drain
+    /// plus a fleet-size sample.
+    fn handle_scale_eval(
+        &mut self,
+        scaler: &mut dyn Autoscaler,
+        ep: &ElasticParams,
+        _router: &mut dyn Router,
+    ) {
+        let actions = scaler.evaluate(self.now, &mut self.ctx());
+        for action in actions {
+            match action {
+                ScaleAction::Provision { role } => {
+                    if self.cluster.committed_count(role) < ep.max_instances {
+                        let ready = self.now + ep.provision_delay_ms;
+                        let id = self.cluster.provision(role, self.now, ready);
+                        self.push_event(ready, EventKey::InstanceReady(id));
+                        log::debug!(
+                            "t={} scale-out: provision inst {id} ({role:?}), ready at {ready}",
+                            self.now
+                        );
+                    }
+                }
+                ScaleAction::Drain { inst } => {
+                    let role = self.cluster.instances[inst].role;
+                    if self.cluster.instances[inst].lifecycle.accepts_work()
+                        && self.cluster.active_count(role) > ep.min_instances
+                    {
+                        self.cluster.begin_drain(inst, self.now);
+                        // Empty drainers retire on the spot.
+                        self.cluster.retire_if_drained(inst, self.now);
+                        log::debug!("t={} scale-in: drain inst {inst} ({role:?})", self.now);
+                    }
+                }
+            }
+        }
+        self.sample_fleet();
+    }
+
+    /// Record the current fleet composition.
+    fn sample_fleet(&mut self) {
+        let per_tier: Vec<usize> = (0..self.cluster.num_tiers)
+            .map(|k| self.cluster.in_tier(k).count())
+            .collect();
+        let mut sample = FleetSample {
+            t_ms: self.now,
+            per_tier,
+            best_effort: self.cluster.best_effort_pool().count(),
+            active: 0,
+            provisioning: 0,
+            draining: 0,
+        };
+        for i in &self.cluster.instances {
+            match i.lifecycle {
+                Lifecycle::Active => sample.active += 1,
+                Lifecycle::Provisioning { .. } => sample.provisioning += 1,
+                Lifecycle::Draining { .. } => sample.draining += 1,
+                Lifecycle::Retired { .. } => {}
+            }
+        }
+        self.fleet.samples.push(sample);
     }
 
     fn handle_arrival(&mut self, idx: usize, router: &mut dyn Router) {
@@ -253,12 +383,15 @@ impl<'a> Simulation<'a> {
             return;
         }
         let budget = router.chunk_budget(self.now, inst, &mut self.ctx());
-        let cm = self.cost_model.clone();
         let now = self.now;
-        let iter = {
-            let i = &mut self.cluster.instances[inst];
-            i.form_batch(now, &mut self.requests, budget, &cm)
-        };
+        // Disjoint field borrows: the instance is mutated while the
+        // cost model is only read — no clone needed on this hot path.
+        let iter = self.cluster.instances[inst].form_batch(
+            now,
+            &mut self.requests,
+            budget,
+            &self.cost_model,
+        );
         let Some(iter_ms) = iter else { return };
         let i = &mut self.cluster.instances[inst];
         i.iterating = true;
@@ -298,6 +431,9 @@ impl<'a> Simulation<'a> {
         router.on_iter_end(now, inst, &mut self.ctx());
         self.maybe_start_iteration(inst, router);
         self.restart_fed_instances(router);
+        // A draining instance whose last resident just finished leaves
+        // the fleet here.
+        self.cluster.retire_if_drained(inst, now);
         finished
     }
 
@@ -369,15 +505,28 @@ impl<'a> Simulation<'a> {
             requests_served: outcomes.iter().filter(|o| o.finish_ms.is_some()).count() as u64,
             ..Default::default()
         };
+        for o in &outcomes {
+            if o.finish_ms.is_none() {
+                continue; // partial tokens of unfinished requests don't bill
+            }
+            cost.tokens_total += o.tokens;
+            if o.attained {
+                cost.goodput_tokens += o.tokens;
+            }
+        }
         for i in &self.cluster.instances {
             cost.instance_busy_ms += i.busy_ms_total;
             // Statically-assigned instances (baselines, the PD prefill
-            // cluster) are allocated for the whole run; tier-managed
-            // instances count their tier-allocation intervals.
+            // cluster) are allocated for their whole lifetime (= the
+            // whole run on a fixed fleet); tier-managed instances count
+            // their tier-allocation intervals.
             cost.instance_alloc_ms += match self.cluster.assign[i.id] {
-                TierAssign::Static => span,
+                TierAssign::Static => i.active_span_ms(span),
                 _ => i.allocated_ms(span),
             };
+            // Elastic-fleet billing: an instance costs money from the
+            // moment it is provisioned until it retires, busy or not.
+            cost.active_instance_ms += i.active_span_ms(span);
         }
         let throughput_rps = if span > 0 {
             cost.requests_served as f64 / (span as f64 / 1000.0)
@@ -389,6 +538,7 @@ impl<'a> Simulation<'a> {
             outcomes,
             attainment,
             cost,
+            fleet: self.fleet,
             sim_span_ms: span,
             throughput_rps,
         }

@@ -20,7 +20,9 @@ pub fn poisson_arrivals(n: usize, rate_per_s: f64, rng: &mut Rng) -> Vec<TimeMs>
 }
 
 /// A piecewise-constant rate schedule: (start_ms, rate_per_s) segments.
-/// Used for burst experiments beyond the paper's single inversion.
+/// Used for burst experiments beyond the paper's single inversion, and
+/// (via [`RateSchedule::diurnal`]) as the demand curve the elastic
+/// fleet's autoscaler chases.
 #[derive(Debug, Clone)]
 pub struct RateSchedule {
     /// (start time ms, rate req/s); must be sorted by start, first at 0.
@@ -32,6 +34,36 @@ impl RateSchedule {
         RateSchedule {
             segments: vec![(0, rate_per_s)],
         }
+    }
+
+    /// A diurnal demand curve: a piecewise-constant approximation of
+    /// `mean · (1 + a·sin(2πt/period))` over `periods` periods, sampled
+    /// at `segments_per_period` segment midpoints. `a` is derived from
+    /// the requested peak:trough ratio (`a = (r−1)/(r+1)`), so e.g.
+    /// `peak_to_trough = 3` swings between 1.5× and 0.5× the mean. By
+    /// midpoint symmetry the schedule integrates exactly to
+    /// `mean_rate_per_s` over every full period.
+    pub fn diurnal(
+        mean_rate_per_s: f64,
+        peak_to_trough: f64,
+        period_ms: TimeMs,
+        segments_per_period: usize,
+        periods: usize,
+    ) -> RateSchedule {
+        assert!(mean_rate_per_s > 0.0);
+        assert!(peak_to_trough >= 1.0, "peak:trough must be >= 1");
+        assert!(segments_per_period >= 2 && periods >= 1 && period_ms >= 2);
+        let a = (peak_to_trough - 1.0) / (peak_to_trough + 1.0);
+        let m = segments_per_period;
+        let mut segments = Vec::with_capacity(m * periods);
+        for p in 0..periods {
+            for i in 0..m {
+                let start = p as TimeMs * period_ms + (i as TimeMs * period_ms) / m as TimeMs;
+                let phase = 2.0 * std::f64::consts::PI * (i as f64 + 0.5) / m as f64;
+                segments.push((start, mean_rate_per_s * (1.0 + a * phase.sin())));
+            }
+        }
+        RateSchedule { segments }
     }
 
     pub fn rate_at(&self, t: TimeMs) -> f64 {
@@ -46,16 +78,44 @@ impl RateSchedule {
         rate
     }
 
+    /// Time-weighted mean rate over `[0, until)` (the last segment
+    /// extends to `until`).
+    pub fn mean_rate_over(&self, until: TimeMs) -> f64 {
+        assert!(!self.segments.is_empty() && until > 0);
+        let mut acc = 0.0;
+        for (i, &(start, rate)) in self.segments.iter().enumerate() {
+            if start >= until {
+                break;
+            }
+            let end = self
+                .segments
+                .get(i + 1)
+                .map(|&(s, _)| s.min(until))
+                .unwrap_or(until);
+            acc += rate * end.saturating_sub(start) as f64;
+        }
+        acc / until as f64
+    }
+
     /// Generate `n` arrivals following the schedule (thinning-free:
-    /// advance with the current segment's exponential gaps).
+    /// advance with the current segment's exponential gaps). Timestamps
+    /// are strictly increasing — simultaneous sub-millisecond arrivals
+    /// are pushed to consecutive milliseconds, matching the simulator's
+    /// 1 ms resolution.
     pub fn arrivals(&self, n: usize, rng: &mut Rng) -> Vec<TimeMs> {
         assert!(!self.segments.is_empty());
         let mut t = 0.0f64;
+        let mut prev: Option<TimeMs> = None;
         (0..n)
             .map(|_| {
                 let rate = self.rate_at(t as TimeMs);
                 t += rng.exp(rate) * 1000.0;
-                t as TimeMs
+                let ms = match prev {
+                    Some(p) => (t as TimeMs).max(p + 1),
+                    None => t as TimeMs,
+                };
+                prev = Some(ms);
+                ms
             })
             .collect()
     }
@@ -96,6 +156,32 @@ mod tests {
         assert_eq!(s.rate_at(999), 10.0);
         assert_eq!(s.rate_at(1000), 50.0);
         assert_eq!(s.rate_at(10_000), 20.0);
+    }
+
+    #[test]
+    fn diurnal_integrates_to_mean_and_swings() {
+        let mean = 60.0;
+        let period = 600_000; // 10 min
+        let s = RateSchedule::diurnal(mean, 3.0, period, 24, 2);
+        assert_eq!(s.segments.len(), 48);
+        // Exact by midpoint symmetry over full periods.
+        assert!((s.mean_rate_over(2 * period) - mean).abs() / mean < 1e-9);
+        // Peak and trough match the requested 3:1 ratio (a = 0.5).
+        let peak = s.segments.iter().map(|&(_, r)| r).fold(0.0, f64::max);
+        let trough = s.segments.iter().map(|&(_, r)| r).fold(f64::INFINITY, f64::min);
+        assert!((peak / trough - 3.0).abs() < 0.1, "ratio {}", peak / trough);
+        assert!(peak <= mean * 1.5 + 1e-9 && trough >= mean * 0.5 - 1e-9);
+    }
+
+    #[test]
+    fn schedule_arrivals_strictly_increasing() {
+        let s = RateSchedule::diurnal(400.0, 4.0, 60_000, 12, 1);
+        let mut rng = Rng::new(11);
+        let arr = s.arrivals(20_000, &mut rng);
+        assert!(
+            arr.windows(2).all(|w| w[0] < w[1]),
+            "arrivals must be strictly increasing"
+        );
     }
 
     #[test]

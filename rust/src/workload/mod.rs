@@ -5,7 +5,7 @@ pub mod traces;
 pub mod arrivals;
 
 pub use traces::{TraceKind, TraceGenerator};
-pub use arrivals::poisson_arrivals;
+pub use arrivals::{poisson_arrivals, RateSchedule};
 
 use crate::slo::{Slo, TimeMs};
 

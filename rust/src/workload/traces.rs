@@ -155,17 +155,7 @@ impl TraceGenerator {
         for id in 0..n {
             t_ms += rng.exp(rate_per_s) * 1000.0;
             let (p, d) = self.sample_lengths(rng);
-            // resample the SLO (not the lengths) until achievable; give
-            // up after 32 tries and take best effort.
-            let mut slo = tiers.sample(rng);
-            let mut tries = 0;
-            while !achievable(p, d, slo) && tries < 32 {
-                slo = tiers.sample(rng);
-                tries += 1;
-            }
-            if !achievable(p, d, slo) {
-                slo = crate::slo::Slo::BEST_EFFORT;
-            }
+            let slo = draw_achievable_slo(tiers, p, d, &achievable, rng);
             requests.push(Request {
                 id: id as u64,
                 arrival_ms: t_ms as u64,
@@ -176,6 +166,54 @@ impl TraceGenerator {
         }
         Workload { requests }
     }
+
+    /// Generate a workload with externally supplied arrival timestamps
+    /// (e.g. a diurnal [`crate::workload::RateSchedule`]); lengths and
+    /// SLOs are drawn exactly as in [`TraceGenerator::generate`].
+    pub fn generate_with_arrivals(
+        &self,
+        arrivals: &[crate::slo::TimeMs],
+        tiers: &TierDistribution,
+        achievable: impl Fn(u32, u32, crate::slo::Slo) -> bool,
+        rng: &mut Rng,
+    ) -> Workload {
+        let mut requests = Vec::with_capacity(arrivals.len());
+        for (id, &arrival_ms) in arrivals.iter().enumerate() {
+            let (p, d) = self.sample_lengths(rng);
+            let slo = draw_achievable_slo(tiers, p, d, &achievable, rng);
+            requests.push(Request {
+                id: id as u64,
+                arrival_ms,
+                prefill_len: p,
+                decode_len: d,
+                slo,
+            });
+        }
+        Workload { requests }
+    }
+}
+
+/// §5.1 SLO assignment: resample the SLO (not the lengths) until the
+/// achievability filter accepts it; give up after 32 tries and take
+/// best effort. Shared by every workload generator so constant-rate
+/// and scheduled arrivals get identical SLO policy.
+fn draw_achievable_slo(
+    tiers: &TierDistribution,
+    p: u32,
+    d: u32,
+    achievable: &impl Fn(u32, u32, crate::slo::Slo) -> bool,
+    rng: &mut Rng,
+) -> crate::slo::Slo {
+    let mut slo = tiers.sample(rng);
+    let mut tries = 0;
+    while !achievable(p, d, slo) && tries < 32 {
+        slo = tiers.sample(rng);
+        tries += 1;
+    }
+    if !achievable(p, d, slo) {
+        slo = crate::slo::Slo::BEST_EFFORT;
+    }
+    slo
 }
 
 #[cfg(test)]

@@ -1,0 +1,200 @@
+//! Property tests for the elastic-fleet layer: `RateSchedule`
+//! invariants (util::prop, the in-repo proptest substitute) and
+//! whole-simulation lifecycle invariants. Lifecycle placement safety
+//! (no request ever lands on a Provisioning/Draining/Retired instance)
+//! is enforced by `debug_assert`s inside `Instance::push_prefill` /
+//! `push_decode`, which are active in these builds — any violation
+//! panics the run.
+
+use polyserve::analysis::ServingMode;
+use polyserve::config::{Policy, ScalerKind, SimConfig};
+use polyserve::figures::run_sim;
+use polyserve::util::prop::{check, Gen, IntRange, VecOf};
+use polyserve::util::rng::Rng;
+use polyserve::workload::{RateSchedule, TraceKind};
+
+#[test]
+fn prop_schedule_arrivals_strictly_increasing() {
+    // Any well-formed schedule yields strictly increasing timestamps,
+    // even at rates far above 1 req/ms.
+    let gen = VecOf {
+        elem: IntRange { lo: 1, hi: 5_000 },
+        min_len: 1,
+        max_len: 6,
+    };
+    check("arrivals_strictly_increasing", &gen, |rates| {
+        let segments: Vec<(u64, f64)> = rates
+            .iter()
+            .enumerate()
+            .map(|(i, &r)| (i as u64 * 10_000, r as f64))
+            .collect();
+        let s = RateSchedule { segments };
+        let mut rng = Rng::new(rates.iter().sum::<u64>() ^ 0xA11);
+        let arr = s.arrivals(3_000, &mut rng);
+        for w in arr.windows(2) {
+            if w[0] >= w[1] {
+                return Err(format!("not strictly increasing: {} then {}", w[0], w[1]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rate_at_segment_boundaries() {
+    // rate_at must switch exactly *at* each segment start: the new rate
+    // holds at the boundary, the old rate one ms before it.
+    let gen = VecOf {
+        elem: IntRange { lo: 1, hi: 1_000 },
+        min_len: 2,
+        max_len: 12,
+    };
+    check("rate_at_boundaries", &gen, |gaps| {
+        let mut start = 0u64;
+        let mut segments = Vec::new();
+        for (i, &gap) in gaps.iter().enumerate() {
+            segments.push((start, (i + 1) as f64));
+            start += gap;
+        }
+        let s = RateSchedule { segments: segments.clone() };
+        for (i, &(b, rate)) in segments.iter().enumerate() {
+            if s.rate_at(b) != rate {
+                return Err(format!("rate_at({b}) = {} want {rate}", s.rate_at(b)));
+            }
+            if i > 0 {
+                let before = segments[i - 1].1;
+                if s.rate_at(b - 1) != before {
+                    return Err(format!("rate_at({}) = {} want {before}", b - 1, s.rate_at(b - 1)));
+                }
+            }
+        }
+        // Beyond the last segment the last rate holds.
+        if s.rate_at(start + 1_000_000) != segments.last().unwrap().1 {
+            return Err("tail rate wrong".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_diurnal_integrates_to_mean() {
+    struct SpecGen;
+    impl Gen for SpecGen {
+        type Value = (u64, u64, u64, u64);
+        fn generate(&self, rng: &mut Rng) -> Self::Value {
+            (
+                // Peak rates stay well under the 1 req/ms strict-
+                // monotonicity clamp so realized rates are undistorted.
+                rng.range_u64(5, 120),    // mean rate req/s
+                rng.range_u64(10, 80),    // peak:trough ratio ×10 (1.0..8.0)
+                rng.range_u64(60, 3600),  // period s
+                rng.range_u64(4, 48),     // segments per period
+            )
+        }
+    }
+    check("diurnal_mean", &SpecGen, |&(mean, ratio10, period_s, segs)| {
+        let mean = mean as f64;
+        let ratio = ratio10 as f64 / 10.0;
+        let period_ms = period_s * 1000;
+        let s = RateSchedule::diurnal(mean, ratio, period_ms, segs as usize, 3);
+        // Deterministic: the piecewise integral over full periods must
+        // land within 5% of the requested mean (midpoint sampling makes
+        // it exact; the tolerance guards the discretization).
+        let got = s.mean_rate_over(3 * period_ms);
+        if (got - mean).abs() / mean > 0.05 {
+            return Err(format!("mean {got} vs requested {mean}"));
+        }
+        // And the realized arrival rate agrees (sampling noise bound).
+        let mut rng = Rng::new(period_s ^ 0xD1);
+        let n = 20_000;
+        let arr = s.arrivals(n, &mut rng);
+        let span_s = (*arr.last().unwrap() - arr[0]) as f64 / 1000.0;
+        let realized = (n - 1) as f64 / span_s;
+        // Arrivals past the 3 scheduled periods run at the last
+        // segment's rate, so only check when the span stays inside.
+        if *arr.last().unwrap() <= 3 * period_ms && (realized - mean).abs() / mean > 0.08 {
+            return Err(format!("realized {realized} vs requested {mean}"));
+        }
+        Ok(())
+    });
+}
+
+/// An elastic run must complete every request (no placement on
+/// non-active instances — enforced by debug_asserts — and no request
+/// lost across provision/drain/retire transitions), and its bill must
+/// never exceed the never-shrinking upper bound.
+#[test]
+fn elastic_runs_complete_and_stay_bounded() {
+    let cells: &[(ServingMode, ScalerKind, Policy, bool)] = &[
+        (ServingMode::Colocated, ScalerKind::Gradient, Policy::PolyServe, true),
+        (ServingMode::Colocated, ScalerKind::Threshold, Policy::PolyServe, false),
+        (ServingMode::PdDisaggregated, ScalerKind::Gradient, Policy::PolyServe, true),
+        (ServingMode::PdDisaggregated, ScalerKind::Threshold, Policy::Minimal, false),
+    ];
+    for &(mode, scaler, policy, diurnal) in cells {
+        let mut cfg = SimConfig {
+            trace: TraceKind::ShareGpt,
+            policy,
+            mode,
+            instances: 6,
+            requests: 500,
+            rate_frac_of_optimal: 0.5,
+            seed: 7,
+            ..Default::default()
+        };
+        if diurnal {
+            cfg.diurnal = Some(polyserve::config::DiurnalSpec {
+                peak_to_trough: 3.0,
+                period_s: 120.0,
+            });
+        }
+        cfg.elastic.scaler = scaler;
+        cfg.elastic.min_instances = 2;
+        cfg.elastic.max_instances = 12;
+        cfg.elastic.provision_delay_ms = 5_000;
+        cfg.elastic.scale_eval_ms = 1_000;
+        let res = run_sim(&cfg);
+        let label = format!("{mode:?}/{scaler:?}/{policy:?}");
+        assert_eq!(res.unfinished, 0, "{label}: unfinished requests");
+        assert_eq!(res.cost.requests_served, 500, "{label}");
+        assert!(!res.fleet.is_empty(), "{label}: no fleet samples");
+        // The bill can never exceed every-instance-alive-for-the-run.
+        let total_slots = res.fleet.samples.iter().map(|s| s.active + s.provisioning + s.draining).max().unwrap_or(0) as u64
+            + 64; // retired slots; generous
+        assert!(
+            res.cost.active_instance_ms <= total_slots * res.sim_span_ms,
+            "{label}: bill exceeds fleet-lifetime bound"
+        );
+        assert!(res.cost.goodput_tokens <= res.cost.tokens_total, "{label}");
+    }
+}
+
+/// `max == min` (with zero provision delay) is *the* static fleet: the
+/// elastic machinery must disengage entirely and reproduce the
+/// fixed-fleet numbers bit-for-bit.
+#[test]
+fn static_bounds_reproduce_fixed_fleet_bit_for_bit() {
+    let base = SimConfig {
+        trace: TraceKind::ShareGpt,
+        policy: Policy::PolyServe,
+        mode: ServingMode::PdDisaggregated,
+        instances: 8,
+        requests: 1_000,
+        rate_frac_of_optimal: 0.7,
+        seed: 42,
+        ..Default::default()
+    };
+    let fixed = run_sim(&base);
+    let mut static_elastic = base.clone();
+    static_elastic.elastic.scaler = ScalerKind::Gradient;
+    static_elastic.elastic.min_instances = 8;
+    static_elastic.elastic.max_instances = 8;
+    static_elastic.elastic.provision_delay_ms = 0;
+    let pinned = run_sim(&static_elastic);
+    assert_eq!(fixed.attainment.overall(), pinned.attainment.overall());
+    assert_eq!(fixed.sim_span_ms, pinned.sim_span_ms);
+    assert_eq!(fixed.cost.instance_busy_ms, pinned.cost.instance_busy_ms);
+    assert_eq!(fixed.cost.instance_alloc_ms, pinned.cost.instance_alloc_ms);
+    assert_eq!(fixed.cost.active_instance_ms, pinned.cost.active_instance_ms);
+    assert!(pinned.fleet.is_empty(), "static bounds must schedule no ScaleEval");
+}

@@ -1,18 +1,25 @@
 //! Elastic-fleet scenario sweep: diurnal and burst-inversion demand ×
-//! scaling policy, against a static fleet at equal peak capacity.
+//! scaling policy × scale-in migration, against a static fleet at equal
+//! peak capacity.
 //!
-//! The acceptance question this bench answers: with the §4.4
+//! The acceptance questions this bench answers: with the §4.4
 //! load-gradient autoscaler chasing a diurnal demand curve
 //! (peak:trough ≥ 3:1), how many active-instance-seconds does the
-//! fleet bill compared to a static fleet sized for the same peak — and
-//! does DSLO attainment hold while it saves? Results (incl. the
+//! fleet bill compared to a static fleet sized for the same peak, does
+//! DSLO attainment hold while it saves — and on the long-decode
+//! scenario, how much drain latency (begin_drain→retire) and bill does
+//! scale-in KV migration shave off wait-drain? Results (incl. the
 //! `savings_vs_static` column) land in `results/elastic_scaling_*.csv`.
+//!
+//! `POLYSERVE_SMOKE=1` runs a tiny workload and asserts the invariants
+//! (every request finishes; migration counters move only when enabled)
+//! so a migration regression fails CI outright.
 
 use polyserve::analysis::ServingMode;
 use polyserve::config::{DiurnalSpec, Policy, ScalerKind, SimConfig};
-use polyserve::figures::Experiment;
+use polyserve::figures::{size_elastic_pd_cell, Experiment};
 use polyserve::slo::TierDistribution;
-use polyserve::util::benchkit::{f, full_scale, Bench};
+use polyserve::util::benchkit::{f, full_scale, smoke_scale, Bench};
 use polyserve::util::rng::Rng;
 use polyserve::util::threadpool::par_map;
 use polyserve::workload::{TraceKind, Workload};
@@ -23,23 +30,35 @@ struct Scenario {
     diurnal: Option<DiurnalSpec>,
     /// §5.3-style tier-mix inversion halfway through the run.
     burst_inversion: bool,
+    /// Stretch a deterministic subset of decode lengths so drains hold
+    /// long-tailed residents — the scale-in migration stress case.
+    long_decode: bool,
 }
 
-const SCENARIOS: [Scenario; 3] = [
+const SCENARIOS: [Scenario; 4] = [
     Scenario {
         name: "diurnal_3to1",
         diurnal: Some(DiurnalSpec { peak_to_trough: 3.0, period_s: 600.0 }),
         burst_inversion: false,
+        long_decode: false,
     },
     Scenario {
         name: "diurnal_4to1_fast",
         diurnal: Some(DiurnalSpec { peak_to_trough: 4.0, period_s: 300.0 }),
         burst_inversion: false,
+        long_decode: false,
+    },
+    Scenario {
+        name: "diurnal_3to1_longdec",
+        diurnal: Some(DiurnalSpec { peak_to_trough: 3.0, period_s: 600.0 }),
+        burst_inversion: false,
+        long_decode: true,
     },
     Scenario {
         name: "burst_inversion",
         diurnal: None,
         burst_inversion: true,
+        long_decode: false,
     },
 ];
 
@@ -56,10 +75,21 @@ fn invert_second_half(w: &mut Workload, seed: u64) {
     }
 }
 
+/// Deterministically stretch every 5th request's decode to 6× — the
+/// long-output stragglers that hold a wait-drain open.
+fn stretch_decode_tail(w: &mut Workload) {
+    for r in w.requests.iter_mut().step_by(5) {
+        r.decode_len = (r.decode_len * 6).min(8192);
+    }
+}
+
+#[derive(Clone, Copy)]
 struct Cell {
     scenario: Scenario,
     mode: ServingMode,
     scaler: ScalerKind,
+    /// Scale-in KV migration on elastic cells.
+    migration: bool,
     /// Fixed fleet at peak capacity (the baseline bill).
     is_static: bool,
 }
@@ -71,6 +101,10 @@ struct CellResult {
     fleet_mean: f64,
     fleet_peak: usize,
     fleet_trough: usize,
+    drains: usize,
+    drain_mean_ms: f64,
+    migrated_reqs: u64,
+    migrated_kv_tokens: u64,
     unfinished: usize,
 }
 
@@ -95,19 +129,15 @@ fn run_cell(c: &Cell, n_peak: usize, requests: usize) -> CellResult {
         cfg.elastic.scaler = c.scaler;
         cfg.elastic.provision_delay_ms = 15_000;
         cfg.elastic.scale_eval_ms = 1_000;
+        cfg.elastic.migration = c.migration;
         match c.mode {
             ServingMode::PdDisaggregated => {
                 // Equal peak capacity: the static prefill cluster keeps
                 // its peak size (it does not scale); only the decode
                 // fleet is elastic, bounded by the static fleet's
                 // decode share.
-                let n_pf = ((n_peak as f64 * cfg.prefill_frac).round() as usize)
-                    .clamp(1, n_peak - 1);
-                let scalable_peak = n_peak - n_pf;
-                cfg.elastic.min_instances = (scalable_peak / 4).max(2);
-                cfg.elastic.max_instances = scalable_peak;
-                cfg.instances = n_pf + cfg.elastic.min_instances;
-                cfg.prefill_frac = n_pf as f64 / cfg.instances as f64;
+                let peak_frac = cfg.prefill_frac;
+                size_elastic_pd_cell(cfg, n_peak, peak_frac, |sp| (sp / 4).max(2));
             }
             ServingMode::Colocated => {
                 cfg.elastic.min_instances = (n_peak / 4).max(2);
@@ -118,6 +148,9 @@ fn run_cell(c: &Cell, n_peak: usize, requests: usize) -> CellResult {
     }
     if c.scenario.burst_inversion {
         invert_second_half(&mut exp.workload, cfg.seed);
+    }
+    if c.scenario.long_decode {
+        stretch_decode_tail(&mut exp.workload);
     }
     let res = exp.run();
     CellResult {
@@ -131,6 +164,10 @@ fn run_cell(c: &Cell, n_peak: usize, requests: usize) -> CellResult {
         },
         fleet_peak: if res.fleet.is_empty() { n_peak } else { res.fleet.peak_active() },
         fleet_trough: if res.fleet.is_empty() { n_peak } else { res.fleet.trough_active() },
+        drains: res.migration.drains(),
+        drain_mean_ms: res.migration.mean_drain_latency_ms(),
+        migrated_reqs: res.migration.migrated_requests,
+        migrated_kv_tokens: res.migration.migrated_kv_tokens,
         unfinished: res.unfinished,
     }
 }
@@ -138,16 +175,37 @@ fn run_cell(c: &Cell, n_peak: usize, requests: usize) -> CellResult {
 fn main() {
     let mut bench = Bench::new("elastic_scaling");
     let full = full_scale();
-    let requests = if full { 30_000 } else { 4_000 };
-    let n_peak = if full { 48 } else { 24 };
+    let smoke = smoke_scale();
+    let requests = if full {
+        30_000
+    } else if smoke {
+        800
+    } else {
+        4_000
+    };
+    let n_peak = if full {
+        48
+    } else if smoke {
+        8
+    } else {
+        24
+    };
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
 
     let mut cells = Vec::new();
     for scenario in SCENARIOS {
         for mode in [ServingMode::Colocated, ServingMode::PdDisaggregated] {
-            cells.push(Cell { scenario, mode, scaler: ScalerKind::Off, is_static: true });
+            cells.push(Cell {
+                scenario,
+                mode,
+                scaler: ScalerKind::Off,
+                migration: false,
+                is_static: true,
+            });
             for scaler in [ScalerKind::Gradient, ScalerKind::Threshold] {
-                cells.push(Cell { scenario, mode, scaler, is_static: false });
+                for migration in [false, true] {
+                    cells.push(Cell { scenario, mode, scaler, migration, is_static: false });
+                }
             }
         }
     }
@@ -167,7 +225,13 @@ fn main() {
 
     let mut rows = Vec::new();
     for (c, r) in &results {
-        let policy = if c.is_static { "static".to_string() } else { c.scaler.name().to_string() };
+        let policy = if c.is_static {
+            "static".to_string()
+        } else if c.migration {
+            format!("{}+mig", c.scaler.name())
+        } else {
+            c.scaler.name().to_string()
+        };
         let (base_bill, base_attain) = static_cell(c.scenario.name, c.mode);
         let savings = if c.is_static { 0.0 } else { 1.0 - r.active_instance_s / base_bill };
         let d_attain = r.attain - base_attain;
@@ -183,11 +247,14 @@ fn main() {
             f(r.fleet_mean, 1),
             r.fleet_peak.to_string(),
             r.fleet_trough.to_string(),
+            r.drains.to_string(),
+            f(r.drain_mean_ms, 0),
+            r.migrated_reqs.to_string(),
             r.unfinished.to_string(),
         ]);
     }
     bench.table(
-        "Elastic scaling: active-instance-seconds vs static fleet at equal peak capacity",
+        "Elastic scaling: active-instance-seconds and drain latency vs static fleet at equal peak capacity",
         &[
             "scenario",
             "mode",
@@ -200,9 +267,39 @@ fn main() {
             "fleet_mean",
             "fleet_peak",
             "fleet_trough",
+            "drains",
+            "drain_mean_ms",
+            "migrated_reqs",
             "unfinished",
         ],
         &rows,
     );
+
+    // Smoke invariants (CI): every request must finish in every cell,
+    // and migration counters move only when migration is on.
+    if smoke {
+        for (c, r) in &results {
+            assert_eq!(
+                r.unfinished, 0,
+                "{}/{}/{:?} mig={} left requests unfinished",
+                c.scenario.name,
+                c.mode.name(),
+                c.scaler,
+                c.migration
+            );
+            assert!((0.0..=1.0).contains(&r.attain));
+            if !c.migration {
+                assert_eq!(
+                    r.migrated_reqs, 0,
+                    "{}/{}/{:?}: migration off but requests migrated",
+                    c.scenario.name,
+                    c.mode.name(),
+                    c.scaler
+                );
+                assert_eq!(r.migrated_kv_tokens, 0);
+            }
+        }
+        println!("smoke invariants OK ({} cells)", results.len());
+    }
     bench.finish();
 }

@@ -13,7 +13,7 @@
 
 use polyserve::analysis::ServingMode;
 use polyserve::config::{Policy, ScalerKind, SimConfig};
-use polyserve::figures::Experiment;
+use polyserve::figures::{auto_prefill_frac, size_elastic_pd_cell, Experiment};
 use polyserve::util::benchkit::{f, full_scale, Bench};
 use polyserve::util::threadpool::par_map;
 use polyserve::workload::TraceKind;
@@ -58,7 +58,7 @@ fn main() {
     // fleet (matching the 48-instance comparator row) rather than the
     // small initial fleet — otherwise elastic PD rows bottleneck on an
     // undersized prefill cluster for reasons unrelated to the scaler.
-    let pd_probe = Experiment::prepare(&SimConfig {
+    let pd_peak_frac = auto_prefill_frac(&SimConfig {
         trace,
         mode: ServingMode::PdDisaggregated,
         policy: Policy::PolyServe,
@@ -67,7 +67,6 @@ fn main() {
         rate_rps: Some(rates[0]),
         ..Default::default()
     });
-    let pd_n_pf = ((48.0 * pd_probe.cfg.prefill_frac).round() as usize).clamp(1, 47);
     let el_cells: Vec<SimConfig> = rates
         .iter()
         .flat_map(|&r| {
@@ -87,9 +86,7 @@ fn main() {
                 cfg.elastic.provision_delay_ms = 15_000;
                 cfg.elastic.scale_eval_ms = 1_000;
                 if mode == ServingMode::PdDisaggregated {
-                    cfg.elastic.max_instances = 48 - pd_n_pf;
-                    cfg.instances = pd_n_pf + cfg.elastic.min_instances;
-                    cfg.prefill_frac = pd_n_pf as f64 / cfg.instances as f64;
+                    size_elastic_pd_cell(&mut cfg, 48, pd_peak_frac, |_| 6);
                 }
                 cfg
             })

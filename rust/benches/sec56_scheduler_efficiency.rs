@@ -99,6 +99,7 @@ fn main() {
                     requests: &mut requests,
                     profile: &profile,
                     mode: ServingMode::PdDisaggregated,
+                    kv_transfer_ms: 2,
                 };
                 let idx = fresh_start + (i % 4096);
                 i += 1;
@@ -130,6 +131,7 @@ fn main() {
                     requests: &mut requests,
                     profile: &profile,
                     mode: ServingMode::PdDisaggregated,
+                    kv_transfer_ms: 2,
                 };
                 let idx = fresh_start + (i % 4096);
                 i += 1;

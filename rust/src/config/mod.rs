@@ -94,6 +94,11 @@ pub struct ElasticConfig {
     pub provision_delay_ms: u64,
     /// Autoscaler evaluation period.
     pub scale_eval_ms: u64,
+    /// Scale-in KV migration (`migration = "off"|"on"`): evict a
+    /// drainer's decode residents to surviving servers instead of
+    /// waiting for them to finish. `"off"` reproduces the wait-drain
+    /// path bit-for-bit.
+    pub migration: bool,
 }
 
 impl Default for ElasticConfig {
@@ -104,6 +109,7 @@ impl Default for ElasticConfig {
             max_instances: 0,
             provision_delay_ms: 15_000,
             scale_eval_ms: 1_000,
+            migration: false,
         }
     }
 }
@@ -282,6 +288,17 @@ impl SimConfig {
                 as u64;
         cfg.elastic.scale_eval_ms =
             doc.usize_or("elastic.scale_eval_ms", cfg.elastic.scale_eval_ms as usize) as u64;
+        if let Some(v) = doc.get("elastic.migration") {
+            cfg.elastic.migration = match (v.as_str(), v.as_bool()) {
+                (Some("on"), _) => true,
+                (Some("off"), _) => false,
+                (None, Some(b)) => b,
+                (Some(other), _) => {
+                    anyhow::bail!("unknown elastic.migration '{other}' (off|on)")
+                }
+                _ => anyhow::bail!("elastic.migration must be \"off\"|\"on\""),
+            };
+        }
         if let Some(v) = doc.get("diurnal.peak_to_trough") {
             let ratio = v
                 .as_f64()
@@ -405,6 +422,7 @@ min_instances = 4
 max_instances = 32
 provision_delay_ms = 30000
 scale_eval_ms = 2000
+migration = "on"
 
 [diurnal]
 peak_to_trough = 3.0
@@ -418,6 +436,7 @@ period_s = 900.0
         assert_eq!(c.elastic.max_instances, 32);
         assert_eq!(c.elastic.provision_delay_ms, 30_000);
         assert_eq!(c.elastic.scale_eval_ms, 2_000);
+        assert!(c.elastic.migration);
         assert!(c.elastic.enabled());
         let d = c.diurnal.unwrap();
         assert_eq!(d.peak_to_trough, 3.0);
@@ -451,6 +470,7 @@ period_s = 900.0
             "[elastic]\nscaler = \"gradient\"\nmin_instances = 0\nmax_instances = 4",
             "[elastic]\nscaler = \"gradient\"", // max unset → silent no-op, reject
             "[elastic]\nscaler = \"gradient\"\nmin_instances = 12\nmax_instances = 8",
+            "[elastic]\nmigration = \"nope\"",
             "[diurnal]\npeak_to_trough = 0.5",
         ] {
             let doc = tomlish::parse(bad).unwrap();

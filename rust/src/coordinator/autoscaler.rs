@@ -24,7 +24,7 @@ use super::admission::{self, load_estimate};
 use super::RouteCtx;
 use crate::analysis::ServingMode;
 use crate::config::{ScalerKind, SimConfig};
-use crate::sim::Role;
+use crate::sim::{Lifecycle, Role};
 use crate::slo::{TierSet, TimeMs};
 
 /// A fleet-scaling decision (bounds-checked by the simulator).
@@ -32,8 +32,41 @@ use crate::slo::{TierSet, TimeMs};
 pub enum ScaleAction {
     /// Add a cold-starting instance of `role`.
     Provision { role: Role },
-    /// Drain instance `inst` (retired once its residents finish).
-    Drain { inst: usize },
+    /// Drain instance `inst`. With `migrate` (and `[elastic]
+    /// migration = "on"`) its decode residents are evicted and their KV
+    /// moved to surviving servers; otherwise the drain waits for them
+    /// to finish. Scalers set `migrate` from [`migration_feasible`] so
+    /// a fleet without destination headroom falls back to wait-drain.
+    Drain { inst: usize, migrate: bool },
+}
+
+/// Scale-in migration gate: can the surviving active fleet plausibly
+/// absorb `inst`'s decode residents? Requires aggregate batch-slot
+/// headroom for every resident and 2× KV headroom (residents keep
+/// growing after the move). This only decides migrate-vs-wait; the
+/// per-request admission checks at placement time remain the real
+/// protection for destination residents.
+pub fn migration_feasible(ctx: &RouteCtx, inst: usize) -> bool {
+    // Same estimator for source and destinations, so the two sides of
+    // the gate can never diverge. (The source estimate also counts any
+    // queued-prefill KV, which stays put — a slightly conservative
+    // overcount that only errs toward wait-drain.)
+    let src = load_estimate(&ctx.cluster.instances[inst], ctx.requests, ctx.profile);
+    if src.batch == 0 {
+        return true; // nothing to move
+    }
+    let role = ctx.cluster.instances[inst].role;
+    let mut batch_free = 0u64;
+    let mut kv_free = 0u64;
+    for i in &ctx.cluster.instances {
+        if i.id == inst || i.role != role || !i.lifecycle.accepts_work() {
+            continue;
+        }
+        let est = load_estimate(i, ctx.requests, ctx.profile);
+        batch_free += ctx.profile.max_token_batch.saturating_sub(est.batch);
+        kv_free += ctx.profile.kv_capacity_tokens.saturating_sub(est.kv_now);
+    }
+    batch_free >= src.batch && kv_free >= 2 * src.kv_now
 }
 
 /// A fleet-scaling policy, evaluated on every `ScaleEval` event.
@@ -223,11 +256,12 @@ impl Autoscaler for GradientAutoscaler {
             .into_iter()
             .rev() // newest first: LIFO keeps warm old servers
             .take(surplus_be)
-            .map(|inst| ScaleAction::Drain { inst })
+            .map(|inst| ScaleAction::Drain { inst, migrate: true }) // idle: nothing to move
             .collect();
         if actions.is_empty() {
             if let Some(inst) = tier_candidate {
-                actions.push(ScaleAction::Drain { inst });
+                let migrate = migration_feasible(ctx, inst);
+                actions.push(ScaleAction::Drain { inst, migrate });
             }
         }
         actions
@@ -266,10 +300,14 @@ impl ThresholdAutoscaler {
     }
 
     /// Busy fraction of the scalable fleet since the last evaluation.
-    /// Drainers still burn iterations, so they count in the capacity
-    /// denominator as long as they count in the busy numerator —
-    /// otherwise a fresh drain inflates util past 1 and triggers an
-    /// immediate re-provision oscillation.
+    /// Everything whose busy time lands in the numerator must count in
+    /// the capacity denominator: drainers still burn iterations, and an
+    /// instance that *retired inside the window* contributed busy time
+    /// too — excluding either inflates util past the truth right after
+    /// a scale-in and triggers an immediate re-provision oscillation.
+    /// A retiree counts only up to its retirement, so a server gone
+    /// early in the window doesn't deflate the surviving fleet's
+    /// utilization either.
     fn utilization(&mut self, now: TimeMs, ctx: &RouteCtx, role: Role) -> Option<f64> {
         let busy: u64 = ctx
             .cluster
@@ -278,11 +316,23 @@ impl ThresholdAutoscaler {
             .filter(|i| i.role == role)
             .map(|i| i.busy_ms_total)
             .sum();
-        let serving =
-            (ctx.cluster.active_count(role) + ctx.cluster.draining_count(role)).max(1);
         let util = match self.last_eval_ms {
             Some(prev) if now > prev => {
-                let window = (now - prev) * serving as u64;
+                let serving =
+                    (ctx.cluster.active_count(role) + ctx.cluster.draining_count(role)).max(1);
+                // An instance that retired inside the window was
+                // capacity only until its retirement.
+                let retired_capacity_ms: u64 = ctx
+                    .cluster
+                    .instances
+                    .iter()
+                    .filter(|i| i.role == role)
+                    .filter_map(|i| match i.lifecycle {
+                        Lifecycle::Retired { at } if at > prev => Some(at - prev),
+                        _ => None,
+                    })
+                    .sum();
+                let window = (now - prev) * serving as u64 + retired_capacity_ms;
                 Some((busy.saturating_sub(self.last_busy_ms)) as f64 / window as f64)
             }
             _ => None,
@@ -322,7 +372,8 @@ impl Autoscaler for ThresholdAutoscaler {
                         (i.decode_batch_now(), i.queued_prefill_tokens(ctx.requests))
                     });
                 if let Some(inst) = target {
-                    return vec![ScaleAction::Drain { inst }];
+                    let migrate = migration_feasible(ctx, inst);
+                    return vec![ScaleAction::Drain { inst, migrate }];
                 }
             }
             return Vec::new();
@@ -378,6 +429,7 @@ mod tests {
                 requests: &mut reqs,
                 profile: &profile,
                 mode: ServingMode::Colocated,
+                kv_transfer_ms: 2,
             };
             actions = sc.evaluate(t * 1000, &mut ctx);
             if t + 1 < evals {
@@ -410,6 +462,7 @@ mod tests {
                 requests: &mut reqs,
                 profile: &profile,
                 mode: ServingMode::Colocated,
+                kv_transfer_ms: 2,
             };
             assert!(sc.evaluate(t, &mut ctx).is_empty());
         }
@@ -428,6 +481,7 @@ mod tests {
                 requests: &mut reqs,
                 profile: &profile,
                 mode: ServingMode::Colocated,
+                kv_transfer_ms: 2,
             };
             sc.evaluate(1000, &mut ctx)
         };
@@ -443,6 +497,7 @@ mod tests {
                 requests: &mut reqs,
                 profile: &profile,
                 mode: ServingMode::Colocated,
+                kv_transfer_ms: 2,
             };
             sc.evaluate(2000, &mut ctx)
         };
@@ -461,6 +516,7 @@ mod tests {
                 requests: &mut reqs,
                 profile: &profile,
                 mode: ServingMode::Colocated,
+                kv_transfer_ms: 2,
             };
             let acts = sc.evaluate(t * 1000, &mut ctx);
             if acts

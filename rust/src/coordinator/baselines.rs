@@ -14,6 +14,7 @@
 //! immediately.
 
 use super::admission::load_estimate;
+use super::autoscaler::scaling_role;
 use super::{RouteCtx, Router};
 use crate::analysis::ServingMode;
 use crate::sim::Role;
@@ -30,6 +31,10 @@ fn entry_role(mode: ServingMode) -> Role {
         ServingMode::Colocated => Role::Coloc,
     }
 }
+
+// Decode phases live on the scaling role (decode servers under PD, the
+// coloc servers themselves under co-location); `route_decode` reaches
+// the coloc case only for scale-in migration re-placement.
 
 // ---------------------------------------------------------------- Random
 
@@ -58,7 +63,7 @@ impl Router for RandomRouter {
     }
 
     fn route_decode(&mut self, _now: TimeMs, _req_idx: usize, ctx: &mut RouteCtx) -> Option<usize> {
-        let ids: Vec<usize> = ctx.cluster.with_role(Role::Decode).collect();
+        let ids: Vec<usize> = ctx.cluster.with_role(scaling_role(ctx.mode)).collect();
         self.pick_random(&ids)
     }
 
@@ -110,7 +115,7 @@ impl Router for MinimalRouter {
     }
 
     fn route_decode(&mut self, _now: TimeMs, _req_idx: usize, ctx: &mut RouteCtx) -> Option<usize> {
-        self.pick_min_cycle(ctx, Role::Decode)
+        self.pick_min_cycle(ctx, scaling_role(ctx.mode))
     }
 
     fn chunk_budget(&mut self, _now: TimeMs, inst: usize, ctx: &mut RouteCtx) -> u64 {
@@ -161,7 +166,7 @@ impl Router for ChunkRouter {
 
     fn route_decode(&mut self, _now: TimeMs, _req_idx: usize, ctx: &mut RouteCtx) -> Option<usize> {
         ctx.cluster
-            .with_role(Role::Decode)
+            .with_role(scaling_role(ctx.mode))
             .map(|id| {
                 let est = load_estimate(&ctx.cluster.instances[id], ctx.requests, ctx.profile);
                 ((est.iter_now_ms * 1000.0) as u64, id)

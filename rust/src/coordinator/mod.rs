@@ -19,8 +19,8 @@ pub mod polyserve;
 pub mod sharded;
 
 pub use autoscaler::{
-    make_autoscaler, scaling_role, Autoscaler, GradientAutoscaler, ScaleAction,
-    ThresholdAutoscaler,
+    make_autoscaler, migration_feasible, scaling_role, Autoscaler, GradientAutoscaler,
+    ScaleAction, ThresholdAutoscaler,
 };
 pub use baselines::{ChunkRouter, MinimalRouter, RandomRouter};
 pub use polyserve::PolyServeRouter;
@@ -39,6 +39,11 @@ pub struct RouteCtx<'a> {
     pub requests: &'a mut [SimRequest],
     pub profile: &'a ProfileTable,
     pub mode: ServingMode,
+    /// Prefill→decode KV-handoff latency. Any decode placement the
+    /// router enqueues itself (pended dispatch) must mark the handoff
+    /// ready at `now + kv_transfer_ms`, exactly like the simulator's
+    /// direct `route_decode` path — the transfer is paid either way.
+    pub kv_transfer_ms: TimeMs,
 }
 
 /// A scheduling policy. All methods are called by the simulation loop

@@ -413,10 +413,14 @@ impl PolyServeRouter {
     }
 
     fn enqueue_on(&self, id: usize, p: Pending, now: TimeMs, ctx: &mut RouteCtx) {
+        let kv_transfer_ms = ctx.kv_transfer_ms;
         let r = &mut ctx.requests[p.req_idx];
         if p.decode_phase {
+            // The KV handoff costs `kv_transfer_ms` no matter how the
+            // request got here: a pended dispatch pays the same delay
+            // as the simulator's direct route_decode path.
             r.decode_instance = Some(id);
-            ctx.cluster.instances[id].push_decode(p.req_idx, now);
+            ctx.cluster.instances[id].push_decode(p.req_idx, now + kv_transfer_ms);
         } else {
             let deadline = r.req.arrival_ms + r.req.slo.ttft_ms;
             ctx.cluster.instances[id].push_prefill(crate::sim::PrefillJob {
@@ -448,6 +452,7 @@ impl PolyServeRouter {
             TierAssign::Pending => {
                 if ctx.cluster.instances[inst].is_empty() {
                     ctx.cluster.release(inst, now);
+                    self.stats.releases += 1;
                 }
             }
             _ => {}
@@ -458,7 +463,11 @@ impl PolyServeRouter {
     /// returns the new job's estimated finish time if *every* queued
     /// job (including those displaced by the EDF insert) still meets
     /// its own TTFT deadline, else None.
-    fn prefill_queue_feasible(
+    ///
+    /// Public for regression tests: the inserted job is identified by
+    /// its queue *position*, never by `(deadline, rem)` equality — a
+    /// queued job with the same pair must not stand in for it.
+    pub fn prefill_queue_feasible(
         &self,
         now: TimeMs,
         inst: usize,
@@ -500,14 +509,14 @@ impl PolyServeRouter {
         let ms_per_token = chunk_ms / self.prefill_budget as f64;
         let mut t = now as f64 + wait as f64;
         let mut new_finish = f64::INFINITY;
-        for (deadline, rem) in jobs {
+        for (i, (deadline, rem)) in jobs.into_iter().enumerate() {
             // Iteration-count overhead: each extra iteration pays the
             // fixed cost baked into chunk_ms via ms_per_token.
             t += rem as f64 * ms_per_token;
             if t > deadline as f64 {
                 return None;
             }
-            if deadline == new_deadline && rem == new_rem {
+            if i == pos {
                 new_finish = t;
             }
         }
@@ -582,7 +591,9 @@ impl Router for PolyServeRouter {
     }
 
     fn route_decode(&mut self, now: TimeMs, req_idx: usize, ctx: &mut RouteCtx) -> Option<usize> {
-        debug_assert_eq!(self.mode, ServingMode::PdDisaggregated);
+        // PD prefill→decode handoffs, and — in either serving mode —
+        // decode requests evicted from a draining server (scale-in KV
+        // migration) that need a surviving host.
         if let Some(id) = self.placement_ladder(now, req_idx, true, ctx) {
             return Some(id);
         }

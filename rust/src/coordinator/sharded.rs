@@ -205,6 +205,7 @@ mod tests {
             requests: &mut reqs,
             profile: &profile,
             mode: ServingMode::PdDisaggregated,
+            kv_transfer_ms: 2,
         };
         let mut seen = [false; 4];
         for i in 0..64 {
@@ -224,6 +225,7 @@ mod tests {
             requests: &mut reqs,
             profile: &profile,
             mode: ServingMode::PdDisaggregated,
+            kv_transfer_ms: 2,
         };
         let mut per_shard = [0usize; 3];
         for inst in ctx.cluster.with_role(Role::Decode).collect::<Vec<_>>() {
@@ -243,6 +245,7 @@ mod tests {
             requests: &mut reqs,
             profile: &profile,
             mode: ServingMode::PdDisaggregated,
+            kv_transfer_ms: 2,
         };
         let mut placed = 0;
         for i in 0..16 {

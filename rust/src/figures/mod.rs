@@ -47,26 +47,10 @@ impl Experiment {
         let optimal_rps = analysis::optimal_goodput_rps(&cm, cfg.mode, &probe, cfg.instances);
 
         // Auto-size the PD prefill cluster from the probe's work split
-        // (§2.4: "each cluster can scale independently"): share of the
-        // per-request optimal cost spent in prefill, plus headroom for
-        // arrival burstiness.
+        // (§2.4: "each cluster can scale independently").
         let mut cfg = cfg.clone();
         if cfg.prefill_frac == 0.0 {
-            let (mut pf, mut total) = (0.0f64, 0.0f64);
-            for r in &probe.requests {
-                let tpot = (r.slo.tpot_ms as f64).min(10_000.0);
-                let b_dc = cm.max_decode_batch(tpot, r.avg_kv_tokens()).max(1);
-                let (a, b) = cm.cost_pd_split_ms(
-                    r.prefill_len as u64,
-                    r.decode_len as u64,
-                    cm.max_token_batch,
-                    b_dc,
-                );
-                pf += a;
-                total += a + b;
-            }
-            let share = if total > 0.0 { pf / total } else { 0.3 };
-            cfg.prefill_frac = (share * 1.25).clamp(0.08, 0.6);
+            cfg.prefill_frac = prefill_share(&cm, &probe);
         }
 
         let rate_rps = cfg
@@ -127,6 +111,7 @@ impl Experiment {
                 max_instances: self.cfg.elastic.max_instances,
                 provision_delay_ms: self.cfg.elastic.provision_delay_ms,
                 scale_eval_ms: self.cfg.elastic.scale_eval_ms.max(1),
+                migration: self.cfg.elastic.migration,
             }),
             ..Default::default()
         };
@@ -155,6 +140,74 @@ impl Experiment {
 /// Convenience: run one config end to end.
 pub fn run_sim(cfg: &SimConfig) -> SimResult {
     Experiment::prepare(cfg).run()
+}
+
+/// Share of the per-request optimal cost spent in prefill, with 1.25×
+/// burstiness headroom (clamped) — the §2.4 auto-sizing rule for the
+/// PD prefill cluster.
+fn prefill_share(cm: &CostModel, probe: &Workload) -> f64 {
+    let (mut pf, mut total) = (0.0f64, 0.0f64);
+    for r in &probe.requests {
+        let tpot = (r.slo.tpot_ms as f64).min(10_000.0);
+        let b_dc = cm.max_decode_batch(tpot, r.avg_kv_tokens()).max(1);
+        let (a, b) = cm.cost_pd_split_ms(
+            r.prefill_len as u64,
+            r.decode_len as u64,
+            cm.max_token_batch,
+            b_dc,
+        );
+        pf += a;
+        total += a + b;
+    }
+    let share = if total > 0.0 { pf / total } else { 0.3 };
+    (share * 1.25).clamp(0.08, 0.6)
+}
+
+/// The auto-resolved PD prefill share for `cfg` — the same probe and
+/// rule `Experiment::prepare` applies (identical RNG seeding, so the
+/// two always agree) — without generating the full workload or running
+/// the optimal-goodput analysis. For benches that only need the peak
+/// fleet's prefill split.
+pub fn auto_prefill_frac(cfg: &SimConfig) -> f64 {
+    if cfg.prefill_frac > 0.0 {
+        return cfg.prefill_frac;
+    }
+    let cm = CostModel::h200_llama8b();
+    let gen = TraceGenerator::new(cfg.trace);
+    let mut rng = Rng::new(cfg.seed);
+    let mode = cfg.mode;
+    let cm_for_filter = cm.clone();
+    let achievable =
+        move |p: u32, d: u32, slo| analysis::slo_achievable(&cm_for_filter, mode, p, d, slo);
+    let probe = gen.generate(
+        (cfg.requests / 4).clamp(500, 20_000),
+        10.0,
+        &cfg.tier_dist,
+        &achievable,
+        &mut rng,
+    );
+    prefill_share(&cm, &probe)
+}
+
+/// Equal-peak-capacity sizing for an elastic PD cell: the static
+/// prefill cluster keeps its peak share (it does not scale), only the
+/// decode fleet is elastic within `[min, scalable_peak]`, and the run
+/// starts at the floor. `peak_prefill_frac` is the prefill share *of
+/// the peak fleet* (e.g. from [`auto_prefill_frac`]);
+/// `min_of_scalable` maps the scalable peak to the elastic floor.
+pub fn size_elastic_pd_cell(
+    cfg: &mut SimConfig,
+    n_peak: usize,
+    peak_prefill_frac: f64,
+    min_of_scalable: impl Fn(usize) -> usize,
+) {
+    let n_pf = ((n_peak as f64 * peak_prefill_frac).round() as usize)
+        .clamp(1, n_peak.saturating_sub(1).max(1));
+    let scalable_peak = n_peak - n_pf;
+    cfg.elastic.min_instances = min_of_scalable(scalable_peak).clamp(1, scalable_peak.max(1));
+    cfg.elastic.max_instances = scalable_peak;
+    cfg.instances = n_pf + cfg.elastic.min_instances;
+    cfg.prefill_frac = n_pf as f64 / cfg.instances as f64;
 }
 
 /// Sweep request rate fractions and build the attainment-vs-rate curve

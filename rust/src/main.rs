@@ -40,6 +40,7 @@ fn main() {
                 .opt("scale-eval-ms", "", "autoscaler evaluation period")
                 .opt("diurnal-ratio", "", "diurnal peak:trough ratio (enables diurnal arrivals)")
                 .opt("diurnal-period-s", "600", "diurnal period in seconds")
+                .flag("migrate", "scale-in KV migration: evict drainers' decode residents")
                 .flag("verbose", "per-tier breakdown"),
         )
         .command(
@@ -140,6 +141,9 @@ fn sim_config_from(args: &Args) -> Result<SimConfig, String> {
             period_s: args.f64_or("diurnal-period-s", 600.0),
         });
     }
+    if args.flag("migrate") {
+        cfg.elastic.migration = true;
+    }
     cfg.validate().map_err(|e| e.to_string())?;
     Ok(cfg)
 }
@@ -191,8 +195,25 @@ fn cmd_simulate(args: &Args) -> i32 {
             res.cost.active_cost_per_request_s(),
             res.cost.cost_per_1k_goodput_tokens_s(),
         );
+        if res.migration.drains() > 0 {
+            println!(
+                "scale-in ({}): {} drains, mean {:.0} ms / max {} ms begin_drain→retire; migrated {} requests / {} KV tokens",
+                if cfg.elastic.migration { "migration" } else { "wait-drain" },
+                res.migration.drains(),
+                res.migration.mean_drain_latency_ms(),
+                res.migration.max_drain_latency_ms(),
+                res.migration.migrated_requests,
+                res.migration.migrated_kv_tokens,
+            );
+        }
     }
     if args.flag("verbose") {
+        if res.migration.drains() > 0 {
+            println!(
+                "  drain latency histogram (1 s buckets, last = overflow): {:?}",
+                res.migration.drain_latency_histogram(1_000, 8)
+            );
+        }
         for (tpot, total, ok) in &res.attainment.per_tier {
             println!(
                 "  tier {tpot:>4} ms: {:>6}/{:<6} = {:.3}",

@@ -238,6 +238,52 @@ impl FleetSeries {
     }
 }
 
+/// Scale-in drain + KV-migration accounting. Drain latencies are
+/// recorded for every drained instance (migration on or off) so the
+/// two policies are directly comparable; the migrated counters stay
+/// zero unless `[elastic] migration = "on"` evicted residents.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MigrationStats {
+    /// Decode requests detached from drainers and re-placed elsewhere.
+    pub migrated_requests: u64,
+    /// KV tokens in flight across all migrations (resident KV at
+    /// eviction time).
+    pub migrated_kv_tokens: u64,
+    /// Per-drain begin_drain→retire latency (ms). Instances still
+    /// draining when the run ends are censored at the simulated span.
+    pub drain_latency_ms: Vec<u64>,
+}
+
+impl MigrationStats {
+    pub fn drains(&self) -> usize {
+        self.drain_latency_ms.len()
+    }
+
+    pub fn mean_drain_latency_ms(&self) -> f64 {
+        if self.drain_latency_ms.is_empty() {
+            return 0.0;
+        }
+        self.drain_latency_ms.iter().sum::<u64>() as f64 / self.drain_latency_ms.len() as f64
+    }
+
+    pub fn max_drain_latency_ms(&self) -> u64 {
+        self.drain_latency_ms.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Fixed-width drain-latency histogram: `buckets` counts of width
+    /// `bucket_ms`, with everything past the last edge clamped into the
+    /// final bucket.
+    pub fn drain_latency_histogram(&self, bucket_ms: u64, buckets: usize) -> Vec<usize> {
+        let mut hist = vec![0usize; buckets.max(1)];
+        let last = hist.len() - 1;
+        for &d in &self.drain_latency_ms {
+            let b = (d / bucket_ms.max(1)) as usize;
+            hist[b.min(last)] += 1;
+        }
+        hist
+    }
+}
+
 /// Latency summary across outcomes (TTFT and mean-TPOT distributions).
 pub fn latency_summary(outcomes: &[RequestOutcome]) -> (Option<Summary>, Option<Summary>) {
     let ttfts: Vec<f64> = outcomes
@@ -344,6 +390,24 @@ mod tests {
         assert!((s.mean_active() - 20.0 / 3.0).abs() < 1e-9);
         assert!(FleetSeries::default().is_empty());
         assert_eq!(FleetSeries::default().peak_active(), 0);
+    }
+
+    #[test]
+    fn migration_stats_summaries() {
+        let m = MigrationStats {
+            migrated_requests: 3,
+            migrated_kv_tokens: 4_500,
+            drain_latency_ms: vec![100, 900, 2_500, 40_000],
+        };
+        assert_eq!(m.drains(), 4);
+        assert!((m.mean_drain_latency_ms() - 10_875.0).abs() < 1e-9);
+        assert_eq!(m.max_drain_latency_ms(), 40_000);
+        // 1 s buckets × 4: [0,1s) → 2, [1s,2s) → 0, [2s,3s) → 1, rest → 1.
+        assert_eq!(m.drain_latency_histogram(1_000, 4), vec![2, 0, 1, 1]);
+        let empty = MigrationStats::default();
+        assert_eq!(empty.drains(), 0);
+        assert_eq!(empty.mean_drain_latency_ms(), 0.0);
+        assert_eq!(empty.max_drain_latency_ms(), 0);
     }
 
     #[test]

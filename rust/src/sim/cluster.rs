@@ -220,11 +220,13 @@ impl Cluster {
         self.instances[id].begin_drain(now);
     }
 
-    /// Retire `id` if it is draining and has no work left. Returns true
-    /// if it retired.
+    /// Retire `id` if it is draining, has no work left, and any
+    /// migrated-out KV has finished streaming off it (`egress_until`).
+    /// Returns true if it retired.
     pub fn retire_if_drained(&mut self, id: usize, now: TimeMs) -> bool {
         if matches!(self.instances[id].lifecycle, Lifecycle::Draining { .. })
             && self.instances[id].is_empty()
+            && self.instances[id].egress_until <= now
         {
             self.instances[id].retire(now);
             return true;
@@ -261,16 +263,6 @@ impl Cluster {
     /// Instances of `role` currently draining.
     pub fn draining_count(&self, role: Role) -> usize {
         self.count_lifecycle(role, |l| matches!(l, Lifecycle::Draining { .. }))
-    }
-
-    /// Ids of draining instances (any role) with no work left — ready
-    /// for the simulator to retire.
-    pub fn drained_ids(&self) -> Vec<usize> {
-        self.instances
-            .iter()
-            .filter(|i| matches!(i.lifecycle, Lifecycle::Draining { .. }) && i.is_empty())
-            .map(|i| i.id)
-            .collect()
     }
 
     /// Router-side: mark that `inst` received work and may need its
@@ -366,7 +358,6 @@ mod tests {
         assert_eq!(c.draining_count(Role::Coloc), 1);
         assert_eq!(c.committed_count(Role::Coloc), 2);
         // Empty, so it retires right away.
-        assert_eq!(c.drained_ids(), vec![id]);
         assert!(c.retire_if_drained(id, 9000));
         assert!(!c.retire_if_drained(id, 9000));
         assert_eq!(c.len(), 3, "retired instances keep their slot");

@@ -109,6 +109,16 @@ pub struct Instance {
     /// PD decode handoffs: (req_idx, ready_time) — KV still in flight
     /// until `ready_time`.
     pub decode_queue: VecDeque<(usize, TimeMs)>,
+    /// Scale-in migration: when this drainer was told to migrate, any
+    /// decode request that becomes resident later (e.g. a coloc prefill
+    /// completing mid-drain) is evicted too instead of decoded here.
+    pub migrate_on_drain: bool,
+    /// Scale-in migration: evicted residents' KV is still streaming off
+    /// this instance until then — it may not retire (or stop billing)
+    /// earlier.
+    pub egress_until: TimeMs,
+    /// begin_drain → retire latency, recorded at retirement.
+    pub drain_latency_ms: Option<u64>,
     /// Mid-iteration state.
     pub iterating: bool,
     pub busy_until: TimeMs,
@@ -136,6 +146,9 @@ impl Instance {
             running: Vec::new(),
             prefill_queue: VecDeque::new(),
             decode_queue: VecDeque::new(),
+            migrate_on_drain: false,
+            egress_until: 0,
+            drain_latency_ms: None,
             iterating: false,
             busy_until: 0,
             current: IterationBatch::default(),
@@ -186,11 +199,36 @@ impl Instance {
         self.lifecycle = Lifecycle::Draining { since: now };
     }
 
-    /// Decommission (must be empty); closes the billing window.
+    /// Decommission (must be empty); closes the billing window and
+    /// records the drain latency (begin_drain → retire).
     pub fn retire(&mut self, now: TimeMs) {
         debug_assert!(self.is_empty(), "retiring instance {} with work", self.id);
+        if let Lifecycle::Draining { since } = self.lifecycle {
+            self.drain_latency_ms = Some(now.saturating_sub(since));
+        }
         self.lifecycle = Lifecycle::Retired { at: now };
         self.alloc_end(now);
+    }
+
+    /// Scale-in KV migration: detach every decode-phase resident — both
+    /// the running batch and in-flight KV handoffs — so the caller can
+    /// re-place them on surviving servers. Queued prefills stay: they
+    /// have no KV worth moving yet and complete quickly here.
+    ///
+    /// Safe mid-iteration: an evicted request is simply absent from
+    /// `running` when `complete_iteration` applies token emission, so it
+    /// is never decoded both here and at its destination — tokens are
+    /// conserved exactly.
+    pub fn evict_residents(&mut self) -> Vec<usize> {
+        debug_assert!(
+            matches!(self.lifecycle, Lifecycle::Draining { .. }),
+            "evicting residents of non-draining instance {}",
+            self.id
+        );
+        self.migrate_on_drain = true;
+        let mut out: Vec<usize> = self.running.drain(..).map(|s| s.req_idx).collect();
+        out.extend(self.decode_queue.drain(..).map(|(r, _)| r));
+        out
     }
 
     /// Billable active-instance·ms by `end`: from provisioning start to
@@ -271,6 +309,16 @@ impl Instance {
                 (r.req.prefill_len - r.prefill_done) as u64
             })
             .sum()
+    }
+
+    /// Earliest in-flight KV-handoff arrival strictly after `now`
+    /// (None when no handoff is still in transit).
+    pub fn next_handoff_ready_ms(&self, now: TimeMs) -> Option<TimeMs> {
+        self.decode_queue
+            .iter()
+            .map(|&(_, ready)| ready)
+            .filter(|&ready| ready > now)
+            .min()
     }
 
     /// Wait time until the current iteration finishes (0 if idle) —
@@ -678,6 +726,51 @@ mod tests {
         // A never-retired instance bills to the end of the run.
         let j = Instance::new(0, Role::Coloc, 1, 1);
         assert_eq!(j.active_span_ms(4000), 4000);
+    }
+
+    #[test]
+    fn evict_residents_detaches_running_and_in_flight() {
+        let mut reqs = vec![sim_req(0, 10, 5), sim_req(1, 10, 5), sim_req(2, 10, 5)];
+        for r in reqs.iter_mut() {
+            r.prefill_done = 10;
+            r.decoded = 1;
+        }
+        let mut i = Instance::new(0, Role::Decode, 1_000_000, 2048);
+        i.push_decode(0, 0);
+        i.push_decode(1, 0);
+        let t = i.form_batch(0, &mut reqs, 0, &cm()).unwrap();
+        i.iterating = true;
+        i.push_decode(2, 100); // KV still in flight
+        i.begin_drain(1);
+        let evicted = i.evict_residents();
+        assert_eq!(evicted, vec![0, 1, 2]);
+        assert!(i.migrate_on_drain);
+        // The in-flight iteration emits nothing for evicted requests:
+        // no token is decoded both here and at the destination.
+        let (_, fin) = i.complete_iteration(t, &mut reqs);
+        assert_eq!(fin, 0);
+        assert_eq!(reqs[0].decoded, 1);
+        assert_eq!(reqs[1].decoded, 1);
+        assert!(i.is_empty());
+    }
+
+    #[test]
+    fn retire_records_drain_latency() {
+        let mut i = Instance::new(0, Role::Decode, 1_000_000, 2048);
+        i.begin_drain(2000);
+        i.retire(7500);
+        assert_eq!(i.drain_latency_ms, Some(5500));
+    }
+
+    #[test]
+    fn next_handoff_ready_skips_arrived_transfers() {
+        let mut i = Instance::new(0, Role::Decode, 1_000_000, 2048);
+        assert_eq!(i.next_handoff_ready_ms(0), None);
+        i.push_decode(0, 50);
+        i.push_decode(1, 200);
+        assert_eq!(i.next_handoff_ready_ms(0), Some(50));
+        assert_eq!(i.next_handoff_ready_ms(50), Some(200));
+        assert_eq!(i.next_handoff_ready_ms(200), None);
     }
 
     #[test]

@@ -17,6 +17,35 @@
 //! Ground truth iteration times come from [`CostModel`] (the simulated
 //! hardware); the router only sees a [`ProfileTable`] — mirroring the
 //! paper's profiling-driven scheduler, including its prediction error.
+//!
+//! # Decode-handoff timing
+//!
+//! Every PD prefill→decode handoff pays `kv_transfer_ms` before the
+//! destination may schedule the request, *regardless of the path that
+//! placed it*: the simulator's direct `route_decode` dispatch and the
+//! router's pended dispatch (`RouteCtx::kv_transfer_ms`) mark the
+//! handoff ready at `now + kv_transfer_ms` identically. An idle
+//! destination wakes exactly when the earliest in-flight transfer
+//! lands (a `Wake` event), not at the next housekeeping tick.
+//!
+//! # Scale-in KV migration
+//!
+//! With `[elastic] migration = "on"`, a `Drain` action whose scaler
+//! judged the surviving fleet able to absorb the residents
+//! ([`crate::coordinator::migration_feasible`]) evicts the drainer's
+//! decode requests instead of waiting them out. Each evicted request
+//! pays an end-to-end transfer of `max(kv_transfer_ms,
+//! kv_now / MIGRATION_TOKENS_PER_MS)`: the bulk stream beyond the
+//! final handoff hop is the [`MigrationArrive`](EventKey) delay, the
+//! hop itself is the ordinary `kv_transfer_ms` placement pays. The
+//! request re-enters placement through the router's ordinary
+//! `route_decode`/pending machinery — destination residents stay
+//! protected by the same admission checks as any other handoff — and
+//! the source may not retire (it keeps billing) until its last
+//! transfer has left. Tokens are conserved exactly: an evicted request
+//! is absent from the drainer's batch from the eviction on, so every
+//! one of its `decode_len` tokens is emitted exactly once, here or
+//! there.
 
 pub mod cluster;
 pub mod instance;
@@ -26,13 +55,21 @@ pub use instance::{Instance, Lifecycle, PrefillJob, Role};
 
 use crate::analysis::ServingMode;
 use crate::coordinator::{Autoscaler, RouteCtx, Router, ScaleAction};
-use crate::metrics::{AttainmentReport, CostAccount, FleetSample, FleetSeries, RequestOutcome};
+use crate::metrics::{
+    AttainmentReport, CostAccount, FleetSample, FleetSeries, MigrationStats, RequestOutcome,
+};
 use crate::model::CostModel;
 use crate::profile::ProfileTable;
 use crate::slo::{DsloTracker, TimeMs};
 use crate::workload::Workload;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+
+/// Scale-in KV-migration streaming rate, tokens per ms. Sized for
+/// RDMA-class interconnect on the simulated hardware: ≈0.125 MB of KV
+/// per token (8B-class GQA model, fp16) at ~50 GB/s ≈ 400 tokens/ms.
+/// The per-request transfer time is `max(kv_transfer_ms, kv_now / this)`.
+pub const MIGRATION_TOKENS_PER_MS: u64 = 400;
 
 /// Simulator-side request state.
 #[derive(Debug, Clone)]
@@ -75,6 +112,8 @@ pub struct SimResult {
     pub cost: CostAccount,
     /// Per-tier fleet-size time series (empty for fixed-fleet runs).
     pub fleet: FleetSeries,
+    /// Scale-in drain latencies + KV-migration counters.
+    pub migration: MigrationStats,
     /// Wall-clock simulated, ms.
     pub sim_span_ms: TimeMs,
     /// Completed requests per second of simulated time.
@@ -97,6 +136,10 @@ pub struct ElasticParams {
     pub provision_delay_ms: TimeMs,
     /// Period of the `ScaleEval` event.
     pub scale_eval_ms: TimeMs,
+    /// Scale-in KV migration: evict a drainer's decode residents to
+    /// surviving servers instead of waiting for them to finish. `false`
+    /// reproduces the PR 1 wait-drain path bit-for-bit.
+    pub migration: bool,
 }
 
 /// Environment knobs (not policy).
@@ -137,6 +180,9 @@ enum EventKey {
     InstanceReady(usize),
     /// Periodic autoscaler evaluation (elastic fleets only).
     ScaleEval,
+    /// A migrated request's KV finished streaming off its drained
+    /// source; re-enter decode placement now.
+    MigrationArrive(usize),
 }
 
 /// The event-driven simulation.
@@ -150,6 +196,7 @@ pub struct Simulation<'a> {
     seq: u64,
     now: TimeMs,
     fleet: FleetSeries,
+    migration: MigrationStats,
 }
 
 impl<'a> Simulation<'a> {
@@ -193,6 +240,7 @@ impl<'a> Simulation<'a> {
             seq,
             now: 0,
             fleet: FleetSeries::default(),
+            migration: MigrationStats::default(),
         }
     }
 
@@ -208,6 +256,7 @@ impl<'a> Simulation<'a> {
             requests: &mut self.requests,
             profile: self.profile,
             mode: self.params.mode,
+            kv_transfer_ms: self.params.kv_transfer_ms,
         }
     }
 
@@ -233,11 +282,13 @@ impl<'a> Simulation<'a> {
         }
         while let Some(Reverse((t, _, key))) = self.events.pop() {
             debug_assert!(t >= self.now, "time went backwards");
-            self.now = t;
-            if self.now > self.params.max_sim_ms {
+            if t > self.params.max_sim_ms {
+                // Abort *before* advancing the clock: `self.now` stays
+                // the last simulated event time, which `finalize` bills.
                 log::warn!("simulation exceeded max_sim_ms; aborting");
                 break;
             }
+            self.now = t;
             match key {
                 EventKey::Arrival(idx) => self.handle_arrival(idx, router),
                 EventKey::IterEnd(inst) => {
@@ -245,11 +296,22 @@ impl<'a> Simulation<'a> {
                 }
                 EventKey::Wake(inst) => {
                     self.maybe_start_iteration(inst, router);
+                    // A migrating drainer's wake may be its egress
+                    // deadline — it retires here if truly done.
+                    self.cluster.retire_if_drained(inst, self.now);
                 }
                 EventKey::InstanceReady(inst) => {
                     self.cluster.mark_ready(inst);
                     // Fresh capacity may unblock pending work at once.
                     router.on_tick(self.now, &mut self.ctx());
+                    self.restart_fed_instances(router);
+                }
+                EventKey::MigrationArrive(req_idx) => {
+                    debug_assert!(
+                        !self.requests[req_idx].is_finished(),
+                        "migrated request {req_idx} finished while in flight"
+                    );
+                    self.place_decode_handoff(req_idx, router);
                     self.restart_fed_instances(router);
                 }
                 EventKey::ScaleEval => {
@@ -284,7 +346,7 @@ impl<'a> Simulation<'a> {
                         }
                         // Retire drainers that emptied outside their own
                         // iteration path (e.g. released by the router).
-                        for id in self.cluster.drained_ids() {
+                        for id in 0..self.cluster.instances.len() {
                             self.cluster.retire_if_drained(id, self.now);
                         }
                         if log::log_enabled!(log::Level::Trace) && self.now % 1000 == 0 {
@@ -324,12 +386,17 @@ impl<'a> Simulation<'a> {
                         );
                     }
                 }
-                ScaleAction::Drain { inst } => {
+                ScaleAction::Drain { inst, migrate } => {
                     let role = self.cluster.instances[inst].role;
                     if self.cluster.instances[inst].lifecycle.accepts_work()
                         && self.cluster.active_count(role) > ep.min_instances
                     {
                         self.cluster.begin_drain(inst, self.now);
+                        if ep.migration && migrate {
+                            // Wait-free drain: move the residents out
+                            // instead of waiting for them to finish.
+                            self.migrate_residents(inst);
+                        }
                         // Empty drainers retire on the spot.
                         self.cluster.retire_if_drained(inst, self.now);
                         log::debug!("t={} scale-in: drain inst {inst} ({role:?})", self.now);
@@ -338,6 +405,38 @@ impl<'a> Simulation<'a> {
             }
         }
         self.sample_fleet();
+    }
+
+    /// Evict `inst`'s decode residents and schedule their KV transfers.
+    /// The end-to-end cost per request is `max(kv_transfer_ms,
+    /// kv_now / MIGRATION_TOKENS_PER_MS)`: the `MigrationArrive` delay
+    /// covers the bulk stream *beyond* the final `kv_transfer_ms`
+    /// handoff hop, which placement itself pays (so nothing is paid
+    /// twice). The source may not retire — and keeps billing — until
+    /// its last transfer has left (`egress_until`).
+    fn migrate_residents(&mut self, inst: usize) {
+        let evicted = self.cluster.instances[inst].evict_residents();
+        let kv_transfer_ms = self.params.kv_transfer_ms;
+        let mut egress_until = self.cluster.instances[inst].egress_until;
+        for req_idx in evicted {
+            let kv = self.requests[req_idx].kv_now();
+            self.requests[req_idx].decode_instance = None;
+            let stream = (kv / MIGRATION_TOKENS_PER_MS.max(1)).saturating_sub(kv_transfer_ms);
+            self.migration.migrated_requests += 1;
+            self.migration.migrated_kv_tokens += kv;
+            egress_until = egress_until.max(self.now + stream);
+            self.push_event(self.now + stream, EventKey::MigrationArrive(req_idx));
+            log::debug!(
+                "t={} migrate: req {req_idx} ({kv} KV tokens) off inst {inst}, lands in {stream} ms",
+                self.now
+            );
+        }
+        self.cluster.instances[inst].egress_until = egress_until;
+        if egress_until > self.now {
+            // Retire exactly when the last transfer departs, not at the
+            // next housekeeping tick.
+            self.push_event(egress_until, EventKey::Wake(inst));
+        }
     }
 
     /// Record the current fleet composition.
@@ -392,7 +491,15 @@ impl<'a> Simulation<'a> {
             budget,
             &self.cost_model,
         );
-        let Some(iter_ms) = iter else { return };
+        let Some(iter_ms) = iter else {
+            // Idle with KV handoffs still in flight: wake exactly when
+            // the earliest transfer lands, instead of waiting for the
+            // next housekeeping tick to notice.
+            if let Some(ready) = self.cluster.instances[inst].next_handoff_ready_ms(now) {
+                self.push_event(ready, EventKey::Wake(inst));
+            }
+            return;
+        };
         let i = &mut self.cluster.instances[inst];
         i.iterating = true;
         i.busy_until = now + iter_ms;
@@ -415,18 +522,17 @@ impl<'a> Simulation<'a> {
                     if self.requests[req_idx].decode_remaining() == 0 {
                         continue; // output fully emitted at prefill
                     }
-                    let target = router.route_decode(now, req_idx, &mut self.ctx());
-                    if let Some(d) = target {
-                        let ready = now + self.params.kv_transfer_ms;
-                        self.requests[req_idx].decode_instance = Some(d);
-                        self.cluster.instances[d].push_decode(req_idx, ready);
-                        self.maybe_start_iteration(d, router);
-                        // The handoff is only schedulable at `ready`; if
-                        // the instance is idle until then, wake it.
-                        self.push_event(ready, EventKey::Wake(d));
-                    }
+                    self.place_decode_handoff(req_idx, router);
                 }
             }
+        }
+        // A migrating drainer never decodes: requests that became
+        // decode-resident after the eviction sweep (a coloc prefill
+        // completing mid-drain) are evicted the same way.
+        if self.cluster.instances[inst].migrate_on_drain
+            && self.cluster.instances[inst].decode_batch_now() > 0
+        {
+            self.migrate_residents(inst);
         }
         router.on_iter_end(now, inst, &mut self.ctx());
         self.maybe_start_iteration(inst, router);
@@ -435,6 +541,26 @@ impl<'a> Simulation<'a> {
         // the fleet here.
         self.cluster.retire_if_drained(inst, now);
         finished
+    }
+
+    /// Route a decode-phase request (a completed PD prefill, or a
+    /// request migrated off a drainer) and enqueue the KV handoff. Both
+    /// callers pay the same `kv_transfer_ms` before the destination may
+    /// schedule it; `None` from the router means it pended the request
+    /// and will dispatch it later through the same-delay `enqueue_on`
+    /// path.
+    fn place_decode_handoff(&mut self, req_idx: usize, router: &mut dyn Router) {
+        let now = self.now;
+        let target = router.route_decode(now, req_idx, &mut self.ctx());
+        if let Some(d) = target {
+            let ready = now + self.params.kv_transfer_ms;
+            self.requests[req_idx].decode_instance = Some(d);
+            self.cluster.instances[d].push_decode(req_idx, ready);
+            // If the destination stays idle until `ready`,
+            // maybe_start_iteration schedules the wake at exactly that
+            // time via `next_handoff_ready_ms`.
+            self.maybe_start_iteration(d, router);
+        }
     }
 
     /// Restart any instance the router fed while holding the ctx.
@@ -481,9 +607,17 @@ impl<'a> Simulation<'a> {
         log::trace!("{line}");
     }
 
-    fn finalize(self, completed: usize) -> SimResult {
+    fn finalize(mut self, completed: usize) -> SimResult {
         let mut outcomes = Vec::with_capacity(self.requests.len());
-        let mut span: TimeMs = 0;
+        // Billing span: finished requests set the floor, and the clock
+        // (last simulated event) clamps it up — a `max_sim_ms`-aborted
+        // run still bills the active-instance time it simulated instead
+        // of reporting a zero-length run.
+        let mut span: TimeMs = if completed < self.requests.len() {
+            self.now
+        } else {
+            0
+        };
         for r in &self.requests {
             let attained = r.is_finished() && r.tracker.attained();
             outcomes.push(RequestOutcome {
@@ -528,6 +662,22 @@ impl<'a> Simulation<'a> {
             // moment it is provisioned until it retires, busy or not.
             cost.active_instance_ms += i.active_span_ms(span);
         }
+        // Drain latencies: recorded at retirement; drains still open at
+        // the end of the run are censored at the span (they cost at
+        // least that long — keeps wait-drain tails honest).
+        for i in &self.cluster.instances {
+            match i.lifecycle {
+                Lifecycle::Retired { .. } => {
+                    if let Some(d) = i.drain_latency_ms {
+                        self.migration.drain_latency_ms.push(d);
+                    }
+                }
+                Lifecycle::Draining { since } => {
+                    self.migration.drain_latency_ms.push(span.saturating_sub(since));
+                }
+                _ => {}
+            }
+        }
         let throughput_rps = if span > 0 {
             cost.requests_served as f64 / (span as f64 / 1000.0)
         } else {
@@ -539,6 +689,7 @@ impl<'a> Simulation<'a> {
             attainment,
             cost,
             fleet: self.fleet,
+            migration: self.migration,
             sim_span_ms: span,
             throughput_rps,
         }

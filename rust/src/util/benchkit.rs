@@ -23,6 +23,14 @@ pub fn full_scale() -> bool {
     std::env::var("POLYSERVE_FULL").map(|v| v == "1").unwrap_or(false)
 }
 
+/// Is a CI smoke run requested (`POLYSERVE_SMOKE=1`)? Figure benches
+/// shrink to a tiny workload and enforce their invariants with
+/// assertions, so a regression fails the build instead of only skewing
+/// a CSV.
+pub fn smoke_scale() -> bool {
+    std::env::var("POLYSERVE_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
 /// Timing statistics for one benchmark case.
 #[derive(Debug, Clone)]
 pub struct Timing {

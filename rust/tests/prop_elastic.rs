@@ -7,11 +7,19 @@
 //! panics the run.
 
 use polyserve::analysis::ServingMode;
-use polyserve::config::{Policy, ScalerKind, SimConfig};
-use polyserve::figures::run_sim;
+use polyserve::config::{DiurnalSpec, Policy, ScalerKind, SimConfig};
+use polyserve::coordinator::{Autoscaler, PolyServeRouter, RouteCtx, Router, ScaleAction};
+use polyserve::figures::{run_sim, Experiment};
+use polyserve::model::CostModel;
+use polyserve::profile::ProfileTable;
+use polyserve::sim::{
+    Cluster, ElasticParams, PrefillJob, Role, SimParams, SimRequest, SimResult, Simulation,
+};
+use polyserve::slo::{DsloTracker, Slo, TimeMs};
 use polyserve::util::prop::{check, Gen, IntRange, VecOf};
 use polyserve::util::rng::Rng;
-use polyserve::workload::{RateSchedule, TraceKind};
+use polyserve::workload::{RateSchedule, Request, TraceKind, Workload};
+use std::collections::HashMap;
 
 #[test]
 fn prop_schedule_arrivals_strictly_increasing() {
@@ -197,4 +205,393 @@ fn static_bounds_reproduce_fixed_fleet_bit_for_bit() {
     assert_eq!(fixed.cost.instance_alloc_ms, pinned.cost.instance_alloc_ms);
     assert_eq!(fixed.cost.active_instance_ms, pinned.cost.active_instance_ms);
     assert!(pinned.fleet.is_empty(), "static bounds must schedule no ScaleEval");
+}
+
+// ---------------------------------------------------------------------
+// Regression tests for the decode-handoff timing fixes.
+// ---------------------------------------------------------------------
+
+fn decode_phase_request(id: u64, prefill: u32, decode: u32, slo: Slo) -> SimRequest {
+    SimRequest {
+        req: Request {
+            id,
+            arrival_ms: 0,
+            prefill_len: prefill,
+            decode_len: decode,
+            slo,
+        },
+        tier: 3, // paper_default tier for tpot 100
+        tracker: DsloTracker::new(0, slo),
+        prefill_done: prefill,
+        decoded: 1,
+        first_token_ms: Some(10),
+        finish_ms: None,
+        decode_instance: None,
+    }
+}
+
+/// The PR-1 bug: a pended PD decode handoff was enqueued with
+/// `ready = now`, skipping the KV-transfer delay the direct
+/// `route_decode` path pays. Both paths must mark the handoff ready at
+/// `now + kv_transfer_ms`.
+#[test]
+fn pended_decode_handoff_pays_kv_transfer_delay() {
+    let cm = CostModel::h200_llama8b();
+    let profile = ProfileTable::from_cost_model(&cm);
+    let cfg = SimConfig {
+        mode: ServingMode::PdDisaggregated,
+        ..Default::default()
+    };
+    let mut router = PolyServeRouter::new(&cfg, 300.0);
+    // 1 prefill + 1 decode instance; drain the decode server so the
+    // handoff has nowhere to go and must pend.
+    let mut cluster = Cluster::build(ServingMode::PdDisaggregated, 2, 0.5, 4, &cm, true);
+    let mut reqs = vec![decode_phase_request(0, 64, 50, Slo::new(10_000, 100))];
+    cluster.begin_drain(1, 0);
+    let kv_transfer_ms: TimeMs = 37;
+    {
+        let mut ctx = RouteCtx {
+            now: 10,
+            cluster: &mut cluster,
+            requests: &mut reqs,
+            profile: &profile,
+            mode: ServingMode::PdDisaggregated,
+            kv_transfer_ms,
+        };
+        assert_eq!(router.route_decode(10, 0, &mut ctx), None, "must pend");
+    }
+    assert_eq!(router.stats.pends, 1);
+    // Fresh capacity appears; the pended dispatch must pay the same
+    // transfer delay as the direct path would.
+    let id2 = cluster.provision(Role::Decode, 10, 20);
+    cluster.mark_ready(id2);
+    {
+        let mut ctx = RouteCtx {
+            now: 500,
+            cluster: &mut cluster,
+            requests: &mut reqs,
+            profile: &profile,
+            mode: ServingMode::PdDisaggregated,
+            kv_transfer_ms,
+        };
+        router.on_tick(500, &mut ctx);
+    }
+    assert_eq!(
+        cluster.instances[id2].decode_queue.front(),
+        Some(&(0, 500 + kv_transfer_ms)),
+        "pended handoff must be ready at now + kv_transfer_ms"
+    );
+    assert_eq!(reqs[0].decode_instance, Some(id2));
+}
+
+/// The PR-1 bug: `prefill_queue_feasible` identified the inserted job
+/// by `(deadline, rem)` equality, so a queued twin made it report the
+/// *earlier* job's finish time. The estimate must track the insertion
+/// position: with an identical job already queued ahead, the new job's
+/// finish is strictly later than on an empty queue.
+#[test]
+fn prefill_feasibility_tracks_inserted_job_not_its_twin() {
+    let cm = CostModel::h200_llama8b();
+    let profile = ProfileTable::from_cost_model(&cm);
+    let cfg = SimConfig {
+        mode: ServingMode::PdDisaggregated,
+        ..Default::default()
+    };
+    let router = PolyServeRouter::new(&cfg, 300.0);
+    let mut cluster = Cluster::build(ServingMode::PdDisaggregated, 2, 0.5, 4, &cm, true);
+    let slo = Slo::new(5_000, 50);
+    let mut reqs = vec![decode_phase_request(0, 600, 50, slo)];
+    reqs[0].prefill_done = 0; // still needs its full 600-token prefill
+    let empty_finish = {
+        let ctx = RouteCtx {
+            now: 0,
+            cluster: &mut cluster,
+            requests: &mut reqs,
+            profile: &profile,
+            mode: ServingMode::PdDisaggregated,
+            kv_transfer_ms: 2,
+        };
+        router
+            .prefill_queue_feasible(0, 0, 600, 4_950, &ctx)
+            .expect("empty queue must be feasible")
+    };
+    // Queue a twin job: same effective deadline (5000 − tpot 50) and
+    // the same 600 remaining tokens as the candidate below.
+    cluster.instances[0].push_prefill(PrefillJob { req_idx: 0, deadline: 5_000 });
+    let queued_finish = {
+        let ctx = RouteCtx {
+            now: 0,
+            cluster: &mut cluster,
+            requests: &mut reqs,
+            profile: &profile,
+            mode: ServingMode::PdDisaggregated,
+            kv_transfer_ms: 2,
+        };
+        router
+            .prefill_queue_feasible(0, 0, 600, 4_950, &ctx)
+            .expect("two short jobs against a 5 s deadline are feasible")
+    };
+    assert!(
+        queued_finish > empty_finish + 1e-9,
+        "the new job finishes after its queued twin, not at the twin's \
+         finish: empty={empty_finish} queued={queued_finish}"
+    );
+}
+
+/// The PR-1 bug: releasing an empty `Pending` instance skipped the
+/// `releases` diagnostic counter.
+#[test]
+fn pending_release_increments_stats() {
+    let cm = CostModel::h200_llama8b();
+    let profile = ProfileTable::from_cost_model(&cm);
+    let cfg = SimConfig {
+        mode: ServingMode::Colocated,
+        ..Default::default()
+    };
+    let mut router = PolyServeRouter::new(&cfg, 300.0);
+    let mut cluster = Cluster::build(ServingMode::Colocated, 2, 0.0, 4, &cm, true);
+    let id = cluster.claim_for_tier(0, 0).unwrap();
+    cluster.mark_pending(id);
+    let mut reqs: Vec<SimRequest> = Vec::new();
+    {
+        let mut ctx = RouteCtx {
+            now: 1_000,
+            cluster: &mut cluster,
+            requests: &mut reqs,
+            profile: &profile,
+            mode: ServingMode::Colocated,
+            kv_transfer_ms: 2,
+        };
+        router.on_tick(1_000, &mut ctx);
+    }
+    assert_eq!(
+        router.stats.releases, 1,
+        "releasing an empty Pending instance must count as a release"
+    );
+    assert_eq!(cluster.best_effort_pool().count(), 2);
+}
+
+/// The PR-1 bug: `finalize` derived the span only from finished
+/// requests, so a `max_sim_ms`-aborted run billed zero
+/// active-instance·ms and reported 0 rps. The span must clamp to the
+/// last simulated event time.
+#[test]
+fn aborted_run_bills_the_simulated_span() {
+    let cfg = SimConfig {
+        trace: TraceKind::ShareGpt,
+        policy: Policy::PolyServe,
+        mode: ServingMode::PdDisaggregated,
+        instances: 4,
+        requests: 400,
+        rate_rps: Some(20.0), // 400 requests ≈ 20 s of arrivals
+        seed: 11,
+        ..Default::default()
+    };
+    let exp = Experiment::prepare(&cfg);
+    let params = SimParams {
+        mode: cfg.mode,
+        max_sim_ms: 2_000, // abort long before the workload completes
+        ..Default::default()
+    };
+    let cluster = Cluster::build(
+        cfg.mode,
+        cfg.instances,
+        exp.cfg.prefill_frac,
+        cfg.tiers.len(),
+        &exp.cost_model,
+        true,
+    );
+    let sim = Simulation::new(
+        params,
+        exp.cost_model.clone(),
+        &exp.profile,
+        &exp.workload,
+        cluster,
+        &cfg.tiers,
+    );
+    let mut router = PolyServeRouter::new(&cfg, exp.workload.avg_decode_len());
+    let res = sim.run(&mut router);
+    assert!(res.unfinished > 0, "the run must actually abort");
+    assert!(
+        res.sim_span_ms > 0 && res.sim_span_ms <= 2_000,
+        "span must cover the simulated time, got {}",
+        res.sim_span_ms
+    );
+    // A fixed 4-instance fleet is alive for the whole simulated span.
+    assert_eq!(res.cost.active_instance_ms, 4 * res.sim_span_ms);
+}
+
+// ---------------------------------------------------------------------
+// Scale-in KV-migration properties.
+// ---------------------------------------------------------------------
+
+/// Drains one decode server (the busiest) exactly once at `at_ms`,
+/// proposing `migrate` — a deterministic harness for the drain path.
+struct DrainOnce {
+    at_ms: TimeMs,
+    migrate: bool,
+    fired: bool,
+}
+
+impl Autoscaler for DrainOnce {
+    fn evaluate(&mut self, now: TimeMs, ctx: &mut RouteCtx) -> Vec<ScaleAction> {
+        if self.fired || now < self.at_ms {
+            return Vec::new();
+        }
+        let target = ctx
+            .cluster
+            .instances
+            .iter()
+            .filter(|i| i.role == Role::Decode && i.lifecycle.accepts_work())
+            .max_by_key(|i| i.decode_batch_now())
+            .map(|i| i.id);
+        match target {
+            Some(inst) => {
+                self.fired = true;
+                vec![ScaleAction::Drain { inst, migrate: self.migrate }]
+            }
+            None => Vec::new(),
+        }
+    }
+
+    fn name(&self) -> String {
+        "drain-once".into()
+    }
+}
+
+/// One controlled long-decode run: 6 requests with 3000-token outputs
+/// on a 1-prefill + 2-decode fleet, the busiest decode server drained
+/// at t=2 s while every request is mid-stream.
+fn long_decode_drain_run(migration_cfg: bool, propose_migrate: bool) -> SimResult {
+    let cm = CostModel::h200_llama8b();
+    let profile = ProfileTable::from_cost_model(&cm);
+    let cfg = SimConfig {
+        mode: ServingMode::PdDisaggregated,
+        ..Default::default()
+    };
+    let workload = Workload {
+        requests: (0..6u64)
+            .map(|i| Request {
+                id: i,
+                arrival_ms: i * 20,
+                prefill_len: 256,
+                decode_len: 3_000,
+                slo: Slo::new(5_000, 100),
+            })
+            .collect(),
+    };
+    let cluster = Cluster::build(ServingMode::PdDisaggregated, 3, 0.34, cfg.tiers.len(), &cm, true);
+    let params = SimParams {
+        mode: ServingMode::PdDisaggregated,
+        elastic: Some(ElasticParams {
+            min_instances: 1,
+            max_instances: 4,
+            provision_delay_ms: 1_000,
+            scale_eval_ms: 500,
+            migration: migration_cfg,
+        }),
+        ..Default::default()
+    };
+    let sim = Simulation::new(params, cm.clone(), &profile, &workload, cluster, &cfg.tiers);
+    let mut router = PolyServeRouter::new(&cfg, workload.avg_decode_len());
+    let mut scaler = DrainOnce { at_ms: 2_000, migrate: propose_migrate, fired: false };
+    sim.run_elastic(&mut router, Some(&mut scaler))
+}
+
+/// Token conservation across eviction and re-placement: every migrated
+/// request still emits exactly `decode_len` tokens — none lost to the
+/// eviction, none duplicated between source and destination — and the
+/// drain finishes strictly sooner than waiting the residents out.
+#[test]
+fn migration_conserves_tokens_and_shortens_drains() {
+    let off = long_decode_drain_run(false, true);
+    let on = long_decode_drain_run(true, true);
+    for (label, res) in [("off", &off), ("on", &on)] {
+        assert_eq!(res.unfinished, 0, "migration={label}: unfinished requests");
+        for o in &res.outcomes {
+            assert_eq!(
+                o.tokens, 3_000,
+                "migration={label}: request {} emitted {} of 3000 tokens",
+                o.id, o.tokens
+            );
+        }
+        assert_eq!(res.migration.drains(), 1, "migration={label}: expected one drain");
+    }
+    assert!(on.migration.migrated_requests > 0, "residents must migrate");
+    assert_eq!(off.migration.migrated_requests, 0);
+    assert_eq!(off.migration.migrated_kv_tokens, 0);
+    let (on_ms, off_ms) = (
+        on.migration.mean_drain_latency_ms(),
+        off.migration.mean_drain_latency_ms(),
+    );
+    assert!(
+        on_ms < off_ms,
+        "migration must shorten the drain: on={on_ms} ms vs off={off_ms} ms"
+    );
+}
+
+/// `migration = "off"` is the PR-1 wait-drain path bit-for-bit: the
+/// config gate alone decides — a scaler *proposing* migration must
+/// change nothing while the feature is off.
+#[test]
+fn migration_off_reproduces_wait_drain_bit_for_bit() {
+    let a = long_decode_drain_run(false, true); // proposal gated off
+    let b = long_decode_drain_run(false, false); // wait-drain proposed
+    assert_eq!(a.outcomes.len(), b.outcomes.len());
+    for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.first_token_ms, y.first_token_ms);
+        assert_eq!(x.finish_ms, y.finish_ms);
+        assert_eq!(x.tokens, y.tokens);
+        assert_eq!(x.attained, y.attained);
+    }
+    assert_eq!(a.sim_span_ms, b.sim_span_ms);
+    assert_eq!(a.cost.instance_busy_ms, b.cost.instance_busy_ms);
+    assert_eq!(a.cost.active_instance_ms, b.cost.active_instance_ms);
+    assert_eq!(a.migration, b.migration);
+    assert_eq!(a.migration.migrated_requests, 0);
+}
+
+/// Full-system property: an elastic diurnal run with the gradient
+/// scaler *and* migration enabled completes every request with exact
+/// per-request token counts (checked against the workload's ground
+/// truth decode lengths).
+#[test]
+fn elastic_migration_run_completes_with_exact_token_counts() {
+    let mut cfg = SimConfig {
+        trace: TraceKind::ShareGpt,
+        policy: Policy::PolyServe,
+        mode: ServingMode::PdDisaggregated,
+        instances: 6,
+        requests: 500,
+        rate_frac_of_optimal: 0.5,
+        seed: 7,
+        ..Default::default()
+    };
+    cfg.diurnal = Some(DiurnalSpec { peak_to_trough: 3.0, period_s: 120.0 });
+    cfg.elastic.scaler = ScalerKind::Gradient;
+    cfg.elastic.min_instances = 2;
+    cfg.elastic.max_instances = 12;
+    cfg.elastic.provision_delay_ms = 5_000;
+    cfg.elastic.scale_eval_ms = 1_000;
+    cfg.elastic.migration = true;
+    let exp = Experiment::prepare(&cfg);
+    let decode_len: HashMap<u64, u32> = exp
+        .workload
+        .requests
+        .iter()
+        .map(|r| (r.id, r.decode_len))
+        .collect();
+    let res = exp.run();
+    assert_eq!(res.unfinished, 0);
+    assert_eq!(res.cost.requests_served, 500);
+    for o in &res.outcomes {
+        assert_eq!(
+            o.tokens,
+            decode_len[&o.id] as u64,
+            "request {} token count drifted across migration",
+            o.id
+        );
+    }
+    assert!(res.cost.goodput_tokens <= res.cost.tokens_total);
 }

@@ -1,22 +1,30 @@
 //! Elastic-fleet scenario sweep: diurnal and burst-inversion demand ×
-//! scaling policy × scale-in migration, against a static fleet at equal
-//! peak capacity.
+//! scaling policy (gradient / threshold / predictive) × scale-in
+//! migration × elastic-prefill, against a static fleet at equal peak
+//! capacity.
 //!
-//! The acceptance questions this bench answers: with the §4.4
-//! load-gradient autoscaler chasing a diurnal demand curve
-//! (peak:trough ≥ 3:1), how many active-instance-seconds does the
-//! fleet bill compared to a static fleet sized for the same peak, does
-//! DSLO attainment hold while it saves — and on the long-decode
-//! scenario, how much drain latency (begin_drain→retire) and bill does
-//! scale-in KV migration shave off wait-drain? Results (incl. the
+//! The acceptance questions this bench answers: with an autoscaler
+//! chasing a diurnal demand curve (peak:trough ≥ 3:1), how many
+//! active-instance-seconds does the fleet bill compared to a static
+//! fleet sized for the same peak, does DSLO attainment hold while it
+//! saves — and does the *predictive* scaler (provisioning before the
+//! ramp crests instead of reacting to saturation) beat both reactive
+//! scalers on SLO-violation rate or on bill per goodput token on the
+//! ramps? The long-decode scenario additionally measures how much
+//! drain latency (begin_drain→retire) and bill scale-in KV migration
+//! shaves off wait-drain, and the `+pf` cells let TTFT pressure scale
+//! the PD prefill tier too (prefill fleet columns `pf_mean`/`pf_peak`/
+//! `pf_trough`, re-routed jobs in `migrated_pf`). Results (incl. the
 //! `savings_vs_static` column) land in `results/elastic_scaling_*.csv`.
 //!
 //! `POLYSERVE_SMOKE=1` runs a tiny workload and asserts the invariants
-//! (every request finishes; migration counters move only when enabled)
-//! so a migration regression fails CI outright.
+//! (every request finishes; migration counters move only when enabled;
+//! the prefill fleet moves only in `+pf` cells) so a regression fails
+//! CI outright.
 
 use polyserve::analysis::ServingMode;
 use polyserve::config::{DiurnalSpec, Policy, ScalerKind, SimConfig};
+use polyserve::coordinator::sizing::split_pd_fleet;
 use polyserve::figures::{size_elastic_pd_cell, Experiment};
 use polyserve::slo::TierDistribution;
 use polyserve::util::benchkit::{f, full_scale, smoke_scale, Bench};
@@ -90,6 +98,8 @@ struct Cell {
     scaler: ScalerKind,
     /// Scale-in KV migration on elastic cells.
     migration: bool,
+    /// Elastic PD prefill tier (TTFT-pressure scaling).
+    prefill_elastic: bool,
     /// Fixed fleet at peak capacity (the baseline bill).
     is_static: bool,
 }
@@ -101,9 +111,13 @@ struct CellResult {
     fleet_mean: f64,
     fleet_peak: usize,
     fleet_trough: usize,
+    pf_mean: f64,
+    pf_peak: usize,
+    pf_trough: usize,
     drains: usize,
     drain_mean_ms: f64,
     migrated_reqs: u64,
+    migrated_prefill_jobs: u64,
     migrated_kv_tokens: u64,
     unfinished: usize,
 }
@@ -138,6 +152,15 @@ fn run_cell(c: &Cell, n_peak: usize, requests: usize) -> CellResult {
                 // decode share.
                 let peak_frac = cfg.prefill_frac;
                 size_elastic_pd_cell(cfg, n_peak, peak_frac, |sp| (sp / 4).max(2));
+                if c.prefill_elastic {
+                    // `+pf`: the prefill tier scales too — start at its
+                    // peak share, drain to half in the trough, grow a
+                    // little past peak under TTFT pressure.
+                    let (n_pf, _) = split_pd_fleet(n_peak, peak_frac);
+                    cfg.elastic.prefill_elastic = true;
+                    cfg.elastic.prefill_min = (n_pf / 2).max(1);
+                    cfg.elastic.prefill_max = n_pf + 2;
+                }
             }
             ServingMode::Colocated => {
                 cfg.elastic.min_instances = (n_peak / 4).max(2);
@@ -152,6 +175,12 @@ fn run_cell(c: &Cell, n_peak: usize, requests: usize) -> CellResult {
     if c.scenario.long_decode {
         stretch_decode_tail(&mut exp.workload);
     }
+    // Static fleets record no samples: fill the prefill columns from
+    // the (constant) built fleet split.
+    let n_pf_static = match c.mode {
+        ServingMode::PdDisaggregated => split_pd_fleet(exp.cfg.instances, exp.cfg.prefill_frac).0,
+        ServingMode::Colocated => 0,
+    };
     let res = exp.run();
     CellResult {
         attain: res.attainment.overall(),
@@ -164,9 +193,13 @@ fn run_cell(c: &Cell, n_peak: usize, requests: usize) -> CellResult {
         },
         fleet_peak: if res.fleet.is_empty() { n_peak } else { res.fleet.peak_active() },
         fleet_trough: if res.fleet.is_empty() { n_peak } else { res.fleet.trough_active() },
+        pf_mean: if res.fleet.is_empty() { n_pf_static as f64 } else { res.fleet.mean_prefill() },
+        pf_peak: if res.fleet.is_empty() { n_pf_static } else { res.fleet.peak_prefill() },
+        pf_trough: if res.fleet.is_empty() { n_pf_static } else { res.fleet.trough_prefill() },
         drains: res.migration.drains(),
         drain_mean_ms: res.migration.mean_drain_latency_ms(),
         migrated_reqs: res.migration.migrated_requests,
+        migrated_prefill_jobs: res.migration.migrated_prefill_jobs,
         migrated_kv_tokens: res.migration.migrated_kv_tokens,
         unfinished: res.unfinished,
     }
@@ -200,11 +233,34 @@ fn main() {
                 mode,
                 scaler: ScalerKind::Off,
                 migration: false,
+                prefill_elastic: false,
                 is_static: true,
             });
-            for scaler in [ScalerKind::Gradient, ScalerKind::Threshold] {
+            for scaler in [ScalerKind::Gradient, ScalerKind::Threshold, ScalerKind::Predictive] {
                 for migration in [false, true] {
-                    cells.push(Cell { scenario, mode, scaler, migration, is_static: false });
+                    cells.push(Cell {
+                        scenario,
+                        mode,
+                        scaler,
+                        migration,
+                        prefill_elastic: false,
+                        is_static: false,
+                    });
+                }
+            }
+            // Elastic-prefill rows (PD only): TTFT pressure scales the
+            // prefill tier too; migration on so drained prefill queues
+            // re-route instead of wait.
+            if mode == ServingMode::PdDisaggregated {
+                for scaler in [ScalerKind::Gradient, ScalerKind::Predictive] {
+                    cells.push(Cell {
+                        scenario,
+                        mode,
+                        scaler,
+                        migration: true,
+                        prefill_elastic: true,
+                        is_static: false,
+                    });
                 }
             }
         }
@@ -227,10 +283,13 @@ fn main() {
     for (c, r) in &results {
         let policy = if c.is_static {
             "static".to_string()
-        } else if c.migration {
-            format!("{}+mig", c.scaler.name())
         } else {
-            c.scaler.name().to_string()
+            format!(
+                "{}{}{}",
+                c.scaler.name(),
+                if c.migration { "+mig" } else { "" },
+                if c.prefill_elastic { "+pf" } else { "" },
+            )
         };
         let (base_bill, base_attain) = static_cell(c.scenario.name, c.mode);
         let savings = if c.is_static { 0.0 } else { 1.0 - r.active_instance_s / base_bill };
@@ -247,9 +306,13 @@ fn main() {
             f(r.fleet_mean, 1),
             r.fleet_peak.to_string(),
             r.fleet_trough.to_string(),
+            f(r.pf_mean, 1),
+            r.pf_peak.to_string(),
+            r.pf_trough.to_string(),
             r.drains.to_string(),
             f(r.drain_mean_ms, 0),
             r.migrated_reqs.to_string(),
+            r.migrated_prefill_jobs.to_string(),
             r.unfinished.to_string(),
         ]);
     }
@@ -267,25 +330,38 @@ fn main() {
             "fleet_mean",
             "fleet_peak",
             "fleet_trough",
+            "pf_mean",
+            "pf_peak",
+            "pf_trough",
             "drains",
             "drain_mean_ms",
             "migrated_reqs",
+            "migrated_pf",
             "unfinished",
         ],
         &rows,
     );
 
-    // Smoke invariants (CI): every request must finish in every cell,
-    // and migration counters move only when migration is on.
+    // Smoke invariants (CI): every request must finish in every cell
+    // (the predictive cells included), migration counters move only
+    // when migration is on, and the prefill fleet moves only in `+pf`
+    // cells.
     if smoke {
+        assert!(
+            results
+                .iter()
+                .any(|(c, _)| c.scaler == ScalerKind::Predictive && !c.is_static),
+            "smoke gate must cover the predictive policy"
+        );
         for (c, r) in &results {
             assert_eq!(
                 r.unfinished, 0,
-                "{}/{}/{:?} mig={} left requests unfinished",
+                "{}/{}/{:?} mig={} pf={} left requests unfinished",
                 c.scenario.name,
                 c.mode.name(),
                 c.scaler,
-                c.migration
+                c.migration,
+                c.prefill_elastic
             );
             assert!((0.0..=1.0).contains(&r.attain));
             if !c.migration {
@@ -297,6 +373,22 @@ fn main() {
                     c.scaler
                 );
                 assert_eq!(r.migrated_kv_tokens, 0);
+            }
+            if !c.prefill_elastic {
+                assert_eq!(
+                    r.migrated_prefill_jobs, 0,
+                    "{}/{}/{:?}: static prefill tier but prefill jobs migrated",
+                    c.scenario.name,
+                    c.mode.name(),
+                    c.scaler
+                );
+                assert_eq!(
+                    r.pf_peak, r.pf_trough,
+                    "{}/{}/{:?}: static prefill tier changed size",
+                    c.scenario.name,
+                    c.mode.name(),
+                    c.scaler
+                );
             }
         }
         println!("smoke invariants OK ({} cells)", results.len());

@@ -11,7 +11,9 @@ use crate::workload::Workload;
 /// One point of a Fig-2 style series.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct BatchPoint {
+    /// TPOT budget of the point, ms.
     pub tpot_ms: f64,
+    /// Max batch size meeting that budget.
     pub batch: u64,
 }
 
@@ -53,9 +55,11 @@ pub fn fig3_coloc_batch_series(
 /// One point of a Fig-4 style series.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CostPoint {
+    /// TPOT budget of the point, ms.
     pub tpot_ms: f64,
     /// instance·seconds per request.
     pub cost_coloc_s: f64,
+    /// PD-disaggregation instance·seconds per request.
     pub cost_pd_s: f64,
 }
 
@@ -115,11 +119,14 @@ pub fn slo_achievable(cm: &CostModel, mode: ServingMode, p: u32, d: u32, slo: Sl
 /// Which serving architecture (§2.4).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ServingMode {
+    /// Separate prefill and decode clusters (§2.4).
     PdDisaggregated,
+    /// Chunked-prefill co-location on every server.
     Colocated,
 }
 
 impl ServingMode {
+    /// Config/CLI name of this serving mode (`pd` / `coloc`).
     pub fn name(&self) -> &'static str {
         match self {
             ServingMode::PdDisaggregated => "pd",

@@ -11,7 +11,9 @@ use std::path::Path;
 /// Scheduling policies under evaluation (§5.1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Policy {
+    /// The paper's router (§4).
     PolyServe,
+    /// Uniform random placement.
     Random,
     /// "Assigning requests to the lowest cycle-time server".
     Minimal,
@@ -21,8 +23,10 @@ pub enum Policy {
 }
 
 impl Policy {
+    /// Every policy, in §5.1 order.
     pub const ALL: [Policy; 4] = [Policy::PolyServe, Policy::Random, Policy::Minimal, Policy::Chunk];
 
+    /// Config/CLI name of this policy.
     pub fn name(&self) -> &'static str {
         match self {
             Policy::PolyServe => "polyserve",
@@ -32,6 +36,7 @@ impl Policy {
         }
     }
 
+    /// Parse a config/CLI policy name.
     pub fn from_name(s: &str) -> Option<Policy> {
         Policy::ALL.iter().copied().find(|p| p.name() == s)
     }
@@ -62,29 +67,44 @@ pub enum ScalerKind {
     Gradient,
     /// Reactive utilization-threshold baseline.
     Threshold,
+    /// Profile-driven predictive scaler: sizes the fleet for the
+    /// arrival rate projected `provision_lead_ms` ahead.
+    Predictive,
 }
 
 impl ScalerKind {
-    pub const ALL: [ScalerKind; 3] = [ScalerKind::Off, ScalerKind::Gradient, ScalerKind::Threshold];
+    /// Every scaler kind, in config-name order.
+    pub const ALL: [ScalerKind; 4] = [
+        ScalerKind::Off,
+        ScalerKind::Gradient,
+        ScalerKind::Threshold,
+        ScalerKind::Predictive,
+    ];
 
+    /// Config/CLI name of this scaler.
     pub fn name(&self) -> &'static str {
         match self {
             ScalerKind::Off => "off",
             ScalerKind::Gradient => "gradient",
             ScalerKind::Threshold => "threshold",
+            ScalerKind::Predictive => "predictive",
         }
     }
 
+    /// Parse a config/CLI name.
     pub fn from_name(s: &str) -> Option<ScalerKind> {
         ScalerKind::ALL.iter().copied().find(|k| k.name() == s)
     }
 }
 
-/// Elastic-fleet knobs. Bounds apply to the *scalable* role — decode
-/// servers under PD-disaggregation, coloc servers under co-location
-/// (the PD prefill cluster stays static).
+/// Elastic-fleet knobs. `min`/`max` bound the *scalable* role — decode
+/// servers under PD-disaggregation, coloc servers under co-location;
+/// the PD prefill cluster stays static unless `prefill_elastic` gives
+/// it bounds of its own.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ElasticConfig {
+    /// Which policy drives the fleet (`[elastic] scaler`, alias
+    /// `policy`): off | gradient | threshold | predictive.
     pub scaler: ScalerKind,
     /// Never drain the scalable fleet below this.
     pub min_instances: usize,
@@ -99,6 +119,20 @@ pub struct ElasticConfig {
     /// waiting for them to finish. `"off"` reproduces the wait-drain
     /// path bit-for-bit.
     pub migration: bool,
+    /// Predictive-scaler anticipation horizon: size the fleet for the
+    /// rate projected this far ahead. `None` defaults to
+    /// `provision_delay_ms` (capacity lands exactly when the projected
+    /// rate does).
+    pub provision_lead_ms: Option<u64>,
+    /// Elastic PD prefill tier (`prefill_elastic = "off"|"on"`): let
+    /// TTFT pressure provision/drain prefill servers too. `"off"`
+    /// reproduces the static-prefill path bit-for-bit.
+    pub prefill_elastic: bool,
+    /// Never drain the prefill cluster below this (elastic prefill).
+    pub prefill_min: usize,
+    /// Never provision prefill above this (elastic prefill; must be
+    /// set ≥ `prefill_min` when `prefill_elastic` is on).
+    pub prefill_max: usize,
 }
 
 impl Default for ElasticConfig {
@@ -110,16 +144,23 @@ impl Default for ElasticConfig {
             provision_delay_ms: 15_000,
             scale_eval_ms: 1_000,
             migration: false,
+            provision_lead_ms: None,
+            prefill_elastic: false,
+            prefill_min: 1,
+            prefill_max: 0,
         }
     }
 }
 
 impl ElasticConfig {
     /// Elastic machinery engages only with a scaler selected *and* real
-    /// headroom between the bounds; `max == min` is exactly the static
-    /// fleet (bit-for-bit the seed code path).
+    /// headroom between some pair of bounds; `max == min` (with the
+    /// prefill tier off or equally pinned) is exactly the static fleet
+    /// (bit-for-bit the seed code path).
     pub fn enabled(&self) -> bool {
-        self.scaler != ScalerKind::Off && self.max_instances > self.min_instances
+        self.scaler != ScalerKind::Off
+            && (self.max_instances > self.min_instances
+                || (self.prefill_elastic && self.prefill_max > self.prefill_min))
     }
 }
 
@@ -128,24 +169,35 @@ impl ElasticConfig {
 /// and period, instead of constant-rate Poisson.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DiurnalSpec {
+    /// Peak rate over trough rate (≥ 1).
     pub peak_to_trough: f64,
+    /// Diurnal period, seconds.
     pub period_s: f64,
 }
 
 /// Full simulation/experiment configuration.
 #[derive(Debug, Clone)]
 pub struct SimConfig {
+    /// Workload trace the generator samples lengths from.
     pub trace: TraceKind,
+    /// Routing policy under test.
     pub policy: Policy,
+    /// Serving architecture (PD-disaggregated / co-located).
     pub mode: ServingMode,
+    /// Initial fleet size.
     pub instances: usize,
+    /// Number of requests to simulate.
     pub requests: usize,
     /// Request rate as a fraction of the optimal-goodput bound (§5.2
     /// varies 20%–120% of optimal); `rate_rps` overrides if set.
     pub rate_frac_of_optimal: f64,
+    /// Absolute request rate, req/s (overrides `rate_frac_of_optimal`).
     pub rate_rps: Option<f64>,
+    /// RNG seed for workload generation and stochastic policies.
     pub seed: u64,
+    /// TPOT tier set requests are binned into.
     pub tiers: TierSet,
+    /// Distribution SLOs are sampled from (§5.1).
     pub tier_dist: TierDistribution,
     /// CO-Chunk static token budget (paper sweeps this; default 512).
     pub chunk_budget: u64,
@@ -223,6 +275,7 @@ impl SimConfig {
         SimConfig::from_doc(&doc)
     }
 
+    /// Parse from an already-parsed TOML-subset document.
     pub fn from_doc(doc: &Doc) -> anyhow::Result<SimConfig> {
         let mut cfg = SimConfig::default();
         if let Some(v) = doc.get("trace") {
@@ -272,12 +325,18 @@ impl SimConfig {
                 .map(|x| x as u64)
                 .collect();
         }
-        if let Some(v) = doc.get("elastic.scaler") {
-            let name = v
-                .as_str()
-                .ok_or_else(|| anyhow::anyhow!("elastic.scaler must be a string"))?;
-            cfg.elastic.scaler = ScalerKind::from_name(name)
-                .ok_or_else(|| anyhow::anyhow!("unknown scaler '{name}' (off|gradient|threshold)"))?;
+        // `elastic.scaler`, with `elastic.policy` as an accepted alias.
+        for key in ["elastic.scaler", "elastic.policy"] {
+            if let Some(v) = doc.get(key) {
+                let name = v
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("{key} must be a string"))?;
+                cfg.elastic.scaler = ScalerKind::from_name(name).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown scaler '{name}' (off|gradient|threshold|predictive)"
+                    )
+                })?;
+            }
         }
         cfg.elastic.min_instances =
             doc.usize_or("elastic.min_instances", cfg.elastic.min_instances);
@@ -288,6 +347,13 @@ impl SimConfig {
                 as u64;
         cfg.elastic.scale_eval_ms =
             doc.usize_or("elastic.scale_eval_ms", cfg.elastic.scale_eval_ms as usize) as u64;
+        if let Some(v) = doc.get("elastic.provision_lead_ms") {
+            cfg.elastic.provision_lead_ms = Some(
+                v.as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("elastic.provision_lead_ms must be a number"))?
+                    as u64,
+            );
+        }
         if let Some(v) = doc.get("elastic.migration") {
             cfg.elastic.migration = match (v.as_str(), v.as_bool()) {
                 (Some("on"), _) => true,
@@ -299,6 +365,19 @@ impl SimConfig {
                 _ => anyhow::bail!("elastic.migration must be \"off\"|\"on\""),
             };
         }
+        if let Some(v) = doc.get("elastic.prefill_elastic") {
+            cfg.elastic.prefill_elastic = match (v.as_str(), v.as_bool()) {
+                (Some("on"), _) => true,
+                (Some("off"), _) => false,
+                (None, Some(b)) => b,
+                (Some(other), _) => {
+                    anyhow::bail!("unknown elastic.prefill_elastic '{other}' (off|on)")
+                }
+                _ => anyhow::bail!("elastic.prefill_elastic must be \"off\"|\"on\""),
+            };
+        }
+        cfg.elastic.prefill_min = doc.usize_or("elastic.prefill_min", cfg.elastic.prefill_min);
+        cfg.elastic.prefill_max = doc.usize_or("elastic.prefill_max", cfg.elastic.prefill_max);
         if let Some(v) = doc.get("diurnal.peak_to_trough") {
             let ratio = v
                 .as_f64()
@@ -322,6 +401,7 @@ impl SimConfig {
         Ok(cfg)
     }
 
+    /// Check cross-field invariants; every construction path calls this.
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.instances >= 1, "need at least one instance");
         anyhow::ensure!(self.requests >= 1, "need at least one request");
@@ -355,6 +435,21 @@ impl SimConfig {
                 "elastic.max_instances must be >= elastic.min_instances"
             );
             anyhow::ensure!(self.elastic.scale_eval_ms >= 1, "elastic.scale_eval_ms must be >= 1");
+            if self.elastic.prefill_elastic {
+                // The PD router needs at least one active prefill
+                // server, and an unset prefill_max with the feature on
+                // would silently pin the tier — reject loudly, like the
+                // primary bounds.
+                anyhow::ensure!(
+                    self.elastic.prefill_min >= 1,
+                    "elastic.prefill_min must be >= 1 when prefill_elastic is on"
+                );
+                anyhow::ensure!(
+                    self.elastic.prefill_max >= self.elastic.prefill_min,
+                    "elastic.prefill_max must be set >= elastic.prefill_min when \
+                     prefill_elastic is on (use max == min to pin the prefill tier)"
+                );
+            }
         }
         if let Some(d) = &self.diurnal {
             anyhow::ensure!(d.peak_to_trough >= 1.0, "diurnal.peak_to_trough must be >= 1");
@@ -438,9 +533,54 @@ period_s = 900.0
         assert_eq!(c.elastic.scale_eval_ms, 2_000);
         assert!(c.elastic.migration);
         assert!(c.elastic.enabled());
+        // New knobs keep their defaults when unspecified.
+        assert_eq!(c.elastic.provision_lead_ms, None);
+        assert!(!c.elastic.prefill_elastic);
         let d = c.diurnal.unwrap();
         assert_eq!(d.peak_to_trough, 3.0);
         assert_eq!(d.period_s, 900.0);
+    }
+
+    #[test]
+    fn parses_predictive_policy_and_elastic_prefill() {
+        // `policy` is an accepted alias for `scaler` (the predictive
+        // feature's documented spelling).
+        let doc = tomlish::parse(
+            r#"
+[elastic]
+policy = "predictive"
+min_instances = 4
+max_instances = 32
+provision_lead_ms = 20000
+prefill_elastic = "on"
+prefill_min = 2
+prefill_max = 8
+"#,
+        )
+        .unwrap();
+        let c = SimConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.elastic.scaler, ScalerKind::Predictive);
+        assert_eq!(c.elastic.provision_lead_ms, Some(20_000));
+        assert!(c.elastic.prefill_elastic);
+        assert_eq!(c.elastic.prefill_min, 2);
+        assert_eq!(c.elastic.prefill_max, 8);
+        assert!(c.elastic.enabled());
+    }
+
+    #[test]
+    fn prefill_bounds_alone_enable_elastic() {
+        // A pinned decode fleet with an elastic prefill tier still
+        // engages the elastic machinery.
+        let mut c = SimConfig::default();
+        c.elastic.scaler = ScalerKind::Predictive;
+        c.elastic.min_instances = 8;
+        c.elastic.max_instances = 8;
+        assert!(!c.elastic.enabled());
+        c.elastic.prefill_elastic = true;
+        c.elastic.prefill_min = 2;
+        c.elastic.prefill_max = 6;
+        assert!(c.elastic.enabled());
+        c.validate().unwrap();
     }
 
     #[test]
@@ -471,6 +611,11 @@ period_s = 900.0
             "[elastic]\nscaler = \"gradient\"", // max unset → silent no-op, reject
             "[elastic]\nscaler = \"gradient\"\nmin_instances = 12\nmax_instances = 8",
             "[elastic]\nmigration = \"nope\"",
+            "[elastic]\npolicy = \"nope\"",
+            "[elastic]\nprefill_elastic = \"nope\"",
+            // prefill_elastic on without prefill_max → silent pin, reject.
+            "[elastic]\nscaler = \"predictive\"\nmin_instances = 2\nmax_instances = 8\nprefill_elastic = \"on\"",
+            "[elastic]\nscaler = \"predictive\"\nmin_instances = 2\nmax_instances = 8\nprefill_elastic = \"on\"\nprefill_min = 0\nprefill_max = 4",
             "[diurnal]\npeak_to_trough = 0.5",
         ] {
             let doc = tomlish::parse(bad).unwrap();

@@ -30,6 +30,8 @@ pub struct LoadEstimate {
     pub iter_now_ms: f64,
 }
 
+/// Estimate `inst`'s router-visible load: decode batch, resident KV
+/// (in-flight handoffs included), and predicted iteration time.
 pub fn load_estimate(inst: &Instance, requests: &[SimRequest], profile: &ProfileTable) -> LoadEstimate {
     let batch = inst.decode_batch_now();
     let kv_now = inst.kv_used(requests)

@@ -4,7 +4,7 @@
 //! tiers and the best-effort pool *within* a fixed fleet; the
 //! [`Autoscaler`] decides when the fleet itself should grow (provision
 //! from the cloud, paying a cold-start delay) or shrink (drain and
-//! retire a server). Two policies:
+//! retire a server). Three policies:
 //!
 //! * [`GradientAutoscaler`] — PolyServe's §4.4 story: routing to the
 //!   highest-load-but-feasible server concentrates work, so the
@@ -16,28 +16,63 @@
 //! * [`ThresholdAutoscaler`] — the classic reactive baseline: scale
 //!   out above a fleet-utilization high-water mark, scale in below a
 //!   low-water mark after a patience window.
+//! * [`PredictiveAutoscaler`] — profile-driven *planning* instead of
+//!   reaction (the SLOs-Serve / SCORPIO direction): estimate the
+//!   arrival-rate trend (windowed EWMA + linear slope over `ScaleEval`
+//!   epochs), project it `provision_lead_ms` ahead, convert the
+//!   projected rate into a required fleet via the shared
+//!   [`sizing`](super::sizing) math, and provision *before* a diurnal
+//!   ramp crests — so the cold-start delay is paid while the old
+//!   capacity still suffices, not after it saturates.
+//!
+//! # Elastic prefill (PD)
+//!
+//! The PD prefill cluster stops being static when
+//! `[elastic] prefill_elastic = "on"`: every policy then also consumes
+//! the [`ttft_pressure`] signal — estimated prefill-queue drain time
+//! over the queued jobs' mean TTFT headroom — and emits
+//! `Provision`/`Drain` actions for [`Role::Prefill`] servers (the
+//! predictive policy additionally sizes the prefill tier from projected
+//! prompt-token demand). Prefill drains with `[elastic]
+//! migration = "on"` re-route the drainer's queued prefill jobs to
+//! surviving prefill servers instead of finishing them in place.
 //!
 //! Policies only *propose* [`ScaleAction`]s; the simulator enforces
-//! min/max fleet bounds and the provisioning delay (`sim::ElasticParams`).
+//! per-role min/max fleet bounds and the provisioning delay
+//! (`sim::ElasticParams`).
 
 use super::admission::{self, load_estimate};
+use super::sizing;
 use super::RouteCtx;
 use crate::analysis::ServingMode;
 use crate::config::{ScalerKind, SimConfig};
+use crate::metrics::RateSample;
 use crate::sim::{Lifecycle, Role};
 use crate::slo::{TierSet, TimeMs};
+use std::collections::VecDeque;
 
 /// A fleet-scaling decision (bounds-checked by the simulator).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ScaleAction {
     /// Add a cold-starting instance of `role`.
-    Provision { role: Role },
+    Provision {
+        /// Role of the new instance (the scalable role, or
+        /// `Role::Prefill` when the prefill tier is elastic).
+        role: Role,
+    },
     /// Drain instance `inst`. With `migrate` (and `[elastic]
-    /// migration = "on"`) its decode residents are evicted and their KV
-    /// moved to surviving servers; otherwise the drain waits for them
-    /// to finish. Scalers set `migrate` from [`migration_feasible`] so
-    /// a fleet without destination headroom falls back to wait-drain.
-    Drain { inst: usize, migrate: bool },
+    /// migration = "on"`) its residents are moved off — decode
+    /// residents' KV streams to surviving servers, a prefill drainer's
+    /// queued jobs are re-routed — otherwise the drain waits for them
+    /// to finish. Scalers set `migrate` from [`migration_feasible`] /
+    /// [`prefill_migration_feasible`] so a fleet without destination
+    /// headroom falls back to wait-drain.
+    Drain {
+        /// Instance id to drain.
+        inst: usize,
+        /// Move residents out instead of waiting for them.
+        migrate: bool,
+    },
 }
 
 /// Scale-in migration gate: can the surviving active fleet plausibly
@@ -69,6 +104,15 @@ pub fn migration_feasible(ctx: &RouteCtx, inst: usize) -> bool {
     batch_free >= src.batch && kv_free >= 2 * src.kv_now
 }
 
+/// Prefill scale-in migration gate: a prefill drainer's queued jobs
+/// carry at most their partially-computed KV, so the only hard
+/// requirement is a surviving active prefill server to requeue onto —
+/// the router's EDF-feasibility placement spreads them from there.
+pub fn prefill_migration_feasible(ctx: &RouteCtx, inst: usize) -> bool {
+    ctx.cluster.instances[inst].role == Role::Prefill
+        && ctx.cluster.with_role(Role::Prefill).any(|id| id != inst)
+}
+
 /// A fleet-scaling policy, evaluated on every `ScaleEval` event.
 pub trait Autoscaler {
     /// Inspect router-visible cluster state and propose scale actions.
@@ -76,10 +120,20 @@ pub trait Autoscaler {
 
     /// Human-readable name for reports.
     fn name(&self) -> String;
+
+    /// Drain the predicted-vs-observed arrival-rate series this policy
+    /// recorded (empty for policies that don't predict); the simulator
+    /// attaches it to `SimResult::fleet`.
+    fn take_rate_series(&mut self) -> Vec<RateSample> {
+        Vec::new()
+    }
 }
 
-/// The role the elastic layer scales: the PD prefill cluster is static,
-/// everything else grows and shrinks.
+/// The *primary* role the elastic layer scales: decode servers under
+/// PD-disaggregation, the coloc servers themselves under co-location.
+/// The PD prefill cluster is a second, independently-bounded scaling
+/// target — policies address it explicitly as [`Role::Prefill`] when
+/// `prefill_elastic` is on, never through this function.
 pub fn scaling_role(mode: ServingMode) -> Role {
     match mode {
         ServingMode::PdDisaggregated => Role::Decode,
@@ -135,6 +189,115 @@ fn headroom_requests(ctx: &RouteCtx, inst: usize, tpot_ms: u64) -> u64 {
     lo
 }
 
+// ------------------------------------------------------- TTFT pressure
+
+/// Scale-out trigger for the prefill tier: provision when the queues
+/// would take longer to drain than the queued jobs have TTFT headroom.
+pub const PREFILL_PRESSURE_HI: f64 = 1.0;
+/// Scale-in trigger for the prefill tier: drain (after patience) when
+/// the queues clear in under a quarter of the available headroom.
+pub const PREFILL_PRESSURE_LO: f64 = 0.25;
+/// Chunk budget assumed by prefill throughput estimates — the same
+/// constant the PolyServe router's prefill budget is built from
+/// ([`sizing::DEFAULT_PREFILL_BUDGET`]), so the estimates track the
+/// router's actual chunk rate by construction.
+pub const PREFILL_SIZING_BUDGET: u64 = sizing::DEFAULT_PREFILL_BUDGET;
+
+/// TTFT pressure on the PD prefill cluster: estimated time to drain all
+/// queued prompt tokens at the active fleet's chunked-prefill
+/// throughput, divided by the queued jobs' mean remaining TTFT headroom.
+///
+/// * `0.0` — no queued prefill work (or no prefill cluster: coloc mode).
+/// * `< 1.0` — queues clear within the deadlines' headroom.
+/// * `> 1.0` — TTFT violations are brewing; the prefill tier needs
+///   capacity `≈ pressure ×` the current fleet.
+/// * `∞` — queued work with *no* active prefill server (every one
+///   draining/lost) — unconditional provisioning signal.
+///
+/// Queues on draining servers count toward demand but drainers don't
+/// count as capacity: the estimate errs conservative during scale-in.
+pub fn ttft_pressure(ctx: &RouteCtx, prefill_budget: u64) -> f64 {
+    let mut queued_tokens = 0u64;
+    let mut n_active = 0usize;
+    let mut headroom_sum = 0.0f64;
+    let mut jobs = 0usize;
+    for i in &ctx.cluster.instances {
+        if i.role != Role::Prefill || !i.lifecycle.is_live() {
+            continue;
+        }
+        if i.lifecycle.accepts_work() {
+            n_active += 1;
+        }
+        queued_tokens += i.queued_prefill_tokens(ctx.requests);
+        for j in &i.prefill_queue {
+            jobs += 1;
+            headroom_sum += j.deadline.saturating_sub(ctx.now).max(1) as f64;
+        }
+    }
+    if jobs == 0 {
+        return 0.0;
+    }
+    if n_active == 0 {
+        return f64::INFINITY;
+    }
+    let fleet_tokens_per_ms =
+        sizing::prefill_tokens_per_ms(ctx.profile, prefill_budget) * n_active as f64;
+    let drain_ms = queued_tokens as f64 / fleet_tokens_per_ms.max(1e-9);
+    drain_ms / (headroom_sum / jobs as f64)
+}
+
+/// The shared prefill scale-in choice: drain the least-queued active
+/// prefill server, migrating its queue if a survivor exists. Every
+/// policy's prefill drain goes through here so the target selection
+/// and feasibility gate can never diverge between scalers.
+fn prefill_drain_action(ctx: &RouteCtx) -> Option<ScaleAction> {
+    let inst = ctx
+        .cluster
+        .with_role(Role::Prefill)
+        .min_by_key(|&id| ctx.cluster.instances[id].queued_prefill_tokens(ctx.requests))?;
+    let migrate = prefill_migration_feasible(ctx, inst);
+    Some(ScaleAction::Drain { inst, migrate })
+}
+
+/// Shared prefill-tier reaction all three policies use when
+/// `prefill_elastic` is on: provision the capacity shortfall implied
+/// by TTFT pressure above [`PREFILL_PRESSURE_HI`] (pressure is demand
+/// over *current* throughput, so the shortfall is
+/// `(pressure − 1) × active`), drain the least-queued prefill server
+/// after `patience` consecutive evaluations below
+/// [`PREFILL_PRESSURE_LO`]. Bounds are enforced by the simulator.
+fn prefill_pressure_actions(
+    ctx: &RouteCtx,
+    streak: &mut u32,
+    patience: u32,
+) -> Vec<ScaleAction> {
+    let pressure = ttft_pressure(ctx, PREFILL_SIZING_BUDGET);
+    let in_flight = ctx.cluster.provisioning_count(Role::Prefill);
+    if pressure > PREFILL_PRESSURE_HI {
+        *streak = 0;
+        let active = ctx.cluster.active_count(Role::Prefill).max(1);
+        let want = if pressure.is_finite() {
+            (((pressure - 1.0) * active as f64).ceil() as usize).clamp(1, 4)
+        } else {
+            1
+        }
+        .saturating_sub(in_flight);
+        return (0..want)
+            .map(|_| ScaleAction::Provision { role: Role::Prefill })
+            .collect();
+    }
+    if pressure < PREFILL_PRESSURE_LO && in_flight == 0 {
+        *streak += 1;
+        if *streak >= patience {
+            *streak = 0;
+            return prefill_drain_action(ctx).into_iter().collect();
+        }
+    } else {
+        *streak = 0;
+    }
+    Vec::new()
+}
+
 // ------------------------------------------------------------- gradient
 
 /// §4.4 load-gradient fleet scaler.
@@ -145,16 +308,30 @@ pub struct GradientAutoscaler {
     /// Consecutive surplus evaluations required before draining.
     patience: u32,
     surplus_streak: u32,
+    /// Also react to TTFT pressure on the PD prefill tier.
+    prefill_elastic: bool,
+    prefill_streak: u32,
 }
 
 impl GradientAutoscaler {
+    /// Build with the default reserve (1 idle server) and patience (3
+    /// evaluations); the prefill tier stays static unless
+    /// [`Self::scale_prefill`] enables it.
     pub fn new(tiers: TierSet) -> GradientAutoscaler {
         GradientAutoscaler {
             tiers,
             reserve: 1,
             patience: 3,
             surplus_streak: 0,
+            prefill_elastic: false,
+            prefill_streak: 0,
         }
+    }
+
+    /// Enable/disable elastic-prefill reactions ([`ttft_pressure`]).
+    pub fn scale_prefill(mut self, enabled: bool) -> Self {
+        self.prefill_elastic = enabled;
+        self
     }
 
     /// A tier saturates when even its least-loaded member has no
@@ -203,10 +380,10 @@ impl GradientAutoscaler {
         }
         None
     }
-}
 
-impl Autoscaler for GradientAutoscaler {
-    fn evaluate(&mut self, _now: TimeMs, ctx: &mut RouteCtx) -> Vec<ScaleAction> {
+    /// The PR 1 §4.4 evaluation over the scalable role (decode/coloc);
+    /// unchanged by the elastic-prefill extension.
+    fn scale_primary(&mut self, ctx: &mut RouteCtx) -> Vec<ScaleAction> {
         let role = scaling_role(ctx.mode);
         // Reserve = *empty* best-effort instances. BE-assigned servers
         // can carry best-effort traffic without leaving the pool, and a
@@ -266,6 +443,16 @@ impl Autoscaler for GradientAutoscaler {
         }
         actions
     }
+}
+
+impl Autoscaler for GradientAutoscaler {
+    fn evaluate(&mut self, _now: TimeMs, ctx: &mut RouteCtx) -> Vec<ScaleAction> {
+        let mut actions = self.scale_primary(ctx);
+        if self.prefill_elastic {
+            actions.extend(prefill_pressure_actions(ctx, &mut self.prefill_streak, self.patience));
+        }
+        actions
+    }
 
     fn name(&self) -> String {
         "gradient".into()
@@ -284,9 +471,15 @@ pub struct ThresholdAutoscaler {
     low_streak: u32,
     last_eval_ms: Option<TimeMs>,
     last_busy_ms: u64,
+    /// Also react to TTFT pressure on the PD prefill tier.
+    prefill_elastic: bool,
+    prefill_streak: u32,
 }
 
 impl ThresholdAutoscaler {
+    /// Build with high/low busy-fraction water marks (`lo < hi`); the
+    /// prefill tier stays static unless [`Self::scale_prefill`] enables
+    /// it.
     pub fn new(hi: f64, lo: f64) -> ThresholdAutoscaler {
         assert!(lo < hi, "scale-in threshold must be below scale-out");
         ThresholdAutoscaler {
@@ -296,7 +489,15 @@ impl ThresholdAutoscaler {
             low_streak: 0,
             last_eval_ms: None,
             last_busy_ms: 0,
+            prefill_elastic: false,
+            prefill_streak: 0,
         }
+    }
+
+    /// Enable/disable elastic-prefill reactions ([`ttft_pressure`]).
+    pub fn scale_prefill(mut self, enabled: bool) -> Self {
+        self.prefill_elastic = enabled;
+        self
     }
 
     /// Busy fraction of the scalable fleet since the last evaluation.
@@ -341,10 +542,10 @@ impl ThresholdAutoscaler {
         self.last_busy_ms = busy;
         util
     }
-}
 
-impl Autoscaler for ThresholdAutoscaler {
-    fn evaluate(&mut self, now: TimeMs, ctx: &mut RouteCtx) -> Vec<ScaleAction> {
+    /// The PR 1 utilization reaction over the scalable role (decode /
+    /// coloc); unchanged by the elastic-prefill extension.
+    fn scale_primary(&mut self, now: TimeMs, ctx: &mut RouteCtx) -> Vec<ScaleAction> {
         let role = scaling_role(ctx.mode);
         let Some(util) = self.utilization(now, ctx, role) else {
             return Vec::new();
@@ -381,21 +582,355 @@ impl Autoscaler for ThresholdAutoscaler {
         self.low_streak = 0;
         Vec::new()
     }
+}
+
+impl Autoscaler for ThresholdAutoscaler {
+    fn evaluate(&mut self, now: TimeMs, ctx: &mut RouteCtx) -> Vec<ScaleAction> {
+        let mut actions = self.scale_primary(now, ctx);
+        if self.prefill_elastic {
+            actions.extend(prefill_pressure_actions(ctx, &mut self.prefill_streak, self.patience));
+        }
+        actions
+    }
 
     fn name(&self) -> String {
         "threshold".into()
     }
 }
 
+// ----------------------------------------------------------- predictive
+
+/// Smoothing factor for the arrival-rate EWMA (per `ScaleEval`).
+const RATE_EWMA_ALPHA: f64 = 0.35;
+/// Smoothing factor for the per-tier arrival-mix EWMA.
+const MIX_EWMA_ALPHA: f64 = 0.3;
+/// Rate-history window the linear trend is fitted over (samples).
+const TREND_WINDOW: usize = 8;
+/// Most instances provisioned (per role) in a single evaluation.
+const MAX_PROVISION_STEP: usize = 8;
+/// Most instances drained (primary role) in a single evaluation.
+const MAX_DRAIN_STEP: usize = 2;
+
+/// Profile-driven predictive fleet scaler: provisions for the arrival
+/// rate projected `provision_lead_ms` ahead instead of reacting to
+/// saturation.
+///
+/// Per [`Autoscaler::evaluate`]:
+/// 1. Ingest arrivals since the last epoch (a cursor over the
+///    arrival-ordered request list) into a windowed rate sample,
+///    per-tier mix EWMA, and running prompt/output-length means.
+/// 2. Smooth the rate (EWMA) and fit a linear trend over the last
+///    `TREND_WINDOW` epochs; project `rate(now + lead)` (clamped at
+///    0).
+/// 3. Convert the projected per-tier rates into a required fleet via
+///    [`sizing::required_decode_fleet`] (PD) /
+///    [`sizing::required_coloc_fleet`] (coloc) — the same math that
+///    sizes the static bench baselines — plus a reactive backstop for
+///    visible unplaced demand (model error never strands requests).
+/// 4. Provision up to the shortfall vs *committed* capacity
+///    (active + cold-starting) or, after a patience window, drain down
+///    toward the requirement, least-loaded first.
+/// 5. With `prefill_elastic`, size the PD prefill tier from projected
+///    prompt-token demand ([`sizing::required_prefill_fleet`]) and the
+///    [`ttft_pressure`] signal the reactive scalers also consume.
+///
+/// Every epoch records a [`RateSample`] (observed / smoothed /
+/// projected rps) that lands on `SimResult::fleet.rates` for the
+/// predicted-vs-actual series in benches and the CLI.
+pub struct PredictiveAutoscaler {
+    tiers: TierSet,
+    /// Anticipation horizon: size for the rate projected this far ahead.
+    lead_ms: u64,
+    patience: u32,
+    prefill_elastic: bool,
+    /// Arrival-ingestion cursor into the (arrival-ordered) request list.
+    cursor: usize,
+    last_eval_ms: Option<TimeMs>,
+    /// (epoch time, smoothed rps) history the trend is fitted over.
+    history: VecDeque<(TimeMs, f64)>,
+    ewma_rps: f64,
+    seeded: bool,
+    /// EWMA per-tier arrival mix (sums to ≈1 once seeded).
+    tier_mix: Vec<f64>,
+    /// Running workload-shape sums over all ingested arrivals.
+    n_seen: u64,
+    sum_prefill: f64,
+    sum_decode: f64,
+    drain_streak: u32,
+    prefill_streak: u32,
+    rates: Vec<RateSample>,
+}
+
+impl PredictiveAutoscaler {
+    /// Build for a tier set and anticipation horizon (typically the
+    /// provisioning cold-start delay, so capacity lands exactly when
+    /// the projected rate does).
+    pub fn new(tiers: TierSet, lead_ms: u64) -> PredictiveAutoscaler {
+        let n = tiers.len();
+        PredictiveAutoscaler {
+            tiers,
+            lead_ms,
+            patience: 3,
+            prefill_elastic: false,
+            cursor: 0,
+            last_eval_ms: None,
+            history: VecDeque::with_capacity(TREND_WINDOW + 1),
+            ewma_rps: 0.0,
+            seeded: false,
+            tier_mix: vec![0.0; n],
+            n_seen: 0,
+            sum_prefill: 0.0,
+            sum_decode: 0.0,
+            drain_streak: 0,
+            prefill_streak: 0,
+            rates: Vec::new(),
+        }
+    }
+
+    /// Enable/disable predictive sizing of the PD prefill tier.
+    pub fn scale_prefill(mut self, enabled: bool) -> Self {
+        self.prefill_elastic = enabled;
+        self
+    }
+
+    /// Least-squares slope (rps per ms) of the smoothed-rate history.
+    fn trend_slope(&self) -> f64 {
+        let n = self.history.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let t0 = self.history.front().expect("n >= 2").0 as f64;
+        let (mut st, mut sy, mut stt, mut sty) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        for &(t, y) in &self.history {
+            let x = t as f64 - t0;
+            st += x;
+            sy += y;
+            stt += x * x;
+            sty += x * y;
+        }
+        let nf = n as f64;
+        let denom = nf * stt - st * st;
+        if denom.abs() < 1e-9 {
+            return 0.0;
+        }
+        (nf * sty - st * sy) / denom
+    }
+
+    /// Ingest arrivals in `(prev, now]`; returns the count.
+    fn ingest_arrivals(&mut self, now: TimeMs, ctx: &RouteCtx) -> u64 {
+        let mut new_n = 0u64;
+        let mut tier_counts = vec![0u64; self.tier_mix.len()];
+        while self.cursor < ctx.requests.len()
+            && ctx.requests[self.cursor].req.arrival_ms <= now
+        {
+            let r = &ctx.requests[self.cursor];
+            new_n += 1;
+            if r.tier < tier_counts.len() {
+                tier_counts[r.tier] += 1;
+            }
+            self.n_seen += 1;
+            self.sum_prefill += r.req.prefill_len as f64;
+            self.sum_decode += r.req.decode_len as f64;
+            self.cursor += 1;
+        }
+        if new_n > 0 {
+            let mut sum = 0.0;
+            for (k, mix) in self.tier_mix.iter_mut().enumerate() {
+                let frac = tier_counts[k] as f64 / new_n as f64;
+                *mix = if self.seeded {
+                    (1.0 - MIX_EWMA_ALPHA) * *mix + MIX_EWMA_ALPHA * frac
+                } else {
+                    frac
+                };
+                sum += *mix;
+            }
+            if sum > 0.0 {
+                for mix in self.tier_mix.iter_mut() {
+                    *mix /= sum;
+                }
+            }
+        }
+        new_n
+    }
+}
+
+impl Autoscaler for PredictiveAutoscaler {
+    fn evaluate(&mut self, now: TimeMs, ctx: &mut RouteCtx) -> Vec<ScaleAction> {
+        let new_n = self.ingest_arrivals(now, ctx);
+        let Some(prev) = self.last_eval_ms.replace(now) else {
+            // First epoch only anchors the window.
+            return Vec::new();
+        };
+        if now <= prev {
+            return Vec::new();
+        }
+        let dt_s = (now - prev) as f64 / 1000.0;
+        let observed = new_n as f64 / dt_s;
+        self.ewma_rps = if self.seeded {
+            RATE_EWMA_ALPHA * observed + (1.0 - RATE_EWMA_ALPHA) * self.ewma_rps
+        } else {
+            observed
+        };
+        self.seeded = true;
+        self.history.push_back((now, self.ewma_rps));
+        while self.history.len() > TREND_WINDOW {
+            self.history.pop_front();
+        }
+        let projected = (self.ewma_rps + self.trend_slope() * self.lead_ms as f64).max(0.0);
+        self.rates.push(RateSample {
+            t_ms: now,
+            observed_rps: observed,
+            smoothed_rps: self.ewma_rps,
+            predicted_rps: projected,
+        });
+        if self.n_seen == 0 {
+            return Vec::new();
+        }
+
+        let avg_p = self.sum_prefill / self.n_seen as f64;
+        let avg_d = (self.sum_decode / self.n_seen as f64).max(1.0);
+        // Mean resident KV of a decode stream: full prompt + half the
+        // output (the same `p + d/2` idiom the analysis layer uses).
+        let kv_per_req = (avg_p + avg_d * 0.5) as u64;
+        let tier_rates: Vec<f64> = self.tier_mix.iter().map(|f| f * projected).collect();
+        let role = scaling_role(ctx.mode);
+        let mut required = match ctx.mode {
+            ServingMode::PdDisaggregated => sizing::required_decode_fleet(
+                ctx.profile,
+                &self.tiers,
+                &tier_rates,
+                avg_d,
+                kv_per_req,
+            ),
+            ServingMode::Colocated => sizing::required_coloc_fleet(
+                ctx.profile,
+                &self.tiers,
+                &tier_rates,
+                avg_p,
+                avg_d,
+                kv_per_req,
+            ),
+        };
+        // Reactive backstop: visible unplaced demand means the model
+        // under-sized (length misprediction, burst inside the window) —
+        // grow past the plan rather than strand requests. The O(total
+        // requests) residency scan only runs when the fleet shows
+        // stress (no scalable instance idle): with an empty server
+        // available, capacity is not what's holding demand back.
+        let fleet_saturated = ctx
+            .cluster
+            .with_role(role)
+            .all(|id| !ctx.cluster.instances[id].is_empty());
+        if fleet_saturated {
+            let backlog = unplaced_demand(ctx);
+            if backlog > 0 {
+                required =
+                    required.max(ctx.cluster.active_count(role) + backlog.div_ceil(8).min(4));
+            }
+        }
+
+        let mut actions = Vec::new();
+        let active = ctx.cluster.active_count(role);
+        let committed = ctx.cluster.committed_count(role);
+        if required > committed {
+            self.drain_streak = 0;
+            let want = (required - committed).min(MAX_PROVISION_STEP);
+            actions.extend((0..want).map(|_| ScaleAction::Provision { role }));
+        } else if required < active {
+            self.drain_streak += 1;
+            if self.drain_streak >= self.patience {
+                self.drain_streak = 0;
+                let mut ids: Vec<usize> = ctx.cluster.with_role(role).collect();
+                ids.sort_by_key(|&id| {
+                    let i = &ctx.cluster.instances[id];
+                    (i.decode_batch_now(), i.queued_prefill_tokens(ctx.requests))
+                });
+                for (n, &inst) in ids
+                    .iter()
+                    .take((active - required).min(MAX_DRAIN_STEP))
+                    .enumerate()
+                {
+                    // Only the first drain of a batch may migrate: the
+                    // feasibility gate is evaluated against the
+                    // *current* fleet, and a second simultaneous
+                    // eviction would count the first drainee as a
+                    // destination it no longer is. Later drains fall
+                    // back to wait-drain (safe by construction).
+                    let migrate = n == 0 && migration_feasible(ctx, inst);
+                    actions.push(ScaleAction::Drain { inst, migrate });
+                }
+            }
+        } else {
+            self.drain_streak = 0;
+        }
+
+        if self.prefill_elastic && ctx.mode == ServingMode::PdDisaggregated {
+            let planned = sizing::required_prefill_fleet(
+                ctx.profile,
+                projected,
+                avg_p,
+                PREFILL_SIZING_BUDGET,
+            );
+            let pressure = ttft_pressure(ctx, PREFILL_SIZING_BUDGET);
+            let active_pf = ctx.cluster.active_count(Role::Prefill);
+            let committed_pf = ctx.cluster.committed_count(Role::Prefill);
+            // The plan sets the baseline; live TTFT pressure can only
+            // raise it (a plan that lags a burst must not veto relief).
+            let needed = if pressure > PREFILL_PRESSURE_HI {
+                planned.max(active_pf + 1)
+            } else {
+                planned
+            };
+            if needed > committed_pf {
+                self.prefill_streak = 0;
+                actions.extend(
+                    (0..(needed - committed_pf).min(4))
+                        .map(|_| ScaleAction::Provision { role: Role::Prefill }),
+                );
+            } else if needed < active_pf && pressure < PREFILL_PRESSURE_LO {
+                self.prefill_streak += 1;
+                if self.prefill_streak >= self.patience {
+                    self.prefill_streak = 0;
+                    actions.extend(prefill_drain_action(ctx));
+                }
+            } else {
+                self.prefill_streak = 0;
+            }
+        }
+        actions
+    }
+
+    fn name(&self) -> String {
+        "predictive".into()
+    }
+
+    fn take_rate_series(&mut self) -> Vec<RateSample> {
+        std::mem::take(&mut self.rates)
+    }
+}
+
 /// Build the autoscaler requested by a [`SimConfig`] (`None` when the
-/// fleet is fixed).
+/// fleet is fixed). Elastic-prefill reactions are wired in only for PD
+/// mode — co-location has no prefill cluster to scale.
 pub fn make_autoscaler(cfg: &SimConfig) -> Option<Box<dyn Autoscaler>> {
     if !cfg.elastic.enabled() {
         return None;
     }
+    let pf = cfg.elastic.prefill_elastic && cfg.mode == ServingMode::PdDisaggregated;
     match cfg.elastic.scaler {
-        ScalerKind::Gradient => Some(Box::new(GradientAutoscaler::new(cfg.tiers.clone()))),
-        ScalerKind::Threshold => Some(Box::new(ThresholdAutoscaler::new(0.75, 0.35))),
+        ScalerKind::Gradient => {
+            Some(Box::new(GradientAutoscaler::new(cfg.tiers.clone()).scale_prefill(pf)))
+        }
+        ScalerKind::Threshold => Some(Box::new(ThresholdAutoscaler::new(0.75, 0.35).scale_prefill(pf))),
+        ScalerKind::Predictive => {
+            let lead = cfg
+                .elastic
+                .provision_lead_ms
+                .unwrap_or(cfg.elastic.provision_delay_ms);
+            Some(Box::new(
+                PredictiveAutoscaler::new(cfg.tiers.clone(), lead).scale_prefill(pf),
+            ))
+        }
         ScalerKind::Off => None,
     }
 }
@@ -406,11 +941,35 @@ mod tests {
     use crate::model::CostModel;
     use crate::profile::ProfileTable;
     use crate::sim::{Cluster, SimRequest};
+    use crate::slo::{DsloTracker, Slo};
+    use crate::workload::Request;
 
     fn ctx_parts() -> (Cluster, ProfileTable) {
         let cm = CostModel::h200_llama8b();
         let cluster = Cluster::build(ServingMode::Colocated, 6, 0.0, 4, &cm, true);
         (cluster, ProfileTable::from_cost_model(&cm))
+    }
+
+    /// A finished tier-`tier` request that arrived at `arrival_ms` —
+    /// visible to the rate estimator, invisible to unplaced-demand.
+    fn arrived_req(id: u64, arrival_ms: u64, tier: usize, tpot: u64) -> SimRequest {
+        let slo = Slo::new(1_000, tpot);
+        SimRequest {
+            req: Request {
+                id,
+                arrival_ms,
+                prefill_len: 512,
+                decode_len: 300,
+                slo,
+            },
+            tier,
+            tracker: DsloTracker::new(arrival_ms, slo),
+            prefill_done: 512,
+            decoded: 300,
+            first_token_ms: Some(arrival_ms + 1),
+            finish_ms: Some(arrival_ms + 2),
+            decode_instance: None,
+        }
     }
 
     #[test]
@@ -528,5 +1087,389 @@ mod tests {
             }
         }
         assert!(drained, "idle fleet never drained");
+    }
+
+    /// Property (1): at a constant arrival rate, the predictive scaler
+    /// settles the fleet at exactly the shared static-sizing answer —
+    /// provisioning up to it, then draining any surplus back down to it,
+    /// then holding.
+    #[test]
+    fn predictive_converges_to_static_sizing_on_constant_rate() {
+        let cm = CostModel::h200_llama8b();
+        let profile = ProfileTable::from_cost_model(&cm);
+        let tiers = TierSet::paper_default();
+        // 40 req/s, all in the loosest (100 ms) tier, finished on
+        // arrival so the rate estimator sees them but unplaced-demand
+        // does not.
+        let horizon_ms = 120_000u64;
+        let mut reqs: Vec<SimRequest> = (0..(horizon_ms / 25))
+            .map(|i| arrived_req(i, i * 25, 3, 100))
+            .collect();
+        let expected = sizing::required_decode_fleet(
+            &profile,
+            &tiers,
+            &[0.0, 0.0, 0.0, 40.0],
+            300.0,
+            512 + 150,
+        );
+        assert!(expected >= 1);
+
+        // Start from a 2-instance coloc fleet (sizing for coloc inflates
+        // by the prefill share; compute the coloc expectation too).
+        let expected_coloc = sizing::required_coloc_fleet(
+            &profile,
+            &tiers,
+            &[0.0, 0.0, 0.0, 40.0],
+            512.0,
+            300.0,
+            512 + 150,
+        );
+        let mut cluster = Cluster::build(ServingMode::Colocated, 2, 0.0, 4, &cm, true);
+        let mut sc = PredictiveAutoscaler::new(tiers.clone(), 0);
+        let mut now = 0u64;
+        for _ in 0..60 {
+            now += 1000;
+            let actions = {
+                let mut ctx = RouteCtx {
+                    now,
+                    cluster: &mut cluster,
+                    requests: &mut reqs,
+                    profile: &profile,
+                    mode: ServingMode::Colocated,
+                    kv_transfer_ms: 2,
+                };
+                sc.evaluate(now, &mut ctx)
+            };
+            // Apply: instant provisioning/retire keeps the test focused
+            // on the *decision* sequence, not the sim mechanics.
+            for a in actions {
+                match a {
+                    ScaleAction::Provision { role } => {
+                        let id = cluster.provision(role, now, now);
+                        cluster.mark_ready(id);
+                    }
+                    ScaleAction::Drain { inst, .. } => {
+                        cluster.begin_drain(inst, now);
+                        cluster.retire_if_drained(inst, now);
+                    }
+                }
+            }
+        }
+        assert_eq!(
+            cluster.active_count(Role::Coloc),
+            expected_coloc,
+            "constant 40 rps must converge to the static-sizing fleet"
+        );
+        // And from above: an over-provisioned fleet drains back to it.
+        for _ in 0..5 {
+            let id = cluster.provision(Role::Coloc, now, now);
+            cluster.mark_ready(id);
+        }
+        for _ in 0..30 {
+            now += 1000;
+            let actions = {
+                let mut ctx = RouteCtx {
+                    now,
+                    cluster: &mut cluster,
+                    requests: &mut reqs,
+                    profile: &profile,
+                    mode: ServingMode::Colocated,
+                    kv_transfer_ms: 2,
+                };
+                sc.evaluate(now, &mut ctx)
+            };
+            for a in actions {
+                match a {
+                    ScaleAction::Provision { role } => {
+                        let id = cluster.provision(role, now, now);
+                        cluster.mark_ready(id);
+                    }
+                    ScaleAction::Drain { inst, .. } => {
+                        cluster.begin_drain(inst, now);
+                        cluster.retire_if_drained(inst, now);
+                    }
+                }
+            }
+        }
+        assert_eq!(
+            cluster.active_count(Role::Coloc),
+            expected_coloc,
+            "surplus fleet must drain back to the static-sizing answer"
+        );
+        let series = sc.take_rate_series();
+        assert!(!series.is_empty());
+        let last = series.last().unwrap();
+        assert!(
+            (last.smoothed_rps - 40.0).abs() < 4.0,
+            "EWMA must settle near the true rate, got {}",
+            last.smoothed_rps
+        );
+        // Zero trend at constant rate: projection ≈ smoothed estimate.
+        assert!((last.predicted_rps - last.smoothed_rps).abs() < 2.0);
+    }
+
+    /// Property (2): with `provision_lead_ms = 0` and a flat trend, the
+    /// predictive policy moves in the same *direction* as the reactive
+    /// threshold baseline — overload provisions, idle drains.
+    #[test]
+    fn predictive_zero_lead_matches_threshold_direction() {
+        let cm = CostModel::h200_llama8b();
+        let profile = ProfileTable::from_cost_model(&cm);
+        let tiers = TierSet::paper_default();
+        let direction = |actions: &[ScaleAction]| -> i32 {
+            if actions.iter().any(|a| matches!(a, ScaleAction::Provision { .. })) {
+                1
+            } else if actions.iter().any(|a| matches!(a, ScaleAction::Drain { .. })) {
+                -1
+            } else {
+                0
+            }
+        };
+
+        // Overloaded phase: a heavy constant rate against 2 servers,
+        // fully-busy windows. Both must provision.
+        let mut reqs: Vec<SimRequest> = (0..4_000u64)
+            .map(|i| arrived_req(i, i * 10, 3, 100)) // 100 rps
+            .collect();
+        let mut cl_p = Cluster::build(ServingMode::Colocated, 2, 0.0, 4, &cm, true);
+        let mut cl_t = cl_p.clone();
+        let mut pred = PredictiveAutoscaler::new(tiers.clone(), 0);
+        let mut thr = ThresholdAutoscaler::new(0.75, 0.35);
+        let mut dir_p = 0;
+        let mut dir_t = 0;
+        for step in 1..=6u64 {
+            let now = step * 1000;
+            for i in cl_t.instances.iter_mut() {
+                i.busy_ms_total += 1000; // fully busy window
+            }
+            let ap = {
+                let mut ctx = RouteCtx {
+                    now,
+                    cluster: &mut cl_p,
+                    requests: &mut reqs,
+                    profile: &profile,
+                    mode: ServingMode::Colocated,
+                    kv_transfer_ms: 2,
+                };
+                pred.evaluate(now, &mut ctx)
+            };
+            let at = {
+                let mut ctx = RouteCtx {
+                    now,
+                    cluster: &mut cl_t,
+                    requests: &mut reqs,
+                    profile: &profile,
+                    mode: ServingMode::Colocated,
+                    kv_transfer_ms: 2,
+                };
+                thr.evaluate(now, &mut ctx)
+            };
+            if direction(&ap) != 0 {
+                dir_p = direction(&ap);
+            }
+            if direction(&at) != 0 {
+                dir_t = direction(&at);
+            }
+        }
+        assert_eq!(dir_p, 1, "predictive must provision under overload");
+        assert_eq!(dir_t, 1, "threshold must provision under overload");
+
+        // Idle phase: no arrivals, idle windows, a 6-instance fleet.
+        // Both must eventually drain.
+        let mut reqs2: Vec<SimRequest> = vec![arrived_req(0, 0, 3, 100)];
+        let mut cl_p = Cluster::build(ServingMode::Colocated, 6, 0.0, 4, &cm, true);
+        let mut cl_t = cl_p.clone();
+        let mut pred = PredictiveAutoscaler::new(tiers.clone(), 0);
+        let mut thr = ThresholdAutoscaler::new(0.75, 0.35);
+        let (mut dir_p, mut dir_t) = (0, 0);
+        for step in 1..=8u64 {
+            let now = step * 1000;
+            let ap = {
+                let mut ctx = RouteCtx {
+                    now,
+                    cluster: &mut cl_p,
+                    requests: &mut reqs2,
+                    profile: &profile,
+                    mode: ServingMode::Colocated,
+                    kv_transfer_ms: 2,
+                };
+                pred.evaluate(now, &mut ctx)
+            };
+            let at = {
+                let mut ctx = RouteCtx {
+                    now,
+                    cluster: &mut cl_t,
+                    requests: &mut reqs2,
+                    profile: &profile,
+                    mode: ServingMode::Colocated,
+                    kv_transfer_ms: 2,
+                };
+                thr.evaluate(now, &mut ctx)
+            };
+            if direction(&ap) != 0 {
+                dir_p = direction(&ap);
+            }
+            if direction(&at) != 0 {
+                dir_t = direction(&at);
+            }
+        }
+        assert_eq!(dir_p, -1, "predictive must drain an idle fleet");
+        assert_eq!(dir_t, -1, "threshold must drain an idle fleet");
+    }
+
+    #[test]
+    fn ttft_pressure_rises_with_queue_and_falls_with_fleet() {
+        let cm = CostModel::h200_llama8b();
+        let profile = ProfileTable::from_cost_model(&cm);
+        let mut cluster = Cluster::build(ServingMode::PdDisaggregated, 6, 0.5, 4, &cm, true);
+        // Unprefilled requests with tight TTFT headroom.
+        let mut reqs: Vec<SimRequest> = (0..8u64)
+            .map(|i| {
+                let mut r = arrived_req(i, 0, 3, 100);
+                r.req.prefill_len = 8_000;
+                r.prefill_done = 0;
+                r.decoded = 0;
+                r.finish_ms = None;
+                r.first_token_ms = None;
+                r
+            })
+            .collect();
+        let empty = {
+            let ctx = RouteCtx {
+                now: 0,
+                cluster: &mut cluster,
+                requests: &mut reqs,
+                profile: &profile,
+                mode: ServingMode::PdDisaggregated,
+                kv_transfer_ms: 2,
+            };
+            ttft_pressure(&ctx, PREFILL_SIZING_BUDGET)
+        };
+        assert_eq!(empty, 0.0, "no queued work ⇒ no pressure");
+        // Queue everything on prefill server 0 with 500 ms of headroom.
+        for i in 0..8usize {
+            cluster.instances[0].push_prefill(crate::sim::PrefillJob {
+                req_idx: i,
+                deadline: 500,
+            });
+        }
+        let loaded = {
+            let ctx = RouteCtx {
+                now: 0,
+                cluster: &mut cluster,
+                requests: &mut reqs,
+                profile: &profile,
+                mode: ServingMode::PdDisaggregated,
+                kv_transfer_ms: 2,
+            };
+            ttft_pressure(&ctx, PREFILL_SIZING_BUDGET)
+        };
+        assert!(loaded > PREFILL_PRESSURE_HI, "64k queued tokens vs 500 ms: {loaded}");
+        // Doubling the active prefill fleet halves the pressure.
+        let id = cluster.provision(Role::Prefill, 0, 0);
+        cluster.mark_ready(id);
+        let relieved = {
+            let ctx = RouteCtx {
+                now: 0,
+                cluster: &mut cluster,
+                requests: &mut reqs,
+                profile: &profile,
+                mode: ServingMode::PdDisaggregated,
+                kv_transfer_ms: 2,
+            };
+            ttft_pressure(&ctx, PREFILL_SIZING_BUDGET)
+        };
+        assert!(relieved < loaded, "more servers must relieve pressure");
+    }
+
+    #[test]
+    fn prefill_pressure_provisions_and_drains_for_every_policy() {
+        let cm = CostModel::h200_llama8b();
+        let profile = ProfileTable::from_cost_model(&cm);
+        // 3 prefill + 3 decode servers, heavy queue on server 0.
+        let mut cluster = Cluster::build(ServingMode::PdDisaggregated, 6, 0.5, 4, &cm, true);
+        let mut reqs: Vec<SimRequest> = (0..12u64)
+            .map(|i| {
+                let mut r = arrived_req(i, 0, 3, 100);
+                r.req.prefill_len = 8_000;
+                r.prefill_done = 0;
+                r.decoded = 0;
+                r.finish_ms = None;
+                r.first_token_ms = None;
+                r
+            })
+            .collect();
+        for i in 0..12usize {
+            cluster.instances[0].push_prefill(crate::sim::PrefillJob {
+                req_idx: i,
+                deadline: 400,
+            });
+        }
+        let mut grad =
+            GradientAutoscaler::new(TierSet::paper_default()).scale_prefill(true);
+        let actions = {
+            let mut ctx = RouteCtx {
+                now: 0,
+                cluster: &mut cluster,
+                requests: &mut reqs,
+                profile: &profile,
+                mode: ServingMode::PdDisaggregated,
+                kv_transfer_ms: 2,
+            };
+            grad.evaluate(0, &mut ctx)
+        };
+        assert!(
+            actions
+                .iter()
+                .any(|a| matches!(a, ScaleAction::Provision { role: Role::Prefill })),
+            "pressure must provision prefill, got {actions:?}"
+        );
+        // Without the flag the same state proposes no prefill action
+        // (bit-for-bit PR 2 gradient).
+        let mut grad_off = GradientAutoscaler::new(TierSet::paper_default());
+        let actions_off = {
+            let mut ctx = RouteCtx {
+                now: 0,
+                cluster: &mut cluster,
+                requests: &mut reqs,
+                profile: &profile,
+                mode: ServingMode::PdDisaggregated,
+                kv_transfer_ms: 2,
+            };
+            grad_off.evaluate(0, &mut ctx)
+        };
+        assert!(
+            !actions_off
+                .iter()
+                .any(|a| matches!(a, ScaleAction::Provision { role: Role::Prefill })
+                    || matches!(a, ScaleAction::Drain { inst, .. } if cluster.instances[*inst].role == Role::Prefill)),
+            "prefill_elastic off must never touch the prefill tier"
+        );
+        // Idle queues → drain a prefill server after patience.
+        for i in cluster.instances.iter_mut() {
+            i.prefill_queue.clear();
+        }
+        let mut drained = false;
+        for t in 1..=5u64 {
+            let actions = {
+                let mut ctx = RouteCtx {
+                    now: t * 1000,
+                    cluster: &mut cluster,
+                    requests: &mut reqs,
+                    profile: &profile,
+                    mode: ServingMode::PdDisaggregated,
+                    kv_transfer_ms: 2,
+                };
+                grad.evaluate(t * 1000, &mut ctx)
+            };
+            if actions.iter().any(
+                |a| matches!(a, ScaleAction::Drain { inst, .. } if cluster.instances[*inst].role == Role::Prefill),
+            ) {
+                drained = true;
+                break;
+            }
+        }
+        // An empty queue reads pressure 0.0 — below the LO mark.
+        assert!(drained, "idle prefill tier never drained");
     }
 }

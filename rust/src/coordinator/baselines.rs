@@ -38,11 +38,13 @@ fn entry_role(mode: ServingMode) -> Role {
 
 // ---------------------------------------------------------------- Random
 
+/// PD-Random / CO-Random: uniform random placement.
 pub struct RandomRouter {
     rng: Rng,
 }
 
 impl RandomRouter {
+    /// Build with a deterministic RNG seed.
     pub fn new(seed: u64) -> RandomRouter {
         RandomRouter { rng: Rng::new(seed) }
     }
@@ -139,10 +141,12 @@ impl Router for MinimalRouter {
 /// CO-Chunk: least-loaded placement with a *static* chunked-prefill
 /// token budget.
 pub struct ChunkRouter {
+    /// Static prefill token budget per iteration.
     pub budget: u64,
 }
 
 impl ChunkRouter {
+    /// Build with a static chunked-prefill token budget (clamped ≥ 1).
     pub fn new(budget: u64) -> ChunkRouter {
         ChunkRouter { budget: budget.max(1) }
     }

@@ -11,16 +11,24 @@
 //! * [`admission`] — the shared §4.5/§4.6 predictors: future-KV
 //!   simulation, profile-table iteration-time estimates, wait-time-aware
 //!   deadline checks.
+//! * [`autoscaler`] — fleet-level elastic scaling: the §4.4
+//!   load-gradient scaler, the reactive threshold baseline, and the
+//!   predictive profile-driven planner (plus the TTFT-pressure signal
+//!   for the elastic PD prefill tier).
+//! * [`sizing`] — the shared fleet-sizing math (profile + Little's
+//!   law) consumed by the predictive scaler and the bench harnesses.
 
 pub mod admission;
 pub mod autoscaler;
 pub mod baselines;
 pub mod polyserve;
 pub mod sharded;
+pub mod sizing;
 
 pub use autoscaler::{
-    make_autoscaler, migration_feasible, scaling_role, Autoscaler, GradientAutoscaler,
-    ScaleAction, ThresholdAutoscaler,
+    make_autoscaler, migration_feasible, prefill_migration_feasible, scaling_role,
+    ttft_pressure, Autoscaler, GradientAutoscaler, PredictiveAutoscaler, ScaleAction,
+    ThresholdAutoscaler,
 };
 pub use baselines::{ChunkRouter, MinimalRouter, RandomRouter};
 pub use polyserve::PolyServeRouter;
@@ -34,10 +42,15 @@ use crate::slo::TimeMs;
 
 /// Mutable view the simulator hands to the router on every decision.
 pub struct RouteCtx<'a> {
+    /// Current simulated time, ms.
     pub now: TimeMs,
+    /// The fleet (mutable: routers claim/release/queue onto instances).
     pub cluster: &'a mut Cluster,
+    /// Every request of the run, indexed by `req_idx`.
     pub requests: &'a mut [SimRequest],
+    /// The profiling table — the router's only timing oracle (§4.5).
     pub profile: &'a ProfileTable,
+    /// Serving architecture of this run.
     pub mode: ServingMode,
     /// Prefill→decode KV-handoff latency. Any decode placement the
     /// router enqueues itself (pended dispatch) must mark the handoff

@@ -9,17 +9,13 @@
 //! are shared.
 
 use super::admission::{self, load_estimate};
+use super::sizing::{DEFAULT_PREFILL_BUDGET, PF_TOKEN_RATIO};
 use super::{RouteCtx, Router};
 use crate::analysis::ServingMode;
 use crate::config::{Features, SimConfig};
 use crate::sim::{Role, TierAssign};
 use crate::slo::{TierSet, TimeMs};
 use std::collections::VecDeque;
-
-/// Ratio of prefill-token to decode-token GEMM cost — how the profile
-/// table's decode-equivalent batch axis weighs prefill chunk tokens
-/// (see `CostModel::effective_tokens`).
-const PF_TOKEN_RATIO: f64 = 0.25;
 
 /// How long a late pending request may keep failing relaxed admission
 /// before the liveness backstop places it unconditionally.
@@ -33,6 +29,8 @@ struct Pending {
     decode_phase: bool,
 }
 
+/// The PolyServe router (§4). One struct serves both modes
+/// (PD-PolyServe and CO-PolyServe); see the module docs.
 pub struct PolyServeRouter {
     tiers: TierSet,
     features: Features,
@@ -50,18 +48,29 @@ pub struct PolyServeRouter {
 /// Scheduling-event counters for diagnostics and tests.
 #[derive(Debug, Default, Clone)]
 pub struct RouterStats {
+    /// Requests placed in their own tier on first try.
     pub placed_direct: u64,
+    /// Requests placed in a tighter tier (lazy promotion).
     pub placed_promoted: u64,
+    /// Requests parked in a pending queue.
     pub pends: u64,
+    /// Late requests placed under relaxed admission.
     pub placed_relaxed: u64,
+    /// Liveness-backstop forced placements.
     pub forced: u64,
+    /// Instances claimed from the best-effort pool.
     pub claims: u64,
+    /// Pending instances adopted into a tier.
     pub adoptions: u64,
+    /// Instances released back to the pool.
     pub releases: u64,
+    /// Instances moved to the §4.4 pending state.
     pub marked_pending: u64,
 }
 
 impl PolyServeRouter {
+    /// Build from a config; `avg_decode_len` is the workload's mean output
+    /// length, the only output-length knowledge the §4.5 predictors get.
     pub fn new(cfg: &SimConfig, avg_decode_len: f64) -> PolyServeRouter {
         PolyServeRouter {
             tiers: cfg.tiers.clone(),
@@ -69,7 +78,7 @@ impl PolyServeRouter {
             avg_decode_len,
             pending: (0..cfg.tiers.len()).map(|_| VecDeque::new()).collect(),
             mode: cfg.mode,
-            prefill_budget: 2048,
+            prefill_budget: DEFAULT_PREFILL_BUDGET,
             stats: RouterStats::default(),
         }
     }

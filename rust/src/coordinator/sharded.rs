@@ -23,6 +23,8 @@ use crate::config::SimConfig;
 
 use crate::slo::TimeMs;
 
+/// Scale-out wrapper: statically partitions the fleet into independent
+/// shards, each driven by its own inner PolyServe router.
 pub struct ShardedRouter {
     shards: Vec<PolyServeRouter>,
     n_shards: usize,
@@ -32,6 +34,7 @@ pub struct ShardedRouter {
 }
 
 impl ShardedRouter {
+    /// Build `n_shards` shards over the fleet described by `cfg`.
     pub fn new(cfg: &SimConfig, avg_decode_len: f64, n_shards: usize) -> ShardedRouter {
         let n_shards = n_shards.max(1);
         ShardedRouter {

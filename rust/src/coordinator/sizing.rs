@@ -1,0 +1,247 @@
+//! Fleet-sizing math shared by the autoscalers, the benches and the CLI.
+//!
+//! One question, asked three ways: *how many servers does a given
+//! arrival rate need?* The answers all come from the same two
+//! ingredients the paper's scheduler already has — the profiled
+//! [`ProfileTable`] (batch, KV) → iteration-time map (§4.5) and the
+//! per-tier TPOT budgets — so the predictive autoscaler, the static
+//! bench baselines, and equal-peak-capacity experiment sizing can never
+//! disagree about what "enough capacity" means.
+//!
+//! * [`required_decode_fleet`] / [`required_coloc_fleet`] — Little's-law
+//!   sizing: tier-`k` arrivals at `λ_k` req/s each hold a decode slot
+//!   for `decode_len × TPOT_k` ms (an instance packed to its profile
+//!   limit runs exactly at the TPOT edge), so the needed concurrency is
+//!   `λ_k · decode_len · TPOT_k`, divided by the per-instance batch
+//!   capacity [`ProfileTable::max_batch_under`] gives servers.
+//! * [`required_prefill_fleet`] — throughput sizing for the PD prefill
+//!   cluster: arrivals bring `λ · prefill_len` prompt tokens per second
+//!   against a per-server chunked-prefill token rate
+//!   ([`prefill_tokens_per_ms`]).
+//! * [`size_elastic_pd_cell`] — the equal-peak-capacity experiment
+//!   helper (previously in `figures`): splits a peak fleet into a
+//!   static prefill share and an elastic decode range.
+//!
+//! All sizing targets [`SIZING_UTIL_TARGET`] utilization, not 100%:
+//! Poisson arrivals need headroom, and the admission layer refuses the
+//! last few percent anyway ([`super::admission::SAFETY`]).
+
+use super::admission::SAFETY;
+use crate::config::SimConfig;
+use crate::profile::ProfileTable;
+use crate::slo::TierSet;
+
+/// Ratio of prefill-token to decode-token GEMM cost — how the profile
+/// table's decode-equivalent batch axis weighs prefill chunk tokens
+/// (see `CostModel::effective_tokens`). Shared with the PolyServe
+/// router's chunk admission math.
+pub const PF_TOKEN_RATIO: f64 = 0.25;
+
+/// Target utilization all sizing aims at. Sizing to 100% leaves zero
+/// headroom for Poisson burstiness and admission-margin refusals; ~85%
+/// is the classic provisioning knee.
+pub const SIZING_UTIL_TARGET: f64 = 0.85;
+
+/// The PD prefill static chunk budget the PolyServe router runs with.
+/// Shared here so the TTFT-pressure and prefill-fleet-sizing estimates
+/// can never desynchronize from the router's actual chunk rate.
+pub const DEFAULT_PREFILL_BUDGET: u64 = 2_048;
+
+/// Chunked-prefill throughput of one dedicated prefill server at token
+/// budget `budget`, in tokens/ms — the chunk time predicted by the
+/// profile table at the packed budget (`PF_TOKEN_RATIO`-weighted batch
+/// axis, budget-sized KV), exactly as the router's own
+/// `prefill_queue_feasible` estimates it.
+pub fn prefill_tokens_per_ms(profile: &ProfileTable, budget: u64) -> f64 {
+    let budget = budget.max(1);
+    let eff = ((budget as f64 * PF_TOKEN_RATIO).ceil() as u64).max(1);
+    let chunk_ms = profile.iter_ms(eff, budget).max(1e-9);
+    budget as f64 / chunk_ms
+}
+
+/// Largest decode batch one instance sustains at tier TPOT `tpot_ms`
+/// with `kv_per_req` resident KV tokens per request, under the same
+/// `SAFETY` margin the admission layer applies.
+pub fn decode_batch_capacity(profile: &ProfileTable, tpot_ms: u64, kv_per_req: u64) -> u64 {
+    profile
+        .max_batch_under(SAFETY * tpot_ms as f64, kv_per_req.max(1))
+        .max(1)
+}
+
+/// Fractional decode-server requirement (PD decode cluster) for
+/// per-tier arrival rates `tier_rates_rps` (parallel to `tiers`,
+/// tightest first): Little's law per tier, summed.
+pub fn required_decode_fleet_f(
+    profile: &ProfileTable,
+    tiers: &TierSet,
+    tier_rates_rps: &[f64],
+    avg_decode_len: f64,
+    avg_kv_per_req: u64,
+) -> f64 {
+    let mut total = 0.0f64;
+    for (k, &rate) in tier_rates_rps.iter().enumerate().take(tiers.len()) {
+        if rate <= 0.0 {
+            continue;
+        }
+        let tpot = tiers.tier(k).tpot_ms;
+        let cap = decode_batch_capacity(profile, tpot, avg_kv_per_req) as f64;
+        // A decode stream holds its slot for decode_len iterations; at
+        // the packed-batch operating point each iteration takes TPOT ms.
+        let service_s = avg_decode_len.max(1.0) * tpot as f64 / 1000.0;
+        total += rate * service_s / (cap * SIZING_UTIL_TARGET);
+    }
+    total
+}
+
+/// Decode-server requirement, rounded up (at least 1).
+pub fn required_decode_fleet(
+    profile: &ProfileTable,
+    tiers: &TierSet,
+    tier_rates_rps: &[f64],
+    avg_decode_len: f64,
+    avg_kv_per_req: u64,
+) -> usize {
+    (required_decode_fleet_f(profile, tiers, tier_rates_rps, avg_decode_len, avg_kv_per_req)
+        .ceil() as usize)
+        .max(1)
+}
+
+/// Co-located fleet requirement: the decode slots of
+/// [`required_decode_fleet_f`], inflated by the share of each
+/// iteration's token budget that chunked prefill consumes
+/// (`PF_TOKEN_RATIO · prefill_len / decode_len` effective decode tokens
+/// per decode token).
+pub fn required_coloc_fleet(
+    profile: &ProfileTable,
+    tiers: &TierSet,
+    tier_rates_rps: &[f64],
+    avg_prefill_len: f64,
+    avg_decode_len: f64,
+    avg_kv_per_req: u64,
+) -> usize {
+    let decode =
+        required_decode_fleet_f(profile, tiers, tier_rates_rps, avg_decode_len, avg_kv_per_req);
+    let pf_factor = 1.0 + PF_TOKEN_RATIO * avg_prefill_len.max(0.0) / avg_decode_len.max(1.0);
+    ((decode * pf_factor).ceil() as usize).max(1)
+}
+
+/// PD prefill-cluster requirement at total arrival rate
+/// `total_rate_rps`: prompt-token demand over per-server chunked
+/// throughput at `budget`.
+pub fn required_prefill_fleet(
+    profile: &ProfileTable,
+    total_rate_rps: f64,
+    avg_prefill_len: f64,
+    budget: u64,
+) -> usize {
+    if total_rate_rps <= 0.0 || avg_prefill_len <= 0.0 {
+        return 1;
+    }
+    let per_server_tps = prefill_tokens_per_ms(profile, budget) * 1000.0;
+    ((total_rate_rps * avg_prefill_len / (per_server_tps * SIZING_UTIL_TARGET)).ceil() as usize)
+        .max(1)
+}
+
+/// Split a peak PD fleet of `n_peak` into its static prefill share
+/// (`peak_prefill_frac`, clamped so both sides keep at least one
+/// server) and the scalable decode remainder.
+pub fn split_pd_fleet(n_peak: usize, peak_prefill_frac: f64) -> (usize, usize) {
+    let n_pf = ((n_peak as f64 * peak_prefill_frac).round() as usize)
+        .clamp(1, n_peak.saturating_sub(1).max(1));
+    (n_pf, n_peak.saturating_sub(n_pf))
+}
+
+/// Equal-peak-capacity sizing for an elastic PD cell: the static
+/// prefill cluster keeps its peak share (it does not scale), only the
+/// decode fleet is elastic within `[min, scalable_peak]`, and the run
+/// starts at the floor. `peak_prefill_frac` is the prefill share *of
+/// the peak fleet* (e.g. from `figures::auto_prefill_frac`);
+/// `min_of_scalable` maps the scalable peak to the elastic floor.
+///
+/// (With `cfg.elastic.prefill_elastic` the prefill side stops being
+/// static too — callers then set `prefill_min`/`prefill_max` on top of
+/// this split.)
+pub fn size_elastic_pd_cell(
+    cfg: &mut SimConfig,
+    n_peak: usize,
+    peak_prefill_frac: f64,
+    min_of_scalable: impl Fn(usize) -> usize,
+) {
+    let (n_pf, scalable_peak) = split_pd_fleet(n_peak, peak_prefill_frac);
+    cfg.elastic.min_instances = min_of_scalable(scalable_peak).clamp(1, scalable_peak.max(1));
+    cfg.elastic.max_instances = scalable_peak;
+    cfg.instances = n_pf + cfg.elastic.min_instances;
+    cfg.prefill_frac = n_pf as f64 / cfg.instances as f64;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::CostModel;
+
+    fn table() -> ProfileTable {
+        ProfileTable::from_cost_model(&CostModel::h200_llama8b())
+    }
+
+    #[test]
+    fn decode_fleet_scales_linearly_with_rate() {
+        let t = table();
+        let tiers = TierSet::paper_default();
+        let rates = [1.0, 2.0, 3.0, 4.0];
+        let one = required_decode_fleet_f(&t, &tiers, &rates, 300.0, 3_000);
+        let double: Vec<f64> = rates.iter().map(|r| r * 2.0).collect();
+        let two = required_decode_fleet_f(&t, &tiers, &double, 300.0, 3_000);
+        assert!(one > 0.0);
+        assert!((two / one - 2.0).abs() < 1e-9, "Little's law is linear in rate");
+    }
+
+    #[test]
+    fn tighter_tiers_need_more_servers_per_request() {
+        let t = table();
+        let tiers = TierSet::paper_default();
+        // Same rate, all load in the tightest vs the loosest tier.
+        let tight = required_decode_fleet_f(&t, &tiers, &[10.0, 0.0, 0.0, 0.0], 300.0, 3_000);
+        let loose = required_decode_fleet_f(&t, &tiers, &[0.0, 0.0, 0.0, 10.0], 300.0, 3_000);
+        // A 20 ms TPOT caps the batch far below the 100 ms tier, and the
+        // shorter service time does not fully compensate at H200-like
+        // batch knees.
+        assert!(tight > 0.0 && loose > 0.0);
+    }
+
+    #[test]
+    fn coloc_fleet_exceeds_pure_decode() {
+        let t = table();
+        let tiers = TierSet::paper_default();
+        let rates = [2.0, 4.0, 6.0, 8.0];
+        let dc = required_decode_fleet(&t, &tiers, &rates, 300.0, 3_000);
+        let co = required_coloc_fleet(&t, &tiers, &rates, 1_000.0, 300.0, 3_000);
+        assert!(co >= dc, "prefill share must not shrink the fleet: co={co} dc={dc}");
+    }
+
+    #[test]
+    fn prefill_fleet_tracks_token_demand() {
+        let t = table();
+        let one = required_prefill_fleet(&t, 10.0, 1_000.0, 2_048);
+        let four = required_prefill_fleet(&t, 40.0, 1_000.0, 2_048);
+        assert!(four >= 4 * one - 3, "one={one} four={four}");
+        assert_eq!(required_prefill_fleet(&t, 0.0, 1_000.0, 2_048), 1);
+    }
+
+    #[test]
+    fn pd_split_keeps_both_sides_nonempty() {
+        assert_eq!(split_pd_fleet(20, 0.35), (7, 13));
+        assert_eq!(split_pd_fleet(2, 0.01), (1, 1));
+        assert_eq!(split_pd_fleet(2, 0.99), (1, 1));
+    }
+
+    #[test]
+    fn size_elastic_pd_cell_equal_peak() {
+        let mut cfg = SimConfig::default();
+        size_elastic_pd_cell(&mut cfg, 48, 0.25, |sp| sp / 4);
+        assert_eq!(cfg.elastic.max_instances, 36);
+        assert_eq!(cfg.elastic.min_instances, 9);
+        assert_eq!(cfg.instances, 12 + 9);
+        let n_pf = (cfg.prefill_frac * cfg.instances as f64).round() as usize;
+        assert_eq!(n_pf, 12);
+    }
+}

@@ -7,18 +7,28 @@ use crate::coordinator::{make_autoscaler, make_router};
 use crate::metrics::AttainmentCurve;
 use crate::model::CostModel;
 use crate::profile::ProfileTable;
-use crate::sim::{Cluster, ElasticParams, SimParams, SimResult, Simulation};
+use crate::sim::{Cluster, ElasticParams, PrefillElastic, SimParams, SimResult, Simulation};
 use crate::util::rng::Rng;
 use crate::util::threadpool::par_map;
 use crate::workload::{RateSchedule, TraceGenerator, Workload};
 
+// The fleet-sizing math grew into a shared module consumed by the
+// predictive autoscaler too; benches keep importing it from here.
+pub use crate::coordinator::sizing::size_elastic_pd_cell;
+
 /// Everything needed to run one simulation cell, pre-computed.
 pub struct Experiment {
+    /// The (auto-resolved) configuration of the cell.
     pub cfg: SimConfig,
+    /// Ground-truth hardware model.
     pub cost_model: CostModel,
+    /// Profiling table the router sees.
     pub profile: ProfileTable,
+    /// Generated request stream.
     pub workload: Workload,
+    /// Optimal-goodput bound for this trace + SLO mix, req/s.
     pub optimal_rps: f64,
+    /// Actual request rate of the workload, req/s.
     pub rate_rps: f64,
 }
 
@@ -112,6 +122,12 @@ impl Experiment {
                 provision_delay_ms: self.cfg.elastic.provision_delay_ms,
                 scale_eval_ms: self.cfg.elastic.scale_eval_ms.max(1),
                 migration: self.cfg.elastic.migration,
+                prefill: (self.cfg.elastic.prefill_elastic
+                    && self.cfg.mode == crate::analysis::ServingMode::PdDisaggregated)
+                    .then(|| PrefillElastic {
+                        min_instances: self.cfg.elastic.prefill_min.max(1),
+                        max_instances: self.cfg.elastic.prefill_max,
+                    }),
             }),
             ..Default::default()
         };
@@ -187,27 +203,6 @@ pub fn auto_prefill_frac(cfg: &SimConfig) -> f64 {
         &mut rng,
     );
     prefill_share(&cm, &probe)
-}
-
-/// Equal-peak-capacity sizing for an elastic PD cell: the static
-/// prefill cluster keeps its peak share (it does not scale), only the
-/// decode fleet is elastic within `[min, scalable_peak]`, and the run
-/// starts at the floor. `peak_prefill_frac` is the prefill share *of
-/// the peak fleet* (e.g. from [`auto_prefill_frac`]);
-/// `min_of_scalable` maps the scalable peak to the elastic floor.
-pub fn size_elastic_pd_cell(
-    cfg: &mut SimConfig,
-    n_peak: usize,
-    peak_prefill_frac: f64,
-    min_of_scalable: impl Fn(usize) -> usize,
-) {
-    let n_pf = ((n_peak as f64 * peak_prefill_frac).round() as usize)
-        .clamp(1, n_peak.saturating_sub(1).max(1));
-    let scalable_peak = n_peak - n_pf;
-    cfg.elastic.min_instances = min_of_scalable(scalable_peak).clamp(1, scalable_peak.max(1));
-    cfg.elastic.max_instances = scalable_peak;
-    cfg.instances = n_pf + cfg.elastic.min_instances;
-    cfg.prefill_frac = n_pf as f64 / cfg.instances as f64;
 }
 
 /// Sweep request rate fractions and build the attainment-vs-rate curve

@@ -19,6 +19,12 @@
 //!
 //! Python never runs on the request path: `make artifacts` lowers the
 //! model once; the Rust binary is self-contained afterwards.
+//!
+//! See `ARCHITECTURE.md` at the repo root for the module map, the
+//! simulator's event-loop lifecycle, and a comparison of the fleet
+//! autoscalers (gradient / threshold / predictive).
+
+#![warn(missing_docs)]
 
 pub mod util;
 pub mod slo;

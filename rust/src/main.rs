@@ -33,11 +33,15 @@ fn main() {
                 .opt("rate-rps", "", "absolute request rate (overrides rate-frac)")
                 .opt("seed", "53264", "rng seed")
                 .opt("config", "", "TOML config file (overrides defaults)")
-                .opt("scaler", "", "fleet autoscaler: off|gradient|threshold")
+                .opt("scaler", "", "fleet autoscaler: off|gradient|threshold|predictive")
                 .opt("elastic-min", "", "elastic fleet floor (scalable role)")
                 .opt("elastic-max", "", "elastic fleet ceiling (scalable role)")
                 .opt("provision-delay-ms", "", "cold-start delay for provisioned instances")
                 .opt("scale-eval-ms", "", "autoscaler evaluation period")
+                .opt("provision-lead-ms", "", "predictive anticipation horizon (default: the cold-start delay)")
+                .opt("prefill-min", "", "elastic PD prefill tier floor")
+                .opt("prefill-max", "", "elastic PD prefill tier ceiling")
+                .flag("prefill-elastic", "let TTFT pressure scale the PD prefill tier")
                 .opt("diurnal-ratio", "", "diurnal peak:trough ratio (enables diurnal arrivals)")
                 .opt("diurnal-period-s", "600", "diurnal period in seconds")
                 .flag("migrate", "scale-in KV migration: evict drainers' decode residents")
@@ -135,6 +139,18 @@ fn sim_config_from(args: &Args) -> Result<SimConfig, String> {
     if !args.str_or("scale-eval-ms", "").is_empty() {
         cfg.elastic.scale_eval_ms = args.u64_or("scale-eval-ms", cfg.elastic.scale_eval_ms);
     }
+    if !args.str_or("provision-lead-ms", "").is_empty() {
+        cfg.elastic.provision_lead_ms = Some(args.u64_or("provision-lead-ms", 0));
+    }
+    if args.flag("prefill-elastic") {
+        cfg.elastic.prefill_elastic = true;
+    }
+    if !args.str_or("prefill-min", "").is_empty() {
+        cfg.elastic.prefill_min = args.usize_or("prefill-min", cfg.elastic.prefill_min);
+    }
+    if !args.str_or("prefill-max", "").is_empty() {
+        cfg.elastic.prefill_max = args.usize_or("prefill-max", cfg.elastic.prefill_max);
+    }
     if !args.str_or("diurnal-ratio", "").is_empty() {
         cfg.diurnal = Some(DiurnalSpec {
             peak_to_trough: args.f64_or("diurnal-ratio", 3.0),
@@ -195,6 +211,34 @@ fn cmd_simulate(args: &Args) -> i32 {
             res.cost.active_cost_per_request_s(),
             res.cost.cost_per_1k_goodput_tokens_s(),
         );
+        if cfg.elastic.prefill_elastic {
+            println!(
+                "elastic prefill: active mean {:.1} / peak {} / trough {}; {} queued jobs re-routed on drain",
+                res.fleet.mean_prefill(),
+                res.fleet.peak_prefill(),
+                res.fleet.trough_prefill(),
+                res.migration.migrated_prefill_jobs,
+            );
+        }
+        if !res.fleet.rates.is_empty() {
+            let lead = cfg
+                .elastic
+                .provision_lead_ms
+                .unwrap_or(cfg.elastic.provision_delay_ms);
+            let n = res.fleet.rates.len();
+            let mean_obs =
+                res.fleet.rates.iter().map(|r| r.observed_rps).sum::<f64>() / n as f64;
+            let mean_pred =
+                res.fleet.rates.iter().map(|r| r.predicted_rps).sum::<f64>() / n as f64;
+            match res.fleet.rate_prediction_mae(lead) {
+                Some(mae) => println!(
+                    "predictive rate tracking: {n} epochs, mean observed {mean_obs:.2} rps, mean predicted {mean_pred:.2} rps, lead-aligned MAE {mae:.2} rps"
+                ),
+                None => println!(
+                    "predictive rate tracking: {n} epochs, mean observed {mean_obs:.2} rps, mean predicted {mean_pred:.2} rps"
+                ),
+            }
+        }
         if res.migration.drains() > 0 {
             println!(
                 "scale-in ({}): {} drains, mean {:.0} ms / max {} ms begin_drain→retire; migrated {} requests / {} KV tokens",

@@ -7,11 +7,17 @@ use crate::util::stats::{crossing_down, Summary};
 /// Outcome of one finished (or dropped) request.
 #[derive(Debug, Clone)]
 pub struct RequestOutcome {
+    /// Workload request id.
     pub id: u64,
+    /// The request's SLO.
     pub slo: Slo,
+    /// Arrival time, ms.
     pub arrival_ms: TimeMs,
+    /// First-token emission time, ms (`None` = never).
     pub first_token_ms: Option<TimeMs>,
+    /// Completion time, ms (`None` = unfinished).
     pub finish_ms: Option<TimeMs>,
+    /// Output tokens emitted.
     pub tokens: u64,
     /// Every token met its DSLO deadline.
     pub attained: bool,
@@ -20,6 +26,7 @@ pub struct RequestOutcome {
 }
 
 impl RequestOutcome {
+    /// Time to first token, ms (`None` if no token was emitted).
     pub fn ttft_ms(&self) -> Option<u64> {
         self.first_token_ms.map(|t| t - self.arrival_ms)
     }
@@ -38,13 +45,16 @@ impl RequestOutcome {
 /// Aggregated attainment report.
 #[derive(Debug, Clone)]
 pub struct AttainmentReport {
+    /// SLO-carrying requests counted.
     pub total: usize,
+    /// How many attained every token deadline.
     pub attained: usize,
     /// (tpot_ms, total, attained) per tier, sorted by tpot.
     pub per_tier: Vec<(u64, usize, usize)>,
 }
 
 impl AttainmentReport {
+    /// Aggregate per-request outcomes into overall + per-tier attainment.
     pub fn from_outcomes(outcomes: &[RequestOutcome]) -> AttainmentReport {
         let mut per_tier: Vec<(u64, usize, usize)> = Vec::new();
         let mut total = 0usize;
@@ -76,6 +86,7 @@ impl AttainmentReport {
         }
     }
 
+    /// Overall DSLO attainment fraction in [0, 1].
     pub fn overall(&self) -> f64 {
         if self.total == 0 {
             1.0
@@ -84,6 +95,7 @@ impl AttainmentReport {
         }
     }
 
+    /// Attainment of the tier with TPOT `tpot_ms` (`None` if absent).
     pub fn tier_attainment(&self, tpot_ms: u64) -> Option<f64> {
         self.per_tier
             .iter()
@@ -110,6 +122,7 @@ pub struct AttainmentCurve {
 }
 
 impl AttainmentCurve {
+    /// Insert a measured (rate, attainment) point, keeping the curve sorted.
     pub fn push(&mut self, rate_rps: f64, attainment: f64) {
         self.points.push((rate_rps, attainment));
         self.points
@@ -132,6 +145,7 @@ impl AttainmentCurve {
 /// instance · second").
 #[derive(Debug, Clone, Default)]
 pub struct CostAccount {
+    /// Total instance·ms spent iterating.
     pub instance_busy_ms: u64,
     /// Total instance·ms the fleet was *allocated* (busy or idle but
     /// reserved to a tier) — the number Fig 8 divides by requests.
@@ -140,6 +154,7 @@ pub struct CostAccount {
     /// what a cloud bill charges. On a fixed fleet this is
     /// `n × sim_span`; an elastic fleet makes it load-dependent.
     pub active_instance_ms: u64,
+    /// Requests that finished.
     pub requests_served: u64,
     /// Output tokens emitted across all finished requests.
     pub tokens_total: u64,
@@ -149,6 +164,7 @@ pub struct CostAccount {
 }
 
 impl CostAccount {
+    /// Allocated instance·seconds per served request (Fig 8's metric).
     pub fn cost_per_request_s(&self) -> f64 {
         if self.requests_served == 0 {
             return f64::INFINITY;
@@ -173,6 +189,7 @@ impl CostAccount {
         self.active_instance_ms as f64 / self.goodput_tokens as f64
     }
 
+    /// Busy fraction of allocated instance time.
     pub fn utilization(&self) -> f64 {
         if self.instance_alloc_ms == 0 {
             0.0
@@ -185,6 +202,7 @@ impl CostAccount {
 /// One snapshot of fleet composition, taken at every `ScaleEval`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct FleetSample {
+    /// Simulated time of the snapshot.
     pub t_ms: TimeMs,
     /// Active instances assigned to each TPOT tier (tightest first).
     pub per_tier: Vec<usize>,
@@ -192,18 +210,43 @@ pub struct FleetSample {
     pub best_effort: usize,
     /// All active instances (any role / assignment).
     pub active: usize,
+    /// Active `Role::Prefill` instances (the elastic-prefill series;
+    /// constant on runs where the prefill tier is static, 0 on coloc).
+    pub active_prefill: usize,
+    /// Instances cold-starting at the snapshot.
     pub provisioning: usize,
+    /// Instances draining at the snapshot.
     pub draining: usize,
+}
+
+/// One predicted-vs-observed arrival-rate sample, recorded by the
+/// predictive autoscaler at every `ScaleEval` epoch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RateSample {
+    /// Simulated time of the evaluation epoch.
+    pub t_ms: TimeMs,
+    /// Raw arrival rate over the last epoch window (req/s).
+    pub observed_rps: f64,
+    /// EWMA-smoothed rate estimate (req/s).
+    pub smoothed_rps: f64,
+    /// Rate projected `provision_lead_ms` ahead — what the fleet was
+    /// sized for (req/s).
+    pub predicted_rps: f64,
 }
 
 /// Per-tier fleet-size time series for an elastic run (empty on fixed
 /// fleets).
 #[derive(Debug, Clone, Default)]
 pub struct FleetSeries {
+    /// Fleet-composition snapshots, one per `ScaleEval`.
     pub samples: Vec<FleetSample>,
+    /// Predicted-vs-observed arrival-rate samples (empty unless the
+    /// run used the predictive autoscaler).
+    pub rates: Vec<RateSample>,
 }
 
 impl FleetSeries {
+    /// True when the run recorded no fleet snapshots (fixed fleet).
     pub fn is_empty(&self) -> bool {
         self.samples.is_empty()
     }
@@ -220,20 +263,69 @@ impl FleetSeries {
 
     /// Time-weighted mean active fleet size over the sampled span.
     pub fn mean_active(&self) -> f64 {
+        self.time_weighted_mean(|s| s.active)
+    }
+
+    /// Largest active prefill tier observed.
+    pub fn peak_prefill(&self) -> usize {
+        self.samples.iter().map(|s| s.active_prefill).max().unwrap_or(0)
+    }
+
+    /// Smallest active prefill tier observed.
+    pub fn trough_prefill(&self) -> usize {
+        self.samples.iter().map(|s| s.active_prefill).min().unwrap_or(0)
+    }
+
+    /// Time-weighted mean active prefill-tier size.
+    pub fn mean_prefill(&self) -> f64 {
+        self.time_weighted_mean(|s| s.active_prefill)
+    }
+
+    fn time_weighted_mean(&self, f: impl Fn(&FleetSample) -> usize) -> f64 {
         if self.samples.len() < 2 {
-            return self.samples.first().map(|s| s.active as f64).unwrap_or(0.0);
+            return self.samples.first().map(|s| f(s) as f64).unwrap_or(0.0);
         }
         let mut weighted = 0.0;
         let mut span = 0.0;
         for w in self.samples.windows(2) {
             let dt = (w[1].t_ms - w[0].t_ms) as f64;
-            weighted += w[0].active as f64 * dt;
+            weighted += f(&w[0]) as f64 * dt;
             span += dt;
         }
         if span == 0.0 {
-            self.samples[0].active as f64
+            f(&self.samples[0]) as f64
         } else {
             weighted / span
+        }
+    }
+
+    /// Mean absolute error between the predicted rate and the observed
+    /// rate of the epoch nearest `t + lead_ms` — how well the
+    /// predictive scaler anticipated the curve it was chasing. `None`
+    /// without rate samples.
+    pub fn rate_prediction_mae(&self, lead_ms: TimeMs) -> Option<f64> {
+        if self.rates.is_empty() {
+            return None;
+        }
+        let mut err = 0.0f64;
+        let mut n = 0usize;
+        for r in &self.rates {
+            let target_t = r.t_ms + lead_ms;
+            let Some(actual) = self
+                .rates
+                .iter()
+                .min_by_key(|o| o.t_ms.abs_diff(target_t))
+                .filter(|o| o.t_ms.abs_diff(target_t) <= (lead_ms / 2).max(1))
+            else {
+                continue;
+            };
+            err += (r.predicted_rps - actual.observed_rps).abs();
+            n += 1;
+        }
+        if n == 0 {
+            None
+        } else {
+            Some(err / n as f64)
         }
     }
 }
@@ -246,8 +338,12 @@ impl FleetSeries {
 pub struct MigrationStats {
     /// Decode requests detached from drainers and re-placed elsewhere.
     pub migrated_requests: u64,
+    /// Queued prefill jobs re-routed off draining prefill servers
+    /// (elastic-prefill scale-in; 0 with a static prefill tier).
+    pub migrated_prefill_jobs: u64,
     /// KV tokens in flight across all migrations (resident KV at
-    /// eviction time).
+    /// eviction time; includes partially-prefilled KV of migrated
+    /// prefill jobs).
     pub migrated_kv_tokens: u64,
     /// Per-drain begin_drain→retire latency (ms). Instances still
     /// draining when the run ends are censored at the simulated span.
@@ -255,10 +351,12 @@ pub struct MigrationStats {
 }
 
 impl MigrationStats {
+    /// Number of recorded drains.
     pub fn drains(&self) -> usize {
         self.drain_latency_ms.len()
     }
 
+    /// Mean begin_drain→retire latency, ms (0 with no drains).
     pub fn mean_drain_latency_ms(&self) -> f64 {
         if self.drain_latency_ms.is_empty() {
             return 0.0;
@@ -266,6 +364,7 @@ impl MigrationStats {
         self.drain_latency_ms.iter().sum::<u64>() as f64 / self.drain_latency_ms.len() as f64
     }
 
+    /// Worst begin_drain→retire latency, ms.
     pub fn max_drain_latency_ms(&self) -> u64 {
         self.drain_latency_ms.iter().copied().max().unwrap_or(0)
     }
@@ -378,24 +477,49 @@ mod tests {
             per_tier: vec![active / 2, active - active / 2],
             best_effort: 0,
             active,
+            active_prefill: active / 4,
             provisioning: 0,
             draining: 0,
         };
         let s = FleetSeries {
             samples: vec![sample(0, 4), sample(1000, 8), sample(3000, 2)],
+            rates: Vec::new(),
         };
         assert_eq!(s.peak_active(), 8);
         assert_eq!(s.trough_active(), 2);
         // Time-weighted: 4 for 1 s, 8 for 2 s over 3 s = 20/3.
         assert!((s.mean_active() - 20.0 / 3.0).abs() < 1e-9);
+        // Prefill column: 1 for 1 s, 2 for 2 s over 3 s = 5/3.
+        assert_eq!(s.peak_prefill(), 2);
+        assert_eq!(s.trough_prefill(), 0);
+        assert!((s.mean_prefill() - 5.0 / 3.0).abs() < 1e-9);
         assert!(FleetSeries::default().is_empty());
         assert_eq!(FleetSeries::default().peak_active(), 0);
+        assert_eq!(FleetSeries::default().rate_prediction_mae(1000), None);
+    }
+
+    #[test]
+    fn rate_prediction_mae_aligns_by_lead() {
+        // Predictions made at t are for t+1000; observed rates step up
+        // by 10 each epoch and every prediction is 2 high.
+        let rates: Vec<RateSample> = (0..5u64)
+            .map(|i| RateSample {
+                t_ms: i * 1000,
+                observed_rps: 10.0 * i as f64,
+                smoothed_rps: 10.0 * i as f64,
+                predicted_rps: 10.0 * (i + 1) as f64 + 2.0,
+            })
+            .collect();
+        let s = FleetSeries { samples: Vec::new(), rates };
+        let mae = s.rate_prediction_mae(1000).unwrap();
+        assert!((mae - 2.0).abs() < 1e-9, "mae={mae}");
     }
 
     #[test]
     fn migration_stats_summaries() {
         let m = MigrationStats {
             migrated_requests: 3,
+            migrated_prefill_jobs: 0,
             migrated_kv_tokens: 4_500,
             drain_latency_ms: vec![100, 900, 2_500, 40_000],
         };

@@ -4,13 +4,21 @@
 /// SwiGLU FFN (the LLaMA/Qwen family shape the paper targets).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelSpec {
+    /// Human-readable model name.
     pub name: String,
+    /// Transformer layer count.
     pub num_layers: usize,
+    /// Residual-stream width.
     pub hidden: usize,
+    /// Query heads.
     pub num_q_heads: usize,
+    /// KV heads (GQA).
     pub num_kv_heads: usize,
+    /// Per-head dimension.
     pub head_dim: usize,
+    /// FFN inner width (SwiGLU).
     pub ffn_hidden: usize,
+    /// Vocabulary size.
     pub vocab: usize,
     /// Bytes per parameter / KV element (2 = bf16).
     pub bytes_per_elem: usize,

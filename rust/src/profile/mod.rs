@@ -119,6 +119,7 @@ impl ProfileTable {
 
     // ---- persistence ----
 
+    /// Serialize the table to its JSON representation.
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.set(
@@ -135,6 +136,7 @@ impl ProfileTable {
         o
     }
 
+    /// Parse a table from the JSON representation.
     pub fn from_json(j: &Json) -> anyhow::Result<ProfileTable> {
         let get_u64s = |key: &str| -> anyhow::Result<Vec<u64>> {
             Ok(j.get(key)
@@ -167,11 +169,13 @@ impl ProfileTable {
         })
     }
 
+    /// Write the table as pretty JSON to `path`.
     pub fn save(&self, path: &Path) -> anyhow::Result<()> {
         std::fs::write(path, self.to_json().pretty())?;
         Ok(())
     }
 
+    /// Read a table previously written by [`ProfileTable::save`].
     pub fn load(path: &Path) -> anyhow::Result<ProfileTable> {
         let text = std::fs::read_to_string(path)?;
         let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;

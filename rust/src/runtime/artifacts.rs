@@ -13,7 +13,9 @@ use std::path::{Path, PathBuf};
 /// One lowered executable (decode step or prefill chunk).
 #[derive(Debug, Clone)]
 pub struct ExecutableEntry {
+    /// Which phase/bucket this executable serves.
     pub kind: ExecKind,
+    /// Path to the serialized executable.
     pub file: PathBuf,
 }
 
@@ -28,9 +30,13 @@ pub enum ExecKind {
 /// A weight tensor's location in `weights.bin`.
 #[derive(Debug, Clone)]
 pub struct WeightEntry {
+    /// Parameter name (ABI order key).
     pub name: String,
+    /// Tensor shape.
     pub shape: Vec<usize>,
+    /// Byte offset into the weight blob.
     pub offset: usize,
+    /// Byte length in the weight blob.
     pub bytes: usize,
 }
 
@@ -38,25 +44,40 @@ pub struct WeightEntry {
 /// `python/compile/model.py::ModelConfig`).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ManifestModel {
+    /// Model name the artifacts were lowered from.
     pub name: String,
+    /// Transformer layer count.
     pub num_layers: usize,
+    /// Residual-stream width.
     pub hidden: usize,
+    /// Query heads.
     pub num_q_heads: usize,
+    /// KV heads (GQA).
     pub num_kv_heads: usize,
+    /// Per-head dimension.
     pub head_dim: usize,
+    /// FFN inner width.
     pub ffn_hidden: usize,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Max sequence length the buckets were compiled for.
     pub max_seq_len: usize,
 }
 
 /// Parsed `artifacts/manifest.json` plus loaded weights.
 #[derive(Debug)]
 pub struct ArtifactStore {
+    /// Artifact directory root.
     pub dir: PathBuf,
+    /// Model description from the manifest.
     pub model: ManifestModel,
+    /// Compiled decode batch buckets.
     pub decode_buckets: Vec<usize>,
+    /// Compiled prefill chunk buckets.
     pub prefill_buckets: Vec<usize>,
+    /// Every compiled executable.
     pub executables: Vec<ExecutableEntry>,
+    /// Weight-blob layout entries.
     pub weights: Vec<WeightEntry>,
     /// Raw weights.bin contents (f32le, ABI order).
     pub weight_data: Vec<u8>,
@@ -202,6 +223,7 @@ impl ArtifactStore {
         self.prefill_buckets.iter().copied().find(|&b| b >= chunk)
     }
 
+    /// The manifest's executable entry of kind `kind`, if present.
     pub fn find_exec(&self, kind: ExecKind) -> Option<&ExecutableEntry> {
         self.executables.iter().find(|e| e.kind == kind)
     }

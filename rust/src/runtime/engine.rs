@@ -23,6 +23,7 @@ use std::rc::Rc;
 pub struct KvState {
     /// `[L, S, H, D]` flattened KV for this request.
     pub k: Vec<f32>,
+    /// `[L, S, H, D]` flattened V cache for this request.
     pub v: Vec<f32>,
     /// Valid prefix length (prompt + decoded so far).
     pub kv_len: usize,
@@ -32,6 +33,7 @@ pub struct KvState {
 
 /// A compiled serving instance.
 pub struct Engine {
+    /// The artifact store the engine executes from.
     pub store: Rc<ArtifactStore>,
     client: xla::PjRtClient,
     decode_execs: HashMap<usize, xla::PjRtLoadedExecutable>,
@@ -82,6 +84,7 @@ impl Engine {
         })
     }
 
+    /// PJRT platform name (e.g. `cpu`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

@@ -16,35 +16,50 @@ use std::time::Instant;
 /// Live-server configuration.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
+    /// Artifact directory the engines load from.
     pub artifacts: PathBuf,
+    /// In-process serving instances.
     pub instances: usize,
     /// Prefill chunk tokens per iteration.
     pub chunk_tokens: usize,
+    /// TPOT tier set for request binning.
     pub tiers: TierSet,
 }
 
 /// Per-request outcome measured by the collector.
 #[derive(Debug, Clone)]
 pub struct LiveOutcome {
+    /// Request id.
     pub id: u64,
+    /// The request's SLO.
     pub slo: Slo,
+    /// Submission instant.
     pub submitted: Instant,
+    /// First-token instant (`None` = never).
     pub first_token: Option<Instant>,
+    /// Completion instant (`None` = unfinished).
     pub finished: Option<Instant>,
+    /// Output tokens generated.
     pub tokens: u64,
+    /// Did every token meet its DSLO deadline?
     pub attained: bool,
 }
 
 /// Aggregate report for a serving run.
 #[derive(Debug)]
 pub struct ServeReport {
+    /// Per-request live outcomes.
     pub outcomes: Vec<LiveOutcome>,
+    /// Wall-clock span of the serve run, seconds.
     pub wall_s: f64,
+    /// Tokens generated across all requests.
     pub total_tokens: u64,
+    /// Engine iterations executed.
     pub iterations: u64,
 }
 
 impl ServeReport {
+    /// Fraction of served requests that met their SLO.
     pub fn attainment(&self) -> f64 {
         if self.outcomes.is_empty() {
             return 1.0;
@@ -52,14 +67,17 @@ impl ServeReport {
         self.outcomes.iter().filter(|o| o.attained).count() as f64 / self.outcomes.len() as f64
     }
 
+    /// Served requests per wall-clock second.
     pub fn throughput_rps(&self) -> f64 {
         self.outcomes.len() as f64 / self.wall_s
     }
 
+    /// Generated tokens per wall-clock second.
     pub fn token_throughput(&self) -> f64 {
         self.total_tokens as f64 / self.wall_s
     }
 
+    /// TTFT distribution over served requests, ms (`None` when empty).
     pub fn ttft_ms(&self) -> Option<Summary> {
         let xs: Vec<f64> = self
             .outcomes
@@ -76,6 +94,7 @@ impl ServeReport {
         }
     }
 
+    /// Mean-TPOT distribution over served requests, ms (`None` when empty).
     pub fn mean_tpot_ms(&self) -> Option<Summary> {
         let xs: Vec<f64> = self
             .outcomes

@@ -15,9 +15,13 @@ use std::time::Instant;
 /// A request as submitted to the live server.
 #[derive(Debug, Clone)]
 pub struct LiveRequest {
+    /// Request id.
     pub id: u64,
+    /// Prompt token ids.
     pub prompt: Vec<i32>,
+    /// Output-length cap.
     pub max_new_tokens: usize,
+    /// The request's SLO.
     pub slo: Slo,
     /// TPOT tier bin assigned by the leader.
     pub tier: usize,
@@ -25,18 +29,24 @@ pub struct LiveRequest {
 
 /// Command channel leader → worker.
 pub enum WorkerCommand {
+    /// Serve one request.
     Serve(LiveRequest),
+    /// Stop the worker thread.
     Shutdown,
 }
 
 /// Token event stream worker → collector.
 #[derive(Debug, Clone)]
 pub struct TokenEvent {
+    /// Request the token belongs to.
     pub request_id: u64,
     /// 0-based output-token index (0 = first token, from prefill).
     pub token_index: u64,
+    /// Token id emitted.
     pub token: i32,
+    /// Emission instant.
     pub at: Instant,
+    /// Was this the request's last token?
     pub finished: bool,
 }
 

@@ -36,6 +36,7 @@ pub enum TierAssign {
 /// The cluster under simulation.
 #[derive(Debug, Clone)]
 pub struct Cluster {
+    /// Every instance ever in the fleet (retired slots included).
     pub instances: Vec<Instance>,
     /// Tier assignment per instance (parallel to `instances`).
     pub assign: Vec<TierAssign>,
@@ -117,10 +118,12 @@ impl Cluster {
         }
     }
 
+    /// Total instance slots, retired included (ids are stable indices).
     pub fn len(&self) -> usize {
         self.instances.len()
     }
 
+    /// True when the cluster has no instance slots at all.
     pub fn is_empty(&self) -> bool {
         self.instances.is_empty()
     }
@@ -191,6 +194,12 @@ impl Cluster {
     /// Add a cold-starting instance to the fleet; it accepts no work
     /// until `ready_at` (the simulator fires `InstanceReady` then).
     /// Returns the new instance id.
+    ///
+    /// Tier assignment mirrors [`Cluster::build`]: prefill servers are
+    /// always `Static` — a provisioned prefill instance must never
+    /// enter the best-effort pool, or `claim_for_tier` would hand a
+    /// prefill server to a TPOT tier (the role-confusion bug exposed by
+    /// making the prefill tier elastic).
     pub fn provision(&mut self, role: Role, now: TimeMs, ready_at: TimeMs) -> usize {
         let id = self.instances.len();
         self.instances.push(Instance::new_provisioning(
@@ -201,10 +210,10 @@ impl Cluster {
             now,
             ready_at,
         ));
-        self.assign.push(if self.managed {
-            TierAssign::BestEffort
-        } else {
-            TierAssign::Static
+        self.assign.push(match role {
+            Role::Prefill => TierAssign::Static,
+            _ if self.managed => TierAssign::BestEffort,
+            _ => TierAssign::Static,
         });
         id
     }
@@ -271,6 +280,7 @@ impl Cluster {
         self.kicked.push(inst);
     }
 
+    /// Simulator side: drain the list of router-fed instances to restart.
     pub fn take_kicked(&mut self) -> Vec<usize> {
         std::mem::take(&mut self.kicked)
     }
@@ -372,6 +382,24 @@ mod tests {
         assert_eq!(c.in_tier(0).count(), 1);
         c.begin_drain(id, 100);
         assert_eq!(c.in_tier(0).count(), 0, "draining member must be unroutable");
+    }
+
+    #[test]
+    fn provisioned_prefill_stays_out_of_the_tier_pool() {
+        // The PR 1 role-confusion bug: a provisioned Prefill instance
+        // entered the BE pool of a managed fleet, where claim_for_tier
+        // could hand it to a TPOT tier.
+        let mut c = Cluster::build(ServingMode::PdDisaggregated, 4, 0.5, 2, &cm(), true);
+        let be_before = c.best_effort_pool().count();
+        let id = c.provision(Role::Prefill, 0, 100);
+        c.mark_ready(id);
+        assert_eq!(c.assign[id], TierAssign::Static);
+        assert_eq!(c.best_effort_pool().count(), be_before);
+        assert_eq!(c.with_role(Role::Prefill).count(), 3);
+        // Decode provisioning still joins the pool.
+        let id2 = c.provision(Role::Decode, 0, 100);
+        c.mark_ready(id2);
+        assert_eq!(c.best_effort_pool().count(), be_before + 1);
     }
 
     #[test]

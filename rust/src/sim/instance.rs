@@ -66,6 +66,7 @@ impl Lifecycle {
 /// A queued prefill job (request awaiting prompt processing here).
 #[derive(Debug, Clone, Copy)]
 pub struct PrefillJob {
+    /// Index into the simulation's request vector.
     pub req_idx: usize,
     /// TTFT deadline (arrival + TTFT) — used for EDF ordering.
     pub deadline: TimeMs,
@@ -74,6 +75,7 @@ pub struct PrefillJob {
 /// A decode-phase request resident on this instance.
 #[derive(Debug, Clone, Copy)]
 pub struct RunningReq {
+    /// Index into the simulation's request vector.
     pub req_idx: usize,
     /// Paused by KV pressure this iteration (no token generated).
     pub paused: bool,
@@ -95,7 +97,9 @@ pub struct IterationBatch {
 /// One serving instance.
 #[derive(Debug, Clone)]
 pub struct Instance {
+    /// Stable instance id (index into `Cluster::instances`).
     pub id: usize,
+    /// Serving role (prefill / decode / coloc).
     pub role: Role,
     /// Elastic-fleet lifecycle state (`Active` for fixed fleets).
     pub lifecycle: Lifecycle,
@@ -121,10 +125,13 @@ pub struct Instance {
     pub drain_latency_ms: Option<u64>,
     /// Mid-iteration state.
     pub iterating: bool,
+    /// When the in-flight iteration completes.
     pub busy_until: TimeMs,
+    /// Composition of the in-flight iteration.
     pub current: IterationBatch,
     /// Lifetime counters.
     pub busy_ms_total: u64,
+    /// Iterations completed over the instance's lifetime.
     pub iterations_total: u64,
     /// Time this instance joined / left tier allocation (for cost
     /// accounting): closed [start, end) intervals + open start.
@@ -137,6 +144,7 @@ pub struct Instance {
 }
 
 impl Instance {
+    /// A fresh `Active` instance (the fixed-fleet constructor).
     pub fn new(id: usize, role: Role, kv_capacity: u64, max_token_batch: u64) -> Instance {
         Instance {
             id,
@@ -231,6 +239,27 @@ impl Instance {
         out
     }
 
+    /// Prefill scale-in migration: detach every queued prefill job so
+    /// the caller can re-route it to a surviving prefill server. Any
+    /// chunk of an evicted job still inside the in-flight iteration is
+    /// discarded (its slice is stripped from the current batch): the
+    /// destination recomputes from the job's committed `prefill_done`,
+    /// so prefill progress is never applied both here and there.
+    pub fn evict_prefill_queue(&mut self) -> Vec<PrefillJob> {
+        debug_assert!(
+            matches!(self.lifecycle, Lifecycle::Draining { .. }),
+            "evicting prefill queue of non-draining instance {}",
+            self.id
+        );
+        let out: Vec<PrefillJob> = self.prefill_queue.drain(..).collect();
+        if !out.is_empty() {
+            self.current
+                .prefill_slices
+                .retain(|(r, _)| !out.iter().any(|j| j.req_idx == *r));
+        }
+        out
+    }
+
     /// Billable active-instance·ms by `end`: from provisioning start to
     /// retirement (or `end` when still live).
     pub fn active_span_ms(&self, end: TimeMs) -> u64 {
@@ -243,6 +272,7 @@ impl Instance {
 
     // ---- queue management ----
 
+    /// Queue a prefill job, keeping the queue EDF-ordered (§4.2).
     pub fn push_prefill(&mut self, job: PrefillJob) {
         debug_assert!(
             self.lifecycle.accepts_work(),
@@ -260,6 +290,7 @@ impl Instance {
         self.prefill_queue.insert(pos, job);
     }
 
+    /// Queue a decode handoff whose KV transfer lands at `ready`.
     pub fn push_decode(&mut self, req_idx: usize, ready: TimeMs) {
         debug_assert!(
             self.lifecycle.accepts_work(),
@@ -270,12 +301,14 @@ impl Instance {
         self.decode_queue.push_back((req_idx, ready));
     }
 
+    /// Anything resident or queued on this instance?
     pub fn has_work(&self) -> bool {
         !self.running.is_empty()
             || !self.prefill_queue.is_empty()
             || !self.decode_queue.is_empty()
     }
 
+    /// No work and no in-flight iteration — safe to release or retire.
     pub fn is_empty(&self) -> bool {
         !self.has_work() && !self.iterating
     }

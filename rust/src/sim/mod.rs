@@ -36,7 +36,7 @@
 //! decode requests instead of waiting them out. Each evicted request
 //! pays an end-to-end transfer of `max(kv_transfer_ms,
 //! kv_now / MIGRATION_TOKENS_PER_MS)`: the bulk stream beyond the
-//! final handoff hop is the [`MigrationArrive`](EventKey) delay, the
+//! final handoff hop is the `MigrationArrive` event delay, the
 //! hop itself is the ordinary `kv_transfer_ms` placement pays. The
 //! request re-enters placement through the router's ordinary
 //! `route_decode`/pending machinery — destination residents stay
@@ -46,6 +46,24 @@
 //! is absent from the drainer's batch from the eviction on, so every
 //! one of its `decode_len` tokens is emitted exactly once, here or
 //! there.
+//!
+//! # Elastic prefill tier
+//!
+//! With `ElasticParams::prefill` set (config `[elastic]
+//! prefill_elastic = "on"`), `Role::Prefill` instances get the same
+//! Provisioning/Active/Draining/Retired lifecycle as the scalable
+//! role, bounded by their own `prefill_min`/`prefill_max` — the
+//! simulator enforces bounds *per role*, so a scaler's `Provision`/
+//! `Drain` on a prefill server is never checked against the decode
+//! bounds (and with `prefill: None`, prefill actions are ignored
+//! outright: the PR 2 static-prefill path is reproduced bit-for-bit).
+//! Draining a prefill server with migration on re-routes its queued
+//! prefill jobs through the router's ordinary `route_new` placement;
+//! a partially-prefilled job's KV streams off the source first (same
+//! `MigrationArrive` machinery and egress billing as decode KV), while
+//! its in-flight chunk on the source is discarded — the destination
+//! recomputes from the job's committed `prefill_done`, so prefill work
+//! is never applied twice.
 
 pub mod cluster;
 pub mod instance;
@@ -74,21 +92,26 @@ pub const MIGRATION_TOKENS_PER_MS: u64 = 400;
 /// Simulator-side request state.
 #[derive(Debug, Clone)]
 pub struct SimRequest {
+    /// The underlying workload request.
     pub req: crate::workload::Request,
     /// TPOT tier bin (index into the tier set).
     pub tier: usize,
+    /// Per-token DSLO deadline tracker.
     pub tracker: DsloTracker,
     /// Prompt tokens prefilled so far.
     pub prefill_done: u32,
     /// Output tokens emitted (token 0 comes from prefill completion).
     pub decoded: u32,
+    /// First-token emission time (`None` until prefill completes).
     pub first_token_ms: Option<TimeMs>,
+    /// Completion time (`None` while decoding).
     pub finish_ms: Option<TimeMs>,
     /// Instance currently hosting the request's decode phase.
     pub decode_instance: Option<usize>,
 }
 
 impl SimRequest {
+    /// Has the request emitted its full output?
     pub fn is_finished(&self) -> bool {
         self.finish_ms.is_some()
     }
@@ -107,8 +130,11 @@ impl SimRequest {
 /// Result of a full simulation run.
 #[derive(Debug)]
 pub struct SimResult {
+    /// Per-request outcomes.
     pub outcomes: Vec<RequestOutcome>,
+    /// Aggregated DSLO attainment.
     pub attainment: AttainmentReport,
+    /// Instance·second cost accounting.
     pub cost: CostAccount,
     /// Per-tier fleet-size time series (empty for fixed-fleet runs).
     pub fleet: FleetSeries,
@@ -122,10 +148,21 @@ pub struct SimResult {
     pub unfinished: usize,
 }
 
+/// Per-role bounds for the elastic PD prefill tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefillElastic {
+    /// Never drain the prefill cluster below this (≥ 1: the PD router
+    /// requires at least one active prefill server).
+    pub min_instances: usize,
+    /// Never provision prefill above this (active + cold-starting).
+    pub max_instances: usize,
+}
+
 /// Fleet-elasticity mechanics (bounds and delays; *when* to scale is
-/// the [`Autoscaler`]'s decision). Bounds apply to the scalable role —
-/// decode servers under PD, coloc servers under co-location; a PD
-/// prefill cluster stays static.
+/// the [`Autoscaler`]'s decision). `min`/`max` bound the scalable
+/// role — decode servers under PD, coloc servers under co-location;
+/// the PD prefill cluster stays static unless [`ElasticParams::prefill`]
+/// gives it bounds of its own.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ElasticParams {
     /// Never drain below this many scalable instances.
@@ -140,11 +177,16 @@ pub struct ElasticParams {
     /// surviving servers instead of waiting for them to finish. `false`
     /// reproduces the PR 1 wait-drain path bit-for-bit.
     pub migration: bool,
+    /// Elastic PD prefill tier bounds; `None` = static prefill cluster
+    /// (scaler actions on `Role::Prefill` are ignored — the PR 2
+    /// behaviour bit-for-bit).
+    pub prefill: Option<PrefillElastic>,
 }
 
 /// Environment knobs (not policy).
 #[derive(Debug, Clone)]
 pub struct SimParams {
+    /// Serving architecture simulated.
     pub mode: ServingMode,
     /// KV-transfer latency prefill→decode for PD (paper assumes RDMA).
     pub kv_transfer_ms: TimeMs,
@@ -187,10 +229,15 @@ enum EventKey {
 
 /// The event-driven simulation.
 pub struct Simulation<'a> {
+    /// Environment knobs.
     pub params: SimParams,
+    /// Ground-truth iteration times (the simulated hardware).
     pub cost_model: CostModel,
+    /// The table the router sees (§4.5 profiling stand-in).
     pub profile: &'a ProfileTable,
+    /// All requests, indexed by the event queue's `req_idx`.
     pub requests: Vec<SimRequest>,
+    /// The fleet under simulation.
     pub cluster: Cluster,
     events: BinaryHeap<Reverse<(TimeMs, u64, EventKey)>>,
     seq: u64,
@@ -200,6 +247,8 @@ pub struct Simulation<'a> {
 }
 
 impl<'a> Simulation<'a> {
+    /// Build a simulation over `workload` on `cluster`; the event heap is
+    /// seeded with every arrival plus the first housekeeping tick.
     pub fn new(
         params: SimParams,
         cost_model: CostModel,
@@ -311,7 +360,16 @@ impl<'a> Simulation<'a> {
                         !self.requests[req_idx].is_finished(),
                         "migrated request {req_idx} finished while in flight"
                     );
-                    self.place_decode_handoff(req_idx, router);
+                    // Phase dispatch: a request evicted off a draining
+                    // prefill server is still prefill-phase; decode
+                    // evictions always carry a completed prefill.
+                    if self.requests[req_idx].prefill_done
+                        < self.requests[req_idx].req.prefill_len
+                    {
+                        self.place_prefill_handoff(req_idx, router);
+                    } else {
+                        self.place_decode_handoff(req_idx, router);
+                    }
                     self.restart_fed_instances(router);
                 }
                 EventKey::ScaleEval => {
@@ -361,11 +419,19 @@ impl<'a> Simulation<'a> {
                 break;
             }
         }
+        // Attach the predicted-vs-observed arrival-rate series (empty
+        // for non-predictive scalers) before outcome collection.
+        if let Some(sc) = scaler.as_deref_mut() {
+            self.fleet.rates = sc.take_rate_series();
+        }
         self.finalize(completed)
     }
 
     /// Apply one autoscaler evaluation: bounds-checked provision/drain
-    /// plus a fleet-size sample.
+    /// plus a fleet-size sample. Bounds are *per role* — the scalable
+    /// role uses `min_instances`/`max_instances`, `Role::Prefill` its
+    /// own `ElasticParams::prefill` bounds (actions on a static prefill
+    /// cluster are dropped, reproducing the PR 2 path bit-for-bit).
     fn handle_scale_eval(
         &mut self,
         scaler: &mut dyn Autoscaler,
@@ -376,7 +442,20 @@ impl<'a> Simulation<'a> {
         for action in actions {
             match action {
                 ScaleAction::Provision { role } => {
-                    if self.cluster.committed_count(role) < ep.max_instances {
+                    let cap = match role {
+                        Role::Prefill => match &ep.prefill {
+                            Some(p) => p.max_instances,
+                            None => {
+                                log::debug!(
+                                    "t={} dropping prefill provision: prefill tier is static",
+                                    self.now
+                                );
+                                continue;
+                            }
+                        },
+                        _ => ep.max_instances,
+                    };
+                    if self.cluster.committed_count(role) < cap {
                         let ready = self.now + ep.provision_delay_ms;
                         let id = self.cluster.provision(role, self.now, ready);
                         self.push_event(ready, EventKey::InstanceReady(id));
@@ -388,14 +467,30 @@ impl<'a> Simulation<'a> {
                 }
                 ScaleAction::Drain { inst, migrate } => {
                     let role = self.cluster.instances[inst].role;
+                    let floor = match role {
+                        Role::Prefill => match &ep.prefill {
+                            Some(p) => p.min_instances.max(1),
+                            None => {
+                                log::debug!(
+                                    "t={} dropping prefill drain: prefill tier is static",
+                                    self.now
+                                );
+                                continue;
+                            }
+                        },
+                        _ => ep.min_instances,
+                    };
                     if self.cluster.instances[inst].lifecycle.accepts_work()
-                        && self.cluster.active_count(role) > ep.min_instances
+                        && self.cluster.active_count(role) > floor
                     {
                         self.cluster.begin_drain(inst, self.now);
                         if ep.migration && migrate {
                             // Wait-free drain: move the residents out
                             // instead of waiting for them to finish.
-                            self.migrate_residents(inst);
+                            match role {
+                                Role::Prefill => self.migrate_prefill_queue(inst),
+                                _ => self.migrate_residents(inst),
+                            }
                         }
                         // Empty drainers retire on the spot.
                         self.cluster.retire_if_drained(inst, self.now);
@@ -439,7 +534,49 @@ impl<'a> Simulation<'a> {
         }
     }
 
-    /// Record the current fleet composition.
+    /// Evict a draining prefill server's queued jobs and re-route them
+    /// to surviving prefill servers. An unstarted job re-enters
+    /// placement immediately (it has no KV to move); a
+    /// partially-prefilled job's committed KV streams off the source
+    /// first, paying the same `max(kv_transfer_ms,
+    /// kv/MIGRATION_TOKENS_PER_MS)` end-to-end cost as a decode
+    /// migration — entirely as the `MigrationArrive` delay, because
+    /// prefill re-queueing (unlike a decode handoff) has no
+    /// destination-side transfer hop to cover the final
+    /// `kv_transfer_ms`. The source keeps billing until its last
+    /// transfer departs (`egress_until`), exactly like decode.
+    fn migrate_prefill_queue(&mut self, inst: usize) {
+        let jobs = self.cluster.instances[inst].evict_prefill_queue();
+        if jobs.is_empty() {
+            return;
+        }
+        let kv_transfer_ms = self.params.kv_transfer_ms;
+        let mut egress_until = self.cluster.instances[inst].egress_until;
+        for job in jobs {
+            let kv = self.requests[job.req_idx].prefill_done as u64;
+            let stream = if kv == 0 {
+                0
+            } else {
+                (kv / MIGRATION_TOKENS_PER_MS.max(1)).max(kv_transfer_ms)
+            };
+            self.migration.migrated_prefill_jobs += 1;
+            self.migration.migrated_kv_tokens += kv;
+            egress_until = egress_until.max(self.now + stream);
+            self.push_event(self.now + stream, EventKey::MigrationArrive(job.req_idx));
+            log::debug!(
+                "t={} migrate: prefill job {} ({kv} KV tokens done) off inst {inst}, lands in {stream} ms",
+                self.now,
+                job.req_idx
+            );
+        }
+        self.cluster.instances[inst].egress_until = egress_until;
+        if egress_until > self.now {
+            self.push_event(egress_until, EventKey::Wake(inst));
+        }
+    }
+
+    /// Record the current fleet composition (overall and per role —
+    /// the prefill column makes the elastic-prefill series visible).
     fn sample_fleet(&mut self) {
         let per_tier: Vec<usize> = (0..self.cluster.num_tiers)
             .map(|k| self.cluster.in_tier(k).count())
@@ -449,12 +586,18 @@ impl<'a> Simulation<'a> {
             per_tier,
             best_effort: self.cluster.best_effort_pool().count(),
             active: 0,
+            active_prefill: 0,
             provisioning: 0,
             draining: 0,
         };
         for i in &self.cluster.instances {
             match i.lifecycle {
-                Lifecycle::Active => sample.active += 1,
+                Lifecycle::Active => {
+                    sample.active += 1;
+                    if i.role == Role::Prefill {
+                        sample.active_prefill += 1;
+                    }
+                }
                 Lifecycle::Provisioning { .. } => sample.provisioning += 1,
                 Lifecycle::Draining { .. } => sample.draining += 1,
                 Lifecycle::Retired { .. } => {}
@@ -560,6 +703,21 @@ impl<'a> Simulation<'a> {
             // maybe_start_iteration schedules the wake at exactly that
             // time via `next_handoff_ready_ms`.
             self.maybe_start_iteration(d, router);
+        }
+    }
+
+    /// Re-route a prefill-phase request migrated off a draining prefill
+    /// server, through the router's ordinary arrival placement
+    /// (`route_new` — PD routers place prefills synchronously; `None`
+    /// means the router pended it and dispatches it itself). The job
+    /// keeps its original TTFT deadline.
+    fn place_prefill_handoff(&mut self, req_idx: usize, router: &mut dyn Router) {
+        let chosen = router.route_new(self.now, req_idx, &mut self.ctx());
+        if let Some(inst) = chosen {
+            let deadline =
+                self.requests[req_idx].req.arrival_ms + self.requests[req_idx].req.slo.ttft_ms;
+            self.cluster.instances[inst].push_prefill(PrefillJob { req_idx, deadline });
+            self.maybe_start_iteration(inst, router);
         }
     }
 

@@ -17,16 +17,20 @@ pub type TimeMs = u64;
 /// per the paper's example.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Slo {
+    /// Time-to-first-token budget, ms.
     pub ttft_ms: u64,
+    /// Time-per-output-token budget, ms.
     pub tpot_ms: u64,
 }
 
 impl Slo {
+    /// The best-effort marker SLO: no deadlines, excluded from attainment.
     pub const BEST_EFFORT: Slo = Slo {
         ttft_ms: 12 * 3600 * 1000,
         tpot_ms: 12 * 3600 * 1000,
     };
 
+    /// An SLO with the given TTFT and TPOT budgets (ms).
     pub fn new(ttft_ms: u64, tpot_ms: u64) -> Slo {
         Slo { ttft_ms, tpot_ms }
     }
@@ -38,6 +42,7 @@ impl Slo {
         arrival + self.ttft_ms + token_index * self.tpot_ms
     }
 
+    /// Is this the best-effort marker?
     pub fn is_best_effort(&self) -> bool {
         self.tpot_ms >= Slo::BEST_EFFORT.tpot_ms
     }
@@ -50,7 +55,9 @@ impl Slo {
 /// (used by tail-latency diagnostics).
 #[derive(Debug, Clone)]
 pub struct DsloTracker {
+    /// Arrival time the deadlines are anchored to.
     pub arrival: TimeMs,
+    /// The SLO being tracked.
     pub slo: Slo,
     tokens_emitted: u64,
     violated: bool,
@@ -59,6 +66,7 @@ pub struct DsloTracker {
 }
 
 impl DsloTracker {
+    /// Start tracking a request that arrived at `arrival` under `slo`.
     pub fn new(arrival: TimeMs, slo: Slo) -> DsloTracker {
         DsloTracker {
             arrival,
@@ -80,6 +88,7 @@ impl DsloTracker {
         self.tokens_emitted += 1;
     }
 
+    /// Tokens emitted so far.
     pub fn tokens_emitted(&self) -> u64 {
         self.tokens_emitted
     }
@@ -89,6 +98,7 @@ impl DsloTracker {
         !self.violated
     }
 
+    /// Worst slack over all emitted tokens, ms (negative = violation).
     pub fn min_slack_ms(&self) -> i64 {
         if self.tokens_emitted == 0 {
             0

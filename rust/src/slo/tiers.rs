@@ -15,6 +15,7 @@ use crate::util::rng::Rng;
 pub struct SloTier {
     /// Index within the tier set, 0 = tightest.
     pub index: usize,
+    /// The tier's TPOT budget, ms.
     pub tpot_ms: u64,
 }
 
@@ -30,6 +31,7 @@ impl TierSet {
         TierSet::new(vec![20, 30, 50, 100])
     }
 
+    /// Build from TPOT values (sorted and deduped; tightest first).
     pub fn new(mut tpots: Vec<u64>) -> TierSet {
         assert!(!tpots.is_empty(), "empty tier set");
         tpots.sort_unstable();
@@ -37,14 +39,17 @@ impl TierSet {
         TierSet { tpots }
     }
 
+    /// Number of tiers.
     pub fn len(&self) -> usize {
         self.tpots.len()
     }
 
+    /// True when the set has no tiers (never, after `new`).
     pub fn is_empty(&self) -> bool {
         self.tpots.is_empty()
     }
 
+    /// The tier at `index` (0 = tightest).
     pub fn tier(&self, index: usize) -> SloTier {
         SloTier {
             index,
@@ -52,6 +57,7 @@ impl TierSet {
         }
     }
 
+    /// Iterate tiers tightest-first.
     pub fn iter(&self) -> impl Iterator<Item = SloTier> + '_ {
         self.tpots
             .iter()
@@ -59,6 +65,7 @@ impl TierSet {
             .map(|(index, &tpot_ms)| SloTier { index, tpot_ms })
     }
 
+    /// The sorted TPOT values, ms.
     pub fn tpots(&self) -> &[u64] {
         &self.tpots
     }
@@ -85,8 +92,11 @@ impl TierSet {
 /// Sampling distribution over (TTFT, TPOT) pairs, per §5.1.
 #[derive(Debug, Clone)]
 pub struct TierDistribution {
+    /// TTFT choices sampled uniformly, ms.
     pub ttft_choices_ms: Vec<u64>,
+    /// TPOT choices, ms (parallel to `tpot_weights`).
     pub tpot_choices_ms: Vec<u64>,
+    /// Sampling weight per TPOT choice.
     pub tpot_weights: Vec<f64>,
 }
 
@@ -109,6 +119,7 @@ impl TierDistribution {
         }
     }
 
+    /// Draw a (TTFT, TPOT) pair per the §5.1 distribution.
     pub fn sample(&self, rng: &mut Rng) -> Slo {
         let ttft = *rng.pick(&self.ttft_choices_ms);
         let tpot = self.tpot_choices_ms[rng.categorical(&self.tpot_weights)];

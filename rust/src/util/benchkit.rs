@@ -34,17 +34,24 @@ pub fn smoke_scale() -> bool {
 /// Timing statistics for one benchmark case.
 #[derive(Debug, Clone)]
 pub struct Timing {
+    /// Benchmark name.
     pub name: String,
+    /// Iterations timed.
     pub iters: usize,
+    /// Mean iteration time.
     pub mean: Duration,
+    /// Median iteration time.
     pub p50: Duration,
+    /// 99th-percentile iteration time.
     pub p99: Duration,
+    /// Fastest iteration.
     pub min: Duration,
     /// Optional items-per-iteration for throughput reporting.
     pub items_per_iter: Option<f64>,
 }
 
 impl Timing {
+    /// Items per second (`None` without an items-per-iteration count).
     pub fn throughput(&self) -> Option<f64> {
         self.items_per_iter.map(|n| n / self.mean.as_secs_f64())
     }
@@ -59,6 +66,7 @@ pub struct Bench {
 }
 
 impl Bench {
+    /// Start a bench suite (prints the suite header immediately).
     pub fn new(suite: &str) -> Bench {
         println!("\n=== bench suite: {suite} ===");
         Bench {

@@ -9,9 +9,13 @@ use std::collections::BTreeMap;
 /// One option specification.
 #[derive(Debug, Clone)]
 pub struct Opt {
+    /// Option name (without `--`).
     pub name: &'static str,
+    /// Help text.
     pub help: &'static str,
+    /// Default value (`None` for flags).
     pub default: Option<&'static str>,
+    /// Is this a boolean flag?
     pub is_flag: bool,
 }
 
@@ -25,21 +29,27 @@ pub struct Args {
 }
 
 impl Args {
+    /// The raw value of option `name`, if given.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(String::as_str)
     }
+    /// Option value, or `default` when absent.
     pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
+    /// Option value parsed as `f64`, or `default`.
     pub fn f64_or(&self, name: &str, default: f64) -> f64 {
         self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
+    /// Option value parsed as `usize`, or `default`.
     pub fn usize_or(&self, name: &str, default: usize) -> usize {
         self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
+    /// Option value parsed as `u64`, or `default`.
     pub fn u64_or(&self, name: &str, default: u64) -> u64 {
         self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
+    /// Was the boolean flag passed?
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
@@ -47,12 +57,16 @@ impl Args {
 
 /// A subcommand with its options.
 pub struct Command {
+    /// Subcommand name.
     pub name: &'static str,
+    /// One-line description.
     pub about: &'static str,
+    /// Declared options and flags.
     pub opts: Vec<Opt>,
 }
 
 impl Command {
+    /// A new subcommand with a one-line description.
     pub fn new(name: &'static str, about: &'static str) -> Command {
         Command {
             name,
@@ -61,6 +75,7 @@ impl Command {
         }
     }
 
+    /// Declare a valued option with a default and help text.
     pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
         self.opts.push(Opt {
             name,
@@ -71,6 +86,7 @@ impl Command {
         self
     }
 
+    /// Declare a boolean flag with help text.
     pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
         self.opts.push(Opt {
             name,
@@ -142,19 +158,26 @@ impl Command {
 
 /// The top-level application.
 pub struct App {
+    /// Binary name.
     pub name: &'static str,
+    /// One-line description.
     pub about: &'static str,
+    /// Registered subcommands.
     pub commands: Vec<Command>,
 }
 
 /// Result of parsing: which subcommand and its args.
 pub enum Parsed {
+    /// A subcommand invocation with parsed arguments.
     Run { command: String, args: Args },
+    /// Help text to print.
     Help(String),
+    /// A usage error to report.
     Error(String),
 }
 
 impl App {
+    /// A new CLI application.
     pub fn new(name: &'static str, about: &'static str) -> App {
         App {
             name,
@@ -163,11 +186,13 @@ impl App {
         }
     }
 
+    /// Register a subcommand.
     pub fn command(mut self, c: Command) -> Self {
         self.commands.push(c);
         self
     }
 
+    /// Render the top-level usage text.
     pub fn usage(&self) -> String {
         let mut s = format!("{} — {}\n\nUSAGE: {} <command> [options]\n\nCOMMANDS:\n", self.name, self.about, self.name);
         for c in &self.commands {
@@ -176,6 +201,7 @@ impl App {
         s
     }
 
+    /// Parse argv into a command invocation, help request, or error.
     pub fn parse(&self, argv: &[String]) -> Parsed {
         let Some(cmd_name) = argv.first() else {
             return Parsed::Help(self.usage());

@@ -13,15 +13,22 @@ use std::fmt;
 /// deterministic and diffs are stable.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// A boolean.
     Bool(bool),
+    /// A number.
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// An empty JSON object.
     pub fn obj() -> Json {
         Json::Obj(BTreeMap::new())
     }
@@ -37,6 +44,7 @@ impl Json {
         }
     }
 
+    /// Object field lookup.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -44,6 +52,7 @@ impl Json {
         }
     }
 
+    /// Array element lookup.
     pub fn idx(&self, i: usize) -> Option<&Json> {
         match self {
             Json::Arr(v) => v.get(i),
@@ -51,6 +60,7 @@ impl Json {
         }
     }
 
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -58,10 +68,12 @@ impl Json {
         }
     }
 
+    /// Numeric value as `usize`, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
     }
 
+    /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -69,6 +81,7 @@ impl Json {
         }
     }
 
+    /// Boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -76,6 +89,7 @@ impl Json {
         }
     }
 
+    /// Element slice, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -92,10 +106,12 @@ impl Json {
         Some(cur)
     }
 
+    /// A numeric JSON array.
     pub fn from_f64s(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }
 
+    /// All elements as `f64`, if this is a numeric array.
     pub fn to_f64s(&self) -> Option<Vec<f64>> {
         self.as_arr()
             .map(|v| v.iter().filter_map(|x| x.as_f64()).collect())
@@ -211,7 +227,9 @@ fn write_escaped(out: &mut String, s: &str) {
 /// Parse error with byte offset.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct JsonError {
+    /// Byte position of the error.
     pub pos: usize,
+    /// What went wrong.
     pub msg: String,
 }
 

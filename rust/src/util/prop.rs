@@ -12,8 +12,10 @@ use crate::util::rng::Rng;
 
 /// A generator of values of type `T` with optional shrinking.
 pub trait Gen {
+    /// The type of generated values.
     type Value: Clone + std::fmt::Debug;
 
+    /// Draw one value.
     fn generate(&self, rng: &mut Rng) -> Self::Value;
 
     /// Candidate "smaller" values; default: no shrinking.
@@ -24,7 +26,9 @@ pub trait Gen {
 
 /// Uniform integer range (inclusive), shrinking toward `lo`.
 pub struct IntRange {
+    /// Inclusive lower bound.
     pub lo: u64,
+    /// Inclusive upper bound.
     pub hi: u64,
 }
 
@@ -49,7 +53,9 @@ impl Gen for IntRange {
 
 /// Uniform float range, shrinking toward `lo`.
 pub struct FloatRange {
+    /// Inclusive lower bound.
     pub lo: f64,
+    /// Exclusive upper bound.
     pub hi: f64,
 }
 
@@ -73,8 +79,11 @@ impl Gen for FloatRange {
 /// `[min_len, max_len]`. Shrinks by halving length, dropping single
 /// elements, and shrinking individual elements.
 pub struct VecOf<G: Gen> {
+    /// Element generator.
     pub elem: G,
+    /// Minimum length.
     pub min_len: usize,
+    /// Maximum length.
     pub max_len: usize,
 }
 
@@ -135,8 +144,11 @@ impl<A: Gen, B: Gen> Gen for PairOf<A, B> {
 
 /// Map a generator through a function (no shrinking through the map).
 pub struct MapGen<G: Gen, T, F: Fn(G::Value) -> T> {
+    /// Inner generator.
     pub inner: G,
+    /// Mapping function.
     pub f: F,
+    /// Carries the output type.
     pub _marker: std::marker::PhantomData<T>,
 }
 
@@ -151,7 +163,9 @@ impl<G: Gen, T: Clone + std::fmt::Debug, F: Fn(G::Value) -> T> Gen for MapGen<G,
 /// Outcome of a property check.
 #[derive(Debug)]
 pub enum CheckResult<V> {
+    /// Every case passed.
     Pass { cases: usize },
+    /// A case failed (shrunk as far as possible).
     Fail {
         seed: u64,
         case: V,
@@ -162,8 +176,11 @@ pub enum CheckResult<V> {
 
 /// Configuration for the runner.
 pub struct Config {
+    /// Cases to run.
     pub cases: usize,
+    /// Base RNG seed.
     pub seed: u64,
+    /// Shrink-iteration cap.
     pub max_shrink_steps: usize,
 }
 

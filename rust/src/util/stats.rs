@@ -31,16 +31,22 @@ pub const TABLE1_PERCENTILES: [f64; 6] = [25.0, 50.0, 75.0, 90.0, 95.0, 99.0];
 /// Summary of a sample: count, mean, std, min/max and Table-1 percentiles.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Summary {
+    /// Sample size.
     pub count: usize,
+    /// Sample mean.
     pub mean: f64,
+    /// Sample standard deviation.
     pub std: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
     /// p25, p50, p75, p90, p95, p99
     pub percentiles: [f64; 6],
 }
 
 impl Summary {
+    /// Summarize a sample (percentiles by nearest rank on a sorted copy).
     pub fn of(xs: &[f64]) -> Summary {
         assert!(!xs.is_empty(), "summary of empty sample");
         let mut v = xs.to_vec();
@@ -62,9 +68,11 @@ impl Summary {
         }
     }
 
+    /// Median.
     pub fn p50(&self) -> f64 {
         self.percentiles[1]
     }
+    /// 99th percentile.
     pub fn p99(&self) -> f64 {
         self.percentiles[5]
     }
@@ -82,6 +90,7 @@ pub struct Online {
 }
 
 impl Online {
+    /// An empty accumulator.
     pub fn new() -> Online {
         Online {
             n: 0,
@@ -92,6 +101,7 @@ impl Online {
         }
     }
 
+    /// Fold in one observation (Welford update).
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -101,12 +111,15 @@ impl Online {
         self.max = self.max.max(x);
     }
 
+    /// Observations so far.
     pub fn count(&self) -> u64 {
         self.n
     }
+    /// Sample mean (0 when empty).
     pub fn mean(&self) -> f64 {
         self.mean
     }
+    /// Sample variance (0 with fewer than two observations).
     pub fn var(&self) -> f64 {
         if self.n < 2 {
             0.0
@@ -114,16 +127,20 @@ impl Online {
             self.m2 / self.n as f64
         }
     }
+    /// Sample standard deviation.
     pub fn std(&self) -> f64 {
         self.var().sqrt()
     }
+    /// Smallest observation seen.
     pub fn min(&self) -> f64 {
         self.min
     }
+    /// Largest observation seen.
     pub fn max(&self) -> f64 {
         self.max
     }
 
+    /// Fold another accumulator into this one (parallel merge).
     pub fn merge(&mut self, other: &Online) {
         if other.n == 0 {
             return;
@@ -158,6 +175,7 @@ pub struct Histogram {
 }
 
 impl Histogram {
+    /// A histogram over `[lo, hi)` with `nbins` equal buckets.
     pub fn new(lo: f64, hi: f64, nbins: usize) -> Histogram {
         assert!(hi > lo && nbins > 0);
         Histogram {
@@ -170,6 +188,7 @@ impl Histogram {
         }
     }
 
+    /// Count one observation (clamped into the edge buckets).
     pub fn push(&mut self, x: f64) {
         self.count += 1;
         if x < self.lo {
@@ -183,6 +202,7 @@ impl Histogram {
         }
     }
 
+    /// Total observations counted.
     pub fn count(&self) -> u64 {
         self.count
     }

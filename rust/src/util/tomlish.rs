@@ -11,44 +11,55 @@ use std::fmt;
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// A string.
     Str(String),
+    /// A boolean.
     Bool(bool),
+    /// A number.
     Num(f64),
+    /// An array.
     Arr(Vec<Value>),
 }
 
 impl Value {
+    /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Num(x) => Some(*x),
             _ => None,
         }
     }
+    /// Numeric value as `usize`, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
     }
+    /// Boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// Element slice, if this is an array.
     pub fn as_arr(&self) -> Option<&[Value]> {
         match self {
             Value::Arr(v) => Some(v),
             _ => None,
         }
     }
+    /// All elements as `f64`, if numeric.
     pub fn to_f64s(&self) -> Option<Vec<f64>> {
         self.as_arr()
             .map(|v| v.iter().filter_map(Value::as_f64).collect())
     }
+    /// All elements as strings, if this is a string array.
     pub fn to_strs(&self) -> Option<Vec<String>> {
         self.as_arr().map(|v| {
             v.iter()
@@ -65,26 +76,32 @@ pub struct Doc {
 }
 
 impl Doc {
+    /// Dotted-key lookup (`section.key`).
     pub fn get(&self, key: &str) -> Option<&Value> {
         self.map.get(key)
     }
 
+    /// String at `key`, or `default`.
     pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).and_then(Value::as_str).unwrap_or(default)
     }
 
+    /// Number at `key`, or `default`.
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(Value::as_f64).unwrap_or(default)
     }
 
+    /// Number at `key` as `usize`, or `default`.
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(Value::as_usize).unwrap_or(default)
     }
 
+    /// Bool at `key`, or `default`.
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
         self.get(key).and_then(Value::as_bool).unwrap_or(default)
     }
 
+    /// All keys in the document, dotted.
     pub fn keys(&self) -> impl Iterator<Item = &str> {
         self.map.keys().map(String::as_str)
     }
@@ -100,7 +117,9 @@ impl Doc {
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TomlError {
+    /// 1-based line of the error.
     pub line: usize,
+    /// What went wrong.
     pub msg: String,
 }
 

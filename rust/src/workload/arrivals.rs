@@ -30,6 +30,7 @@ pub struct RateSchedule {
 }
 
 impl RateSchedule {
+    /// A single-segment constant-rate schedule.
     pub fn constant(rate_per_s: f64) -> RateSchedule {
         RateSchedule {
             segments: vec![(0, rate_per_s)],
@@ -66,6 +67,7 @@ impl RateSchedule {
         RateSchedule { segments }
     }
 
+    /// The scheduled rate at time `t` (the last segment extends forever).
     pub fn rate_at(&self, t: TimeMs) -> f64 {
         let mut rate = self.segments[0].1;
         for &(start, r) in &self.segments {

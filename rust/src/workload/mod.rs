@@ -15,7 +15,9 @@ pub type RequestId = u64;
 /// A serving request as the router sees it.
 #[derive(Debug, Clone)]
 pub struct Request {
+    /// Unique request id.
     pub id: RequestId,
+    /// Arrival time, ms.
     pub arrival_ms: TimeMs,
     /// Prompt length in tokens (the paper's `p`).
     pub prefill_len: u32,
@@ -23,6 +25,7 @@ pub struct Request {
     /// *simulator* for ground truth; the router must not read it and
     /// instead predicts with the tier average (§4.5).
     pub decode_len: u32,
+    /// The request's sampled SLO.
     pub slo: Slo,
 }
 
@@ -42,14 +45,17 @@ impl Request {
 /// A complete workload: requests sorted by arrival time.
 #[derive(Debug, Clone, Default)]
 pub struct Workload {
+    /// Requests in arrival order.
     pub requests: Vec<Request>,
 }
 
 impl Workload {
+    /// Number of requests.
     pub fn len(&self) -> usize {
         self.requests.len()
     }
 
+    /// True when the workload holds no requests.
     pub fn is_empty(&self) -> bool {
         self.requests.is_empty()
     }

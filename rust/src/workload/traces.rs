@@ -17,17 +17,26 @@ use crate::util::rng::{PiecewiseInverseCdf, Rng};
 /// The eight traces of Table 1.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum TraceKind {
+    /// Synthetic: uniform 4096-token prompts, 1024-token outputs.
     Uniform4096x1024,
+    /// Synthetic: uniform 512-token prompts and outputs.
     Uniform512x512,
+    /// Mooncake conversation trace (percentile fit).
     MooncakeConversation,
+    /// Mooncake synthetic trace (percentile fit).
     MooncakeSynthetic,
+    /// Mooncake tool/agent trace (percentile fit).
     MooncakeToolagent,
+    /// LMSYS-Chat trace (percentile fit).
     Lmsys,
+    /// ShareGPT trace (percentile fit).
     ShareGpt,
+    /// Splitwise trace (percentile fit).
     Splitwise,
 }
 
 impl TraceKind {
+    /// Every trace kind, in config-name order.
     pub const ALL: [TraceKind; 8] = [
         TraceKind::Uniform4096x1024,
         TraceKind::Uniform512x512,
@@ -39,6 +48,7 @@ impl TraceKind {
         TraceKind::Splitwise,
     ];
 
+    /// Config/CLI name of this trace.
     pub fn name(&self) -> &'static str {
         match self {
             TraceKind::Uniform4096x1024 => "uniform_4096_1024",
@@ -52,6 +62,7 @@ impl TraceKind {
         }
     }
 
+    /// Parse a config/CLI trace name.
     pub fn from_name(name: &str) -> Option<TraceKind> {
         TraceKind::ALL.iter().copied().find(|t| t.name() == name)
     }
@@ -106,6 +117,7 @@ const KNOT_QS: [f64; 6] = [0.25, 0.50, 0.75, 0.90, 0.95, 0.99];
 /// Samples (prefill, decode) lengths for a trace.
 #[derive(Debug, Clone)]
 pub struct TraceGenerator {
+    /// Which trace this generator samples.
     pub kind: TraceKind,
     input_cdf: Option<PiecewiseInverseCdf>,
     output_cdf: Option<PiecewiseInverseCdf>,
@@ -113,6 +125,7 @@ pub struct TraceGenerator {
 }
 
 impl TraceGenerator {
+    /// A generator for the given trace kind.
     pub fn new(kind: TraceKind) -> TraceGenerator {
         let knots = |ks: [f64; 6]| {
             PiecewiseInverseCdf::new(KNOT_QS.iter().copied().zip(ks).collect())

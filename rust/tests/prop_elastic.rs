@@ -8,12 +8,15 @@
 
 use polyserve::analysis::ServingMode;
 use polyserve::config::{DiurnalSpec, Policy, ScalerKind, SimConfig};
-use polyserve::coordinator::{Autoscaler, PolyServeRouter, RouteCtx, Router, ScaleAction};
+use polyserve::coordinator::{
+    make_router, Autoscaler, GradientAutoscaler, PolyServeRouter, RouteCtx, Router, ScaleAction,
+};
 use polyserve::figures::{run_sim, Experiment};
 use polyserve::model::CostModel;
 use polyserve::profile::ProfileTable;
 use polyserve::sim::{
-    Cluster, ElasticParams, PrefillJob, Role, SimParams, SimRequest, SimResult, Simulation,
+    Cluster, ElasticParams, PrefillElastic, PrefillJob, Role, SimParams, SimRequest, SimResult,
+    Simulation,
 };
 use polyserve::slo::{DsloTracker, Slo, TimeMs};
 use polyserve::util::prop::{check, Gen, IntRange, VecOf};
@@ -136,8 +139,10 @@ fn elastic_runs_complete_and_stay_bounded() {
     let cells: &[(ServingMode, ScalerKind, Policy, bool)] = &[
         (ServingMode::Colocated, ScalerKind::Gradient, Policy::PolyServe, true),
         (ServingMode::Colocated, ScalerKind::Threshold, Policy::PolyServe, false),
+        (ServingMode::Colocated, ScalerKind::Predictive, Policy::PolyServe, true),
         (ServingMode::PdDisaggregated, ScalerKind::Gradient, Policy::PolyServe, true),
         (ServingMode::PdDisaggregated, ScalerKind::Threshold, Policy::Minimal, false),
+        (ServingMode::PdDisaggregated, ScalerKind::Predictive, Policy::PolyServe, true),
     ];
     for &(mode, scaler, policy, diurnal) in cells {
         let mut cfg = SimConfig {
@@ -174,6 +179,12 @@ fn elastic_runs_complete_and_stay_bounded() {
             "{label}: bill exceeds fleet-lifetime bound"
         );
         assert!(res.cost.goodput_tokens <= res.cost.tokens_total, "{label}");
+        // Only the predictive policy records a rate series.
+        if scaler == ScalerKind::Predictive {
+            assert!(!res.fleet.rates.is_empty(), "{label}: no rate samples");
+        } else {
+            assert!(res.fleet.rates.is_empty(), "{label}: unexpected rate samples");
+        }
     }
 }
 
@@ -489,6 +500,7 @@ fn long_decode_drain_run(migration_cfg: bool, propose_migrate: bool) -> SimResul
             provision_delay_ms: 1_000,
             scale_eval_ms: 500,
             migration: migration_cfg,
+            prefill: None,
         }),
         ..Default::default()
     };
@@ -550,6 +562,251 @@ fn migration_off_reproduces_wait_drain_bit_for_bit() {
     assert_eq!(a.cost.active_instance_ms, b.cost.active_instance_ms);
     assert_eq!(a.migration, b.migration);
     assert_eq!(a.migration.migrated_requests, 0);
+}
+
+// ---------------------------------------------------------------------
+// Elastic-prefill properties (PR 3).
+// ---------------------------------------------------------------------
+
+/// Drains the most-queued *prefill* server exactly once at `at_ms` —
+/// the deterministic harness for the prefill-drain path.
+struct DrainPrefillOnce {
+    at_ms: TimeMs,
+    migrate: bool,
+    fired: bool,
+}
+
+impl Autoscaler for DrainPrefillOnce {
+    fn evaluate(&mut self, now: TimeMs, ctx: &mut RouteCtx) -> Vec<ScaleAction> {
+        if self.fired || now < self.at_ms {
+            return Vec::new();
+        }
+        let target = ctx
+            .cluster
+            .instances
+            .iter()
+            .filter(|i| i.role == Role::Prefill && i.lifecycle.accepts_work())
+            .max_by_key(|i| i.queued_prefill_tokens(ctx.requests))
+            .map(|i| (i.id, i.queued_prefill_tokens(ctx.requests)));
+        match target {
+            Some((inst, queued)) if queued > 0 => {
+                self.fired = true;
+                vec![ScaleAction::Drain { inst, migrate: self.migrate }]
+            }
+            _ => Vec::new(),
+        }
+    }
+
+    fn name(&self) -> String {
+        "drain-prefill-once".into()
+    }
+}
+
+/// One controlled prefill-drain run: 12 requests with 4000-token
+/// prompts on a 2-prefill + 2-decode fleet, the most-queued prefill
+/// server drained at t=200 ms while its queue is full.
+fn prefill_drain_run(migration_cfg: bool) -> SimResult {
+    let cm = CostModel::h200_llama8b();
+    let profile = ProfileTable::from_cost_model(&cm);
+    let cfg = SimConfig {
+        mode: ServingMode::PdDisaggregated,
+        ..Default::default()
+    };
+    let workload = Workload {
+        requests: (0..12u64)
+            .map(|i| Request {
+                id: i,
+                arrival_ms: i * 5,
+                prefill_len: 4_000,
+                decode_len: 50,
+                slo: Slo::new(8_000, 100),
+            })
+            .collect(),
+    };
+    let cluster =
+        Cluster::build(ServingMode::PdDisaggregated, 4, 0.5, cfg.tiers.len(), &cm, true);
+    let params = SimParams {
+        mode: ServingMode::PdDisaggregated,
+        elastic: Some(ElasticParams {
+            min_instances: 1,
+            max_instances: 4,
+            provision_delay_ms: 1_000,
+            scale_eval_ms: 100,
+            migration: migration_cfg,
+            prefill: Some(PrefillElastic { min_instances: 1, max_instances: 4 }),
+        }),
+        ..Default::default()
+    };
+    let sim = Simulation::new(params, cm.clone(), &profile, &workload, cluster, &cfg.tiers);
+    let mut router = PolyServeRouter::new(&cfg, workload.avg_decode_len());
+    let mut scaler = DrainPrefillOnce { at_ms: 200, migrate: true, fired: false };
+    sim.run_elastic(&mut router, Some(&mut scaler))
+}
+
+/// Draining a prefill server with migration re-routes its queued jobs
+/// (partially-prefilled KV streams off first, progress is never applied
+/// twice) and every request still emits exactly its `decode_len`
+/// tokens; wait-drain finishes the queue in place, strictly slower.
+#[test]
+fn prefill_drain_migrates_queued_jobs_and_conserves_work() {
+    let on = prefill_drain_run(true);
+    let off = prefill_drain_run(false);
+    for (label, res) in [("on", &on), ("off", &off)] {
+        assert_eq!(res.unfinished, 0, "migration={label}: unfinished requests");
+        for o in &res.outcomes {
+            assert_eq!(
+                o.tokens, 50,
+                "migration={label}: request {} emitted {} of 50 tokens",
+                o.id, o.tokens
+            );
+        }
+        assert_eq!(res.migration.drains(), 1, "migration={label}: expected one drain");
+    }
+    assert!(
+        on.migration.migrated_prefill_jobs > 0,
+        "queued prefill jobs must be re-routed"
+    );
+    assert_eq!(on.migration.migrated_requests, 0, "no decode resident on a prefill server");
+    assert_eq!(off.migration.migrated_prefill_jobs, 0);
+    assert_eq!(off.migration.migrated_kv_tokens, 0);
+    let (on_ms, off_ms) = (
+        on.migration.mean_drain_latency_ms(),
+        off.migration.mean_drain_latency_ms(),
+    );
+    assert!(
+        on_ms < off_ms,
+        "prefill migration must shorten the drain: on={on_ms} ms vs off={off_ms} ms"
+    );
+}
+
+/// Property (3) of the predictive-scaler spec: with `prefill_elastic`
+/// off, the config-driven elastic run is bit-for-bit the PR 2 path — a
+/// hand-built simulation with `prefill: None` and the plain gradient
+/// scaler produces identical outcomes, billing, and migration stats.
+#[test]
+fn prefill_elastic_off_is_bit_for_bit_pr2() {
+    let mut cfg = SimConfig {
+        trace: TraceKind::ShareGpt,
+        policy: Policy::PolyServe,
+        mode: ServingMode::PdDisaggregated,
+        instances: 6,
+        requests: 400,
+        rate_frac_of_optimal: 0.5,
+        seed: 13,
+        ..Default::default()
+    };
+    cfg.diurnal = Some(DiurnalSpec { peak_to_trough: 3.0, period_s: 120.0 });
+    cfg.elastic.scaler = ScalerKind::Gradient;
+    cfg.elastic.min_instances = 2;
+    cfg.elastic.max_instances = 10;
+    cfg.elastic.provision_delay_ms = 5_000;
+    cfg.elastic.scale_eval_ms = 1_000;
+    cfg.elastic.migration = true;
+    assert!(!cfg.elastic.prefill_elastic, "default must be off");
+    let exp = Experiment::prepare(&cfg);
+    let via_config = exp.run();
+
+    // The PR 2 shape, built by hand: ElasticParams without a prefill
+    // tier, gradient scaler without the prefill extension.
+    let cluster = Cluster::build(
+        exp.cfg.mode,
+        exp.cfg.instances,
+        exp.cfg.prefill_frac,
+        exp.cfg.tiers.len(),
+        &exp.cost_model,
+        true,
+    );
+    let params = SimParams {
+        mode: exp.cfg.mode,
+        elastic: Some(ElasticParams {
+            min_instances: 2,
+            max_instances: 10,
+            provision_delay_ms: 5_000,
+            scale_eval_ms: 1_000,
+            migration: true,
+            prefill: None,
+        }),
+        ..Default::default()
+    };
+    let sim = Simulation::new(
+        params,
+        exp.cost_model.clone(),
+        &exp.profile,
+        &exp.workload,
+        cluster,
+        &exp.cfg.tiers,
+    );
+    let mut router = make_router(&exp.cfg, exp.workload.avg_decode_len());
+    let mut scaler = GradientAutoscaler::new(exp.cfg.tiers.clone());
+    let by_hand = sim.run_elastic(router.as_mut(), Some(&mut scaler));
+
+    assert_eq!(via_config.outcomes.len(), by_hand.outcomes.len());
+    for (x, y) in via_config.outcomes.iter().zip(&by_hand.outcomes) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.first_token_ms, y.first_token_ms);
+        assert_eq!(x.finish_ms, y.finish_ms);
+        assert_eq!(x.tokens, y.tokens);
+        assert_eq!(x.attained, y.attained);
+    }
+    assert_eq!(via_config.sim_span_ms, by_hand.sim_span_ms);
+    assert_eq!(via_config.cost.instance_busy_ms, by_hand.cost.instance_busy_ms);
+    assert_eq!(via_config.cost.active_instance_ms, by_hand.cost.active_instance_ms);
+    assert_eq!(via_config.migration, by_hand.migration);
+    assert_eq!(via_config.migration.migrated_prefill_jobs, 0);
+    // The prefill tier never moved in either run.
+    let pf: Vec<usize> = via_config.fleet.samples.iter().map(|s| s.active_prefill).collect();
+    assert!(pf.windows(2).all(|w| w[0] == w[1]), "static prefill tier changed size");
+}
+
+/// Full-system property: a diurnal PD run under the *predictive* scaler
+/// with elastic prefill and migration on completes every request with
+/// exact per-request token counts, records the predicted-vs-observed
+/// rate series, and never drains the prefill tier below its floor.
+#[test]
+fn predictive_prefill_elastic_run_completes_with_exact_tokens() {
+    let mut cfg = SimConfig {
+        trace: TraceKind::ShareGpt,
+        policy: Policy::PolyServe,
+        mode: ServingMode::PdDisaggregated,
+        instances: 8,
+        requests: 600,
+        rate_frac_of_optimal: 0.5,
+        seed: 7,
+        ..Default::default()
+    };
+    cfg.diurnal = Some(DiurnalSpec { peak_to_trough: 3.0, period_s: 120.0 });
+    cfg.elastic.scaler = ScalerKind::Predictive;
+    cfg.elastic.min_instances = 2;
+    cfg.elastic.max_instances = 12;
+    cfg.elastic.provision_delay_ms = 5_000;
+    cfg.elastic.scale_eval_ms = 1_000;
+    cfg.elastic.migration = true;
+    cfg.elastic.prefill_elastic = true;
+    cfg.elastic.prefill_min = 1;
+    cfg.elastic.prefill_max = 6;
+    let exp = Experiment::prepare(&cfg);
+    let decode_len: HashMap<u64, u32> = exp
+        .workload
+        .requests
+        .iter()
+        .map(|r| (r.id, r.decode_len))
+        .collect();
+    let res = exp.run();
+    assert_eq!(res.unfinished, 0);
+    assert_eq!(res.cost.requests_served, 600);
+    for o in &res.outcomes {
+        assert_eq!(
+            o.tokens,
+            decode_len[&o.id] as u64,
+            "request {} token count drifted across migration",
+            o.id
+        );
+    }
+    assert!(!res.fleet.rates.is_empty(), "predictive run must record rate samples");
+    assert!(
+        res.fleet.samples.iter().all(|s| s.active_prefill >= 1),
+        "prefill tier drained below its floor"
+    );
 }
 
 /// Full-system property: an elastic diurnal run with the gradient

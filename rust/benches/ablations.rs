@@ -1,11 +1,21 @@
 //! Ablations: flip each PolyServe mechanism (§4) off individually and
 //! measure goodput@90% — quantifies what each design choice buys.
+//!
+//! The (mode × variant) grid fans out across the thread pool via
+//! `par_map` (each cell sweeps its rate fractions serially inside one
+//! worker); `par_map` preserves input order, so the rows print
+//! deterministically regardless of scheduling.
 
 use polyserve::analysis::ServingMode;
 use polyserve::config::{Features, Policy, SimConfig};
 use polyserve::figures::attainment_curve;
 use polyserve::util::benchkit::{f, full_scale, Bench};
+use polyserve::util::threadpool::par_map;
 use polyserve::workload::TraceKind;
+
+/// Feature tweak per ablation row — plain `fn` pointers so cells are
+/// `Send` for the parallel map.
+type Tweak = fn(&mut Features);
 
 fn main() {
     let mut bench = Bench::new("ablations");
@@ -13,49 +23,58 @@ fn main() {
     let fracs = [0.7, 0.9, 1.05, 1.2, 1.35, 1.5, 1.7];
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
 
-    let variants: Vec<(&str, Box<dyn Fn(&mut Features)>)> = vec![
-        ("full PolyServe", Box::new(|_f: &mut Features| {})),
-        ("no load gradient (least-loaded)", Box::new(|f| f.load_gradient = false)),
-        ("no lazy promotion", Box::new(|f| f.lazy_promotion = false)),
-        (
-            "eager promotion",
-            Box::new(|f| {
-                f.lazy_promotion = false;
-                f.eager_promotion = true;
-            }),
-        ),
-        ("no wait-time awareness", Box::new(|f| f.wait_time_aware = false)),
-        ("no dynamic chunking", Box::new(|f| f.dynamic_chunking = false)),
-        (
-            "no continuous chunk prediction",
-            Box::new(|f| f.continuous_chunk_prediction = false),
-        ),
+    let variants: Vec<(&'static str, Tweak)> = vec![
+        ("full PolyServe", |_f: &mut Features| {}),
+        ("no load gradient (least-loaded)", |f: &mut Features| {
+            f.load_gradient = false;
+        }),
+        ("no lazy promotion", |f: &mut Features| f.lazy_promotion = false),
+        ("eager promotion", |f: &mut Features| {
+            f.lazy_promotion = false;
+            f.eager_promotion = true;
+        }),
+        ("no wait-time awareness", |f: &mut Features| {
+            f.wait_time_aware = false;
+        }),
+        ("no dynamic chunking", |f: &mut Features| {
+            f.dynamic_chunking = false;
+        }),
+        ("no continuous chunk prediction", |f: &mut Features| {
+            f.continuous_chunk_prediction = false;
+        }),
     ];
 
-    let mut rows = Vec::new();
+    let mut cells: Vec<(ServingMode, &'static str, Tweak)> = Vec::new();
     for mode in [ServingMode::PdDisaggregated, ServingMode::Colocated] {
-        for (name, tweak) in &variants {
-            let mut cfg = SimConfig {
-                trace: TraceKind::ShareGpt,
-                mode,
-                policy: Policy::PolyServe,
-                requests,
-                ..Default::default()
-            };
-            tweak(&mut cfg.features);
-            if cfg.validate().is_err() {
-                continue;
-            }
-            let (curve, opt) = attainment_curve(&cfg, &fracs, threads);
-            let g = curve.goodput_at(0.9).unwrap_or(0.0);
-            rows.push(vec![
-                mode.name().into(),
-                name.to_string(),
-                f(g, 1),
-                f(100.0 * g / opt.max(1e-9), 1),
-            ]);
+        for &(name, tweak) in &variants {
+            cells.push((mode, name, tweak));
         }
     }
+    let results = par_map(cells, threads, move |_, (mode, name, tweak)| {
+        let mut cfg = SimConfig {
+            trace: TraceKind::ShareGpt,
+            mode,
+            policy: Policy::PolyServe,
+            requests,
+            ..Default::default()
+        };
+        tweak(&mut cfg.features);
+        if cfg.validate().is_err() {
+            return None;
+        }
+        // Inner sweep serial (threads = 1): the outer fan-out already
+        // saturates the pool.
+        let (curve, opt) = attainment_curve(&cfg, &fracs, 1);
+        let g = curve.goodput_at(0.9).unwrap_or(0.0);
+        Some(vec![
+            mode.name().into(),
+            name.to_string(),
+            f(g, 1),
+            f(100.0 * g / opt.max(1e-9), 1),
+        ])
+    });
+
+    let rows: Vec<Vec<String>> = results.into_iter().flatten().collect();
     bench.table(
         "Ablations: goodput@90% per disabled mechanism (sharegpt, 20 inst)",
         &["mode", "variant", "goodput_rps", "%of_optimal"],

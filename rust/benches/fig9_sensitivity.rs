@@ -1,11 +1,17 @@
 //! Fig 9 reproduction: per-instance goodput as the fleet grows from 8
 //! to 64 instances (uniform_4096_1024 trace) — per-instance goodput
 //! rises with scale as tier fragmentation amortizes.
+//!
+//! The (mode × policy × fleet size) grid fans out via `par_map` (each
+//! cell sweeps its rate fractions serially inside one worker);
+//! `par_map` preserves input order, so the rows print
+//! deterministically.
 
 use polyserve::analysis::ServingMode;
 use polyserve::config::{Policy, SimConfig};
 use polyserve::figures::attainment_curve;
 use polyserve::util::benchkit::{f, full_scale, Bench};
+use polyserve::util::threadpool::par_map;
 use polyserve::workload::TraceKind;
 
 fn main() {
@@ -15,30 +21,35 @@ fn main() {
     let fracs = [0.6, 0.8, 1.0, 1.2, 1.4, 1.6];
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
 
-    let mut rows = Vec::new();
+    let mut cells: Vec<(ServingMode, Policy, usize)> = Vec::new();
     for mode in [ServingMode::PdDisaggregated, ServingMode::Colocated] {
         for policy in [Policy::PolyServe, Policy::Minimal] {
             for &n in &sizes {
-                let cfg = SimConfig {
-                    trace: TraceKind::Uniform4096x1024,
-                    mode,
-                    policy,
-                    instances: n,
-                    requests,
-                    ..Default::default()
-                };
-                let (curve, _opt) = attainment_curve(&cfg, &fracs, threads);
-                let g = curve.goodput_at(0.9).unwrap_or(0.0);
-                rows.push(vec![
-                    mode.name().into(),
-                    policy.label(mode),
-                    n.to_string(),
-                    f(g, 2),
-                    f(g / n as f64, 3),
-                ]);
+                cells.push((mode, policy, n));
             }
         }
     }
+    let rows = par_map(cells, threads, move |_, (mode, policy, n)| {
+        let cfg = SimConfig {
+            trace: TraceKind::Uniform4096x1024,
+            mode,
+            policy,
+            instances: n,
+            requests,
+            ..Default::default()
+        };
+        // Inner sweep serial: the outer fan-out already saturates the
+        // pool.
+        let (curve, _opt) = attainment_curve(&cfg, &fracs, 1);
+        let g = curve.goodput_at(0.9).unwrap_or(0.0);
+        vec![
+            mode.name().into(),
+            policy.label(mode),
+            n.to_string(),
+            f(g, 2),
+            f(g / n as f64, 3),
+        ]
+    });
     bench.table(
         "Fig 9: per-instance goodput vs fleet size (uniform_4096_1024)",
         &["mode", "policy", "instances", "goodput_rps", "per_instance_rps"],

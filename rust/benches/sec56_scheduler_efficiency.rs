@@ -3,6 +3,10 @@
 //! a *real* timing benchmark of the Rust scheduler hot path (the paper
 //! measures its C++ scheduler at 4825 req/s per server, >100 servers in
 //! real time).
+//!
+//! The (fleet size / shard count) fixtures are built in parallel via
+//! `par_map`; the timing loops themselves stay strictly serial so pool
+//! contention never skews the measured routing latency.
 
 use polyserve::analysis::ServingMode;
 use polyserve::config::SimConfig;
@@ -13,6 +17,7 @@ use polyserve::sim::{Cluster, SimRequest};
 use polyserve::slo::{DsloTracker, Slo};
 use polyserve::util::benchkit::Bench;
 use polyserve::util::rng::Rng;
+use polyserve::util::threadpool::par_map;
 use polyserve::workload::Request;
 
 /// Build a loaded cluster + request population for routing timing.
@@ -38,7 +43,7 @@ fn setup(n_servers: usize, seed: u64) -> (Cluster, Vec<SimRequest>) {
         .collect();
     for (di, &id) in decode_ids.iter().enumerate() {
         let k = di % 4;
-        cluster.assign[id] = polyserve::sim::TierAssign::Tier(k);
+        cluster.set_assign(id, polyserve::sim::TierAssign::Tier(k));
         for _ in 0..40 {
             let p = rng.range_u64(16, 2000) as u32;
             let d = rng.range_u64(16, 800) as u32;
@@ -54,10 +59,9 @@ fn setup(n_servers: usize, seed: u64) -> (Cluster, Vec<SimRequest>) {
                 finish_ms: None,
                 decode_instance: Some(id),
             });
-            cluster.instances[id].running.push(polyserve::sim::instance::RunningReq {
-                req_idx: idx,
-                paused: false,
-            });
+            // Cache-coherent residency: keeps the O(1) load counters in
+            // sync (pushing `running` directly would desync them).
+            cluster.instances[id].push_running(idx, &requests);
         }
     }
     // Fresh decode-phase requests to route.
@@ -83,9 +87,13 @@ fn setup(n_servers: usize, seed: u64) -> (Cluster, Vec<SimRequest>) {
 fn main() {
     let mut bench = Bench::new("sec56");
     let profile = ProfileTable::from_cost_model(&CostModel::h200_llama8b());
-    for &n_servers in &[10usize, 20, 50, 100, 200] {
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+
+    // Fixtures in parallel, timing serial.
+    let sizes = vec![10usize, 20, 50, 100, 200];
+    let setups = par_map(sizes, threads, |_, n| (n, setup(n, 42)));
+    for (n_servers, (mut cluster, mut requests)) in setups {
         let cfg = SimConfig::default();
-        let (mut cluster, mut requests) = setup(n_servers, 42);
         let mut router = PolyServeRouter::new(&cfg, 300.0);
         let fresh_start = requests.len() - 4096;
         let mut i = 0usize;
@@ -104,9 +112,10 @@ fn main() {
                 let idx = fresh_start + (i % 4096);
                 i += 1;
                 let target = router.route_decode(1_000, idx, &mut ctx);
-                // Undo state mutation so the cluster stays steady.
+                // Undo state mutation so the cluster stays steady
+                // (cache-coherently: the handoff KV counter resets too).
                 if let Some(t) = target {
-                    ctx.cluster.instances[t].decode_queue.clear();
+                    ctx.cluster.instances[t].clear_decode_queue();
                 }
                 std::hint::black_box(target);
             },
@@ -114,10 +123,11 @@ fn main() {
     }
     // §5.6 scale-out: "PolyServe can further scale by introducing more
     // schedulers that manage independent servers" — sharded routing at
-    // 200 servers.
-    for &shards in &[1usize, 2, 4, 8] {
+    // 200 servers. Fixtures again built in parallel.
+    let shard_counts = vec![1usize, 2, 4, 8];
+    let sharded_setups = par_map(shard_counts, threads, |_, shards| (shards, setup(200, 42)));
+    for (shards, (mut cluster, mut requests)) in sharded_setups {
         let cfg = SimConfig::default();
-        let (mut cluster, mut requests) = setup(200, 42);
         let mut router = ShardedRouter::new(&cfg, 300.0, shards);
         let fresh_start = requests.len() - 4096;
         let mut i = 0usize;
@@ -137,7 +147,7 @@ fn main() {
                 i += 1;
                 let target = router.route_decode(1_000, idx, &mut ctx);
                 if let Some(t) = target {
-                    ctx.cluster.instances[t].decode_queue.clear();
+                    ctx.cluster.instances[t].clear_decode_queue();
                 }
                 std::hint::black_box(target);
             },

@@ -1,0 +1,297 @@
+//! Simulator-throughput benchmark: the first point of the repo's perf
+//! trajectory (`BENCH_sim_perf.json` at the repo root).
+//!
+//! Sweeps large-fleet, high-rate scenarios and reports **simulated
+//! events per second of wall clock** and wall clock per cell. Every
+//! scenario runs twice — once on the indexed/cached hot path (this
+//! PR) and once through the scan-based reference path
+//! (`Experiment::scan_reference`), which restores the pre-PR
+//! O(fleet × batch)-per-event membership scans and per-candidate
+//! resident rescans (the dominant hot-path costs; the PR's satellite
+//! micro-optimizations — pending short-circuit, sweep narrowing,
+//! scratch reuse — stay active in both paths, so the reported ratio
+//! is a *conservative floor* on the true pre-PR speedup). Both runs
+//! simulate identical workload bytes, and a digest over every
+//! per-request outcome is asserted equal between the two paths in
+//! *all* modes: the optimization must be decision-identical, not just
+//! fast.
+//!
+//! Scenarios fan out via `par_map`, but a scenario's indexed and scan
+//! halves are timed back-to-back *inside one worker* — the ratio
+//! never compares cells that ran under different pool contention.
+//! The per-event debug audit is disabled in the timed runs — with it
+//! the bench would measure the audit's own full scans
+//! ([profile.bench] keeps debug-assertions on).
+//!
+//! `POLYSERVE_SMOKE=1` shrinks the sweep and hard-asserts the CI gate:
+//! events/sec > 0 in every cell, every cell finishes all requests,
+//! the digests match, and `BENCH_sim_perf.json` is emitted and parses.
+
+use polyserve::analysis::ServingMode;
+use polyserve::config::{DiurnalSpec, Policy, ScalerKind, SimConfig};
+use polyserve::figures::Experiment;
+use polyserve::sim::SimResult;
+use polyserve::util::benchkit::{f, fmt_count, full_scale, smoke_scale, Bench};
+use polyserve::util::json::Json;
+use polyserve::util::threadpool::par_map;
+use polyserve::workload::TraceKind;
+use std::time::Instant;
+
+#[derive(Clone, Copy)]
+struct Scenario {
+    name: &'static str,
+    mode: ServingMode,
+    instances: usize,
+    requests: usize,
+    /// Gradient-elastic diurnal cell (exercises ScaleEval, lifecycle
+    /// churn, and migration on top of routing).
+    elastic: bool,
+}
+
+#[derive(Clone, Copy)]
+struct Cell {
+    scenario: Scenario,
+    /// true = pre-PR scan-based reference path.
+    scan: bool,
+}
+
+struct CellOut {
+    events: u64,
+    wall_s: f64,
+    sim_span_ms: u64,
+    attain: f64,
+    unfinished: usize,
+    digest: u64,
+}
+
+/// FNV-1a over every per-request outcome plus the run totals: any
+/// scheduling divergence between the indexed and scan paths flips it.
+fn digest(res: &SimResult) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |x: u64| {
+        h ^= x;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    for o in &res.outcomes {
+        mix(o.id);
+        mix(o.first_token_ms.unwrap_or(u64::MAX));
+        mix(o.finish_ms.unwrap_or(u64::MAX));
+        mix(o.tokens);
+        mix(o.attained as u64);
+        mix(o.min_slack_ms as u64);
+    }
+    mix(res.sim_span_ms);
+    mix(res.cost.instance_busy_ms);
+    mix(res.cost.active_instance_ms);
+    h
+}
+
+fn run_cell(c: &Cell) -> CellOut {
+    let s = c.scenario;
+    let mut cfg = SimConfig {
+        trace: TraceKind::ShareGpt,
+        mode: s.mode,
+        policy: Policy::PolyServe,
+        instances: s.instances,
+        requests: s.requests,
+        rate_frac_of_optimal: 0.75,
+        seed: 2607,
+        ..Default::default()
+    };
+    if s.elastic {
+        cfg.diurnal = Some(DiurnalSpec { peak_to_trough: 3.0, period_s: 300.0 });
+        cfg.elastic.scaler = ScalerKind::Gradient;
+        cfg.elastic.min_instances = (s.instances / 3).max(2);
+        cfg.elastic.max_instances = s.instances + (s.instances / 4).max(1);
+        cfg.elastic.provision_delay_ms = 10_000;
+        cfg.elastic.scale_eval_ms = 1_000;
+        cfg.elastic.migration = true;
+    }
+    // Experiment::prepare is deterministic in cfg, so the scan and
+    // indexed halves of a pair simulate identical workload bytes.
+    let mut exp = Experiment::prepare(&cfg);
+    exp.scan_reference = c.scan;
+    exp.debug_audit = false; // timing: don't measure the audit itself
+    let t0 = Instant::now();
+    let res = exp.run();
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    CellOut {
+        events: res.events_processed,
+        wall_s,
+        sim_span_ms: res.sim_span_ms,
+        attain: res.attainment.overall(),
+        unfinished: res.unfinished,
+        digest: digest(&res),
+    }
+}
+
+fn main() {
+    // Suite "sim" + table "perf" → results/sim_perf.csv.
+    let mut bench = Bench::new("sim");
+    let full = full_scale();
+    let smoke = smoke_scale();
+    let pd = ServingMode::PdDisaggregated;
+    let co = ServingMode::Colocated;
+    let cell = |name, mode, instances, requests, elastic| Scenario {
+        name,
+        mode,
+        instances,
+        requests,
+        elastic,
+    };
+    let scenarios: Vec<Scenario> = if smoke {
+        vec![
+            cell("pd_smoke", pd, 10, 500, false),
+            cell("co_elastic_smoke", co, 8, 400, true),
+        ]
+    } else if full {
+        vec![
+            cell("pd_large", pd, 96, 30_000, false),
+            cell("co_large", co, 96, 30_000, false),
+            cell("pd_xl", pd, 192, 40_000, false),
+            cell("pd_elastic", pd, 64, 20_000, true),
+        ]
+    } else {
+        vec![
+            cell("pd_large", pd, 64, 6_000, false),
+            cell("co_large", co, 64, 6_000, false),
+            cell("pd_xl", pd, 160, 8_000, false),
+            cell("pd_elastic", pd, 48, 5_000, true),
+        ]
+    };
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+
+    // One par_map item per scenario; each worker times its indexed and
+    // scan halves back-to-back so the pair shares identical pool
+    // contention and the speedup ratio is reproducible.
+    let pairs: Vec<(Scenario, CellOut, CellOut)> =
+        par_map(scenarios.clone(), threads, move |_, scenario| {
+            let indexed = run_cell(&Cell { scenario, scan: false });
+            let scan = run_cell(&Cell { scenario, scan: true });
+            (scenario, indexed, scan)
+        });
+    let results: Vec<(Cell, &CellOut)> = pairs
+        .iter()
+        .flat_map(|(s, indexed, scan)| {
+            [
+                (Cell { scenario: *s, scan: false }, indexed),
+                (Cell { scenario: *s, scan: true }, scan),
+            ]
+        })
+        .collect();
+
+    let mut rows = Vec::new();
+    for (c, r) in &results {
+        rows.push(vec![
+            c.scenario.name.to_string(),
+            c.scenario.mode.name().to_string(),
+            if c.scan { "scan" } else { "indexed" }.to_string(),
+            c.scenario.instances.to_string(),
+            c.scenario.requests.to_string(),
+            r.events.to_string(),
+            (r.sim_span_ms / 1000).to_string(),
+            f(r.wall_s, 3),
+            fmt_count(r.events as f64 / r.wall_s),
+            f(r.attain, 3),
+            r.unfinished.to_string(),
+        ]);
+    }
+    bench.table(
+        "perf",
+        &[
+            "scenario",
+            "mode",
+            "path",
+            "instances",
+            "requests",
+            "events",
+            "sim_span_s",
+            "wall_s",
+            "events_per_sec",
+            "attain",
+            "unfinished",
+        ],
+        &rows,
+    );
+
+    // Per-scenario speedup (indexed over scan) + decision-identity.
+    let mut speedups: Vec<(&str, f64)> = Vec::new();
+    for (s, idx, scan) in &pairs {
+        assert_eq!(
+            idx.digest, scan.digest,
+            "{}: indexed path diverged from the scan reference — \
+             the optimization changed a scheduling decision",
+            s.name
+        );
+        assert_eq!(idx.events, scan.events, "{}: event count diverged", s.name);
+        let speedup = (idx.events as f64 / idx.wall_s) / (scan.events as f64 / scan.wall_s);
+        speedups.push((s.name, speedup));
+        println!(
+            "  {:<20} {:>8} events  indexed {:>10}/s  scan {:>10}/s  speedup {:.2}x",
+            s.name,
+            idx.events,
+            fmt_count(idx.events as f64 / idx.wall_s),
+            fmt_count(scan.events as f64 / scan.wall_s),
+            speedup
+        );
+    }
+
+    // Repo-root perf-trajectory artifact.
+    let mut root = Json::obj();
+    root.set("bench", Json::Str("sim_perf".into()));
+    root.set("unit", Json::Str("simulated events per wall-clock second".into()));
+    root.set("smoke", Json::Bool(smoke));
+    root.set("full", Json::Bool(full));
+    let mut cells_json = Vec::new();
+    for (c, r) in &results {
+        let mut o = Json::obj();
+        o.set("scenario", Json::Str(c.scenario.name.into()))
+            .set("mode", Json::Str(c.scenario.mode.name().into()))
+            .set(
+                "path",
+                Json::Str(if c.scan { "scan" } else { "indexed" }.into()),
+            )
+            .set("instances", Json::Num(c.scenario.instances as f64))
+            .set("requests", Json::Num(c.scenario.requests as f64))
+            .set("events", Json::Num(r.events as f64))
+            .set("sim_span_ms", Json::Num(r.sim_span_ms as f64))
+            .set("wall_s", Json::Num(r.wall_s))
+            .set("events_per_sec", Json::Num(r.events as f64 / r.wall_s))
+            .set("attainment", Json::Num(r.attain))
+            .set("unfinished", Json::Num(r.unfinished as f64));
+        cells_json.push(o);
+    }
+    root.set("cells", Json::Arr(cells_json));
+    let mut sp = Json::obj();
+    for (name, x) in &speedups {
+        sp.set(name, Json::Num(*x));
+    }
+    root.set("speedup_indexed_over_scan", sp);
+    let payload = root.pretty() + "\n";
+    std::fs::write("BENCH_sim_perf.json", &payload).expect("write BENCH_sim_perf.json");
+    println!("  [json] wrote BENCH_sim_perf.json");
+
+    // CI smoke gate: hard asserts, not just a CSV.
+    if smoke {
+        for (c, r) in &results {
+            assert!(r.events > 0, "{}: no events simulated", c.scenario.name);
+            assert!(r.wall_s > 0.0);
+            assert_eq!(
+                r.unfinished, 0,
+                "{}/{}: cell left requests unfinished",
+                c.scenario.name,
+                if c.scan { "scan" } else { "indexed" }
+            );
+            assert!((0.0..=1.0).contains(&r.attain));
+        }
+        let parsed = Json::parse(&std::fs::read_to_string("BENCH_sim_perf.json").unwrap())
+            .expect("emitted JSON must parse");
+        assert_eq!(
+            parsed.get("cells").and_then(|c| c.as_arr()).map(|a| a.len()),
+            Some(results.len())
+        );
+        assert!(parsed.get("speedup_indexed_over_scan").is_some());
+        println!("smoke invariants OK ({} cells)", results.len());
+    }
+    bench.finish();
+}

@@ -32,14 +32,15 @@ pub struct LoadEstimate {
 
 /// Estimate `inst`'s router-visible load: decode batch, resident KV
 /// (in-flight handoffs included), and predicted iteration time.
+///
+/// O(1): reads the instance's cached load counters (maintained at
+/// every queue mutation) instead of rescanning residents — this is the
+/// routing hot path, called once per candidate per placement. In
+/// scan-reference mode the accessors recompute, reproducing the pre-PR
+/// cost *and* values exactly.
 pub fn load_estimate(inst: &Instance, requests: &[SimRequest], profile: &ProfileTable) -> LoadEstimate {
     let batch = inst.decode_batch_now();
-    let kv_now = inst.kv_used(requests)
-        + inst
-            .decode_queue
-            .iter()
-            .map(|&(r, _)| requests[r].kv_now())
-            .sum::<u64>();
+    let kv_now = inst.kv_used(requests) + inst.handoff_kv(requests);
     LoadEstimate {
         batch,
         kv_now,
@@ -294,7 +295,7 @@ pub fn admit_coloc(
 mod tests {
     use super::*;
     use crate::model::CostModel;
-    use crate::sim::instance::{Instance, Role, RunningReq};
+    use crate::sim::instance::{Instance, Role};
     use crate::slo::{DsloTracker, Slo};
     use crate::workload::Request;
 
@@ -327,10 +328,7 @@ mod tests {
         let mut reqs = Vec::new();
         for i in 0..n {
             reqs.push(sim_req(i as u64, p, decoded));
-            inst.running.push(RunningReq {
-                req_idx: i,
-                paused: false,
-            });
+            inst.push_running(i, &reqs);
         }
         (inst, reqs)
     }

@@ -93,11 +93,13 @@ pub fn migration_feasible(ctx: &RouteCtx, inst: usize) -> bool {
     let role = ctx.cluster.instances[inst].role;
     let mut batch_free = 0u64;
     let mut kv_free = 0u64;
-    for i in &ctx.cluster.instances {
-        if i.id == inst || i.role != role || !i.lifecycle.accepts_work() {
+    // Role index + O(1) load estimates: the gate costs O(role size),
+    // not O(fleet × batch).
+    for id in ctx.cluster.with_role(role) {
+        if id == inst {
             continue;
         }
-        let est = load_estimate(i, ctx.requests, ctx.profile);
+        let est = load_estimate(&ctx.cluster.instances[id], ctx.requests, ctx.profile);
         batch_free += ctx.profile.max_token_batch.saturating_sub(est.batch);
         kv_free += ctx.profile.kv_capacity_tokens.saturating_sub(est.kv_now);
     }
@@ -1348,10 +1350,13 @@ mod tests {
         assert_eq!(empty, 0.0, "no queued work ⇒ no pressure");
         // Queue everything on prefill server 0 with 500 ms of headroom.
         for i in 0..8usize {
-            cluster.instances[0].push_prefill(crate::sim::PrefillJob {
-                req_idx: i,
-                deadline: 500,
-            });
+            cluster.instances[0].push_prefill(
+                crate::sim::PrefillJob {
+                    req_idx: i,
+                    deadline: 500,
+                },
+                &reqs,
+            );
         }
         let loaded = {
             let ctx = RouteCtx {
@@ -1400,10 +1405,13 @@ mod tests {
             })
             .collect();
         for i in 0..12usize {
-            cluster.instances[0].push_prefill(crate::sim::PrefillJob {
-                req_idx: i,
-                deadline: 400,
-            });
+            cluster.instances[0].push_prefill(
+                crate::sim::PrefillJob {
+                    req_idx: i,
+                    deadline: 400,
+                },
+                &reqs,
+            );
         }
         let mut grad =
             GradientAutoscaler::new(TierSet::paper_default()).scale_prefill(true);
@@ -1447,7 +1455,7 @@ mod tests {
         );
         // Idle queues → drain a prefill server after patience.
         for i in cluster.instances.iter_mut() {
-            i.prefill_queue.clear();
+            i.clear_prefill_queue();
         }
         let mut drained = false;
         for t in 1..=5u64 {

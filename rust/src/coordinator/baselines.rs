@@ -12,6 +12,12 @@
 //! None of them bin by tier, manage auto-scaling, or do admission
 //! control — every instance is `Static` and requests are placed
 //! immediately.
+//!
+//! Per-placement cost: the candidate sets come from the cluster's
+//! role indices and `load_estimate`/`queued_prefill_tokens` read the
+//! instances' cached O(1) load counters, so even these full-fleet
+//! min-scans are O(fleet) with O(1) work per candidate — no rescans of
+//! resident requests.
 
 use super::admission::load_estimate;
 use super::autoscaler::scaling_role;

@@ -38,6 +38,10 @@ pub struct PolyServeRouter {
     /// Per-tier pending queues (§4.3: "requests start pending for one
     /// SLO tier").
     pending: Vec<VecDeque<Pending>>,
+    /// Requests currently parked across all pending queues — lets
+    /// `drain_pending` (called on every iteration end and tick) return
+    /// in O(1) on the common all-placed fast path.
+    pending_total: usize,
     mode: ServingMode,
     /// PD prefill static budget (dynamic chunking modulates it).
     prefill_budget: u64,
@@ -68,6 +72,15 @@ pub struct RouterStats {
     pub marked_pending: u64,
 }
 
+impl Drop for RouterStats {
+    /// Log the scheduling-event counters when the router (and with it
+    /// its stats) is dropped at the end of a run — the debug-level
+    /// post-mortem the field doc promises.
+    fn drop(&mut self) {
+        log::debug!("router stats at drop: {self:?}");
+    }
+}
+
 impl PolyServeRouter {
     /// Build from a config; `avg_decode_len` is the workload's mean output
     /// length, the only output-length knowledge the §4.5 predictors get.
@@ -77,6 +90,7 @@ impl PolyServeRouter {
             features: cfg.features.clone(),
             avg_decode_len,
             pending: (0..cfg.tiers.len()).map(|_| VecDeque::new()).collect(),
+            pending_total: 0,
             mode: cfg.mode,
             prefill_budget: DEFAULT_PREFILL_BUDGET,
             stats: RouterStats::default(),
@@ -274,18 +288,12 @@ impl PolyServeRouter {
     /// instance (§4.4). Returns the instance id if one was obtained.
     fn scale_up(&mut self, k: usize, now: TimeMs, ctx: &mut RouteCtx) -> Option<usize> {
         // Prefer a Pending instance (it already holds promoted tier-k
-        // requests — adopting avoids a cold start).
+        // requests — adopting avoids a cold start). The pending pool is
+        // indexed: only actual Pending instances are visited.
         let pending_inst = ctx
             .cluster
-            .assign
-            .iter()
-            .enumerate()
-            .find(|(id, a)| {
-                **a == TierAssign::Pending
-                    && ctx.cluster.instances[*id].lifecycle.accepts_work()
-                    && self.instance_hosts_tier(*id, k, ctx)
-            })
-            .map(|(id, _)| id);
+            .pending_pool()
+            .find(|&id| self.instance_hosts_tier(id, k, ctx));
         if let Some(id) = pending_inst {
             ctx.cluster.adopt_pending(id, k);
             self.stats.adoptions += 1;
@@ -313,6 +321,9 @@ impl PolyServeRouter {
     /// deadline already passed (they can't be aborted — §3.6 — so they
     /// run on the least-loaded native-tier server and eat the miss).
     fn drain_pending(&mut self, now: TimeMs, ctx: &mut RouteCtx) {
+        if self.pending_total == 0 {
+            return; // O(1) fast path: nothing parked anywhere
+        }
         for k in 0..self.pending.len() {
             loop {
                 let Some(&head) = self.pending[k].front() else { break };
@@ -363,6 +374,7 @@ impl PolyServeRouter {
                 match placed {
                     Some(id) => {
                         self.pending[k].pop_front();
+                        self.pending_total -= 1;
                         self.enqueue_on(id, head, now, ctx);
                     }
                     None => break, // head blocked; FIFO per tier
@@ -391,16 +403,7 @@ impl PolyServeRouter {
         }
         // Any pending-state instance (that still accepts work — the
         // elastic fleet may be draining some).
-        let pending_ids: Vec<usize> = ctx
-            .cluster
-            .assign
-            .iter()
-            .enumerate()
-            .filter(|(i, a)| {
-                **a == TierAssign::Pending && ctx.cluster.instances[*i].lifecycle.accepts_work()
-            })
-            .map(|(i, _)| i)
-            .collect();
+        let pending_ids: Vec<usize> = ctx.cluster.pending_pool().collect();
         if let Some(id) = least_loaded(pending_ids, ctx) {
             return Some(id);
         }
@@ -412,7 +415,7 @@ impl PolyServeRouter {
         let all: Vec<usize> = ctx
             .cluster
             .with_role(role)
-            .filter(|&id| ctx.cluster.assign[id] != TierAssign::BestEffort)
+            .filter(|&id| ctx.cluster.assign_of(id) != TierAssign::BestEffort)
             .collect();
         if let Some(id) = least_loaded(all, ctx) {
             return Some(id);
@@ -423,26 +426,33 @@ impl PolyServeRouter {
 
     fn enqueue_on(&self, id: usize, p: Pending, now: TimeMs, ctx: &mut RouteCtx) {
         let kv_transfer_ms = ctx.kv_transfer_ms;
-        let r = &mut ctx.requests[p.req_idx];
         if p.decode_phase {
             // The KV handoff costs `kv_transfer_ms` no matter how the
             // request got here: a pended dispatch pays the same delay
             // as the simulator's direct route_decode path.
-            r.decode_instance = Some(id);
-            ctx.cluster.instances[id].push_decode(p.req_idx, now + kv_transfer_ms);
+            ctx.requests[p.req_idx].decode_instance = Some(id);
+            ctx.cluster.instances[id].push_decode(
+                p.req_idx,
+                now + kv_transfer_ms,
+                ctx.requests,
+            );
         } else {
+            let r = &ctx.requests[p.req_idx];
             let deadline = r.req.arrival_ms + r.req.slo.ttft_ms;
-            ctx.cluster.instances[id].push_prefill(crate::sim::PrefillJob {
-                req_idx: p.req_idx,
-                deadline,
-            });
+            ctx.cluster.instances[id].push_prefill(
+                crate::sim::PrefillJob {
+                    req_idx: p.req_idx,
+                    deadline,
+                },
+                ctx.requests,
+            );
         }
         ctx.cluster.mark_kicked(id);
     }
 
     /// §4.3/§4.4 down-scaling sweep.
     fn autoscale_down(&mut self, now: TimeMs, inst: usize, ctx: &mut RouteCtx) {
-        match ctx.cluster.assign[inst] {
+        match ctx.cluster.assign_of(inst) {
             TierAssign::Tier(k) => {
                 let i = &ctx.cluster.instances[inst];
                 if i.is_empty() {
@@ -590,6 +600,7 @@ impl Router for PolyServeRouter {
                 }
                 let k = ctx.requests[req_idx].tier;
                 self.stats.pends += 1;
+                self.pending_total += 1;
                 self.pending[k].push_back(Pending {
                     req_idx,
                     decode_phase: false,
@@ -608,6 +619,7 @@ impl Router for PolyServeRouter {
         }
         let k = ctx.requests[req_idx].tier;
         self.stats.pends += 1;
+        self.pending_total += 1;
         self.pending[k].push_back(Pending {
             req_idx,
             decode_phase: true,
@@ -652,7 +664,7 @@ impl Router for PolyServeRouter {
             Role::Coloc => {
                 // TPOT-derived chunk for this instance's tier; Pending /
                 // BE instances pace at the loosest tier.
-                let tpot = match ctx.cluster.assign[inst] {
+                let tpot = match ctx.cluster.assign_of(inst) {
                     TierAssign::Tier(k) => self.tiers.tier(k).tpot_ms,
                     _ => self.tiers.tier(self.tiers.len() - 1).tpot_ms,
                 };
@@ -676,8 +688,11 @@ impl Router for PolyServeRouter {
     fn on_tick(&mut self, now: TimeMs, ctx: &mut RouteCtx) {
         self.drain_pending(now, ctx);
         // Sweep: any tier instance that drained between its own
-        // iterations (e.g. became empty via decode completions).
-        for inst in 0..ctx.cluster.instances.len() {
+        // iterations (e.g. became empty via decode completions). Only
+        // Tier/Pending-assigned instances can act here, so the sweep
+        // visits exactly those (ascending id, like the old full loop —
+        // every skipped instance was a no-op arm).
+        for inst in ctx.cluster.assigned_ids() {
             self.autoscale_down(now, inst, ctx);
         }
     }

@@ -105,18 +105,22 @@ impl ShardedRouter {
         // foreign *empty* instances; loaded foreign instances belong to
         // the foreign shard's tiers and are filtered by the per-shard
         // tier bookkeeping below.
+        // All mask writes go through `set_assign` so the cluster's
+        // membership indices stay coherent with the temporary re-roles
+        // (the BTreeSet pool restores to the same ascending order no
+        // matter the unmask sequence).
         let mut masked: Vec<usize> = Vec::new();
         for inst in 0..ctx.cluster.instances.len() {
             if self.shard_of_instance(inst, ctx) != s
-                && ctx.cluster.assign[inst] == crate::sim::TierAssign::BestEffort
+                && ctx.cluster.assign_of(inst) == crate::sim::TierAssign::BestEffort
             {
-                ctx.cluster.assign[inst] = crate::sim::TierAssign::Static;
+                ctx.cluster.set_assign(inst, crate::sim::TierAssign::Static);
                 masked.push(inst);
             }
         }
         let out = f(&mut self.shards[s], ctx);
         for inst in masked {
-            ctx.cluster.assign[inst] = crate::sim::TierAssign::BestEffort;
+            ctx.cluster.set_assign(inst, crate::sim::TierAssign::BestEffort);
         }
         out
     }
@@ -260,7 +264,7 @@ mod tests {
         // Masking restored: pool view intact afterwards.
         assert!(ctx
             .cluster
-            .assign
+            .assignments()
             .iter()
             .any(|a| *a == crate::sim::TierAssign::BestEffort));
     }

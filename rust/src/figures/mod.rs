@@ -30,6 +30,17 @@ pub struct Experiment {
     pub optimal_rps: f64,
     /// Actual request rate of the workload, req/s.
     pub rate_rps: f64,
+    /// Run through the scan-based pre-PR reference path (full-fleet
+    /// membership scans + per-placement resident rescans) instead of
+    /// the indexed/cached hot path. Decisions are bit-for-bit identical
+    /// by construction — used for A/B identity tests and as the
+    /// `sim_perf` speedup baseline.
+    pub scan_reference: bool,
+    /// Run the per-event cache/index coherence audit in debug-assertion
+    /// builds (`SimParams::debug_audit`). On by default; `sim_perf`
+    /// timing cells disable it so the bench doesn't measure the audit's
+    /// own scans.
+    pub debug_audit: bool,
 }
 
 impl Experiment {
@@ -93,6 +104,8 @@ impl Experiment {
             workload,
             optimal_rps,
             rate_rps,
+            scan_reference: false,
+            debug_audit: true,
         }
     }
 
@@ -106,7 +119,7 @@ impl Experiment {
         // `cfg.instances` is the *initial* fleet; the elastic bounds
         // only constrain scaling transitions (they apply to the
         // scalable role, which under PD is a subset of the fleet).
-        let cluster = Cluster::build(
+        let mut cluster = Cluster::build(
             self.cfg.mode,
             self.cfg.instances,
             self.cfg.prefill_frac,
@@ -114,8 +127,12 @@ impl Experiment {
             &self.cost_model,
             polyserve_managed,
         );
+        if self.scan_reference {
+            cluster.set_scan_reference(true);
+        }
         let params = SimParams {
             mode: self.cfg.mode,
+            debug_audit: self.debug_audit,
             elastic: elastic.then(|| ElasticParams {
                 min_instances: self.cfg.elastic.min_instances.max(1),
                 max_instances: self.cfg.elastic.max_instances,

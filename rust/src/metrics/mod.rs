@@ -4,8 +4,9 @@
 use crate::slo::{Slo, TimeMs};
 use crate::util::stats::{crossing_down, Summary};
 
-/// Outcome of one finished (or dropped) request.
-#[derive(Debug, Clone)]
+/// Outcome of one finished (or dropped) request. `PartialEq` so the
+/// decision-identity tests can compare whole runs bit-for-bit.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RequestOutcome {
     /// Workload request id.
     pub id: u64,
@@ -43,7 +44,7 @@ impl RequestOutcome {
 }
 
 /// Aggregated attainment report.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct AttainmentReport {
     /// SLO-carrying requests counted.
     pub total: usize,
@@ -143,7 +144,7 @@ impl AttainmentCurve {
 
 /// Cost accounting: instance·seconds (§3.3 "we define the cost as
 /// instance · second").
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct CostAccount {
     /// Total instance·ms spent iterating.
     pub instance_busy_ms: u64,
@@ -236,7 +237,7 @@ pub struct RateSample {
 
 /// Per-tier fleet-size time series for an elastic run (empty on fixed
 /// fleets).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct FleetSeries {
     /// Fleet-composition snapshots, one per `ScaleEval`.
     pub samples: Vec<FleetSample>,

@@ -15,9 +15,41 @@
 //! instances whose lifecycle accepts new work.
 
 use super::instance::{Instance, Lifecycle, Role};
+use super::SimRequest;
 use crate::analysis::ServingMode;
 use crate::model::CostModel;
 use crate::slo::TimeMs;
+use std::collections::BTreeSet;
+
+/// Index into `role_ids` for a role (roles never change, so the
+/// per-role sets are append-only).
+#[inline]
+fn role_idx(role: Role) -> usize {
+    match role {
+        Role::Prefill => 0,
+        Role::Decode => 1,
+        Role::Coloc => 2,
+    }
+}
+
+/// Iterator over one of the two membership paths: the indexed id sets
+/// (default) or the pre-PR full-`assign` scan (reference mode).
+enum ViewIter<A, B> {
+    Indexed(A),
+    Scan(B),
+}
+
+impl<A: Iterator<Item = usize>, B: Iterator<Item = usize>> Iterator for ViewIter<A, B> {
+    type Item = usize;
+
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        match self {
+            ViewIter::Indexed(a) => a.next(),
+            ViewIter::Scan(b) => b.next(),
+        }
+    }
+}
 
 /// Tier assignment state of an instance.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -39,7 +71,10 @@ pub struct Cluster {
     /// Every instance ever in the fleet (retired slots included).
     pub instances: Vec<Instance>,
     /// Tier assignment per instance (parallel to `instances`).
-    pub assign: Vec<TierAssign>,
+    /// Private: every write goes through [`Cluster::set_assign`] so the
+    /// membership indices below can never drift from it. Read via
+    /// [`Cluster::assign_of`] / [`Cluster::assignments`].
+    assign: Vec<TierAssign>,
     /// Number of TPOT tiers.
     pub num_tiers: usize,
     /// Tier-managed (PolyServe) fleet: newly provisioned instances join
@@ -52,6 +87,25 @@ pub struct Cluster {
     /// Instances the router fed while holding the ctx — the simulator
     /// must try to (re)start their iterations.
     kicked: Vec<usize>,
+    // ---- indexed fleet membership (the routing hot path) ----
+    // Each set mirrors `assign` exactly (lifecycle is filtered at read
+    // time), so maintenance lives in `set_assign` alone. BTreeSets
+    // iterate in ascending id order — identical to the old
+    // enumerate-the-`assign`-vec scans, so `pick_by_gradient`'s
+    // `(batch, kv, id)` tie-break and every placement outcome are
+    // bit-for-bit unchanged.
+    /// Ids assigned `Tier(k)`, per tier.
+    tier_ids: Vec<BTreeSet<usize>>,
+    /// Ids assigned `BestEffort`.
+    be_ids: BTreeSet<usize>,
+    /// Ids assigned `Pending`.
+    pending_ids: BTreeSet<usize>,
+    /// Ids per role (roles are immutable: append-only).
+    role_ids: [BTreeSet<usize>; 3],
+    /// Instances currently `Draining` (cheap sweep short-circuit).
+    draining_total: usize,
+    /// Reference mode: membership views recompute by scanning.
+    scan_reference: bool,
 }
 
 impl Cluster {
@@ -107,7 +161,7 @@ impl Cluster {
                 }
             }
         }
-        Cluster {
+        let mut cluster = Cluster {
             instances,
             assign,
             num_tiers,
@@ -115,7 +169,97 @@ impl Cluster {
             kv_capacity: cm.kv_capacity_tokens,
             max_token_batch: cm.max_token_batch,
             kicked: Vec::new(),
+            tier_ids: vec![BTreeSet::new(); num_tiers],
+            be_ids: BTreeSet::new(),
+            pending_ids: BTreeSet::new(),
+            role_ids: [BTreeSet::new(), BTreeSet::new(), BTreeSet::new()],
+            draining_total: 0,
+            scan_reference: false,
+        };
+        for id in 0..cluster.instances.len() {
+            cluster.index_add_assign(id, cluster.assign[id]);
+            cluster.role_ids[role_idx(cluster.instances[id].role)].insert(id);
         }
+        cluster
+    }
+
+    // ---- membership index maintenance ----
+
+    fn index_add_assign(&mut self, id: usize, a: TierAssign) {
+        match a {
+            TierAssign::Tier(k) => {
+                if k >= self.tier_ids.len() {
+                    self.tier_ids.resize_with(k + 1, BTreeSet::new);
+                }
+                self.tier_ids[k].insert(id);
+            }
+            TierAssign::BestEffort => {
+                self.be_ids.insert(id);
+            }
+            TierAssign::Pending => {
+                self.pending_ids.insert(id);
+            }
+            TierAssign::Static => {}
+        }
+    }
+
+    fn index_remove_assign(&mut self, id: usize, a: TierAssign) {
+        match a {
+            TierAssign::Tier(k) => {
+                if let Some(s) = self.tier_ids.get_mut(k) {
+                    s.remove(&id);
+                }
+            }
+            TierAssign::BestEffort => {
+                self.be_ids.remove(&id);
+            }
+            TierAssign::Pending => {
+                self.pending_ids.remove(&id);
+            }
+            TierAssign::Static => {}
+        }
+    }
+
+    /// Tier assignment of instance `id`.
+    #[inline]
+    pub fn assign_of(&self, id: usize) -> TierAssign {
+        self.assign[id]
+    }
+
+    /// Read-only view of the full assignment vector (parallel to
+    /// `instances`).
+    pub fn assignments(&self) -> &[TierAssign] {
+        &self.assign
+    }
+
+    /// Set instance `id`'s tier assignment. The only write path: it
+    /// keeps the per-tier / best-effort / pending id sets mirroring
+    /// `assign` exactly.
+    pub fn set_assign(&mut self, id: usize, a: TierAssign) {
+        let old = self.assign[id];
+        if old == a {
+            return;
+        }
+        self.index_remove_assign(id, old);
+        self.assign[id] = a;
+        self.index_add_assign(id, a);
+    }
+
+    /// Route every membership view (and each instance's load
+    /// accessors) through the pre-PR full scans instead of the indices
+    /// and cached counters — the A/B reference path for
+    /// decision-identity tests and perf baselines. Indices and counters
+    /// are still maintained, so the switch can flip at any time.
+    pub fn set_scan_reference(&mut self, on: bool) {
+        self.scan_reference = on;
+        for i in &mut self.instances {
+            i.set_scan_reference(on);
+        }
+    }
+
+    /// Is the scan-based reference path active?
+    pub fn is_scan_reference(&self) -> bool {
+        self.scan_reference
     }
 
     /// Total instance slots, retired included (ids are stable indices).
@@ -130,33 +274,118 @@ impl Cluster {
 
     /// Instance ids with a given role that accept new work (placement
     /// candidates; provisioning / draining / retired are excluded).
+    /// Ascending id order, O(role size) off the role index.
     pub fn with_role(&self, role: Role) -> impl Iterator<Item = usize> + '_ {
-        self.instances
-            .iter()
-            .filter(move |i| i.role == role && i.lifecycle.accepts_work())
-            .map(|i| i.id)
+        if self.scan_reference {
+            ViewIter::Scan(
+                self.instances
+                    .iter()
+                    .filter(move |i| i.role == role && i.lifecycle.accepts_work())
+                    .map(|i| i.id),
+            )
+        } else {
+            ViewIter::Indexed(
+                self.role_ids[role_idx(role)]
+                    .iter()
+                    .copied()
+                    .filter(move |&id| self.instances[id].lifecycle.accepts_work()),
+            )
+        }
     }
 
     /// Instance ids currently assigned to tier `k` and accepting work.
+    /// Ascending id order, O(tier size) off the tier index.
     pub fn in_tier(&self, k: usize) -> impl Iterator<Item = usize> + '_ {
-        self.assign
-            .iter()
-            .enumerate()
-            .filter(move |(i, a)| {
-                **a == TierAssign::Tier(k) && self.instances[*i].lifecycle.accepts_work()
-            })
-            .map(|(i, _)| i)
+        if self.scan_reference {
+            ViewIter::Scan(
+                self.assign
+                    .iter()
+                    .enumerate()
+                    .filter(move |(i, a)| {
+                        **a == TierAssign::Tier(k)
+                            && self.instances[*i].lifecycle.accepts_work()
+                    })
+                    .map(|(i, _)| i),
+            )
+        } else {
+            ViewIter::Indexed(
+                self.tier_ids
+                    .get(k)
+                    .into_iter()
+                    .flat_map(|s| s.iter().copied())
+                    .filter(move |&id| self.instances[id].lifecycle.accepts_work()),
+            )
+        }
     }
 
     /// Instance ids in the best-effort pool (claimable: active only).
+    /// Ascending id order, O(pool size) off the pool index.
     pub fn best_effort_pool(&self) -> impl Iterator<Item = usize> + '_ {
-        self.assign
+        if self.scan_reference {
+            ViewIter::Scan(
+                self.assign
+                    .iter()
+                    .enumerate()
+                    .filter(move |(i, a)| {
+                        **a == TierAssign::BestEffort
+                            && self.instances[*i].lifecycle.accepts_work()
+                    })
+                    .map(|(i, _)| i),
+            )
+        } else {
+            ViewIter::Indexed(
+                self.be_ids
+                    .iter()
+                    .copied()
+                    .filter(move |&id| self.instances[id].lifecycle.accepts_work()),
+            )
+        }
+    }
+
+    /// Instance ids in the §4.4 pending state that accept work.
+    /// Ascending id order, O(pending size) off the pending index.
+    pub fn pending_pool(&self) -> impl Iterator<Item = usize> + '_ {
+        if self.scan_reference {
+            ViewIter::Scan(
+                self.assign
+                    .iter()
+                    .enumerate()
+                    .filter(move |(i, a)| {
+                        **a == TierAssign::Pending
+                            && self.instances[*i].lifecycle.accepts_work()
+                    })
+                    .map(|(i, _)| i),
+            )
+        } else {
+            ViewIter::Indexed(
+                self.pending_ids
+                    .iter()
+                    .copied()
+                    .filter(move |&id| self.instances[id].lifecycle.accepts_work()),
+            )
+        }
+    }
+
+    /// Ids holding a `Tier(_)` or `Pending` assignment, any lifecycle,
+    /// ascending — the candidate set of the router's autoscale-down
+    /// sweep (every other assignment is a no-op there, so visiting only
+    /// these is decision-identical to sweeping the whole fleet).
+    pub fn assigned_ids(&self) -> Vec<usize> {
+        if self.scan_reference {
+            return (0..self.assign.len())
+                .filter(|&i| {
+                    matches!(self.assign[i], TierAssign::Tier(_) | TierAssign::Pending)
+                })
+                .collect();
+        }
+        let mut ids: Vec<usize> = self
+            .tier_ids
             .iter()
-            .enumerate()
-            .filter(move |(i, a)| {
-                **a == TierAssign::BestEffort && self.instances[*i].lifecycle.accepts_work()
-            })
-            .map(|(i, _)| i)
+            .flat_map(|s| s.iter().copied())
+            .chain(self.pending_ids.iter().copied())
+            .collect();
+        ids.sort_unstable();
+        ids
     }
 
     /// Claim an instance from the BE pool for tier `k` (§4.3: "joining a
@@ -164,7 +393,7 @@ impl Cluster {
     /// Returns the claimed id.
     pub fn claim_for_tier(&mut self, k: usize, now: TimeMs) -> Option<usize> {
         let id = self.best_effort_pool().next()?;
-        self.assign[id] = TierAssign::Tier(k);
+        self.set_assign(id, TierAssign::Tier(k));
         self.instances[id].alloc_start(now);
         Some(id)
     }
@@ -173,19 +402,19 @@ impl Cluster {
     /// requests of that tier).
     pub fn adopt_pending(&mut self, id: usize, k: usize) {
         debug_assert_eq!(self.assign[id], TierAssign::Pending);
-        self.assign[id] = TierAssign::Tier(k);
+        self.set_assign(id, TierAssign::Tier(k));
         // alloc interval already open from its previous tier stint.
     }
 
     /// Mark an instance pending (§4.4).
     pub fn mark_pending(&mut self, id: usize) {
-        self.assign[id] = TierAssign::Pending;
+        self.set_assign(id, TierAssign::Pending);
     }
 
     /// Release an instance to the best-effort pool.
     pub fn release(&mut self, id: usize, now: TimeMs) {
         debug_assert!(self.instances[id].is_empty(), "releasing a busy instance");
-        self.assign[id] = TierAssign::BestEffort;
+        self.set_assign(id, TierAssign::BestEffort);
         self.instances[id].alloc_end(now);
     }
 
@@ -202,19 +431,24 @@ impl Cluster {
     /// making the prefill tier elastic).
     pub fn provision(&mut self, role: Role, now: TimeMs, ready_at: TimeMs) -> usize {
         let id = self.instances.len();
-        self.instances.push(Instance::new_provisioning(
+        let mut inst = Instance::new_provisioning(
             id,
             role,
             self.kv_capacity,
             self.max_token_batch,
             now,
             ready_at,
-        ));
-        self.assign.push(match role {
+        );
+        inst.set_scan_reference(self.scan_reference);
+        self.instances.push(inst);
+        let a = match role {
             Role::Prefill => TierAssign::Static,
             _ if self.managed => TierAssign::BestEffort,
             _ => TierAssign::Static,
-        });
+        };
+        self.assign.push(a);
+        self.index_add_assign(id, a);
+        self.role_ids[role_idx(role)].insert(id);
         id
     }
 
@@ -227,6 +461,7 @@ impl Cluster {
     /// its resident requests finish.
     pub fn begin_drain(&mut self, id: usize, now: TimeMs) {
         self.instances[id].begin_drain(now);
+        self.draining_total += 1;
     }
 
     /// Retire `id` if it is draining, has no work left, and any
@@ -238,9 +473,16 @@ impl Cluster {
             && self.instances[id].egress_until <= now
         {
             self.instances[id].retire(now);
+            self.draining_total -= 1;
             return true;
         }
         false
+    }
+
+    /// Any instance currently draining? O(1) — lets the housekeeping
+    /// tick skip its retire sweep on the (common) all-steady fleet.
+    pub fn draining_any(&self) -> bool {
+        self.draining_total > 0
     }
 
     /// Count instances of `role` in lifecycle states selected by `f`.
@@ -284,6 +526,61 @@ impl Cluster {
     pub fn take_kicked(&mut self) -> Vec<usize> {
         std::mem::take(&mut self.kicked)
     }
+
+    /// Assert the membership indices mirror `assign` exactly, the
+    /// draining counter matches a lifecycle scan, and every instance's
+    /// cached load counters equal their scan-recomputed values. Runs
+    /// after every simulator event in debug-assertion builds
+    /// (`SimParams::debug_audit`); panics on the first drift.
+    pub fn audit(&self, requests: &[SimRequest]) {
+        for (id, &a) in self.assign.iter().enumerate() {
+            let expect_tier = match a {
+                TierAssign::Tier(k) => Some(k),
+                _ => None,
+            };
+            for (k, s) in self.tier_ids.iter().enumerate() {
+                assert_eq!(
+                    s.contains(&id),
+                    expect_tier == Some(k),
+                    "inst {id}: tier_ids[{k}] disagrees with assign {a:?}"
+                );
+            }
+            assert_eq!(
+                self.be_ids.contains(&id),
+                a == TierAssign::BestEffort,
+                "inst {id}: be_ids disagrees with assign {a:?}"
+            );
+            assert_eq!(
+                self.pending_ids.contains(&id),
+                a == TierAssign::Pending,
+                "inst {id}: pending_ids disagrees with assign {a:?}"
+            );
+            assert!(
+                self.role_ids[role_idx(self.instances[id].role)].contains(&id),
+                "inst {id}: missing from its role index"
+            );
+        }
+        let sets_total: usize = self.tier_ids.iter().map(|s| s.len()).sum::<usize>()
+            + self.be_ids.len()
+            + self.pending_ids.len();
+        let assigned = self
+            .assign
+            .iter()
+            .filter(|a| **a != TierAssign::Static)
+            .count();
+        assert_eq!(sets_total, assigned, "stale ids left in a membership set");
+        assert_eq!(
+            self.draining_total,
+            self.instances
+                .iter()
+                .filter(|i| matches!(i.lifecycle, Lifecycle::Draining { .. }))
+                .count(),
+            "draining counter drifted"
+        );
+        for i in &self.instances {
+            i.audit_cached_load(requests);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -316,7 +613,7 @@ mod tests {
     fn claim_and_release_lifecycle() {
         let mut c = Cluster::build(ServingMode::Colocated, 4, 0.0, 2, &cm(), true);
         let id = c.claim_for_tier(1, 100).unwrap();
-        assert_eq!(c.assign[id], TierAssign::Tier(1));
+        assert_eq!(c.assign_of(id), TierAssign::Tier(1));
         assert_eq!(c.in_tier(1).count(), 1);
         assert_eq!(c.best_effort_pool().count(), 3);
         c.mark_pending(id);
@@ -393,7 +690,7 @@ mod tests {
         let be_before = c.best_effort_pool().count();
         let id = c.provision(Role::Prefill, 0, 100);
         c.mark_ready(id);
-        assert_eq!(c.assign[id], TierAssign::Static);
+        assert_eq!(c.assign_of(id), TierAssign::Static);
         assert_eq!(c.best_effort_pool().count(), be_before);
         assert_eq!(c.with_role(Role::Prefill).count(), 3);
         // Decode provisioning still joins the pool.
@@ -407,5 +704,75 @@ mod tests {
         let c = Cluster::build(ServingMode::PdDisaggregated, 2, 0.5, 1, &cm(), true);
         assert_eq!(c.with_role(Role::Prefill).count(), 1);
         assert_eq!(c.with_role(Role::Decode).count(), 1);
+    }
+
+    /// Every view must yield the exact sequence (values *and* order) the
+    /// pre-PR scans produced, across assignment and lifecycle churn.
+    #[test]
+    fn indexed_views_match_scan_reference_exactly() {
+        let mut c = Cluster::build(ServingMode::PdDisaggregated, 10, 0.3, 4, &cm(), true);
+        // Churn: claims, pending, drains, provisions.
+        let a = c.claim_for_tier(0, 0).unwrap();
+        let b = c.claim_for_tier(2, 0).unwrap();
+        c.claim_for_tier(2, 0).unwrap();
+        c.mark_pending(b);
+        c.begin_drain(a, 10);
+        let p = c.provision(Role::Decode, 10, 50);
+        c.mark_ready(p);
+        c.provision(Role::Prefill, 10, 50); // still provisioning
+
+        let snapshot = |c: &Cluster| {
+            let mut v: Vec<Vec<usize>> = Vec::new();
+            for k in 0..c.num_tiers {
+                v.push(c.in_tier(k).collect());
+            }
+            v.push(c.best_effort_pool().collect());
+            v.push(c.pending_pool().collect());
+            v.push(c.with_role(Role::Prefill).collect());
+            v.push(c.with_role(Role::Decode).collect());
+            v.push(c.assigned_ids());
+            v
+        };
+        let indexed = snapshot(&c);
+        c.set_scan_reference(true);
+        assert!(c.is_scan_reference());
+        let scanned = snapshot(&c);
+        assert_eq!(indexed, scanned);
+        c.set_scan_reference(false);
+        c.audit(&[]);
+    }
+
+    #[test]
+    fn assigned_ids_cover_tiered_and_pending_any_lifecycle() {
+        let mut c = Cluster::build(ServingMode::Colocated, 5, 0.0, 2, &cm(), true);
+        let a = c.claim_for_tier(0, 0).unwrap();
+        let b = c.claim_for_tier(1, 0).unwrap();
+        c.mark_pending(b);
+        // A draining tier member stays a sweep candidate (the router
+        // may still release it mid-drain, closing its alloc window).
+        c.begin_drain(a, 5);
+        assert_eq!(c.assigned_ids(), vec![a, b]);
+        assert!(c.draining_any());
+        assert!(c.retire_if_drained(a, 10));
+        assert!(!c.draining_any());
+        // Retired keeps its Tier assignment until released; still listed.
+        assert_eq!(c.assigned_ids(), vec![a, b]);
+        c.audit(&[]);
+    }
+
+    #[test]
+    fn set_assign_keeps_indices_coherent() {
+        let mut c = Cluster::build(ServingMode::Colocated, 3, 0.0, 2, &cm(), true);
+        c.set_assign(0, TierAssign::Tier(1));
+        c.set_assign(1, TierAssign::Static);
+        c.set_assign(2, TierAssign::Pending);
+        c.audit(&[]);
+        assert_eq!(c.in_tier(1).collect::<Vec<_>>(), vec![0]);
+        assert_eq!(c.best_effort_pool().count(), 0);
+        assert_eq!(c.pending_pool().collect::<Vec<_>>(), vec![2]);
+        c.set_assign(0, TierAssign::BestEffort);
+        c.audit(&[]);
+        assert_eq!(c.in_tier(1).count(), 0);
+        assert_eq!(c.best_effort_pool().collect::<Vec<_>>(), vec![0]);
     }
 }

@@ -141,6 +141,24 @@ pub struct Instance {
     pub kv_capacity: u64,
     /// Max token batch per iteration.
     pub max_token_batch: u64,
+    // ---- O(1) load accounting (the routing hot path) ----
+    // Cached aggregates over the queues above, maintained at every
+    // mutation point (`push_prefill`/`push_decode`/`push_running`,
+    // `form_batch`, `complete_iteration`, the eviction paths) so the
+    // router never rescans residents per placement. Private: direct
+    // queue pushes from outside would desync them — use the push_*
+    // API, and `audit_cached_load` asserts coherence in debug runs.
+    /// Σ `kv_now()` over `running`.
+    kv_running_tokens: u64,
+    /// Σ `kv_now()` over `decode_queue` (in-flight handoffs).
+    kv_handoff_tokens: u64,
+    /// Σ `prefill_done` over `prefill_queue` (committed prompt KV).
+    kv_prefill_done_tokens: u64,
+    /// Σ remaining prompt tokens over `prefill_queue`.
+    queued_prefill_rem_tokens: u64,
+    /// Reference mode: load accessors recompute by scanning (the
+    /// pre-cache code path) instead of reading the counters.
+    scan_reference: bool,
 }
 
 impl Instance {
@@ -166,7 +184,20 @@ impl Instance {
             alloc_open_since: None,
             kv_capacity,
             max_token_batch,
+            kv_running_tokens: 0,
+            kv_handoff_tokens: 0,
+            kv_prefill_done_tokens: 0,
+            queued_prefill_rem_tokens: 0,
+            scan_reference: false,
         }
+    }
+
+    /// Switch this instance's load accessors to the scan-based
+    /// reference path (`kv_used`/`handoff_kv`/`queued_prefill_tokens`
+    /// recompute instead of reading the cached counters). The counters
+    /// are still maintained either way, so the switch is free to flip.
+    pub fn set_scan_reference(&mut self, on: bool) {
+        self.scan_reference = on;
     }
 
     /// A cold-starting instance for the elastic fleet: joins the
@@ -236,6 +267,8 @@ impl Instance {
         self.migrate_on_drain = true;
         let mut out: Vec<usize> = self.running.drain(..).map(|s| s.req_idx).collect();
         out.extend(self.decode_queue.drain(..).map(|(r, _)| r));
+        self.kv_running_tokens = 0;
+        self.kv_handoff_tokens = 0;
         out
     }
 
@@ -257,6 +290,8 @@ impl Instance {
                 .prefill_slices
                 .retain(|(r, _)| !out.iter().any(|j| j.req_idx == *r));
         }
+        self.kv_prefill_done_tokens = 0;
+        self.queued_prefill_rem_tokens = 0;
         out
     }
 
@@ -273,13 +308,17 @@ impl Instance {
     // ---- queue management ----
 
     /// Queue a prefill job, keeping the queue EDF-ordered (§4.2).
-    pub fn push_prefill(&mut self, job: PrefillJob) {
+    /// `requests` feeds the cached prompt-token counters.
+    pub fn push_prefill(&mut self, job: PrefillJob, requests: &[SimRequest]) {
         debug_assert!(
             self.lifecycle.accepts_work(),
             "prefill placed on non-active instance {} ({:?})",
             self.id,
             self.lifecycle
         );
+        let r = &requests[job.req_idx];
+        self.kv_prefill_done_tokens += r.prefill_done as u64;
+        self.queued_prefill_rem_tokens += (r.req.prefill_len - r.prefill_done) as u64;
         // EDF order: insert by deadline (§4.2: prioritize nearest
         // deadline for prefill scheduling).
         let pos = self
@@ -291,14 +330,43 @@ impl Instance {
     }
 
     /// Queue a decode handoff whose KV transfer lands at `ready`.
-    pub fn push_decode(&mut self, req_idx: usize, ready: TimeMs) {
+    /// `requests` feeds the cached in-flight-KV counter.
+    pub fn push_decode(&mut self, req_idx: usize, ready: TimeMs, requests: &[SimRequest]) {
         debug_assert!(
             self.lifecycle.accepts_work(),
             "decode placed on non-active instance {} ({:?})",
             self.id,
             self.lifecycle
         );
+        self.kv_handoff_tokens += requests[req_idx].kv_now();
         self.decode_queue.push_back((req_idx, ready));
+    }
+
+    /// Make `req_idx` decode-resident here immediately (tests and
+    /// bench fixtures; the simulator's own requests join `running`
+    /// through `form_batch`/`complete_iteration`). Keeps the cached
+    /// KV counters coherent — never push onto `running` directly.
+    pub fn push_running(&mut self, req_idx: usize, requests: &[SimRequest]) {
+        self.kv_running_tokens += requests[req_idx].kv_now();
+        self.running.push(RunningReq {
+            req_idx,
+            paused: false,
+        });
+    }
+
+    /// Drop every queued prefill job, cache-coherently (test/bench
+    /// state-reset helper — the simulator never discards queued work).
+    pub fn clear_prefill_queue(&mut self) {
+        self.prefill_queue.clear();
+        self.kv_prefill_done_tokens = 0;
+        self.queued_prefill_rem_tokens = 0;
+    }
+
+    /// Drop every in-flight decode handoff, cache-coherently
+    /// (test/bench state-reset helper).
+    pub fn clear_decode_queue(&mut self) {
+        self.decode_queue.clear();
+        self.kv_handoff_tokens = 0;
     }
 
     /// Anything resident or queued on this instance?
@@ -314,9 +382,22 @@ impl Instance {
     }
 
     // ---- load metrics (what routers see) ----
+    //
+    // All O(1) off the cached counters; the `_scan` variants are the
+    // pre-cache recomputations, kept as the audit's ground truth and as
+    // the runtime-selectable reference path (`set_scan_reference`).
 
-    /// KV tokens resident from decode-phase requests.
+    /// KV tokens resident here (running decode KV + committed prompt
+    /// KV of queued prefills). O(1).
     pub fn kv_used(&self, requests: &[SimRequest]) -> u64 {
+        if self.scan_reference {
+            return self.kv_used_scan(requests);
+        }
+        self.kv_running_tokens + self.kv_prefill_done_tokens
+    }
+
+    /// `kv_used` recomputed by scanning the queues (reference path).
+    pub fn kv_used_scan(&self, requests: &[SimRequest]) -> u64 {
         self.running
             .iter()
             .map(|r| requests[r.req_idx].kv_now())
@@ -328,13 +409,38 @@ impl Instance {
                 .sum::<u64>()
     }
 
+    /// KV tokens of in-flight decode handoffs (transfer not yet
+    /// landed) — the router counts them as resident-to-be. O(1).
+    pub fn handoff_kv(&self, requests: &[SimRequest]) -> u64 {
+        if self.scan_reference {
+            return self.handoff_kv_scan(requests);
+        }
+        self.kv_handoff_tokens
+    }
+
+    /// `handoff_kv` recomputed by scanning (reference path).
+    pub fn handoff_kv_scan(&self, requests: &[SimRequest]) -> u64 {
+        self.decode_queue
+            .iter()
+            .map(|&(r, _)| requests[r].kv_now())
+            .sum()
+    }
+
     /// Decode batch size if an iteration started now.
     pub fn decode_batch_now(&self) -> u64 {
         self.running.len() as u64 + self.decode_queue.len() as u64
     }
 
-    /// Remaining prefill tokens queued.
+    /// Remaining prefill tokens queued. O(1).
     pub fn queued_prefill_tokens(&self, requests: &[SimRequest]) -> u64 {
+        if self.scan_reference {
+            return self.queued_prefill_tokens_scan(requests);
+        }
+        self.queued_prefill_rem_tokens
+    }
+
+    /// `queued_prefill_tokens` recomputed by scanning (reference path).
+    pub fn queued_prefill_tokens_scan(&self, requests: &[SimRequest]) -> u64 {
         self.prefill_queue
             .iter()
             .map(|j| {
@@ -342,6 +448,44 @@ impl Instance {
                 (r.req.prefill_len - r.prefill_done) as u64
             })
             .sum()
+    }
+
+    /// Assert every cached load counter equals its scan-recomputed
+    /// value. Called after every simulator event in debug-assertion
+    /// builds (`SimParams::debug_audit`); panics on the first drift.
+    pub fn audit_cached_load(&self, requests: &[SimRequest]) {
+        let running: u64 = self
+            .running
+            .iter()
+            .map(|r| requests[r.req_idx].kv_now())
+            .sum();
+        assert_eq!(
+            self.kv_running_tokens, running,
+            "inst {}: cached running KV drifted",
+            self.id
+        );
+        assert_eq!(
+            self.kv_handoff_tokens,
+            self.handoff_kv_scan(requests),
+            "inst {}: cached handoff KV drifted",
+            self.id
+        );
+        let pf_done: u64 = self
+            .prefill_queue
+            .iter()
+            .map(|j| requests[j.req_idx].prefill_done as u64)
+            .sum();
+        assert_eq!(
+            self.kv_prefill_done_tokens, pf_done,
+            "inst {}: cached prefill-done KV drifted",
+            self.id
+        );
+        assert_eq!(
+            self.queued_prefill_rem_tokens,
+            self.queued_prefill_tokens_scan(requests),
+            "inst {}: cached queued-prefill tokens drifted",
+            self.id
+        );
     }
 
     /// Earliest in-flight KV-handoff arrival strictly after `now`
@@ -409,6 +553,11 @@ impl Instance {
         while di < self.decode_queue.len() {
             if self.decode_queue[di].1 <= now {
                 let (req_idx, _) = self.decode_queue.remove(di).unwrap();
+                // Handoff landed: its KV moves from in-flight to
+                // resident in the cached accounting.
+                let kv = requests[req_idx].kv_now();
+                self.kv_handoff_tokens -= kv;
+                self.kv_running_tokens += kv;
                 self.running.push(RunningReq {
                     req_idx,
                     paused: false,
@@ -499,6 +648,8 @@ impl Instance {
         for &(req_idx, take) in &self.current.prefill_slices {
             let r = &mut requests[req_idx];
             r.prefill_done += take;
+            self.kv_prefill_done_tokens += take as u64;
+            self.queued_prefill_rem_tokens -= take as u64;
             if r.prefill_done >= r.req.prefill_len {
                 // Prefill complete → first token emitted now.
                 r.tracker.emit_token(now);
@@ -511,7 +662,11 @@ impl Instance {
                 }
             }
         }
-        // Remove finished prefills from the queue.
+        // Remove finished prefills from the queue; their committed
+        // prompt KV leaves the prefill-queue account with them.
+        for &req_idx in &completed_prefills {
+            self.kv_prefill_done_tokens -= requests[req_idx].prefill_done as u64;
+        }
         self.prefill_queue.retain(|j| {
             let r = &requests[j.req_idx];
             r.prefill_done < r.req.prefill_len
@@ -521,6 +676,7 @@ impl Instance {
             for &req_idx in &completed_prefills {
                 if requests[req_idx].decode_remaining() > 0 {
                     requests[req_idx].decode_instance = Some(self.id);
+                    self.kv_running_tokens += requests[req_idx].kv_now();
                     self.running.push(RunningReq {
                         req_idx,
                         paused: false,
@@ -548,9 +704,11 @@ impl Instance {
             }
             r.tracker.emit_token(now);
             r.decoded += 1;
+            self.kv_running_tokens += 1;
             if r.decoded >= r.req.decode_len {
                 r.finish_ms = Some(now);
                 r.decode_instance = None;
+                self.kv_running_tokens -= r.kv_now();
                 finished += 1;
             } else {
                 still_running.push(slot);
@@ -593,19 +751,22 @@ mod tests {
 
     #[test]
     fn prefill_queue_is_edf_ordered() {
+        let reqs = vec![sim_req(0, 100, 5), sim_req(1, 100, 5), sim_req(2, 100, 5)];
         let mut i = Instance::new(0, Role::Prefill, 1_000_000, 2048);
-        i.push_prefill(PrefillJob { req_idx: 0, deadline: 500 });
-        i.push_prefill(PrefillJob { req_idx: 1, deadline: 100 });
-        i.push_prefill(PrefillJob { req_idx: 2, deadline: 300 });
+        i.push_prefill(PrefillJob { req_idx: 0, deadline: 500 }, &reqs);
+        i.push_prefill(PrefillJob { req_idx: 1, deadline: 100 }, &reqs);
+        i.push_prefill(PrefillJob { req_idx: 2, deadline: 300 }, &reqs);
         let order: Vec<usize> = i.prefill_queue.iter().map(|j| j.req_idx).collect();
         assert_eq!(order, vec![1, 2, 0]);
+        assert_eq!(i.queued_prefill_tokens(&reqs), 300);
+        i.audit_cached_load(&reqs);
     }
 
     #[test]
     fn chunked_prefill_advances_and_completes() {
         let mut reqs = vec![sim_req(0, 1000, 5)];
         let mut i = Instance::new(0, Role::Prefill, 1_000_000, 2048);
-        i.push_prefill(PrefillJob { req_idx: 0, deadline: 1000 });
+        i.push_prefill(PrefillJob { req_idx: 0, deadline: 1000 }, &reqs);
         // Budget 512 → two chunks of 512/488.
         let t1 = i.form_batch(0, &mut reqs, 512, &cm()).unwrap();
         assert!(t1 >= 1);
@@ -621,6 +782,7 @@ mod tests {
         assert_eq!(reqs[0].decoded, 1);
         assert_eq!(reqs[0].first_token_ms, Some(t1 + t2));
         assert!(i.prefill_queue.is_empty());
+        i.audit_cached_load(&reqs);
     }
 
     #[test]
@@ -630,13 +792,14 @@ mod tests {
         reqs[0].decoded = 1; // first token emitted at prefill
         reqs[0].tracker.emit_token(0);
         let mut i = Instance::new(0, Role::Decode, 1_000_000, 2048);
-        i.push_decode(0, 0);
+        i.push_decode(0, 0, &reqs);
         let mut now = 0;
         for step in 0..2 {
             let t = i.form_batch(now, &mut reqs, 0, &cm()).unwrap();
             assert_eq!(i.current.b_decode, 1, "step {step}");
             now += t;
             let (_, fin) = i.complete_iteration(now, &mut reqs);
+            i.audit_cached_load(&reqs);
             if step == 1 {
                 assert_eq!(fin, 1);
             } else {
@@ -646,6 +809,7 @@ mod tests {
         assert_eq!(reqs[0].decoded, 3);
         assert!(reqs[0].is_finished());
         assert!(i.is_empty());
+        assert_eq!(i.kv_used(&reqs), 0, "finished request must free its KV");
     }
 
     #[test]
@@ -654,9 +818,14 @@ mod tests {
         reqs[0].prefill_done = 10;
         reqs[0].decoded = 1;
         let mut i = Instance::new(0, Role::Decode, 1_000_000, 2048);
-        i.push_decode(0, 100); // ready at t=100
+        i.push_decode(0, 100, &reqs); // ready at t=100
+        assert_eq!(i.handoff_kv(&reqs), 11);
         assert!(i.form_batch(50, &mut reqs, 0, &cm()).is_none());
         assert!(i.form_batch(100, &mut reqs, 0, &cm()).is_some());
+        // The landed handoff's KV moved from in-flight to resident.
+        assert_eq!(i.handoff_kv(&reqs), 0);
+        assert_eq!(i.kv_used(&reqs), 11);
+        i.audit_cached_load(&reqs);
     }
 
     #[test]
@@ -668,8 +837,8 @@ mod tests {
             r.decoded = 1;
         }
         let mut i = Instance::new(0, Role::Decode, 500, 2048);
-        i.push_decode(0, 0);
-        i.push_decode(1, 0);
+        i.push_decode(0, 0, &reqs);
+        i.push_decode(1, 0, &reqs);
         let _ = i.form_batch(0, &mut reqs, 0, &cm()).unwrap();
         assert_eq!(i.current.b_decode, 1);
         let paused: Vec<bool> = i.running.iter().map(|r| r.paused).collect();
@@ -687,8 +856,8 @@ mod tests {
         reqs[0].prefill_done = 100;
         reqs[0].decoded = 1;
         let mut i = Instance::new(0, Role::Coloc, 1_000_000, 2048);
-        i.running.push(RunningReq { req_idx: 0, paused: false });
-        i.push_prefill(PrefillJob { req_idx: 1, deadline: 1000 });
+        i.push_running(0, &reqs);
+        i.push_prefill(PrefillJob { req_idx: 1, deadline: 1000 }, &reqs);
         let _ = i.form_batch(0, &mut reqs, 512, &cm()).unwrap();
         assert_eq!(i.current.b_decode, 1);
         assert_eq!(i.current.b_prefill, 512);
@@ -696,6 +865,7 @@ mod tests {
         assert!(done.is_empty());
         assert_eq!(reqs[0].decoded, 2);
         assert_eq!(reqs[1].prefill_done, 512);
+        i.audit_cached_load(&reqs);
         // Next iteration finishes the prefill; request 1 joins decoding.
         let _ = i.form_batch(20, &mut reqs, 512, &cm()).unwrap();
         let (done, _) = i.complete_iteration(40, &mut reqs);
@@ -703,13 +873,14 @@ mod tests {
         assert_eq!(i.running.len(), 2);
         // Request 1 emits its next token only in the following iteration.
         assert_eq!(reqs[1].decoded, 1);
+        i.audit_cached_load(&reqs);
     }
 
     #[test]
     fn completed_prefill_does_not_double_emit_in_same_iteration() {
         let mut reqs = vec![sim_req(0, 64, 3)];
         let mut i = Instance::new(0, Role::Coloc, 1_000_000, 2048);
-        i.push_prefill(PrefillJob { req_idx: 0, deadline: 1000 });
+        i.push_prefill(PrefillJob { req_idx: 0, deadline: 1000 }, &reqs);
         let t = i.form_batch(0, &mut reqs, 2048, &cm()).unwrap();
         let (done, _) = i.complete_iteration(t, &mut reqs);
         assert_eq!(done, vec![0]);
@@ -735,8 +906,8 @@ mod tests {
         reqs[0].prefill_done = 100;
         reqs[0].decoded = 1;
         let mut i = Instance::new(0, Role::Coloc, 1_000_000, 2048);
-        i.running.push(RunningReq { req_idx: 0, paused: false });
-        i.push_prefill(PrefillJob { req_idx: 1, deadline: 1000 });
+        i.push_running(0, &reqs);
+        i.push_prefill(PrefillJob { req_idx: 1, deadline: 1000 }, &reqs);
         let _ = i.form_batch(0, &mut reqs, 0, &cm()).unwrap();
         assert_eq!(i.current.b_decode, 1);
         assert_eq!(i.current.b_prefill, 0);
@@ -769,15 +940,16 @@ mod tests {
             r.decoded = 1;
         }
         let mut i = Instance::new(0, Role::Decode, 1_000_000, 2048);
-        i.push_decode(0, 0);
-        i.push_decode(1, 0);
+        i.push_decode(0, 0, &reqs);
+        i.push_decode(1, 0, &reqs);
         let t = i.form_batch(0, &mut reqs, 0, &cm()).unwrap();
         i.iterating = true;
-        i.push_decode(2, 100); // KV still in flight
+        i.push_decode(2, 100, &reqs); // KV still in flight
         i.begin_drain(1);
         let evicted = i.evict_residents();
         assert_eq!(evicted, vec![0, 1, 2]);
         assert!(i.migrate_on_drain);
+        assert_eq!(i.kv_used(&reqs) + i.handoff_kv(&reqs), 0, "evicted KV must leave");
         // The in-flight iteration emits nothing for evicted requests:
         // no token is decoded both here and at the destination.
         let (_, fin) = i.complete_iteration(t, &mut reqs);
@@ -785,6 +957,7 @@ mod tests {
         assert_eq!(reqs[0].decoded, 1);
         assert_eq!(reqs[1].decoded, 1);
         assert!(i.is_empty());
+        i.audit_cached_load(&reqs);
     }
 
     #[test]
@@ -797,13 +970,62 @@ mod tests {
 
     #[test]
     fn next_handoff_ready_skips_arrived_transfers() {
+        let reqs = vec![sim_req(0, 10, 5), sim_req(1, 10, 5)];
         let mut i = Instance::new(0, Role::Decode, 1_000_000, 2048);
         assert_eq!(i.next_handoff_ready_ms(0), None);
-        i.push_decode(0, 50);
-        i.push_decode(1, 200);
+        i.push_decode(0, 50, &reqs);
+        i.push_decode(1, 200, &reqs);
         assert_eq!(i.next_handoff_ready_ms(0), Some(50));
         assert_eq!(i.next_handoff_ready_ms(50), Some(200));
         assert_eq!(i.next_handoff_ready_ms(200), None);
+    }
+
+    #[test]
+    fn scan_reference_matches_cached_accessors() {
+        let mut reqs = vec![sim_req(0, 300, 5), sim_req(1, 200, 5)];
+        reqs[0].prefill_done = 300;
+        reqs[0].decoded = 4;
+        let mut i = Instance::new(0, Role::Coloc, 1_000_000, 2048);
+        i.push_running(0, &reqs);
+        i.push_prefill(PrefillJob { req_idx: 1, deadline: 1000 }, &reqs);
+        let cached = (
+            i.kv_used(&reqs),
+            i.handoff_kv(&reqs),
+            i.queued_prefill_tokens(&reqs),
+        );
+        i.set_scan_reference(true);
+        let scanned = (
+            i.kv_used(&reqs),
+            i.handoff_kv(&reqs),
+            i.queued_prefill_tokens(&reqs),
+        );
+        assert_eq!(cached, scanned);
+        assert_eq!(cached.0, 304, "running kv_now = 300 prefill + 4 decoded");
+        assert_eq!(cached.2, 200);
+    }
+
+    #[test]
+    #[should_panic(expected = "cached running KV drifted")]
+    fn audit_catches_cache_bypass() {
+        // Pushing onto `running` directly (instead of `push_running`)
+        // desyncs the cached counters — the audit must catch it.
+        let reqs = vec![sim_req(0, 100, 5)];
+        let mut i = Instance::new(0, Role::Decode, 1_000_000, 2048);
+        i.running.push(RunningReq { req_idx: 0, paused: false });
+        i.audit_cached_load(&reqs);
+    }
+
+    #[test]
+    fn clear_helpers_keep_caches_coherent() {
+        let reqs = vec![sim_req(0, 100, 5), sim_req(1, 100, 5)];
+        let mut i = Instance::new(0, Role::Coloc, 1_000_000, 2048);
+        i.push_prefill(PrefillJob { req_idx: 0, deadline: 100 }, &reqs);
+        i.push_decode(1, 50, &reqs);
+        i.clear_prefill_queue();
+        i.clear_decode_queue();
+        assert_eq!(i.queued_prefill_tokens(&reqs), 0);
+        assert_eq!(i.handoff_kv(&reqs), 0);
+        i.audit_cached_load(&reqs);
     }
 
     #[test]

@@ -146,6 +146,10 @@ pub struct SimResult {
     pub throughput_rps: f64,
     /// Requests never finished (stuck/dropped) — should be 0.
     pub unfinished: usize,
+    /// Simulator events processed (arrivals, iteration ends, wakes,
+    /// ticks, lifecycle + migration events) — the denominator of the
+    /// `sim_perf` events/sec throughput metric.
+    pub events_processed: u64,
 }
 
 /// Per-role bounds for the elastic PD prefill tier.
@@ -197,6 +201,11 @@ pub struct SimParams {
     /// Elastic-fleet mechanics; `None` = fixed fleet (seed behaviour:
     /// no lifecycle events are ever scheduled).
     pub elastic: Option<ElasticParams>,
+    /// Run the cache/index coherence audit (`Cluster::audit`) after
+    /// every event in debug-assertion builds. Default on; the
+    /// `sim_perf` timing cells turn it off — with it the bench would
+    /// measure the audit's own full scans, not the hot path.
+    pub debug_audit: bool,
 }
 
 impl Default for SimParams {
@@ -207,6 +216,7 @@ impl Default for SimParams {
             tick_ms: 100,
             max_sim_ms: 48 * 3600 * 1000,
             elastic: None,
+            debug_audit: true,
         }
     }
 }
@@ -244,6 +254,10 @@ pub struct Simulation<'a> {
     now: TimeMs,
     fleet: FleetSeries,
     migration: MigrationStats,
+    events_processed: u64,
+    /// Reused by the Tick safety sweep instead of reallocating a fresh
+    /// `Vec` every 100 ms.
+    tick_scratch: Vec<usize>,
 }
 
 impl<'a> Simulation<'a> {
@@ -290,6 +304,8 @@ impl<'a> Simulation<'a> {
             now: 0,
             fleet: FleetSeries::default(),
             migration: MigrationStats::default(),
+            events_processed: 0,
+            tick_scratch: Vec::new(),
         }
     }
 
@@ -338,6 +354,7 @@ impl<'a> Simulation<'a> {
                 break;
             }
             self.now = t;
+            self.events_processed += 1;
             match key {
                 EventKey::Arrival(idx) => self.handle_arrival(idx, router),
                 EventKey::IterEnd(inst) => {
@@ -391,21 +408,28 @@ impl<'a> Simulation<'a> {
                         self.restart_fed_instances(router);
                         // Safety sweep: restart any idle instance that
                         // still holds work (e.g. queued by a router path
-                        // that forgot to kick it).
-                        let idle: Vec<usize> = self
-                            .cluster
-                            .instances
-                            .iter()
-                            .filter(|i| !i.iterating && i.has_work())
-                            .map(|i| i.id)
-                            .collect();
-                        for inst in idle {
+                        // that forgot to kick it). The scratch Vec is
+                        // reused across ticks instead of reallocated.
+                        let mut idle = std::mem::take(&mut self.tick_scratch);
+                        idle.clear();
+                        idle.extend(
+                            self.cluster
+                                .instances
+                                .iter()
+                                .filter(|i| !i.iterating && i.has_work())
+                                .map(|i| i.id),
+                        );
+                        for &inst in &idle {
                             self.maybe_start_iteration(inst, router);
                         }
+                        self.tick_scratch = idle;
                         // Retire drainers that emptied outside their own
-                        // iteration path (e.g. released by the router).
-                        for id in 0..self.cluster.instances.len() {
-                            self.cluster.retire_if_drained(id, self.now);
+                        // iteration path (e.g. released by the router) —
+                        // skipped outright while nothing is draining.
+                        if self.cluster.draining_any() {
+                            for id in 0..self.cluster.instances.len() {
+                                self.cluster.retire_if_drained(id, self.now);
+                            }
                         }
                         if log::log_enabled!(log::Level::Trace) && self.now % 1000 == 0 {
                             self.log_timeline();
@@ -414,6 +438,12 @@ impl<'a> Simulation<'a> {
                         self.push_event(next, EventKey::Tick);
                     }
                 }
+            }
+            // Coherence audit (debug builds): cached load counters and
+            // membership indices must equal their scan-recomputed
+            // ground truth after *every* event.
+            if cfg!(debug_assertions) && self.params.debug_audit {
+                self.cluster.audit(&self.requests);
             }
             if completed == total {
                 break;
@@ -612,7 +642,7 @@ impl<'a> Simulation<'a> {
             let deadline =
                 self.requests[idx].req.arrival_ms + self.requests[idx].req.slo.ttft_ms;
             self.cluster.instances[inst]
-                .push_prefill(PrefillJob { req_idx: idx, deadline });
+                .push_prefill(PrefillJob { req_idx: idx, deadline }, &self.requests);
             self.maybe_start_iteration(inst, router);
         }
         self.restart_fed_instances(router);
@@ -698,7 +728,7 @@ impl<'a> Simulation<'a> {
         if let Some(d) = target {
             let ready = now + self.params.kv_transfer_ms;
             self.requests[req_idx].decode_instance = Some(d);
-            self.cluster.instances[d].push_decode(req_idx, ready);
+            self.cluster.instances[d].push_decode(req_idx, ready, &self.requests);
             // If the destination stays idle until `ready`,
             // maybe_start_iteration schedules the wake at exactly that
             // time via `next_handoff_ready_ms`.
@@ -716,7 +746,8 @@ impl<'a> Simulation<'a> {
         if let Some(inst) = chosen {
             let deadline =
                 self.requests[req_idx].req.arrival_ms + self.requests[req_idx].req.slo.ttft_ms;
-            self.cluster.instances[inst].push_prefill(PrefillJob { req_idx, deadline });
+            self.cluster.instances[inst]
+                .push_prefill(PrefillJob { req_idx, deadline }, &self.requests);
             self.maybe_start_iteration(inst, router);
         }
     }
@@ -750,7 +781,7 @@ impl<'a> Simulation<'a> {
         let be = self.cluster.best_effort_pool().count();
         let pending_assign = self
             .cluster
-            .assign
+            .assignments()
             .iter()
             .filter(|a| **a == TierAssign::Pending)
             .count();
@@ -812,7 +843,7 @@ impl<'a> Simulation<'a> {
             // cluster) are allocated for their whole lifetime (= the
             // whole run on a fixed fleet); tier-managed instances count
             // their tier-allocation intervals.
-            cost.instance_alloc_ms += match self.cluster.assign[i.id] {
+            cost.instance_alloc_ms += match self.cluster.assign_of(i.id) {
                 TierAssign::Static => i.active_span_ms(span),
                 _ => i.allocated_ms(span),
             };
@@ -850,6 +881,7 @@ impl<'a> Simulation<'a> {
             migration: self.migration,
             sim_span_ms: span,
             throughput_rps,
+            events_processed: self.events_processed,
         }
     }
 }

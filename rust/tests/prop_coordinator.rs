@@ -7,7 +7,7 @@ use polyserve::coordinator::admission;
 use polyserve::figures::run_sim;
 use polyserve::model::CostModel;
 use polyserve::profile::ProfileTable;
-use polyserve::sim::instance::{Instance, Role, RunningReq};
+use polyserve::sim::instance::{Instance, Role};
 use polyserve::sim::SimRequest;
 use polyserve::slo::{DsloTracker, Slo, TierSet};
 use polyserve::util::prop::{check, Gen, IntRange, VecOf};
@@ -40,10 +40,9 @@ fn sim_requests(kvs: &[u64]) -> (Instance, Vec<SimRequest>) {
             finish_ms: None,
             decode_instance: Some(0),
         });
-        inst.running.push(RunningReq {
-            req_idx: i,
-            paused: false,
-        });
+        // Cache-coherent residency (direct `running` pushes would
+        // desync the O(1) load counters).
+        inst.push_running(i, &reqs);
     }
     (inst, reqs)
 }

@@ -328,7 +328,7 @@ fn prefill_feasibility_tracks_inserted_job_not_its_twin() {
     };
     // Queue a twin job: same effective deadline (5000 − tpot 50) and
     // the same 600 remaining tokens as the candidate below.
-    cluster.instances[0].push_prefill(PrefillJob { req_idx: 0, deadline: 5_000 });
+    cluster.instances[0].push_prefill(PrefillJob { req_idx: 0, deadline: 5_000 }, &reqs);
     let queued_finish = {
         let ctx = RouteCtx {
             now: 0,
@@ -807,6 +807,188 @@ fn predictive_prefill_elastic_run_completes_with_exact_tokens() {
         res.fleet.samples.iter().all(|s| s.active_prefill >= 1),
         "prefill tier drained below its floor"
     );
+}
+
+// ---------------------------------------------------------------------
+// O(1) incremental load accounting + indexed fleet views (PR 4).
+// ---------------------------------------------------------------------
+
+/// Wraps any autoscaler and re-audits the whole cluster (cached load
+/// counters vs scans, membership indices vs the assign vector) at
+/// every `ScaleEval` — on top of the simulator's own per-event debug
+/// audit, this pins the ISSUE's "cached == recomputed at every
+/// ScaleEval" property to an explicit, countable check.
+struct AuditEveryEval {
+    inner: Box<dyn Autoscaler>,
+    evals: usize,
+}
+
+impl Autoscaler for AuditEveryEval {
+    fn evaluate(&mut self, now: TimeMs, ctx: &mut RouteCtx) -> Vec<ScaleAction> {
+        ctx.cluster.audit(ctx.requests);
+        self.evals += 1;
+        self.inner.evaluate(now, ctx)
+    }
+
+    fn name(&self) -> String {
+        format!("audited-{}", self.inner.name())
+    }
+
+    fn take_rate_series(&mut self) -> Vec<polyserve::metrics::RateSample> {
+        self.inner.take_rate_series()
+    }
+}
+
+/// The full elastic + diurnal + migration + elastic-prefill sweep under
+/// the predictive scaler, with the cluster audited at every ScaleEval
+/// (and, in this debug build, after every simulator event): any drift
+/// between a cached counter / membership index and its scan-recomputed
+/// ground truth panics the run.
+#[test]
+fn cached_counters_match_scans_at_every_scale_eval() {
+    let mut cfg = SimConfig {
+        trace: TraceKind::ShareGpt,
+        policy: Policy::PolyServe,
+        mode: ServingMode::PdDisaggregated,
+        instances: 6,
+        requests: 400,
+        rate_frac_of_optimal: 0.5,
+        seed: 19,
+        ..Default::default()
+    };
+    cfg.diurnal = Some(DiurnalSpec { peak_to_trough: 3.0, period_s: 120.0 });
+    cfg.elastic.scaler = ScalerKind::Predictive;
+    cfg.elastic.min_instances = 2;
+    cfg.elastic.max_instances = 10;
+    cfg.elastic.provision_delay_ms = 5_000;
+    cfg.elastic.scale_eval_ms = 1_000;
+    cfg.elastic.migration = true;
+    cfg.elastic.prefill_elastic = true;
+    cfg.elastic.prefill_min = 1;
+    cfg.elastic.prefill_max = 5;
+    let exp = Experiment::prepare(&cfg);
+    let cluster = Cluster::build(
+        exp.cfg.mode,
+        exp.cfg.instances,
+        exp.cfg.prefill_frac,
+        exp.cfg.tiers.len(),
+        &exp.cost_model,
+        true,
+    );
+    let params = SimParams {
+        mode: exp.cfg.mode,
+        elastic: Some(ElasticParams {
+            min_instances: 2,
+            max_instances: 10,
+            provision_delay_ms: 5_000,
+            scale_eval_ms: 1_000,
+            migration: true,
+            prefill: Some(PrefillElastic { min_instances: 1, max_instances: 5 }),
+        }),
+        ..Default::default()
+    };
+    let sim = Simulation::new(
+        params,
+        exp.cost_model.clone(),
+        &exp.profile,
+        &exp.workload,
+        cluster,
+        &exp.cfg.tiers,
+    );
+    let mut router = make_router(&exp.cfg, exp.workload.avg_decode_len());
+    let mut scaler = AuditEveryEval {
+        inner: polyserve::coordinator::make_autoscaler(&exp.cfg).expect("elastic cfg"),
+        evals: 0,
+    };
+    let res = sim.run_elastic(router.as_mut(), Some(&mut scaler));
+    assert_eq!(res.unfinished, 0);
+    assert!(
+        scaler.evals > 10,
+        "the audit must actually have run at ScaleEvals, got {}",
+        scaler.evals
+    );
+}
+
+/// Decision-identity: the cached/indexed hot path must reproduce the
+/// scan-based reference path's `SimResult` bit-for-bit — per-request
+/// outcomes, attainment, cost, fleet series, migration stats, and even
+/// the processed-event count — across both serving modes, with the
+/// full elastic + diurnal + migration + elastic-prefill machinery on.
+#[test]
+fn indexed_run_reproduces_scan_reference_bit_for_bit() {
+    let mut pd = SimConfig {
+        trace: TraceKind::ShareGpt,
+        policy: Policy::PolyServe,
+        mode: ServingMode::PdDisaggregated,
+        instances: 6,
+        requests: 400,
+        rate_frac_of_optimal: 0.5,
+        seed: 23,
+        ..Default::default()
+    };
+    pd.diurnal = Some(DiurnalSpec { peak_to_trough: 3.0, period_s: 120.0 });
+    pd.elastic.scaler = ScalerKind::Predictive;
+    pd.elastic.min_instances = 2;
+    pd.elastic.max_instances = 10;
+    pd.elastic.provision_delay_ms = 5_000;
+    pd.elastic.scale_eval_ms = 1_000;
+    pd.elastic.migration = true;
+    pd.elastic.prefill_elastic = true;
+    pd.elastic.prefill_min = 1;
+    pd.elastic.prefill_max = 5;
+
+    let mut co = SimConfig {
+        trace: TraceKind::ShareGpt,
+        policy: Policy::PolyServe,
+        mode: ServingMode::Colocated,
+        instances: 6,
+        requests: 400,
+        rate_frac_of_optimal: 0.6,
+        seed: 29,
+        ..Default::default()
+    };
+    co.diurnal = Some(DiurnalSpec { peak_to_trough: 3.0, period_s: 120.0 });
+    co.elastic.scaler = ScalerKind::Gradient;
+    co.elastic.min_instances = 2;
+    co.elastic.max_instances = 10;
+    co.elastic.provision_delay_ms = 5_000;
+    co.elastic.scale_eval_ms = 1_000;
+    co.elastic.migration = true;
+
+    let fixed = SimConfig {
+        trace: TraceKind::ShareGpt,
+        policy: Policy::PolyServe,
+        mode: ServingMode::PdDisaggregated,
+        instances: 8,
+        requests: 400,
+        rate_frac_of_optimal: 0.7,
+        seed: 31,
+        ..Default::default()
+    };
+
+    for (label, cfg) in [("pd_elastic", pd), ("coloc_elastic", co), ("pd_fixed", fixed)] {
+        let indexed = Experiment::prepare(&cfg).run();
+        let mut scan_exp = Experiment::prepare(&cfg);
+        scan_exp.scan_reference = true;
+        let scan = scan_exp.run();
+        assert_eq!(indexed.outcomes, scan.outcomes, "{label}: outcomes diverged");
+        assert_eq!(indexed.attainment, scan.attainment, "{label}");
+        assert_eq!(indexed.cost, scan.cost, "{label}: cost diverged");
+        assert_eq!(indexed.fleet, scan.fleet, "{label}: fleet series diverged");
+        assert_eq!(indexed.migration, scan.migration, "{label}");
+        assert_eq!(indexed.sim_span_ms, scan.sim_span_ms, "{label}");
+        assert_eq!(
+            indexed.throughput_rps.to_bits(),
+            scan.throughput_rps.to_bits(),
+            "{label}"
+        );
+        assert_eq!(indexed.unfinished, scan.unfinished, "{label}");
+        assert_eq!(
+            indexed.events_processed, scan.events_processed,
+            "{label}: event schedule diverged"
+        );
+        assert_eq!(indexed.unfinished, 0, "{label}");
+    }
 }
 
 /// Full-system property: an elastic diurnal run with the gradient

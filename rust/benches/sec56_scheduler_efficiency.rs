@@ -63,6 +63,10 @@ fn setup(n_servers: usize, seed: u64) -> (Cluster, Vec<SimRequest>) {
             // sync (pushing `running` directly would desync them).
             cluster.instances[id].push_running(idx, &requests);
         }
+        // Re-key discipline: the load-ordered tier indices must see the
+        // fixture's hand-built residency, exactly as the simulator
+        // re-keys after every mutation.
+        cluster.refresh_load(id);
     }
     // Fresh decode-phase requests to route.
     for i in 0..4096 {
@@ -113,9 +117,11 @@ fn main() {
                 i += 1;
                 let target = router.route_decode(1_000, idx, &mut ctx);
                 // Undo state mutation so the cluster stays steady
-                // (cache-coherently: the handoff KV counter resets too).
+                // (cache-coherently: the handoff KV counter resets and
+                // the ordered index is re-keyed, as the real loop would).
                 if let Some(t) = target {
                     ctx.cluster.instances[t].clear_decode_queue();
+                    ctx.cluster.refresh_load(t);
                 }
                 std::hint::black_box(target);
             },
@@ -148,6 +154,7 @@ fn main() {
                 let target = router.route_decode(1_000, idx, &mut ctx);
                 if let Some(t) = target {
                     ctx.cluster.instances[t].clear_decode_queue();
+                    ctx.cluster.refresh_load(t);
                 }
                 std::hint::black_box(target);
             },

@@ -1,31 +1,40 @@
-//! Simulator-throughput benchmark: the first point of the repo's perf
-//! trajectory (`BENCH_sim_perf.json` at the repo root).
+//! Simulator-throughput benchmark: the repo's perf trajectory
+//! (`BENCH_sim_perf.json` at the repo root — this PR plants its second
+//! point, the load-ordered fleet indices).
 //!
 //! Sweeps large-fleet, high-rate scenarios and reports **simulated
 //! events per second of wall clock** and wall clock per cell. Every
-//! scenario runs twice — once on the indexed/cached hot path (this
-//! PR) and once through the scan-based reference path
-//! (`Experiment::scan_reference`), which restores the pre-PR
-//! O(fleet × batch)-per-event membership scans and per-candidate
-//! resident rescans (the dominant hot-path costs; the PR's satellite
-//! micro-optimizations — pending short-circuit, sweep narrowing,
-//! scratch reuse — stay active in both paths, so the reported ratio
-//! is a *conservative floor* on the true pre-PR speedup). Both runs
-//! simulate identical workload bytes, and a digest over every
-//! per-request outcome is asserted equal between the two paths in
-//! *all* modes: the optimization must be decision-identical, not just
-//! fast.
+//! scenario runs three times:
 //!
-//! Scenarios fan out via `par_map`, but a scenario's indexed and scan
-//! halves are timed back-to-back *inside one worker* — the ratio
-//! never compares cells that ran under different pool contention.
-//! The per-event debug audit is disabled in the timed runs — with it
-//! the bench would measure the audit's own full scans
-//! ([profile.bench] keeps debug-assertions on).
+//! * `ordered` — this PR's hot path: load-ordered tier walks (no
+//!   per-placement sort or collect) + O(1) unplaced demand;
+//! * `indexed` — the PR-4 reference (`Experiment::indexed_reference`):
+//!   id-indexed membership and cached O(1) load counters, but a
+//!   materialize-and-sort per placement and scan-reconstructed
+//!   unplaced demand;
+//! * `scan` — the pre-PR-4 reference (`Experiment::scan_reference`):
+//!   full-fleet membership scans and per-candidate resident rescans.
+//!
+//! All three simulate identical workload bytes, and a digest over every
+//! per-request outcome is asserted equal across all three paths in
+//! *all* modes (not just smoke): each optimization layer must be
+//! decision-identical, not just fast. The satellite micro-optimizations
+//! (pending short-circuit, sweep narrowing, scratch reuse, cached tier
+//! orders, k-least drain selection) stay active in every path, so the
+//! reported ratios are conservative floors on the true historical
+//! speedups.
+//!
+//! Scenarios fan out via `par_map`, but a scenario's three halves are
+//! timed back-to-back *inside one worker* — a ratio never compares
+//! cells that ran under different pool contention. The per-event debug
+//! audit is disabled in the timed runs — with it the bench would
+//! measure the audit's own full scans ([profile.bench] keeps
+//! debug-assertions on).
 //!
 //! `POLYSERVE_SMOKE=1` shrinks the sweep and hard-asserts the CI gate:
 //! events/sec > 0 in every cell, every cell finishes all requests,
-//! the digests match, and `BENCH_sim_perf.json` is emitted and parses.
+//! the three digests match, and `BENCH_sim_perf.json` is emitted and
+//! parses. CI uploads `results/sim_perf.csv` as a build artifact.
 
 use polyserve::analysis::ServingMode;
 use polyserve::config::{DiurnalSpec, Policy, ScalerKind, SimConfig};
@@ -48,11 +57,27 @@ struct Scenario {
     elastic: bool,
 }
 
-#[derive(Clone, Copy)]
-struct Cell {
-    scenario: Scenario,
-    /// true = pre-PR scan-based reference path.
-    scan: bool,
+/// Which hot-path generation a cell runs on.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Path {
+    /// This PR: load-ordered tier walks + O(1) unplaced demand.
+    Ordered,
+    /// PR-4 reference: indexed membership + cached loads, sorted walks.
+    Indexed,
+    /// Pre-PR-4 reference: full membership + resident scans.
+    Scan,
+}
+
+impl Path {
+    const ALL: [Path; 3] = [Path::Ordered, Path::Indexed, Path::Scan];
+
+    fn name(self) -> &'static str {
+        match self {
+            Path::Ordered => "ordered",
+            Path::Indexed => "indexed",
+            Path::Scan => "scan",
+        }
+    }
 }
 
 struct CellOut {
@@ -64,8 +89,14 @@ struct CellOut {
     digest: u64,
 }
 
+impl CellOut {
+    fn events_per_sec(&self) -> f64 {
+        self.events as f64 / self.wall_s
+    }
+}
+
 /// FNV-1a over every per-request outcome plus the run totals: any
-/// scheduling divergence between the indexed and scan paths flips it.
+/// scheduling divergence between the three paths flips it.
 fn digest(res: &SimResult) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     let mut mix = |x: u64| {
@@ -86,8 +117,7 @@ fn digest(res: &SimResult) -> u64 {
     h
 }
 
-fn run_cell(c: &Cell) -> CellOut {
-    let s = c.scenario;
+fn run_cell(s: &Scenario, path: Path) -> CellOut {
     let mut cfg = SimConfig {
         trace: TraceKind::ShareGpt,
         mode: s.mode,
@@ -107,10 +137,11 @@ fn run_cell(c: &Cell) -> CellOut {
         cfg.elastic.scale_eval_ms = 1_000;
         cfg.elastic.migration = true;
     }
-    // Experiment::prepare is deterministic in cfg, so the scan and
-    // indexed halves of a pair simulate identical workload bytes.
+    // Experiment::prepare is deterministic in cfg, so the three path
+    // cells of a scenario simulate identical workload bytes.
     let mut exp = Experiment::prepare(&cfg);
-    exp.scan_reference = c.scan;
+    exp.scan_reference = path == Path::Scan;
+    exp.indexed_reference = path == Path::Indexed;
     exp.debug_audit = false; // timing: don't measure the audit itself
     let t0 = Instant::now();
     let res = exp.run();
@@ -161,37 +192,37 @@ fn main() {
     };
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
 
-    // One par_map item per scenario; each worker times its indexed and
-    // scan halves back-to-back so the pair shares identical pool
-    // contention and the speedup ratio is reproducible.
-    let pairs: Vec<(Scenario, CellOut, CellOut)> =
+    // One par_map item per scenario; each worker times its three path
+    // cells back-to-back so the triple shares identical pool contention
+    // and the speedup ratios are reproducible.
+    let triples: Vec<(Scenario, [CellOut; 3])> =
         par_map(scenarios.clone(), threads, move |_, scenario| {
-            let indexed = run_cell(&Cell { scenario, scan: false });
-            let scan = run_cell(&Cell { scenario, scan: true });
-            (scenario, indexed, scan)
+            let outs = Path::ALL.map(|p| run_cell(&scenario, p));
+            (scenario, outs)
         });
-    let results: Vec<(Cell, &CellOut)> = pairs
+    let results: Vec<(Scenario, Path, &CellOut)> = triples
         .iter()
-        .flat_map(|(s, indexed, scan)| {
-            [
-                (Cell { scenario: *s, scan: false }, indexed),
-                (Cell { scenario: *s, scan: true }, scan),
-            ]
+        .flat_map(|(s, outs)| {
+            Path::ALL
+                .iter()
+                .zip(outs.iter())
+                .map(|(&p, o)| (*s, p, o))
+                .collect::<Vec<_>>()
         })
         .collect();
 
     let mut rows = Vec::new();
-    for (c, r) in &results {
+    for (s, p, r) in &results {
         rows.push(vec![
-            c.scenario.name.to_string(),
-            c.scenario.mode.name().to_string(),
-            if c.scan { "scan" } else { "indexed" }.to_string(),
-            c.scenario.instances.to_string(),
-            c.scenario.requests.to_string(),
+            s.name.to_string(),
+            s.mode.name().to_string(),
+            p.name().to_string(),
+            s.instances.to_string(),
+            s.requests.to_string(),
             r.events.to_string(),
             (r.sim_span_ms / 1000).to_string(),
             f(r.wall_s, 3),
-            fmt_count(r.events as f64 / r.wall_s),
+            fmt_count(r.events_per_sec()),
             f(r.attain, 3),
             r.unfinished.to_string(),
         ]);
@@ -214,73 +245,90 @@ fn main() {
         &rows,
     );
 
-    // Per-scenario speedup (indexed over scan) + decision-identity.
-    let mut speedups: Vec<(&str, f64)> = Vec::new();
-    for (s, idx, scan) in &pairs {
-        assert_eq!(
-            idx.digest, scan.digest,
-            "{}: indexed path diverged from the scan reference — \
-             the optimization changed a scheduling decision",
-            s.name
-        );
-        assert_eq!(idx.events, scan.events, "{}: event count diverged", s.name);
-        let speedup = (idx.events as f64 / idx.wall_s) / (scan.events as f64 / scan.wall_s);
-        speedups.push((s.name, speedup));
+    // Per-scenario speedups + decision-identity across all three paths.
+    let mut sp_ordered_scan: Vec<(&str, f64)> = Vec::new();
+    let mut sp_ordered_indexed: Vec<(&str, f64)> = Vec::new();
+    let mut sp_indexed_scan: Vec<(&str, f64)> = Vec::new();
+    for (s, [ordered, indexed, scan]) in &triples {
+        for (other, r) in [("indexed", indexed), ("scan", scan)] {
+            assert_eq!(
+                ordered.digest, r.digest,
+                "{}: ordered path diverged from the {other} reference — \
+                 the optimization changed a scheduling decision",
+                s.name
+            );
+            assert_eq!(
+                ordered.events, r.events,
+                "{}: event count diverged vs {other}",
+                s.name
+            );
+        }
+        sp_ordered_scan.push((s.name, ordered.events_per_sec() / scan.events_per_sec()));
+        sp_ordered_indexed
+            .push((s.name, ordered.events_per_sec() / indexed.events_per_sec()));
+        sp_indexed_scan.push((s.name, indexed.events_per_sec() / scan.events_per_sec()));
         println!(
-            "  {:<20} {:>8} events  indexed {:>10}/s  scan {:>10}/s  speedup {:.2}x",
+            "  {:<20} {:>8} events  ordered {:>10}/s  indexed {:>10}/s  scan {:>10}/s  \
+             ord/scan {:.2}x  ord/idx {:.2}x",
             s.name,
-            idx.events,
-            fmt_count(idx.events as f64 / idx.wall_s),
-            fmt_count(scan.events as f64 / scan.wall_s),
-            speedup
+            ordered.events,
+            fmt_count(ordered.events_per_sec()),
+            fmt_count(indexed.events_per_sec()),
+            fmt_count(scan.events_per_sec()),
+            ordered.events_per_sec() / scan.events_per_sec(),
+            ordered.events_per_sec() / indexed.events_per_sec(),
         );
     }
 
-    // Repo-root perf-trajectory artifact.
+    // Repo-root perf-trajectory artifact (second point: ordered cells).
     let mut root = Json::obj();
     root.set("bench", Json::Str("sim_perf".into()));
     root.set("unit", Json::Str("simulated events per wall-clock second".into()));
     root.set("smoke", Json::Bool(smoke));
     root.set("full", Json::Bool(full));
     let mut cells_json = Vec::new();
-    for (c, r) in &results {
+    for (s, p, r) in &results {
         let mut o = Json::obj();
-        o.set("scenario", Json::Str(c.scenario.name.into()))
-            .set("mode", Json::Str(c.scenario.mode.name().into()))
-            .set(
-                "path",
-                Json::Str(if c.scan { "scan" } else { "indexed" }.into()),
-            )
-            .set("instances", Json::Num(c.scenario.instances as f64))
-            .set("requests", Json::Num(c.scenario.requests as f64))
+        o.set("scenario", Json::Str(s.name.into()))
+            .set("mode", Json::Str(s.mode.name().into()))
+            .set("path", Json::Str(p.name().into()))
+            .set("instances", Json::Num(s.instances as f64))
+            .set("requests", Json::Num(s.requests as f64))
             .set("events", Json::Num(r.events as f64))
             .set("sim_span_ms", Json::Num(r.sim_span_ms as f64))
             .set("wall_s", Json::Num(r.wall_s))
-            .set("events_per_sec", Json::Num(r.events as f64 / r.wall_s))
+            .set("events_per_sec", Json::Num(r.events_per_sec()))
             .set("attainment", Json::Num(r.attain))
             .set("unfinished", Json::Num(r.unfinished as f64));
         cells_json.push(o);
     }
     root.set("cells", Json::Arr(cells_json));
-    let mut sp = Json::obj();
-    for (name, x) in &speedups {
-        sp.set(name, Json::Num(*x));
+    for (label, sps) in [
+        ("speedup_ordered_over_scan", &sp_ordered_scan),
+        ("speedup_ordered_over_indexed", &sp_ordered_indexed),
+        ("speedup_indexed_over_scan", &sp_indexed_scan),
+    ] {
+        let mut sp = Json::obj();
+        for (name, x) in sps {
+            sp.set(name, Json::Num(*x));
+        }
+        root.set(label, sp);
     }
-    root.set("speedup_indexed_over_scan", sp);
     let payload = root.pretty() + "\n";
     std::fs::write("BENCH_sim_perf.json", &payload).expect("write BENCH_sim_perf.json");
     println!("  [json] wrote BENCH_sim_perf.json");
 
     // CI smoke gate: hard asserts, not just a CSV.
     if smoke {
-        for (c, r) in &results {
-            assert!(r.events > 0, "{}: no events simulated", c.scenario.name);
+        for (s, p, r) in &results {
+            assert!(r.events > 0, "{}: no events simulated", s.name);
             assert!(r.wall_s > 0.0);
             assert_eq!(
-                r.unfinished, 0,
+                r.unfinished,
+                0,
                 "{}/{}: cell left requests unfinished",
-                c.scenario.name,
-                if c.scan { "scan" } else { "indexed" }
+                s.name,
+                p.name()
             );
             assert!((0.0..=1.0).contains(&r.attain));
         }
@@ -290,7 +338,13 @@ fn main() {
             parsed.get("cells").and_then(|c| c.as_arr()).map(|a| a.len()),
             Some(results.len())
         );
-        assert!(parsed.get("speedup_indexed_over_scan").is_some());
+        for key in [
+            "speedup_ordered_over_scan",
+            "speedup_ordered_over_indexed",
+            "speedup_indexed_over_scan",
+        ] {
+            assert!(parsed.get(key).is_some(), "missing {key}");
+        }
         println!("smoke invariants OK ({} cells)", results.len());
     }
     bench.finish();

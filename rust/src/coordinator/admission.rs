@@ -37,7 +37,10 @@ pub struct LoadEstimate {
 /// every queue mutation) instead of rescanning residents — this is the
 /// routing hot path, called once per candidate per placement. In
 /// scan-reference mode the accessors recompute, reproducing the pre-PR
-/// cost *and* values exactly.
+/// cost *and* values exactly. The `(batch, kv_now)` pair returned here
+/// is byte-identical to `Instance::load_key`, the tuple the cluster's
+/// load-ordered tier indices are keyed on — so an ordered walk visits
+/// candidates in exactly the order sorting these estimates would.
 pub fn load_estimate(inst: &Instance, requests: &[SimRequest], profile: &ProfileTable) -> LoadEstimate {
     let batch = inst.decode_batch_now();
     let kv_now = inst.kv_used(requests) + inst.handoff_kv(requests);

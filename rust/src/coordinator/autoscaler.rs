@@ -144,28 +144,43 @@ pub fn scaling_role(mode: ServingMode) -> Role {
 }
 
 /// Arrived, unfinished requests resident on no instance — the demand
-/// the router is holding in its pending queues (it cannot be read
-/// directly; residency is reconstructed from instance queues).
+/// the router is holding in its pending queues. O(1) off the cluster's
+/// incremental arrival / finish / residency counters (maintained by
+/// `note_arrival` / `note_finished` / `refresh_load` at every event);
+/// the pre-PR reconstruction scan survives as
+/// [`Cluster::unplaced_demand_scan`](crate::sim::Cluster::unplaced_demand_scan)
+/// — the per-event debug-audit oracle and the path both reference modes
+/// take (the scan *was* the per-epoch cost of both baselines).
 fn unplaced_demand(ctx: &RouteCtx) -> usize {
-    let mut placed = vec![false; ctx.requests.len()];
-    for i in &ctx.cluster.instances {
-        for j in &i.prefill_queue {
-            placed[j.req_idx] = true;
-        }
-        for &(r, _) in &i.decode_queue {
-            placed[r] = true;
-        }
-        for s in &i.running {
-            placed[s.req_idx] = true;
+    if ctx.cluster.is_scan_reference() || ctx.cluster.is_indexed_reference() {
+        return ctx.cluster.unplaced_demand_scan(ctx.requests, ctx.now);
+    }
+    ctx.cluster.unplaced_demand()
+}
+
+/// The `k` least-loaded work-accepting instances of `role`, ordered by
+/// `(decode_batch_now, queued_prefill_tokens)` with ascending-id ties —
+/// exactly the prefix the old stable `sort_by_key` over the collected
+/// role view produced, selected in O(role × k) (k ≤ [`MAX_DRAIN_STEP`])
+/// with a k-slot buffer instead of an O(role log role) sort + collect
+/// per drain epoch.
+fn k_least_loaded(ctx: &RouteCtx, role: Role, k: usize) -> Vec<usize> {
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut best: Vec<((u64, u64), usize)> = Vec::with_capacity(k + 1);
+    for id in ctx.cluster.with_role(role) {
+        let i = &ctx.cluster.instances[id];
+        let key = (i.decode_batch_now(), i.queued_prefill_tokens(ctx.requests));
+        // Ascending-id iteration: comparing (key, id) reproduces the
+        // stable sort's tie order bit-for-bit.
+        let pos = best.partition_point(|&e| e <= (key, id));
+        if pos < k {
+            best.insert(pos, (key, id));
+            best.truncate(k);
         }
     }
-    ctx.requests
-        .iter()
-        .enumerate()
-        .filter(|(idx, r)| {
-            r.req.arrival_ms <= ctx.now && r.finish_ms.is_none() && !placed[*idx]
-        })
-        .count()
+    best.into_iter().map(|(_, id)| id).collect()
 }
 
 /// How many *additional* requests `inst` could admit while keeping its
@@ -815,10 +830,12 @@ impl Autoscaler for PredictiveAutoscaler {
         };
         // Reactive backstop: visible unplaced demand means the model
         // under-sized (length misprediction, burst inside the window) —
-        // grow past the plan rather than strand requests. The O(total
-        // requests) residency scan only runs when the fleet shows
-        // stress (no scalable instance idle): with an empty server
-        // available, capacity is not what's holding demand back.
+        // grow past the plan rather than strand requests. The demand
+        // read is O(1) off the incremental counter (the pre-PR O(total
+        // requests) residency scan is the reference-mode path), and is
+        // still gated on fleet stress (no scalable instance idle): with
+        // an empty server available, capacity is not what's holding
+        // demand back.
         let fleet_saturated = ctx
             .cluster
             .with_role(role)
@@ -842,16 +859,8 @@ impl Autoscaler for PredictiveAutoscaler {
             self.drain_streak += 1;
             if self.drain_streak >= self.patience {
                 self.drain_streak = 0;
-                let mut ids: Vec<usize> = ctx.cluster.with_role(role).collect();
-                ids.sort_by_key(|&id| {
-                    let i = &ctx.cluster.instances[id];
-                    (i.decode_batch_now(), i.queued_prefill_tokens(ctx.requests))
-                });
-                for (n, &inst) in ids
-                    .iter()
-                    .take((active - required).min(MAX_DRAIN_STEP))
-                    .enumerate()
-                {
+                let take = (active - required).min(MAX_DRAIN_STEP);
+                for (n, inst) in k_least_loaded(ctx, role, take).into_iter().enumerate() {
                     // Only the first drain of a batch may migrate: the
                     // feasibility gate is evaluated against the
                     // *current* fleet, and a second simultaneous

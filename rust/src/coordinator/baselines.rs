@@ -17,7 +17,10 @@
 //! role indices and `load_estimate`/`queued_prefill_tokens` read the
 //! instances' cached O(1) load counters, so even these full-fleet
 //! min-scans are O(fleet) with O(1) work per candidate — no rescans of
-//! resident requests.
+//! resident requests. (The *load-ordered* tier indices are a
+//! PolyServe-router concern: baselines place by full-role min scans,
+//! which need every candidate anyway, so an ordered walk buys them
+//! nothing.)
 
 use super::admission::load_estimate;
 use super::autoscaler::scaling_role;

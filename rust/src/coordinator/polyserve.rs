@@ -42,6 +42,13 @@ pub struct PolyServeRouter {
     /// `drain_pending` (called on every iteration end and tick) return
     /// in O(1) on the common all-placed fast path.
     pending_total: usize,
+    /// Full candidate tier order per tier (own tier + promotion, or
+    /// promotion-first under the eager ablation) — cached at
+    /// construction so neither the placement ladder nor the
+    /// relaxed/forced paths reallocate it per routed request. The bare
+    /// promotion order is the slice of this with the own tier stripped
+    /// ([`Self::promo_order`]), so there is a single source of truth.
+    order: Vec<Vec<usize>>,
     mode: ServingMode,
     /// PD prefill static budget (dynamic chunking modulates it).
     prefill_budget: u64,
@@ -85,12 +92,29 @@ impl PolyServeRouter {
     /// Build from a config; `avg_decode_len` is the workload's mean output
     /// length, the only output-length knowledge the §4.5 predictors get.
     pub fn new(cfg: &SimConfig, avg_decode_len: f64) -> PolyServeRouter {
+        let n_tiers = cfg.tiers.len();
+        let order: Vec<Vec<usize>> = (0..n_tiers)
+            .map(|k| {
+                let mut o = Vec::with_capacity(k + 1);
+                if cfg.features.eager_promotion {
+                    o.extend(cfg.tiers.promotion_order(k)); // tighter first
+                    o.push(k);
+                } else {
+                    o.push(k);
+                    if cfg.features.lazy_promotion {
+                        o.extend(cfg.tiers.promotion_order(k));
+                    }
+                }
+                o
+            })
+            .collect();
         PolyServeRouter {
             tiers: cfg.tiers.clone(),
             features: cfg.features.clone(),
             avg_decode_len,
-            pending: (0..cfg.tiers.len()).map(|_| VecDeque::new()).collect(),
+            pending: (0..n_tiers).map(|_| VecDeque::new()).collect(),
             pending_total: 0,
+            order,
             mode: cfg.mode,
             prefill_budget: DEFAULT_PREFILL_BUDGET,
             stats: RouterStats::default(),
@@ -99,45 +123,67 @@ impl PolyServeRouter {
 
     /// Candidate tier order for a tier-k request: own tier first, then
     /// (lazy promotion) tighter tiers nearest-first — or tighter tiers
-    /// first under the eager-promotion ablation.
-    fn tier_order(&self, k: usize) -> Vec<usize> {
-        let mut order = Vec::with_capacity(k + 1);
-        if self.features.eager_promotion {
-            order.extend(self.tiers.promotion_order(k)); // tighter first
-            order.push(k);
-        } else {
-            order.push(k);
-            if self.features.lazy_promotion {
-                order.extend(self.tiers.promotion_order(k));
-            }
-        }
-        order
+    /// first under the eager-promotion ablation. Cached at construction.
+    fn tier_order(&self, k: usize) -> &[usize] {
+        &self.order[k]
     }
 
-    /// Pick the §4.3 load-gradient target among `candidates` (instance
-    /// ids) that pass `admit`; highest load first (or lowest when the
-    /// load-gradient feature is ablated off).
+    /// The cached promotion order for tier `k`: [`Self::tier_order`]
+    /// with the own tier stripped — the trailing `k` under eager
+    /// promotion, the leading `k` otherwise (empty when no promotion
+    /// feature is on, since the order is then just `[k]`).
+    fn promo_order(&self, k: usize) -> &[usize] {
+        let o = &self.order[k];
+        if self.features.eager_promotion {
+            &o[..o.len() - 1]
+        } else {
+            &o[1..]
+        }
+    }
+
+    /// Pick the §4.3 load-gradient target in `tier` that passes
+    /// `admit`: highest load first (or lowest when the load-gradient
+    /// feature is ablated off).
+    ///
+    /// Default path: walk the cluster's load-ordered tier index with
+    /// early exit at the first admission — descending `(batch, kv, id)`
+    /// forward, or the same set reversed for the ablation — O(probed)
+    /// per placement with no allocation and no sort. The reference
+    /// modes reproduce the older per-placement costs bit-for-bit: the
+    /// PR-4 indexed mode materializes the tier and sorts it (cached
+    /// O(1) load reads underneath), scan mode does the same over the
+    /// full-scan membership views with rescanning load accessors.
     fn pick_by_gradient(
         &self,
         ctx: &RouteCtx,
-        candidates: impl Iterator<Item = usize>,
+        tier: usize,
         admit: impl Fn(&RouteCtx, usize) -> bool,
     ) -> Option<usize> {
-        let mut scored: Vec<(u64, u64, usize)> = candidates
-            .map(|id| {
-                let est = load_estimate(&ctx.cluster.instances[id], ctx.requests, ctx.profile);
-                (est.batch, est.kv_now, id)
-            })
-            .collect();
-        if self.features.load_gradient {
-            scored.sort_unstable_by(|a, b| b.cmp(a)); // highest load first
-        } else {
-            scored.sort_unstable(); // least loaded first (ablation)
+        if ctx.cluster.is_scan_reference() || ctx.cluster.is_indexed_reference() {
+            let mut scored: Vec<(u64, u64, usize)> = ctx
+                .cluster
+                .in_tier(tier)
+                .map(|id| {
+                    let est =
+                        load_estimate(&ctx.cluster.instances[id], ctx.requests, ctx.profile);
+                    (est.batch, est.kv_now, id)
+                })
+                .collect();
+            if self.features.load_gradient {
+                scored.sort_unstable_by(|a, b| b.cmp(a)); // highest load first
+            } else {
+                scored.sort_unstable(); // least loaded first (ablation)
+            }
+            return scored
+                .into_iter()
+                .map(|(_, _, id)| id)
+                .find(|&id| admit(ctx, id));
         }
-        scored
-            .into_iter()
-            .map(|(_, _, id)| id)
-            .find(|&id| admit(ctx, id))
+        if self.features.load_gradient {
+            ctx.cluster.tier_by_load_desc(tier).find(|&id| admit(ctx, id))
+        } else {
+            ctx.cluster.tier_by_load_asc(tier).find(|&id| admit(ctx, id))
+        }
     }
 
     /// Try to place a decode-phase request on tier-k (with promotion).
@@ -163,8 +209,9 @@ impl PolyServeRouter {
         };
         for &tier in tiers_to_try {
             let tpot = self.tiers.tier(tier).tpot_ms;
-            let ids: Vec<usize> = ctx.cluster.in_tier(tier).collect();
-            let found = self.pick_by_gradient(ctx, ids.into_iter(), |c, id| {
+            // No materialized candidate list: the ordered walk feeds
+            // the admission check directly.
+            let found = self.pick_by_gradient(ctx, tier, |c, id| {
                 admission::admit_decode(
                     &c.cluster.instances[id],
                     c.requests,
@@ -205,8 +252,7 @@ impl PolyServeRouter {
         };
         for &tier in tiers_to_try {
             let tpot = self.tiers.tier(tier).tpot_ms;
-            let ids: Vec<usize> = ctx.cluster.in_tier(tier).collect();
-            let found = self.pick_by_gradient(ctx, ids.into_iter(), |c, id| {
+            let found = self.pick_by_gradient(ctx, tier, |c, id| {
                 admission::admit_coloc(
                     &c.cluster.instances[id],
                     c.requests,
@@ -247,41 +293,51 @@ impl PolyServeRouter {
         ctx: &mut RouteCtx,
     ) -> Option<usize> {
         let k = ctx.requests[req_idx].tier;
-        let place = |me: &Self, tiers: &[usize], ctx: &mut RouteCtx| -> Option<usize> {
-            if decode_phase {
-                me.place_decode(now, req_idx, false, tiers, ctx)
-            } else {
-                me.place_coloc(now, req_idx, false, tiers, ctx)
-            }
-        };
-        let promo: Vec<usize> = if self.features.lazy_promotion || self.features.eager_promotion {
-            self.tiers.promotion_order(k).collect()
-        } else {
-            Vec::new()
-        };
         if self.features.eager_promotion {
-            if let Some(id) = place(self, &promo, ctx) {
+            if let Some(id) =
+                self.place_in(now, req_idx, decode_phase, false, self.promo_order(k), ctx)
+            {
                 self.stats.placed_promoted += 1;
                 return Some(id);
             }
         }
-        if let Some(id) = place(self, &[k], ctx) {
+        if let Some(id) = self.place_in(now, req_idx, decode_phase, false, &[k], ctx) {
             self.stats.placed_direct += 1;
             return Some(id);
         }
         if self.scale_up(k, now, ctx).is_some() {
-            if let Some(id) = place(self, &[k], ctx) {
+            if let Some(id) = self.place_in(now, req_idx, decode_phase, false, &[k], ctx) {
                 self.stats.placed_direct += 1;
                 return Some(id);
             }
         }
         if !self.features.eager_promotion {
-            if let Some(id) = place(self, &promo, ctx) {
+            if let Some(id) =
+                self.place_in(now, req_idx, decode_phase, false, self.promo_order(k), ctx)
+            {
                 self.stats.placed_promoted += 1;
                 return Some(id);
             }
         }
         None
+    }
+
+    /// Phase dispatch for the ladder and the relaxed pending path: try
+    /// `tiers` in order with the matching placement routine.
+    fn place_in(
+        &self,
+        now: TimeMs,
+        req_idx: usize,
+        decode_phase: bool,
+        relaxed: bool,
+        tiers: &[usize],
+        ctx: &mut RouteCtx,
+    ) -> Option<usize> {
+        if decode_phase {
+            self.place_decode(now, req_idx, relaxed, tiers, ctx)
+        } else {
+            self.place_coloc(now, req_idx, relaxed, tiers, ctx)
+        }
     }
 
     /// Scale up tier `k`: claim from the BE pool, or adopt a Pending
@@ -342,12 +398,14 @@ impl PolyServeRouter {
                             r.req.arrival_ms + r.req.slo.ttft_ms
                         };
                         if now >= deadline {
-                            let order = self.tier_order(k);
-                            let relaxed = if head.decode_phase {
-                                self.place_decode(now, head.req_idx, true, &order, ctx)
-                            } else {
-                                self.place_coloc(now, head.req_idx, true, &order, ctx)
-                            };
+                            let relaxed = self.place_in(
+                                now,
+                                head.req_idx,
+                                head.decode_phase,
+                                true,
+                                &self.order[k],
+                                ctx,
+                            );
                             match relaxed {
                                 Some(id) => {
                                     self.stats.placed_relaxed += 1;
@@ -386,25 +444,25 @@ impl PolyServeRouter {
     /// Liveness fallback target: least-loaded instance in the request's
     /// own tier, else in a tighter tier, else in a Pending state, else
     /// claim anything from the pool, else the least-loaded serving
-    /// instance of the right role cluster.
-    fn forced_target(&self, k: usize, ctx: &mut RouteCtx) -> Option<usize> {
-        let least_loaded = |ids: Vec<usize>, ctx: &RouteCtx| -> Option<usize> {
-            ids.into_iter()
-                .min_by_key(|&id| {
-                    let i = &ctx.cluster.instances[id];
-                    (i.decode_batch_now(), i.queued_prefill_tokens(ctx.requests))
-                })
-        };
-        for tier in self.tier_order(k) {
-            let ids: Vec<usize> = ctx.cluster.in_tier(tier).collect();
-            if let Some(id) = least_loaded(ids, ctx) {
+    /// instance of the right role cluster. Read-only and collect-free:
+    /// each candidate view feeds the min-scan directly (same ascending
+    /// id order as the old materialized lists, so ties resolve
+    /// identically).
+    fn forced_target(&self, k: usize, ctx: &RouteCtx) -> Option<usize> {
+        fn least_loaded(ctx: &RouteCtx, ids: impl Iterator<Item = usize>) -> Option<usize> {
+            ids.min_by_key(|&id| {
+                let i = &ctx.cluster.instances[id];
+                (i.decode_batch_now(), i.queued_prefill_tokens(ctx.requests))
+            })
+        }
+        for &tier in self.tier_order(k) {
+            if let Some(id) = least_loaded(ctx, ctx.cluster.in_tier(tier)) {
                 return Some(id);
             }
         }
         // Any pending-state instance (that still accepts work — the
         // elastic fleet may be draining some).
-        let pending_ids: Vec<usize> = ctx.cluster.pending_pool().collect();
-        if let Some(id) = least_loaded(pending_ids, ctx) {
+        if let Some(id) = least_loaded(ctx, ctx.cluster.pending_pool()) {
             return Some(id);
         }
         // Anything serving the right role (looser tiers included).
@@ -412,16 +470,15 @@ impl PolyServeRouter {
             ServingMode::PdDisaggregated => Role::Decode,
             ServingMode::Colocated => Role::Coloc,
         };
-        let all: Vec<usize> = ctx
-            .cluster
-            .with_role(role)
-            .filter(|&id| ctx.cluster.assign_of(id) != TierAssign::BestEffort)
-            .collect();
-        if let Some(id) = least_loaded(all, ctx) {
+        if let Some(id) = least_loaded(
+            ctx,
+            ctx.cluster
+                .with_role(role)
+                .filter(|&id| ctx.cluster.assign_of(id) != TierAssign::BestEffort),
+        ) {
             return Some(id);
         }
-        let any: Vec<usize> = ctx.cluster.with_role(role).collect();
-        least_loaded(any, ctx)
+        least_loaded(ctx, ctx.cluster.with_role(role))
     }
 
     fn enqueue_on(&self, id: usize, p: Pending, now: TimeMs, ctx: &mut RouteCtx) {
@@ -447,6 +504,9 @@ impl PolyServeRouter {
                 ctx.requests,
             );
         }
+        // Pended dispatch mutates instance load outside the simulator's
+        // own sites: re-key here so the ordered indices never go stale.
+        ctx.cluster.refresh_load(id);
         ctx.cluster.mark_kicked(id);
     }
 
@@ -551,12 +611,15 @@ impl PolyServeRouter {
         let own_tokens = r.req.prefill_len as u64;
         let deadline =
             (r.req.arrival_ms + r.req.slo.ttft_ms).saturating_sub(r.req.slo.tpot_ms);
-        let ids: Vec<usize> = ctx.cluster.with_role(Role::Prefill).collect();
-        debug_assert!(!ids.is_empty(), "PD cluster without prefill servers");
+        // Collect-free: the role view feeds the scoring loop directly
+        // (same ascending id order as the old materialized list). The
+        // first candidate always seeds the fallback, so the old
+        // `ids[0]` initialization is subsumed.
         let mut best_feasible: Option<(u64, usize)> = None; // (load, id)
-        let mut best_fallback: (f64, usize) = (f64::INFINITY, ids[0]);
-        for &id in &ids {
+        let mut best_fallback: Option<(f64, usize)> = None; // (finish/est, id)
+        for id in ctx.cluster.with_role(Role::Prefill) {
             let queued = ctx.cluster.instances[id].queued_prefill_tokens(ctx.requests);
+            let fallback_est = best_fallback.map_or(f64::INFINITY, |(e, _)| e);
             match self.prefill_queue_feasible(now, id, own_tokens, deadline, ctx) {
                 Some(finish) => {
                     let better = match best_feasible {
@@ -572,21 +635,24 @@ impl PolyServeRouter {
                     if better {
                         best_feasible = Some((queued, id));
                     }
-                    if finish < best_fallback.0 {
-                        best_fallback = (finish, id);
+                    if finish < fallback_est {
+                        best_fallback = Some((finish, id));
                     }
                 }
                 None => {
                     // Infeasible queue: fall back by queue length so an
                     // overloaded cluster still spreads.
                     let est = now as f64 + queued as f64;
-                    if best_feasible.is_none() && est < best_fallback.0 {
-                        best_fallback = (est, id);
+                    if best_feasible.is_none() && est < fallback_est {
+                        best_fallback = Some((est, id));
                     }
                 }
             }
         }
-        best_feasible.map(|(_, id)| id).unwrap_or(best_fallback.1)
+        best_feasible
+            .map(|(_, id)| id)
+            .or_else(|| best_fallback.map(|(_, id)| id))
+            .expect("PD cluster without prefill servers")
     }
 }
 

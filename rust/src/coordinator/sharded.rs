@@ -106,9 +106,11 @@ impl ShardedRouter {
         // the foreign shard's tiers and are filtered by the per-shard
         // tier bookkeeping below.
         // All mask writes go through `set_assign` so the cluster's
-        // membership indices stay coherent with the temporary re-roles
-        // (the BTreeSet pool restores to the same ascending order no
-        // matter the unmask sequence).
+        // membership indices — including the load-ordered best-effort
+        // twin, which re-keys on the instance's live counters at every
+        // set entry — stay coherent with the temporary re-roles (the
+        // BTreeSet pool restores to the same ascending order no matter
+        // the unmask sequence).
         let mut masked: Vec<usize> = Vec::new();
         for inst in 0..ctx.cluster.instances.len() {
             if self.shard_of_instance(inst, ctx) != s

@@ -30,12 +30,20 @@ pub struct Experiment {
     pub optimal_rps: f64,
     /// Actual request rate of the workload, req/s.
     pub rate_rps: f64,
-    /// Run through the scan-based pre-PR reference path (full-fleet
+    /// Run through the scan-based pre-PR-4 reference path (full-fleet
     /// membership scans + per-placement resident rescans) instead of
-    /// the indexed/cached hot path. Decisions are bit-for-bit identical
-    /// by construction — used for A/B identity tests and as the
-    /// `sim_perf` speedup baseline.
+    /// the ordered/indexed/cached hot path. Decisions are bit-for-bit
+    /// identical by construction — used for A/B identity tests and as
+    /// the `sim_perf` speedup baseline. Takes precedence over
+    /// `indexed_reference`.
     pub scan_reference: bool,
+    /// Run through the PR-4 *indexed* reference path: id-indexed
+    /// membership and O(1) cached load reads, but the router
+    /// materializes and sorts each tier per placement instead of
+    /// walking the load-ordered sets, and unplaced demand is
+    /// reconstructed by scan. Isolates what the ordered indices alone
+    /// buy; decisions stay bit-for-bit identical.
+    pub indexed_reference: bool,
     /// Run the per-event cache/index coherence audit in debug-assertion
     /// builds (`SimParams::debug_audit`). On by default; `sim_perf`
     /// timing cells disable it so the bench doesn't measure the audit's
@@ -105,6 +113,7 @@ impl Experiment {
             optimal_rps,
             rate_rps,
             scan_reference: false,
+            indexed_reference: false,
             debug_audit: true,
         }
     }
@@ -129,6 +138,8 @@ impl Experiment {
         );
         if self.scan_reference {
             cluster.set_scan_reference(true);
+        } else if self.indexed_reference {
+            cluster.set_indexed_reference(true);
         }
         let params = SimParams {
             mode: self.cfg.mode,

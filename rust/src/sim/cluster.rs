@@ -19,7 +19,21 @@ use super::SimRequest;
 use crate::analysis::ServingMode;
 use crate::model::CostModel;
 use crate::slo::TimeMs;
+use std::cmp::Reverse;
 use std::collections::BTreeSet;
+
+/// Entry of a load-ordered membership set: `Reverse<(batch, kv, id)>`,
+/// so ascending `BTreeSet` iteration walks members in *descending*
+/// `(batch, kv, id)` order — exactly the order the router's
+/// `pick_by_gradient` used to produce by sorting, including the
+/// descending-id tie-break, and reverse iteration is exactly the
+/// ascending sort of the `load_gradient = off` ablation.
+type LoadOrdered = BTreeSet<Reverse<(u64, u64, usize)>>;
+
+#[inline]
+fn load_entry(key: (u64, u64), id: usize) -> Reverse<(u64, u64, usize)> {
+    Reverse((key.0, key.1, id))
+}
 
 /// Index into `role_ids` for a role (roles never change, so the
 /// per-role sets are append-only).
@@ -102,10 +116,36 @@ pub struct Cluster {
     pending_ids: BTreeSet<usize>,
     /// Ids per role (roles are immutable: append-only).
     role_ids: [BTreeSet<usize>; 3],
+    // ---- load-ordered membership (the placement hot path) ----
+    // Twin sets of `tier_ids`/`be_ids` keyed by `(batch, kv, id)` in
+    // descending order, so the router's §4.3 load-gradient walk is
+    // plain in-order iteration with early exit — no per-placement
+    // collect or sort. Re-keyed through `refresh_load` at every
+    // instance-load mutation site; `audit` panics on a missed re-key.
+    /// Tier members in descending `(batch, kv, id)` order, per tier.
+    ordered_tier: Vec<LoadOrdered>,
+    /// Best-effort pool in the same descending load order.
+    ordered_be: LoadOrdered,
+    /// Last key inserted into an ordered set per instance (the key a
+    /// removal must use; also the audit's staleness probe).
+    load_key: Vec<(u64, u64)>,
+    /// Last known `resident_requests()` per instance (feeds the O(1)
+    /// unplaced-demand counter below).
+    resident_cnt: Vec<usize>,
+    /// Σ `resident_cnt` — distinct requests resident somewhere.
+    resident_total: usize,
+    /// Arrival events processed (`note_arrival`).
+    arrived_total: usize,
+    /// Requests fully finished (`note_finished`).
+    finished_total: usize,
     /// Instances currently `Draining` (cheap sweep short-circuit).
     draining_total: usize,
     /// Reference mode: membership views recompute by scanning.
     scan_reference: bool,
+    /// Reference mode: the PR-4 path — indexed membership and cached
+    /// load counters, but no ordered walk (the router materializes and
+    /// sorts per placement) and scan-based unplaced demand.
+    indexed_reference: bool,
 }
 
 impl Cluster {
@@ -161,6 +201,7 @@ impl Cluster {
                 }
             }
         }
+        let n_built = instances.len();
         let mut cluster = Cluster {
             instances,
             assign,
@@ -173,8 +214,16 @@ impl Cluster {
             be_ids: BTreeSet::new(),
             pending_ids: BTreeSet::new(),
             role_ids: [BTreeSet::new(), BTreeSet::new(), BTreeSet::new()],
+            ordered_tier: vec![LoadOrdered::new(); num_tiers],
+            ordered_be: LoadOrdered::new(),
+            load_key: vec![(0, 0); n_built],
+            resident_cnt: vec![0; n_built],
+            resident_total: 0,
+            arrived_total: 0,
+            finished_total: 0,
             draining_total: 0,
             scan_reference: false,
+            indexed_reference: false,
         };
         for id in 0..cluster.instances.len() {
             cluster.index_add_assign(id, cluster.assign[id]);
@@ -186,15 +235,22 @@ impl Cluster {
     // ---- membership index maintenance ----
 
     fn index_add_assign(&mut self, id: usize, a: TierAssign) {
+        // Entering an ordered set keys on the instance's *live*
+        // counters (the stored key may predate churn outside any set).
+        let key = self.instances[id].load_key();
+        self.load_key[id] = key;
         match a {
             TierAssign::Tier(k) => {
                 if k >= self.tier_ids.len() {
                     self.tier_ids.resize_with(k + 1, BTreeSet::new);
+                    self.ordered_tier.resize_with(k + 1, LoadOrdered::new);
                 }
                 self.tier_ids[k].insert(id);
+                self.ordered_tier[k].insert(load_entry(key, id));
             }
             TierAssign::BestEffort => {
                 self.be_ids.insert(id);
+                self.ordered_be.insert(load_entry(key, id));
             }
             TierAssign::Pending => {
                 self.pending_ids.insert(id);
@@ -204,20 +260,66 @@ impl Cluster {
     }
 
     fn index_remove_assign(&mut self, id: usize, a: TierAssign) {
+        // Removal must use the key the entry was inserted under.
+        let key = self.load_key[id];
         match a {
             TierAssign::Tier(k) => {
                 if let Some(s) = self.tier_ids.get_mut(k) {
                     s.remove(&id);
                 }
+                if let Some(s) = self.ordered_tier.get_mut(k) {
+                    s.remove(&load_entry(key, id));
+                }
             }
             TierAssign::BestEffort => {
                 self.be_ids.remove(&id);
+                self.ordered_be.remove(&load_entry(key, id));
             }
             TierAssign::Pending => {
                 self.pending_ids.remove(&id);
             }
             TierAssign::Static => {}
         }
+    }
+
+    /// Re-key instance `id` after any load mutation: updates the
+    /// ordered tier / best-effort entry to the instance's live
+    /// `(batch, kv)` counters and folds its residency delta into the
+    /// O(1) unplaced-demand accounting.
+    ///
+    /// This is the ordered-index discipline: every site that mutates an
+    /// instance's queues (`push_prefill`/`push_decode`/`push_running`,
+    /// `form_batch`'s handoff admits, `complete_iteration`, both
+    /// eviction paths, the `clear_*` helpers) must report here —
+    /// threaded from the simulator event loop and the router's pended
+    /// dispatch. A missed call leaves a stale key that [`Cluster::audit`]
+    /// panics on in debug runs. O(1) when nothing changed, O(log m) to
+    /// re-key.
+    pub fn refresh_load(&mut self, id: usize) {
+        let res = self.instances[id].resident_requests();
+        let old_res = self.resident_cnt[id];
+        if res != old_res {
+            self.resident_total = self.resident_total + res - old_res;
+            self.resident_cnt[id] = res;
+        }
+        let key = self.instances[id].load_key();
+        let old_key = self.load_key[id];
+        if key == old_key {
+            return;
+        }
+        match self.assign[id] {
+            TierAssign::Tier(k) => {
+                let s = &mut self.ordered_tier[k];
+                s.remove(&load_entry(old_key, id));
+                s.insert(load_entry(key, id));
+            }
+            TierAssign::BestEffort => {
+                self.ordered_be.remove(&load_entry(old_key, id));
+                self.ordered_be.insert(load_entry(key, id));
+            }
+            _ => {}
+        }
+        self.load_key[id] = key;
     }
 
     /// Tier assignment of instance `id`.
@@ -260,6 +362,86 @@ impl Cluster {
     /// Is the scan-based reference path active?
     pub fn is_scan_reference(&self) -> bool {
         self.scan_reference
+    }
+
+    /// Run the PR-4 *indexed* reference path: membership comes from the
+    /// id indices and loads from the cached counters (both as today),
+    /// but the router bypasses the load-ordered sets — it materializes
+    /// each tier and sorts per placement — and unplaced demand is
+    /// reconstructed by scan. The A/B baseline for measuring what the
+    /// ordered indices alone buy. Ordered sets are still maintained, so
+    /// the switch can flip at any time.
+    pub fn set_indexed_reference(&mut self, on: bool) {
+        self.indexed_reference = on;
+    }
+
+    /// Is the PR-4 indexed (sort-per-placement) reference path active?
+    pub fn is_indexed_reference(&self) -> bool {
+        self.indexed_reference
+    }
+
+    // ---- O(1) unplaced-demand accounting ----
+
+    /// Simulator: a request's arrival event fired. Feeds
+    /// [`Cluster::unplaced_demand`].
+    pub fn note_arrival(&mut self) {
+        self.arrived_total += 1;
+    }
+
+    /// Arrival events processed so far. The audit uses this to reconcile
+    /// the O(1) counter with the reconstruction scan *mid-timestamp*:
+    /// between two same-millisecond arrivals, the scan already counts
+    /// the unprocessed one (its `arrival_ms <= now`) while the counter —
+    /// correctly — does not.
+    pub fn arrived_total(&self) -> usize {
+        self.arrived_total
+    }
+
+    /// Simulator: `n` requests fully finished this event. Feeds
+    /// [`Cluster::unplaced_demand`].
+    pub fn note_finished(&mut self, n: usize) {
+        self.finished_total += n;
+    }
+
+    /// Arrived, unfinished requests resident on *no* instance — the
+    /// demand the router is holding in its pending queues (or in-flight
+    /// migrations). O(1): `arrived − finished − resident`, where every
+    /// term is an incremental counter (`note_arrival`/`note_finished`/
+    /// the residency delta folded in by `refresh_load`). Finished
+    /// requests are never resident and residents have always arrived,
+    /// so the subtraction counts exactly the scan's set; the per-event
+    /// debug audit asserts equality with [`Cluster::unplaced_demand_scan`].
+    pub fn unplaced_demand(&self) -> usize {
+        self.arrived_total
+            .saturating_sub(self.finished_total)
+            .saturating_sub(self.resident_total)
+    }
+
+    /// The pre-PR unplaced-demand reconstruction: scan every instance's
+    /// queues to mark resident requests, then count the arrived,
+    /// unfinished, unmarked ones. O(total requests + residents) per
+    /// call — kept as the debug-audit oracle for the O(1) counter and
+    /// as the reference-mode path.
+    pub fn unplaced_demand_scan(&self, requests: &[SimRequest], now: TimeMs) -> usize {
+        let mut placed = vec![false; requests.len()];
+        for i in &self.instances {
+            for j in &i.prefill_queue {
+                placed[j.req_idx] = true;
+            }
+            for &(r, _) in &i.decode_queue {
+                placed[r] = true;
+            }
+            for s in &i.running {
+                placed[s.req_idx] = true;
+            }
+        }
+        requests
+            .iter()
+            .enumerate()
+            .filter(|(idx, r)| {
+                r.req.arrival_ms <= now && r.finish_ms.is_none() && !placed[*idx]
+            })
+            .count()
     }
 
     /// Total instance slots, retired included (ids are stable indices).
@@ -316,6 +498,48 @@ impl Cluster {
                     .filter(move |&id| self.instances[id].lifecycle.accepts_work()),
             )
         }
+    }
+
+    /// Tier-`k` members accepting work, in descending `(batch, kv, id)`
+    /// load order — the §4.3 load-gradient walk as plain in-order
+    /// iteration off the ordered index. Bit-for-bit the sequence the
+    /// router's old materialize-and-sort produced (including the
+    /// descending-id tie-break), but with no per-placement allocation
+    /// or sort: the cost moved to an O(log m) re-key per load mutation
+    /// (`refresh_load`). Reference modes must not use this — the router
+    /// falls back to collect+sort over [`Cluster::in_tier`] there.
+    pub fn tier_by_load_desc(&self, k: usize) -> impl Iterator<Item = usize> + '_ {
+        self.ordered_tier
+            .get(k)
+            .into_iter()
+            .flat_map(|s| s.iter())
+            .map(|&Reverse((_, _, id))| id)
+            .filter(move |&id| self.instances[id].lifecycle.accepts_work())
+    }
+
+    /// Ascending twin of [`Cluster::tier_by_load_desc`] — the same
+    /// ordered set walked in reverse, which is exactly the ascending
+    /// `(batch, kv, id)` sort of the `load_gradient = off` ablation.
+    pub fn tier_by_load_asc(&self, k: usize) -> impl Iterator<Item = usize> + '_ {
+        self.ordered_tier
+            .get(k)
+            .into_iter()
+            .flat_map(|s| s.iter().rev())
+            .map(|&Reverse((_, _, id))| id)
+            .filter(move |&id| self.instances[id].lifecycle.accepts_work())
+    }
+
+    /// The best-effort pool's load-ordered twin: active pool members in
+    /// descending `(batch, kv, id)` order. Maintained by the same
+    /// re-key discipline as the tier sets (and covered by the audit);
+    /// `claim_for_tier` keeps claiming by lowest id for decision
+    /// identity, so this view is for policies that want the pool by
+    /// load — reverse it for least-loaded-first.
+    pub fn best_effort_by_load(&self) -> impl Iterator<Item = usize> + '_ {
+        self.ordered_be
+            .iter()
+            .map(|&Reverse((_, _, id))| id)
+            .filter(move |&id| self.instances[id].lifecycle.accepts_work())
     }
 
     /// Instance ids in the best-effort pool (claimable: active only).
@@ -447,6 +671,8 @@ impl Cluster {
             _ => TierAssign::Static,
         };
         self.assign.push(a);
+        self.load_key.push((0, 0));
+        self.resident_cnt.push(0);
         self.index_add_assign(id, a);
         self.role_ids[role_idx(role)].insert(id);
         id
@@ -528,9 +754,12 @@ impl Cluster {
     }
 
     /// Assert the membership indices mirror `assign` exactly, the
-    /// draining counter matches a lifecycle scan, and every instance's
-    /// cached load counters equal their scan-recomputed values. Runs
-    /// after every simulator event in debug-assertion builds
+    /// load-ordered sets hold every keyed member under its *live*
+    /// `(batch, kv)` counters (a stale key means a mutation site
+    /// skipped [`Cluster::refresh_load`]), the residency and draining
+    /// counters match their scans, and every instance's cached load
+    /// counters equal their scan-recomputed values. Runs after every
+    /// simulator event in debug-assertion builds
     /// (`SimParams::debug_audit`); panics on the first drift.
     pub fn audit(&self, requests: &[SimRequest]) {
         for (id, &a) in self.assign.iter().enumerate() {
@@ -559,6 +788,29 @@ impl Cluster {
                 self.role_ids[role_idx(self.instances[id].role)].contains(&id),
                 "inst {id}: missing from its role index"
             );
+            // Re-key discipline: the stored key must equal the live
+            // counters, and the keyed sets must hold exactly that entry.
+            let live = self.instances[id].load_key();
+            assert_eq!(
+                self.load_key[id], live,
+                "inst {id}: load key stale — a mutation site skipped refresh_load"
+            );
+            assert_eq!(
+                self.resident_cnt[id],
+                self.instances[id].resident_requests(),
+                "inst {id}: resident count stale — a mutation site skipped refresh_load"
+            );
+            match a {
+                TierAssign::Tier(k) => assert!(
+                    self.ordered_tier[k].contains(&load_entry(live, id)),
+                    "inst {id}: missing from ordered tier {k} under its live key"
+                ),
+                TierAssign::BestEffort => assert!(
+                    self.ordered_be.contains(&load_entry(live, id)),
+                    "inst {id}: missing from the ordered best-effort set"
+                ),
+                _ => {}
+            }
         }
         let sets_total: usize = self.tier_ids.iter().map(|s| s.len()).sum::<usize>()
             + self.be_ids.len()
@@ -569,6 +821,19 @@ impl Cluster {
             .filter(|a| **a != TierAssign::Static)
             .count();
         assert_eq!(sets_total, assigned, "stale ids left in a membership set");
+        let ordered_total: usize =
+            self.ordered_tier.iter().map(|s| s.len()).sum::<usize>() + self.ordered_be.len();
+        let keyed = self
+            .assign
+            .iter()
+            .filter(|a| matches!(a, TierAssign::Tier(_) | TierAssign::BestEffort))
+            .count();
+        assert_eq!(ordered_total, keyed, "stale entries left in a load-ordered set");
+        assert_eq!(
+            self.resident_total,
+            self.instances.iter().map(Instance::resident_requests).sum::<usize>(),
+            "incremental residency counter drifted"
+        );
         assert_eq!(
             self.draining_total,
             self.instances
@@ -758,6 +1023,106 @@ mod tests {
         // Retired keeps its Tier assignment until released; still listed.
         assert_eq!(c.assigned_ids(), vec![a, b]);
         c.audit(&[]);
+    }
+
+    fn sim_req(id: u64, p: u32, decoded: u32) -> SimRequest {
+        use crate::slo::{DsloTracker, Slo};
+        use crate::workload::Request;
+        let slo = Slo::new(1000, 50);
+        SimRequest {
+            req: Request {
+                id,
+                arrival_ms: 0,
+                prefill_len: p,
+                decode_len: 500,
+                slo,
+            },
+            tier: 0,
+            tracker: DsloTracker::new(0, slo),
+            prefill_done: p,
+            decoded,
+            first_token_ms: Some(1),
+            finish_ms: None,
+            decode_instance: None,
+        }
+    }
+
+    /// The ordered tier walk must track load re-keys: descending
+    /// `(batch, kv, id)` forward (the gradient walk, descending-id
+    /// ties), ascending in reverse (the ablation walk), draining
+    /// members filtered out.
+    #[test]
+    fn ordered_tier_walk_tracks_rekeys() {
+        let mut c = Cluster::build(ServingMode::Colocated, 4, 0.0, 2, &cm(), true);
+        let reqs = vec![sim_req(0, 100, 4), sim_req(1, 200, 4)];
+        for id in 0..3 {
+            assert_eq!(c.claim_for_tier(0, 0), Some(id));
+        }
+        // All keys (0, 0): descending-id ties, ascending twin reversed.
+        assert_eq!(c.tier_by_load_desc(0).collect::<Vec<_>>(), vec![2, 1, 0]);
+        assert_eq!(c.tier_by_load_asc(0).collect::<Vec<_>>(), vec![0, 1, 2]);
+        // Load instance 1: it must move to the front of the walk.
+        c.instances[1].push_running(0, &reqs);
+        c.refresh_load(1);
+        assert_eq!(c.tier_by_load_desc(0).collect::<Vec<_>>(), vec![1, 2, 0]);
+        assert_eq!(c.tier_by_load_asc(0).collect::<Vec<_>>(), vec![0, 2, 1]);
+        // Heavier KV on instance 0 at the same batch depth: kv breaks it.
+        c.instances[0].push_running(1, &reqs);
+        c.refresh_load(0);
+        assert_eq!(c.tier_by_load_desc(0).collect::<Vec<_>>(), vec![0, 1, 2]);
+        // Draining members leave the walk (lifecycle filtered at read).
+        c.begin_drain(2, 10);
+        assert_eq!(c.tier_by_load_desc(0).collect::<Vec<_>>(), vec![0, 1]);
+        c.audit(&reqs);
+    }
+
+    /// The best-effort twin is maintained through claims, releases and
+    /// load churn under the same re-key discipline.
+    #[test]
+    fn ordered_best_effort_twin_stays_coherent() {
+        let mut c = Cluster::build(ServingMode::Colocated, 3, 0.0, 1, &cm(), true);
+        let reqs = vec![sim_req(0, 100, 4)];
+        assert_eq!(c.best_effort_by_load().collect::<Vec<_>>(), vec![2, 1, 0]);
+        c.instances[1].push_running(0, &reqs);
+        c.refresh_load(1);
+        assert_eq!(c.best_effort_by_load().collect::<Vec<_>>(), vec![1, 2, 0]);
+        // Claim by lowest id (decision identity) — the twin follows.
+        let id = c.claim_for_tier(0, 0).unwrap();
+        assert_eq!(id, 0);
+        assert_eq!(c.best_effort_by_load().collect::<Vec<_>>(), vec![1, 2]);
+        c.audit(&reqs);
+    }
+
+    /// Mutating an instance's load without reporting through
+    /// `refresh_load` must be caught by the audit — the mechanical
+    /// check behind the re-key discipline.
+    #[test]
+    #[should_panic(expected = "load key stale")]
+    fn audit_catches_missed_rekey() {
+        let mut c = Cluster::build(ServingMode::Colocated, 2, 0.0, 1, &cm(), true);
+        let reqs = vec![sim_req(0, 100, 4)];
+        let id = c.claim_for_tier(0, 0).unwrap();
+        c.instances[id].push_running(0, &reqs); // no refresh_load: drift
+        c.audit(&reqs);
+    }
+
+    /// The O(1) unplaced-demand counter equals the reconstruction scan.
+    #[test]
+    fn unplaced_demand_counter_matches_scan() {
+        let mut c = Cluster::build(ServingMode::Colocated, 2, 0.0, 1, &cm(), true);
+        let mut reqs = vec![sim_req(0, 100, 4), sim_req(1, 100, 4), sim_req(2, 100, 4)];
+        let id = c.claim_for_tier(0, 0).unwrap();
+        for _ in 0..3 {
+            c.note_arrival();
+        }
+        // req 0 resident, req 1 finished, req 2 unplaced.
+        c.instances[id].push_running(0, &reqs);
+        c.refresh_load(id);
+        reqs[1].finish_ms = Some(50);
+        c.note_finished(1);
+        assert_eq!(c.unplaced_demand(), 1);
+        assert_eq!(c.unplaced_demand(), c.unplaced_demand_scan(&reqs, 100));
+        c.audit(&reqs);
     }
 
     #[test]

@@ -439,6 +439,28 @@ impl Instance {
         self.queued_prefill_rem_tokens
     }
 
+    /// The load-gradient ordering key the router sorts on — `(decode
+    /// batch now, resident + in-flight KV)` — read straight off the
+    /// cached counters. This feeds the cluster's load-ordered tier
+    /// indices, *not* the router-visible accessors: the counters are
+    /// maintained in scan-reference mode too, so the ordered sets stay
+    /// coherent no matter which read path is active.
+    pub fn load_key(&self) -> (u64, u64) {
+        (
+            self.decode_batch_now(),
+            self.kv_running_tokens + self.kv_prefill_done_tokens + self.kv_handoff_tokens,
+        )
+    }
+
+    /// Requests resident on this instance (running, queued for prefill,
+    /// or an in-flight decode handoff) — a request lives on at most one
+    /// instance at a time, so summing this over the fleet counts
+    /// distinct placed requests. Feeds the cluster's O(1)
+    /// unplaced-demand counter.
+    pub fn resident_requests(&self) -> usize {
+        self.running.len() + self.prefill_queue.len() + self.decode_queue.len()
+    }
+
     /// `queued_prefill_tokens` recomputed by scanning (reference path).
     pub fn queued_prefill_tokens_scan(&self, requests: &[SimRequest]) -> u64 {
         self.prefill_queue

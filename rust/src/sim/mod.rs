@@ -47,6 +47,24 @@
 //! one of its `decode_len` tokens is emitted exactly once, here or
 //! there.
 //!
+//! # Load-ordered fleet indices and the re-key discipline
+//!
+//! The cluster keeps every tier (and the best-effort pool) in a
+//! load-ordered `BTreeSet` keyed by the router's §4.3 sort tuple
+//! `(decode batch, resident+in-flight KV, id)` in descending order, so
+//! a placement is an in-order walk with early exit instead of a
+//! per-request collect+sort. The invariant that makes this
+//! decision-identical — every member's stored key equals its live
+//! cached counters — is maintained by calling
+//! [`Cluster::refresh_load`] after **every** instance-load mutation
+//! this event loop performs: arrival/pended/handoff `push_*`,
+//! `form_batch`, `complete_iteration`, and both migration evictions.
+//! The same hook folds each instance's residency delta into the O(1)
+//! unplaced-demand counter (`note_arrival`/`note_finished` supply the
+//! other two terms). In debug builds the per-event audit re-derives
+//! the ordered sets and the counter by scan and panics on the first
+//! missed re-key.
+//!
 //! # Elastic prefill tier
 //!
 //! With `ElasticParams::prefill` set (config `[elastic]
@@ -439,11 +457,35 @@ impl<'a> Simulation<'a> {
                     }
                 }
             }
-            // Coherence audit (debug builds): cached load counters and
-            // membership indices must equal their scan-recomputed
+            // Coherence audit (debug builds): cached load counters,
+            // membership indices, the load-ordered sets, and the O(1)
+            // unplaced-demand counter must equal their scan-recomputed
             // ground truth after *every* event.
             if cfg!(debug_assertions) && self.params.debug_audit {
                 self.cluster.audit(&self.requests);
+                // The scan oracle counts every request with
+                // `arrival_ms <= now` — including same-millisecond
+                // arrivals whose events are still queued behind this
+                // one — while the counter (correctly) counts only
+                // processed arrivals. Reconcile by the number of
+                // pending same-time arrivals, which are always
+                // unfinished and unresident: counter + pending == scan
+                // exactly, with no request-ordering assumptions.
+                let arrived_scan = self
+                    .requests
+                    .iter()
+                    .filter(|r| r.req.arrival_ms <= self.now)
+                    .count();
+                assert!(
+                    self.cluster.arrived_total() <= arrived_scan,
+                    "arrival counter overran the workload"
+                );
+                let pending_arrivals = arrived_scan - self.cluster.arrived_total();
+                assert_eq!(
+                    self.cluster.unplaced_demand() + pending_arrivals,
+                    self.cluster.unplaced_demand_scan(&self.requests, self.now),
+                    "incremental unplaced-demand counter drifted from the scan oracle"
+                );
             }
             if completed == total {
                 break;
@@ -541,6 +583,7 @@ impl<'a> Simulation<'a> {
     /// its last transfer has left (`egress_until`).
     fn migrate_residents(&mut self, inst: usize) {
         let evicted = self.cluster.instances[inst].evict_residents();
+        self.cluster.refresh_load(inst);
         let kv_transfer_ms = self.params.kv_transfer_ms;
         let mut egress_until = self.cluster.instances[inst].egress_until;
         for req_idx in evicted {
@@ -577,6 +620,7 @@ impl<'a> Simulation<'a> {
     /// transfer departs (`egress_until`), exactly like decode.
     fn migrate_prefill_queue(&mut self, inst: usize) {
         let jobs = self.cluster.instances[inst].evict_prefill_queue();
+        self.cluster.refresh_load(inst);
         if jobs.is_empty() {
             return;
         }
@@ -637,12 +681,16 @@ impl<'a> Simulation<'a> {
     }
 
     fn handle_arrival(&mut self, idx: usize, router: &mut dyn Router) {
+        // Feed the O(1) unplaced-demand counter before routing: the
+        // request exists (and may pend) from this event on.
+        self.cluster.note_arrival();
         let chosen = router.route_new(self.now, idx, &mut self.ctx());
         if let Some(inst) = chosen {
             let deadline =
                 self.requests[idx].req.arrival_ms + self.requests[idx].req.slo.ttft_ms;
             self.cluster.instances[inst]
                 .push_prefill(PrefillJob { req_idx: idx, deadline }, &self.requests);
+            self.cluster.refresh_load(inst);
             self.maybe_start_iteration(inst, router);
         }
         self.restart_fed_instances(router);
@@ -664,6 +712,11 @@ impl<'a> Simulation<'a> {
             budget,
             &self.cost_model,
         );
+        // Handoff admits inside form_batch are key-neutral (in-flight
+        // KV becomes resident, batch and residency unchanged) — the
+        // re-key hook's compare-and-skip makes reporting them free, and
+        // keeps this site honest if that ever changes.
+        self.cluster.refresh_load(inst);
         let Some(iter_ms) = iter else {
             // Idle with KV handoffs still in flight: wake exactly when
             // the earliest transfer lands, instead of waiting for the
@@ -687,6 +740,10 @@ impl<'a> Simulation<'a> {
             let i = &mut self.cluster.instances[inst];
             i.complete_iteration(now, &mut self.requests)
         };
+        // Token emission / prefill progress / completions all moved the
+        // load key: re-key before the router sees the fleet again.
+        self.cluster.refresh_load(inst);
+        self.cluster.note_finished(finished);
         // Completed prefills → decode placement.
         for req_idx in completed_prefills {
             match self.params.mode {
@@ -729,6 +786,7 @@ impl<'a> Simulation<'a> {
             let ready = now + self.params.kv_transfer_ms;
             self.requests[req_idx].decode_instance = Some(d);
             self.cluster.instances[d].push_decode(req_idx, ready, &self.requests);
+            self.cluster.refresh_load(d);
             // If the destination stays idle until `ready`,
             // maybe_start_iteration schedules the wake at exactly that
             // time via `next_handoff_ready_ms`.
@@ -748,6 +806,7 @@ impl<'a> Simulation<'a> {
                 self.requests[req_idx].req.arrival_ms + self.requests[req_idx].req.slo.ttft_ms;
             self.cluster.instances[inst]
                 .push_prefill(PrefillJob { req_idx, deadline }, &self.requests);
+            self.cluster.refresh_load(inst);
             self.maybe_start_iteration(inst, router);
         }
     }

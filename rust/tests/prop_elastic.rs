@@ -814,10 +814,12 @@ fn predictive_prefill_elastic_run_completes_with_exact_tokens() {
 // ---------------------------------------------------------------------
 
 /// Wraps any autoscaler and re-audits the whole cluster (cached load
-/// counters vs scans, membership indices vs the assign vector) at
-/// every `ScaleEval` — on top of the simulator's own per-event debug
-/// audit, this pins the ISSUE's "cached == recomputed at every
-/// ScaleEval" property to an explicit, countable check.
+/// counters vs scans, membership indices + load-ordered sets vs the
+/// assign vector and live keys, and the incremental unplaced-demand
+/// counter vs the reconstruction scan) at every `ScaleEval` — on top
+/// of the simulator's own per-event debug audit, this pins the
+/// "cached == recomputed at every ScaleEval" property to an explicit,
+/// countable check.
 struct AuditEveryEval {
     inner: Box<dyn Autoscaler>,
     evals: usize,
@@ -826,6 +828,12 @@ struct AuditEveryEval {
 impl Autoscaler for AuditEveryEval {
     fn evaluate(&mut self, now: TimeMs, ctx: &mut RouteCtx) -> Vec<ScaleAction> {
         ctx.cluster.audit(ctx.requests);
+        assert_eq!(
+            ctx.cluster.unplaced_demand(),
+            ctx.cluster.unplaced_demand_scan(ctx.requests, now),
+            "incremental unplaced-demand counter diverged from the scan \
+             oracle at ScaleEval t={now}"
+        );
         self.evals += 1;
         self.inner.evaluate(now, ctx)
     }
@@ -909,11 +917,14 @@ fn cached_counters_match_scans_at_every_scale_eval() {
     );
 }
 
-/// Decision-identity: the cached/indexed hot path must reproduce the
-/// scan-based reference path's `SimResult` bit-for-bit — per-request
-/// outcomes, attainment, cost, fleet series, migration stats, and even
-/// the processed-event count — across both serving modes, with the
-/// full elastic + diurnal + migration + elastic-prefill machinery on.
+/// Decision-identity: the load-ordered hot path must reproduce both
+/// reference paths' `SimResult` bit-for-bit — the PR-4 indexed path
+/// (sort-per-placement over the id indices) *and* the scan-based
+/// pre-PR-4 path — in per-request outcomes, attainment, cost, fleet
+/// series, migration stats, and even the processed-event count, across
+/// both serving modes with the full elastic + diurnal + migration +
+/// elastic-prefill machinery on, plus a `load_gradient = off` ablation
+/// cell (the ordered set walked in reverse).
 #[test]
 fn indexed_run_reproduces_scan_reference_bit_for_bit() {
     let mut pd = SimConfig {
@@ -966,28 +977,51 @@ fn indexed_run_reproduces_scan_reference_bit_for_bit() {
         ..Default::default()
     };
 
-    for (label, cfg) in [("pd_elastic", pd), ("coloc_elastic", co), ("pd_fixed", fixed)] {
-        let indexed = Experiment::prepare(&cfg).run();
+    // The load-gradient ablation walks the same ordered set in reverse
+    // (ascending `(batch, kv, id)`), which must match the reference
+    // paths' ascending sort bit-for-bit too.
+    let mut ablated = fixed.clone();
+    ablated.seed = 37;
+    ablated.features.load_gradient = false;
+
+    for (label, cfg) in [
+        ("pd_elastic", pd),
+        ("coloc_elastic", co),
+        ("pd_fixed", fixed),
+        ("pd_no_gradient", ablated),
+    ] {
+        let ordered = Experiment::prepare(&cfg).run();
+        let mut indexed_exp = Experiment::prepare(&cfg);
+        indexed_exp.indexed_reference = true;
+        let indexed = indexed_exp.run();
         let mut scan_exp = Experiment::prepare(&cfg);
         scan_exp.scan_reference = true;
         let scan = scan_exp.run();
-        assert_eq!(indexed.outcomes, scan.outcomes, "{label}: outcomes diverged");
-        assert_eq!(indexed.attainment, scan.attainment, "{label}");
-        assert_eq!(indexed.cost, scan.cost, "{label}: cost diverged");
-        assert_eq!(indexed.fleet, scan.fleet, "{label}: fleet series diverged");
-        assert_eq!(indexed.migration, scan.migration, "{label}");
-        assert_eq!(indexed.sim_span_ms, scan.sim_span_ms, "{label}");
-        assert_eq!(
-            indexed.throughput_rps.to_bits(),
-            scan.throughput_rps.to_bits(),
-            "{label}"
-        );
-        assert_eq!(indexed.unfinished, scan.unfinished, "{label}");
-        assert_eq!(
-            indexed.events_processed, scan.events_processed,
-            "{label}: event schedule diverged"
-        );
-        assert_eq!(indexed.unfinished, 0, "{label}");
+        for (path, res) in [("indexed", &indexed), ("scan", &scan)] {
+            assert_eq!(
+                ordered.outcomes, res.outcomes,
+                "{label}/{path}: outcomes diverged"
+            );
+            assert_eq!(ordered.attainment, res.attainment, "{label}/{path}");
+            assert_eq!(ordered.cost, res.cost, "{label}/{path}: cost diverged");
+            assert_eq!(
+                ordered.fleet, res.fleet,
+                "{label}/{path}: fleet series diverged"
+            );
+            assert_eq!(ordered.migration, res.migration, "{label}/{path}");
+            assert_eq!(ordered.sim_span_ms, res.sim_span_ms, "{label}/{path}");
+            assert_eq!(
+                ordered.throughput_rps.to_bits(),
+                res.throughput_rps.to_bits(),
+                "{label}/{path}"
+            );
+            assert_eq!(ordered.unfinished, res.unfinished, "{label}/{path}");
+            assert_eq!(
+                ordered.events_processed, res.events_processed,
+                "{label}/{path}: event schedule diverged"
+            );
+        }
+        assert_eq!(ordered.unfinished, 0, "{label}");
     }
 }
 

@@ -14,14 +14,26 @@ use polyserve::coordinator::{PolyServeRouter, RouteCtx, Router, ShardedRouter};
 use polyserve::model::CostModel;
 use polyserve::profile::ProfileTable;
 use polyserve::sim::{Cluster, SimRequest};
-use polyserve::slo::{DsloTracker, Slo};
+use polyserve::slo::Slo;
 use polyserve::util::benchkit::Bench;
 use polyserve::util::rng::Rng;
 use polyserve::util::threadpool::par_map;
 use polyserve::workload::Request;
 
+/// Leak a fixture request so the arena's borrowed immutable half has a
+/// `'static` home (benches build a bounded fixture set once).
+fn leaked(id: u64, p: u32, d: u32, slo: Slo) -> &'static Request {
+    Box::leak(Box::new(Request {
+        id,
+        arrival_ms: 0,
+        prefill_len: p,
+        decode_len: d,
+        slo,
+    }))
+}
+
 /// Build a loaded cluster + request population for routing timing.
-fn setup(n_servers: usize, seed: u64) -> (Cluster, Vec<SimRequest>) {
+fn setup(n_servers: usize, seed: u64) -> (Cluster, Vec<SimRequest<'static>>) {
     let cm = CostModel::h200_llama8b();
     let mut cluster = Cluster::build(
         ServingMode::PdDisaggregated,
@@ -48,17 +60,13 @@ fn setup(n_servers: usize, seed: u64) -> (Cluster, Vec<SimRequest>) {
             let p = rng.range_u64(16, 2000) as u32;
             let d = rng.range_u64(16, 800) as u32;
             let idx = requests.len();
-            let slo = Slo::new(500, tiers[k]);
-            requests.push(SimRequest {
-                req: Request { id: idx as u64, arrival_ms: 0, prefill_len: p, decode_len: d, slo },
-                tier: k,
-                tracker: DsloTracker::new(0, slo),
-                prefill_done: p,
-                decoded: rng.range_u64(1, 50) as u32,
-                first_token_ms: Some(1),
-                finish_ms: None,
-                decode_instance: Some(id),
-            });
+            let mut r =
+                SimRequest::new(leaked(idx as u64, p, d, Slo::new(500, tiers[k])), k);
+            r.prefill_done = p;
+            r.decoded = rng.range_u64(1, 50) as u32;
+            r.first_token_ms = Some(1);
+            r.decode_instance = Some(id);
+            requests.push(r);
             // Cache-coherent residency: keeps the O(1) load counters in
             // sync (pushing `running` directly would desync them).
             cluster.instances[id].push_running(idx, &requests);
@@ -72,18 +80,13 @@ fn setup(n_servers: usize, seed: u64) -> (Cluster, Vec<SimRequest>) {
     for i in 0..4096 {
         let k = (i % 4) as usize;
         let p = rng.range_u64(16, 2000) as u32;
-        let slo = Slo::new(500, tiers[k]);
         let idx = requests.len();
-        requests.push(SimRequest {
-            req: Request { id: idx as u64, arrival_ms: 0, prefill_len: p, decode_len: 300, slo },
-            tier: k,
-            tracker: DsloTracker::new(0, slo),
-            prefill_done: p,
-            decoded: 1,
-            first_token_ms: Some(1),
-            finish_ms: None,
-            decode_instance: None,
-        });
+        let mut r =
+            SimRequest::new(leaked(idx as u64, p, 300, Slo::new(500, tiers[k])), k);
+        r.prefill_done = p;
+        r.decoded = 1;
+        r.first_token_ms = Some(1);
+        requests.push(r);
     }
     (cluster, requests)
 }

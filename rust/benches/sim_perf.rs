@@ -1,40 +1,43 @@
 //! Simulator-throughput benchmark: the repo's perf trajectory
-//! (`BENCH_sim_perf.json` at the repo root — this PR plants its second
-//! point, the load-ordered fleet indices).
+//! (`BENCH_sim_perf.json` at the repo root — this PR plants its third
+//! point, the calendar-queue event engine).
 //!
 //! Sweeps large-fleet, high-rate scenarios and reports **simulated
-//! events per second of wall clock** and wall clock per cell. Every
-//! scenario runs three times:
+//! events per second of wall clock** and wall clock per cell, over a
+//! two-axis cell grid:
 //!
-//! * `ordered` — this PR's hot path: load-ordered tier walks (no
-//!   per-placement sort or collect) + O(1) unplaced demand;
-//! * `indexed` — the PR-4 reference (`Experiment::indexed_reference`):
-//!   id-indexed membership and cached O(1) load counters, but a
-//!   materialize-and-sort per placement and scan-reconstructed
-//!   unplaced demand;
-//! * `scan` — the pre-PR-4 reference (`Experiment::scan_reference`):
-//!   full-fleet membership scans and per-candidate resident rescans.
+//! * queue axis — `calendar` (this PR's event engine: bucketed timing
+//!   wheel + overflow ring + cursor-fed arrivals) vs `heap` (the
+//!   pre-PR-6 global binary heap, `Experiment::heap_reference`);
+//! * index axis — `ordered` (PR-5 load-ordered tier walks + O(1)
+//!   unplaced demand), `indexed` (PR-4 reference: id-indexed
+//!   membership, materialize-and-sort per placement), `scan` (the
+//!   pre-PR-4 reference: full-fleet membership + resident scans).
 //!
-//! All three simulate identical workload bytes, and a digest over every
-//! per-request outcome is asserted equal across all three paths in
-//! *all* modes (not just smoke): each optimization layer must be
-//! decision-identical, not just fast. The satellite micro-optimizations
-//! (pending short-circuit, sweep narrowing, scratch reuse, cached tier
-//! orders, k-least drain selection) stay active in every path, so the
-//! reported ratios are conservative floors on the true historical
-//! speedups.
+//! The four acceptance scenarios (`pd_fixed` / `coloc_elastic` /
+//! `pd_elastic` / `pd_nograd`) run the full 6-cell queue × index
+//! matrix in **every** mode (smoke, default, full), and a digest over
+//! every per-request outcome is asserted equal across all of a
+//! scenario's cells unconditionally: each optimization layer must be
+//! decision-identical, not just fast. The remaining perf scenarios —
+//! including `pd_10x`, ≥10× the previously largest fleet and request
+//! count — run the two queue cells, so `speedup_calendar_over_heap`
+//! is reported for every scenario.
 //!
-//! Scenarios fan out via `par_map`, but a scenario's three halves are
-//! timed back-to-back *inside one worker* — a ratio never compares
-//! cells that ran under different pool contention. The per-event debug
-//! audit is disabled in the timed runs — with it the bench would
-//! measure the audit's own full scans ([profile.bench] keeps
-//! debug-assertions on).
+//! Scenarios fan out via `par_map`, but one scenario's cells are timed
+//! back-to-back *inside one worker* — a ratio never compares cells
+//! that ran under different pool contention. The per-event debug audit
+//! is disabled in the timed runs — with it the bench would measure the
+//! audit's own scans ([profile.bench] keeps debug-assertions on).
 //!
 //! `POLYSERVE_SMOKE=1` shrinks the sweep and hard-asserts the CI gate:
-//! events/sec > 0 in every cell, every cell finishes all requests,
-//! the three digests match, and `BENCH_sim_perf.json` is emitted and
-//! parses. CI uploads `results/sim_perf.csv` as a build artifact.
+//! events/sec > 0 in every cell, every cell finishes all requests, and
+//! `BENCH_sim_perf.json` is emitted and parses. The digest-identity
+//! marker line (`digest identity verified across N queue x index
+//! cells`) prints in every mode *after* the assertions run; CI greps
+//! for it, so the identity checks can never be silently skipped. CI
+//! uploads `results/sim_perf.csv` and `BENCH_sim_perf.json` as build
+//! artifacts.
 
 use polyserve::analysis::ServingMode;
 use polyserve::config::{DiurnalSpec, Policy, ScalerKind, SimConfig};
@@ -55,12 +58,36 @@ struct Scenario {
     /// Gradient-elastic diurnal cell (exercises ScaleEval, lifecycle
     /// churn, and migration on top of routing).
     elastic: bool,
+    /// Run the full 6-cell queue × index matrix (acceptance scenarios);
+    /// non-matrix scenarios run only the two queue cells.
+    matrix: bool,
+    /// `load_gradient = off` ablation (the ordered sets walked in
+    /// reverse; the references sort ascending).
+    nograd: bool,
 }
 
-/// Which hot-path generation a cell runs on.
+/// Which event engine a cell runs on.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Queue {
+    /// This PR: calendar queue + cursor-fed arrivals.
+    Calendar,
+    /// Pre-PR-6 reference: the global binary heap, arrivals pre-seeded.
+    Heap,
+}
+
+impl Queue {
+    fn name(self) -> &'static str {
+        match self {
+            Queue::Calendar => "calendar",
+            Queue::Heap => "heap",
+        }
+    }
+}
+
+/// Which hot-path generation a cell's fleet views run on.
 #[derive(Clone, Copy, PartialEq, Eq)]
 enum Path {
-    /// This PR: load-ordered tier walks + O(1) unplaced demand.
+    /// PR-5: load-ordered tier walks + O(1) unplaced demand.
     Ordered,
     /// PR-4 reference: indexed membership + cached loads, sorted walks.
     Indexed,
@@ -69,14 +96,31 @@ enum Path {
 }
 
 impl Path {
-    const ALL: [Path; 3] = [Path::Ordered, Path::Indexed, Path::Scan];
-
     fn name(self) -> &'static str {
         match self {
             Path::Ordered => "ordered",
             Path::Indexed => "indexed",
             Path::Scan => "scan",
         }
+    }
+}
+
+/// Cell grid of a scenario. Index 0 is always the (calendar, ordered)
+/// baseline every other cell is digest-compared against; matrix
+/// scenarios append the remaining five queue × index combinations,
+/// non-matrix ones only the heap twin of the baseline.
+fn cells_for(s: &Scenario) -> Vec<(Queue, Path)> {
+    if s.matrix {
+        vec![
+            (Queue::Calendar, Path::Ordered),
+            (Queue::Calendar, Path::Indexed),
+            (Queue::Calendar, Path::Scan),
+            (Queue::Heap, Path::Ordered),
+            (Queue::Heap, Path::Indexed),
+            (Queue::Heap, Path::Scan),
+        ]
+    } else {
+        vec![(Queue::Calendar, Path::Ordered), (Queue::Heap, Path::Ordered)]
     }
 }
 
@@ -96,7 +140,7 @@ impl CellOut {
 }
 
 /// FNV-1a over every per-request outcome plus the run totals: any
-/// scheduling divergence between the three paths flips it.
+/// scheduling divergence between two cells of a scenario flips it.
 fn digest(res: &SimResult) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     let mut mix = |x: u64| {
@@ -117,7 +161,7 @@ fn digest(res: &SimResult) -> u64 {
     h
 }
 
-fn run_cell(s: &Scenario, path: Path) -> CellOut {
+fn run_cell(s: &Scenario, queue: Queue, path: Path) -> CellOut {
     let mut cfg = SimConfig {
         trace: TraceKind::ShareGpt,
         mode: s.mode,
@@ -128,6 +172,9 @@ fn run_cell(s: &Scenario, path: Path) -> CellOut {
         seed: 2607,
         ..Default::default()
     };
+    if s.nograd {
+        cfg.features.load_gradient = false;
+    }
     if s.elastic {
         cfg.diurnal = Some(DiurnalSpec { peak_to_trough: 3.0, period_s: 300.0 });
         cfg.elastic.scaler = ScalerKind::Gradient;
@@ -137,9 +184,10 @@ fn run_cell(s: &Scenario, path: Path) -> CellOut {
         cfg.elastic.scale_eval_ms = 1_000;
         cfg.elastic.migration = true;
     }
-    // Experiment::prepare is deterministic in cfg, so the three path
-    // cells of a scenario simulate identical workload bytes.
+    // Experiment::prepare is deterministic in cfg, so every cell of a
+    // scenario simulates identical workload bytes.
     let mut exp = Experiment::prepare(&cfg);
+    exp.heap_reference = queue == Queue::Heap;
     exp.scan_reference = path == Path::Scan;
     exp.indexed_reference = path == Path::Indexed;
     exp.debug_audit = false; // timing: don't measure the audit itself
@@ -163,59 +211,84 @@ fn main() {
     let smoke = smoke_scale();
     let pd = ServingMode::PdDisaggregated;
     let co = ServingMode::Colocated;
-    let cell = |name, mode, instances, requests, elastic| Scenario {
+    let cell = |name, mode, instances, requests, elastic, matrix, nograd| Scenario {
         name,
         mode,
         instances,
         requests,
         elastic,
+        matrix,
+        nograd,
     };
-    let scenarios: Vec<Scenario> = if smoke {
+    // The four acceptance scenarios run the 6-cell matrix in EVERY
+    // mode; the trailing perf scenarios scale with the mode and run
+    // the calendar/heap pair only. `pd_10x` is ≥10× the previously
+    // largest fleet and request count of its mode.
+    let mut scenarios: Vec<Scenario> = if smoke {
         vec![
-            cell("pd_smoke", pd, 10, 500, false),
-            cell("co_elastic_smoke", co, 8, 400, true),
+            cell("pd_fixed", pd, 10, 400, false, true, false),
+            cell("coloc_elastic", co, 8, 400, true, true, false),
+            cell("pd_elastic", pd, 8, 400, true, true, false),
+            cell("pd_nograd", pd, 10, 400, false, true, true),
         ]
     } else if full {
         vec![
-            cell("pd_large", pd, 96, 30_000, false),
-            cell("co_large", co, 96, 30_000, false),
-            cell("pd_xl", pd, 192, 40_000, false),
-            cell("pd_elastic", pd, 64, 20_000, true),
+            cell("pd_fixed", pd, 64, 10_000, false, true, false),
+            cell("coloc_elastic", co, 48, 8_000, true, true, false),
+            cell("pd_elastic", pd, 48, 8_000, true, true, false),
+            cell("pd_nograd", pd, 64, 10_000, false, true, true),
         ]
     } else {
         vec![
-            cell("pd_large", pd, 64, 6_000, false),
-            cell("co_large", co, 64, 6_000, false),
-            cell("pd_xl", pd, 160, 8_000, false),
-            cell("pd_elastic", pd, 48, 5_000, true),
+            cell("pd_fixed", pd, 32, 3_000, false, true, false),
+            cell("coloc_elastic", co, 24, 2_000, true, true, false),
+            cell("pd_elastic", pd, 24, 2_000, true, true, false),
+            cell("pd_nograd", pd, 32, 3_000, false, true, true),
         ]
     };
+    if full {
+        scenarios.extend([
+            cell("pd_large", pd, 96, 30_000, false, false, false),
+            cell("co_large", co, 96, 30_000, false, false, false),
+            cell("pd_xl", pd, 192, 40_000, false, false, false),
+            cell("pd_elastic_xl", pd, 64, 20_000, true, false, false),
+            cell("pd_10x", pd, 1_920, 400_000, false, false, false),
+        ]);
+    } else if !smoke {
+        scenarios.extend([
+            cell("pd_large", pd, 64, 6_000, false, false, false),
+            cell("co_large", co, 64, 6_000, false, false, false),
+            cell("pd_xl", pd, 160, 8_000, false, false, false),
+            cell("pd_elastic_xl", pd, 48, 5_000, true, false, false),
+            cell("pd_10x", pd, 1_600, 80_000, false, false, false),
+        ]);
+    }
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
 
-    // One par_map item per scenario; each worker times its three path
-    // cells back-to-back so the triple shares identical pool contention
-    // and the speedup ratios are reproducible.
-    let triples: Vec<(Scenario, [CellOut; 3])> =
-        par_map(scenarios.clone(), threads, move |_, scenario| {
-            let outs = Path::ALL.map(|p| run_cell(&scenario, p));
+    // One par_map item per scenario; each worker times its cells
+    // back-to-back so a scenario's grid shares identical pool
+    // contention and the speedup ratios are reproducible.
+    let runs: Vec<(Scenario, Vec<((Queue, Path), CellOut)>)> =
+        par_map(scenarios, threads, move |_, scenario| {
+            let outs = cells_for(&scenario)
+                .into_iter()
+                .map(|(q, p)| ((q, p), run_cell(&scenario, q, p)))
+                .collect();
             (scenario, outs)
         });
-    let results: Vec<(Scenario, Path, &CellOut)> = triples
+    let results: Vec<(Scenario, Queue, Path, &CellOut)> = runs
         .iter()
         .flat_map(|(s, outs)| {
-            Path::ALL
-                .iter()
-                .zip(outs.iter())
-                .map(|(&p, o)| (*s, p, o))
-                .collect::<Vec<_>>()
+            outs.iter().map(|(cell, o)| (*s, cell.0, cell.1, o)).collect::<Vec<_>>()
         })
         .collect();
 
     let mut rows = Vec::new();
-    for (s, p, r) in &results {
+    for (s, q, p, r) in &results {
         rows.push(vec![
             s.name.to_string(),
             s.mode.name().to_string(),
+            q.name().to_string(),
             p.name().to_string(),
             s.instances.to_string(),
             s.requests.to_string(),
@@ -232,6 +305,7 @@ fn main() {
         &[
             "scenario",
             "mode",
+            "queue",
             "path",
             "instances",
             "requests",
@@ -245,52 +319,81 @@ fn main() {
         &rows,
     );
 
-    // Per-scenario speedups + decision-identity across all three paths.
+    // Decision identity: every cell of a scenario must reproduce the
+    // (calendar, ordered) baseline bit-for-bit. Asserted in every mode
+    // (smoke, default, full) — never skipped.
+    let mut identity_cells = 0usize;
+    for (s, outs) in &runs {
+        let (_, baseline) = &outs[0];
+        for ((q, p), r) in &outs[1..] {
+            assert_eq!(
+                baseline.digest,
+                r.digest,
+                "{}: calendar+ordered diverged from {}+{} — \
+                 an optimization changed a scheduling decision",
+                s.name,
+                q.name(),
+                p.name()
+            );
+            assert_eq!(
+                baseline.events,
+                r.events,
+                "{}: event count diverged vs {}+{}",
+                s.name,
+                q.name(),
+                p.name()
+            );
+            identity_cells += 1;
+        }
+    }
+    // CI greps for this exact marker; it prints only after the asserts
+    // above have all passed.
+    println!("digest identity verified across {identity_cells} queue x index cells");
+
+    // Per-scenario speedups. The calendar/heap ratio exists for every
+    // scenario; the index-axis ratios only where the matrix ran.
+    let find = |outs: &[((Queue, Path), CellOut)], q: Queue, p: Path| -> Option<f64> {
+        outs.iter()
+            .find(|((oq, op), _)| *oq == q && *op == p)
+            .map(|(_, o)| o.events_per_sec())
+    };
+    let mut sp_calendar_heap: Vec<(&str, f64)> = Vec::new();
     let mut sp_ordered_scan: Vec<(&str, f64)> = Vec::new();
     let mut sp_ordered_indexed: Vec<(&str, f64)> = Vec::new();
     let mut sp_indexed_scan: Vec<(&str, f64)> = Vec::new();
-    for (s, [ordered, indexed, scan]) in &triples {
-        for (other, r) in [("indexed", indexed), ("scan", scan)] {
-            assert_eq!(
-                ordered.digest, r.digest,
-                "{}: ordered path diverged from the {other} reference — \
-                 the optimization changed a scheduling decision",
-                s.name
-            );
-            assert_eq!(
-                ordered.events, r.events,
-                "{}: event count diverged vs {other}",
-                s.name
-            );
-        }
-        sp_ordered_scan.push((s.name, ordered.events_per_sec() / scan.events_per_sec()));
-        sp_ordered_indexed
-            .push((s.name, ordered.events_per_sec() / indexed.events_per_sec()));
-        sp_indexed_scan.push((s.name, indexed.events_per_sec() / scan.events_per_sec()));
+    for (s, outs) in &runs {
+        let cal = find(outs, Queue::Calendar, Path::Ordered).expect("baseline cell");
+        let heap = find(outs, Queue::Heap, Path::Ordered).expect("heap twin");
+        sp_calendar_heap.push((s.name, cal / heap));
         println!(
-            "  {:<20} {:>8} events  ordered {:>10}/s  indexed {:>10}/s  scan {:>10}/s  \
-             ord/scan {:.2}x  ord/idx {:.2}x",
+            "  {:<16} calendar {:>10}/s  heap {:>10}/s  cal/heap {:.2}x",
             s.name,
-            ordered.events,
-            fmt_count(ordered.events_per_sec()),
-            fmt_count(indexed.events_per_sec()),
-            fmt_count(scan.events_per_sec()),
-            ordered.events_per_sec() / scan.events_per_sec(),
-            ordered.events_per_sec() / indexed.events_per_sec(),
+            fmt_count(cal),
+            fmt_count(heap),
+            cal / heap,
         );
+        if let (Some(idx), Some(scan)) = (
+            find(outs, Queue::Calendar, Path::Indexed),
+            find(outs, Queue::Calendar, Path::Scan),
+        ) {
+            sp_ordered_scan.push((s.name, cal / scan));
+            sp_ordered_indexed.push((s.name, cal / idx));
+            sp_indexed_scan.push((s.name, idx / scan));
+        }
     }
 
-    // Repo-root perf-trajectory artifact (second point: ordered cells).
+    // Repo-root perf-trajectory artifact (third point: calendar cells).
     let mut root = Json::obj();
     root.set("bench", Json::Str("sim_perf".into()));
     root.set("unit", Json::Str("simulated events per wall-clock second".into()));
     root.set("smoke", Json::Bool(smoke));
     root.set("full", Json::Bool(full));
     let mut cells_json = Vec::new();
-    for (s, p, r) in &results {
+    for (s, q, p, r) in &results {
         let mut o = Json::obj();
         o.set("scenario", Json::Str(s.name.into()))
             .set("mode", Json::Str(s.mode.name().into()))
+            .set("queue", Json::Str(q.name().into()))
             .set("path", Json::Str(p.name().into()))
             .set("instances", Json::Num(s.instances as f64))
             .set("requests", Json::Num(s.requests as f64))
@@ -304,6 +407,7 @@ fn main() {
     }
     root.set("cells", Json::Arr(cells_json));
     for (label, sps) in [
+        ("speedup_calendar_over_heap", &sp_calendar_heap),
         ("speedup_ordered_over_scan", &sp_ordered_scan),
         ("speedup_ordered_over_indexed", &sp_ordered_indexed),
         ("speedup_indexed_over_scan", &sp_indexed_scan),
@@ -320,14 +424,15 @@ fn main() {
 
     // CI smoke gate: hard asserts, not just a CSV.
     if smoke {
-        for (s, p, r) in &results {
+        for (s, q, p, r) in &results {
             assert!(r.events > 0, "{}: no events simulated", s.name);
             assert!(r.wall_s > 0.0);
             assert_eq!(
                 r.unfinished,
                 0,
-                "{}/{}: cell left requests unfinished",
+                "{}/{}/{}: cell left requests unfinished",
                 s.name,
+                q.name(),
                 p.name()
             );
             assert!((0.0..=1.0).contains(&r.attain));
@@ -339,6 +444,7 @@ fn main() {
             Some(results.len())
         );
         for key in [
+            "speedup_calendar_over_heap",
             "speedup_ordered_over_scan",
             "speedup_ordered_over_indexed",
             "speedup_indexed_over_scan",

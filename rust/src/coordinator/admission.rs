@@ -299,33 +299,31 @@ mod tests {
     use super::*;
     use crate::model::CostModel;
     use crate::sim::instance::{Instance, Role};
-    use crate::slo::{DsloTracker, Slo};
+    use crate::slo::Slo;
     use crate::workload::Request;
 
     fn profile() -> ProfileTable {
         ProfileTable::from_cost_model(&CostModel::h200_llama8b())
     }
 
-    fn sim_req(id: u64, p: u32, decoded: u32) -> SimRequest {
-        SimRequest {
-            req: Request {
-                id,
-                arrival_ms: 0,
-                prefill_len: p,
-                decode_len: 10_000,
-                slo: Slo::new(1000, 50),
-            },
-            tier: 0,
-            tracker: DsloTracker::new(0, Slo::new(1000, 50)),
-            prefill_done: p,
-            decoded,
-            first_token_ms: Some(0),
-            finish_ms: None,
-            decode_instance: Some(0),
-        }
+    fn sim_req(id: u64, p: u32, decoded: u32) -> SimRequest<'static> {
+        // Leak the immutable half: the arena borrows, never clones.
+        let req: &'static Request = Box::leak(Box::new(Request {
+            id,
+            arrival_ms: 0,
+            prefill_len: p,
+            decode_len: 10_000,
+            slo: Slo::new(1000, 50),
+        }));
+        let mut r = SimRequest::new(req, 0);
+        r.prefill_done = p;
+        r.decoded = decoded;
+        r.first_token_ms = Some(0);
+        r.decode_instance = Some(0);
+        r
     }
 
-    fn loaded_instance(n: usize, p: u32, decoded: u32) -> (Instance, Vec<SimRequest>) {
+    fn loaded_instance(n: usize, p: u32, decoded: u32) -> (Instance, Vec<SimRequest<'static>>) {
         let cm = CostModel::h200_llama8b();
         let mut inst = Instance::new(0, Role::Decode, cm.kv_capacity_tokens, cm.max_token_batch);
         let mut reqs = Vec::new();

@@ -952,7 +952,7 @@ mod tests {
     use crate::model::CostModel;
     use crate::profile::ProfileTable;
     use crate::sim::{Cluster, SimRequest};
-    use crate::slo::{DsloTracker, Slo};
+    use crate::slo::Slo;
     use crate::workload::Request;
 
     fn ctx_parts() -> (Cluster, ProfileTable) {
@@ -963,24 +963,36 @@ mod tests {
 
     /// A finished tier-`tier` request that arrived at `arrival_ms` —
     /// visible to the rate estimator, invisible to unplaced-demand.
-    fn arrived_req(id: u64, arrival_ms: u64, tier: usize, tpot: u64) -> SimRequest {
-        let slo = Slo::new(1_000, tpot);
-        SimRequest {
-            req: Request {
-                id,
-                arrival_ms,
-                prefill_len: 512,
-                decode_len: 300,
-                slo,
-            },
-            tier,
-            tracker: DsloTracker::new(arrival_ms, slo),
-            prefill_done: 512,
-            decoded: 300,
-            first_token_ms: Some(arrival_ms + 1),
-            finish_ms: Some(arrival_ms + 2),
-            decode_instance: None,
-        }
+    fn arrived_req(id: u64, arrival_ms: u64, tier: usize, tpot: u64) -> SimRequest<'static> {
+        // Leaked immutable half: the arena borrows, never clones.
+        let req: &'static Request = Box::leak(Box::new(Request {
+            id,
+            arrival_ms,
+            prefill_len: 512,
+            decode_len: 300,
+            slo: Slo::new(1_000, tpot),
+        }));
+        let mut r = SimRequest::new(req, tier);
+        r.prefill_done = 512;
+        r.decoded = 300;
+        r.first_token_ms = Some(arrival_ms + 1);
+        r.finish_ms = Some(arrival_ms + 2);
+        r
+    }
+
+    /// An un-prefilled tier-`tier` request with an 8 k prompt — the
+    /// queued-work fixture of the TTFT-pressure tests. The prompt
+    /// length lives in the immutable borrowed half of the arena, so it
+    /// is set at construction rather than mutated afterwards.
+    fn unprefilled_req(id: u64, tier: usize, tpot: u64) -> SimRequest<'static> {
+        let req: &'static Request = Box::leak(Box::new(Request {
+            id,
+            arrival_ms: 0,
+            prefill_len: 8_000,
+            decode_len: 300,
+            slo: Slo::new(1_000, tpot),
+        }));
+        SimRequest::new(req, tier)
     }
 
     #[test]
@@ -1334,17 +1346,7 @@ mod tests {
         let profile = ProfileTable::from_cost_model(&cm);
         let mut cluster = Cluster::build(ServingMode::PdDisaggregated, 6, 0.5, 4, &cm, true);
         // Unprefilled requests with tight TTFT headroom.
-        let mut reqs: Vec<SimRequest> = (0..8u64)
-            .map(|i| {
-                let mut r = arrived_req(i, 0, 3, 100);
-                r.req.prefill_len = 8_000;
-                r.prefill_done = 0;
-                r.decoded = 0;
-                r.finish_ms = None;
-                r.first_token_ms = None;
-                r
-            })
-            .collect();
+        let mut reqs: Vec<SimRequest> = (0..8u64).map(|i| unprefilled_req(i, 3, 100)).collect();
         let empty = {
             let ctx = RouteCtx {
                 now: 0,
@@ -1402,17 +1404,8 @@ mod tests {
         let profile = ProfileTable::from_cost_model(&cm);
         // 3 prefill + 3 decode servers, heavy queue on server 0.
         let mut cluster = Cluster::build(ServingMode::PdDisaggregated, 6, 0.5, 4, &cm, true);
-        let mut reqs: Vec<SimRequest> = (0..12u64)
-            .map(|i| {
-                let mut r = arrived_req(i, 0, 3, 100);
-                r.req.prefill_len = 8_000;
-                r.prefill_done = 0;
-                r.decoded = 0;
-                r.finish_ms = None;
-                r.first_token_ms = None;
-                r
-            })
-            .collect();
+        let mut reqs: Vec<SimRequest> =
+            (0..12u64).map(|i| unprefilled_req(i, 3, 100)).collect();
         for i in 0..12usize {
             cluster.instances[0].push_prefill(
                 crate::sim::PrefillJob {

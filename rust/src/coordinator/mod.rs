@@ -41,13 +41,16 @@ use crate::sim::{Cluster, SimRequest};
 use crate::slo::TimeMs;
 
 /// Mutable view the simulator hands to the router on every decision.
-pub struct RouteCtx<'a> {
+/// `'w` is the workload borrow carried by the request arena (the
+/// [`SimRequest`]s borrow their immutable halves from the workload);
+/// it outlives the view's own borrow `'a`.
+pub struct RouteCtx<'a, 'w> {
     /// Current simulated time, ms.
     pub now: TimeMs,
     /// The fleet (mutable: routers claim/release/queue onto instances).
     pub cluster: &'a mut Cluster,
     /// Every request of the run, indexed by `req_idx`.
-    pub requests: &'a mut [SimRequest],
+    pub requests: &'a mut [SimRequest<'w>],
     /// The profiling table — the router's only timing oracle (§4.5).
     pub profile: &'a ProfileTable,
     /// Serving architecture of this run.

@@ -447,7 +447,8 @@ impl PolyServeRouter {
     /// instance of the right role cluster. Read-only and collect-free:
     /// each candidate view feeds the min-scan directly (same ascending
     /// id order as the old materialized lists, so ties resolve
-    /// identically).
+    /// identically), and the pending step walks the cluster's ordered
+    /// pending twin instead of min-scanning on the default path.
     fn forced_target(&self, k: usize, ctx: &RouteCtx) -> Option<usize> {
         fn least_loaded(ctx: &RouteCtx, ids: impl Iterator<Item = usize>) -> Option<usize> {
             ids.min_by_key(|&id| {
@@ -461,8 +462,17 @@ impl PolyServeRouter {
             }
         }
         // Any pending-state instance (that still accepts work — the
-        // elastic fleet may be draining some).
-        if let Some(id) = least_loaded(ctx, ctx.cluster.pending_pool()) {
+        // elastic fleet may be draining some). Default path: the first
+        // entry of the pending pool's ordered twin — ascending
+        // `(batch, queued prefill, id)`, exactly the min-scan's pick
+        // (`min_by_key` over the ascending-id view returns the
+        // lexicographic minimum). Reference modes keep the min-scan.
+        let pend = if ctx.cluster.is_scan_reference() || ctx.cluster.is_indexed_reference() {
+            least_loaded(ctx, ctx.cluster.pending_pool())
+        } else {
+            ctx.cluster.pending_by_load().next()
+        };
+        if let Some(id) = pend {
             return Some(id);
         }
         // Anything serving the right role (looser tiers included).

@@ -176,29 +176,29 @@ mod tests {
     use crate::model::CostModel;
     use crate::profile::ProfileTable;
     use crate::sim::{Cluster, Role};
-    use crate::slo::{DsloTracker, Slo};
+    use crate::slo::Slo;
     use crate::workload::Request;
 
-    fn ctx_fixture(n: usize) -> (Cluster, Vec<crate::sim::SimRequest>, ProfileTable) {
+    fn ctx_fixture(
+        n: usize,
+    ) -> (Cluster, Vec<crate::sim::SimRequest<'static>>, ProfileTable) {
         let cm = CostModel::h200_llama8b();
         let cluster = Cluster::build(ServingMode::PdDisaggregated, n, 0.25, 4, &cm, true);
-        let slo = Slo::new(500, 50);
         let reqs = (0..64)
-            .map(|i| crate::sim::SimRequest {
-                req: Request {
+            .map(|i| {
+                // Leaked immutable half: the arena borrows, never clones.
+                let req: &'static Request = Box::leak(Box::new(Request {
                     id: i,
                     arrival_ms: 0,
                     prefill_len: 100,
                     decode_len: 50,
-                    slo,
-                },
-                tier: 2,
-                tracker: DsloTracker::new(0, slo),
-                prefill_done: 100,
-                decoded: 1,
-                first_token_ms: Some(1),
-                finish_ms: None,
-                decode_instance: None,
+                    slo: Slo::new(500, 50),
+                }));
+                let mut r = crate::sim::SimRequest::new(req, 2);
+                r.prefill_done = 100;
+                r.decoded = 1;
+                r.first_token_ms = Some(1);
+                r
             })
             .collect();
         (cluster, reqs, ProfileTable::from_cost_model(&cm))

@@ -44,6 +44,13 @@ pub struct Experiment {
     /// reconstructed by scan. Isolates what the ordered indices alone
     /// buy; decisions stay bit-for-bit identical.
     pub indexed_reference: bool,
+    /// Run the event loop off the pre-PR-6 global binary heap instead
+    /// of the calendar queue (`SimParams::heap_reference`). The two
+    /// engines pop the identical `(t, seq)` sequence by construction,
+    /// so decisions are bit-for-bit unchanged — the queue axis of the
+    /// digest-identity matrix and the `speedup_calendar_over_heap`
+    /// baseline. Composes freely with the index-axis flags above.
+    pub heap_reference: bool,
     /// Run the per-event cache/index coherence audit in debug-assertion
     /// builds (`SimParams::debug_audit`). On by default; `sim_perf`
     /// timing cells disable it so the bench doesn't measure the audit's
@@ -114,6 +121,7 @@ impl Experiment {
             rate_rps,
             scan_reference: false,
             indexed_reference: false,
+            heap_reference: false,
             debug_audit: true,
         }
     }
@@ -144,6 +152,7 @@ impl Experiment {
         let params = SimParams {
             mode: self.cfg.mode,
             debug_audit: self.debug_audit,
+            heap_reference: self.heap_reference,
             elastic: elastic.then(|| ElasticParams {
                 min_instances: self.cfg.elastic.min_instances.max(1),
                 max_instances: self.cfg.elastic.max_instances,

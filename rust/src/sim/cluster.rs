@@ -126,9 +126,19 @@ pub struct Cluster {
     ordered_tier: Vec<LoadOrdered>,
     /// Best-effort pool in the same descending load order.
     ordered_be: LoadOrdered,
+    /// Pending-state instances in *ascending* `(decode batch, queued
+    /// prefill tokens, id)` order — the liveness fallback's
+    /// least-loaded walk (`forced_target`) as plain in-order iteration
+    /// with `.next()`, no per-call min-scan.
+    ordered_pending: BTreeSet<(u64, u64, usize)>,
     /// Last key inserted into an ordered set per instance (the key a
     /// removal must use; also the audit's staleness probe).
     load_key: Vec<(u64, u64)>,
+    /// Last key inserted into `ordered_pending` per instance. Stored
+    /// separately from `load_key`: a prefill push with no committed
+    /// tokens moves the pending key while the `(batch, kv)` load key
+    /// stays put, so a load-key comparison alone would miss the re-key.
+    pending_key: Vec<(u64, u64)>,
     /// Last known `resident_requests()` per instance (feeds the O(1)
     /// unplaced-demand counter below).
     resident_cnt: Vec<usize>,
@@ -216,7 +226,9 @@ impl Cluster {
             role_ids: [BTreeSet::new(), BTreeSet::new(), BTreeSet::new()],
             ordered_tier: vec![LoadOrdered::new(); num_tiers],
             ordered_be: LoadOrdered::new(),
+            ordered_pending: BTreeSet::new(),
             load_key: vec![(0, 0); n_built],
+            pending_key: vec![(0, 0); n_built],
             resident_cnt: vec![0; n_built],
             resident_total: 0,
             arrived_total: 0,
@@ -239,6 +251,8 @@ impl Cluster {
         // counters (the stored key may predate churn outside any set).
         let key = self.instances[id].load_key();
         self.load_key[id] = key;
+        let pkey = self.instances[id].pending_key();
+        self.pending_key[id] = pkey;
         match a {
             TierAssign::Tier(k) => {
                 if k >= self.tier_ids.len() {
@@ -254,6 +268,7 @@ impl Cluster {
             }
             TierAssign::Pending => {
                 self.pending_ids.insert(id);
+                self.ordered_pending.insert((pkey.0, pkey.1, id));
             }
             TierAssign::Static => {}
         }
@@ -277,6 +292,8 @@ impl Cluster {
             }
             TierAssign::Pending => {
                 self.pending_ids.remove(&id);
+                let pkey = self.pending_key[id];
+                self.ordered_pending.remove(&(pkey.0, pkey.1, id));
             }
             TierAssign::Static => {}
         }
@@ -301,6 +318,19 @@ impl Cluster {
         if res != old_res {
             self.resident_total = self.resident_total + res - old_res;
             self.resident_cnt[id] = res;
+        }
+        // The pending key is compared independently of the load-key
+        // fast path below: a prefill push with no committed tokens
+        // changes the queued-token component only, so the `(batch, kv)`
+        // load key stays put while the pending key moves.
+        let pkey = self.instances[id].pending_key();
+        if pkey != self.pending_key[id] {
+            if self.assign[id] == TierAssign::Pending {
+                let old = self.pending_key[id];
+                self.ordered_pending.remove(&(old.0, old.1, id));
+                self.ordered_pending.insert((pkey.0, pkey.1, id));
+            }
+            self.pending_key[id] = pkey;
         }
         let key = self.instances[id].load_key();
         let old_key = self.load_key[id];
@@ -590,6 +620,24 @@ impl Cluster {
         }
     }
 
+    /// The pending pool's ordered twin: pending-state instances that
+    /// accept work, in *ascending* `(decode batch, queued prefill
+    /// tokens, id)` order. `.next()` is exactly the least-loaded
+    /// min-scan `forced_target` used to run over
+    /// [`Cluster::pending_pool`] (`min_by_key` over an ascending-id
+    /// view returns the lexicographic `(batch, tokens, id)` minimum),
+    /// so the fallback's pick is bit-for-bit unchanged. Maintained by
+    /// the same re-key discipline as the tier sets — via the separate
+    /// pending key, since this ordering can move without the load key
+    /// moving — and covered by the audit. Reference modes must not use
+    /// this — the router keeps the min-scan there.
+    pub fn pending_by_load(&self) -> impl Iterator<Item = usize> + '_ {
+        self.ordered_pending
+            .iter()
+            .map(|&(_, _, id)| id)
+            .filter(move |&id| self.instances[id].lifecycle.accepts_work())
+    }
+
     /// Ids holding a `Tier(_)` or `Pending` assignment, any lifecycle,
     /// ascending — the candidate set of the router's autoscale-down
     /// sweep (every other assignment is a no-op there, so visiting only
@@ -672,6 +720,7 @@ impl Cluster {
         };
         self.assign.push(a);
         self.load_key.push((0, 0));
+        self.pending_key.push((0, 0));
         self.resident_cnt.push(0);
         self.index_add_assign(id, a);
         self.role_ids[role_idx(role)].insert(id);
@@ -800,6 +849,11 @@ impl Cluster {
                 self.instances[id].resident_requests(),
                 "inst {id}: resident count stale — a mutation site skipped refresh_load"
             );
+            let pend_live = self.instances[id].pending_key();
+            assert_eq!(
+                self.pending_key[id], pend_live,
+                "inst {id}: pending key stale — a mutation site skipped refresh_load"
+            );
             match a {
                 TierAssign::Tier(k) => assert!(
                     self.ordered_tier[k].contains(&load_entry(live, id)),
@@ -809,7 +863,11 @@ impl Cluster {
                     self.ordered_be.contains(&load_entry(live, id)),
                     "inst {id}: missing from the ordered best-effort set"
                 ),
-                _ => {}
+                TierAssign::Pending => assert!(
+                    self.ordered_pending.contains(&(pend_live.0, pend_live.1, id)),
+                    "inst {id}: missing from the ordered pending set under its live key"
+                ),
+                TierAssign::Static => {}
             }
         }
         let sets_total: usize = self.tier_ids.iter().map(|s| s.len()).sum::<usize>()
@@ -829,6 +887,11 @@ impl Cluster {
             .filter(|a| matches!(a, TierAssign::Tier(_) | TierAssign::BestEffort))
             .count();
         assert_eq!(ordered_total, keyed, "stale entries left in a load-ordered set");
+        assert_eq!(
+            self.ordered_pending.len(),
+            self.pending_ids.len(),
+            "stale entries left in the ordered pending set"
+        );
         assert_eq!(
             self.resident_total,
             self.instances.iter().map(Instance::resident_requests).sum::<usize>(),
@@ -1025,26 +1088,22 @@ mod tests {
         c.audit(&[]);
     }
 
-    fn sim_req(id: u64, p: u32, decoded: u32) -> SimRequest {
-        use crate::slo::{DsloTracker, Slo};
+    fn sim_req(id: u64, p: u32, decoded: u32) -> SimRequest<'static> {
+        use crate::slo::Slo;
         use crate::workload::Request;
-        let slo = Slo::new(1000, 50);
-        SimRequest {
-            req: Request {
-                id,
-                arrival_ms: 0,
-                prefill_len: p,
-                decode_len: 500,
-                slo,
-            },
-            tier: 0,
-            tracker: DsloTracker::new(0, slo),
-            prefill_done: p,
-            decoded,
-            first_token_ms: Some(1),
-            finish_ms: None,
-            decode_instance: None,
-        }
+        // Leak the immutable half: the arena borrows, never clones.
+        let req: &'static Request = Box::leak(Box::new(Request {
+            id,
+            arrival_ms: 0,
+            prefill_len: p,
+            decode_len: 500,
+            slo: Slo::new(1000, 50),
+        }));
+        let mut r = SimRequest::new(req, 0);
+        r.prefill_done = p;
+        r.decoded = decoded;
+        r.first_token_ms = Some(1);
+        r
     }
 
     /// The ordered tier walk must track load re-keys: descending
@@ -1090,6 +1149,41 @@ mod tests {
         let id = c.claim_for_tier(0, 0).unwrap();
         assert_eq!(id, 0);
         assert_eq!(c.best_effort_by_load().collect::<Vec<_>>(), vec![1, 2]);
+        c.audit(&reqs);
+    }
+
+    /// The pending pool's ordered twin walks least-loaded first and
+    /// tracks re-keys — including the case that motivates the separate
+    /// pending key: a queued prefill with no committed tokens moves
+    /// `(batch, queued tokens)` while the `(batch, kv)` load key stays
+    /// put.
+    #[test]
+    fn ordered_pending_twin_walks_least_loaded_first() {
+        use super::super::instance::PrefillJob;
+        let mut c = Cluster::build(ServingMode::Colocated, 4, 0.0, 1, &cm(), true);
+        let mut reqs = vec![sim_req(0, 100, 4), sim_req(1, 100, 4)];
+        reqs[1].prefill_done = 0;
+        for id in 0..3 {
+            assert_eq!(c.claim_for_tier(0, 0), Some(id));
+            c.mark_pending(id);
+        }
+        // All keys (0, 0): ascending-id walk.
+        assert_eq!(c.pending_by_load().collect::<Vec<_>>(), vec![0, 1, 2]);
+        // A decode resident on 0 pushes it behind its peers.
+        c.instances[0].push_running(0, &reqs);
+        c.refresh_load(0);
+        assert_eq!(c.pending_by_load().collect::<Vec<_>>(), vec![1, 2, 0]);
+        // Queued prefill with prefill_done = 0: the load key of 1 is
+        // unchanged but its pending key grows — the twin must re-key.
+        c.instances[1].push_prefill(PrefillJob { req_idx: 1, deadline: 500 }, &reqs);
+        c.refresh_load(1);
+        assert_eq!(c.pending_by_load().collect::<Vec<_>>(), vec![2, 1, 0]);
+        // Draining members leave the walk (lifecycle filtered at read);
+        // adoption removes the entry under its stored key.
+        c.begin_drain(2, 10);
+        assert_eq!(c.pending_by_load().collect::<Vec<_>>(), vec![1, 0]);
+        c.adopt_pending(1, 0);
+        assert_eq!(c.pending_by_load().collect::<Vec<_>>(), vec![0]);
         c.audit(&reqs);
     }
 

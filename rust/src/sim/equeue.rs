@@ -1,0 +1,436 @@
+//! The simulator's event queue: a calendar queue (bucketed timing
+//! wheel) with a binary-heap reference implementation behind one
+//! [`EventQueue`] dispatch enum.
+//!
+//! The simulation runs at 1 ms resolution and orders events by the
+//! total order `(t, seq)` — `seq` is a globally unique, monotonically
+//! increasing push counter, so the key payload never decides a
+//! comparison. A binary heap pays O(log n) per push/pop on that order;
+//! the calendar queue makes both amortized O(1) by exploiting the fixed
+//! tick granularity:
+//!
+//! * **Slots** — [`SLOTS`] one-millisecond buckets cover the *current
+//!   generation* (`gen = t >> SLOT_BITS`, a [`SLOTS`]-ms window). An
+//!   event due in the current generation lands in slot `t & SLOT_MASK`;
+//!   each slot is a FIFO, so same-timestamp events drain in push (= seq)
+//!   order. A 16-word occupancy bitmask finds the next non-empty slot
+//!   with a couple of `trailing_zeros` scans instead of walking 1024
+//!   `Vec`s.
+//! * **Overflow ring** — events beyond the current generation (cold
+//!   starts, migration streams, far ticks) wait in one of [`RING`]
+//!   per-generation buckets indexed `gen & RING_MASK`. Rotating into a
+//!   generation drains its bucket into the slots, filtering by exact
+//!   generation: an event more than `RING` generations out simply stays
+//!   in the bucket for a later lap (bucket order is preserved, so the
+//!   seq order of a timestamp's events survives any number of laps).
+//!
+//! # The cursor and bounded pops
+//!
+//! `cursor` is the earliest timestamp the wheel has *not* fully drained;
+//! every queued event satisfies `t >= cursor`, and pushes behind the
+//! cursor are a bug ([`debug_assert`]ed). The simulator merges sorted
+//! workload arrivals against this queue with
+//! [`EventQueue::pop_earlier_than`]`(bound)`, which pops the earliest
+//! event with `t` strictly `< bound` and otherwise returns `None`
+//! **without scanning past the bound** — the cursor (and the wheel
+//! rotation) stop at `bound`, so events the arrival handler then pushes
+//! at `t >= bound` still land ahead of the cursor. A plain
+//! [`EventQueue::pop`] is the unbounded special case.
+//!
+//! Decision identity with the heap is exact: both implementations drain
+//! any push/pop interleaving in identical `(t, seq)` order (property-
+//! tested below), which is what lets `SimParams::heap_reference` swap
+//! the engines at runtime for A/B digest runs.
+
+use crate::slo::TimeMs;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// log2 of the slot count: one generation spans `2^SLOT_BITS` ms.
+const SLOT_BITS: u32 = 10;
+/// One-millisecond slots per generation (the wheel's span).
+const SLOTS: usize = 1 << SLOT_BITS;
+/// Mask extracting the slot index from a timestamp.
+const SLOT_MASK: TimeMs = (SLOTS as TimeMs) - 1;
+/// Overflow-ring buckets (generations); must be a power of two.
+const RING: usize = 1024;
+/// Mask extracting the ring bucket from a generation number.
+const RING_MASK: u64 = (RING as u64) - 1;
+
+/// One queued event: `(time, seq, key)`. `seq` is unique and
+/// monotonically increasing across pushes, so `(t, seq)` is a total
+/// order and `K` never decides a comparison.
+type Entry<K> = (TimeMs, u64, K);
+
+/// The calendar queue proper (reached through [`EventQueue`]; the
+/// fields and methods stay private). See the module docs for the
+/// invariants; `len` counts every queued event across slots and ring.
+pub struct Calendar<K> {
+    /// FIFO buckets for the current generation's timestamps.
+    slots: Vec<VecDeque<Entry<K>>>,
+    /// Occupancy bitmask over `slots` (bit i set ⇔ slot i non-empty).
+    occ: [u64; SLOTS / 64],
+    /// Per-generation overflow buckets, indexed `gen & RING_MASK`.
+    ring: Vec<Vec<Entry<K>>>,
+    /// The generation the slots currently cover (`t >> SLOT_BITS`).
+    gen: u64,
+    /// Earliest timestamp not yet fully drained; every queued event has
+    /// `t >= cursor`. May transiently equal the generation's end.
+    cursor: TimeMs,
+    len: usize,
+}
+
+impl<K> Calendar<K> {
+    fn new() -> Calendar<K> {
+        Calendar {
+            slots: (0..SLOTS).map(|_| VecDeque::new()).collect(),
+            occ: [0; SLOTS / 64],
+            ring: (0..RING).map(|_| Vec::new()).collect(),
+            gen: 0,
+            cursor: 0,
+            len: 0,
+        }
+    }
+
+    fn push(&mut self, t: TimeMs, seq: u64, key: K) {
+        debug_assert!(
+            t >= self.cursor,
+            "event pushed at t={t} behind the cursor {}",
+            self.cursor
+        );
+        self.len += 1;
+        if t >> SLOT_BITS == self.gen {
+            let slot = (t & SLOT_MASK) as usize;
+            self.slots[slot].push_back((t, seq, key));
+            self.occ[slot >> 6] |= 1u64 << (slot & 63);
+        } else {
+            debug_assert!(t >> SLOT_BITS > self.gen, "past generation");
+            self.ring[((t >> SLOT_BITS) & RING_MASK) as usize].push((t, seq, key));
+        }
+    }
+
+    /// Lowest occupied slot index `>= from`, if any.
+    fn next_occupied(&self, from: usize) -> Option<usize> {
+        if from >= SLOTS {
+            return None;
+        }
+        let mut word = from >> 6;
+        let mut bits = self.occ[word] & (!0u64 << (from & 63));
+        loop {
+            if bits != 0 {
+                return Some((word << 6) + bits.trailing_zeros() as usize);
+            }
+            word += 1;
+            if word >= SLOTS / 64 {
+                return None;
+            }
+            bits = self.occ[word];
+        }
+    }
+
+    /// Advance to the next generation and drain its overflow bucket
+    /// into the slots. Events of a *later* lap (more than `RING`
+    /// generations out at push time) go back into the bucket, order
+    /// preserved — seq order within a timestamp survives any lap count.
+    fn rotate(&mut self) {
+        self.gen += 1;
+        self.cursor = self.gen << SLOT_BITS;
+        let idx = (self.gen & RING_MASK) as usize;
+        if self.ring[idx].is_empty() {
+            return;
+        }
+        let bucket = std::mem::take(&mut self.ring[idx]);
+        for (t, seq, key) in bucket {
+            if t >> SLOT_BITS == self.gen {
+                let slot = (t & SLOT_MASK) as usize;
+                self.slots[slot].push_back((t, seq, key));
+                self.occ[slot >> 6] |= 1u64 << (slot & 63);
+            } else {
+                self.ring[idx].push((t, seq, key));
+            }
+        }
+    }
+
+    /// Pop the earliest event with `t < bound` (no bound: the global
+    /// minimum). The scan — and the cursor — never advance past the
+    /// bound, so events pushed later at `t >= bound` stay ahead of the
+    /// cursor.
+    fn pop_earlier_than(&mut self, bound: Option<TimeMs>) -> Option<Entry<K>> {
+        if self.len == 0 {
+            // Empty wheel: fast-forward straight to the bound instead
+            // of rotating through empty generations next time.
+            if let Some(b) = bound {
+                if b > self.cursor {
+                    self.cursor = b;
+                    self.gen = b >> SLOT_BITS;
+                }
+            }
+            return None;
+        }
+        loop {
+            let gen_start = self.gen << SLOT_BITS;
+            let gen_end = gen_start + SLOTS as TimeMs;
+            debug_assert!(self.cursor >= gen_start && self.cursor <= gen_end);
+            let from = (self.cursor - gen_start) as usize;
+            if let Some(slot) = self.next_occupied(from) {
+                let t = gen_start + slot as TimeMs;
+                if let Some(b) = bound {
+                    if t >= b {
+                        // Earliest queued event is at/after the bound:
+                        // stop the cursor *at the bound*, not at t.
+                        self.cursor = self.cursor.max(b);
+                        return None;
+                    }
+                }
+                self.cursor = t;
+                let q = &mut self.slots[slot];
+                let ev = q.pop_front().expect("occupied slot was empty");
+                if q.is_empty() {
+                    self.occ[slot >> 6] &= !(1u64 << (slot & 63));
+                }
+                self.len -= 1;
+                debug_assert_eq!(ev.0, t, "slot held a foreign timestamp");
+                return Some(ev);
+            }
+            // Generation exhausted. Rotate — unless the bound lies
+            // inside it, in which case everything `< bound` is drained.
+            if let Some(b) = bound {
+                if b <= gen_end {
+                    self.cursor = self.cursor.max(b);
+                    return None;
+                }
+            }
+            self.rotate();
+        }
+    }
+}
+
+/// The simulator's event queue: calendar-queue hot path or binary-heap
+/// reference, selected at construction (`SimParams::heap_reference`).
+/// Both drain any interleaving in identical `(t, seq)` order.
+pub enum EventQueue<K> {
+    /// O(1)-amortized bucketed timing wheel (the default engine).
+    Calendar(Box<Calendar<K>>),
+    /// The pre-calendar binary heap, kept as a runtime reference mode.
+    Heap(BinaryHeap<Reverse<Entry<K>>>),
+}
+
+impl<K: Ord> EventQueue<K> {
+    /// A calendar-queue engine (the default hot path).
+    pub fn calendar() -> EventQueue<K> {
+        EventQueue::Calendar(Box::new(Calendar::new()))
+    }
+
+    /// A binary-heap engine (the `heap_reference` A/B mode).
+    pub fn heap() -> EventQueue<K> {
+        EventQueue::Heap(BinaryHeap::new())
+    }
+
+    /// Queued events.
+    pub fn len(&self) -> usize {
+        match self {
+            EventQueue::Calendar(c) => c.len,
+            EventQueue::Heap(h) => h.len(),
+        }
+    }
+
+    /// True when no event is queued.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Queue an event. `seq` must be unique and monotonically
+    /// increasing across pushes, and `t` must not lie behind any
+    /// previously popped time or `pop_earlier_than` bound.
+    pub fn push(&mut self, t: TimeMs, seq: u64, key: K) {
+        match self {
+            EventQueue::Calendar(c) => c.push(t, seq, key),
+            EventQueue::Heap(h) => h.push(Reverse((t, seq, key))),
+        }
+    }
+
+    /// Pop the globally earliest event in `(t, seq)` order.
+    pub fn pop(&mut self) -> Option<Entry<K>> {
+        self.pop_earlier_than(None)
+    }
+
+    /// Pop the earliest event with `t` strictly `< bound`; `None` if no
+    /// such event (or no bound and the queue is empty). The calendar's
+    /// internal scan never advances past the bound, so callers may keep
+    /// pushing events at `t >= bound` between bounded pops — the merge
+    /// primitive behind the simulator's sorted-arrival cursor.
+    pub fn pop_earlier_than(&mut self, bound: Option<TimeMs>) -> Option<Entry<K>> {
+        match self {
+            EventQueue::Calendar(c) => c.pop_earlier_than(bound),
+            EventQueue::Heap(h) => match bound {
+                None => h.pop().map(|Reverse(e)| e),
+                Some(b) => {
+                    if h.peek().is_some_and(|Reverse((t, _, _))| *t < b) {
+                        h.pop().map(|Reverse(e)| e)
+                    } else {
+                        None
+                    }
+                }
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn both() -> [EventQueue<u32>; 2] {
+        [EventQueue::calendar(), EventQueue::heap()]
+    }
+
+    #[test]
+    fn same_timestamp_fifo_by_seq() {
+        // Events sharing a timestamp must drain in push (= seq) order —
+        // the key payload must never decide, even when it sorts the
+        // other way.
+        for mut q in both() {
+            q.push(50, 0, 9);
+            q.push(50, 1, 3);
+            q.push(10, 2, 7);
+            q.push(50, 3, 1);
+            assert_eq!(q.pop(), Some((10, 2, 7)));
+            // Interleaved push at the same timestamp lands behind the
+            // earlier seqs.
+            q.push(50, 4, 0);
+            assert_eq!(q.pop(), Some((50, 0, 9)));
+            assert_eq!(q.pop(), Some((50, 1, 3)));
+            assert_eq!(q.pop(), Some((50, 3, 1)));
+            assert_eq!(q.pop(), Some((50, 4, 0)));
+            assert_eq!(q.pop(), None);
+            assert!(q.is_empty());
+        }
+    }
+
+    #[test]
+    fn overflow_ring_rotation_across_span_boundaries() {
+        // Events beyond the current SLOTS-ms window wait in the ring
+        // and surface exactly at their generation — including a bucket
+        // shared by two generations ("laps") RING generations apart,
+        // whose far event must survive the first rotation.
+        let span = SLOTS as TimeMs;
+        let lap = span * RING as TimeMs;
+        for mut q in both() {
+            let near = span + 5; // generation 1
+            let far = near + lap; // generation 1 + RING: same bucket
+            let mid = 3 * span + 2; // generation 3
+            q.push(far, 0, 1);
+            q.push(mid, 1, 2);
+            q.push(near, 2, 3);
+            q.push(7, 3, 4); // current generation
+            assert_eq!(q.pop(), Some((7, 3, 4)));
+            assert_eq!(q.pop(), Some((near, 2, 3)));
+            assert_eq!(q.pop(), Some((mid, 1, 2)));
+            // The far lap twin is still queued, not lost to rotation.
+            assert_eq!(q.len(), 1);
+            assert_eq!(q.pop(), Some((far, 0, 1)));
+            assert_eq!(q.pop(), None);
+        }
+    }
+
+    #[test]
+    fn bounded_pop_is_strict_and_resumable() {
+        for mut q in both() {
+            q.push(10, 0, 1);
+            // Strictly-less-than: an event *at* the bound stays queued.
+            assert_eq!(q.pop_earlier_than(Some(10)), None);
+            assert_eq!(q.len(), 1);
+            assert_eq!(q.pop_earlier_than(Some(11)), Some((10, 0, 1)));
+            // The bounded miss must not have scanned past the bound:
+            // a later push at exactly the bound time still pops.
+            q.push(10, 1, 2);
+            q.push(10_000, 2, 3); // far event, forces no early drain
+            assert_eq!(q.pop_earlier_than(Some(2_000)), Some((10, 1, 2)));
+            assert_eq!(q.pop_earlier_than(Some(2_000)), None);
+            // And the cursor parked at the bound accepts pushes there.
+            q.push(2_000, 3, 4);
+            assert_eq!(q.pop(), Some((2_000, 3, 4)));
+            assert_eq!(q.pop(), Some((10_000, 2, 3)));
+        }
+    }
+
+    #[test]
+    fn empty_queue_fast_forward_keeps_accepting() {
+        // Bounded pops on an empty queue fast-forward the calendar's
+        // cursor; pushes at/after each bound must stay legal and drain
+        // correctly across the jumped generations.
+        for mut q in both() {
+            assert_eq!(q.pop_earlier_than(Some(5_000_000)), None);
+            q.push(5_000_000, 0, 1);
+            q.push(5_000_000 + 3 * SLOTS as TimeMs, 1, 2);
+            assert_eq!(q.pop(), Some((5_000_000, 0, 1)));
+            assert_eq!(q.pop(), Some((5_000_000 + 3 * SLOTS as TimeMs, 1, 2)));
+            assert_eq!(q.pop(), None);
+        }
+    }
+
+    /// Property test: a randomized push / pop / bounded-pop
+    /// interleaving — delays from same-millisecond to multi-lap —
+    /// drains bit-identically from the calendar and the heap.
+    #[test]
+    fn randomized_interleaving_drains_identically() {
+        for trial in 0..20u64 {
+            let mut rng = Rng::new(0xE0_0E + trial);
+            let mut cal: EventQueue<u32> = EventQueue::calendar();
+            let mut heap: EventQueue<u32> = EventQueue::heap();
+            let mut now: TimeMs = 0;
+            let mut seq = 0u64;
+            for _ in 0..4_000 {
+                match rng.range_u64(0, 100) {
+                    // Push: mostly near-future, sometimes cross-
+                    // generation, rarely beyond a full ring lap.
+                    0..=59 => {
+                        let delta = match rng.range_u64(0, 10) {
+                            0..=6 => rng.range_u64(0, 40),
+                            7 | 8 => rng.range_u64(0, 5 * SLOTS as u64),
+                            _ => rng.range_u64(0, (RING as u64 + 2) * SLOTS as u64),
+                        };
+                        let t = now + delta;
+                        let key = rng.range_u64(0, 4) as u32; // collisions on purpose
+                        cal.push(t, seq, key);
+                        heap.push(t, seq, key);
+                        seq += 1;
+                    }
+                    // Unbounded pop.
+                    60..=79 => {
+                        let (a, b) = (cal.pop(), heap.pop());
+                        assert_eq!(a, b, "trial {trial}: pop diverged");
+                        if let Some((t, _, _)) = a {
+                            now = now.max(t);
+                        }
+                    }
+                    // Bounded pop: the simulator's arrival merge. On a
+                    // miss the clock jumps to the bound (the arrival
+                    // is processed at `bound`), as in the event loop.
+                    _ => {
+                        let bound = now + rng.range_u64(0, 3 * SLOTS as u64);
+                        let (a, b) = (
+                            cal.pop_earlier_than(Some(bound)),
+                            heap.pop_earlier_than(Some(bound)),
+                        );
+                        assert_eq!(a, b, "trial {trial}: bounded pop diverged");
+                        now = match a {
+                            Some((t, _, _)) => now.max(t),
+                            None => now.max(bound),
+                        };
+                    }
+                }
+                assert_eq!(cal.len(), heap.len(), "trial {trial}: len diverged");
+            }
+            // Full drain must agree to the last event.
+            loop {
+                let (a, b) = (cal.pop(), heap.pop());
+                assert_eq!(a, b, "trial {trial}: drain diverged");
+                if a.is_none() {
+                    break;
+                }
+            }
+        }
+    }
+}

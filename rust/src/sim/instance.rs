@@ -452,6 +452,18 @@ impl Instance {
         )
     }
 
+    /// The ordered pending-pool key the liveness fallback walks —
+    /// `(decode batch now, queued prefill tokens remaining)`. Like
+    /// [`Instance::load_key`] it reads the cached counters directly
+    /// (they are maintained in every reference mode), so the cluster's
+    /// ordered pending set stays coherent no matter which read path is
+    /// active. Stored separately from the load key: a prefill push
+    /// with no committed tokens moves this key while `(batch, kv)`
+    /// stays put.
+    pub fn pending_key(&self) -> (u64, u64) {
+        (self.decode_batch_now(), self.queued_prefill_rem_tokens)
+    }
+
     /// Requests resident on this instance (running, queued for prefill,
     /// or an in-flight decode handoff) — a request lives on at most one
     /// instance at a time, so summing this over the fleet counts
@@ -745,30 +757,24 @@ impl Instance {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::slo::{DsloTracker, Slo};
+    use crate::slo::Slo;
     use crate::workload::Request;
 
     fn cm() -> CostModel {
         CostModel::h200_llama8b()
     }
 
-    fn sim_req(id: u64, p: u32, d: u32) -> SimRequest {
-        SimRequest {
-            req: Request {
-                id,
-                arrival_ms: 0,
-                prefill_len: p,
-                decode_len: d,
-                slo: Slo::new(1000, 50),
-            },
-            tier: 0,
-            tracker: DsloTracker::new(0, Slo::new(1000, 50)),
-            prefill_done: 0,
-            decoded: 0,
-            first_token_ms: None,
-            finish_ms: None,
-            decode_instance: None,
-        }
+    fn sim_req(id: u64, p: u32, d: u32) -> SimRequest<'static> {
+        // Tests leak their (tiny, fixed) request set so the arena's
+        // borrowed `&'static Request` half has somewhere to point.
+        let req: &'static Request = Box::leak(Box::new(Request {
+            id,
+            arrival_ms: 0,
+            prefill_len: p,
+            decode_len: d,
+            slo: Slo::new(1000, 50),
+        }));
+        SimRequest::new(req, 0)
     }
 
     #[test]

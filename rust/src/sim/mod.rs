@@ -82,11 +82,41 @@
 //! its in-flight chunk on the source is discarded — the destination
 //! recomputes from the job's committed `prefill_done`, so prefill work
 //! is never applied twice.
+//!
+//! # Event engine: calendar queue + arrival cursor
+//!
+//! Events live in an [`equeue::EventQueue`] — a calendar queue
+//! (bucketed timing wheel at the 1 ms tick granularity, with an
+//! overflow ring for far-future events) that makes push/pop amortized
+//! O(1) while preserving the exact `(t, seq)` total order of the old
+//! binary heap; `SimParams::heap_reference` swaps the heap back in at
+//! runtime for A/B digest runs.
+//!
+//! **Arrival-cursor invariant.** The queue is *not* seeded with the
+//! workload's N arrival events. `Workload::requests` is arrival-sorted
+//! (asserted at construction), so the loop merges `arrival_cursor` —
+//! the index of the next unprocessed arrival — against the queue head
+//! via `pop_earlier_than(next_arrival)`: a queued event pops only if it
+//! is *strictly* earlier, otherwise the arrival is synthesized.
+//! Arrivals therefore win every timestamp tie, exactly as in the seeded
+//! ordering, where all N arrival seqs preceded every runtime-scheduled
+//! event's; and because the bounded pop never scans past the bound,
+//! events the handlers push at `t >= now` always land ahead of the
+//! wheel's cursor. The queue's live size drops from O(total requests)
+//! to O(in-flight events).
+//!
+//! **Arena invariant.** `requests` is a dense arena of per-request
+//! *mutable* tracker state ([`SimRequest`]), indexed by the same
+//! `req_idx` the events carry. The immutable prompt/SLO data stays in
+//! the borrowed [`Workload`] (`SimRequest::req` is a `&Request`, never
+//! a clone); nothing on the simulation side ever writes through it.
 
 pub mod cluster;
+pub mod equeue;
 pub mod instance;
 
 pub use cluster::{Cluster, TierAssign};
+pub use equeue::EventQueue;
 pub use instance::{Instance, Lifecycle, PrefillJob, Role};
 
 use crate::analysis::ServingMode;
@@ -98,8 +128,6 @@ use crate::model::CostModel;
 use crate::profile::ProfileTable;
 use crate::slo::{DsloTracker, TimeMs};
 use crate::workload::Workload;
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
 
 /// Scale-in KV-migration streaming rate, tokens per ms. Sized for
 /// RDMA-class interconnect on the simulated hardware: ≈0.125 MB of KV
@@ -107,11 +135,13 @@ use std::collections::BinaryHeap;
 /// The per-request transfer time is `max(kv_transfer_ms, kv_now / this)`.
 pub const MIGRATION_TOKENS_PER_MS: u64 = 400;
 
-/// Simulator-side request state.
+/// Simulator-side request state: the mutable half of the request
+/// arena. The immutable prompt/SLO data is only *borrowed* from the
+/// workload (`'w`) — `Simulation::new` clones nothing per request.
 #[derive(Debug, Clone)]
-pub struct SimRequest {
-    /// The underlying workload request.
-    pub req: crate::workload::Request,
+pub struct SimRequest<'w> {
+    /// The underlying workload request (borrowed, immutable).
+    pub req: &'w crate::workload::Request,
     /// TPOT tier bin (index into the tier set).
     pub tier: usize,
     /// Per-token DSLO deadline tracker.
@@ -128,7 +158,21 @@ pub struct SimRequest {
     pub decode_instance: Option<usize>,
 }
 
-impl SimRequest {
+impl<'w> SimRequest<'w> {
+    /// Fresh tracker state over a borrowed workload request.
+    pub fn new(req: &'w crate::workload::Request, tier: usize) -> SimRequest<'w> {
+        SimRequest {
+            req,
+            tier,
+            tracker: DsloTracker::new(req.arrival_ms, req.slo),
+            prefill_done: 0,
+            decoded: 0,
+            first_token_ms: None,
+            finish_ms: None,
+            decode_instance: None,
+        }
+    }
+
     /// Has the request emitted its full output?
     pub fn is_finished(&self) -> bool {
         self.finish_ms.is_some()
@@ -224,6 +268,11 @@ pub struct SimParams {
     /// `sim_perf` timing cells turn it off — with it the bench would
     /// measure the audit's own full scans, not the hot path.
     pub debug_audit: bool,
+    /// Schedule events on the pre-calendar binary heap instead of the
+    /// calendar queue — a runtime reference mode (like the cluster's
+    /// `scan_reference`/`indexed_reference`) for A/B digest-identity
+    /// runs; decisions are bit-for-bit identical by construction.
+    pub heap_reference: bool,
 }
 
 impl Default for SimParams {
@@ -235,6 +284,7 @@ impl Default for SimParams {
             max_sim_ms: 48 * 3600 * 1000,
             elastic: None,
             debug_audit: true,
+            heap_reference: false,
         }
     }
 }
@@ -263,12 +313,17 @@ pub struct Simulation<'a> {
     pub cost_model: CostModel,
     /// The table the router sees (§4.5 profiling stand-in).
     pub profile: &'a ProfileTable,
-    /// All requests, indexed by the event queue's `req_idx`.
-    pub requests: Vec<SimRequest>,
+    /// The request arena: per-request mutable state, indexed by the
+    /// event queue's `req_idx`; immutable data borrowed from the
+    /// workload.
+    pub requests: Vec<SimRequest<'a>>,
     /// The fleet under simulation.
     pub cluster: Cluster,
-    events: BinaryHeap<Reverse<(TimeMs, u64, EventKey)>>,
+    events: EventQueue<EventKey>,
     seq: u64,
+    /// Index of the next workload arrival not yet fed into the run
+    /// (the queue is not seeded with arrivals; see the module docs).
+    arrival_cursor: usize,
     now: TimeMs,
     fleet: FleetSeries,
     migration: MigrationStats,
@@ -279,60 +334,62 @@ pub struct Simulation<'a> {
 }
 
 impl<'a> Simulation<'a> {
-    /// Build a simulation over `workload` on `cluster`; the event heap is
-    /// seeded with every arrival plus the first housekeeping tick.
+    /// Build a simulation over `workload` on `cluster`. Arrivals are
+    /// *not* seeded as events: the run feeds the (arrival-sorted)
+    /// workload through a cursor merged against the queue head, so only
+    /// the first housekeeping tick is queued up front.
     pub fn new(
         params: SimParams,
         cost_model: CostModel,
         profile: &'a ProfileTable,
-        workload: &Workload,
+        workload: &'a Workload,
         cluster: Cluster,
         tiers: &crate::slo::TierSet,
     ) -> Simulation<'a> {
-        let requests: Vec<SimRequest> = workload
+        assert!(
+            workload
+                .requests
+                .windows(2)
+                .all(|w| w[0].arrival_ms <= w[1].arrival_ms),
+            "workload must be sorted by arrival time: the simulator \
+             feeds arrivals through a cursor, not pre-seeded events"
+        );
+        let requests: Vec<SimRequest<'a>> = workload
             .requests
             .iter()
-            .map(|r| SimRequest {
-                tier: tiers.bin_for_tpot(r.slo.tpot_ms),
-                tracker: DsloTracker::new(r.arrival_ms, r.slo),
-                prefill_done: 0,
-                decoded: 0,
-                first_token_ms: None,
-                finish_ms: None,
-                decode_instance: None,
-                req: r.clone(),
-            })
+            .map(|r| SimRequest::new(r, tiers.bin_for_tpot(r.slo.tpot_ms)))
             .collect();
-        let mut events = BinaryHeap::with_capacity(requests.len() + 64);
-        let mut seq = 0u64;
-        for (i, r) in requests.iter().enumerate() {
-            events.push(Reverse((r.req.arrival_ms, seq, EventKey::Arrival(i))));
-            seq += 1;
-        }
-        events.push(Reverse((params.tick_ms, seq, EventKey::Tick)));
-        seq += 1;
-        Simulation {
+        let events = if params.heap_reference {
+            EventQueue::heap()
+        } else {
+            EventQueue::calendar()
+        };
+        let tick = params.tick_ms;
+        let mut sim = Simulation {
             params,
             cost_model,
             profile,
             requests,
             cluster,
             events,
-            seq,
+            seq: 0,
+            arrival_cursor: 0,
             now: 0,
             fleet: FleetSeries::default(),
             migration: MigrationStats::default(),
             events_processed: 0,
             tick_scratch: Vec::new(),
-        }
+        };
+        sim.push_event(tick, EventKey::Tick);
+        sim
     }
 
     fn push_event(&mut self, t: TimeMs, key: EventKey) {
-        self.events.push(Reverse((t, self.seq, key)));
+        self.events.push(t, self.seq, key);
         self.seq += 1;
     }
 
-    fn ctx(&mut self) -> RouteCtx<'_> {
+    fn ctx(&mut self) -> RouteCtx<'_, 'a> {
         RouteCtx {
             now: self.now,
             cluster: &mut self.cluster,
@@ -359,11 +416,36 @@ impl<'a> Simulation<'a> {
     ) -> SimResult {
         let mut completed = 0usize;
         let total = self.requests.len();
-        if let (Some(ep), true) = (self.params.elastic.clone(), scaler.is_some()) {
+        // Hoisted once for the whole run: the ScaleEval arm borrows
+        // this instead of cloning `ElasticParams` on every evaluation.
+        let elastic = self.params.elastic.clone();
+        if let (Some(ep), true) = (elastic.as_ref(), scaler.is_some()) {
             self.sample_fleet();
             self.push_event(ep.scale_eval_ms.max(1), EventKey::ScaleEval);
         }
-        while let Some(Reverse((t, _, key))) = self.events.pop() {
+        loop {
+            // Merge the sorted-workload arrival cursor against the
+            // queue head. Arrivals win timestamp ties (in the old
+            // seeded ordering every arrival seq preceded every
+            // runtime-scheduled event's), which the strictly-less-than
+            // bound encodes; the bounded pop never scans the wheel
+            // past the bound, so this event's own pushes stay legal.
+            let next_arrival = self
+                .requests
+                .get(self.arrival_cursor)
+                .map(|r| r.req.arrival_ms);
+            let (t, key) = match self.events.pop_earlier_than(next_arrival) {
+                Some((t, _, key)) => (t, key),
+                None => match next_arrival {
+                    Some(t) => {
+                        let idx = self.arrival_cursor;
+                        self.arrival_cursor += 1;
+                        (t, EventKey::Arrival(idx))
+                    }
+                    // Queue drained and no arrivals left.
+                    None => break,
+                },
+            };
             debug_assert!(t >= self.now, "time went backwards");
             if t > self.params.max_sim_ms {
                 // Abort *before* advancing the clock: `self.now` stays
@@ -410,9 +492,9 @@ impl<'a> Simulation<'a> {
                 EventKey::ScaleEval => {
                     if completed < total {
                         if let (Some(sc), Some(ep)) =
-                            (scaler.as_deref_mut(), self.params.elastic.clone())
+                            (scaler.as_deref_mut(), elastic.as_ref())
                         {
-                            self.handle_scale_eval(sc, &ep, router);
+                            self.handle_scale_eval(sc, ep, router);
                             self.push_event(
                                 self.now + ep.scale_eval_ms.max(1),
                                 EventKey::ScaleEval,

@@ -9,7 +9,7 @@ use polyserve::model::CostModel;
 use polyserve::profile::ProfileTable;
 use polyserve::sim::instance::{Instance, Role};
 use polyserve::sim::SimRequest;
-use polyserve::slo::{DsloTracker, Slo, TierSet};
+use polyserve::slo::{Slo, TierSet};
 use polyserve::util::prop::{check, Gen, IntRange, VecOf};
 use polyserve::util::rng::Rng;
 use polyserve::workload::{Request, TraceKind};
@@ -18,28 +18,25 @@ fn profile() -> ProfileTable {
     ProfileTable::from_cost_model(&CostModel::h200_llama8b())
 }
 
-fn sim_requests(kvs: &[u64]) -> (Instance, Vec<SimRequest>) {
+fn sim_requests(kvs: &[u64]) -> (Instance, Vec<SimRequest<'static>>) {
     let cm = CostModel::h200_llama8b();
     let mut inst = Instance::new(0, Role::Decode, cm.kv_capacity_tokens, cm.max_token_batch);
     let mut reqs = Vec::new();
     for (i, &kv) in kvs.iter().enumerate() {
-        let slo = Slo::new(500, 50);
-        reqs.push(SimRequest {
-            req: Request {
-                id: i as u64,
-                arrival_ms: 0,
-                prefill_len: kv as u32,
-                decode_len: 10_000,
-                slo,
-            },
-            tier: 2,
-            tracker: DsloTracker::new(0, slo),
-            prefill_done: kv as u32,
-            decoded: 1,
-            first_token_ms: Some(0),
-            finish_ms: None,
-            decode_instance: Some(0),
-        });
+        // Leaked immutable half: the arena borrows, never clones.
+        let req: &'static Request = Box::leak(Box::new(Request {
+            id: i as u64,
+            arrival_ms: 0,
+            prefill_len: kv as u32,
+            decode_len: 10_000,
+            slo: Slo::new(500, 50),
+        }));
+        let mut r = SimRequest::new(req, 2);
+        r.prefill_done = kv as u32;
+        r.decoded = 1;
+        r.first_token_ms = Some(0);
+        r.decode_instance = Some(0);
+        reqs.push(r);
         // Cache-coherent residency (direct `running` pushes would
         // desync the O(1) load counters).
         inst.push_running(i, &reqs);

@@ -18,7 +18,7 @@ use polyserve::sim::{
     Cluster, ElasticParams, PrefillElastic, PrefillJob, Role, SimParams, SimRequest, SimResult,
     Simulation,
 };
-use polyserve::slo::{DsloTracker, Slo, TimeMs};
+use polyserve::slo::{Slo, TimeMs};
 use polyserve::util::prop::{check, Gen, IntRange, VecOf};
 use polyserve::util::rng::Rng;
 use polyserve::workload::{RateSchedule, Request, TraceKind, Workload};
@@ -222,23 +222,20 @@ fn static_bounds_reproduce_fixed_fleet_bit_for_bit() {
 // Regression tests for the decode-handoff timing fixes.
 // ---------------------------------------------------------------------
 
-fn decode_phase_request(id: u64, prefill: u32, decode: u32, slo: Slo) -> SimRequest {
-    SimRequest {
-        req: Request {
-            id,
-            arrival_ms: 0,
-            prefill_len: prefill,
-            decode_len: decode,
-            slo,
-        },
-        tier: 3, // paper_default tier for tpot 100
-        tracker: DsloTracker::new(0, slo),
-        prefill_done: prefill,
-        decoded: 1,
-        first_token_ms: Some(10),
-        finish_ms: None,
-        decode_instance: None,
-    }
+fn decode_phase_request(id: u64, prefill: u32, decode: u32, slo: Slo) -> SimRequest<'static> {
+    // Leaked immutable half: the arena borrows, never clones.
+    let req: &'static Request = Box::leak(Box::new(Request {
+        id,
+        arrival_ms: 0,
+        prefill_len: prefill,
+        decode_len: decode,
+        slo,
+    }));
+    let mut r = SimRequest::new(req, 3); // paper_default tier for tpot 100
+    r.prefill_done = prefill;
+    r.decoded = 1;
+    r.first_token_ms = Some(10);
+    r
 }
 
 /// The PR-1 bug: a pended PD decode handoff was enqueued with
@@ -917,14 +914,17 @@ fn cached_counters_match_scans_at_every_scale_eval() {
     );
 }
 
-/// Decision-identity: the load-ordered hot path must reproduce both
-/// reference paths' `SimResult` bit-for-bit — the PR-4 indexed path
-/// (sort-per-placement over the id indices) *and* the scan-based
-/// pre-PR-4 path — in per-request outcomes, attainment, cost, fleet
-/// series, migration stats, and even the processed-event count, across
-/// both serving modes with the full elastic + diurnal + migration +
-/// elastic-prefill machinery on, plus a `load_gradient = off` ablation
-/// cell (the ordered set walked in reverse).
+/// Decision-identity across the full queue × index matrix: the
+/// calendar-queue + load-ordered hot path must reproduce every other
+/// cell's `SimResult` bit-for-bit — the index axis covers the PR-4
+/// indexed path (sort-per-placement over the id indices) and the
+/// scan-based pre-PR-4 path, the queue axis swaps the calendar event
+/// engine for the pre-PR-6 global binary heap (`heap_reference`) —
+/// in per-request outcomes, attainment, cost, fleet series, migration
+/// stats, and even the processed-event count, across both serving
+/// modes with the full elastic + diurnal + migration + elastic-prefill
+/// machinery on, plus a `load_gradient = off` ablation cell (the
+/// ordered set walked in reverse).
 #[test]
 fn indexed_run_reproduces_scan_reference_bit_for_bit() {
     let mut pd = SimConfig {
@@ -990,14 +990,24 @@ fn indexed_run_reproduces_scan_reference_bit_for_bit() {
         ("pd_fixed", fixed),
         ("pd_no_gradient", ablated),
     ] {
+        // Baseline cell: calendar queue + ordered indices (the default
+        // hot path). Every other (queue, index) combination must match.
         let ordered = Experiment::prepare(&cfg).run();
-        let mut indexed_exp = Experiment::prepare(&cfg);
-        indexed_exp.indexed_reference = true;
-        let indexed = indexed_exp.run();
-        let mut scan_exp = Experiment::prepare(&cfg);
-        scan_exp.scan_reference = true;
-        let scan = scan_exp.run();
-        for (path, res) in [("indexed", &indexed), ("scan", &scan)] {
+        let mut cells: Vec<(String, SimResult)> = Vec::new();
+        for heap in [false, true] {
+            for path in ["ordered", "indexed", "scan"] {
+                if !heap && path == "ordered" {
+                    continue; // the baseline itself
+                }
+                let mut exp = Experiment::prepare(&cfg);
+                exp.heap_reference = heap;
+                exp.indexed_reference = path == "indexed";
+                exp.scan_reference = path == "scan";
+                let queue = if heap { "heap" } else { "calendar" };
+                cells.push((format!("{queue}+{path}"), exp.run()));
+            }
+        }
+        for (path, res) in cells.iter().map(|(p, r)| (p.as_str(), r)) {
             assert_eq!(
                 ordered.outcomes, res.outcomes,
                 "{label}/{path}: outcomes diverged"

@@ -17,10 +17,17 @@
 //! `pf_trough`, re-routed jobs in `migrated_pf`). Results (incl. the
 //! `savings_vs_static` column) land in `results/elastic_scaling_*.csv`.
 //!
+//! Two multi-model cells run the built-in two-model registry
+//! (LLaMA-3.1-8B + Qwen2.5-32B) through the same elastic machinery: a
+//! steady 70/30 diurnal mix, and a model-1 flash crowd engineered so
+//! the mix planner must hot-swap warm donors' weights.
+//!
 //! `POLYSERVE_SMOKE=1` runs a tiny workload and asserts the invariants
 //! (every request finishes; migration counters move only when enabled;
-//! the prefill fleet moves only in `+pf` cells) so a regression fails
-//! CI outright.
+//! the prefill fleet moves only in `+pf` cells; both registry models
+//! serve and bill; the flash crowd forces ≥ 1 model hot-swap) so a
+//! regression fails CI outright. The `model-mix smoke OK` marker line
+//! is grep-gated in CI.
 
 use polyserve::analysis::ServingMode;
 use polyserve::config::{DiurnalSpec, Policy, ScalerKind, SimConfig};
@@ -88,6 +95,72 @@ fn invert_second_half(w: &mut Workload, seed: u64) {
 fn stretch_decode_tail(w: &mut Workload) {
     for r in w.requests.iter_mut().step_by(5) {
         r.decode_len = (r.decode_len * 6).min(8192);
+    }
+}
+
+/// Re-tag arrivals as a model-1 flash crowd: the first third of the
+/// trace is all model 0 (matching the fleet's 0-heavy initial split),
+/// then every later arrival belongs to model 1. Model 0's smoothed
+/// rate collapses while model 1's surges past its two-server sub-fleet,
+/// so the mix planner must hot-swap warm model-0 donors — the enforced
+/// model-swap case the smoke gate asserts on.
+fn model_flash_crowd(w: &mut Workload) {
+    let cut = w.requests.len() / 3;
+    for (i, r) in w.requests.iter_mut().enumerate() {
+        r.model = usize::from(i >= cut);
+    }
+}
+
+/// Per-model outcome of a two-model cell (index = registry model id).
+struct ModelCellResult {
+    attain: [f64; 2],
+    served: [u64; 2],
+    bill_s: [f64; 2],
+    fleet_mean: [f64; 2],
+    swaps: u64,
+    unfinished: usize,
+}
+
+/// One two-model elastic cell over the built-in LLaMA-8B + Qwen-32B
+/// registry pair: a steady-mix diurnal run (`flash_crowd = false`) or
+/// the model-1 flash crowd that forces weight hot-swaps.
+fn run_model_cell(n_peak: usize, requests: usize, flash_crowd: bool) -> ModelCellResult {
+    let mut cfg = SimConfig {
+        trace: TraceKind::ShareGpt,
+        mode: ServingMode::Colocated,
+        policy: Policy::PolyServe,
+        instances: n_peak,
+        requests,
+        rate_frac_of_optimal: 0.4,
+        diurnal: (!flash_crowd)
+            .then_some(DiurnalSpec { peak_to_trough: 3.0, period_s: 600.0 }),
+        ..Default::default()
+    };
+    // A 0-heavy split so the flash crowd finds surplus model-0 donors.
+    cfg.models.mix = if flash_crowd { vec![0.8, 0.2] } else { vec![0.7, 0.3] };
+    cfg.models.swap_delay_ms = 2_000;
+    cfg.elastic.scaler = ScalerKind::Gradient;
+    cfg.elastic.provision_delay_ms = 3_000;
+    cfg.elastic.scale_eval_ms = 1_000;
+    cfg.elastic.migration = true;
+    cfg.elastic.min_instances = 2;
+    cfg.elastic.max_instances = n_peak * 2;
+    let mut exp = Experiment::prepare(&cfg);
+    if flash_crowd {
+        model_flash_crowd(&mut exp.workload);
+    }
+    let res = exp.run();
+    ModelCellResult {
+        attain: [0, 1].map(|m| res.attainment.model_attainment(m).unwrap_or(f64::NAN)),
+        served: [0, 1]
+            .map(|m| res.cost.requests_served_per_model.get(m).copied().unwrap_or(0)),
+        bill_s: [0, 1].map(|m| {
+            res.cost.active_instance_ms_per_model.get(m).copied().unwrap_or(0) as f64
+                / 1000.0
+        }),
+        fleet_mean: [0, 1].map(|m| res.fleet.mean_model(m)),
+        swaps: res.migration.model_swaps,
+        unfinished: res.unfinished,
     }
 }
 
@@ -342,6 +415,47 @@ fn main() {
         &rows,
     );
 
+    // Multi-model cells: the built-in two-model registry under the same
+    // elastic machinery — a steady 70/30 diurnal mix, and a model-1
+    // flash crowd engineered so the mix planner must hot-swap weights.
+    let model_cells = [("model_mix_diurnal", false), ("model_hot_swap_flash", true)]
+        .map(|(name, fc)| (name, run_model_cell(n_peak, requests, fc)));
+    let model_rows: Vec<Vec<String>> = model_cells
+        .iter()
+        .map(|(name, r)| {
+            vec![
+                name.to_string(),
+                f(r.attain[0], 3),
+                f(r.attain[1], 3),
+                r.served[0].to_string(),
+                r.served[1].to_string(),
+                f(r.bill_s[0], 1),
+                f(r.bill_s[1], 1),
+                f(r.fleet_mean[0], 1),
+                f(r.fleet_mean[1], 1),
+                r.swaps.to_string(),
+                r.unfinished.to_string(),
+            ]
+        })
+        .collect();
+    bench.table(
+        "Multi-model fleet: per-model attainment, bill and fleet share (built-in 8B + 32B pair)",
+        &[
+            "cell",
+            "attain_m0",
+            "attain_m1",
+            "served_m0",
+            "served_m1",
+            "bill_m0_s",
+            "bill_m1_s",
+            "fleet_m0_mean",
+            "fleet_m1_mean",
+            "model_swaps",
+            "unfinished",
+        ],
+        &model_rows,
+    );
+
     // Smoke invariants (CI): every request must finish in every cell
     // (the predictive cells included), migration counters move only
     // when migration is on, and the prefill fleet moves only in `+pf`
@@ -391,6 +505,31 @@ fn main() {
                 );
             }
         }
+        // Multi-model gates: both models keep serving and billing in
+        // both cells, per-model fleet series exist, and the flash crowd
+        // forces at least one weight hot-swap. The printed marker line
+        // is grep-gated in CI so these asserts can't silently vanish.
+        for (name, r) in &model_cells {
+            assert_eq!(r.unfinished, 0, "{name}: model-mix cell left requests unfinished");
+            assert!(
+                r.served[0] > 0 && r.served[1] > 0,
+                "{name}: both registry models must serve traffic"
+            );
+            assert!(
+                r.bill_s[0] > 0.0 && r.bill_s[1] > 0.0,
+                "{name}: both registry models must accrue active-instance bill"
+            );
+            assert!(
+                r.fleet_mean[0] > 0.0,
+                "{name}: per-model fleet series missing for model 0"
+            );
+        }
+        let (_, flash) = &model_cells[1];
+        assert!(
+            flash.swaps >= 1,
+            "flash crowd must force at least one enforced model hot-swap"
+        );
+        println!("model-mix smoke OK: {} model hot-swaps enforced", flash.swaps);
         println!("smoke invariants OK ({} cells)", results.len());
     }
     bench.finish();

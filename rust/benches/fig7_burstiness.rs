@@ -30,6 +30,7 @@ fn burst_workload(n: usize, rate_rps: f64, seed: u64) -> Workload {
             prefill_len: rng.range_u64(1, 8192) as u32,
             decode_len: rng.range_u64(1, 2048) as u32,
             slo: dist.sample(&mut rng),
+            model: 0,
         });
     }
     Workload { requests }

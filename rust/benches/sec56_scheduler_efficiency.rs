@@ -29,6 +29,7 @@ fn leaked(id: u64, p: u32, d: u32, slo: Slo) -> &'static Request {
         prefill_len: p,
         decode_len: d,
         slo,
+        model: 0,
     }))
 }
 

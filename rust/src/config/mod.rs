@@ -119,6 +119,13 @@ pub struct ElasticConfig {
     /// waiting for them to finish. `"off"` reproduces the wait-drain
     /// path bit-for-bit.
     pub migration: bool,
+    /// Batch per-destination migration transfers
+    /// (`migration_batching = "off"|"on"`): coalesce a drainer's
+    /// same-destination KV streams into one bulk transfer whose arrival
+    /// time is sized by total migrated KV, instead of one fixed-delay
+    /// event per request. `"off"` reproduces per-request transfers
+    /// bit-for-bit.
+    pub migration_batching: bool,
     /// Predictive-scaler anticipation horizon: size the fleet for the
     /// rate projected this far ahead. `None` defaults to
     /// `provision_delay_ms` (capacity lands exactly when the projected
@@ -144,6 +151,7 @@ impl Default for ElasticConfig {
             provision_delay_ms: 15_000,
             scale_eval_ms: 1_000,
             migration: false,
+            migration_batching: false,
             provision_lead_ms: None,
             prefill_elastic: false,
             prefill_min: 1,
@@ -161,6 +169,39 @@ impl ElasticConfig {
         self.scaler != ScalerKind::Off
             && (self.max_instances > self.min_instances
                 || (self.prefill_elastic && self.prefill_max > self.prefill_min))
+    }
+}
+
+/// Model-fleet knobs (`[models]`): which built-in models the fleet
+/// serves and how requests split across them. `mix = [1.0]` (the
+/// default) is the single-model configuration — model 0 only, with
+/// every multi-model code path inert and decisions bit-for-bit
+/// identical to the pre-registry simulator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelsConfig {
+    /// Request-mix weights, one per model id in registry order
+    /// (normalized internally). Length 1 = single-model default
+    /// (LLaMA-3.1-8B); length 2 deploys the built-in pair
+    /// (LLaMA-3.1-8B + Qwen2.5-32B).
+    pub mix: Vec<f64>,
+    /// Weight-reload delay a server pays to swap its loaded model
+    /// (drain first, then this, then cold-start provisioning).
+    pub swap_delay_ms: u64,
+}
+
+impl Default for ModelsConfig {
+    fn default() -> ModelsConfig {
+        ModelsConfig {
+            mix: vec![1.0],
+            swap_delay_ms: 20_000,
+        }
+    }
+}
+
+impl ModelsConfig {
+    /// True when the config deploys more than one model.
+    pub fn is_multi(&self) -> bool {
+        self.mix.len() > 1
     }
 }
 
@@ -209,6 +250,8 @@ pub struct SimConfig {
     pub features: Features,
     /// Elastic-fleet knobs (default: fixed fleet).
     pub elastic: ElasticConfig,
+    /// Model-fleet knobs (default: single model).
+    pub models: ModelsConfig,
     /// Diurnal demand curve (default: constant-rate Poisson).
     pub diurnal: Option<DiurnalSpec>,
 }
@@ -262,6 +305,7 @@ impl Default for SimConfig {
             prefill_frac: 0.0, // auto
             features: Features::default(),
             elastic: ElasticConfig::default(),
+            models: ModelsConfig::default(),
             diurnal: None,
         }
     }
@@ -376,8 +420,26 @@ impl SimConfig {
                 _ => anyhow::bail!("elastic.prefill_elastic must be \"off\"|\"on\""),
             };
         }
+        if let Some(v) = doc.get("elastic.migration_batching") {
+            cfg.elastic.migration_batching = match (v.as_str(), v.as_bool()) {
+                (Some("on"), _) => true,
+                (Some("off"), _) => false,
+                (None, Some(b)) => b,
+                (Some(other), _) => {
+                    anyhow::bail!("unknown elastic.migration_batching '{other}' (off|on)")
+                }
+                _ => anyhow::bail!("elastic.migration_batching must be \"off\"|\"on\""),
+            };
+        }
         cfg.elastic.prefill_min = doc.usize_or("elastic.prefill_min", cfg.elastic.prefill_min);
         cfg.elastic.prefill_max = doc.usize_or("elastic.prefill_max", cfg.elastic.prefill_max);
+        if let Some(v) = doc.get("models.mix") {
+            cfg.models.mix = v
+                .to_f64s()
+                .ok_or_else(|| anyhow::anyhow!("models.mix must be an array of weights"))?;
+        }
+        cfg.models.swap_delay_ms =
+            doc.usize_or("models.swap_delay_ms", cfg.models.swap_delay_ms as usize) as u64;
         if let Some(v) = doc.get("diurnal.peak_to_trough") {
             let ratio = v
                 .as_f64()
@@ -450,6 +512,20 @@ impl SimConfig {
                      prefill_elastic is on (use max == min to pin the prefill tier)"
                 );
             }
+        }
+        anyhow::ensure!(
+            (1..=2).contains(&self.models.mix.len()),
+            "models.mix must list 1 or 2 weights (the registry ships 2 built-in models)"
+        );
+        anyhow::ensure!(
+            self.models.mix.iter().all(|w| w.is_finite() && *w > 0.0),
+            "models.mix weights must be positive"
+        );
+        if self.models.is_multi() {
+            anyhow::ensure!(
+                self.instances >= self.models.mix.len(),
+                "multi-model fleets need at least one instance per model"
+            );
         }
         if let Some(d) = &self.diurnal {
             anyhow::ensure!(d.peak_to_trough >= 1.0, "diurnal.peak_to_trough must be >= 1");
@@ -568,6 +644,34 @@ prefill_max = 8
     }
 
     #[test]
+    fn parses_models_and_migration_batching() {
+        let doc = tomlish::parse(
+            r#"
+[elastic]
+scaler = "gradient"
+min_instances = 2
+max_instances = 16
+migration_batching = "on"
+
+[models]
+mix = [0.7, 0.3]
+swap_delay_ms = 5000
+"#,
+        )
+        .unwrap();
+        let c = SimConfig::from_doc(&doc).unwrap();
+        assert!(c.elastic.migration_batching);
+        assert_eq!(c.models.mix, vec![0.7, 0.3]);
+        assert_eq!(c.models.swap_delay_ms, 5_000);
+        assert!(c.models.is_multi());
+        // Defaults: one model, per-request transfers — the bit-identical path.
+        let d = SimConfig::default();
+        assert!(!d.models.is_multi());
+        assert!(!d.elastic.migration_batching);
+        d.validate().unwrap();
+    }
+
+    #[test]
     fn prefill_bounds_alone_enable_elastic() {
         // A pinned decode fleet with an elastic prefill tier still
         // engages the elastic machinery.
@@ -617,6 +721,10 @@ prefill_max = 8
             "[elastic]\nscaler = \"predictive\"\nmin_instances = 2\nmax_instances = 8\nprefill_elastic = \"on\"",
             "[elastic]\nscaler = \"predictive\"\nmin_instances = 2\nmax_instances = 8\nprefill_elastic = \"on\"\nprefill_min = 0\nprefill_max = 4",
             "[diurnal]\npeak_to_trough = 0.5",
+            "[elastic]\nmigration_batching = \"nope\"",
+            // The registry ships exactly two built-in models.
+            "[models]\nmix = [0.5, 0.3, 0.2]",
+            "[models]\nmix = [1.0, 0.0]",
         ] {
             let doc = tomlish::parse(bad).unwrap();
             assert!(SimConfig::from_doc(&doc).is_err(), "should reject: {bad}");

@@ -314,6 +314,7 @@ mod tests {
             prefill_len: p,
             decode_len: 10_000,
             slo: Slo::new(1000, 50),
+            model: 0,
         }));
         let mut r = SimRequest::new(req, 0);
         r.prefill_done = p;

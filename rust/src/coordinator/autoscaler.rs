@@ -47,6 +47,8 @@ use super::RouteCtx;
 use crate::analysis::ServingMode;
 use crate::config::{ScalerKind, SimConfig};
 use crate::metrics::RateSample;
+use crate::model::ModelId;
+use crate::profile::ProfileTable;
 use crate::sim::{Lifecycle, Role};
 use crate::slo::{TierSet, TimeMs};
 use std::collections::VecDeque;
@@ -73,6 +75,30 @@ pub enum ScaleAction {
         /// Move residents out instead of waiting for them.
         migrate: bool,
     },
+    /// Add a cold-starting instance of `role` loaded with `model` — the
+    /// multi-model form of [`ScaleAction::Provision`] (which the
+    /// simulator applies as `ProvisionModel { model: 0, .. }`, so
+    /// single-model scalers keep emitting the short form and their
+    /// action streams stay bit-identical).
+    ProvisionModel {
+        /// Registry id of the model the new instance serves.
+        model: ModelId,
+        /// Role of the new instance.
+        role: Role,
+    },
+    /// Hot-swap instance `inst` to serve `model`: drain it (migrating
+    /// its residents to same-model survivors when `[elastic]
+    /// migration = "on"`), then pay the weight-reload delay
+    /// (`[models] swap_delay_ms`) before it re-enters service under the
+    /// new model. Cheaper than a cloud cold start when another model's
+    /// sub-fleet has surplus capacity; the simulator refuses a swap
+    /// that would empty the source model's sub-fleet.
+    SwapModel {
+        /// Instance id to re-purpose.
+        inst: usize,
+        /// Registry id of the model to load after the drain.
+        model: ModelId,
+    },
 }
 
 /// Scale-in migration gate: can the surviving active fleet plausibly
@@ -91,28 +117,38 @@ pub fn migration_feasible(ctx: &RouteCtx, inst: usize) -> bool {
         return true; // nothing to move
     }
     let role = ctx.cluster.instances[inst].role;
+    let model = ctx.cluster.instances[inst].model;
     let mut batch_free = 0u64;
     let mut kv_free = 0u64;
     // Role index + O(1) load estimates: the gate costs O(role size),
-    // not O(fleet × batch).
-    for id in ctx.cluster.with_role(role) {
+    // not O(fleet × batch). Destinations are same-model only (the hard
+    // placement constraint: residents can only re-land on instances
+    // already serving their model) and headroom is counted against each
+    // destination's *own* capacity, so mixed-capacity fleets gate
+    // correctly — for a single-model fleet both refinements are
+    // identities.
+    for id in ctx.cluster.with_role_of(model, role) {
         if id == inst {
             continue;
         }
-        let est = load_estimate(&ctx.cluster.instances[id], ctx.requests, ctx.profile);
-        batch_free += ctx.profile.max_token_batch.saturating_sub(est.batch);
-        kv_free += ctx.profile.kv_capacity_tokens.saturating_sub(est.kv_now);
+        let dest = &ctx.cluster.instances[id];
+        let est = load_estimate(dest, ctx.requests, ctx.profile);
+        batch_free += dest.max_token_batch.saturating_sub(est.batch);
+        kv_free += dest.kv_capacity.saturating_sub(est.kv_now);
     }
     batch_free >= src.batch && kv_free >= 2 * src.kv_now
 }
 
 /// Prefill scale-in migration gate: a prefill drainer's queued jobs
 /// carry at most their partially-computed KV, so the only hard
-/// requirement is a surviving active prefill server to requeue onto —
-/// the router's EDF-feasibility placement spreads them from there.
+/// requirement is a surviving active *same-model* prefill server to
+/// requeue onto — the router's EDF-feasibility placement spreads them
+/// from there. (Single-model fleets: identical to the any-survivor
+/// check this gate used before the registry.)
 pub fn prefill_migration_feasible(ctx: &RouteCtx, inst: usize) -> bool {
+    let model = ctx.cluster.instances[inst].model;
     ctx.cluster.instances[inst].role == Role::Prefill
-        && ctx.cluster.with_role(Role::Prefill).any(|id| id != inst)
+        && ctx.cluster.with_role_of(model, Role::Prefill).any(|id| id != inst)
 }
 
 /// A fleet-scaling policy, evaluated on every `ScaleEval` event.
@@ -165,11 +201,23 @@ fn unplaced_demand(ctx: &RouteCtx) -> usize {
 /// with a k-slot buffer instead of an O(role log role) sort + collect
 /// per drain epoch.
 fn k_least_loaded(ctx: &RouteCtx, role: Role, k: usize) -> Vec<usize> {
+    k_least_loaded_in(ctx, ctx.cluster.with_role(role), k)
+}
+
+/// [`k_least_loaded`] over an arbitrary candidate view (the multi-model
+/// planner feeds per-model role views through the same k-slot buffer,
+/// so donor selection and single-model drain selection share one
+/// ordering definition).
+fn k_least_loaded_in(
+    ctx: &RouteCtx,
+    ids: impl Iterator<Item = usize>,
+    k: usize,
+) -> Vec<usize> {
     if k == 0 {
         return Vec::new();
     }
     let mut best: Vec<((u64, u64), usize)> = Vec::with_capacity(k + 1);
-    for id in ctx.cluster.with_role(role) {
+    for id in ids {
         let i = &ctx.cluster.instances[id];
         let key = (i.decode_batch_now(), i.queued_prefill_tokens(ctx.requests));
         // Ascending-id iteration: comparing (key, id) reproduces the
@@ -266,11 +314,20 @@ pub fn ttft_pressure(ctx: &RouteCtx, prefill_budget: u64) -> f64 {
 /// The shared prefill scale-in choice: drain the least-queued active
 /// prefill server, migrating its queue if a survivor exists. Every
 /// policy's prefill drain goes through here so the target selection
-/// and feasibility gate can never diverge between scalers.
+/// and feasibility gate can never diverge between scalers. In a
+/// multi-model fleet a model's *last* prefill server is never a
+/// candidate — draining it would strand that model's prefill stage.
 fn prefill_drain_action(ctx: &RouteCtx) -> Option<ScaleAction> {
+    let multi = ctx.cluster.num_models > 1;
     let inst = ctx
         .cluster
         .with_role(Role::Prefill)
+        .filter(|&id| {
+            !multi || {
+                let m = ctx.cluster.instances[id].model;
+                ctx.cluster.with_role_of(m, Role::Prefill).any(|o| o != id)
+            }
+        })
         .min_by_key(|&id| ctx.cluster.instances[id].queued_prefill_tokens(ctx.requests))?;
     let migrate = prefill_migration_feasible(ctx, inst);
     Some(ScaleAction::Drain { inst, migrate })
@@ -315,6 +372,264 @@ fn prefill_pressure_actions(
     Vec::new()
 }
 
+// ------------------------------------------------------ model-mix plan
+
+/// Shared multi-model fleet planner, attached to any of the three
+/// autoscalers via [`make_autoscaler_with_models`].
+///
+/// When a registry holds more than one model, per-role fleet sizing
+/// stops being one number: each model's sub-fleet must be sized against
+/// *its own* profile table and arrival share, and capacity can move
+/// between sub-fleets by hot-swapping weights instead of paying a cloud
+/// cold start. The planner does exactly that, per `ScaleEval` epoch:
+///
+/// 1. Ingest arrivals since the last epoch (the same arrival-cursor
+///    idiom as [`PredictiveAutoscaler`]) into per-model EWMA rates,
+///    per-(model, tier) mix EWMAs and running length means.
+/// 2. Size each model's sub-fleet with the shared
+///    [`sizing::required_fleet`] math over that model's profile, plus
+///    the per-model unplaced-demand backstop.
+/// 3. Cover one model's shortfall from another's surplus first —
+///    [`ScaleAction::SwapModel`] on the surplus model's least-loaded
+///    instances (never its last one) — then cloud-provision the
+///    remainder ([`ScaleAction::ProvisionModel`]) and, after a patience
+///    window, drain any surplus no other model wants.
+///
+/// Attaching a planner replaces the host policy's single-model primary
+/// sizing; elastic-prefill pressure reactions still run on top.
+/// Single-model runs never construct one, so their decision streams
+/// are bit-for-bit those of the underlying policy.
+pub struct ModelMixPlanner {
+    tiers: TierSet,
+    profiles: Vec<ProfileTable>,
+    patience: u32,
+    /// Arrival-ingestion cursor into the (arrival-ordered) request list.
+    cursor: usize,
+    last_eval_ms: Option<TimeMs>,
+    /// Per-model smoothed arrival rate (req/s) + its seeded flag.
+    ewma_rps: Vec<f64>,
+    rate_seeded: Vec<bool>,
+    /// Per-model EWMA tier mix (each sums to ≈1 once seeded).
+    tier_mix: Vec<Vec<f64>>,
+    /// Per-model running workload-shape sums over ingested arrivals.
+    n_seen: Vec<u64>,
+    sum_prefill: Vec<f64>,
+    sum_decode: Vec<f64>,
+    drain_streak: Vec<u32>,
+}
+
+impl ModelMixPlanner {
+    /// Build over one [`ProfileTable`] per registered model (≥ 2 — a
+    /// single-model fleet has nothing to plan between).
+    pub fn new(tiers: TierSet, profiles: Vec<ProfileTable>) -> ModelMixPlanner {
+        assert!(profiles.len() >= 2, "model-mix planning needs >= 2 models");
+        let m = profiles.len();
+        let t = tiers.len();
+        ModelMixPlanner {
+            tiers,
+            profiles,
+            patience: 3,
+            cursor: 0,
+            last_eval_ms: None,
+            ewma_rps: vec![0.0; m],
+            rate_seeded: vec![false; m],
+            tier_mix: vec![vec![0.0; t]; m],
+            n_seen: vec![0; m],
+            sum_prefill: vec![0.0; m],
+            sum_decode: vec![0.0; m],
+            drain_streak: vec![0; m],
+        }
+    }
+
+    /// Ingest arrivals in `(prev, now]`; returns the per-model counts.
+    fn ingest(&mut self, now: TimeMs, ctx: &RouteCtx) -> Vec<u64> {
+        let m_n = self.profiles.len();
+        let t_n = self.tiers.len();
+        let mut counts = vec![0u64; m_n];
+        let mut tier_counts = vec![vec![0u64; t_n]; m_n];
+        while self.cursor < ctx.requests.len()
+            && ctx.requests[self.cursor].req.arrival_ms <= now
+        {
+            let r = &ctx.requests[self.cursor];
+            let m = r.req.model.min(m_n - 1);
+            counts[m] += 1;
+            if r.tier < t_n {
+                tier_counts[m][r.tier] += 1;
+            }
+            self.n_seen[m] += 1;
+            self.sum_prefill[m] += r.req.prefill_len as f64;
+            self.sum_decode[m] += r.req.decode_len as f64;
+            self.cursor += 1;
+        }
+        for m in 0..m_n {
+            if counts[m] == 0 {
+                continue;
+            }
+            // First ingestion for this model seeds the mix outright.
+            let fresh = self.n_seen[m] == counts[m];
+            let mut sum = 0.0;
+            for (k, mix) in self.tier_mix[m].iter_mut().enumerate() {
+                let frac = tier_counts[m][k] as f64 / counts[m] as f64;
+                *mix = if fresh {
+                    frac
+                } else {
+                    (1.0 - MIX_EWMA_ALPHA) * *mix + MIX_EWMA_ALPHA * frac
+                };
+                sum += *mix;
+            }
+            if sum > 0.0 {
+                for mix in self.tier_mix[m].iter_mut() {
+                    *mix /= sum;
+                }
+            }
+        }
+        counts
+    }
+
+    /// Required sub-fleet of model `m` at its current smoothed rate —
+    /// the shared [`sizing::required_fleet`] math over the model's own
+    /// profile table. Zero for a model with no traffic yet (its initial
+    /// allocation is donor capacity).
+    fn required_of(&self, mode: ServingMode, m: ModelId) -> usize {
+        if self.n_seen[m] == 0 {
+            return 0;
+        }
+        let avg_p = self.sum_prefill[m] / self.n_seen[m] as f64;
+        let avg_d = (self.sum_decode[m] / self.n_seen[m] as f64).max(1.0);
+        // Mean resident KV of a decode stream: full prompt + half the
+        // output (the `p + d/2` idiom the predictive scaler uses).
+        let kv_per_req = (avg_p + avg_d * 0.5) as u64;
+        let rate = self.ewma_rps[m];
+        let tier_rates: Vec<f64> = self.tier_mix[m].iter().map(|f| f * rate).collect();
+        sizing::required_fleet(
+            &self.profiles[m],
+            mode,
+            &self.tiers,
+            &tier_rates,
+            avg_p,
+            avg_d,
+            kv_per_req,
+        )
+    }
+
+    /// One planning epoch (see the type docs for the three stages).
+    pub fn evaluate(&mut self, now: TimeMs, ctx: &mut RouteCtx) -> Vec<ScaleAction> {
+        let counts = self.ingest(now, ctx);
+        let Some(prev) = self.last_eval_ms.replace(now) else {
+            return Vec::new(); // first epoch only anchors the window
+        };
+        if now <= prev {
+            return Vec::new();
+        }
+        let dt_s = (now - prev) as f64 / 1000.0;
+        let n_models = self.profiles.len();
+        for m in 0..n_models {
+            let observed = counts[m] as f64 / dt_s;
+            self.ewma_rps[m] = if self.rate_seeded[m] {
+                RATE_EWMA_ALPHA * observed + (1.0 - RATE_EWMA_ALPHA) * self.ewma_rps[m]
+            } else {
+                observed
+            };
+            self.rate_seeded[m] = self.rate_seeded[m] || counts[m] > 0;
+        }
+
+        let role = scaling_role(ctx.mode);
+        let mut shortfall = vec![0usize; n_models];
+        let mut surplus = vec![0usize; n_models];
+        for m in 0..n_models {
+            let mut required = self.required_of(ctx.mode, m);
+            // Per-model reactive backstop: visible unplaced demand with
+            // no idle instance of this model means the plan under-sized
+            // — grow past it rather than strand requests.
+            let saturated = ctx
+                .cluster
+                .with_role_of(m, role)
+                .all(|id| !ctx.cluster.instances[id].is_empty());
+            if saturated {
+                let backlog = if ctx.cluster.is_scan_reference()
+                    || ctx.cluster.is_indexed_reference()
+                {
+                    ctx.cluster.unplaced_demand_scan_of(m, ctx.requests, ctx.now)
+                } else {
+                    ctx.cluster.unplaced_demand_of(m)
+                };
+                if backlog > 0 {
+                    required = required
+                        .max(ctx.cluster.active_count_of(m, role) + backlog.div_ceil(8).min(4));
+                }
+            }
+            let active = ctx.cluster.active_count_of(m, role);
+            // Committed counts in-flight provisions *and* inbound swaps,
+            // so a shortfall being serviced is not re-serviced.
+            let committed = ctx.cluster.committed_count_of(m, role);
+            if required > committed {
+                self.drain_streak[m] = 0;
+                shortfall[m] = required - committed;
+            } else if required < active {
+                surplus[m] = active - required;
+            } else {
+                self.drain_streak[m] = 0;
+            }
+        }
+
+        let mut actions = Vec::new();
+        // Donor lists: each surplus model's least-loaded active
+        // instances, never its last survivor, bounded per epoch.
+        let mut donors: Vec<Vec<usize>> = (0..n_models)
+            .map(|m| {
+                if surplus[m] == 0 {
+                    return Vec::new();
+                }
+                let cap = surplus[m]
+                    .min(ctx.cluster.active_count_of(m, role).saturating_sub(1))
+                    .min(MAX_DRAIN_STEP);
+                k_least_loaded_in(ctx, ctx.cluster.with_role_of(m, role), cap)
+            })
+            .collect();
+        // Stage 1 — swaps: cover shortfall from surplus, cheapest first
+        // (a swap re-uses a warm machine; only the weight reload is
+        // paid).
+        for a in 0..n_models {
+            while shortfall[a] > 0 {
+                let Some(b) = (0..n_models).find(|&b| b != a && !donors[b].is_empty())
+                else {
+                    break;
+                };
+                let inst = donors[b].remove(0);
+                surplus[b] = surplus[b].saturating_sub(1);
+                shortfall[a] -= 1;
+                actions.push(ScaleAction::SwapModel { inst, model: a });
+            }
+        }
+        // Stage 2 — cloud provisions for whatever shortfall no donor
+        // covered, bounded like the predictive scaler's step.
+        let mut budget = MAX_PROVISION_STEP;
+        for (m, &want) in shortfall.iter().enumerate() {
+            let take = want.min(budget);
+            budget -= take;
+            actions.extend((0..take).map(|_| ScaleAction::ProvisionModel { model: m, role }));
+        }
+        // Stage 3 — drain surplus nobody swapped away, after patience.
+        for m in 0..n_models {
+            if surplus[m] == 0 {
+                continue;
+            }
+            self.drain_streak[m] += 1;
+            if self.drain_streak[m] < self.patience {
+                continue;
+            }
+            self.drain_streak[m] = 0;
+            for (n, inst) in donors[m].drain(..).enumerate() {
+                // Only the first drain of a batch may migrate (the gate
+                // sees the pre-drain fleet; see the predictive scaler).
+                let migrate = n == 0 && migration_feasible(ctx, inst);
+                actions.push(ScaleAction::Drain { inst, migrate });
+            }
+        }
+        actions
+    }
+}
+
 // ------------------------------------------------------------- gradient
 
 /// §4.4 load-gradient fleet scaler.
@@ -328,6 +643,9 @@ pub struct GradientAutoscaler {
     /// Also react to TTFT pressure on the PD prefill tier.
     prefill_elastic: bool,
     prefill_streak: u32,
+    /// Multi-model planner; replaces the single-model primary sizing
+    /// when present.
+    planner: Option<ModelMixPlanner>,
 }
 
 impl GradientAutoscaler {
@@ -342,12 +660,20 @@ impl GradientAutoscaler {
             surplus_streak: 0,
             prefill_elastic: false,
             prefill_streak: 0,
+            planner: None,
         }
     }
 
     /// Enable/disable elastic-prefill reactions ([`ttft_pressure`]).
     pub fn scale_prefill(mut self, enabled: bool) -> Self {
         self.prefill_elastic = enabled;
+        self
+    }
+
+    /// Attach a multi-model planner (`None` leaves the single-model
+    /// behaviour bit-for-bit unchanged).
+    pub fn with_planner(mut self, planner: Option<ModelMixPlanner>) -> Self {
+        self.planner = planner;
         self
     }
 
@@ -464,7 +790,10 @@ impl GradientAutoscaler {
 
 impl Autoscaler for GradientAutoscaler {
     fn evaluate(&mut self, _now: TimeMs, ctx: &mut RouteCtx) -> Vec<ScaleAction> {
-        let mut actions = self.scale_primary(ctx);
+        let mut actions = match self.planner.as_mut() {
+            Some(p) => p.evaluate(_now, ctx),
+            None => self.scale_primary(ctx),
+        };
         if self.prefill_elastic {
             actions.extend(prefill_pressure_actions(ctx, &mut self.prefill_streak, self.patience));
         }
@@ -491,6 +820,9 @@ pub struct ThresholdAutoscaler {
     /// Also react to TTFT pressure on the PD prefill tier.
     prefill_elastic: bool,
     prefill_streak: u32,
+    /// Multi-model planner; replaces the single-model primary sizing
+    /// when present.
+    planner: Option<ModelMixPlanner>,
 }
 
 impl ThresholdAutoscaler {
@@ -508,12 +840,20 @@ impl ThresholdAutoscaler {
             last_busy_ms: 0,
             prefill_elastic: false,
             prefill_streak: 0,
+            planner: None,
         }
     }
 
     /// Enable/disable elastic-prefill reactions ([`ttft_pressure`]).
     pub fn scale_prefill(mut self, enabled: bool) -> Self {
         self.prefill_elastic = enabled;
+        self
+    }
+
+    /// Attach a multi-model planner (`None` leaves the single-model
+    /// behaviour bit-for-bit unchanged).
+    pub fn with_planner(mut self, planner: Option<ModelMixPlanner>) -> Self {
+        self.planner = planner;
         self
     }
 
@@ -603,7 +943,10 @@ impl ThresholdAutoscaler {
 
 impl Autoscaler for ThresholdAutoscaler {
     fn evaluate(&mut self, now: TimeMs, ctx: &mut RouteCtx) -> Vec<ScaleAction> {
-        let mut actions = self.scale_primary(now, ctx);
+        let mut actions = match self.planner.as_mut() {
+            Some(p) => p.evaluate(now, ctx),
+            None => self.scale_primary(now, ctx),
+        };
         if self.prefill_elastic {
             actions.extend(prefill_pressure_actions(ctx, &mut self.prefill_streak, self.patience));
         }
@@ -676,6 +1019,9 @@ pub struct PredictiveAutoscaler {
     drain_streak: u32,
     prefill_streak: u32,
     rates: Vec<RateSample>,
+    /// Multi-model planner; replaces the single-model primary sizing
+    /// when present.
+    planner: Option<ModelMixPlanner>,
 }
 
 impl PredictiveAutoscaler {
@@ -701,12 +1047,23 @@ impl PredictiveAutoscaler {
             drain_streak: 0,
             prefill_streak: 0,
             rates: Vec::new(),
+            planner: None,
         }
     }
 
     /// Enable/disable predictive sizing of the PD prefill tier.
     pub fn scale_prefill(mut self, enabled: bool) -> Self {
         self.prefill_elastic = enabled;
+        self
+    }
+
+    /// Attach a multi-model planner (`None` leaves the single-model
+    /// behaviour bit-for-bit unchanged). With a planner the prefill
+    /// tier falls back to the reactive [`ttft_pressure`] loop the other
+    /// policies use — per-model prompt demand is what the planner
+    /// already sizes the primary role from.
+    pub fn with_planner(mut self, planner: Option<ModelMixPlanner>) -> Self {
+        self.planner = planner;
         self
     }
 
@@ -771,8 +1128,10 @@ impl PredictiveAutoscaler {
     }
 }
 
-impl Autoscaler for PredictiveAutoscaler {
-    fn evaluate(&mut self, now: TimeMs, ctx: &mut RouteCtx) -> Vec<ScaleAction> {
+impl PredictiveAutoscaler {
+    /// The single-model §4.4-predictive epoch (the pre-registry
+    /// `evaluate` body, verbatim).
+    fn scale_single(&mut self, now: TimeMs, ctx: &mut RouteCtx) -> Vec<ScaleAction> {
         let new_n = self.ingest_arrivals(now, ctx);
         let Some(prev) = self.last_eval_ms.replace(now) else {
             // First epoch only anchors the window.
@@ -910,6 +1269,23 @@ impl Autoscaler for PredictiveAutoscaler {
         }
         actions
     }
+}
+
+impl Autoscaler for PredictiveAutoscaler {
+    fn evaluate(&mut self, now: TimeMs, ctx: &mut RouteCtx) -> Vec<ScaleAction> {
+        if let Some(p) = self.planner.as_mut() {
+            let mut actions = p.evaluate(now, ctx);
+            if self.prefill_elastic && ctx.mode == ServingMode::PdDisaggregated {
+                actions.extend(prefill_pressure_actions(
+                    ctx,
+                    &mut self.prefill_streak,
+                    self.patience,
+                ));
+            }
+            return actions;
+        }
+        self.scale_single(now, ctx)
+    }
 
     fn name(&self) -> String {
         "predictive".into()
@@ -924,22 +1300,45 @@ impl Autoscaler for PredictiveAutoscaler {
 /// fleet is fixed). Elastic-prefill reactions are wired in only for PD
 /// mode — co-location has no prefill cluster to scale.
 pub fn make_autoscaler(cfg: &SimConfig) -> Option<Box<dyn Autoscaler>> {
+    make_autoscaler_with_models(cfg, &[])
+}
+
+/// Multi-model form of [`make_autoscaler`]: with more than one profile
+/// (one per registered model, model-id order) the chosen policy gets a
+/// [`ModelMixPlanner`] attached and sizes each model's sub-fleet
+/// separately, swapping capacity between sub-fleets when that is
+/// cheaper than a cloud cold start. With zero or one profile this *is*
+/// [`make_autoscaler`] — no planner, bit-identical decisions.
+pub fn make_autoscaler_with_models(
+    cfg: &SimConfig,
+    profiles: &[ProfileTable],
+) -> Option<Box<dyn Autoscaler>> {
     if !cfg.elastic.enabled() {
         return None;
     }
     let pf = cfg.elastic.prefill_elastic && cfg.mode == ServingMode::PdDisaggregated;
+    let planner = (profiles.len() > 1)
+        .then(|| ModelMixPlanner::new(cfg.tiers.clone(), profiles.to_vec()));
     match cfg.elastic.scaler {
-        ScalerKind::Gradient => {
-            Some(Box::new(GradientAutoscaler::new(cfg.tiers.clone()).scale_prefill(pf)))
-        }
-        ScalerKind::Threshold => Some(Box::new(ThresholdAutoscaler::new(0.75, 0.35).scale_prefill(pf))),
+        ScalerKind::Gradient => Some(Box::new(
+            GradientAutoscaler::new(cfg.tiers.clone())
+                .scale_prefill(pf)
+                .with_planner(planner),
+        )),
+        ScalerKind::Threshold => Some(Box::new(
+            ThresholdAutoscaler::new(0.75, 0.35)
+                .scale_prefill(pf)
+                .with_planner(planner),
+        )),
         ScalerKind::Predictive => {
             let lead = cfg
                 .elastic
                 .provision_lead_ms
                 .unwrap_or(cfg.elastic.provision_delay_ms);
             Some(Box::new(
-                PredictiveAutoscaler::new(cfg.tiers.clone(), lead).scale_prefill(pf),
+                PredictiveAutoscaler::new(cfg.tiers.clone(), lead)
+                    .scale_prefill(pf)
+                    .with_planner(planner),
             ))
         }
         ScalerKind::Off => None,
@@ -971,6 +1370,7 @@ mod tests {
             prefill_len: 512,
             decode_len: 300,
             slo: Slo::new(1_000, tpot),
+            model: 0,
         }));
         let mut r = SimRequest::new(req, tier);
         r.prefill_done = 512;
@@ -991,6 +1391,7 @@ mod tests {
             prefill_len: 8_000,
             decode_len: 300,
             slo: Slo::new(1_000, tpot),
+            model: 0,
         }));
         SimRequest::new(req, tier)
     }

@@ -44,6 +44,12 @@ fn entry_role(mode: ServingMode) -> Role {
 // Decode phases live on the scaling role (decode servers under PD, the
 // coloc servers themselves under co-location); `route_decode` reaches
 // the coloc case only for scale-in migration re-placement.
+//
+// Loaded model is a hard placement constraint even for baselines: every
+// candidate walk goes through `with_role_of(model, role)`, which is the
+// plain role index filtered by the request's model — identical
+// iteration order (and decisions) to `with_role` when one model is
+// deployed.
 
 // ---------------------------------------------------------------- Random
 
@@ -68,13 +74,15 @@ impl RandomRouter {
 }
 
 impl Router for RandomRouter {
-    fn route_new(&mut self, _now: TimeMs, _req_idx: usize, ctx: &mut RouteCtx) -> Option<usize> {
-        let ids: Vec<usize> = ctx.cluster.with_role(entry_role(ctx.mode)).collect();
+    fn route_new(&mut self, _now: TimeMs, req_idx: usize, ctx: &mut RouteCtx) -> Option<usize> {
+        let model = ctx.requests[req_idx].req.model;
+        let ids: Vec<usize> = ctx.cluster.with_role_of(model, entry_role(ctx.mode)).collect();
         self.pick_random(&ids)
     }
 
-    fn route_decode(&mut self, _now: TimeMs, _req_idx: usize, ctx: &mut RouteCtx) -> Option<usize> {
-        let ids: Vec<usize> = ctx.cluster.with_role(scaling_role(ctx.mode)).collect();
+    fn route_decode(&mut self, _now: TimeMs, req_idx: usize, ctx: &mut RouteCtx) -> Option<usize> {
+        let model = ctx.requests[req_idx].req.model;
+        let ids: Vec<usize> = ctx.cluster.with_role_of(model, scaling_role(ctx.mode)).collect();
         self.pick_random(&ids)
     }
 
@@ -106,9 +114,9 @@ impl MinimalRouter {
         MinimalRouter
     }
 
-    fn pick_min_cycle(&self, ctx: &RouteCtx, role: Role) -> Option<usize> {
+    fn pick_min_cycle(&self, ctx: &RouteCtx, model: crate::model::ModelId, role: Role) -> Option<usize> {
         ctx.cluster
-            .with_role(role)
+            .with_role_of(model, role)
             .map(|id| {
                 let est = load_estimate(&ctx.cluster.instances[id], ctx.requests, ctx.profile);
                 // Prefill servers: cycle dominated by queued prefill work.
@@ -121,12 +129,12 @@ impl MinimalRouter {
 }
 
 impl Router for MinimalRouter {
-    fn route_new(&mut self, _now: TimeMs, _req_idx: usize, ctx: &mut RouteCtx) -> Option<usize> {
-        self.pick_min_cycle(ctx, entry_role(ctx.mode))
+    fn route_new(&mut self, _now: TimeMs, req_idx: usize, ctx: &mut RouteCtx) -> Option<usize> {
+        self.pick_min_cycle(ctx, ctx.requests[req_idx].req.model, entry_role(ctx.mode))
     }
 
-    fn route_decode(&mut self, _now: TimeMs, _req_idx: usize, ctx: &mut RouteCtx) -> Option<usize> {
-        self.pick_min_cycle(ctx, scaling_role(ctx.mode))
+    fn route_decode(&mut self, _now: TimeMs, req_idx: usize, ctx: &mut RouteCtx) -> Option<usize> {
+        self.pick_min_cycle(ctx, ctx.requests[req_idx].req.model, scaling_role(ctx.mode))
     }
 
     fn chunk_budget(&mut self, _now: TimeMs, inst: usize, ctx: &mut RouteCtx) -> u64 {
@@ -162,12 +170,13 @@ impl ChunkRouter {
 }
 
 impl Router for ChunkRouter {
-    fn route_new(&mut self, _now: TimeMs, _req_idx: usize, ctx: &mut RouteCtx) -> Option<usize> {
+    fn route_new(&mut self, _now: TimeMs, req_idx: usize, ctx: &mut RouteCtx) -> Option<usize> {
         // Least loaded by predicted cycle time (the sensible static
         // chunk deployment; the paper leaves the baseline's placement
         // unspecified beyond the budget).
+        let model = ctx.requests[req_idx].req.model;
         ctx.cluster
-            .with_role(entry_role(ctx.mode))
+            .with_role_of(model, entry_role(ctx.mode))
             .map(|id| {
                 let est = load_estimate(&ctx.cluster.instances[id], ctx.requests, ctx.profile);
                 let queued = ctx.cluster.instances[id].queued_prefill_tokens(ctx.requests);
@@ -177,9 +186,10 @@ impl Router for ChunkRouter {
             .map(|(_, id)| id)
     }
 
-    fn route_decode(&mut self, _now: TimeMs, _req_idx: usize, ctx: &mut RouteCtx) -> Option<usize> {
+    fn route_decode(&mut self, _now: TimeMs, req_idx: usize, ctx: &mut RouteCtx) -> Option<usize> {
+        let model = ctx.requests[req_idx].req.model;
         ctx.cluster
-            .with_role(scaling_role(ctx.mode))
+            .with_role_of(model, scaling_role(ctx.mode))
             .map(|id| {
                 let est = load_estimate(&ctx.cluster.instances[id], ctx.requests, ctx.profile);
                 ((est.iter_now_ms * 1000.0) as u64, id)

@@ -26,9 +26,9 @@ pub mod sharded;
 pub mod sizing;
 
 pub use autoscaler::{
-    make_autoscaler, migration_feasible, prefill_migration_feasible, scaling_role,
-    ttft_pressure, Autoscaler, GradientAutoscaler, PredictiveAutoscaler, ScaleAction,
-    ThresholdAutoscaler,
+    make_autoscaler, make_autoscaler_with_models, migration_feasible, prefill_migration_feasible,
+    scaling_role, ttft_pressure, Autoscaler, GradientAutoscaler, ModelMixPlanner,
+    PredictiveAutoscaler, ScaleAction, ThresholdAutoscaler,
 };
 pub use baselines::{ChunkRouter, MinimalRouter, RandomRouter};
 pub use polyserve::PolyServeRouter;
@@ -99,8 +99,24 @@ pub trait Router {
 
 /// Build the router described by a [`SimConfig`].
 pub fn make_router(cfg: &SimConfig, avg_decode_len: f64) -> Box<dyn Router> {
+    make_router_with_models(cfg, avg_decode_len, &[])
+}
+
+/// Build the router described by a [`SimConfig`], handing the PolyServe
+/// policy one [`ProfileTable`] per deployed model (indexed by
+/// `ModelId`). With zero or one profile every router falls back to the
+/// run-wide `ctx.profile` and behaves exactly like [`make_router`];
+/// baselines always use the run-wide table (their placement is
+/// model-*constrained* but not model-*profiled*).
+pub fn make_router_with_models(
+    cfg: &SimConfig,
+    avg_decode_len: f64,
+    profiles: &[ProfileTable],
+) -> Box<dyn Router> {
     match cfg.policy {
-        Policy::PolyServe => Box::new(PolyServeRouter::new(cfg, avg_decode_len)),
+        Policy::PolyServe => {
+            Box::new(PolyServeRouter::new(cfg, avg_decode_len).with_models(profiles.to_vec()))
+        }
         Policy::Random => Box::new(RandomRouter::new(cfg.seed ^ 0x52_414E_44)),
         Policy::Minimal => Box::new(MinimalRouter::new()),
         Policy::Chunk => Box::new(ChunkRouter::new(cfg.chunk_budget)),

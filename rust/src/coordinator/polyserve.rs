@@ -13,6 +13,8 @@ use super::sizing::{DEFAULT_PREFILL_BUDGET, PF_TOKEN_RATIO};
 use super::{RouteCtx, Router};
 use crate::analysis::ServingMode;
 use crate::config::{Features, SimConfig};
+use crate::model::ModelId;
+use crate::profile::ProfileTable;
 use crate::sim::{Role, TierAssign};
 use crate::slo::{TierSet, TimeMs};
 use std::collections::VecDeque;
@@ -35,8 +37,15 @@ pub struct PolyServeRouter {
     tiers: TierSet,
     features: Features,
     avg_decode_len: f64,
-    /// Per-tier pending queues (§4.3: "requests start pending for one
-    /// SLO tier").
+    /// Per-model profile tables for model-mix runs (empty in
+    /// single-model configurations, where `ctx.profile` is the only
+    /// timing oracle). Attached via [`Self::with_models`].
+    profiles: Vec<ProfileTable>,
+    /// Per-(model, tier) pending queues, flat `model × n_tiers + k`
+    /// (§4.3: "requests start pending for one SLO tier"; the model
+    /// axis keeps one model's head-of-line block from stalling
+    /// another's dispatch). Single-model: exactly the per-tier layout.
+    /// Grown lazily to the fleet's model count on first routing call.
     pending: Vec<VecDeque<Pending>>,
     /// Requests currently parked across all pending queues — lets
     /// `drain_pending` (called on every iteration end and tick) return
@@ -112,12 +121,46 @@ impl PolyServeRouter {
             tiers: cfg.tiers.clone(),
             features: cfg.features.clone(),
             avg_decode_len,
+            profiles: Vec::new(),
             pending: (0..n_tiers).map(|_| VecDeque::new()).collect(),
             pending_total: 0,
             order,
             mode: cfg.mode,
             prefill_budget: DEFAULT_PREFILL_BUDGET,
             stats: RouterStats::default(),
+        }
+    }
+
+    /// Attach per-model profile tables (model-id order) for a
+    /// model-mix run: admission, chunk sizing and queue-feasibility
+    /// estimates then consult the table of the instance's / request's
+    /// model. With fewer than two tables this is a no-op, so
+    /// single-model decision streams stay bit-for-bit unchanged.
+    pub fn with_models(mut self, profiles: Vec<ProfileTable>) -> Self {
+        if profiles.len() > 1 {
+            self.profiles = profiles;
+        }
+        self
+    }
+
+    /// Timing oracle for `model`: the attached per-model table, or the
+    /// run-wide `fallback` (always the case in single-model runs).
+    fn profile_for<'p>(&'p self, fallback: &'p ProfileTable, model: ModelId) -> &'p ProfileTable {
+        self.profiles.get(model).unwrap_or(fallback)
+    }
+
+    /// Flat index of `(model, tier)` in the pending-queue layout.
+    fn pending_idx(&self, model: ModelId, k: usize) -> usize {
+        model * self.tiers.len() + k
+    }
+
+    /// Grow the pending-queue layout to the fleet's model count (a
+    /// no-op from the second call on, and entirely for single-model
+    /// fleets, whose layout is already complete at construction).
+    fn ensure_models(&mut self, ctx: &RouteCtx) {
+        let need = ctx.cluster.num_models * self.tiers.len();
+        if self.pending.len() < need {
+            self.pending.resize_with(need, VecDeque::new);
         }
     }
 
@@ -156,16 +199,17 @@ impl PolyServeRouter {
     fn pick_by_gradient(
         &self,
         ctx: &RouteCtx,
+        model: ModelId,
         tier: usize,
         admit: impl Fn(&RouteCtx, usize) -> bool,
     ) -> Option<usize> {
         if ctx.cluster.is_scan_reference() || ctx.cluster.is_indexed_reference() {
+            let prof = self.profile_for(ctx.profile, model);
             let mut scored: Vec<(u64, u64, usize)> = ctx
                 .cluster
-                .in_tier(tier)
+                .in_tier_of(model, tier)
                 .map(|id| {
-                    let est =
-                        load_estimate(&ctx.cluster.instances[id], ctx.requests, ctx.profile);
+                    let est = load_estimate(&ctx.cluster.instances[id], ctx.requests, prof);
                     (est.batch, est.kv_now, id)
                 })
                 .collect();
@@ -180,9 +224,13 @@ impl PolyServeRouter {
                 .find(|&id| admit(ctx, id));
         }
         if self.features.load_gradient {
-            ctx.cluster.tier_by_load_desc(tier).find(|&id| admit(ctx, id))
+            ctx.cluster
+                .tier_by_load_desc_of(model, tier)
+                .find(|&id| admit(ctx, id))
         } else {
-            ctx.cluster.tier_by_load_asc(tier).find(|&id| admit(ctx, id))
+            ctx.cluster
+                .tier_by_load_asc_of(model, tier)
+                .find(|&id| admit(ctx, id))
         }
     }
 
@@ -201,21 +249,23 @@ impl PolyServeRouter {
         ctx: &mut RouteCtx,
     ) -> Option<usize> {
         let r = &ctx.requests[req_idx];
+        let model = r.req.model;
         let kv_start = r.kv_now().max(r.req.prefill_len as u64);
         let next_deadline = if relaxed {
             TimeMs::MAX / 4
         } else {
             r.tracker.next_deadline()
         };
+        let prof = self.profile_for(ctx.profile, model);
         for &tier in tiers_to_try {
             let tpot = self.tiers.tier(tier).tpot_ms;
             // No materialized candidate list: the ordered walk feeds
             // the admission check directly.
-            let found = self.pick_by_gradient(ctx, tier, |c, id| {
+            let found = self.pick_by_gradient(ctx, model, tier, |c, id| {
                 admission::admit_decode(
                     &c.cluster.instances[id],
                     c.requests,
-                    c.profile,
+                    prof,
                     tpot,
                     kv_start,
                     next_deadline,
@@ -243,6 +293,7 @@ impl PolyServeRouter {
         ctx: &mut RouteCtx,
     ) -> Option<usize> {
         let r = &ctx.requests[req_idx];
+        let model = r.req.model;
         let prefill_len = (r.req.prefill_len - r.prefill_done) as u64;
         let (ttft_deadline, next_token_deadline) = if relaxed {
             (TimeMs::MAX / 4, TimeMs::MAX / 4)
@@ -250,13 +301,14 @@ impl PolyServeRouter {
             let t = r.req.arrival_ms + r.req.slo.ttft_ms;
             (t, t + r.req.slo.tpot_ms)
         };
+        let prof = self.profile_for(ctx.profile, model);
         for &tier in tiers_to_try {
             let tpot = self.tiers.tier(tier).tpot_ms;
-            let found = self.pick_by_gradient(ctx, tier, |c, id| {
+            let found = self.pick_by_gradient(ctx, model, tier, |c, id| {
                 admission::admit_coloc(
                     &c.cluster.instances[id],
                     c.requests,
-                    c.profile,
+                    prof,
                     tpot,
                     prefill_len,
                     ttft_deadline,
@@ -293,6 +345,7 @@ impl PolyServeRouter {
         ctx: &mut RouteCtx,
     ) -> Option<usize> {
         let k = ctx.requests[req_idx].tier;
+        let model = ctx.requests[req_idx].req.model;
         if self.features.eager_promotion {
             if let Some(id) =
                 self.place_in(now, req_idx, decode_phase, false, self.promo_order(k), ctx)
@@ -305,7 +358,7 @@ impl PolyServeRouter {
             self.stats.placed_direct += 1;
             return Some(id);
         }
-        if self.scale_up(k, now, ctx).is_some() {
+        if self.scale_up(model, k, now, ctx).is_some() {
             if let Some(id) = self.place_in(now, req_idx, decode_phase, false, &[k], ctx) {
                 self.stats.placed_direct += 1;
                 return Some(id);
@@ -340,22 +393,33 @@ impl PolyServeRouter {
         }
     }
 
-    /// Scale up tier `k`: claim from the BE pool, or adopt a Pending
-    /// instance (§4.4). Returns the instance id if one was obtained.
-    fn scale_up(&mut self, k: usize, now: TimeMs, ctx: &mut RouteCtx) -> Option<usize> {
+    /// Scale up `model`'s tier `k`: claim from the model's BE pool, or
+    /// adopt one of its Pending instances (§4.4). Returns the instance
+    /// id if one was obtained. The hard placement constraint lives
+    /// here too: a tier only ever grows by instances already serving
+    /// the model (weight swaps are the autoscaler's job, not the
+    /// router's).
+    fn scale_up(
+        &mut self,
+        model: ModelId,
+        k: usize,
+        now: TimeMs,
+        ctx: &mut RouteCtx,
+    ) -> Option<usize> {
         // Prefer a Pending instance (it already holds promoted tier-k
         // requests — adopting avoids a cold start). The pending pool is
-        // indexed: only actual Pending instances are visited.
+        // indexed: only actual Pending instances of the model are
+        // visited.
         let pending_inst = ctx
             .cluster
-            .pending_pool()
+            .pending_pool_of(model)
             .find(|&id| self.instance_hosts_tier(id, k, ctx));
         if let Some(id) = pending_inst {
             ctx.cluster.adopt_pending(id, k);
             self.stats.adoptions += 1;
             return Some(id);
         }
-        let claimed = ctx.cluster.claim_for_tier(k, now);
+        let claimed = ctx.cluster.claim_for_tier_of(model, k, now);
         if claimed.is_some() {
             self.stats.claims += 1;
         }
@@ -380,9 +444,13 @@ impl PolyServeRouter {
         if self.pending_total == 0 {
             return; // O(1) fast path: nothing parked anywhere
         }
-        for k in 0..self.pending.len() {
+        let n_tiers = self.tiers.len();
+        for q in 0..self.pending.len() {
+            // Flat (model, tier) layout; in a single-model run `q` is
+            // the tier index itself.
+            let k = q % n_tiers;
             loop {
-                let Some(&head) = self.pending[k].front() else { break };
+                let Some(&head) = self.pending[q].front() else { break };
                 let placed = self.placement_ladder(now, head.req_idx, head.decode_phase, ctx);
                 let placed = match placed {
                     Some(id) => Some(id),
@@ -416,7 +484,8 @@ impl PolyServeRouter {
                                 // period, place on the least-loaded
                                 // server no matter what.
                                 None if now >= deadline + FORCED_GRACE_MS => {
-                                    let t = self.forced_target(k, ctx);
+                                    let model = ctx.requests[head.req_idx].req.model;
+                                    let t = self.forced_target(model, k, ctx);
                                     if t.is_some() {
                                         self.stats.forced += 1;
                                     }
@@ -431,11 +500,11 @@ impl PolyServeRouter {
                 };
                 match placed {
                     Some(id) => {
-                        self.pending[k].pop_front();
+                        self.pending[q].pop_front();
                         self.pending_total -= 1;
                         self.enqueue_on(id, head, now, ctx);
                     }
-                    None => break, // head blocked; FIFO per tier
+                    None => break, // head blocked; FIFO per (model, tier)
                 }
             }
         }
@@ -449,15 +518,18 @@ impl PolyServeRouter {
     /// id order as the old materialized lists, so ties resolve
     /// identically), and the pending step walks the cluster's ordered
     /// pending twin instead of min-scanning on the default path.
-    fn forced_target(&self, k: usize, ctx: &RouteCtx) -> Option<usize> {
+    fn forced_target(&self, model: ModelId, k: usize, ctx: &RouteCtx) -> Option<usize> {
         fn least_loaded(ctx: &RouteCtx, ids: impl Iterator<Item = usize>) -> Option<usize> {
             ids.min_by_key(|&id| {
                 let i = &ctx.cluster.instances[id];
                 (i.decode_batch_now(), i.queued_prefill_tokens(ctx.requests))
             })
         }
+        // Every fallback stage is model-filtered: even the liveness
+        // backstop may not cross the hard placement constraint (an
+        // instance cannot run a model it hasn't loaded).
         for &tier in self.tier_order(k) {
-            if let Some(id) = least_loaded(ctx, ctx.cluster.in_tier(tier)) {
+            if let Some(id) = least_loaded(ctx, ctx.cluster.in_tier_of(model, tier)) {
                 return Some(id);
             }
         }
@@ -468,9 +540,9 @@ impl PolyServeRouter {
         // (`min_by_key` over the ascending-id view returns the
         // lexicographic minimum). Reference modes keep the min-scan.
         let pend = if ctx.cluster.is_scan_reference() || ctx.cluster.is_indexed_reference() {
-            least_loaded(ctx, ctx.cluster.pending_pool())
+            least_loaded(ctx, ctx.cluster.pending_pool_of(model))
         } else {
-            ctx.cluster.pending_by_load().next()
+            ctx.cluster.pending_by_load_of(model).next()
         };
         if let Some(id) = pend {
             return Some(id);
@@ -483,12 +555,12 @@ impl PolyServeRouter {
         if let Some(id) = least_loaded(
             ctx,
             ctx.cluster
-                .with_role(role)
+                .with_role_of(model, role)
                 .filter(|&id| ctx.cluster.assign_of(id) != TierAssign::BestEffort),
         ) {
             return Some(id);
         }
-        least_loaded(ctx, ctx.cluster.with_role(role))
+        least_loaded(ctx, ctx.cluster.with_role_of(model, role))
     }
 
     fn enqueue_on(&self, id: usize, p: Pending, now: TimeMs, ctx: &mut RouteCtx) {
@@ -525,8 +597,9 @@ impl PolyServeRouter {
         match ctx.cluster.assign_of(inst) {
             TierAssign::Tier(k) => {
                 let i = &ctx.cluster.instances[inst];
+                let q = self.pending_idx(i.model, k);
                 if i.is_empty() {
-                    if self.pending[k].is_empty() {
+                    if self.pending[q].is_empty() {
                         ctx.cluster.release(inst, now);
                         self.stats.releases += 1;
                     }
@@ -565,6 +638,7 @@ impl PolyServeRouter {
         ctx: &RouteCtx,
     ) -> Option<f64> {
         let i = &ctx.cluster.instances[inst];
+        let prof = self.profile_for(ctx.profile, i.model);
         let wait = if self.features.wait_time_aware {
             i.wait_ms(now)
         } else {
@@ -594,7 +668,7 @@ impl PolyServeRouter {
 
         // Per-chunk time estimate at the packed budget.
         let eff = (self.prefill_budget as f64 * PF_TOKEN_RATIO).ceil() as u64;
-        let chunk_ms = ctx.profile.iter_ms(eff.max(1), self.prefill_budget);
+        let chunk_ms = prof.iter_ms(eff.max(1), self.prefill_budget);
         let ms_per_token = chunk_ms / self.prefill_budget as f64;
         let mut t = now as f64 + wait as f64;
         let mut new_finish = f64::INFINITY;
@@ -618,16 +692,18 @@ impl PolyServeRouter {
     /// if PolyServe predicts a TTFT violation").
     fn place_prefill_pd(&self, now: TimeMs, req_idx: usize, ctx: &mut RouteCtx) -> usize {
         let r = &ctx.requests[req_idx];
+        let model = r.req.model;
         let own_tokens = r.req.prefill_len as u64;
         let deadline =
             (r.req.arrival_ms + r.req.slo.ttft_ms).saturating_sub(r.req.slo.tpot_ms);
         // Collect-free: the role view feeds the scoring loop directly
         // (same ascending id order as the old materialized list). The
         // first candidate always seeds the fallback, so the old
-        // `ids[0]` initialization is subsumed.
+        // `ids[0]` initialization is subsumed. Candidates come from the
+        // request's model only — the hard placement constraint.
         let mut best_feasible: Option<(u64, usize)> = None; // (load, id)
         let mut best_fallback: Option<(f64, usize)> = None; // (finish/est, id)
-        for id in ctx.cluster.with_role(Role::Prefill) {
+        for id in ctx.cluster.with_role_of(model, Role::Prefill) {
             let queued = ctx.cluster.instances[id].queued_prefill_tokens(ctx.requests);
             let fallback_est = best_fallback.map_or(f64::INFINITY, |(e, _)| e);
             match self.prefill_queue_feasible(now, id, own_tokens, deadline, ctx) {
@@ -668,16 +744,18 @@ impl PolyServeRouter {
 
 impl Router for PolyServeRouter {
     fn route_new(&mut self, now: TimeMs, req_idx: usize, ctx: &mut RouteCtx) -> Option<usize> {
+        self.ensure_models(ctx);
         match self.mode {
             ServingMode::PdDisaggregated => Some(self.place_prefill_pd(now, req_idx, ctx)),
             ServingMode::Colocated => {
                 if let Some(id) = self.placement_ladder(now, req_idx, false, ctx) {
                     return Some(id);
                 }
-                let k = ctx.requests[req_idx].tier;
+                let r = &ctx.requests[req_idx];
+                let q = self.pending_idx(r.req.model, r.tier);
                 self.stats.pends += 1;
                 self.pending_total += 1;
-                self.pending[k].push_back(Pending {
+                self.pending[q].push_back(Pending {
                     req_idx,
                     decode_phase: false,
                 });
@@ -690,13 +768,15 @@ impl Router for PolyServeRouter {
         // PD prefill→decode handoffs, and — in either serving mode —
         // decode requests evicted from a draining server (scale-in KV
         // migration) that need a surviving host.
+        self.ensure_models(ctx);
         if let Some(id) = self.placement_ladder(now, req_idx, true, ctx) {
             return Some(id);
         }
-        let k = ctx.requests[req_idx].tier;
+        let r = &ctx.requests[req_idx];
+        let q = self.pending_idx(r.req.model, r.tier);
         self.stats.pends += 1;
         self.pending_total += 1;
-        self.pending[k].push_back(Pending {
+        self.pending[q].push_back(Pending {
             req_idx,
             decode_phase: true,
         });
@@ -744,9 +824,10 @@ impl Router for PolyServeRouter {
                     TierAssign::Tier(k) => self.tiers.tier(k).tpot_ms,
                     _ => self.tiers.tier(self.tiers.len() - 1).tpot_ms,
                 };
-                let est = load_estimate(i, ctx.requests, ctx.profile);
+                let prof = self.profile_for(ctx.profile, i.model);
+                let est = load_estimate(i, ctx.requests, prof);
                 admission::max_chunk_under(
-                    ctx.profile,
+                    prof,
                     tpot as f64,
                     est.batch,
                     est.kv_now,

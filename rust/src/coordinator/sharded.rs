@@ -193,6 +193,7 @@ mod tests {
                     prefill_len: 100,
                     decode_len: 50,
                     slo: Slo::new(500, 50),
+                    model: 0,
                 }));
                 let mut r = crate::sim::SimRequest::new(req, 2);
                 r.prefill_done = 100;

@@ -27,6 +27,7 @@
 //! last few percent anyway ([`super::admission::SAFETY`]).
 
 use super::admission::SAFETY;
+use crate::analysis::ServingMode;
 use crate::config::SimConfig;
 use crate::profile::ProfileTable;
 use crate::slo::TierSet;
@@ -123,6 +124,40 @@ pub fn required_coloc_fleet(
         required_decode_fleet_f(profile, tiers, tier_rates_rps, avg_decode_len, avg_kv_per_req);
     let pf_factor = 1.0 + PF_TOKEN_RATIO * avg_prefill_len.max(0.0) / avg_decode_len.max(1.0);
     ((decode * pf_factor).ceil() as usize).max(1)
+}
+
+/// Serving-mode dispatch over [`required_decode_fleet`] /
+/// [`required_coloc_fleet`] — the per-model entry point: the
+/// multi-model planner sizes each registered model's sub-fleet by
+/// calling this once per model with *that model's* profile table and
+/// arrival shares, so per-model sizing and the single-model scalers
+/// can never disagree about what "enough capacity" means.
+pub fn required_fleet(
+    profile: &ProfileTable,
+    mode: ServingMode,
+    tiers: &TierSet,
+    tier_rates_rps: &[f64],
+    avg_prefill_len: f64,
+    avg_decode_len: f64,
+    avg_kv_per_req: u64,
+) -> usize {
+    match mode {
+        ServingMode::PdDisaggregated => required_decode_fleet(
+            profile,
+            tiers,
+            tier_rates_rps,
+            avg_decode_len,
+            avg_kv_per_req,
+        ),
+        ServingMode::Colocated => required_coloc_fleet(
+            profile,
+            tiers,
+            tier_rates_rps,
+            avg_prefill_len,
+            avg_decode_len,
+            avg_kv_per_req,
+        ),
+    }
 }
 
 /// PD prefill-cluster requirement at total arrival rate

@@ -3,9 +3,9 @@
 
 use crate::analysis;
 use crate::config::{Policy, SimConfig};
-use crate::coordinator::{make_autoscaler, make_router};
+use crate::coordinator::{make_autoscaler_with_models, make_router_with_models};
 use crate::metrics::AttainmentCurve;
-use crate::model::CostModel;
+use crate::model::{CostModel, ModelRegistry};
 use crate::profile::ProfileTable;
 use crate::sim::{Cluster, ElasticParams, PrefillElastic, SimParams, SimResult, Simulation};
 use crate::util::rng::Rng;
@@ -20,10 +20,16 @@ pub use crate::coordinator::sizing::size_elastic_pd_cell;
 pub struct Experiment {
     /// The (auto-resolved) configuration of the cell.
     pub cfg: SimConfig,
-    /// Ground-truth hardware model.
+    /// Ground-truth hardware model of model 0 (the run's anchor; the
+    /// registry carries the rest for multi-model fleets).
     pub cost_model: CostModel,
-    /// Profiling table the router sees.
+    /// Profiling table the router sees for model 0.
     pub profile: ProfileTable,
+    /// Model catalog of the run. Single-entry (`default_single`) for
+    /// the classic configuration — which keeps every decision
+    /// bit-for-bit identical to the pre-registry harness — or the
+    /// built-in pair when `cfg.models.mix` lists two weights.
+    pub models: ModelRegistry,
     /// Generated request stream.
     pub workload: Workload,
     /// Optimal-goodput bound for this trace + SLO mix, req/s.
@@ -62,8 +68,16 @@ impl Experiment {
     /// Build workload + profile for a config. The request rate is
     /// `rate_frac_of_optimal × optimal` unless `rate_rps` overrides.
     pub fn prepare(cfg: &SimConfig) -> Experiment {
-        let cm = CostModel::h200_llama8b();
-        let profile = ProfileTable::from_cost_model(&cm);
+        let models = if cfg.models.is_multi() {
+            ModelRegistry::builtin_pair()
+        } else {
+            ModelRegistry::default_single()
+        };
+        // Model 0 anchors the probe passes (optimal-goodput bound and
+        // prefill auto-sizing) in both branches, so the single-model
+        // RNG stream — and therefore the workload — never shifts.
+        let cm = models.entry(0).cost_model.clone();
+        let profile = models.entry(0).profile.clone();
         let gen = TraceGenerator::new(cfg.trace);
         let mut rng = Rng::new(cfg.seed);
 
@@ -94,7 +108,7 @@ impl Experiment {
             .unwrap_or(optimal_rps * cfg.rate_frac_of_optimal)
             .max(0.001);
         let mut rng2 = Rng::new(cfg.seed ^ 0x5EED);
-        let workload = match cfg.diurnal {
+        let mut workload = match cfg.diurnal {
             Some(d) => {
                 // Diurnal arrivals at the same *mean* rate: the elastic
                 // fleet gets a demand curve to chase while rate-based
@@ -112,10 +126,18 @@ impl Experiment {
                 gen.generate(cfg.requests, rate_rps, &cfg.tier_dist, &achievable, &mut rng2)
             }
         };
+        if models.is_multi() {
+            // Dedicated RNG stream: the mix assignment must not perturb
+            // the workload generator's draws (and is skipped entirely —
+            // stream and all — for single-model runs).
+            let mut rng3 = Rng::new(cfg.seed ^ 0x30DE15);
+            workload.assign_model_mix(&cfg.models.mix, &mut rng3);
+        }
         Experiment {
             cfg,
             cost_model: cm,
             profile,
+            models,
             workload,
             optimal_rps,
             rate_rps,
@@ -136,14 +158,26 @@ impl Experiment {
         // `cfg.instances` is the *initial* fleet; the elastic bounds
         // only constrain scaling transitions (they apply to the
         // scalable role, which under PD is a subset of the fleet).
-        let mut cluster = Cluster::build(
-            self.cfg.mode,
-            self.cfg.instances,
-            self.cfg.prefill_frac,
-            self.cfg.tiers.len(),
-            &self.cost_model,
-            polyserve_managed,
-        );
+        let mut cluster = if self.models.is_multi() {
+            let counts = split_mix(self.cfg.instances, &self.cfg.models.mix);
+            Cluster::build_models(
+                self.cfg.mode,
+                &counts,
+                self.cfg.prefill_frac,
+                self.cfg.tiers.len(),
+                &self.models.instance_caps(),
+                polyserve_managed,
+            )
+        } else {
+            Cluster::build(
+                self.cfg.mode,
+                self.cfg.instances,
+                self.cfg.prefill_frac,
+                self.cfg.tiers.len(),
+                &self.cost_model,
+                polyserve_managed,
+            )
+        };
         if self.scan_reference {
             cluster.set_scan_reference(true);
         } else if self.indexed_reference {
@@ -159,6 +193,8 @@ impl Experiment {
                 provision_delay_ms: self.cfg.elastic.provision_delay_ms,
                 scale_eval_ms: self.cfg.elastic.scale_eval_ms.max(1),
                 migration: self.cfg.elastic.migration,
+                migration_batching: self.cfg.elastic.migration_batching,
+                model_swap_delay_ms: self.cfg.models.swap_delay_ms,
                 prefill: (self.cfg.elastic.prefill_elastic
                     && self.cfg.mode == crate::analysis::ServingMode::PdDisaggregated)
                     .then(|| PrefillElastic {
@@ -168,7 +204,7 @@ impl Experiment {
             }),
             ..Default::default()
         };
-        let sim = Simulation::new(
+        let mut sim = Simulation::new(
             params,
             self.cost_model.clone(),
             &self.profile,
@@ -176,8 +212,19 @@ impl Experiment {
             cluster,
             &self.cfg.tiers,
         );
-        let mut router = make_router(&self.cfg, self.workload.avg_decode_len());
-        let mut scaler = if elastic { make_autoscaler(&self.cfg) } else { None };
+        let profiles = if self.models.is_multi() {
+            sim = sim.with_cost_models(self.models.cost_models());
+            self.models.profiles()
+        } else {
+            Vec::new()
+        };
+        let mut router =
+            make_router_with_models(&self.cfg, self.workload.avg_decode_len(), &profiles);
+        let mut scaler = if elastic {
+            make_autoscaler_with_models(&self.cfg, &profiles)
+        } else {
+            None
+        };
         let res = match scaler.as_deref_mut() {
             Some(sc) => sim.run_elastic(router.as_mut(), Some(sc)),
             None => sim.run(router.as_mut()),
@@ -193,6 +240,35 @@ impl Experiment {
 /// Convenience: run one config end to end.
 pub fn run_sim(cfg: &SimConfig) -> SimResult {
     Experiment::prepare(cfg).run()
+}
+
+/// Split `total` instances across models by largest-remainder
+/// apportionment of `weights`, guaranteeing every model at least one
+/// instance (a model with zero servers could never serve its
+/// requests). Deterministic: remainder ties break toward the lower
+/// model id.
+pub fn split_mix(total: usize, weights: &[f64]) -> Vec<usize> {
+    assert!(!weights.is_empty(), "need at least one mix weight");
+    let m = weights.len();
+    assert!(total >= m, "need at least one instance per model");
+    let sum: f64 = weights.iter().sum();
+    let rem = total - m;
+    let quotas: Vec<f64> = weights.iter().map(|w| w / sum * rem as f64).collect();
+    let floors: Vec<usize> = quotas.iter().map(|q| q.floor() as usize).collect();
+    let mut counts: Vec<usize> = floors.iter().map(|f| f + 1).collect();
+    let mut assigned: usize = floors.iter().sum();
+    let mut order: Vec<usize> = (0..m).collect();
+    order.sort_by(|&a, &b| {
+        let (ra, rb) = (quotas[a] - floors[a] as f64, quotas[b] - floors[b] as f64);
+        rb.partial_cmp(&ra).unwrap().then(a.cmp(&b))
+    });
+    let mut i = 0;
+    while assigned < rem {
+        counts[order[i % m]] += 1;
+        assigned += 1;
+        i += 1;
+    }
+    counts
 }
 
 /// Share of the per-request optimal cost spent in prefill, with 1.25×

@@ -45,6 +45,9 @@ fn main() {
                 .opt("diurnal-ratio", "", "diurnal peak:trough ratio (enables diurnal arrivals)")
                 .opt("diurnal-period-s", "600", "diurnal period in seconds")
                 .flag("migrate", "scale-in KV migration: evict drainers' decode residents")
+                .flag("migrate-batch", "coalesce same-destination migration KV streams")
+                .opt("model-mix", "", "comma weights, one per model (2 = built-in pair)")
+                .opt("swap-delay-ms", "", "model hot-swap weight-reload delay")
                 .flag("verbose", "per-tier breakdown"),
         )
         .command(
@@ -160,6 +163,19 @@ fn sim_config_from(args: &Args) -> Result<SimConfig, String> {
     if args.flag("migrate") {
         cfg.elastic.migration = true;
     }
+    if args.flag("migrate-batch") {
+        cfg.elastic.migration_batching = true;
+    }
+    if !args.str_or("model-mix", "").is_empty() {
+        cfg.models.mix = args
+            .str_or("model-mix", "")
+            .split(',')
+            .filter_map(|s| s.trim().parse().ok())
+            .collect();
+    }
+    if !args.str_or("swap-delay-ms", "").is_empty() {
+        cfg.models.swap_delay_ms = args.u64_or("swap-delay-ms", cfg.models.swap_delay_ms);
+    }
     cfg.validate().map_err(|e| e.to_string())?;
     Ok(cfg)
 }
@@ -200,6 +216,35 @@ fn cmd_simulate(args: &Args) -> i32 {
         res.cost.cost_per_request_s(),
         res.cost.utilization(),
     );
+    if exp.models.is_multi() {
+        for (m, entry) in exp.models.entries().iter().enumerate() {
+            let (total, attained) =
+                res.attainment.per_model.get(m).copied().unwrap_or((0, 0));
+            let served = res.cost.requests_served_per_model.get(m).copied().unwrap_or(0);
+            let bill_ms = res.cost.active_instance_ms_per_model.get(m).copied().unwrap_or(0);
+            let att = if total == 0 { 1.0 } else { attained as f64 / total as f64 };
+            print!(
+                "  model {m} ({}): attainment {att:.3} ({attained}/{total}), served {served}, bill {:.1} inst·s",
+                entry.spec.name,
+                bill_ms as f64 / 1000.0,
+            );
+            if !res.fleet.is_empty() {
+                print!(
+                    ", fleet mean {:.1} / peak {} / trough {}",
+                    res.fleet.mean_model(m),
+                    res.fleet.peak_model(m),
+                    res.fleet.trough_model(m),
+                );
+            }
+            println!();
+        }
+        if res.migration.model_swaps > 0 {
+            println!(
+                "  model hot-swaps: {} (drain + {} ms weight reload each)",
+                res.migration.model_swaps, cfg.models.swap_delay_ms,
+            );
+        }
+    }
     if !res.fleet.is_empty() {
         println!(
             "elastic fleet ({}): active mean {:.1} / peak {} / trough {}, bill {:.1} inst·s ({:.3} inst·s/req, {:.2} inst·s per 1k goodput tokens)",

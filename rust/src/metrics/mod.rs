@@ -1,6 +1,7 @@
 //! Evaluation metrics: per-request outcomes, DSLO attainment (overall
 //! and per TPOT tier), goodput, and instance·second cost accounting.
 
+use crate::model::ModelId;
 use crate::slo::{Slo, TimeMs};
 use crate::util::stats::{crossing_down, Summary};
 
@@ -10,6 +11,9 @@ use crate::util::stats::{crossing_down, Summary};
 pub struct RequestOutcome {
     /// Workload request id.
     pub id: u64,
+    /// Registry model the request was served by (0 on single-model
+    /// fleets).
+    pub model: ModelId,
     /// The request's SLO.
     pub slo: Slo,
     /// Arrival time, ms.
@@ -52,12 +56,19 @@ pub struct AttainmentReport {
     pub attained: usize,
     /// (tpot_ms, total, attained) per tier, sorted by tpot.
     pub per_tier: Vec<(u64, usize, usize)>,
+    /// (total, attained) per registry model, indexed by [`ModelId`]
+    /// (one entry on single-model fleets; same BE exclusion as the
+    /// overall counts).
+    pub per_model: Vec<(usize, usize)>,
 }
 
 impl AttainmentReport {
-    /// Aggregate per-request outcomes into overall + per-tier attainment.
+    /// Aggregate per-request outcomes into overall + per-tier +
+    /// per-model attainment.
     pub fn from_outcomes(outcomes: &[RequestOutcome]) -> AttainmentReport {
         let mut per_tier: Vec<(u64, usize, usize)> = Vec::new();
+        let num_models = outcomes.iter().map(|o| o.model + 1).max().unwrap_or(0);
+        let mut per_model = vec![(0usize, 0usize); num_models];
         let mut total = 0usize;
         let mut attained = 0usize;
         for o in outcomes {
@@ -65,8 +76,10 @@ impl AttainmentReport {
                 continue; // BE requests don't count toward SLO attainment
             }
             total += 1;
+            per_model[o.model].0 += 1;
             if o.attained {
                 attained += 1;
+                per_model[o.model].1 += 1;
             }
             match per_tier.binary_search_by_key(&o.slo.tpot_ms, |e| e.0) {
                 Ok(i) => {
@@ -84,7 +97,20 @@ impl AttainmentReport {
             total,
             attained,
             per_tier,
+            per_model,
         }
+    }
+
+    /// Attainment fraction of registry model `m` (`None` if the run
+    /// never finished a request of that model).
+    pub fn model_attainment(&self, m: ModelId) -> Option<f64> {
+        self.per_model.get(m).map(|&(t, a)| {
+            if t == 0 {
+                1.0
+            } else {
+                a as f64 / t as f64
+            }
+        })
     }
 
     /// Overall DSLO attainment fraction in [0, 1].
@@ -162,6 +188,14 @@ pub struct CostAccount {
     /// Output tokens from SLO-attaining requests only — the "goodput
     /// tokens" an operator is actually paid for.
     pub goodput_tokens: u64,
+    /// `active_instance_ms` split by registry model, indexed by
+    /// [`ModelId`]. An instance's whole existence bills against the
+    /// model it *ended* the run loaded with (hot swaps reassign the
+    /// bill, matching how a cloud invoice lists the final deployment);
+    /// one entry on single-model fleets.
+    pub active_instance_ms_per_model: Vec<u64>,
+    /// `requests_served` split by registry model.
+    pub requests_served_per_model: Vec<u64>,
 }
 
 impl CostAccount {
@@ -207,6 +241,10 @@ pub struct FleetSample {
     pub t_ms: TimeMs,
     /// Active instances assigned to each TPOT tier (tightest first).
     pub per_tier: Vec<usize>,
+    /// Active instances loaded with each registry model, indexed by
+    /// [`ModelId`] (the per-model fleet series; one entry on
+    /// single-model fleets).
+    pub per_model: Vec<usize>,
     /// Active instances idling in the best-effort pool.
     pub best_effort: usize,
     /// All active instances (any role / assignment).
@@ -282,6 +320,30 @@ impl FleetSeries {
         self.time_weighted_mean(|s| s.active_prefill)
     }
 
+    /// Time-weighted mean active instances loaded with model `m` (0.0
+    /// when the series never sampled that model).
+    pub fn mean_model(&self, m: ModelId) -> f64 {
+        self.time_weighted_mean(|s| s.per_model.get(m).copied().unwrap_or(0))
+    }
+
+    /// Largest active sub-fleet observed for model `m`.
+    pub fn peak_model(&self, m: ModelId) -> usize {
+        self.samples
+            .iter()
+            .map(|s| s.per_model.get(m).copied().unwrap_or(0))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Smallest active sub-fleet observed for model `m`.
+    pub fn trough_model(&self, m: ModelId) -> usize {
+        self.samples
+            .iter()
+            .map(|s| s.per_model.get(m).copied().unwrap_or(0))
+            .min()
+            .unwrap_or(0)
+    }
+
     fn time_weighted_mean(&self, f: impl Fn(&FleetSample) -> usize) -> f64 {
         if self.samples.len() < 2 {
             return self.samples.first().map(|s| f(s) as f64).unwrap_or(0.0);
@@ -349,6 +411,11 @@ pub struct MigrationStats {
     /// Per-drain begin_drain→retire latency (ms). Instances still
     /// draining when the run ends are censored at the simulated span.
     pub drain_latency_ms: Vec<u64>,
+    /// Model hot-swaps completed (drain → reload under a new model).
+    pub model_swaps: u64,
+    /// Bulk same-`(source, dest)` migration transfers issued by the
+    /// batched scale-in path (0 unless `migration_batching` is on).
+    pub batched_transfers: u64,
 }
 
 impl MigrationStats {
@@ -404,6 +471,7 @@ mod tests {
     fn outcome(tpot: u64, attained: bool) -> RequestOutcome {
         RequestOutcome {
             id: 0,
+            model: 0,
             slo: Slo::new(500, tpot),
             arrival_ms: 0,
             first_token_ms: Some(100),
@@ -430,6 +498,20 @@ mod tests {
         assert_eq!(r.tier_attainment(50), Some(1.0));
         assert_eq!(r.tier_attainment(100), None);
         assert!((r.worst_tier() - 0.5).abs() < 1e-9);
+        assert_eq!(r.per_model, vec![(4, 3)]);
+        assert_eq!(r.model_attainment(0), Some(0.75));
+        assert_eq!(r.model_attainment(1), None);
+    }
+
+    #[test]
+    fn report_splits_per_model() {
+        let mut o1 = outcome(20, true);
+        o1.model = 1;
+        let outcomes = vec![outcome(20, false), o1];
+        let r = AttainmentReport::from_outcomes(&outcomes);
+        assert_eq!(r.per_model, vec![(1, 0), (1, 1)]);
+        assert_eq!(r.model_attainment(0), Some(0.0));
+        assert_eq!(r.model_attainment(1), Some(1.0));
     }
 
     #[test]
@@ -460,6 +542,8 @@ mod tests {
             requests_served: 5,
             tokens_total: 4_000,
             goodput_tokens: 2_000,
+            active_instance_ms_per_model: vec![20_000],
+            requests_served_per_model: vec![5],
         };
         assert!((c.cost_per_request_s() - 2.0).abs() < 1e-9);
         assert!((c.active_cost_per_request_s() - 4.0).abs() < 1e-9);
@@ -476,6 +560,7 @@ mod tests {
         let sample = |t_ms, active| FleetSample {
             t_ms,
             per_tier: vec![active / 2, active - active / 2],
+            per_model: vec![active],
             best_effort: 0,
             active,
             active_prefill: active / 4,
@@ -523,6 +608,8 @@ mod tests {
             migrated_prefill_jobs: 0,
             migrated_kv_tokens: 4_500,
             drain_latency_ms: vec![100, 900, 2_500, 40_000],
+            model_swaps: 0,
+            batched_transfers: 0,
         };
         assert_eq!(m.drains(), 4);
         assert!((m.mean_drain_latency_ms() - 10_875.0).abs() < 1e-9);

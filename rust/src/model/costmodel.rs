@@ -67,6 +67,27 @@ impl CostModel {
         }
     }
 
+    /// An H200 calibration for the larger Qwen2.5-32B GQA config
+    /// ([`crate::model::ModelSpec::qwen25_32b`]) — the second built-in
+    /// model of the multi-model registry. Scaled from the 8B anchor by
+    /// first principles rather than re-profiled: ~4× the weight bytes
+    /// (64 layers × 5120 hidden vs 32 × 4096) pushes the weight-load
+    /// floor and per-token GEMM cost up ~4×, the per-layer KV read cost
+    /// doubles with layer count (same 8 KV heads × 128 head-dim per
+    /// layer), and the KV pool shrinks to roughly what an H200 has left
+    /// after 32B bf16 weights (~64 GB), ~256k tokens at 256 KiB/token.
+    pub fn h200_qwen32b() -> CostModel {
+        CostModel {
+            t_fixed_ms: 8.0,
+            t_weight_ms: 40.0,
+            c_gemm_ms_per_token: 0.5333,
+            c_gemm_prefill_ms_per_token: 0.1333,
+            c_attn_ms_per_kv_token: 6.667e-5,
+            kv_capacity_tokens: 256_000,
+            max_token_batch: 2048,
+        }
+    }
+
     /// Variant with the KV-capacity constraint lifted — the regime the
     /// paper's Fig 3/4 plots implicitly assume (its co-location batch
     /// sizes exceed any single-GPU KV capacity; see EXPERIMENTS.md).
@@ -302,6 +323,20 @@ mod tests {
         let per_tok_150 = mm.iter_ms(150, 150 * 3000) / 150.0;
         let ratio = per_tok_50 / per_tok_150;
         assert!((1.35..=1.65).contains(&ratio), "ratio = {ratio}");
+    }
+
+    #[test]
+    fn qwen32b_profile_is_distinct_and_slower() {
+        // The registry's second model must be meaningfully more
+        // expensive than the 8B anchor on every axis the router and
+        // sizers consume, or a model mix degenerates to one profile.
+        let small = CostModel::h200_llama8b();
+        let big = CostModel::h200_qwen32b();
+        assert!(big.t_weight_ms > 2.0 * small.t_weight_ms);
+        assert!(big.iter_ms(1, 1) > 2.0 * small.iter_ms(1, 1));
+        assert!(big.kv_capacity_tokens < small.kv_capacity_tokens / 2);
+        // Same TPOT target → strictly smaller feasible decode batch.
+        assert!(big.max_decode_batch(60.0, 3000) < small.max_decode_batch(60.0, 3000));
     }
 
     #[test]

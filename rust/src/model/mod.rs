@@ -8,8 +8,13 @@
 //!   (DESIGN.md §3) with the paper's GEMM / decode-attention / prefill
 //!   components.
 
+//! * [`registry`] — the `ModelId`-keyed catalog bundling spec + cost
+//!   model + profile per servable model (multi-model fleet serving).
+
 pub mod spec;
 pub mod costmodel;
+pub mod registry;
 
 pub use costmodel::CostModel;
+pub use registry::{ModelEntry, ModelId, ModelRegistry};
 pub use spec::ModelSpec;

@@ -1,0 +1,157 @@
+//! Model registry: the `ModelId`-keyed catalog of everything the fleet
+//! can serve.
+//!
+//! Production multi-SLO fleets serve several models with distinct cost
+//! profiles on one pool (cf. PolarisLLM). The registry bundles, per
+//! model, the architecture spec, the H200-calibrated [`CostModel`] the
+//! simulator executes, and the sampled [`ProfileTable`] the router and
+//! autoscalers consult — so "which model" becomes a first-class
+//! placement axis next to the SLO tier.
+//!
+//! `ModelId` is a dense index into the registry (model 0 is always the
+//! single-model default), which lets the cluster keep flat
+//! `model × tier` index arrays instead of hash maps on the hot path.
+
+use crate::model::{CostModel, ModelSpec};
+use crate::profile::ProfileTable;
+
+/// Dense identifier of a model in the [`ModelRegistry`] (0-based).
+/// Model 0 is the default: single-model configurations never mention
+/// any other id, which is what keeps them bit-for-bit identical to the
+/// pre-registry code paths.
+pub type ModelId = usize;
+
+/// One registered model: spec + execution cost model + profiling table.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    /// Architecture description (layer count, GQA shape, …).
+    pub spec: ModelSpec,
+    /// Ground-truth hardware cost model the simulator executes.
+    pub cost_model: CostModel,
+    /// Sampled profiling table the scheduler consults (§3: the router
+    /// only ever sees the table, never the analytic model).
+    pub profile: ProfileTable,
+}
+
+impl ModelEntry {
+    /// Build an entry from a spec + cost model, sampling the profile
+    /// table from the cost model.
+    pub fn new(spec: ModelSpec, cost_model: CostModel) -> ModelEntry {
+        let profile = ProfileTable::from_cost_model(&cost_model);
+        ModelEntry {
+            spec,
+            cost_model,
+            profile,
+        }
+    }
+}
+
+/// The fleet's model catalog, indexed by [`ModelId`].
+#[derive(Debug, Clone)]
+pub struct ModelRegistry {
+    entries: Vec<ModelEntry>,
+}
+
+impl ModelRegistry {
+    /// Registry with exactly one model — the single-model default that
+    /// every pre-registry configuration maps onto.
+    pub fn single(spec: ModelSpec, cost_model: CostModel) -> ModelRegistry {
+        ModelRegistry {
+            entries: vec![ModelEntry::new(spec, cost_model)],
+        }
+    }
+
+    /// The single-model default registry: LLaMA-3.1-8B on H200, the
+    /// calibration the paper profiles.
+    pub fn default_single() -> ModelRegistry {
+        ModelRegistry::single(ModelSpec::llama31_8b(), CostModel::h200_llama8b())
+    }
+
+    /// The built-in two-model fleet: model 0 = LLaMA-3.1-8B (the
+    /// paper's anchor), model 1 = Qwen2.5-32B (larger GQA config with
+    /// a distinct — ~4× slower, KV-tighter — profile).
+    pub fn builtin_pair() -> ModelRegistry {
+        ModelRegistry {
+            entries: vec![
+                ModelEntry::new(ModelSpec::llama31_8b(), CostModel::h200_llama8b()),
+                ModelEntry::new(ModelSpec::qwen25_32b(), CostModel::h200_qwen32b()),
+            ],
+        }
+    }
+
+    /// Number of registered models.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when the registry holds no models (never the case for the
+    /// built-in constructors; exists for `len`/`is_empty` symmetry).
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// True when more than one model is registered — the switch that
+    /// activates the multi-model code paths.
+    pub fn is_multi(&self) -> bool {
+        self.entries.len() > 1
+    }
+
+    /// The entry for `model`. Panics on an unregistered id — model ids
+    /// are dense and validated at config time.
+    pub fn entry(&self, model: ModelId) -> &ModelEntry {
+        &self.entries[model]
+    }
+
+    /// All entries in id order.
+    pub fn entries(&self) -> &[ModelEntry] {
+        &self.entries
+    }
+
+    /// Per-model cost models in id order (cloned — the simulator owns
+    /// its copy).
+    pub fn cost_models(&self) -> Vec<CostModel> {
+        self.entries.iter().map(|e| e.cost_model.clone()).collect()
+    }
+
+    /// Per-model profile tables in id order (cloned — routers and
+    /// autoscalers own their copies).
+    pub fn profiles(&self) -> Vec<ProfileTable> {
+        self.entries.iter().map(|e| e.profile.clone()).collect()
+    }
+
+    /// Per-model `(kv_capacity_tokens, max_token_batch)` instance caps
+    /// in id order — what [`crate::sim::Cluster::build_models`] needs
+    /// to size each instance for the model it loads.
+    pub fn instance_caps(&self) -> Vec<(u64, u64)> {
+        self.entries
+            .iter()
+            .map(|e| (e.cost_model.kv_capacity_tokens, e.cost_model.max_token_batch))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_pair_has_distinct_profiles() {
+        let reg = ModelRegistry::builtin_pair();
+        assert_eq!(reg.len(), 2);
+        assert!(reg.is_multi());
+        assert_ne!(reg.entry(0).cost_model, reg.entry(1).cost_model);
+        assert_ne!(reg.entry(0).spec.name, reg.entry(1).spec.name);
+        let caps = reg.instance_caps();
+        assert!(caps[1].0 < caps[0].0, "32B model has tighter KV: {caps:?}");
+    }
+
+    #[test]
+    fn single_default_is_the_paper_anchor() {
+        let reg = ModelRegistry::default_single();
+        assert_eq!(reg.len(), 1);
+        assert!(!reg.is_multi());
+        assert_eq!(reg.entry(0).cost_model, CostModel::h200_llama8b());
+        assert_eq!(reg.cost_models().len(), 1);
+        assert_eq!(reg.profiles().len(), 1);
+    }
+}

@@ -40,6 +40,26 @@ impl ModelSpec {
         }
     }
 
+    /// Qwen2.5-32B — the larger GQA config of the built-in multi-model
+    /// registry (64 layers × 5120 hidden, 40 query / 8 KV heads,
+    /// SwiGLU FFN 27648, 152k vocab). Same architecture family as the
+    /// 8B anchor but ~4× the weights and 2× the per-token KV bytes, so
+    /// its cost profile ([`crate::model::CostModel::h200_qwen32b`]) is
+    /// meaningfully distinct — the point of a model-mix fleet.
+    pub fn qwen25_32b() -> ModelSpec {
+        ModelSpec {
+            name: "qwen2.5-32b".into(),
+            num_layers: 64,
+            hidden: 5120,
+            num_q_heads: 40,
+            num_kv_heads: 8,
+            head_dim: 128,
+            ffn_hidden: 27648,
+            vocab: 152_064,
+            bytes_per_elem: 2,
+        }
+    }
+
     /// The small serving model compiled to HLO for the real PJRT path
     /// (examples/, rust/src/server). Dimensionally faithful — GQA 4:2,
     /// SwiGLU, RoPE — but sized to run a decode step in ~ms on CPU.
@@ -123,6 +143,25 @@ mod tests {
         let m = ModelSpec::llama31_8b();
         let gb = m.weight_bytes() as f64 / 1e9;
         assert!((15.0..17.5).contains(&gb), "weights {gb:.1} GB");
+    }
+
+    #[test]
+    fn qwen32b_params_about_32b() {
+        let m = ModelSpec::qwen25_32b();
+        let p = m.param_count() as f64;
+        assert!(
+            (31.0e9..34.0e9).contains(&p),
+            "param count {p:.3e} should be ~32B"
+        );
+    }
+
+    #[test]
+    fn qwen32b_kv_bytes_double_llama8b() {
+        // 64 layers vs 32, same 8 KV heads × 128 head-dim → 2× per token.
+        assert_eq!(
+            ModelSpec::qwen25_32b().kv_bytes_per_token(),
+            2 * ModelSpec::llama31_8b().kv_bytes_per_token()
+        );
     }
 
     #[test]

@@ -14,10 +14,20 @@
 //! query (`in_tier`, `best_effort_pool`, `with_role`) returns only
 //! instances whose lifecycle accepts new work.
 
+//! **Multi-model fleets**: every index above is additionally keyed by
+//! the instance's loaded [`ModelId`] — tier sets live in a flat
+//! `model × tier` slot array, the best-effort / pending pools and their
+//! ordered twins are per-model vectors, and the unplaced-demand
+//! counters split per model. A single-model cluster (`num_models == 1`)
+//! degenerates to exactly the per-tier layout of PRs 4–6: the aggregate
+//! views (`in_tier`, `best_effort_pool`, …) chain the per-model sets in
+//! model order, which for one model is the identical sequence — the
+//! bit-for-bit identity the digest tests enforce.
+
 use super::instance::{Instance, Lifecycle, Role};
 use super::SimRequest;
 use crate::analysis::ServingMode;
-use crate::model::CostModel;
+use crate::model::{CostModel, ModelId};
 use crate::slo::TimeMs;
 use std::cmp::Reverse;
 use std::collections::BTreeSet;
@@ -91,13 +101,22 @@ pub struct Cluster {
     assign: Vec<TierAssign>,
     /// Number of TPOT tiers.
     pub num_tiers: usize,
+    /// Number of registry models this fleet serves (1 for every
+    /// pre-registry configuration).
+    pub num_models: usize,
     /// Tier-managed (PolyServe) fleet: newly provisioned instances join
     /// the best-effort pool; static fleets get `Static` assignment.
     pub managed: bool,
-    /// Per-instance KV capacity for newly provisioned instances.
+    /// Per-instance KV capacity for newly provisioned instances of
+    /// model 0 (kept for single-model callers; multi-model provisioning
+    /// reads `model_caps`).
     pub kv_capacity: u64,
-    /// Per-instance max token batch for newly provisioned instances.
+    /// Per-instance max token batch for newly provisioned instances of
+    /// model 0 (see `kv_capacity`).
     pub max_token_batch: u64,
+    /// Per-model `(kv_capacity, max_token_batch)` instance caps — what
+    /// a provision or model swap sizes the instance with.
+    model_caps: Vec<(u64, u64)>,
     /// Instances the router fed while holding the ctx — the simulator
     /// must try to (re)start their iterations.
     kicked: Vec<usize>,
@@ -108,12 +127,16 @@ pub struct Cluster {
     // enumerate-the-`assign`-vec scans, so `pick_by_gradient`'s
     // `(batch, kv, id)` tie-break and every placement outcome are
     // bit-for-bit unchanged.
-    /// Ids assigned `Tier(k)`, per tier.
+    /// Ids assigned `Tier(k)`, per `(model, tier)` flat slot
+    /// (`model * tiers_cap + k`).
     tier_ids: Vec<BTreeSet<usize>>,
-    /// Ids assigned `BestEffort`.
-    be_ids: BTreeSet<usize>,
-    /// Ids assigned `Pending`.
-    pending_ids: BTreeSet<usize>,
+    /// Allocated tier slots per model in the flat arrays (≥ num_tiers;
+    /// grows via `ensure_tier_cap` if a policy uses a larger index).
+    tiers_cap: usize,
+    /// Ids assigned `BestEffort`, per model.
+    be_ids: Vec<BTreeSet<usize>>,
+    /// Ids assigned `Pending`, per model.
+    pending_ids: Vec<BTreeSet<usize>>,
     /// Ids per role (roles are immutable: append-only).
     role_ids: [BTreeSet<usize>; 3],
     // ---- load-ordered membership (the placement hot path) ----
@@ -122,15 +145,16 @@ pub struct Cluster {
     // plain in-order iteration with early exit — no per-placement
     // collect or sort. Re-keyed through `refresh_load` at every
     // instance-load mutation site; `audit` panics on a missed re-key.
-    /// Tier members in descending `(batch, kv, id)` order, per tier.
+    /// Tier members in descending `(batch, kv, id)` order, per
+    /// `(model, tier)` flat slot.
     ordered_tier: Vec<LoadOrdered>,
-    /// Best-effort pool in the same descending load order.
-    ordered_be: LoadOrdered,
+    /// Best-effort pool in the same descending load order, per model.
+    ordered_be: Vec<LoadOrdered>,
     /// Pending-state instances in *ascending* `(decode batch, queued
-    /// prefill tokens, id)` order — the liveness fallback's
+    /// prefill tokens, id)` order, per model — the liveness fallback's
     /// least-loaded walk (`forced_target`) as plain in-order iteration
     /// with `.next()`, no per-call min-scan.
-    ordered_pending: BTreeSet<(u64, u64, usize)>,
+    ordered_pending: Vec<BTreeSet<(u64, u64, usize)>>,
     /// Last key inserted into an ordered set per instance (the key a
     /// removal must use; also the audit's staleness probe).
     load_key: Vec<(u64, u64)>,
@@ -148,6 +172,12 @@ pub struct Cluster {
     arrived_total: usize,
     /// Requests fully finished (`note_finished`).
     finished_total: usize,
+    /// Per-model splits of the three unplaced-demand counters above
+    /// (a request lives only on instances of its own model, so the
+    /// per-model subtraction is exact).
+    resident_per_model: Vec<usize>,
+    arrived_per_model: Vec<usize>,
+    finished_per_model: Vec<usize>,
     /// Instances currently `Draining` (cheap sweep short-circuit).
     draining_total: usize,
     /// Reference mode: membership views recompute by scanning.
@@ -173,66 +203,102 @@ impl Cluster {
         cm: &CostModel,
         polyserve_managed: bool,
     ) -> Cluster {
-        assert!(n >= 1);
-        let mut instances = Vec::with_capacity(n);
-        let mut assign = Vec::with_capacity(n);
-        match mode {
-            ServingMode::PdDisaggregated => {
-                let n_prefill = ((n as f64 * prefill_frac).round() as usize)
-                    .clamp(1, n.saturating_sub(1).max(1));
-                for i in 0..n {
-                    let role = if i < n_prefill { Role::Prefill } else { Role::Decode };
-                    instances.push(Instance::new(
-                        i,
-                        role,
-                        cm.kv_capacity_tokens,
-                        cm.max_token_batch,
-                    ));
-                    assign.push(match role {
-                        Role::Prefill => TierAssign::Static,
-                        _ if polyserve_managed => TierAssign::BestEffort,
-                        _ => TierAssign::Static,
-                    });
+        Cluster::build_models(
+            mode,
+            &[n],
+            prefill_frac,
+            num_tiers,
+            &[(cm.kv_capacity_tokens, cm.max_token_batch)],
+            polyserve_managed,
+        )
+    }
+
+    /// Build a multi-model fleet: `counts[m]` instances loaded with
+    /// registry model `m`, each sized by `caps[m] = (kv_capacity,
+    /// max_token_batch)` (see
+    /// [`crate::model::ModelRegistry::instance_caps`]). Each model's
+    /// sub-fleet is split into roles exactly as [`Cluster::build`]
+    /// splits a single-model fleet (PD: `round(prefill_frac · count)`
+    /// prefill instances, min 1 of each role; Coloc: all coloc), and
+    /// ids are assigned model-major. With one model this *is* the old
+    /// `build` — the single-model constructor delegates here.
+    pub fn build_models(
+        mode: ServingMode,
+        counts: &[usize],
+        prefill_frac: f64,
+        num_tiers: usize,
+        caps: &[(u64, u64)],
+        polyserve_managed: bool,
+    ) -> Cluster {
+        assert!(!counts.is_empty() && counts.len() == caps.len());
+        assert!(counts.iter().all(|&c| c >= 1), "every model needs ≥1 instance");
+        let num_models = counts.len();
+        let n_total: usize = counts.iter().sum();
+        let mut instances = Vec::with_capacity(n_total);
+        let mut assign = Vec::with_capacity(n_total);
+        for (m, (&n, &(kv_cap, mtb))) in counts.iter().zip(caps.iter()).enumerate() {
+            match mode {
+                ServingMode::PdDisaggregated => {
+                    let n_prefill = ((n as f64 * prefill_frac).round() as usize)
+                        .clamp(1, n.saturating_sub(1).max(1));
+                    for i in 0..n {
+                        let role =
+                            if i < n_prefill { Role::Prefill } else { Role::Decode };
+                        let id = instances.len();
+                        let mut inst = Instance::new(id, role, kv_cap, mtb);
+                        inst.model = m;
+                        instances.push(inst);
+                        assign.push(match role {
+                            Role::Prefill => TierAssign::Static,
+                            _ if polyserve_managed => TierAssign::BestEffort,
+                            _ => TierAssign::Static,
+                        });
+                    }
                 }
-            }
-            ServingMode::Colocated => {
-                for i in 0..n {
-                    instances.push(Instance::new(
-                        i,
-                        Role::Coloc,
-                        cm.kv_capacity_tokens,
-                        cm.max_token_batch,
-                    ));
-                    assign.push(if polyserve_managed {
-                        TierAssign::BestEffort
-                    } else {
-                        TierAssign::Static
-                    });
+                ServingMode::Colocated => {
+                    for _ in 0..n {
+                        let id = instances.len();
+                        let mut inst = Instance::new(id, Role::Coloc, kv_cap, mtb);
+                        inst.model = m;
+                        instances.push(inst);
+                        assign.push(if polyserve_managed {
+                            TierAssign::BestEffort
+                        } else {
+                            TierAssign::Static
+                        });
+                    }
                 }
             }
         }
         let n_built = instances.len();
+        let tiers_cap = num_tiers.max(1);
         let mut cluster = Cluster {
             instances,
             assign,
             num_tiers,
+            num_models,
             managed: polyserve_managed,
-            kv_capacity: cm.kv_capacity_tokens,
-            max_token_batch: cm.max_token_batch,
+            kv_capacity: caps[0].0,
+            max_token_batch: caps[0].1,
+            model_caps: caps.to_vec(),
             kicked: Vec::new(),
-            tier_ids: vec![BTreeSet::new(); num_tiers],
-            be_ids: BTreeSet::new(),
-            pending_ids: BTreeSet::new(),
+            tier_ids: vec![BTreeSet::new(); num_models * tiers_cap],
+            tiers_cap,
+            be_ids: vec![BTreeSet::new(); num_models],
+            pending_ids: vec![BTreeSet::new(); num_models],
             role_ids: [BTreeSet::new(), BTreeSet::new(), BTreeSet::new()],
-            ordered_tier: vec![LoadOrdered::new(); num_tiers],
-            ordered_be: LoadOrdered::new(),
-            ordered_pending: BTreeSet::new(),
+            ordered_tier: vec![LoadOrdered::new(); num_models * tiers_cap],
+            ordered_be: vec![LoadOrdered::new(); num_models],
+            ordered_pending: vec![BTreeSet::new(); num_models],
             load_key: vec![(0, 0); n_built],
             pending_key: vec![(0, 0); n_built],
             resident_cnt: vec![0; n_built],
             resident_total: 0,
             arrived_total: 0,
             finished_total: 0,
+            resident_per_model: vec![0; num_models],
+            arrived_per_model: vec![0; num_models],
+            finished_per_model: vec![0; num_models],
             draining_total: 0,
             scan_reference: false,
             indexed_reference: false,
@@ -246,6 +312,36 @@ impl Cluster {
 
     // ---- membership index maintenance ----
 
+    /// Flat slot of `(model, tier)` in the tier-indexed arrays.
+    #[inline]
+    fn slot(&self, model: ModelId, k: usize) -> usize {
+        debug_assert!(model < self.num_models && k < self.tiers_cap);
+        model * self.tiers_cap + k
+    }
+
+    /// Grow the flat tier arrays so tier index `k` is addressable for
+    /// every model (cold path — policies normally stay within
+    /// `num_tiers`). Existing slots are moved, not re-keyed.
+    fn ensure_tier_cap(&mut self, k: usize) {
+        if k < self.tiers_cap {
+            return;
+        }
+        let new_cap = k + 1;
+        let mut tier_ids = vec![BTreeSet::new(); self.num_models * new_cap];
+        let mut ordered = vec![LoadOrdered::new(); self.num_models * new_cap];
+        for m in 0..self.num_models {
+            for t in 0..self.tiers_cap {
+                tier_ids[m * new_cap + t] =
+                    std::mem::take(&mut self.tier_ids[m * self.tiers_cap + t]);
+                ordered[m * new_cap + t] =
+                    std::mem::take(&mut self.ordered_tier[m * self.tiers_cap + t]);
+            }
+        }
+        self.tier_ids = tier_ids;
+        self.ordered_tier = ordered;
+        self.tiers_cap = new_cap;
+    }
+
     fn index_add_assign(&mut self, id: usize, a: TierAssign) {
         // Entering an ordered set keys on the instance's *live*
         // counters (the stored key may predate churn outside any set).
@@ -253,47 +349,48 @@ impl Cluster {
         self.load_key[id] = key;
         let pkey = self.instances[id].pending_key();
         self.pending_key[id] = pkey;
+        let m = self.instances[id].model;
         match a {
             TierAssign::Tier(k) => {
-                if k >= self.tier_ids.len() {
-                    self.tier_ids.resize_with(k + 1, BTreeSet::new);
-                    self.ordered_tier.resize_with(k + 1, LoadOrdered::new);
-                }
-                self.tier_ids[k].insert(id);
-                self.ordered_tier[k].insert(load_entry(key, id));
+                self.ensure_tier_cap(k);
+                let s = self.slot(m, k);
+                self.tier_ids[s].insert(id);
+                self.ordered_tier[s].insert(load_entry(key, id));
             }
             TierAssign::BestEffort => {
-                self.be_ids.insert(id);
-                self.ordered_be.insert(load_entry(key, id));
+                self.be_ids[m].insert(id);
+                self.ordered_be[m].insert(load_entry(key, id));
             }
             TierAssign::Pending => {
-                self.pending_ids.insert(id);
-                self.ordered_pending.insert((pkey.0, pkey.1, id));
+                self.pending_ids[m].insert(id);
+                self.ordered_pending[m].insert((pkey.0, pkey.1, id));
             }
             TierAssign::Static => {}
         }
     }
 
     fn index_remove_assign(&mut self, id: usize, a: TierAssign) {
-        // Removal must use the key the entry was inserted under.
+        // Removal must use the key the entry was inserted under — and
+        // the model the instance held at insertion time, which is why
+        // `complete_swap` re-indexes *around* the model change.
         let key = self.load_key[id];
+        let m = self.instances[id].model;
         match a {
             TierAssign::Tier(k) => {
-                if let Some(s) = self.tier_ids.get_mut(k) {
-                    s.remove(&id);
-                }
-                if let Some(s) = self.ordered_tier.get_mut(k) {
-                    s.remove(&load_entry(key, id));
+                if k < self.tiers_cap {
+                    let s = self.slot(m, k);
+                    self.tier_ids[s].remove(&id);
+                    self.ordered_tier[s].remove(&load_entry(key, id));
                 }
             }
             TierAssign::BestEffort => {
-                self.be_ids.remove(&id);
-                self.ordered_be.remove(&load_entry(key, id));
+                self.be_ids[m].remove(&id);
+                self.ordered_be[m].remove(&load_entry(key, id));
             }
             TierAssign::Pending => {
-                self.pending_ids.remove(&id);
+                self.pending_ids[m].remove(&id);
                 let pkey = self.pending_key[id];
-                self.ordered_pending.remove(&(pkey.0, pkey.1, id));
+                self.ordered_pending[m].remove(&(pkey.0, pkey.1, id));
             }
             TierAssign::Static => {}
         }
@@ -313,10 +410,12 @@ impl Cluster {
     /// panics on in debug runs. O(1) when nothing changed, O(log m) to
     /// re-key.
     pub fn refresh_load(&mut self, id: usize) {
+        let m = self.instances[id].model;
         let res = self.instances[id].resident_requests();
         let old_res = self.resident_cnt[id];
         if res != old_res {
             self.resident_total = self.resident_total + res - old_res;
+            self.resident_per_model[m] = self.resident_per_model[m] + res - old_res;
             self.resident_cnt[id] = res;
         }
         // The pending key is compared independently of the load-key
@@ -327,8 +426,8 @@ impl Cluster {
         if pkey != self.pending_key[id] {
             if self.assign[id] == TierAssign::Pending {
                 let old = self.pending_key[id];
-                self.ordered_pending.remove(&(old.0, old.1, id));
-                self.ordered_pending.insert((pkey.0, pkey.1, id));
+                self.ordered_pending[m].remove(&(old.0, old.1, id));
+                self.ordered_pending[m].insert((pkey.0, pkey.1, id));
             }
             self.pending_key[id] = pkey;
         }
@@ -339,13 +438,13 @@ impl Cluster {
         }
         match self.assign[id] {
             TierAssign::Tier(k) => {
-                let s = &mut self.ordered_tier[k];
+                let s = &mut self.ordered_tier[m * self.tiers_cap + k];
                 s.remove(&load_entry(old_key, id));
                 s.insert(load_entry(key, id));
             }
             TierAssign::BestEffort => {
-                self.ordered_be.remove(&load_entry(old_key, id));
-                self.ordered_be.insert(load_entry(key, id));
+                self.ordered_be[m].remove(&load_entry(old_key, id));
+                self.ordered_be[m].insert(load_entry(key, id));
             }
             _ => {}
         }
@@ -412,10 +511,11 @@ impl Cluster {
 
     // ---- O(1) unplaced-demand accounting ----
 
-    /// Simulator: a request's arrival event fired. Feeds
-    /// [`Cluster::unplaced_demand`].
-    pub fn note_arrival(&mut self) {
+    /// Simulator: a request's arrival event fired for `model`. Feeds
+    /// [`Cluster::unplaced_demand`] and its per-model split.
+    pub fn note_arrival(&mut self, model: ModelId) {
         self.arrived_total += 1;
+        self.arrived_per_model[model] += 1;
     }
 
     /// Arrival events processed so far. The audit uses this to reconcile
@@ -427,10 +527,18 @@ impl Cluster {
         self.arrived_total
     }
 
-    /// Simulator: `n` requests fully finished this event. Feeds
-    /// [`Cluster::unplaced_demand`].
-    pub fn note_finished(&mut self, n: usize) {
+    /// Simulator: `n` requests of `model` fully finished this event.
+    /// Feeds [`Cluster::unplaced_demand`] and its per-model split.
+    pub fn note_finished(&mut self, model: ModelId, n: usize) {
         self.finished_total += n;
+        self.finished_per_model[model] += n;
+    }
+
+    /// Arrival events processed so far for `model` (the per-model twin
+    /// of [`Cluster::arrived_total`], for the same mid-timestamp
+    /// reconciliation).
+    pub fn arrived_total_of(&self, model: ModelId) -> usize {
+        self.arrived_per_model[model]
     }
 
     /// Arrived, unfinished requests resident on *no* instance — the
@@ -445,6 +553,16 @@ impl Cluster {
         self.arrived_total
             .saturating_sub(self.finished_total)
             .saturating_sub(self.resident_total)
+    }
+
+    /// Per-model [`Cluster::unplaced_demand`]: arrived, unfinished
+    /// `model` requests resident on no instance. Exact for the same
+    /// reason the global counter is — a request only ever resides on
+    /// instances of its own model (the hard placement constraint).
+    pub fn unplaced_demand_of(&self, model: ModelId) -> usize {
+        self.arrived_per_model[model]
+            .saturating_sub(self.finished_per_model[model])
+            .saturating_sub(self.resident_per_model[model])
     }
 
     /// The pre-PR unplaced-demand reconstruction: scan every instance's
@@ -470,6 +588,38 @@ impl Cluster {
             .enumerate()
             .filter(|(idx, r)| {
                 r.req.arrival_ms <= now && r.finish_ms.is_none() && !placed[*idx]
+            })
+            .count()
+    }
+
+    /// Per-model twin of [`Cluster::unplaced_demand_scan`] — the
+    /// debug-audit oracle for [`Cluster::unplaced_demand_of`].
+    pub fn unplaced_demand_scan_of(
+        &self,
+        model: ModelId,
+        requests: &[SimRequest],
+        now: TimeMs,
+    ) -> usize {
+        let mut placed = vec![false; requests.len()];
+        for i in &self.instances {
+            for j in &i.prefill_queue {
+                placed[j.req_idx] = true;
+            }
+            for &(r, _) in &i.decode_queue {
+                placed[r] = true;
+            }
+            for s in &i.running {
+                placed[s.req_idx] = true;
+            }
+        }
+        requests
+            .iter()
+            .enumerate()
+            .filter(|(idx, r)| {
+                r.req.model == model
+                    && r.req.arrival_ms <= now
+                    && r.finish_ms.is_none()
+                    && !placed[*idx]
             })
             .count()
     }
@@ -505,9 +655,43 @@ impl Cluster {
         }
     }
 
-    /// Instance ids currently assigned to tier `k` and accepting work.
-    /// Ascending id order, O(tier size) off the tier index.
+    /// Per-model [`Cluster::with_role`]: `model` instances of `role`
+    /// that accept work, ascending id order.
+    pub fn with_role_of(
+        &self,
+        model: ModelId,
+        role: Role,
+    ) -> impl Iterator<Item = usize> + '_ {
+        self.with_role(role)
+            .filter(move |&id| self.instances[id].model == model)
+    }
+
+    /// Checked flat slot of `(model, tier)`: `None` when `k` was never
+    /// allocated (so an out-of-range tier index can never alias into
+    /// another model's slot range).
+    #[inline]
+    fn slot_checked(&self, model: ModelId, k: usize) -> Option<usize> {
+        (k < self.tiers_cap && model < self.num_models)
+            .then(|| model * self.tiers_cap + k)
+    }
+
+    /// Instance ids currently assigned to tier `k` and accepting work,
+    /// chained in model order (for a single-model fleet this *is* the
+    /// plain ascending-id tier view of PRs 4–6). O(tier size) off the
+    /// per-(model, tier) indices.
     pub fn in_tier(&self, k: usize) -> impl Iterator<Item = usize> + '_ {
+        (0..self.num_models).flat_map(move |m| self.in_tier_of(m, k))
+    }
+
+    /// Per-model tier membership: `model` instances assigned `Tier(k)`
+    /// that accept work, ascending id order. The hard placement
+    /// constraint's routing view — a `model`-tagged request may only
+    /// land on ids from here.
+    pub fn in_tier_of(
+        &self,
+        model: ModelId,
+        k: usize,
+    ) -> impl Iterator<Item = usize> + '_ {
         if self.scan_reference {
             ViewIter::Scan(
                 self.assign
@@ -515,14 +699,15 @@ impl Cluster {
                     .enumerate()
                     .filter(move |(i, a)| {
                         **a == TierAssign::Tier(k)
+                            && self.instances[*i].model == model
                             && self.instances[*i].lifecycle.accepts_work()
                     })
                     .map(|(i, _)| i),
             )
         } else {
             ViewIter::Indexed(
-                self.tier_ids
-                    .get(k)
+                self.slot_checked(model, k)
+                    .map(|s| &self.tier_ids[s])
                     .into_iter()
                     .flat_map(|s| s.iter().copied())
                     .filter(move |&id| self.instances[id].lifecycle.accepts_work()),
@@ -539,8 +724,18 @@ impl Cluster {
     /// (`refresh_load`). Reference modes must not use this — the router
     /// falls back to collect+sort over [`Cluster::in_tier`] there.
     pub fn tier_by_load_desc(&self, k: usize) -> impl Iterator<Item = usize> + '_ {
-        self.ordered_tier
-            .get(k)
+        (0..self.num_models).flat_map(move |m| self.tier_by_load_desc_of(m, k))
+    }
+
+    /// Per-model [`Cluster::tier_by_load_desc`]: the model-aware
+    /// router's §4.3 gradient walk over `model`'s tier-`k` members.
+    pub fn tier_by_load_desc_of(
+        &self,
+        model: ModelId,
+        k: usize,
+    ) -> impl Iterator<Item = usize> + '_ {
+        self.slot_checked(model, k)
+            .map(|s| &self.ordered_tier[s])
             .into_iter()
             .flat_map(|s| s.iter())
             .map(|&Reverse((_, _, id))| id)
@@ -551,8 +746,17 @@ impl Cluster {
     /// ordered set walked in reverse, which is exactly the ascending
     /// `(batch, kv, id)` sort of the `load_gradient = off` ablation.
     pub fn tier_by_load_asc(&self, k: usize) -> impl Iterator<Item = usize> + '_ {
-        self.ordered_tier
-            .get(k)
+        (0..self.num_models).flat_map(move |m| self.tier_by_load_asc_of(m, k))
+    }
+
+    /// Per-model [`Cluster::tier_by_load_asc`].
+    pub fn tier_by_load_asc_of(
+        &self,
+        model: ModelId,
+        k: usize,
+    ) -> impl Iterator<Item = usize> + '_ {
+        self.slot_checked(model, k)
+            .map(|s| &self.ordered_tier[s])
             .into_iter()
             .flat_map(|s| s.iter().rev())
             .map(|&Reverse((_, _, id))| id)
@@ -566,15 +770,33 @@ impl Cluster {
     /// identity, so this view is for policies that want the pool by
     /// load — reverse it for least-loaded-first.
     pub fn best_effort_by_load(&self) -> impl Iterator<Item = usize> + '_ {
-        self.ordered_be
+        (0..self.num_models).flat_map(move |m| self.best_effort_by_load_of(m))
+    }
+
+    /// Per-model [`Cluster::best_effort_by_load`].
+    pub fn best_effort_by_load_of(
+        &self,
+        model: ModelId,
+    ) -> impl Iterator<Item = usize> + '_ {
+        self.ordered_be[model]
             .iter()
             .map(|&Reverse((_, _, id))| id)
             .filter(move |&id| self.instances[id].lifecycle.accepts_work())
     }
 
-    /// Instance ids in the best-effort pool (claimable: active only).
-    /// Ascending id order, O(pool size) off the pool index.
+    /// Instance ids in the best-effort pool (claimable: active only),
+    /// chained in model order — plain ascending-id for a single-model
+    /// fleet. O(pool size) off the per-model pool indices.
     pub fn best_effort_pool(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..self.num_models).flat_map(move |m| self.best_effort_pool_of(m))
+    }
+
+    /// Per-model best-effort pool: claimable `model` instances,
+    /// ascending id order.
+    pub fn best_effort_pool_of(
+        &self,
+        model: ModelId,
+    ) -> impl Iterator<Item = usize> + '_ {
         if self.scan_reference {
             ViewIter::Scan(
                 self.assign
@@ -582,13 +804,14 @@ impl Cluster {
                     .enumerate()
                     .filter(move |(i, a)| {
                         **a == TierAssign::BestEffort
+                            && self.instances[*i].model == model
                             && self.instances[*i].lifecycle.accepts_work()
                     })
                     .map(|(i, _)| i),
             )
         } else {
             ViewIter::Indexed(
-                self.be_ids
+                self.be_ids[model]
                     .iter()
                     .copied()
                     .filter(move |&id| self.instances[id].lifecycle.accepts_work()),
@@ -596,9 +819,16 @@ impl Cluster {
         }
     }
 
-    /// Instance ids in the §4.4 pending state that accept work.
-    /// Ascending id order, O(pending size) off the pending index.
+    /// Instance ids in the §4.4 pending state that accept work, chained
+    /// in model order — plain ascending-id for a single-model fleet.
+    /// O(pending size) off the per-model pending indices.
     pub fn pending_pool(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..self.num_models).flat_map(move |m| self.pending_pool_of(m))
+    }
+
+    /// Per-model pending pool: `model` instances in the §4.4 pending
+    /// state that accept work, ascending id order.
+    pub fn pending_pool_of(&self, model: ModelId) -> impl Iterator<Item = usize> + '_ {
         if self.scan_reference {
             ViewIter::Scan(
                 self.assign
@@ -606,13 +836,14 @@ impl Cluster {
                     .enumerate()
                     .filter(move |(i, a)| {
                         **a == TierAssign::Pending
+                            && self.instances[*i].model == model
                             && self.instances[*i].lifecycle.accepts_work()
                     })
                     .map(|(i, _)| i),
             )
         } else {
             ViewIter::Indexed(
-                self.pending_ids
+                self.pending_ids[model]
                     .iter()
                     .copied()
                     .filter(move |&id| self.instances[id].lifecycle.accepts_work()),
@@ -632,7 +863,15 @@ impl Cluster {
     /// moving — and covered by the audit. Reference modes must not use
     /// this — the router keeps the min-scan there.
     pub fn pending_by_load(&self) -> impl Iterator<Item = usize> + '_ {
-        self.ordered_pending
+        (0..self.num_models).flat_map(move |m| self.pending_by_load_of(m))
+    }
+
+    /// Per-model [`Cluster::pending_by_load`].
+    pub fn pending_by_load_of(
+        &self,
+        model: ModelId,
+    ) -> impl Iterator<Item = usize> + '_ {
+        self.ordered_pending[model]
             .iter()
             .map(|&(_, _, id)| id)
             .filter(move |&id| self.instances[id].lifecycle.accepts_work())
@@ -654,7 +893,7 @@ impl Cluster {
             .tier_ids
             .iter()
             .flat_map(|s| s.iter().copied())
-            .chain(self.pending_ids.iter().copied())
+            .chain(self.pending_ids.iter().flat_map(|s| s.iter().copied()))
             .collect();
         ids.sort_unstable();
         ids
@@ -662,9 +901,25 @@ impl Cluster {
 
     /// Claim an instance from the BE pool for tier `k` (§4.3: "joining a
     /// particular SLO tier simply requires ... reconfiguring"; instant).
-    /// Returns the claimed id.
+    /// Returns the claimed id. Single-model shorthand for
+    /// [`Cluster::claim_for_tier_of`] on model 0 — bit-identical to the
+    /// pre-registry claim, since a single-model pool *is* the model-0
+    /// pool.
     pub fn claim_for_tier(&mut self, k: usize, now: TimeMs) -> Option<usize> {
-        let id = self.best_effort_pool().next()?;
+        self.claim_for_tier_of(0, k, now)
+    }
+
+    /// Claim a `model` instance from its per-model BE pool for
+    /// `(model, tier k)`. Lowest id first (decision identity with the
+    /// single-model claim); the claimed instance lands in the
+    /// per-(model, tier) membership slot.
+    pub fn claim_for_tier_of(
+        &mut self,
+        model: ModelId,
+        k: usize,
+        now: TimeMs,
+    ) -> Option<usize> {
+        let id = self.best_effort_pool_of(model).next()?;
         self.set_assign(id, TierAssign::Tier(k));
         self.instances[id].alloc_start(now);
         Some(id)
@@ -702,15 +957,24 @@ impl Cluster {
     /// prefill server to a TPOT tier (the role-confusion bug exposed by
     /// making the prefill tier elastic).
     pub fn provision(&mut self, role: Role, now: TimeMs, ready_at: TimeMs) -> usize {
+        self.provision_model(0, role, now, ready_at)
+    }
+
+    /// Provision a cold-starting instance pre-loaded with registry
+    /// model `model`, sized by that model's `(kv_capacity,
+    /// max_token_batch)` caps. [`Cluster::provision`] is the model-0
+    /// shorthand; assignment rules are identical.
+    pub fn provision_model(
+        &mut self,
+        model: ModelId,
+        role: Role,
+        now: TimeMs,
+        ready_at: TimeMs,
+    ) -> usize {
         let id = self.instances.len();
-        let mut inst = Instance::new_provisioning(
-            id,
-            role,
-            self.kv_capacity,
-            self.max_token_batch,
-            now,
-            ready_at,
-        );
+        let (kv_cap, mtb) = self.model_caps[model];
+        let mut inst = Instance::new_provisioning(id, role, kv_cap, mtb, now, ready_at);
+        inst.model = model;
         inst.set_scan_reference(self.scan_reference);
         self.instances.push(inst);
         let a = match role {
@@ -741,9 +1005,12 @@ impl Cluster {
 
     /// Retire `id` if it is draining, has no work left, and any
     /// migrated-out KV has finished streaming off it (`egress_until`).
-    /// Returns true if it retired.
+    /// Returns true if it retired. A drain that is really a model swap
+    /// (`swap_to` set) never retires here — the simulator routes it to
+    /// [`Cluster::complete_swap`] instead.
     pub fn retire_if_drained(&mut self, id: usize, now: TimeMs) -> bool {
         if matches!(self.instances[id].lifecycle, Lifecycle::Draining { .. })
+            && self.instances[id].swap_to.is_none()
             && self.instances[id].is_empty()
             && self.instances[id].egress_until <= now
         {
@@ -752,6 +1019,70 @@ impl Cluster {
             return true;
         }
         false
+    }
+
+    // ---- model hot-swap lifecycle ----
+
+    /// Start swapping `id` to registry model `target`: the instance
+    /// drains (accepts nothing new, residents finish or migrate off)
+    /// and, once empty with egress done, [`Cluster::complete_swap`]
+    /// reloads it. Billing never pauses — the instance stays in the
+    /// fleet for cost accounting throughout the swap.
+    pub fn begin_swap(&mut self, id: usize, target: ModelId, now: TimeMs) {
+        debug_assert!(target < self.num_models, "swap target outside the registry");
+        debug_assert_ne!(
+            self.instances[id].model, target,
+            "swapping inst {id} to the model it already serves"
+        );
+        self.instances[id].swap_to = Some(target);
+        if !matches!(self.instances[id].lifecycle, Lifecycle::Draining { .. }) {
+            self.begin_drain(id, now);
+        }
+    }
+
+    /// The model `id` is draining toward, if its drain is a swap.
+    pub fn swap_pending(&self, id: usize) -> Option<ModelId> {
+        self.instances[id].swap_to
+    }
+
+    /// True when a swap-draining instance has emptied out (no residents,
+    /// egress done) and is ready for [`Cluster::complete_swap`].
+    pub fn swap_ready(&self, id: usize, now: TimeMs) -> bool {
+        self.instances[id].swap_to.is_some()
+            && matches!(self.instances[id].lifecycle, Lifecycle::Draining { .. })
+            && self.instances[id].is_empty()
+            && self.instances[id].egress_until <= now
+    }
+
+    /// Finish a model swap on a fully drained instance: re-key every
+    /// membership index around the model change (removal under the
+    /// *old* model, insertion under the *new* — see
+    /// `index_remove_assign`), reload the instance with the target
+    /// model's caps, and put it back through the cold-start path
+    /// (`Provisioning` until `ready_at`; the simulator fires
+    /// `InstanceReady` then). Returns the model it reloaded to.
+    pub fn complete_swap(&mut self, id: usize, now: TimeMs, ready_at: TimeMs) -> ModelId {
+        let target = self.instances[id]
+            .swap_to
+            .expect("complete_swap without begin_swap");
+        let old_assign = self.assign[id];
+        self.index_remove_assign(id, old_assign);
+        let (kv_cap, mtb) = self.model_caps[target];
+        self.instances[id].complete_swap(target, kv_cap, mtb, now, ready_at);
+        self.draining_total -= 1;
+        // Reset assignment to the provision default for its role; a
+        // tier stint it held under the old model ends here.
+        let a = match self.instances[id].role {
+            Role::Prefill => TierAssign::Static,
+            _ if self.managed => TierAssign::BestEffort,
+            _ => TierAssign::Static,
+        };
+        if matches!(old_assign, TierAssign::Tier(_) | TierAssign::Pending) {
+            self.instances[id].alloc_end(now);
+        }
+        self.assign[id] = a;
+        self.index_add_assign(id, a);
+        target
     }
 
     /// Any instance currently draining? O(1) — lets the housekeeping
@@ -779,6 +1110,34 @@ impl Cluster {
         self.count_lifecycle(role, |l| {
             matches!(l, Lifecycle::Active | Lifecycle::Provisioning { .. })
         })
+    }
+
+    /// Per-model [`Cluster::active_count`]: serving `model` instances
+    /// of `role`.
+    pub fn active_count_of(&self, model: ModelId, role: Role) -> usize {
+        self.instances
+            .iter()
+            .filter(|i| i.model == model && i.role == role && i.lifecycle.accepts_work())
+            .count()
+    }
+
+    /// Per-model [`Cluster::committed_count`]: active + cold-starting
+    /// `model` instances of `role`, **plus** instances of any model
+    /// currently swap-draining *toward* `model` — capacity already on
+    /// its way, so a sizing pass never double-issues the swap.
+    pub fn committed_count_of(&self, model: ModelId, role: Role) -> usize {
+        self.instances
+            .iter()
+            .filter(|i| {
+                i.role == role
+                    && ((i.model == model
+                        && matches!(
+                            i.lifecycle,
+                            Lifecycle::Active | Lifecycle::Provisioning { .. }
+                        ))
+                        || i.swap_to == Some(model))
+            })
+            .count()
     }
 
     /// Instances of `role` currently provisioning.
@@ -812,27 +1171,37 @@ impl Cluster {
     /// (`SimParams::debug_audit`); panics on the first drift.
     pub fn audit(&self, requests: &[SimRequest]) {
         for (id, &a) in self.assign.iter().enumerate() {
-            let expect_tier = match a {
-                TierAssign::Tier(k) => Some(k),
+            let model = self.instances[id].model;
+            // Membership is keyed by (model, assignment): the id must
+            // appear in exactly its own model's slot/pool and in no
+            // other model's — the per-model re-derivation of satellite
+            // audits (a swap that skipped the re-key discipline leaves
+            // the id stranded under its old model and trips this).
+            let expect_slot = match a {
+                TierAssign::Tier(k) => self.slot_checked(model, k),
                 _ => None,
             };
-            for (k, s) in self.tier_ids.iter().enumerate() {
+            for (s, set) in self.tier_ids.iter().enumerate() {
                 assert_eq!(
-                    s.contains(&id),
-                    expect_tier == Some(k),
-                    "inst {id}: tier_ids[{k}] disagrees with assign {a:?}"
+                    set.contains(&id),
+                    expect_slot == Some(s),
+                    "inst {id} (model {model}): tier slot {s} disagrees with assign {a:?}"
                 );
             }
-            assert_eq!(
-                self.be_ids.contains(&id),
-                a == TierAssign::BestEffort,
-                "inst {id}: be_ids disagrees with assign {a:?}"
-            );
-            assert_eq!(
-                self.pending_ids.contains(&id),
-                a == TierAssign::Pending,
-                "inst {id}: pending_ids disagrees with assign {a:?}"
-            );
+            for (m, set) in self.be_ids.iter().enumerate() {
+                assert_eq!(
+                    set.contains(&id),
+                    a == TierAssign::BestEffort && m == model,
+                    "inst {id} (model {model}): be_ids[{m}] disagrees with assign {a:?}"
+                );
+            }
+            for (m, set) in self.pending_ids.iter().enumerate() {
+                assert_eq!(
+                    set.contains(&id),
+                    a == TierAssign::Pending && m == model,
+                    "inst {id} (model {model}): pending_ids[{m}] disagrees with assign {a:?}"
+                );
+            }
             assert!(
                 self.role_ids[role_idx(self.instances[id].role)].contains(&id),
                 "inst {id}: missing from its role index"
@@ -856,31 +1225,33 @@ impl Cluster {
             );
             match a {
                 TierAssign::Tier(k) => assert!(
-                    self.ordered_tier[k].contains(&load_entry(live, id)),
-                    "inst {id}: missing from ordered tier {k} under its live key"
+                    self.ordered_tier[self.slot(model, k)]
+                        .contains(&load_entry(live, id)),
+                    "inst {id}: missing from ordered tier ({model}, {k}) under its live key"
                 ),
                 TierAssign::BestEffort => assert!(
-                    self.ordered_be.contains(&load_entry(live, id)),
-                    "inst {id}: missing from the ordered best-effort set"
+                    self.ordered_be[model].contains(&load_entry(live, id)),
+                    "inst {id}: missing from model {model}'s ordered best-effort set"
                 ),
                 TierAssign::Pending => assert!(
-                    self.ordered_pending.contains(&(pend_live.0, pend_live.1, id)),
-                    "inst {id}: missing from the ordered pending set under its live key"
+                    self.ordered_pending[model]
+                        .contains(&(pend_live.0, pend_live.1, id)),
+                    "inst {id}: missing from model {model}'s ordered pending set"
                 ),
                 TierAssign::Static => {}
             }
         }
         let sets_total: usize = self.tier_ids.iter().map(|s| s.len()).sum::<usize>()
-            + self.be_ids.len()
-            + self.pending_ids.len();
+            + self.be_ids.iter().map(|s| s.len()).sum::<usize>()
+            + self.pending_ids.iter().map(|s| s.len()).sum::<usize>();
         let assigned = self
             .assign
             .iter()
             .filter(|a| **a != TierAssign::Static)
             .count();
         assert_eq!(sets_total, assigned, "stale ids left in a membership set");
-        let ordered_total: usize =
-            self.ordered_tier.iter().map(|s| s.len()).sum::<usize>() + self.ordered_be.len();
+        let ordered_total: usize = self.ordered_tier.iter().map(|s| s.len()).sum::<usize>()
+            + self.ordered_be.iter().map(|s| s.len()).sum::<usize>();
         let keyed = self
             .assign
             .iter()
@@ -888,14 +1259,38 @@ impl Cluster {
             .count();
         assert_eq!(ordered_total, keyed, "stale entries left in a load-ordered set");
         assert_eq!(
-            self.ordered_pending.len(),
-            self.pending_ids.len(),
+            self.ordered_pending.iter().map(|s| s.len()).sum::<usize>(),
+            self.pending_ids.iter().map(|s| s.len()).sum::<usize>(),
             "stale entries left in the ordered pending set"
         );
         assert_eq!(
             self.resident_total,
             self.instances.iter().map(Instance::resident_requests).sum::<usize>(),
             "incremental residency counter drifted"
+        );
+        // Per-model unplaced-demand split: each residency counter must
+        // equal the scan over its own model's instances, and the splits
+        // must sum to the totals.
+        for m in 0..self.num_models {
+            assert_eq!(
+                self.resident_per_model[m],
+                self.instances
+                    .iter()
+                    .filter(|i| i.model == m)
+                    .map(Instance::resident_requests)
+                    .sum::<usize>(),
+                "per-model residency counter drifted for model {m}"
+            );
+        }
+        assert_eq!(
+            self.arrived_per_model.iter().sum::<usize>(),
+            self.arrived_total,
+            "per-model arrival split drifted"
+        );
+        assert_eq!(
+            self.finished_per_model.iter().sum::<usize>(),
+            self.finished_total,
+            "per-model finished split drifted"
         );
         assert_eq!(
             self.draining_total,
@@ -1098,6 +1493,7 @@ mod tests {
             prefill_len: p,
             decode_len: 500,
             slo: Slo::new(1000, 50),
+            model: 0,
         }));
         let mut r = SimRequest::new(req, 0);
         r.prefill_done = p;
@@ -1207,16 +1603,119 @@ mod tests {
         let mut reqs = vec![sim_req(0, 100, 4), sim_req(1, 100, 4), sim_req(2, 100, 4)];
         let id = c.claim_for_tier(0, 0).unwrap();
         for _ in 0..3 {
-            c.note_arrival();
+            c.note_arrival(0);
         }
         // req 0 resident, req 1 finished, req 2 unplaced.
         c.instances[id].push_running(0, &reqs);
         c.refresh_load(id);
         reqs[1].finish_ms = Some(50);
-        c.note_finished(1);
+        c.note_finished(0, 1);
         assert_eq!(c.unplaced_demand(), 1);
         assert_eq!(c.unplaced_demand(), c.unplaced_demand_scan(&reqs, 100));
+        assert_eq!(c.unplaced_demand_of(0), 1);
+        assert_eq!(c.unplaced_demand_of(0), c.unplaced_demand_scan_of(0, &reqs, 100));
         c.audit(&reqs);
+    }
+
+    /// Two-model fleets lay instances out model-major, key every
+    /// membership view by model, and the hard placement constraint
+    /// shows in the per-model views.
+    #[test]
+    fn build_models_keys_views_per_model() {
+        let caps = [(900_000u64, 2048u64), (256_000u64, 2048u64)];
+        let mut c = Cluster::build_models(
+            ServingMode::PdDisaggregated,
+            &[6, 4],
+            0.25,
+            2,
+            &caps,
+            true,
+        );
+        assert_eq!(c.num_models, 2);
+        assert_eq!(c.len(), 10);
+        // Model-major ids: 0..6 model 0 (round(6·0.25)=2 prefill),
+        // 6..10 model 1 (round(4·0.25)=1 prefill).
+        assert!(c.instances[..6].iter().all(|i| i.model == 0));
+        assert!(c.instances[6..].iter().all(|i| i.model == 1));
+        assert_eq!(c.instances[7].kv_capacity, 256_000);
+        assert_eq!(c.with_role_of(0, Role::Prefill).count(), 2);
+        assert_eq!(c.with_role_of(1, Role::Prefill).count(), 1);
+        assert_eq!(c.best_effort_pool_of(0).count(), 4);
+        assert_eq!(c.best_effort_pool_of(1).count(), 3);
+        // Aggregate = chained per-model sequences.
+        assert_eq!(
+            c.best_effort_pool().collect::<Vec<_>>(),
+            vec![2, 3, 4, 5, 7, 8, 9]
+        );
+        // Claims are model-keyed: each model's tier slot fills from its
+        // own pool only.
+        let a = c.claim_for_tier_of(0, 1, 0).unwrap();
+        let b = c.claim_for_tier_of(1, 1, 0).unwrap();
+        assert_eq!((a, b), (2, 7));
+        assert_eq!(c.in_tier_of(0, 1).collect::<Vec<_>>(), vec![2]);
+        assert_eq!(c.in_tier_of(1, 1).collect::<Vec<_>>(), vec![7]);
+        assert_eq!(c.in_tier(1).collect::<Vec<_>>(), vec![2, 7]);
+        assert_eq!(c.tier_by_load_desc_of(1, 1).collect::<Vec<_>>(), vec![7]);
+        // Scan reference agrees with the indexed per-model views.
+        let indexed: Vec<usize> = c.in_tier(1).collect();
+        let pool: Vec<usize> = c.best_effort_pool().collect();
+        c.set_scan_reference(true);
+        assert_eq!(c.in_tier(1).collect::<Vec<_>>(), indexed);
+        assert_eq!(c.best_effort_pool().collect::<Vec<_>>(), pool);
+        c.set_scan_reference(false);
+        // Model-aware provision sizes by the target model's caps.
+        let p = c.provision_model(1, Role::Decode, 0, 100);
+        assert_eq!(c.instances[p].model, 1);
+        assert_eq!(c.instances[p].kv_capacity, 256_000);
+        c.mark_ready(p);
+        assert_eq!(c.best_effort_pool_of(1).count(), 3);
+        c.audit(&[]);
+    }
+
+    /// The swap lifecycle: drain with `swap_to` set never retires, and
+    /// `complete_swap` re-keys the indices around the model change,
+    /// reloads caps, and re-enters via Provisioning.
+    #[test]
+    fn model_swap_drains_reloads_and_rekeys() {
+        let caps = [(900_000u64, 2048u64), (256_000u64, 1024u64)];
+        let mut c = Cluster::build_models(
+            ServingMode::Colocated,
+            &[2, 1],
+            0.0,
+            2,
+            &caps,
+            true,
+        );
+        let id = c.claim_for_tier_of(0, 0, 10).unwrap();
+        assert_eq!(c.in_tier_of(0, 0).count(), 1);
+        c.begin_swap(id, 1, 100);
+        assert!(c.draining_any());
+        assert_eq!(c.swap_pending(id), Some(1));
+        // Unroutable while swap-draining; never plain-retires.
+        assert_eq!(c.in_tier_of(0, 0).count(), 0);
+        assert!(!c.retire_if_drained(id, 200));
+        assert!(c.swap_ready(id, 200));
+        // Swap capacity is already committed to the target model.
+        let committed_before = c.committed_count_of(1, Role::Coloc);
+        assert_eq!(committed_before, 2, "swap target counts as committed");
+        let target = c.complete_swap(id, 200, 20_200);
+        assert_eq!(target, 1);
+        assert!(!c.draining_any());
+        assert_eq!(c.instances[id].model, 1);
+        assert_eq!(c.instances[id].kv_capacity, 256_000);
+        assert_eq!(c.instances[id].max_token_batch, 1024);
+        assert_eq!(c.swap_pending(id), None);
+        // Cold-starting under the new model: committed but not active.
+        assert_eq!(c.committed_count_of(1, Role::Coloc), 2);
+        assert_eq!(c.active_count_of(1, Role::Coloc), 1);
+        assert_eq!(c.best_effort_pool_of(1).count(), 1);
+        c.mark_ready(id);
+        assert_eq!(c.best_effort_pool_of(1).collect::<Vec<_>>(), vec![id, 2]);
+        assert_eq!(c.best_effort_pool_of(0).collect::<Vec<_>>(), vec![1]);
+        // Tier alloc window (opened at the claim, t=10) closed at swap
+        // time (t=200).
+        assert_eq!(c.instances[id].allocated_ms(1_000), 190);
+        c.audit(&[]);
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //! * Iteration duration = CostModel ground truth, quantized to 1 ms.
 
 use super::SimRequest;
-use crate::model::CostModel;
+use crate::model::{CostModel, ModelId};
 use crate::slo::TimeMs;
 use std::collections::VecDeque;
 
@@ -101,6 +101,16 @@ pub struct Instance {
     pub id: usize,
     /// Serving role (prefill / decode / coloc).
     pub role: Role,
+    /// Which registry model is loaded here. A hard placement
+    /// constraint: only requests of the same model may be routed to
+    /// this instance. Always 0 in single-model fleets.
+    pub model: ModelId,
+    /// Pending model swap: set when an autoscaler ordered this
+    /// instance to reload as another model. The instance drains first;
+    /// once empty the simulator calls
+    /// [`crate::sim::Cluster::complete_swap`], which re-provisions it
+    /// as `swap_to` after the reload delay.
+    pub swap_to: Option<ModelId>,
     /// Elastic-fleet lifecycle state (`Active` for fixed fleets).
     pub lifecycle: Lifecycle,
     /// Simulated time this instance was provisioned (0 for the initial
@@ -167,6 +177,8 @@ impl Instance {
         Instance {
             id,
             role,
+            model: 0,
+            swap_to: None,
             lifecycle: Lifecycle::Active,
             born_ms: 0,
             running: Vec::new(),
@@ -249,6 +261,39 @@ impl Instance {
         self.alloc_end(now);
     }
 
+    /// Finish a model swap: re-provision this (drained, empty)
+    /// instance as `model` with the new model's per-instance caps.
+    /// Records the drain latency like [`Instance::retire`] does, then
+    /// re-enters `Provisioning` until `ready_at` — the cold-start-like
+    /// weight-reload delay. Billing continues through the reload: the
+    /// hardware is still allocated, which is exactly why swaps are not
+    /// free. Cluster-level index re-keying is the caller's job
+    /// ([`crate::sim::Cluster::complete_swap`]).
+    pub fn complete_swap(
+        &mut self,
+        model: ModelId,
+        kv_capacity: u64,
+        max_token_batch: u64,
+        now: TimeMs,
+        ready_at: TimeMs,
+    ) {
+        debug_assert!(self.is_empty(), "swapping instance {} with work", self.id);
+        debug_assert!(
+            matches!(self.lifecycle, Lifecycle::Draining { .. }),
+            "swapping non-draining instance {}",
+            self.id
+        );
+        if let Lifecycle::Draining { since } = self.lifecycle {
+            self.drain_latency_ms = Some(now.saturating_sub(since));
+        }
+        self.model = model;
+        self.swap_to = None;
+        self.migrate_on_drain = false;
+        self.kv_capacity = kv_capacity;
+        self.max_token_batch = max_token_batch;
+        self.lifecycle = Lifecycle::Provisioning { ready_at };
+    }
+
     /// Scale-in KV migration: detach every decode-phase resident — both
     /// the running batch and in-flight KV handoffs — so the caller can
     /// re-place them on surviving servers. Queued prefills stay: they
@@ -316,6 +361,11 @@ impl Instance {
             self.id,
             self.lifecycle
         );
+        debug_assert_eq!(
+            requests[job.req_idx].req.model, self.model,
+            "prefill for model {} placed on instance {} serving model {}",
+            requests[job.req_idx].req.model, self.id, self.model
+        );
         let r = &requests[job.req_idx];
         self.kv_prefill_done_tokens += r.prefill_done as u64;
         self.queued_prefill_rem_tokens += (r.req.prefill_len - r.prefill_done) as u64;
@@ -338,6 +388,11 @@ impl Instance {
             self.id,
             self.lifecycle
         );
+        debug_assert_eq!(
+            requests[req_idx].req.model, self.model,
+            "decode for model {} placed on instance {} serving model {}",
+            requests[req_idx].req.model, self.id, self.model
+        );
         self.kv_handoff_tokens += requests[req_idx].kv_now();
         self.decode_queue.push_back((req_idx, ready));
     }
@@ -347,6 +402,11 @@ impl Instance {
     /// through `form_batch`/`complete_iteration`). Keeps the cached
     /// KV counters coherent — never push onto `running` directly.
     pub fn push_running(&mut self, req_idx: usize, requests: &[SimRequest]) {
+        debug_assert_eq!(
+            requests[req_idx].req.model, self.model,
+            "resident for model {} placed on instance {} serving model {}",
+            requests[req_idx].req.model, self.id, self.model
+        );
         self.kv_running_tokens += requests[req_idx].kv_now();
         self.running.push(RunningReq {
             req_idx,
@@ -773,6 +833,7 @@ mod tests {
             prefill_len: p,
             decode_len: d,
             slo: Slo::new(1000, 50),
+            model: 0,
         }));
         SimRequest::new(req, 0)
     }
@@ -986,6 +1047,24 @@ mod tests {
         assert_eq!(reqs[1].decoded, 1);
         assert!(i.is_empty());
         i.audit_cached_load(&reqs);
+    }
+
+    #[test]
+    fn complete_swap_reloads_with_new_caps() {
+        let mut i = Instance::new(4, Role::Coloc, 900_000, 2048);
+        i.begin_drain(1_000);
+        i.swap_to = Some(1);
+        i.complete_swap(1, 256_000, 2048, 3_500, 23_500);
+        assert_eq!(i.model, 1);
+        assert_eq!(i.swap_to, None);
+        assert_eq!(i.kv_capacity, 256_000);
+        assert_eq!(i.drain_latency_ms, Some(2_500));
+        assert_eq!(i.lifecycle, Lifecycle::Provisioning { ready_at: 23_500 });
+        assert!(!i.lifecycle.accepts_work());
+        i.mark_ready();
+        assert!(i.lifecycle.accepts_work());
+        // Billing never paused: born_ms is untouched by the swap.
+        assert_eq!(i.born_ms, 0);
     }
 
     #[test]

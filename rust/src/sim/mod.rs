@@ -83,6 +83,21 @@
 //! recomputes from the job's committed `prefill_done`, so prefill work
 //! is never applied twice.
 //!
+//! # Multi-model fleets and hot swaps
+//!
+//! Every instance is tagged with the registry [`ModelId`] it has
+//! loaded; a request only ever lands on instances of its own model
+//! (the hard placement constraint, `debug_assert`ed at every `push_*`).
+//! Ground-truth iteration times come from the per-model cost models
+//! (`with_cost_models`); a single-model run uses exactly the one
+//! [`CostModel`] it always did. A `SwapModel` scale action drains the
+//! instance (same machinery as scale-in, including KV migration when
+//! enabled), then — once empty with egress done — reloads it with the
+//! target model's weights and caps: `Cluster::complete_swap` re-keys
+//! the membership indices around the model change and the instance
+//! re-enters through the ordinary cold-start path after
+//! `model_swap_delay_ms`. Billing never pauses across a swap.
+//!
 //! # Event engine: calendar queue + arrival cursor
 //!
 //! Events live in an [`equeue::EventQueue`] — a calendar queue
@@ -124,7 +139,7 @@ use crate::coordinator::{Autoscaler, RouteCtx, Router, ScaleAction};
 use crate::metrics::{
     AttainmentReport, CostAccount, FleetSample, FleetSeries, MigrationStats, RequestOutcome,
 };
-use crate::model::CostModel;
+use crate::model::{CostModel, ModelId};
 use crate::profile::ProfileTable;
 use crate::slo::{DsloTracker, TimeMs};
 use crate::workload::Workload;
@@ -247,6 +262,17 @@ pub struct ElasticParams {
     /// (scaler actions on `Role::Prefill` are ignored — the PR 2
     /// behaviour bit-for-bit).
     pub prefill: Option<PrefillElastic>,
+    /// Coalesce a drain's same-`(source, destination)` KV migration
+    /// streams into one bulk transfer per destination: residents are
+    /// routed at drain time, grouped by destination, and each group
+    /// pays a single `max(kv_transfer_ms, Σkv / MIGRATION_TOKENS_PER_MS)`
+    /// stream instead of one `MigrationArrive` round-trip each. `false`
+    /// reproduces the per-request transfer path bit-for-bit.
+    pub migration_batching: bool,
+    /// Model hot-swap reload delay: drain-complete → `InstanceReady`
+    /// under the new model (weight load + warmup). Irrelevant (and
+    /// unread) while the fleet serves a single model.
+    pub model_swap_delay_ms: TimeMs,
 }
 
 /// Environment knobs (not policy).
@@ -309,8 +335,13 @@ enum EventKey {
 pub struct Simulation<'a> {
     /// Environment knobs.
     pub params: SimParams,
-    /// Ground-truth iteration times (the simulated hardware).
+    /// Ground-truth iteration times (the simulated hardware) for
+    /// registry model 0 — the only model unless
+    /// [`Simulation::with_cost_models`] installs more.
     pub cost_model: CostModel,
+    /// Per-model ground truth, indexed by [`ModelId`]; entry 0 is
+    /// always `cost_model`.
+    cost_models: Vec<CostModel>,
     /// The table the router sees (§4.5 profiling stand-in).
     pub profile: &'a ProfileTable,
     /// The request arena: per-request mutable state, indexed by the
@@ -365,9 +396,11 @@ impl<'a> Simulation<'a> {
             EventQueue::calendar()
         };
         let tick = params.tick_ms;
+        let cost_models = vec![cost_model.clone()];
         let mut sim = Simulation {
             params,
             cost_model,
+            cost_models,
             profile,
             requests,
             cluster,
@@ -382,6 +415,20 @@ impl<'a> Simulation<'a> {
         };
         sim.push_event(tick, EventKey::Tick);
         sim
+    }
+
+    /// Install the full per-model ground-truth cost models (from
+    /// [`crate::model::ModelRegistry::cost_models`]). Entry 0 must be
+    /// the model the simulation was built with; a single-entry vector
+    /// leaves behaviour untouched.
+    pub fn with_cost_models(mut self, cost_models: Vec<CostModel>) -> Simulation<'a> {
+        assert!(!cost_models.is_empty());
+        assert_eq!(
+            cost_models[0], self.cost_model,
+            "registry model 0 must match the simulation's base cost model"
+        );
+        self.cost_models = cost_models;
+        self
     }
 
     fn push_event(&mut self, t: TimeMs, key: EventKey) {
@@ -463,8 +510,9 @@ impl<'a> Simulation<'a> {
                 EventKey::Wake(inst) => {
                     self.maybe_start_iteration(inst, router);
                     // A migrating drainer's wake may be its egress
-                    // deadline — it retires here if truly done.
-                    self.cluster.retire_if_drained(inst, self.now);
+                    // deadline — it retires (or completes its model
+                    // swap) here if truly done.
+                    self.finish_drain(inst);
                 }
                 EventKey::InstanceReady(inst) => {
                     self.cluster.mark_ready(inst);
@@ -523,12 +571,13 @@ impl<'a> Simulation<'a> {
                             self.maybe_start_iteration(inst, router);
                         }
                         self.tick_scratch = idle;
-                        // Retire drainers that emptied outside their own
-                        // iteration path (e.g. released by the router) —
-                        // skipped outright while nothing is draining.
+                        // Retire (or swap-reload) drainers that emptied
+                        // outside their own iteration path (e.g.
+                        // released by the router) — skipped outright
+                        // while nothing is draining.
                         if self.cluster.draining_any() {
                             for id in 0..self.cluster.instances.len() {
-                                self.cluster.retire_if_drained(id, self.now);
+                                self.finish_drain(id);
                             }
                         }
                         if log::log_enabled!(log::Level::Trace) && self.now % 1000 == 0 {
@@ -590,34 +639,16 @@ impl<'a> Simulation<'a> {
         &mut self,
         scaler: &mut dyn Autoscaler,
         ep: &ElasticParams,
-        _router: &mut dyn Router,
+        router: &mut dyn Router,
     ) {
         let actions = scaler.evaluate(self.now, &mut self.ctx());
         for action in actions {
             match action {
                 ScaleAction::Provision { role } => {
-                    let cap = match role {
-                        Role::Prefill => match &ep.prefill {
-                            Some(p) => p.max_instances,
-                            None => {
-                                log::debug!(
-                                    "t={} dropping prefill provision: prefill tier is static",
-                                    self.now
-                                );
-                                continue;
-                            }
-                        },
-                        _ => ep.max_instances,
-                    };
-                    if self.cluster.committed_count(role) < cap {
-                        let ready = self.now + ep.provision_delay_ms;
-                        let id = self.cluster.provision(role, self.now, ready);
-                        self.push_event(ready, EventKey::InstanceReady(id));
-                        log::debug!(
-                            "t={} scale-out: provision inst {id} ({role:?}), ready at {ready}",
-                            self.now
-                        );
-                    }
+                    self.apply_provision(0, role, ep);
+                }
+                ScaleAction::ProvisionModel { model, role } => {
+                    self.apply_provision(model, role, ep);
                 }
                 ScaleAction::Drain { inst, migrate } => {
                     let role = self.cluster.instances[inst].role;
@@ -643,7 +674,7 @@ impl<'a> Simulation<'a> {
                             // instead of waiting for them to finish.
                             match role {
                                 Role::Prefill => self.migrate_prefill_queue(inst),
-                                _ => self.migrate_residents(inst),
+                                _ => self.migrate_residents(inst, router),
                             }
                         }
                         // Empty drainers retire on the spot.
@@ -651,9 +682,93 @@ impl<'a> Simulation<'a> {
                         log::debug!("t={} scale-in: drain inst {inst} ({role:?})", self.now);
                     }
                 }
+                ScaleAction::SwapModel { inst, model } => {
+                    let role = self.cluster.instances[inst].role;
+                    // A swap is both a scale-in (of the old model) and a
+                    // scale-out (of the new): it needs an active, not
+                    // already-swapping instance, must not strand the old
+                    // model's last server, and counts against the
+                    // target's committed capacity like a provision.
+                    let old = self.cluster.instances[inst].model;
+                    if model != old
+                        && model < self.cluster.num_models
+                        && self.cluster.instances[inst].lifecycle.accepts_work()
+                        && self.cluster.active_count_of(old, role) > 1
+                    {
+                        self.cluster.begin_swap(inst, model, self.now);
+                        if ep.migration {
+                            match role {
+                                Role::Prefill => self.migrate_prefill_queue(inst),
+                                _ => self.migrate_residents(inst, router),
+                            }
+                        }
+                        log::debug!(
+                            "t={} hot-swap: inst {inst} ({role:?}) model {old} -> {model}",
+                            self.now
+                        );
+                        // Already empty: reload starts immediately.
+                        self.finish_drain(inst);
+                    }
+                }
             }
         }
         self.sample_fleet();
+    }
+
+    /// Bounds-checked provision of a `model`-loaded instance (the
+    /// shared body of `Provision` ≡ model 0 and `ProvisionModel`).
+    fn apply_provision(&mut self, model: ModelId, role: Role, ep: &ElasticParams) {
+        if model >= self.cluster.num_models {
+            log::debug!("t={} dropping provision of unknown model {model}", self.now);
+            return;
+        }
+        let cap = match role {
+            Role::Prefill => match &ep.prefill {
+                Some(p) => p.max_instances,
+                None => {
+                    log::debug!(
+                        "t={} dropping prefill provision: prefill tier is static",
+                        self.now
+                    );
+                    return;
+                }
+            },
+            _ => ep.max_instances,
+        };
+        if self.cluster.committed_count(role) < cap {
+            let ready = self.now + ep.provision_delay_ms;
+            let id = self.cluster.provision_model(model, role, self.now, ready);
+            self.push_event(ready, EventKey::InstanceReady(id));
+            log::debug!(
+                "t={} scale-out: provision inst {id} (model {model}, {role:?}), ready at {ready}",
+                self.now
+            );
+        }
+    }
+
+    /// A draining instance emptied out: either finish its model swap
+    /// (reload + cold start under the new model) or retire it. Every
+    /// drain-completion site funnels through here, so a swap can
+    /// complete wherever a retire could.
+    fn finish_drain(&mut self, inst: usize) {
+        if self.cluster.swap_ready(inst, self.now) {
+            let delay = self
+                .params
+                .elastic
+                .as_ref()
+                .map(|e| e.model_swap_delay_ms)
+                .unwrap_or(0);
+            let ready = self.now + delay;
+            let target = self.cluster.complete_swap(inst, self.now, ready);
+            self.migration.model_swaps += 1;
+            self.push_event(ready, EventKey::InstanceReady(inst));
+            log::debug!(
+                "t={} hot-swap: inst {inst} reloading as model {target}, ready at {ready}",
+                self.now
+            );
+        } else {
+            self.cluster.retire_if_drained(inst, self.now);
+        }
     }
 
     /// Evict `inst`'s decode residents and schedule their KV transfers.
@@ -663,30 +778,98 @@ impl<'a> Simulation<'a> {
     /// handoff hop, which placement itself pays (so nothing is paid
     /// twice). The source may not retire — and keeps billing — until
     /// its last transfer has left (`egress_until`).
-    fn migrate_residents(&mut self, inst: usize) {
+    ///
+    /// With `ElasticParams::migration_batching` on, residents are
+    /// instead routed *now* and coalesced into one bulk transfer per
+    /// `(source, destination)` pair: the whole group lands when its
+    /// single `max(kv_transfer_ms, Σkv / MIGRATION_TOKENS_PER_MS)`
+    /// stream completes (one stream setup instead of per-request
+    /// round-trips). Requests the router pends fall back to the
+    /// per-request `MigrationArrive` path unchanged.
+    fn migrate_residents(&mut self, inst: usize, router: &mut dyn Router) {
+        let batching = self
+            .params
+            .elastic
+            .as_ref()
+            .is_some_and(|e| e.migration_batching);
         let evicted = self.cluster.instances[inst].evict_residents();
         self.cluster.refresh_load(inst);
         let kv_transfer_ms = self.params.kv_transfer_ms;
         let mut egress_until = self.cluster.instances[inst].egress_until;
+        if !batching {
+            for req_idx in evicted {
+                let kv = self.requests[req_idx].kv_now();
+                self.requests[req_idx].decode_instance = None;
+                let stream =
+                    (kv / MIGRATION_TOKENS_PER_MS.max(1)).saturating_sub(kv_transfer_ms);
+                self.migration.migrated_requests += 1;
+                self.migration.migrated_kv_tokens += kv;
+                egress_until = egress_until.max(self.now + stream);
+                self.push_event(self.now + stream, EventKey::MigrationArrive(req_idx));
+                log::debug!(
+                    "t={} migrate: req {req_idx} ({kv} KV tokens) off inst {inst}, lands in {stream} ms",
+                    self.now
+                );
+            }
+            self.cluster.instances[inst].egress_until = egress_until;
+            if egress_until > self.now {
+                // Retire exactly when the last transfer departs, not at
+                // the next housekeeping tick.
+                self.push_event(egress_until, EventKey::Wake(inst));
+            }
+            return;
+        }
+        // Batched path: place every evictee immediately, then group the
+        // placed ones by destination into one bulk stream each.
+        let mut groups: Vec<(usize, Vec<usize>, u64)> = Vec::new();
         for req_idx in evicted {
             let kv = self.requests[req_idx].kv_now();
             self.requests[req_idx].decode_instance = None;
-            let stream = (kv / MIGRATION_TOKENS_PER_MS.max(1)).saturating_sub(kv_transfer_ms);
             self.migration.migrated_requests += 1;
             self.migration.migrated_kv_tokens += kv;
-            egress_until = egress_until.max(self.now + stream);
-            self.push_event(self.now + stream, EventKey::MigrationArrive(req_idx));
+            match router.route_decode(self.now, req_idx, &mut self.ctx()) {
+                Some(d) => match groups.iter_mut().find(|g| g.0 == d) {
+                    Some(g) => {
+                        g.1.push(req_idx);
+                        g.2 += kv;
+                    }
+                    None => groups.push((d, vec![req_idx], kv)),
+                },
+                None => {
+                    // Pended by the router: per-request fallback.
+                    let stream = (kv / MIGRATION_TOKENS_PER_MS.max(1))
+                        .saturating_sub(kv_transfer_ms);
+                    egress_until = egress_until.max(self.now + stream);
+                    self.push_event(self.now + stream, EventKey::MigrationArrive(req_idx));
+                }
+            }
+        }
+        for (d, reqs, total_kv) in groups {
+            // One bulk stream end-to-end: the handoff-ready time *is*
+            // the stream completion, so the per-request hop is folded
+            // into (not added on top of) the bulk transfer.
+            let stream =
+                (total_kv / MIGRATION_TOKENS_PER_MS.max(1)).max(kv_transfer_ms);
+            let ready = self.now + stream;
+            egress_until = egress_until.max(ready);
+            self.migration.batched_transfers += 1;
             log::debug!(
-                "t={} migrate: req {req_idx} ({kv} KV tokens) off inst {inst}, lands in {stream} ms",
-                self.now
+                "t={} migrate: bulk {}x reqs ({total_kv} KV tokens) inst {inst} -> {d}, lands in {stream} ms",
+                self.now,
+                reqs.len()
             );
+            for req_idx in reqs {
+                self.requests[req_idx].decode_instance = Some(d);
+                self.cluster.instances[d].push_decode(req_idx, ready, &self.requests);
+            }
+            self.cluster.refresh_load(d);
+            self.maybe_start_iteration(d, router);
         }
         self.cluster.instances[inst].egress_until = egress_until;
         if egress_until > self.now {
-            // Retire exactly when the last transfer departs, not at the
-            // next housekeeping tick.
             self.push_event(egress_until, EventKey::Wake(inst));
         }
+        self.restart_fed_instances(router);
     }
 
     /// Evict a draining prefill server's queued jobs and re-route them
@@ -740,6 +923,7 @@ impl<'a> Simulation<'a> {
         let mut sample = FleetSample {
             t_ms: self.now,
             per_tier,
+            per_model: vec![0; self.cluster.num_models],
             best_effort: self.cluster.best_effort_pool().count(),
             active: 0,
             active_prefill: 0,
@@ -750,6 +934,7 @@ impl<'a> Simulation<'a> {
             match i.lifecycle {
                 Lifecycle::Active => {
                     sample.active += 1;
+                    sample.per_model[i.model] += 1;
                     if i.role == Role::Prefill {
                         sample.active_prefill += 1;
                     }
@@ -765,7 +950,7 @@ impl<'a> Simulation<'a> {
     fn handle_arrival(&mut self, idx: usize, router: &mut dyn Router) {
         // Feed the O(1) unplaced-demand counter before routing: the
         // request exists (and may pend) from this event on.
-        self.cluster.note_arrival();
+        self.cluster.note_arrival(self.requests[idx].req.model);
         let chosen = router.route_new(self.now, idx, &mut self.ctx());
         if let Some(inst) = chosen {
             let deadline =
@@ -788,11 +973,14 @@ impl<'a> Simulation<'a> {
         let now = self.now;
         // Disjoint field borrows: the instance is mutated while the
         // cost model is only read — no clone needed on this hot path.
+        // Ground truth is the cost model of the model *this instance*
+        // has loaded (entry 0 for every single-model run).
+        let cm = &self.cost_models[self.cluster.instances[inst].model];
         let iter = self.cluster.instances[inst].form_batch(
             now,
             &mut self.requests,
             budget,
-            &self.cost_model,
+            cm,
         );
         // Handoff admits inside form_batch are key-neutral (in-flight
         // KV becomes resident, batch and residency unchanged) — the
@@ -825,7 +1013,11 @@ impl<'a> Simulation<'a> {
         // Token emission / prefill progress / completions all moved the
         // load key: re-key before the router sees the fleet again.
         self.cluster.refresh_load(inst);
-        self.cluster.note_finished(finished);
+        // Everything resident here shares the instance's model (the
+        // hard placement constraint), so the whole batch of finishes
+        // books against it.
+        let model = self.cluster.instances[inst].model;
+        self.cluster.note_finished(model, finished);
         // Completed prefills → decode placement.
         for req_idx in completed_prefills {
             match self.params.mode {
@@ -844,14 +1036,14 @@ impl<'a> Simulation<'a> {
         if self.cluster.instances[inst].migrate_on_drain
             && self.cluster.instances[inst].decode_batch_now() > 0
         {
-            self.migrate_residents(inst);
+            self.migrate_residents(inst, router);
         }
         router.on_iter_end(now, inst, &mut self.ctx());
         self.maybe_start_iteration(inst, router);
         self.restart_fed_instances(router);
         // A draining instance whose last resident just finished leaves
-        // the fleet here.
-        self.cluster.retire_if_drained(inst, now);
+        // the fleet (or completes its model swap) here.
+        self.finish_drain(inst);
         finished
     }
 
@@ -952,6 +1144,7 @@ impl<'a> Simulation<'a> {
             let attained = r.is_finished() && r.tracker.attained();
             outcomes.push(RequestOutcome {
                 id: r.req.id,
+                model: r.req.model,
                 slo: r.req.slo,
                 arrival_ms: r.req.arrival_ms,
                 first_token_ms: r.first_token_ms,
@@ -967,12 +1160,15 @@ impl<'a> Simulation<'a> {
         let attainment = AttainmentReport::from_outcomes(&outcomes);
         let mut cost = CostAccount {
             requests_served: outcomes.iter().filter(|o| o.finish_ms.is_some()).count() as u64,
+            active_instance_ms_per_model: vec![0; self.cluster.num_models],
+            requests_served_per_model: vec![0; self.cluster.num_models],
             ..Default::default()
         };
         for o in &outcomes {
             if o.finish_ms.is_none() {
                 continue; // partial tokens of unfinished requests don't bill
             }
+            cost.requests_served_per_model[o.model] += 1;
             cost.tokens_total += o.tokens;
             if o.attained {
                 cost.goodput_tokens += o.tokens;
@@ -990,7 +1186,11 @@ impl<'a> Simulation<'a> {
             };
             // Elastic-fleet billing: an instance costs money from the
             // moment it is provisioned until it retires, busy or not.
+            // The per-model split bills an instance's whole existence
+            // to the model it ended the run loaded with (hot swaps
+            // reassign the bill; see `CostAccount`).
             cost.active_instance_ms += i.active_span_ms(span);
+            cost.active_instance_ms_per_model[i.model] += i.active_span_ms(span);
         }
         // Drain latencies: recorded at retirement; drains still open at
         // the end of the run are censored at the span (they cost at

@@ -7,7 +7,9 @@ pub mod arrivals;
 pub use traces::{TraceKind, TraceGenerator};
 pub use arrivals::{poisson_arrivals, RateSchedule};
 
+use crate::model::ModelId;
 use crate::slo::{Slo, TimeMs};
+use crate::util::rng::Rng;
 
 /// Unique request id.
 pub type RequestId = u64;
@@ -27,6 +29,10 @@ pub struct Request {
     pub decode_len: u32,
     /// The request's sampled SLO.
     pub slo: Slo,
+    /// Which registered model this request targets. Always 0 in
+    /// single-model configurations; assigned by
+    /// [`Workload::assign_model_mix`] for model-mix workloads.
+    pub model: ModelId,
 }
 
 impl Request {
@@ -86,6 +92,49 @@ impl Workload {
         self.requests.iter().map(|r| r.decode_len as f64).sum::<f64>()
             / self.requests.len() as f64
     }
+
+    /// Average decode length of requests targeting `model` (falls back
+    /// to the global average when the model has no requests) — the
+    /// per-model output-length predictor for model-mix routing.
+    pub fn avg_decode_len_of(&self, model: ModelId) -> f64 {
+        let (mut sum, mut n) = (0.0f64, 0usize);
+        for r in &self.requests {
+            if r.model == model {
+                sum += r.decode_len as f64;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            self.avg_decode_len()
+        } else {
+            sum / n as f64
+        }
+    }
+
+    /// Request count per model id in `0..num_models`.
+    pub fn model_counts(&self, num_models: usize) -> Vec<usize> {
+        let mut counts = vec![0usize; num_models.max(1)];
+        for r in &self.requests {
+            if r.model < counts.len() {
+                counts[r.model] += 1;
+            }
+        }
+        counts
+    }
+
+    /// Assign each request a model id sampled i.i.d. from `weights`
+    /// (one weight per registered model, normalized internally).
+    /// Single-model configurations never call this — every request
+    /// keeps the default model 0 and the workload bytes are untouched,
+    /// which is what keeps those runs bit-for-bit identical.
+    pub fn assign_model_mix(&mut self, weights: &[f64], rng: &mut Rng) {
+        if weights.len() <= 1 {
+            return;
+        }
+        for r in &mut self.requests {
+            r.model = rng.categorical(weights);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -99,6 +148,7 @@ mod tests {
             prefill_len: p,
             decode_len: d,
             slo: Slo::new(1000, 50),
+            model: 0,
         }
     }
 
@@ -116,6 +166,21 @@ mod tests {
         };
         assert_eq!(w.span_ms(), 1000);
         assert!((w.rate_per_s() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn model_mix_assignment() {
+        let mut w = Workload {
+            requests: (0..1000).map(|i| req(i, 1, 1)).collect(),
+        };
+        // No-op for a single-model mix.
+        w.assign_model_mix(&[1.0], &mut Rng::new(7));
+        assert!(w.requests.iter().all(|r| r.model == 0));
+        w.assign_model_mix(&[0.7, 0.3], &mut Rng::new(7));
+        let counts = w.model_counts(2);
+        assert_eq!(counts[0] + counts[1], 1000);
+        assert!((150..450).contains(&counts[1]), "{counts:?}");
+        assert!((w.avg_decode_len_of(1) - 1.0).abs() < 1e-9);
     }
 
     #[test]

@@ -175,6 +175,7 @@ impl TraceGenerator {
                 prefill_len: p,
                 decode_len: d,
                 slo,
+                model: 0,
             });
         }
         Workload { requests }
@@ -200,6 +201,7 @@ impl TraceGenerator {
                 prefill_len: p,
                 decode_len: d,
                 slo,
+                model: 0,
             });
         }
         Workload { requests }

@@ -30,6 +30,7 @@ fn sim_requests(kvs: &[u64]) -> (Instance, Vec<SimRequest<'static>>) {
             prefill_len: kv as u32,
             decode_len: 10_000,
             slo: Slo::new(500, 50),
+            model: 0,
         }));
         let mut r = SimRequest::new(req, 2);
         r.prefill_done = kv as u32;

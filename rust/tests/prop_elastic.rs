@@ -12,7 +12,7 @@ use polyserve::coordinator::{
     make_router, Autoscaler, GradientAutoscaler, PolyServeRouter, RouteCtx, Router, ScaleAction,
 };
 use polyserve::figures::{run_sim, Experiment};
-use polyserve::model::CostModel;
+use polyserve::model::{CostModel, ModelRegistry};
 use polyserve::profile::ProfileTable;
 use polyserve::sim::{
     Cluster, ElasticParams, PrefillElastic, PrefillJob, Role, SimParams, SimRequest, SimResult,
@@ -230,6 +230,7 @@ fn decode_phase_request(id: u64, prefill: u32, decode: u32, slo: Slo) -> SimRequ
         prefill_len: prefill,
         decode_len: decode,
         slo,
+        model: 0,
     }));
     let mut r = SimRequest::new(req, 3); // paper_default tier for tpot 100
     r.prefill_done = prefill;
@@ -470,7 +471,11 @@ impl Autoscaler for DrainOnce {
 /// One controlled long-decode run: 6 requests with 3000-token outputs
 /// on a 1-prefill + 2-decode fleet, the busiest decode server drained
 /// at t=2 s while every request is mid-stream.
-fn long_decode_drain_run(migration_cfg: bool, propose_migrate: bool) -> SimResult {
+fn long_decode_drain_run(
+    migration_cfg: bool,
+    propose_migrate: bool,
+    batching: bool,
+) -> SimResult {
     let cm = CostModel::h200_llama8b();
     let profile = ProfileTable::from_cost_model(&cm);
     let cfg = SimConfig {
@@ -485,6 +490,7 @@ fn long_decode_drain_run(migration_cfg: bool, propose_migrate: bool) -> SimResul
                 prefill_len: 256,
                 decode_len: 3_000,
                 slo: Slo::new(5_000, 100),
+                model: 0,
             })
             .collect(),
     };
@@ -497,6 +503,8 @@ fn long_decode_drain_run(migration_cfg: bool, propose_migrate: bool) -> SimResul
             provision_delay_ms: 1_000,
             scale_eval_ms: 500,
             migration: migration_cfg,
+            migration_batching: batching,
+            model_swap_delay_ms: 20_000,
             prefill: None,
         }),
         ..Default::default()
@@ -513,8 +521,8 @@ fn long_decode_drain_run(migration_cfg: bool, propose_migrate: bool) -> SimResul
 /// drain finishes strictly sooner than waiting the residents out.
 #[test]
 fn migration_conserves_tokens_and_shortens_drains() {
-    let off = long_decode_drain_run(false, true);
-    let on = long_decode_drain_run(true, true);
+    let off = long_decode_drain_run(false, true, false);
+    let on = long_decode_drain_run(true, true, false);
     for (label, res) in [("off", &off), ("on", &on)] {
         assert_eq!(res.unfinished, 0, "migration={label}: unfinished requests");
         for o in &res.outcomes {
@@ -544,8 +552,8 @@ fn migration_conserves_tokens_and_shortens_drains() {
 /// change nothing while the feature is off.
 #[test]
 fn migration_off_reproduces_wait_drain_bit_for_bit() {
-    let a = long_decode_drain_run(false, true); // proposal gated off
-    let b = long_decode_drain_run(false, false); // wait-drain proposed
+    let a = long_decode_drain_run(false, true, false); // proposal gated off
+    let b = long_decode_drain_run(false, false, false); // wait-drain proposed
     assert_eq!(a.outcomes.len(), b.outcomes.len());
     for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
         assert_eq!(x.id, y.id);
@@ -559,6 +567,155 @@ fn migration_off_reproduces_wait_drain_bit_for_bit() {
     assert_eq!(a.cost.active_instance_ms, b.cost.active_instance_ms);
     assert_eq!(a.migration, b.migration);
     assert_eq!(a.migration.migrated_requests, 0);
+}
+
+/// Batched per-destination transfers move exactly the same residents
+/// (same eviction decisions, same KV totals) as the per-request path
+/// and conserve every token — only the transfer *timing* changes (one
+/// bulk stream per destination instead of a fixed delay per request).
+#[test]
+fn batched_migration_conserves_tokens_and_residents() {
+    let per_req = long_decode_drain_run(true, true, false);
+    let batched = long_decode_drain_run(true, true, true);
+    for (label, res) in [("per-request", &per_req), ("batched", &batched)] {
+        assert_eq!(res.unfinished, 0, "batching={label}: unfinished requests");
+        for o in &res.outcomes {
+            assert_eq!(
+                o.tokens, 3_000,
+                "batching={label}: request {} emitted {} of 3000 tokens",
+                o.id, o.tokens
+            );
+        }
+        assert_eq!(res.migration.drains(), 1, "batching={label}: expected one drain");
+    }
+    assert!(batched.migration.migrated_requests > 0, "residents must migrate");
+    assert_eq!(
+        batched.migration.migrated_requests, per_req.migration.migrated_requests,
+        "batching must not change which residents are evicted"
+    );
+    assert_eq!(
+        batched.migration.migrated_kv_tokens, per_req.migration.migrated_kv_tokens,
+        "batching must not change the migrated KV volume"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Model hot-swap properties (multi-model fleet).
+// ---------------------------------------------------------------------
+
+/// Swaps the busiest model-0 decode server to model 1 exactly once at
+/// `at_ms` — the deterministic harness for the hot-swap path.
+struct SwapOnce {
+    at_ms: TimeMs,
+    fired: bool,
+}
+
+impl Autoscaler for SwapOnce {
+    fn evaluate(&mut self, now: TimeMs, ctx: &mut RouteCtx) -> Vec<ScaleAction> {
+        if self.fired || now < self.at_ms {
+            return Vec::new();
+        }
+        let target = ctx
+            .cluster
+            .instances
+            .iter()
+            .filter(|i| i.role == Role::Decode && i.model == 0 && i.lifecycle.accepts_work())
+            .max_by_key(|i| i.decode_batch_now())
+            .map(|i| i.id);
+        match target {
+            Some(inst) => {
+                self.fired = true;
+                vec![ScaleAction::SwapModel { inst, model: 1 }]
+            }
+            None => Vec::new(),
+        }
+    }
+
+    fn name(&self) -> String {
+        "swap-once".into()
+    }
+}
+
+/// Token conservation across a model hot-swap: the swapped server
+/// drains (migrating its mid-stream residents to surviving model-0
+/// servers), pays the weight-reload delay, and re-enters service under
+/// model 1 — and every request of both models still emits exactly its
+/// `decode_len` tokens, none lost to the eviction, none duplicated.
+#[test]
+fn model_hot_swap_conserves_tokens() {
+    let registry = ModelRegistry::builtin_pair();
+    let cm = registry.entry(0).cost_model.clone();
+    let profile = registry.entry(0).profile.clone();
+    let cfg = SimConfig {
+        mode: ServingMode::PdDisaggregated,
+        ..Default::default()
+    };
+    // 8 long-decode model-0 requests keep two decode servers busy while
+    // the swap fires; 4 model-1 requests need the model-1 sub-fleet.
+    let workload = Workload {
+        requests: (0..12u64)
+            .map(|i| Request {
+                id: i,
+                arrival_ms: i * 20,
+                prefill_len: 256,
+                decode_len: if i < 8 { 2_000 } else { 50 },
+                slo: Slo::new(5_000, 100),
+                model: usize::from(i >= 8),
+            })
+            .collect(),
+    };
+    // Model 0: 1 prefill + 2 decode (so the swap never empties the
+    // sub-fleet); model 1: 1 prefill + 1 decode.
+    let cluster = Cluster::build_models(
+        ServingMode::PdDisaggregated,
+        &[3, 2],
+        0.34,
+        cfg.tiers.len(),
+        &registry.instance_caps(),
+        true,
+    );
+    let params = SimParams {
+        mode: ServingMode::PdDisaggregated,
+        elastic: Some(ElasticParams {
+            min_instances: 1,
+            max_instances: 6,
+            provision_delay_ms: 300,
+            scale_eval_ms: 500,
+            migration: true,
+            migration_batching: false,
+            model_swap_delay_ms: 700,
+            prefill: None,
+        }),
+        ..Default::default()
+    };
+    let sim = Simulation::new(params, cm, &profile, &workload, cluster, &cfg.tiers)
+        .with_cost_models(registry.cost_models());
+    let mut router =
+        PolyServeRouter::new(&cfg, workload.avg_decode_len()).with_models(registry.profiles());
+    let mut scaler = SwapOnce { at_ms: 2_000, fired: false };
+    let res = sim.run_elastic(&mut router, Some(&mut scaler));
+    assert_eq!(res.unfinished, 0, "hot-swap run left unfinished requests");
+    for o in &res.outcomes {
+        let want = if o.id < 8 { 2_000 } else { 50 };
+        assert_eq!(
+            o.tokens, want,
+            "request {} (model {}) emitted {} of {} tokens across the swap",
+            o.id, o.model, o.tokens, want
+        );
+    }
+    assert_eq!(res.migration.model_swaps, 1, "exactly one hot-swap must complete");
+    assert!(
+        res.migration.migrated_requests > 0,
+        "the swapped server's mid-stream residents must migrate off"
+    );
+    // The swap rebalanced the fleet 3:2 → 2:3; billing follows the
+    // *final* loaded model.
+    assert_eq!(res.cost.active_instance_ms_per_model.len(), 2);
+    assert!(
+        res.cost.active_instance_ms_per_model[1] > res.cost.active_instance_ms_per_model[0] / 3,
+        "model 1's bill must reflect the swapped-in server: {:?}",
+        res.cost.active_instance_ms_per_model
+    );
 }
 
 // ---------------------------------------------------------------------
@@ -617,6 +774,7 @@ fn prefill_drain_run(migration_cfg: bool) -> SimResult {
                 prefill_len: 4_000,
                 decode_len: 50,
                 slo: Slo::new(8_000, 100),
+                model: 0,
             })
             .collect(),
     };
@@ -630,6 +788,8 @@ fn prefill_drain_run(migration_cfg: bool) -> SimResult {
             provision_delay_ms: 1_000,
             scale_eval_ms: 100,
             migration: migration_cfg,
+            migration_batching: false,
+            model_swap_delay_ms: 20_000,
             prefill: Some(PrefillElastic { min_instances: 1, max_instances: 4 }),
         }),
         ..Default::default()
@@ -721,6 +881,8 @@ fn prefill_elastic_off_is_bit_for_bit_pr2() {
             provision_delay_ms: 5_000,
             scale_eval_ms: 1_000,
             migration: true,
+            migration_batching: false,
+            model_swap_delay_ms: 20_000,
             prefill: None,
         }),
         ..Default::default()
@@ -831,6 +993,40 @@ impl Autoscaler for AuditEveryEval {
             "incremental unplaced-demand counter diverged from the scan \
              oracle at ScaleEval t={now}"
         );
+        // Per-(model, tier) counters and ordered sets: the `_of` views
+        // must agree with a from-scratch scan re-derivation per model.
+        for m in 0..ctx.cluster.num_models {
+            assert_eq!(
+                ctx.cluster.unplaced_demand_of(m),
+                ctx.cluster.unplaced_demand_scan_of(m, ctx.requests, now),
+                "per-model unplaced-demand counter diverged for model {m} \
+                 at ScaleEval t={now}"
+            );
+            for role in [Role::Prefill, Role::Decode, Role::Coloc] {
+                let by_index = ctx.cluster.with_role_of(m, role).count();
+                let by_scan = ctx
+                    .cluster
+                    .instances
+                    .iter()
+                    .filter(|i| i.model == m && i.role == role && i.lifecycle.accepts_work())
+                    .count();
+                assert_eq!(
+                    by_index, by_scan,
+                    "model {m} {role:?} membership index diverged at t={now}"
+                );
+            }
+            for k in 0..ctx.cluster.num_tiers {
+                let ordered: Vec<usize> = ctx.cluster.tier_by_load_desc_of(m, k).collect();
+                let mut scan: Vec<usize> = ctx.cluster.in_tier_of(m, k).collect();
+                scan.sort_unstable();
+                let mut resorted = ordered.clone();
+                resorted.sort_unstable();
+                assert_eq!(
+                    resorted, scan,
+                    "model {m} tier {k} ordered set lost/ghosted members at t={now}"
+                );
+            }
+        }
         self.evals += 1;
         self.inner.evaluate(now, ctx)
     }
@@ -888,6 +1084,8 @@ fn cached_counters_match_scans_at_every_scale_eval() {
             provision_delay_ms: 5_000,
             scale_eval_ms: 1_000,
             migration: true,
+            migration_batching: false,
+            model_swap_delay_ms: 20_000,
             prefill: Some(PrefillElastic { min_instances: 1, max_instances: 5 }),
         }),
         ..Default::default()
@@ -912,6 +1110,89 @@ fn cached_counters_match_scans_at_every_scale_eval() {
         "the audit must actually have run at ScaleEvals, got {}",
         scaler.evals
     );
+}
+
+/// The same audit-at-every-ScaleEval property on a two-model fleet:
+/// per-(model, tier) ordered sets, per-model membership indices and
+/// per-model unplaced counters are re-derived by scan at every epoch
+/// while the mix planner swaps/provisions/drains across both models.
+#[test]
+fn multi_model_cached_counters_match_scans_at_every_scale_eval() {
+    let mut cfg = SimConfig {
+        trace: TraceKind::ShareGpt,
+        policy: Policy::PolyServe,
+        mode: ServingMode::PdDisaggregated,
+        instances: 8,
+        requests: 300,
+        rate_frac_of_optimal: 0.3,
+        seed: 43,
+        ..Default::default()
+    };
+    cfg.models.mix = vec![0.7, 0.3];
+    cfg.models.swap_delay_ms = 2_000;
+    cfg.diurnal = Some(DiurnalSpec { peak_to_trough: 3.0, period_s: 120.0 });
+    cfg.elastic.scaler = ScalerKind::Gradient;
+    cfg.elastic.min_instances = 2;
+    cfg.elastic.max_instances = 12;
+    cfg.elastic.provision_delay_ms = 5_000;
+    cfg.elastic.scale_eval_ms = 1_000;
+    cfg.elastic.migration = true;
+    let exp = Experiment::prepare(&cfg);
+    let registry = ModelRegistry::builtin_pair();
+    let counts = polyserve::figures::split_mix(cfg.instances, &cfg.models.mix);
+    let cluster = Cluster::build_models(
+        exp.cfg.mode,
+        &counts,
+        exp.cfg.prefill_frac,
+        exp.cfg.tiers.len(),
+        &registry.instance_caps(),
+        true,
+    );
+    let params = SimParams {
+        mode: exp.cfg.mode,
+        elastic: Some(ElasticParams {
+            min_instances: 2,
+            max_instances: 12,
+            provision_delay_ms: 5_000,
+            scale_eval_ms: 1_000,
+            migration: true,
+            migration_batching: false,
+            model_swap_delay_ms: 2_000,
+            prefill: None,
+        }),
+        ..Default::default()
+    };
+    let sim = Simulation::new(
+        params,
+        exp.cost_model.clone(),
+        &exp.profile,
+        &exp.workload,
+        cluster,
+        &exp.cfg.tiers,
+    )
+    .with_cost_models(registry.cost_models());
+    let profiles = registry.profiles();
+    let mut router = polyserve::coordinator::make_router_with_models(
+        &exp.cfg,
+        exp.workload.avg_decode_len(),
+        &profiles,
+    );
+    let mut scaler = AuditEveryEval {
+        inner: polyserve::coordinator::make_autoscaler_with_models(&exp.cfg, &profiles)
+            .expect("elastic cfg"),
+        evals: 0,
+    };
+    let res = sim.run_elastic(router.as_mut(), Some(&mut scaler));
+    assert_eq!(res.unfinished, 0);
+    assert!(
+        scaler.evals > 10,
+        "the audit must actually have run at ScaleEvals, got {}",
+        scaler.evals
+    );
+    // Both models actually served traffic through the audited run.
+    let served = &res.cost.requests_served_per_model;
+    assert_eq!(served.len(), 2);
+    assert!(served.iter().all(|&n| n > 0), "one model served nothing: {served:?}");
 }
 
 /// Decision-identity across the full queue × index matrix: the
@@ -984,11 +1265,34 @@ fn indexed_run_reproduces_scan_reference_bit_for_bit() {
     ablated.seed = 37;
     ablated.features.load_gradient = false;
 
+    // Two-model registry fleet under the gradient scaler + mix planner:
+    // the per-(model, tier) `_of` views, per-model pending queues and
+    // swap/provision planning must themselves be engine-independent —
+    // every queue × index cell replays the identical decision stream.
+    let mut multi = SimConfig {
+        trace: TraceKind::ShareGpt,
+        policy: Policy::PolyServe,
+        mode: ServingMode::PdDisaggregated,
+        instances: 8,
+        requests: 300,
+        rate_frac_of_optimal: 0.3,
+        seed: 41,
+        ..Default::default()
+    };
+    multi.models.mix = vec![0.7, 0.3];
+    multi.models.swap_delay_ms = 2_000;
+    multi.elastic.scaler = ScalerKind::Gradient;
+    multi.elastic.min_instances = 2;
+    multi.elastic.max_instances = 10;
+    multi.elastic.provision_delay_ms = 5_000;
+    multi.elastic.scale_eval_ms = 1_000;
+
     for (label, cfg) in [
         ("pd_elastic", pd),
         ("coloc_elastic", co),
         ("pd_fixed", fixed),
         ("pd_no_gradient", ablated),
+        ("pd_multi_model", multi),
     ] {
         // Baseline cell: calendar queue + ordered indices (the default
         // hot path). Every other (queue, index) combination must match.

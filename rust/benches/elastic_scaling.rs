@@ -22,12 +22,22 @@
 //! steady 70/30 diurnal mix, and a model-1 flash crowd engineered so
 //! the mix planner must hot-swap warm donors' weights.
 //!
+//! Three adversarial cells per scaling policy score cost × attainment
+//! under the `[chaos]` stressors: an MTBF-driven instance-failure
+//! process (victims lose their KV and re-prefill from scratch), a spot
+//! fleet whose preemption notices race a short drain grace against
+//! stretched decode tails (deadline kills), and a 4× flash-crowd
+//! arrival spike with no chaos at all. Every chaos cell checks exact
+//! per-request token conservation against the workload's ground-truth
+//! decode lengths.
+//!
 //! `POLYSERVE_SMOKE=1` runs a tiny workload and asserts the invariants
 //! (every request finishes; migration counters move only when enabled;
 //! the prefill fleet moves only in `+pf` cells; both registry models
-//! serve and bill; the flash crowd forces ≥ 1 model hot-swap) so a
-//! regression fails CI outright. The `model-mix smoke OK` marker line
-//! is grep-gated in CI.
+//! serve and bill; the flash crowd forces ≥ 1 model hot-swap; the
+//! chaos cells see ≥ 1 failure and ≥ 1 deadline kill with zero token
+//! violations) so a regression fails CI outright. The `model-mix smoke
+//! OK` and `chaos smoke OK` marker lines are grep-gated in CI.
 
 use polyserve::analysis::ServingMode;
 use polyserve::config::{DiurnalSpec, Policy, ScalerKind, SimConfig};
@@ -37,7 +47,8 @@ use polyserve::slo::TierDistribution;
 use polyserve::util::benchkit::{f, full_scale, smoke_scale, Bench};
 use polyserve::util::rng::Rng;
 use polyserve::util::threadpool::par_map;
-use polyserve::workload::{TraceKind, Workload};
+use polyserve::workload::{RateSchedule, TraceKind, Workload};
+use std::collections::HashMap;
 
 #[derive(Clone, Copy)]
 struct Scenario {
@@ -278,6 +289,126 @@ fn run_cell(c: &Cell, n_peak: usize, requests: usize) -> CellResult {
     }
 }
 
+/// The three adversarial stressors the chaos cells score each scaling
+/// policy under.
+#[derive(Clone, Copy, PartialEq)]
+enum Stressor {
+    /// MTBF-driven instance failures: residents lose their KV and
+    /// re-enter placement for a full re-prefill.
+    Failure,
+    /// An all-spot elastic fleet under MTBF preemption notices with a
+    /// short drain grace, on stretched decode tails — wait-drain can't
+    /// finish in time, so the hard deadline kills the instance.
+    SpotPreempt,
+    /// A 4× arrival spike with no chaos: pure demand stress.
+    FlashCrowd,
+}
+
+impl Stressor {
+    fn name(self) -> &'static str {
+        match self {
+            Stressor::Failure => "instance_failure",
+            Stressor::SpotPreempt => "spot_preempt",
+            Stressor::FlashCrowd => "flash_crowd",
+        }
+    }
+}
+
+struct ChaosCellResult {
+    attain: f64,
+    /// Spot-discounted bill (== the plain bill when nothing is spot).
+    bill_s: f64,
+    cost_per_1k_goodput_tokens: f64,
+    failures: u64,
+    preempt_notices: u64,
+    preempt_drained: u64,
+    deadline_kills: u64,
+    replaced_requests: u64,
+    lost_kv_tokens: u64,
+    spot_s: f64,
+    unfinished: usize,
+    /// Requests whose emitted token count drifted from the workload's
+    /// ground-truth decode length — must be zero in every cell.
+    token_violations: usize,
+    chaos_quiet: bool,
+}
+
+fn run_chaos_cell(
+    stressor: Stressor,
+    scaler: ScalerKind,
+    n_peak: usize,
+    requests: usize,
+) -> ChaosCellResult {
+    let mut cfg = SimConfig {
+        trace: TraceKind::ShareGpt,
+        mode: ServingMode::Colocated,
+        policy: Policy::PolyServe,
+        instances: n_peak,
+        requests,
+        rate_frac_of_optimal: 0.6,
+        diurnal: (stressor != Stressor::FlashCrowd)
+            .then_some(DiurnalSpec { peak_to_trough: 3.0, period_s: 600.0 }),
+        ..Default::default()
+    };
+    cfg.elastic.scaler = scaler;
+    cfg.elastic.provision_delay_ms = 3_000;
+    cfg.elastic.scale_eval_ms = 1_000;
+    cfg.elastic.migration = true;
+    cfg.elastic.min_instances = (n_peak / 4).max(2);
+    cfg.elastic.max_instances = n_peak * 2;
+    match stressor {
+        Stressor::Failure => {
+            // Aggressive MTBF so even the smoke span sees failures.
+            cfg.chaos.fail_mtbf_s = 3.0;
+        }
+        Stressor::SpotPreempt => {
+            // Wait-drain against a 1 s grace on stretched decode tails:
+            // a preempted spot server holding a long-output resident
+            // cannot drain in time, so the hard deadline fires — the
+            // kill path the smoke gate asserts on.
+            cfg.elastic.migration = false;
+            cfg.chaos.preempt_mtbf_s = 4.0;
+            cfg.chaos.preempt_grace_ms = 1_000;
+            cfg.chaos.spot_fraction = 1.0;
+            cfg.chaos.spot_price_frac = 0.3;
+        }
+        Stressor::FlashCrowd => {}
+    }
+    let mut exp = Experiment::prepare(&cfg);
+    if stressor == Stressor::SpotPreempt {
+        stretch_decode_tail(&mut exp.workload);
+    }
+    if stressor == Stressor::FlashCrowd {
+        let base = exp.rate_rps;
+        exp.override_arrivals(&RateSchedule::flash_crowd(base, 4.0, 10_000, 20_000, 10));
+    }
+    // Ground truth *after* every workload mutation: conservation means
+    // each request emits exactly its (possibly stretched) decode_len.
+    let decode_len: HashMap<u64, u32> =
+        exp.workload.requests.iter().map(|r| (r.id, r.decode_len)).collect();
+    let res = exp.run();
+    let token_violations = res
+        .outcomes
+        .iter()
+        .filter(|o| o.tokens != decode_len[&o.id] as u64)
+        .count();
+    ChaosCellResult {
+        attain: res.attainment.overall(),
+        bill_s: res.cost.discounted_bill_ms(cfg.chaos.spot_price_frac) / 1000.0,
+        cost_per_1k_goodput_tokens: res.cost.cost_per_1k_goodput_tokens_s(),
+        failures: res.chaos.failures,
+        preempt_notices: res.chaos.preempt_notices,
+        preempt_drained: res.chaos.preempt_drained,
+        deadline_kills: res.chaos.preempt_deadline_kills,
+        replaced_requests: res.chaos.replaced_requests,
+        lost_kv_tokens: res.chaos.lost_kv_tokens,
+        spot_s: res.cost.spot_instance_ms as f64 / 1000.0,
+        unfinished: res.unfinished,
+        token_violations,
+        chaos_quiet: res.chaos.is_quiet(),
+    }
+}
+
 fn main() {
     let mut bench = Bench::new("elastic_scaling");
     let full = full_scale();
@@ -456,6 +587,59 @@ fn main() {
         &model_rows,
     );
 
+    // Adversarial cells: cost × attainment for each scaling policy
+    // under instance failures, spot preemption, and a flash crowd.
+    let mut chaos_grid = Vec::new();
+    for stressor in [Stressor::Failure, Stressor::SpotPreempt, Stressor::FlashCrowd] {
+        for scaler in [ScalerKind::Gradient, ScalerKind::Threshold, ScalerKind::Predictive] {
+            chaos_grid.push((stressor, scaler));
+        }
+    }
+    let chaos_results = par_map(chaos_grid, threads, move |_, (stressor, scaler)| {
+        (stressor, scaler, run_chaos_cell(stressor, scaler, n_peak, requests))
+    });
+    let chaos_rows: Vec<Vec<String>> = chaos_results
+        .iter()
+        .map(|(stressor, scaler, r)| {
+            vec![
+                stressor.name().to_string(),
+                scaler.name().to_string(),
+                f(r.attain, 3),
+                f(r.bill_s, 1),
+                f(r.cost_per_1k_goodput_tokens, 3),
+                r.failures.to_string(),
+                r.preempt_notices.to_string(),
+                r.preempt_drained.to_string(),
+                r.deadline_kills.to_string(),
+                r.replaced_requests.to_string(),
+                r.lost_kv_tokens.to_string(),
+                f(r.spot_s, 1),
+                r.token_violations.to_string(),
+                r.unfinished.to_string(),
+            ]
+        })
+        .collect();
+    bench.table(
+        "Chaos: cost (spot-discounted) x attainment under instance failures, spot preemption, and a flash crowd",
+        &[
+            "stressor",
+            "scaler",
+            "attain",
+            "bill_s",
+            "cost_per_1k_goodput_tok",
+            "failures",
+            "preempts",
+            "drained",
+            "deadline_kills",
+            "replaced",
+            "lost_kv_tok",
+            "spot_s",
+            "token_violations",
+            "unfinished",
+        ],
+        &chaos_rows,
+    );
+
     // Smoke invariants (CI): every request must finish in every cell
     // (the predictive cells included), migration counters move only
     // when migration is on, and the prefill fleet moves only in `+pf`
@@ -530,6 +714,45 @@ fn main() {
             "flash crowd must force at least one enforced model hot-swap"
         );
         println!("model-mix smoke OK: {} model hot-swaps enforced", flash.swaps);
+        // Chaos gates: every cell conserves tokens exactly and finishes
+        // everything; the failure cells actually fail instances, the
+        // spot cells actually issue notices and at least one hard
+        // deadline kill lands, and the flash crowd runs chaos-quiet.
+        for (stressor, scaler, r) in &chaos_results {
+            let label = format!("{}/{}", stressor.name(), scaler.name());
+            assert_eq!(r.unfinished, 0, "{label}: chaos cell left requests unfinished");
+            assert_eq!(
+                r.token_violations, 0,
+                "{label}: per-request token conservation violated"
+            );
+            assert!((0.0..=1.0).contains(&r.attain), "{label}");
+            match stressor {
+                Stressor::Failure => {
+                    assert!(r.failures >= 1, "{label}: no instance failure injected");
+                    assert!(
+                        r.replaced_requests >= 1 || r.lost_kv_tokens == 0,
+                        "{label}: failures lost KV without replacing anyone"
+                    );
+                }
+                Stressor::SpotPreempt => {
+                    assert!(r.preempt_notices >= 1, "{label}: no preemption notice fired");
+                    assert!(r.spot_s > 0.0, "{label}: no spot instance ever billed");
+                }
+                Stressor::FlashCrowd => {
+                    assert!(r.chaos_quiet, "{label}: flash crowd must run chaos-quiet");
+                }
+            }
+        }
+        let kills: u64 = chaos_results
+            .iter()
+            .filter(|(s, _, _)| *s == Stressor::SpotPreempt)
+            .map(|(_, _, r)| r.deadline_kills)
+            .sum();
+        assert!(kills >= 1, "no spot preemption ever hit its hard deadline");
+        let failures: u64 = chaos_results.iter().map(|(_, _, r)| r.failures).sum();
+        println!(
+            "chaos smoke OK: {failures} failures, {kills} deadline kills, 0 token violations"
+        );
         println!("smoke invariants OK ({} cells)", results.len());
     }
     bench.finish();

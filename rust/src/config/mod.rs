@@ -205,6 +205,56 @@ impl ModelsConfig {
     }
 }
 
+/// Fault-injection / spot-market knobs (`[chaos]`): seeded MTBF
+/// processes for hard kills and spot preemptions, plus the spot class
+/// assignment and its discounted price. All-off by default — then the
+/// simulator constructs no chaos machinery at all and the run is
+/// bit-for-bit the chaos-free path. Explicit `(t_ms, instance)`
+/// kill/preempt lists are a test/bench-level feature of the
+/// simulator's `ChaosParams`, not expressible from a config file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosConfig {
+    /// Mean time between random instance hard-kills, seconds
+    /// (exponential inter-arrival over the live fleet). 0 = off.
+    pub fail_mtbf_s: f64,
+    /// Mean time between random spot-preemption notices, seconds
+    /// (over active spot instances). 0 = off; requires
+    /// `spot_fraction > 0` to have any target.
+    pub preempt_mtbf_s: f64,
+    /// Grace window between a preemption notice and its hard deadline
+    /// kill, ms.
+    pub preempt_grace_ms: u64,
+    /// Fraction of elastically provisioned instances assigned to the
+    /// spot class (the initial fleet is always on-demand). 0 = none.
+    pub spot_fraction: f64,
+    /// Spot price as a fraction of the on-demand rate (discounted-bill
+    /// reporting only; the attainment math never sees it).
+    pub spot_price_frac: f64,
+    /// Seed of the chaos RNG stream (independent of the workload seed).
+    pub seed: u64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> ChaosConfig {
+        ChaosConfig {
+            fail_mtbf_s: 0.0,
+            preempt_mtbf_s: 0.0,
+            preempt_grace_ms: 30_000,
+            spot_fraction: 0.0,
+            spot_price_frac: 0.3,
+            seed: 0xC1A05,
+        }
+    }
+}
+
+impl ChaosConfig {
+    /// Does this config inject anything? `false` keeps the simulator's
+    /// chaos machinery entirely unconstructed (the seed path).
+    pub fn enabled(&self) -> bool {
+        self.fail_mtbf_s > 0.0 || self.preempt_mtbf_s > 0.0 || self.spot_fraction > 0.0
+    }
+}
+
 /// Diurnal demand-curve spec: when set, arrivals follow a sinusoid-
 /// approximating piecewise `RateSchedule` with this peak:trough ratio
 /// and period, instead of constant-rate Poisson.
@@ -254,6 +304,8 @@ pub struct SimConfig {
     pub models: ModelsConfig,
     /// Diurnal demand curve (default: constant-rate Poisson).
     pub diurnal: Option<DiurnalSpec>,
+    /// Fault-injection / spot knobs (default: fully off).
+    pub chaos: ChaosConfig,
 }
 
 /// PolyServe mechanism toggles — each maps to a §4 subsection, and the
@@ -307,6 +359,7 @@ impl Default for SimConfig {
             elastic: ElasticConfig::default(),
             models: ModelsConfig::default(),
             diurnal: None,
+            chaos: ChaosConfig::default(),
         }
     }
 }
@@ -449,6 +502,14 @@ impl SimConfig {
                 period_s: doc.f64_or("diurnal.period_s", 600.0),
             });
         }
+        let ch = &mut cfg.chaos;
+        ch.fail_mtbf_s = doc.f64_or("chaos.fail_mtbf_s", ch.fail_mtbf_s);
+        ch.preempt_mtbf_s = doc.f64_or("chaos.preempt_mtbf_s", ch.preempt_mtbf_s);
+        ch.preempt_grace_ms =
+            doc.usize_or("chaos.preempt_grace_ms", ch.preempt_grace_ms as usize) as u64;
+        ch.spot_fraction = doc.f64_or("chaos.spot_fraction", ch.spot_fraction);
+        ch.spot_price_frac = doc.f64_or("chaos.spot_price_frac", ch.spot_price_frac);
+        ch.seed = doc.f64_or("chaos.seed", ch.seed as f64) as u64;
         let f = &mut cfg.features;
         f.load_gradient = doc.bool_or("features.load_gradient", f.load_gradient);
         f.lazy_promotion = doc.bool_or("features.lazy_promotion", f.lazy_promotion);
@@ -530,6 +591,37 @@ impl SimConfig {
         if let Some(d) = &self.diurnal {
             anyhow::ensure!(d.peak_to_trough >= 1.0, "diurnal.peak_to_trough must be >= 1");
             anyhow::ensure!(d.period_s > 0.0, "diurnal.period_s must be positive");
+        }
+        let ch = &self.chaos;
+        anyhow::ensure!(
+            ch.fail_mtbf_s.is_finite() && ch.fail_mtbf_s >= 0.0,
+            "chaos.fail_mtbf_s must be >= 0"
+        );
+        anyhow::ensure!(
+            ch.preempt_mtbf_s.is_finite() && ch.preempt_mtbf_s >= 0.0,
+            "chaos.preempt_mtbf_s must be >= 0"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&ch.spot_fraction),
+            "chaos.spot_fraction must be in [0,1]"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&ch.spot_price_frac),
+            "chaos.spot_price_frac must be in [0,1]"
+        );
+        if ch.preempt_mtbf_s > 0.0 {
+            // Notices only ever target spot instances, and spot
+            // instances only exist among *elastic* provisions — either
+            // omission would make the process a silent no-op.
+            anyhow::ensure!(
+                ch.spot_fraction > 0.0,
+                "chaos.preempt_mtbf_s needs chaos.spot_fraction > 0 (notices target spot \
+                 instances)"
+            );
+            anyhow::ensure!(
+                ch.preempt_grace_ms >= 1,
+                "chaos.preempt_grace_ms must be >= 1 when preemptions are on"
+            );
         }
         Ok(())
     }
@@ -725,10 +817,44 @@ swap_delay_ms = 5000
             // The registry ships exactly two built-in models.
             "[models]\nmix = [0.5, 0.3, 0.2]",
             "[models]\nmix = [1.0, 0.0]",
+            "[chaos]\nfail_mtbf_s = -1.0",
+            "[chaos]\nspot_fraction = 1.5",
+            "[chaos]\nspot_price_frac = -0.1",
+            // Preemptions without spot capacity would be a silent no-op.
+            "[chaos]\npreempt_mtbf_s = 60.0",
+            "[chaos]\npreempt_mtbf_s = 60.0\nspot_fraction = 0.5\npreempt_grace_ms = 0",
         ] {
             let doc = tomlish::parse(bad).unwrap();
             assert!(SimConfig::from_doc(&doc).is_err(), "should reject: {bad}");
         }
+    }
+
+    #[test]
+    fn parses_chaos() {
+        let doc = tomlish::parse(
+            r#"
+[chaos]
+fail_mtbf_s = 120.0
+preempt_mtbf_s = 90.0
+preempt_grace_ms = 5000
+spot_fraction = 0.5
+spot_price_frac = 0.25
+seed = 7
+"#,
+        )
+        .unwrap();
+        let c = SimConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.chaos.fail_mtbf_s, 120.0);
+        assert_eq!(c.chaos.preempt_mtbf_s, 90.0);
+        assert_eq!(c.chaos.preempt_grace_ms, 5_000);
+        assert_eq!(c.chaos.spot_fraction, 0.5);
+        assert_eq!(c.chaos.spot_price_frac, 0.25);
+        assert_eq!(c.chaos.seed, 7);
+        assert!(c.chaos.enabled());
+        // Default: fully off — the chaos-free seed path.
+        let d = SimConfig::default();
+        assert!(!d.chaos.enabled());
+        d.validate().unwrap();
     }
 
     #[test]

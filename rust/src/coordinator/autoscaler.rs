@@ -970,6 +970,9 @@ const TREND_WINDOW: usize = 8;
 const MAX_PROVISION_STEP: usize = 8;
 /// Most instances drained (primary role) in a single evaluation.
 const MAX_DRAIN_STEP: usize = 2;
+/// Bins a seasonal period is divided into for the per-bin rate EWMAs
+/// of [`PredictiveAutoscaler::with_seasonal`].
+const SEASON_BINS: usize = 16;
 
 /// Profile-driven predictive fleet scaler: provisions for the arrival
 /// rate projected `provision_lead_ms` ahead instead of reacting to
@@ -1022,6 +1025,16 @@ pub struct PredictiveAutoscaler {
     /// Multi-model planner; replaces the single-model primary sizing
     /// when present.
     planner: Option<ModelMixPlanner>,
+    /// Seasonal period for the per-bin rate EWMAs; `None` = no seasonal
+    /// term (the pre-seasonal projection bit-for-bit).
+    season_period_ms: Option<u64>,
+    /// Per-bin smoothed observed rate over the seasonal period.
+    season_rates: Vec<f64>,
+    /// Which seasonal bins have been observed at least once.
+    season_seeded: Vec<bool>,
+    /// Pad the required fleet by a fraction of the active spot capacity
+    /// (preemptible instances can vanish on a deadline).
+    spot_aware: bool,
 }
 
 impl PredictiveAutoscaler {
@@ -1048,6 +1061,10 @@ impl PredictiveAutoscaler {
             prefill_streak: 0,
             rates: Vec::new(),
             planner: None,
+            season_period_ms: None,
+            season_rates: vec![0.0; SEASON_BINS],
+            season_seeded: vec![false; SEASON_BINS],
+            spot_aware: false,
         }
     }
 
@@ -1065,6 +1082,51 @@ impl PredictiveAutoscaler {
     pub fn with_planner(mut self, planner: Option<ModelMixPlanner>) -> Self {
         self.planner = planner;
         self
+    }
+
+    /// Enable a period-aware seasonal forecast term: the observed rate
+    /// is also tracked in [`SEASON_BINS`] per-phase EWMAs over
+    /// `period_ms`, and the projection is shifted by the historical
+    /// rate difference between the bin the anticipation lead lands in
+    /// and the current bin — recurring patterns (diurnal cycles,
+    /// scheduled flash crowds) that the EWMA + linear-trend fit can
+    /// only chase after the fact. `None` (the default) disables the
+    /// term and reproduces the pre-seasonal projection bit-for-bit.
+    pub fn with_seasonal(mut self, period_ms: Option<u64>) -> Self {
+        self.season_period_ms = period_ms.filter(|p| *p >= SEASON_BINS as u64);
+        self
+    }
+
+    /// Pad the required fleet by a quarter of the currently active spot
+    /// capacity (rounded up): preemptible instances can vanish on a
+    /// deadline, so the plan holds slack against reclamation. Off by
+    /// default (bit-identical sizing).
+    pub fn spot_aware(mut self, enabled: bool) -> Self {
+        self.spot_aware = enabled;
+        self
+    }
+
+    /// Update the seasonal per-bin EWMA with this epoch's observation
+    /// and return the forecast correction: the historical rate delta
+    /// between the bin `now + lead` falls in and the current bin.
+    /// `None` when the term is disabled, both times share a bin, or the
+    /// target bin has never been observed.
+    fn seasonal_delta(&mut self, now: TimeMs, observed_rps: f64) -> Option<f64> {
+        let period = self.season_period_ms?;
+        let bin_w = (period / SEASON_BINS as u64).max(1);
+        let bin = ((now % period) / bin_w) as usize % SEASON_BINS;
+        if self.season_seeded[bin] {
+            self.season_rates[bin] = (1.0 - RATE_EWMA_ALPHA) * self.season_rates[bin]
+                + RATE_EWMA_ALPHA * observed_rps;
+        } else {
+            self.season_rates[bin] = observed_rps;
+            self.season_seeded[bin] = true;
+        }
+        let target = (((now + self.lead_ms) % period) / bin_w) as usize % SEASON_BINS;
+        if target == bin || !self.season_seeded[target] {
+            return None;
+        }
+        Some(self.season_rates[target] - self.season_rates[bin])
     }
 
     /// Least-squares slope (rps per ms) of the smoothed-rate history.
@@ -1152,7 +1214,12 @@ impl PredictiveAutoscaler {
         while self.history.len() > TREND_WINDOW {
             self.history.pop_front();
         }
-        let projected = (self.ewma_rps + self.trend_slope() * self.lead_ms as f64).max(0.0);
+        let mut projected = (self.ewma_rps + self.trend_slope() * self.lead_ms as f64).max(0.0);
+        // Seasonal correction: shift the projection by the recurring
+        // phase-to-phase rate delta (no-op unless `with_seasonal`).
+        if let Some(delta) = self.seasonal_delta(now, observed) {
+            projected = (projected + delta).max(0.0);
+        }
         self.rates.push(RateSample {
             t_ms: now,
             observed_rps: observed,
@@ -1187,6 +1254,17 @@ impl PredictiveAutoscaler {
                 kv_per_req,
             ),
         };
+        if self.spot_aware {
+            // Reclamation slack: a quarter of the active spot capacity
+            // (rounded up) can disappear on one grace window.
+            let spot_active = ctx
+                .cluster
+                .instances
+                .iter()
+                .filter(|i| i.spot && i.role == role && i.lifecycle.accepts_work())
+                .count();
+            required += spot_active.div_ceil(4);
+        }
         // Reactive backstop: visible unplaced demand means the model
         // under-sized (length misprediction, burst inside the window) —
         // grow past the plan rather than strand requests. The demand
@@ -1338,6 +1416,11 @@ pub fn make_autoscaler_with_models(
             Some(Box::new(
                 PredictiveAutoscaler::new(cfg.tiers.clone(), lead)
                     .scale_prefill(pf)
+                    // Seasonal term engages only when the workload has a
+                    // declared period to learn; spot awareness only when
+                    // `[chaos]` actually provisions spot capacity.
+                    .with_seasonal(cfg.diurnal.map(|d| (d.period_s * 1000.0) as u64))
+                    .spot_aware(cfg.chaos.spot_fraction > 0.0)
                     .with_planner(planner),
             ))
         }
@@ -1630,6 +1713,32 @@ mod tests {
         );
         // Zero trend at constant rate: projection ≈ smoothed estimate.
         assert!((last.predicted_rps - last.smoothed_rps).abs() < 2.0);
+    }
+
+    /// The seasonal term learns a recurring square-wave demand pattern
+    /// and shifts the projection *before* the regime switch, while
+    /// within-regime projections stay uncorrected.
+    #[test]
+    fn seasonal_term_learns_recurring_pattern() {
+        let mut sc =
+            PredictiveAutoscaler::new(TierSet::paper_default(), 250).with_seasonal(Some(1_000));
+        // Two periods of a square wave: 10 rps in each period's first
+        // half, 90 rps in the second. Bin width 62 ms → every one of
+        // the 16 bins is observed within the first period.
+        for t in (0..2_000u64).step_by(62) {
+            sc.seasonal_delta(t, if (t % 1_000) < 500 { 10.0 } else { 90.0 });
+        }
+        // Period start, lead lands in the same low regime: ~no shift.
+        let d0 = sc.seasonal_delta(2_000, 10.0).unwrap_or(0.0);
+        assert!(d0.abs() < 20.0, "within-regime delta {d0}");
+        // Just before the mid-period switch the lead lands in the high
+        // half: the correction pre-provisions for the jump.
+        let d1 = sc.seasonal_delta(2_400, 10.0).expect("target bin seeded");
+        assert!(d1 > 40.0, "pre-switch delta {d1}");
+        // Disabled term: never a correction, state untouched.
+        let mut off = PredictiveAutoscaler::new(TierSet::paper_default(), 250);
+        assert_eq!(off.seasonal_delta(2_400, 10.0), None);
+        assert!(off.season_seeded.iter().all(|s| !s));
     }
 
     /// Property (2): with `provision_lead_ms = 0` and a flat trend, the

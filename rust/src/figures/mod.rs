@@ -7,7 +7,9 @@ use crate::coordinator::{make_autoscaler_with_models, make_router_with_models};
 use crate::metrics::AttainmentCurve;
 use crate::model::{CostModel, ModelRegistry};
 use crate::profile::ProfileTable;
-use crate::sim::{Cluster, ElasticParams, PrefillElastic, SimParams, SimResult, Simulation};
+use crate::sim::{
+    ChaosParams, Cluster, ElasticParams, PrefillElastic, SimParams, SimResult, Simulation,
+};
 use crate::util::rng::Rng;
 use crate::util::threadpool::par_map;
 use crate::workload::{RateSchedule, TraceGenerator, Workload};
@@ -148,6 +150,27 @@ impl Experiment {
         }
     }
 
+    /// Regenerate the workload's arrivals from an explicit
+    /// [`RateSchedule`] (flash-crowd / regime-switch stress cells),
+    /// re-drawing on the same dedicated RNG stream the diurnal branch
+    /// uses (`seed ^ 0x5EED`), so swapping the demand curve never
+    /// perturbs any other stream.
+    pub fn override_arrivals(&mut self, schedule: &RateSchedule) {
+        let gen = TraceGenerator::new(self.cfg.trace);
+        let cm = self.cost_model.clone();
+        let mode = self.cfg.mode;
+        let achievable =
+            move |p: u32, d: u32, slo| analysis::slo_achievable(&cm, mode, p, d, slo);
+        let mut rng2 = Rng::new(self.cfg.seed ^ 0x5EED);
+        let arrivals = schedule.arrivals(self.cfg.requests, &mut rng2);
+        self.workload =
+            gen.generate_with_arrivals(&arrivals, &self.cfg.tier_dist, &achievable, &mut rng2);
+        if self.models.is_multi() {
+            let mut rng3 = Rng::new(self.cfg.seed ^ 0x30DE15);
+            self.workload.assign_model_mix(&self.cfg.models.mix, &mut rng3);
+        }
+    }
+
     /// Run the simulation for this experiment. With `cfg.elastic`
     /// enabled the fleet starts at `cfg.instances` and the configured
     /// autoscaler drives it within the elastic bounds; otherwise this
@@ -201,6 +224,18 @@ impl Experiment {
                         min_instances: self.cfg.elastic.prefill_min.max(1),
                         max_instances: self.cfg.elastic.prefill_max,
                     }),
+            }),
+            // `None` when `[chaos]` is off: the simulator then builds
+            // no chaos machinery at all (the bit-identical seed path).
+            chaos: self.cfg.chaos.enabled().then(|| ChaosParams {
+                fail_at: Vec::new(),
+                fail_mtbf_ms: (self.cfg.chaos.fail_mtbf_s * 1000.0) as u64,
+                preempt_at: Vec::new(),
+                preempt_mtbf_ms: (self.cfg.chaos.preempt_mtbf_s * 1000.0) as u64,
+                preempt_grace_ms: self.cfg.chaos.preempt_grace_ms,
+                spot_fraction: self.cfg.chaos.spot_fraction,
+                spot_price_frac: self.cfg.chaos.spot_price_frac,
+                seed: self.cfg.chaos.seed,
             }),
             ..Default::default()
         };

@@ -48,6 +48,12 @@ fn main() {
                 .flag("migrate-batch", "coalesce same-destination migration KV streams")
                 .opt("model-mix", "", "comma weights, one per model (2 = built-in pair)")
                 .opt("swap-delay-ms", "", "model hot-swap weight-reload delay")
+                .opt("chaos-fail-mtbf-s", "", "mean time between injected instance failures")
+                .opt("chaos-preempt-mtbf-s", "", "mean time between spot preemption notices")
+                .opt("chaos-grace-ms", "", "drain window between preempt notice and kill")
+                .opt("spot-fraction", "", "fraction of provisioned instances that are spot")
+                .opt("spot-price-frac", "", "spot price as a fraction of on-demand")
+                .opt("chaos-seed", "", "rng seed for the chaos schedule")
                 .flag("verbose", "per-tier breakdown"),
         )
         .command(
@@ -176,6 +182,24 @@ fn sim_config_from(args: &Args) -> Result<SimConfig, String> {
     if !args.str_or("swap-delay-ms", "").is_empty() {
         cfg.models.swap_delay_ms = args.u64_or("swap-delay-ms", cfg.models.swap_delay_ms);
     }
+    if !args.str_or("chaos-fail-mtbf-s", "").is_empty() {
+        cfg.chaos.fail_mtbf_s = args.f64_or("chaos-fail-mtbf-s", cfg.chaos.fail_mtbf_s);
+    }
+    if !args.str_or("chaos-preempt-mtbf-s", "").is_empty() {
+        cfg.chaos.preempt_mtbf_s = args.f64_or("chaos-preempt-mtbf-s", cfg.chaos.preempt_mtbf_s);
+    }
+    if !args.str_or("chaos-grace-ms", "").is_empty() {
+        cfg.chaos.preempt_grace_ms = args.u64_or("chaos-grace-ms", cfg.chaos.preempt_grace_ms);
+    }
+    if !args.str_or("spot-fraction", "").is_empty() {
+        cfg.chaos.spot_fraction = args.f64_or("spot-fraction", cfg.chaos.spot_fraction);
+    }
+    if !args.str_or("spot-price-frac", "").is_empty() {
+        cfg.chaos.spot_price_frac = args.f64_or("spot-price-frac", cfg.chaos.spot_price_frac);
+    }
+    if !args.str_or("chaos-seed", "").is_empty() {
+        cfg.chaos.seed = args.u64_or("chaos-seed", cfg.chaos.seed);
+    }
     cfg.validate().map_err(|e| e.to_string())?;
     Ok(cfg)
 }
@@ -293,6 +317,26 @@ fn cmd_simulate(args: &Args) -> i32 {
                 res.migration.max_drain_latency_ms(),
                 res.migration.migrated_requests,
                 res.migration.migrated_kv_tokens,
+            );
+        }
+    }
+    if !res.chaos.is_quiet() {
+        println!(
+            "chaos: {} failures, {} preempt notices ({} drained in time, {} deadline kills); {} requests re-prefilled, {} KV tokens lost",
+            res.chaos.failures,
+            res.chaos.preempt_notices,
+            res.chaos.preempt_drained,
+            res.chaos.preempt_deadline_kills,
+            res.chaos.replaced_requests,
+            res.chaos.lost_kv_tokens,
+        );
+        if res.cost.spot_instance_ms > 0 {
+            println!(
+                "spot: {:.1} of {:.1} active inst·s on spot; bill {:.1} inst·s at {:.0}% spot price",
+                res.cost.spot_instance_ms as f64 / 1000.0,
+                res.cost.active_instance_ms as f64 / 1000.0,
+                res.cost.discounted_bill_ms(cfg.chaos.spot_price_frac) / 1000.0,
+                100.0 * cfg.chaos.spot_price_frac,
             );
         }
     }

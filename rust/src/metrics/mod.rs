@@ -196,6 +196,10 @@ pub struct CostAccount {
     pub active_instance_ms_per_model: Vec<u64>,
     /// `requests_served` split by registry model.
     pub requests_served_per_model: Vec<u64>,
+    /// The slice of `active_instance_ms` billed by spot instances
+    /// (provision → retire/fail). 0 unless `[chaos]` provisioned spot
+    /// capacity.
+    pub spot_instance_ms: u64,
 }
 
 impl CostAccount {
@@ -231,6 +235,15 @@ impl CostAccount {
         } else {
             self.instance_busy_ms as f64 / self.instance_alloc_ms as f64
         }
+    }
+
+    /// Cloud bill in on-demand-equivalent instance·ms, with the spot
+    /// slice discounted to `spot_price_frac` of the on-demand rate
+    /// (1.0 = no discount; equals `active_instance_ms` when the run
+    /// provisioned no spot capacity).
+    pub fn discounted_bill_ms(&self, spot_price_frac: f64) -> f64 {
+        let on_demand = self.active_instance_ms - self.spot_instance_ms;
+        on_demand as f64 + self.spot_instance_ms as f64 * spot_price_frac
     }
 }
 
@@ -451,6 +464,38 @@ impl MigrationStats {
     }
 }
 
+/// Fault-injection accounting: instance failures, spot preemptions,
+/// and the re-prefill work they force. All zeros unless the run
+/// enabled a `[chaos]` schedule — the digest-identity tests pin that.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ChaosStats {
+    /// Instances hard-killed (explicit schedule, MTBF process, or a
+    /// spot preemption that blew its drain deadline).
+    pub failures: u64,
+    /// Spot preemption notices delivered (each starts a deadline
+    /// drain).
+    pub preempt_notices: u64,
+    /// Preempted instances that were still alive when the grace
+    /// window expired and were hard-killed.
+    pub preempt_deadline_kills: u64,
+    /// Preempted instances that drained cleanly (migrate/wait-drain)
+    /// before their deadline.
+    pub preempt_drained: u64,
+    /// Requests whose resident KV died with a failed instance and
+    /// that re-entered placement for a full re-prefill.
+    pub replaced_requests: u64,
+    /// KV tokens (prefill-done + decoded context) lost to failures —
+    /// the prefill slice of it is recomputed from scratch.
+    pub lost_kv_tokens: u64,
+}
+
+impl ChaosStats {
+    /// True when the run injected no faults at all.
+    pub fn is_quiet(&self) -> bool {
+        self == &ChaosStats::default()
+    }
+}
+
 /// Latency summary across outcomes (TTFT and mean-TPOT distributions).
 pub fn latency_summary(outcomes: &[RequestOutcome]) -> (Option<Summary>, Option<Summary>) {
     let ttfts: Vec<f64> = outcomes
@@ -544,15 +589,30 @@ mod tests {
             goodput_tokens: 2_000,
             active_instance_ms_per_model: vec![20_000],
             requests_served_per_model: vec![5],
+            spot_instance_ms: 8_000,
         };
         assert!((c.cost_per_request_s() - 2.0).abs() < 1e-9);
         assert!((c.active_cost_per_request_s() - 4.0).abs() < 1e-9);
         assert!((c.cost_per_1k_goodput_tokens_s() - 10.0).abs() < 1e-9);
         assert!((c.utilization() - 0.5).abs() < 1e-9);
+        // 12 000 on-demand ms + 8 000 spot ms at 30% of the rate.
+        assert!((c.discounted_bill_ms(0.3) - 14_400.0).abs() < 1e-9);
+        assert!((c.discounted_bill_ms(1.0) - 20_000.0).abs() < 1e-9);
         let empty = CostAccount::default();
         assert!(empty.cost_per_request_s().is_infinite());
         assert!(empty.active_cost_per_request_s().is_infinite());
         assert!(empty.cost_per_1k_goodput_tokens_s().is_infinite());
+        assert_eq!(empty.discounted_bill_ms(0.3), 0.0);
+    }
+
+    #[test]
+    fn chaos_stats_quiet() {
+        assert!(ChaosStats::default().is_quiet());
+        let noisy = ChaosStats {
+            failures: 1,
+            ..ChaosStats::default()
+        };
+        assert!(!noisy.is_quiet());
     }
 
     #[test]

@@ -1021,6 +1021,31 @@ impl Cluster {
         false
     }
 
+    /// Hard-kill `id` (`InstanceFail`): detach every resident request
+    /// ([`Instance::fail_residents`]) and force-retire the instance
+    /// *now* — regardless of lifecycle state, in-flight KV egress
+    /// (`egress_until`), or a pending model swap, none of which can
+    /// complete on a dead device. Billing stops at the failure event
+    /// (the retire timestamp caps `active_span_ms`), unlike a graceful
+    /// drain which bills until its last migrated-out transfer has left.
+    ///
+    /// Returns the detached victims in deterministic order (running
+    /// batch, decode handoffs, prefill queue); the caller re-routes
+    /// each through `route_new` for a full re-prefill — their KV died
+    /// with the instance. Keeps every counter audit-coherent: the
+    /// draining count drops if the victim was mid-drain and the
+    /// residency/load keys are refreshed before returning.
+    pub fn fail(&mut self, id: usize, now: TimeMs) -> Vec<usize> {
+        let victims = self.instances[id].fail_residents();
+        if matches!(self.instances[id].lifecycle, Lifecycle::Draining { .. }) {
+            self.draining_total -= 1;
+        }
+        self.instances[id].swap_to = None;
+        self.instances[id].retire(now);
+        self.refresh_load(id);
+        victims
+    }
+
     // ---- model hot-swap lifecycle ----
 
     /// Start swapping `id` to registry model `target`: the instance
@@ -1393,6 +1418,27 @@ mod tests {
         assert_eq!(c.len(), 3, "retired instances keep their slot");
         assert_eq!(c.active_count(Role::Coloc), 2);
         assert_eq!(c.instances[id].active_span_ms(20_000), 8000);
+    }
+
+    #[test]
+    fn fail_force_retires_from_any_live_state() {
+        let mut c = Cluster::build(ServingMode::Colocated, 3, 0.0, 2, &cm(), true);
+        // Fail an Active tier member with in-flight egress: billing and
+        // membership end at the failure, egress notwithstanding.
+        let id = c.claim_for_tier(0, 0).unwrap();
+        c.instances[id].egress_until = 99_999;
+        let victims = c.fail(id, 4_000);
+        assert!(victims.is_empty());
+        assert!(!c.instances[id].lifecycle.is_live());
+        assert_eq!(c.instances[id].active_span_ms(50_000), 4_000);
+        assert_eq!(c.in_tier(0).count(), 0);
+        // Fail a Draining instance: the draining counter stays coherent.
+        let other = c.best_effort_pool().next().unwrap();
+        c.begin_drain(other, 5_000);
+        assert!(c.draining_any());
+        c.fail(other, 6_000);
+        assert!(!c.draining_any());
+        c.audit(&[]);
     }
 
     #[test]

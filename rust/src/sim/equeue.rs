@@ -335,6 +335,37 @@ mod tests {
     }
 
     #[test]
+    fn far_future_deadline_lands_in_the_overflow_ring_and_keeps_order() {
+        // A `PreemptNotice`'s hard deadline is scheduled a whole grace
+        // window ahead of `now` — with a generous grace that lands far
+        // beyond the SLOTS-ms wheel, in the overflow ring. The deadline
+        // must neither surface early (killing an instance still inside
+        // its grace) nor be dropped by ring rotation, and near-term
+        // events pushed *after* it (iteration ends, migration arrivals)
+        // must all drain first while the queue keeps advancing.
+        let span = SLOTS as TimeMs;
+        for mut q in both() {
+            let notice_at = 2_000;
+            let deadline = notice_at + 30 * span; // grace ≫ the wheel
+            q.push(notice_at, 0, 1); // the notice itself
+            q.push(deadline, 1, 2); // its far-future kill
+            assert_eq!(q.pop(), Some((notice_at, 0, 1)));
+            // The drain the notice started: a spread of nearer events
+            // pushed after the deadline was already queued.
+            for i in 0..20u64 {
+                q.push(notice_at + (i + 1) * span, 2 + i, 3);
+            }
+            for i in 0..20u64 {
+                assert_eq!(q.pop(), Some((notice_at + (i + 1) * span, 2 + i, 3)));
+                // The deadline never surfaces before its time.
+                assert_eq!(q.len() as u64, 20 - i, "deadline lost or duplicated");
+            }
+            assert_eq!(q.pop(), Some((deadline, 1, 2)));
+            assert_eq!(q.pop(), None);
+        }
+    }
+
+    #[test]
     fn bounded_pop_is_strict_and_resumable() {
         for mut q in both() {
             q.push(10, 0, 1);

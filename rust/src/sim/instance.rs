@@ -116,6 +116,11 @@ pub struct Instance {
     /// Simulated time this instance was provisioned (0 for the initial
     /// fleet) — the start of its active-instance-second billing window.
     pub born_ms: TimeMs,
+    /// Spot-market capacity: bills at a discounted rate and may receive
+    /// a `PreemptNotice` (deadline drain, then hard failure). Always
+    /// false without a `[chaos]` spot fraction; the initial fleet is
+    /// on-demand.
+    pub spot: bool,
     /// Decode-phase requests resident (their KV lives here).
     pub running: Vec<RunningReq>,
     /// Requests queued for (chunked) prefill on this instance.
@@ -181,6 +186,7 @@ impl Instance {
             swap_to: None,
             lifecycle: Lifecycle::Active,
             born_ms: 0,
+            spot: false,
             running: Vec::new(),
             prefill_queue: VecDeque::new(),
             decode_queue: VecDeque::new(),
@@ -335,6 +341,38 @@ impl Instance {
                 .prefill_slices
                 .retain(|(r, _)| !out.iter().any(|j| j.req_idx == *r));
         }
+        self.kv_prefill_done_tokens = 0;
+        self.queued_prefill_rem_tokens = 0;
+        out
+    }
+
+    /// Hard failure (`InstanceFail`): detach *every* resident — running
+    /// decode requests, in-flight decode handoffs, and queued prefill
+    /// jobs — and discard the in-flight iteration wholesale. Unlike the
+    /// graceful [`Instance::evict_residents`] path there is no KV to
+    /// stream anywhere: the device is gone, so the caller re-enters each
+    /// victim through `route_new` for a full re-prefill.
+    ///
+    /// Works from any live lifecycle state (failures don't wait for a
+    /// drain). Returns the victims in deterministic order — running
+    /// batch, then decode handoffs, then the prefill queue — and leaves
+    /// every cached load counter at zero, so the instance `is_empty()`
+    /// and can be force-retired immediately.
+    pub fn fail_residents(&mut self) -> Vec<usize> {
+        debug_assert!(
+            self.lifecycle.is_live(),
+            "failing already-retired instance {}",
+            self.id
+        );
+        let mut out: Vec<usize> = self.running.drain(..).map(|s| s.req_idx).collect();
+        out.extend(self.decode_queue.drain(..).map(|(r, _)| r));
+        out.extend(self.prefill_queue.drain(..).map(|j| j.req_idx));
+        // The in-flight iteration dies with the device: no token
+        // emission, no prefill progress is applied.
+        self.iterating = false;
+        self.current = IterationBatch::default();
+        self.kv_running_tokens = 0;
+        self.kv_handoff_tokens = 0;
         self.kv_prefill_done_tokens = 0;
         self.queued_prefill_rem_tokens = 0;
         out
@@ -745,15 +783,23 @@ impl Instance {
             self.kv_prefill_done_tokens += take as u64;
             self.queued_prefill_rem_tokens -= take as u64;
             if r.prefill_done >= r.req.prefill_len {
-                // Prefill complete → first token emitted now.
-                r.tracker.emit_token(now);
-                r.first_token_ms = Some(now);
-                r.decoded = 1;
-                completed_prefills.push(req_idx);
-                if r.decoded >= r.req.decode_len {
-                    r.finish_ms = Some(now);
-                    finished += 1;
+                // Prefill complete → first token emitted now. A chaos
+                // victim *re*-prefilling after an instance failure has
+                // already emitted tokens (`decoded >= 1`) — they
+                // reached the client and must not be emitted again, nor
+                // the decode count clobbered; every pre-existing path
+                // reaches here with `decoded == 0`, so the guard is
+                // behaviour-neutral without `[chaos]`.
+                if r.decoded == 0 {
+                    r.tracker.emit_token(now);
+                    r.first_token_ms = Some(now);
+                    r.decoded = 1;
+                    if r.decoded >= r.req.decode_len {
+                        r.finish_ms = Some(now);
+                        finished += 1;
+                    }
                 }
+                completed_prefills.push(req_idx);
             }
         }
         // Remove finished prefills from the queue; their committed
@@ -1047,6 +1093,35 @@ mod tests {
         assert_eq!(reqs[1].decoded, 1);
         assert!(i.is_empty());
         i.audit_cached_load(&reqs);
+    }
+
+    #[test]
+    fn fail_residents_detaches_everything_and_discards_iteration() {
+        let mut reqs = vec![sim_req(0, 10, 5), sim_req(1, 10, 5), sim_req(2, 200, 5)];
+        for r in reqs.iter_mut().take(2) {
+            r.prefill_done = 10;
+            r.decoded = 1;
+        }
+        let mut i = Instance::new(0, Role::Coloc, 1_000_000, 2048);
+        i.push_running(0, &reqs);
+        i.push_decode(1, 100, &reqs); // KV still in flight
+        i.push_prefill(PrefillJob { req_idx: 2, deadline: 1000 }, &reqs);
+        let _ = i.form_batch(0, &mut reqs, 64, &cm()).unwrap();
+        i.iterating = true;
+        // Hard kill from Active: running, handoffs, and queued prefills
+        // all come back, in that order; the iteration dies with them.
+        let victims = i.fail_residents();
+        assert_eq!(victims, vec![0, 1, 2]);
+        assert!(!i.iterating);
+        assert!(i.is_empty());
+        assert_eq!(i.kv_used(&reqs) + i.handoff_kv(&reqs), 0);
+        assert_eq!(i.queued_prefill_tokens(&reqs), 0);
+        i.audit_cached_load(&reqs);
+        // No token was emitted and no prefill progress applied.
+        assert_eq!(reqs[0].decoded, 1);
+        assert_eq!(reqs[2].prefill_done, 0);
+        i.retire(50);
+        assert!(!i.lifecycle.is_live());
     }
 
     #[test]

@@ -47,6 +47,40 @@
 //! one of its `decode_len` tokens is emitted exactly once, here or
 //! there.
 //!
+//! # Fault injection & spot preemption (the `[chaos]` layer)
+//!
+//! With [`SimParams::chaos`] enabled, the run carries adversarial
+//! stressors alongside the workload:
+//!
+//! * **`InstanceFail`** — a hard kill: the instance force-retires at
+//!   the event (billing stops there, unlike a drain, which bills until
+//!   its last egress transfer leaves), its residents' KV dies with the
+//!   device, and every victim re-enters placement through the router's
+//!   ordinary `route_new` with `prefill_done` rewound to zero — a full
+//!   re-prefill, in contrast to migration's graceful KV handoff.
+//!   Emitted decode tokens are *kept* (they already reached the
+//!   client), so each of a victim's `decode_len` tokens is still
+//!   emitted exactly once — the conservation property tests pin this.
+//!   Kills come from an explicit `(t_ms, instance)` list and/or a
+//!   seeded exponential MTBF process over the live fleet.
+//! * **`PreemptNotice`** — spot-market reclamation: the instance
+//!   begins an ordinary drain *now* (with KV migration when `[elastic]
+//!   migration` is on and feasible) and a hard `InstanceFail` is
+//!   scheduled `preempt_grace_ms` later. Drained in time → clean exit
+//!   (`preempt_drained`); still alive at the deadline → deadline kill
+//!   with full KV loss (`preempt_deadline_kills`). Only `Active` spot
+//!   instances receive notices. Spot instances are assigned
+//!   deterministically at provision time by `spot_fraction` and bill
+//!   at `spot_price_frac` of the on-demand rate
+//!   ([`crate::metrics::CostAccount::discounted_bill_ms`]).
+//!
+//! A disabled `[chaos]` block schedules zero events and draws zero
+//! RNG, so the machinery's presence is bit-for-bit invisible — the
+//! digest-identity tests run the full queue × index matrix against the
+//! chaos-free path. In-flight outbound migration transfers survive a
+//! source failure: the stream carries a KV snapshot, not live device
+//! references.
+//!
 //! # Load-ordered fleet indices and the re-key discipline
 //!
 //! The cluster keeps every tier (and the best-effort pool) in a
@@ -134,14 +168,20 @@ pub use cluster::{Cluster, TierAssign};
 pub use equeue::EventQueue;
 pub use instance::{Instance, Lifecycle, PrefillJob, Role};
 
+use std::collections::BTreeSet;
+
 use crate::analysis::ServingMode;
-use crate::coordinator::{Autoscaler, RouteCtx, Router, ScaleAction};
+use crate::coordinator::{
+    migration_feasible, prefill_migration_feasible, Autoscaler, RouteCtx, Router, ScaleAction,
+};
 use crate::metrics::{
-    AttainmentReport, CostAccount, FleetSample, FleetSeries, MigrationStats, RequestOutcome,
+    AttainmentReport, ChaosStats, CostAccount, FleetSample, FleetSeries, MigrationStats,
+    RequestOutcome,
 };
 use crate::model::{CostModel, ModelId};
 use crate::profile::ProfileTable;
 use crate::slo::{DsloTracker, TimeMs};
+use crate::util::rng::Rng;
 use crate::workload::Workload;
 
 /// Scale-in KV-migration streaming rate, tokens per ms. Sized for
@@ -227,6 +267,9 @@ pub struct SimResult {
     /// ticks, lifecycle + migration events) — the denominator of the
     /// `sim_perf` events/sec throughput metric.
     pub events_processed: u64,
+    /// Fault-injection counters; all-zeros unless [`SimParams::chaos`]
+    /// was enabled (the digest-identity tests pin this).
+    pub chaos: ChaosStats,
 }
 
 /// Per-role bounds for the elastic PD prefill tier.
@@ -275,6 +318,51 @@ pub struct ElasticParams {
     pub model_swap_delay_ms: TimeMs,
 }
 
+/// Fault-injection and spot-preemption schedule (the `[chaos]` layer;
+/// see the module docs). `Default` is fully disabled —
+/// [`ChaosParams::enabled`] is `false` and the simulation constructs
+/// no chaos runtime at all.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ChaosParams {
+    /// Explicit hard kills: `(t_ms, instance id)`. Ids out of range or
+    /// already retired at fire time are skipped.
+    pub fail_at: Vec<(TimeMs, usize)>,
+    /// Mean time between seeded random hard kills, drawn exponentially
+    /// and aimed uniformly at the live fleet. 0 disables the process.
+    pub fail_mtbf_ms: u64,
+    /// Explicit spot-preemption notices: `(t_ms, instance id)`. A
+    /// notice on a non-`Active` instance is dropped.
+    pub preempt_at: Vec<(TimeMs, usize)>,
+    /// Mean time between seeded random preemption notices, aimed
+    /// uniformly at `Active` spot instances. 0 disables the process.
+    pub preempt_mtbf_ms: u64,
+    /// Grace window between a `PreemptNotice` and its hard deadline
+    /// kill, ms.
+    pub preempt_grace_ms: TimeMs,
+    /// Fraction of *elastically provisioned* instances assigned to the
+    /// spot class, by deterministic stride at provision time (the
+    /// initial fleet is always on-demand). 0 = no spot capacity.
+    pub spot_fraction: f64,
+    /// Spot price as a fraction of the on-demand rate, reported through
+    /// [`crate::metrics::CostAccount::discounted_bill_ms`].
+    pub spot_price_frac: f64,
+    /// Seed of the MTBF processes' dedicated RNG stream.
+    pub seed: u64,
+}
+
+impl ChaosParams {
+    /// Does this schedule inject anything at all? `false` means the
+    /// run schedules zero chaos events and draws zero RNG — bit-for-bit
+    /// the chaos-free path.
+    pub fn enabled(&self) -> bool {
+        !self.fail_at.is_empty()
+            || !self.preempt_at.is_empty()
+            || self.fail_mtbf_ms > 0
+            || self.preempt_mtbf_ms > 0
+            || self.spot_fraction > 0.0
+    }
+}
+
 /// Environment knobs (not policy).
 #[derive(Debug, Clone)]
 pub struct SimParams {
@@ -299,6 +387,9 @@ pub struct SimParams {
     /// `scan_reference`/`indexed_reference`) for A/B digest-identity
     /// runs; decisions are bit-for-bit identical by construction.
     pub heap_reference: bool,
+    /// Fault-injection schedule; `None` or a disabled schedule is the
+    /// chaos-free seed path bit-for-bit.
+    pub chaos: Option<ChaosParams>,
 }
 
 impl Default for SimParams {
@@ -311,6 +402,7 @@ impl Default for SimParams {
             elastic: None,
             debug_audit: true,
             heap_reference: false,
+            chaos: None,
         }
     }
 }
@@ -329,6 +421,55 @@ enum EventKey {
     /// A migrated request's KV finished streaming off its drained
     /// source; re-enter decode placement now.
     MigrationArrive(usize),
+    /// Hard kill: force-retire the instance, resident KV is lost
+    /// (`[chaos]` only — never scheduled otherwise).
+    InstanceFail(usize),
+    /// Spot reclamation warning: drain now against a hard deadline
+    /// (`[chaos]` only).
+    PreemptNotice(usize),
+    /// Self-rescheduling MTBF hard-kill process (`[chaos]` only).
+    ChaosFail,
+    /// Self-rescheduling MTBF spot-preemption process (`[chaos]` only).
+    ChaosPreempt,
+}
+
+/// Live fault-injection state: the schedule, its dedicated RNG stream,
+/// the accumulated counters, and the set of instances inside a
+/// preemption grace window. Constructed only when
+/// [`ChaosParams::enabled`] — its absence is what makes the chaos-off
+/// path bit-for-bit identical to the seed.
+struct ChaosRuntime {
+    /// The schedule this runtime executes.
+    params: ChaosParams,
+    /// MTBF processes' RNG; untouched unless an MTBF knob is set.
+    rng: Rng,
+    /// Counters surfaced on [`SimResult::chaos`].
+    stats: ChaosStats,
+    /// Instances holding a `PreemptNotice` whose deadline
+    /// `InstanceFail` has not fired yet.
+    preempt_pending: BTreeSet<usize>,
+    /// Elastic provisions seen so far — the deterministic spot-class
+    /// stride counter.
+    provisioned: u64,
+}
+
+impl ChaosRuntime {
+    fn new(params: ChaosParams) -> ChaosRuntime {
+        ChaosRuntime {
+            rng: Rng::new(params.seed),
+            stats: ChaosStats::default(),
+            preempt_pending: BTreeSet::new(),
+            provisioned: 0,
+            params,
+        }
+    }
+
+    /// Next exponential inter-event gap of an MTBF process, clamped to
+    /// the 1 ms event resolution.
+    fn next_gap(&mut self, mtbf_ms: u64) -> TimeMs {
+        debug_assert!(mtbf_ms > 0, "gap drawn from a disabled MTBF process");
+        self.rng.exp(1.0 / mtbf_ms as f64).max(1.0) as TimeMs
+    }
 }
 
 /// The event-driven simulation.
@@ -362,6 +503,10 @@ pub struct Simulation<'a> {
     /// Reused by the Tick safety sweep instead of reallocating a fresh
     /// `Vec` every 100 ms.
     tick_scratch: Vec<usize>,
+    /// Fault-injection runtime; `None` whenever `[chaos]` is absent or
+    /// disabled — then no chaos event is ever scheduled and no RNG is
+    /// ever drawn.
+    chaos: Option<ChaosRuntime>,
 }
 
 impl<'a> Simulation<'a> {
@@ -397,6 +542,11 @@ impl<'a> Simulation<'a> {
         };
         let tick = params.tick_ms;
         let cost_models = vec![cost_model.clone()];
+        let chaos = params
+            .chaos
+            .clone()
+            .filter(|c| c.enabled())
+            .map(ChaosRuntime::new);
         let mut sim = Simulation {
             params,
             cost_model,
@@ -412,6 +562,7 @@ impl<'a> Simulation<'a> {
             migration: MigrationStats::default(),
             events_processed: 0,
             tick_scratch: Vec::new(),
+            chaos,
         };
         sim.push_event(tick, EventKey::Tick);
         sim
@@ -470,6 +621,33 @@ impl<'a> Simulation<'a> {
             self.sample_fleet();
             self.push_event(ep.scale_eval_ms.max(1), EventKey::ScaleEval);
         }
+        // Seed the fault-injection schedule: the explicit kill/preempt
+        // lists plus the first draw of each MTBF process, in a fixed
+        // order so seq numbering is deterministic. A disabled `[chaos]`
+        // constructed no runtime — zero pushes, zero RNG draws, and the
+        // seq stream matches the chaos-free path exactly.
+        let mut chaos_seed: Vec<(TimeMs, EventKey)> = Vec::new();
+        if let Some(ch) = self.chaos.as_mut() {
+            for &(t, inst) in &ch.params.fail_at {
+                chaos_seed.push((t, EventKey::InstanceFail(inst)));
+            }
+            for &(t, inst) in &ch.params.preempt_at {
+                chaos_seed.push((t, EventKey::PreemptNotice(inst)));
+            }
+            let fail_mtbf = ch.params.fail_mtbf_ms;
+            if fail_mtbf > 0 {
+                let gap = ch.next_gap(fail_mtbf);
+                chaos_seed.push((gap, EventKey::ChaosFail));
+            }
+            let preempt_mtbf = ch.params.preempt_mtbf_ms;
+            if preempt_mtbf > 0 {
+                let gap = ch.next_gap(preempt_mtbf);
+                chaos_seed.push((gap, EventKey::ChaosPreempt));
+            }
+        }
+        for (t, key) in chaos_seed {
+            self.push_event(t, key);
+        }
         loop {
             // Merge the sorted-workload arrival cursor against the
             // queue head. Arrivals win timestamp ties (in the old
@@ -505,21 +683,52 @@ impl<'a> Simulation<'a> {
             match key {
                 EventKey::Arrival(idx) => self.handle_arrival(idx, router),
                 EventKey::IterEnd(inst) => {
-                    completed += self.handle_iter_end(inst, router);
+                    // Chaos-gated stale guard: a hard kill mid-iteration
+                    // leaves this event in the queue; the dead instance
+                    // must not complete the discarded batch. Gated on
+                    // the runtime so the chaos-free control flow (and
+                    // router call sequence) is untouched.
+                    if self.chaos.is_some()
+                        && !self.cluster.instances[inst].lifecycle.is_live()
+                    {
+                        // dropped: instance was hard-killed mid-iteration
+                    } else {
+                        completed += self.handle_iter_end(inst, router);
+                    }
                 }
                 EventKey::Wake(inst) => {
-                    self.maybe_start_iteration(inst, router);
-                    // A migrating drainer's wake may be its egress
-                    // deadline — it retires (or completes its model
-                    // swap) here if truly done.
-                    self.finish_drain(inst);
+                    if self.chaos.is_some()
+                        && !self.cluster.instances[inst].lifecycle.is_live()
+                    {
+                        // stale wake for a hard-killed instance
+                    } else {
+                        self.maybe_start_iteration(inst, router);
+                        // A migrating drainer's wake may be its egress
+                        // deadline — it retires (or completes its model
+                        // swap) here if truly done.
+                        self.finish_drain(inst);
+                    }
                 }
                 EventKey::InstanceReady(inst) => {
-                    self.cluster.mark_ready(inst);
-                    // Fresh capacity may unblock pending work at once.
-                    router.on_tick(self.now, &mut self.ctx());
-                    self.restart_fed_instances(router);
+                    if self.chaos.is_some()
+                        && !self.cluster.instances[inst].lifecycle.is_live()
+                    {
+                        // killed during its cold start / swap reload
+                    } else {
+                        self.cluster.mark_ready(inst);
+                        // Fresh capacity may unblock pending work at once.
+                        router.on_tick(self.now, &mut self.ctx());
+                        self.restart_fed_instances(router);
+                    }
                 }
+                EventKey::InstanceFail(inst) => {
+                    self.handle_instance_fail(inst, router);
+                }
+                EventKey::PreemptNotice(inst) => {
+                    self.handle_preempt_notice(inst, router);
+                }
+                EventKey::ChaosFail => self.handle_chaos_fail(router),
+                EventKey::ChaosPreempt => self.handle_chaos_preempt(router),
                 EventKey::MigrationArrive(req_idx) => {
                     debug_assert!(
                         !self.requests[req_idx].is_finished(),
@@ -738,6 +947,20 @@ impl<'a> Simulation<'a> {
         if self.cluster.committed_count(role) < cap {
             let ready = self.now + ep.provision_delay_ms;
             let id = self.cluster.provision_model(model, role, self.now, ready);
+            // Deterministic spot-class stride over elastic provisions:
+            // provision k is spot iff the running spot quota
+            // `floor(k·spot_fraction)` steps up at k+1. No RNG — the
+            // class assignment is reproducible across digest runs.
+            if let Some(ch) = self.chaos.as_mut() {
+                let frac = ch.params.spot_fraction;
+                if frac > 0.0 {
+                    let k = ch.provisioned as f64;
+                    ch.provisioned += 1;
+                    if ((k + 1.0) * frac).floor() > (k * frac).floor() {
+                        self.cluster.instances[id].spot = true;
+                    }
+                }
+            }
             self.push_event(ready, EventKey::InstanceReady(id));
             log::debug!(
                 "t={} scale-out: provision inst {id} (model {model}, {role:?}), ready at {ready}",
@@ -769,6 +992,165 @@ impl<'a> Simulation<'a> {
         } else {
             self.cluster.retire_if_drained(inst, self.now);
         }
+    }
+
+    /// Hard-kill `inst` (`[chaos]` only): force-retire it on the spot —
+    /// billing stops here, unlike a drain — and re-enter every resident
+    /// through `route_new` for a full re-prefill (the device's KV died
+    /// with it; already-emitted decode tokens are kept, so token
+    /// conservation holds exactly). Also the deadline arm of a spot
+    /// preemption: if the instance drained away inside its grace window
+    /// this records a clean exit instead.
+    fn handle_instance_fail(&mut self, inst: usize, router: &mut dyn Router) {
+        let live = inst < self.cluster.instances.len()
+            && self.cluster.instances[inst].lifecycle.is_live();
+        let was_preempt = match self.chaos.as_mut() {
+            Some(ch) => ch.preempt_pending.remove(&inst),
+            // Never scheduled without a runtime; tolerate anyway.
+            None => return,
+        };
+        if !live {
+            if was_preempt {
+                // Drained (and retired) before the deadline: the spot
+                // reclamation cost nothing beyond the drain itself.
+                if let Some(ch) = self.chaos.as_mut() {
+                    ch.stats.preempt_drained += 1;
+                }
+            }
+            return;
+        }
+        if let Some(ch) = self.chaos.as_mut() {
+            ch.stats.failures += 1;
+            if was_preempt {
+                ch.stats.preempt_deadline_kills += 1;
+            }
+        }
+        let victims = self.cluster.fail(inst, self.now);
+        log::debug!(
+            "t={} chaos: inst {inst} failed, {} residents lost their KV",
+            self.now,
+            victims.len()
+        );
+        for &req_idx in &victims {
+            let lost = self.requests[req_idx].kv_now();
+            if let Some(ch) = self.chaos.as_mut() {
+                ch.stats.lost_kv_tokens += lost;
+                ch.stats.replaced_requests += 1;
+            }
+            // Rewind to a cold start: the prompt must re-prefill from
+            // scratch. `decoded` (and the tracker) keep the tokens the
+            // client already received — they are never re-emitted.
+            let r = &mut self.requests[req_idx];
+            r.prefill_done = 0;
+            r.decode_instance = None;
+        }
+        // Re-placement only after the dead instance is `Retired`, so
+        // `route_new` can never choose it.
+        for &req_idx in &victims {
+            self.place_prefill_handoff(req_idx, router);
+        }
+        self.restart_fed_instances(router);
+    }
+
+    /// Spot reclamation notice (`[chaos]` only): start an ordinary
+    /// drain *now* — with KV migration when `[elastic] migration` is on
+    /// and the role-matched feasibility gate passes — and schedule the
+    /// hard deadline kill `preempt_grace_ms` out. Only `Active`
+    /// instances take notices (a drainer is already leaving).
+    fn handle_preempt_notice(&mut self, inst: usize, router: &mut dyn Router) {
+        let grace = match self.chaos.as_ref() {
+            Some(ch) => ch.params.preempt_grace_ms,
+            None => return,
+        };
+        if inst >= self.cluster.instances.len()
+            || !self.cluster.instances[inst].lifecycle.accepts_work()
+        {
+            return;
+        }
+        if let Some(ch) = self.chaos.as_mut() {
+            ch.stats.preempt_notices += 1;
+            ch.preempt_pending.insert(inst);
+        }
+        let role = self.cluster.instances[inst].role;
+        // Gate while still Active, exactly as the autoscalers do (the
+        // gates skip the source via `id != inst`).
+        let migrate = self.params.elastic.as_ref().is_some_and(|e| e.migration) && {
+            let ctx = self.ctx();
+            match role {
+                Role::Prefill => prefill_migration_feasible(&ctx, inst),
+                _ => migration_feasible(&ctx, inst),
+            }
+        };
+        self.cluster.begin_drain(inst, self.now);
+        if migrate {
+            match role {
+                Role::Prefill => self.migrate_prefill_queue(inst),
+                _ => self.migrate_residents(inst, router),
+            }
+        }
+        // Already empty (or fully migrated with egress done): clean exit
+        // on the spot; the deadline event then finds it retired.
+        self.cluster.retire_if_drained(inst, self.now);
+        self.push_event(self.now + grace, EventKey::InstanceFail(inst));
+        log::debug!(
+            "t={} chaos: preempt notice for inst {inst} ({role:?}), deadline in {grace} ms",
+            self.now
+        );
+    }
+
+    /// One firing of the MTBF hard-kill process: kill a uniformly
+    /// chosen live instance and reschedule with a fresh exponential
+    /// gap. Fires (and keeps billing RNG draws) even when the fleet has
+    /// no live target, so the draw sequence depends only on the seed.
+    fn handle_chaos_fail(&mut self, router: &mut dyn Router) {
+        let live: Vec<usize> = self
+            .cluster
+            .instances
+            .iter()
+            .filter(|i| i.lifecycle.is_live())
+            .map(|i| i.id)
+            .collect();
+        let (victim, gap) = {
+            let Some(ch) = self.chaos.as_mut() else { return };
+            let victim = if live.is_empty() {
+                None
+            } else {
+                Some(live[ch.rng.below(live.len() as u64) as usize])
+            };
+            let mtbf = ch.params.fail_mtbf_ms;
+            (victim, ch.next_gap(mtbf))
+        };
+        if let Some(v) = victim {
+            self.handle_instance_fail(v, router);
+        }
+        self.push_event(self.now + gap, EventKey::ChaosFail);
+    }
+
+    /// One firing of the MTBF spot-preemption process: notice a
+    /// uniformly chosen `Active` spot instance and reschedule. No-op
+    /// (beyond the rescheduling draw) while no spot capacity is up.
+    fn handle_chaos_preempt(&mut self, router: &mut dyn Router) {
+        let spot: Vec<usize> = self
+            .cluster
+            .instances
+            .iter()
+            .filter(|i| i.spot && i.lifecycle.accepts_work())
+            .map(|i| i.id)
+            .collect();
+        let (victim, gap) = {
+            let Some(ch) = self.chaos.as_mut() else { return };
+            let victim = if spot.is_empty() {
+                None
+            } else {
+                Some(spot[ch.rng.below(spot.len() as u64) as usize])
+            };
+            let mtbf = ch.params.preempt_mtbf_ms;
+            (victim, ch.next_gap(mtbf))
+        };
+        if let Some(v) = victim {
+            self.handle_preempt_notice(v, router);
+        }
+        self.push_event(self.now + gap, EventKey::ChaosPreempt);
     }
 
     /// Evict `inst`'s decode residents and schedule their KV transfers.
@@ -1191,6 +1573,13 @@ impl<'a> Simulation<'a> {
             // reassign the bill; see `CostAccount`).
             cost.active_instance_ms += i.active_span_ms(span);
             cost.active_instance_ms_per_model[i.model] += i.active_span_ms(span);
+            // The spot slice of the same bill, for discounted-cost
+            // reporting. A failed instance's span ends at its failure
+            // (`Retired { at }` caps `active_span_ms`) — dead devices
+            // stop billing at the kill, not at span end.
+            if i.spot {
+                cost.spot_instance_ms += i.active_span_ms(span);
+            }
         }
         // Drain latencies: recorded at retirement; drains still open at
         // the end of the run are censored at the span (they cost at
@@ -1223,6 +1612,7 @@ impl<'a> Simulation<'a> {
             sim_span_ms: span,
             throughput_rps,
             events_processed: self.events_processed,
+            chaos: self.chaos.map(|c| c.stats).unwrap_or_default(),
         }
     }
 }

@@ -67,6 +67,53 @@ impl RateSchedule {
         RateSchedule { segments }
     }
 
+    /// A flash crowd: a `base_rate_per_s` plateau until `t_spike_ms`,
+    /// an instant jump to `spike_mult × base`, then a piecewise-linear
+    /// decay back to the base over `decay_ms` in `decay_steps` equal
+    /// segments (each at its interval's midpoint rate, so the decay
+    /// ramp integrates exactly like the continuous one). The shock the
+    /// reactive scalers can only chase and the seasonal predictive
+    /// term can pre-provision for.
+    pub fn flash_crowd(
+        base_rate_per_s: f64,
+        spike_mult: f64,
+        t_spike_ms: TimeMs,
+        decay_ms: TimeMs,
+        decay_steps: usize,
+    ) -> RateSchedule {
+        assert!(base_rate_per_s > 0.0);
+        assert!(spike_mult >= 1.0, "spike must not dip below base");
+        assert!(t_spike_ms >= 1 && decay_ms >= decay_steps as TimeMs && decay_steps >= 1);
+        let mut segments = vec![(0, base_rate_per_s)];
+        for i in 0..decay_steps {
+            let start = t_spike_ms + (i as TimeMs * decay_ms) / decay_steps as TimeMs;
+            // Midpoint of the linear spike→base ramp on this step.
+            let frac = (i as f64 + 0.5) / decay_steps as f64;
+            let mult = spike_mult + (1.0 - spike_mult) * frac;
+            segments.push((start, base_rate_per_s * mult));
+        }
+        segments.push((t_spike_ms + decay_ms, base_rate_per_s));
+        RateSchedule { segments }
+    }
+
+    /// A regime-switching schedule: cycle through `rates_per_s`
+    /// plateaus, dwelling `dwell_ms` on each, for `switches + 1` total
+    /// plateaus (the last extends forever, like every final segment).
+    /// Abrupt level shifts with no ramp — the worst case for trend
+    /// extrapolation.
+    pub fn regime_switch(
+        rates_per_s: &[f64],
+        dwell_ms: TimeMs,
+        switches: usize,
+    ) -> RateSchedule {
+        assert!(!rates_per_s.is_empty() && rates_per_s.iter().all(|r| *r > 0.0));
+        assert!(dwell_ms >= 1);
+        let segments = (0..=switches)
+            .map(|i| (i as TimeMs * dwell_ms, rates_per_s[i % rates_per_s.len()]))
+            .collect();
+        RateSchedule { segments }
+    }
+
     /// The scheduled rate at time `t` (the last segment extends forever).
     pub fn rate_at(&self, t: TimeMs) -> f64 {
         let mut rate = self.segments[0].1;
@@ -184,6 +231,45 @@ mod tests {
             arr.windows(2).all(|w| w[0] < w[1]),
             "arrivals must be strictly increasing"
         );
+    }
+
+    #[test]
+    fn flash_crowd_boundaries_and_mean() {
+        let s = RateSchedule::flash_crowd(10.0, 5.0, 10_000, 20_000, 10);
+        // base plateau + decay_steps ramp segments + return-to-base.
+        assert_eq!(s.segments.len(), 12);
+        assert_eq!(s.segments[0], (0, 10.0));
+        assert_eq!(s.segments[1].0, 10_000);
+        assert_eq!(s.segments.last().unwrap().0, 30_000);
+        // Before the spike: base. First ramp step: just under full
+        // spike (midpoint of the first decay interval).
+        assert_eq!(s.rate_at(9_999), 10.0);
+        assert!((s.rate_at(10_000) - 48.0).abs() < 1e-9);
+        // After the decay: back to base, forever.
+        assert_eq!(s.rate_at(30_000), 10.0);
+        assert_eq!(s.rate_at(300_000), 10.0);
+        // Midpoint sampling: the ramp integrates exactly as the
+        // continuous linear decay — mean over the whole window is
+        // base·10s + base·(mult+1)/2·20s over 30 s.
+        let expect = (10.0 * 10_000.0 + 30.0 * 20_000.0) / 30_000.0;
+        assert!((s.mean_rate_over(30_000) - expect).abs() < 1e-9);
+        // Rates never dip below base anywhere on the ramp.
+        assert!(s.segments.iter().all(|&(_, r)| r >= 10.0 - 1e-9));
+    }
+
+    #[test]
+    fn regime_switch_cycles_plateaus() {
+        let s = RateSchedule::regime_switch(&[20.0, 80.0], 5_000, 4);
+        assert_eq!(s.segments.len(), 5);
+        assert_eq!(s.segments[0], (0, 20.0));
+        assert_eq!(s.segments[1], (5_000, 80.0));
+        assert_eq!(s.segments[4], (20_000, 20.0));
+        assert_eq!(s.rate_at(4_999), 20.0);
+        assert_eq!(s.rate_at(5_000), 80.0);
+        // The last plateau extends forever.
+        assert_eq!(s.rate_at(1_000_000), 20.0);
+        // One full cycle averages the plateau mean exactly.
+        assert!((s.mean_rate_over(10_000) - 50.0).abs() < 1e-9);
     }
 
     #[test]

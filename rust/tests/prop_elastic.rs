@@ -14,9 +14,10 @@ use polyserve::coordinator::{
 use polyserve::figures::{run_sim, Experiment};
 use polyserve::model::{CostModel, ModelRegistry};
 use polyserve::profile::ProfileTable;
+use polyserve::metrics::ChaosStats;
 use polyserve::sim::{
-    Cluster, ElasticParams, PrefillElastic, PrefillJob, Role, SimParams, SimRequest, SimResult,
-    Simulation,
+    ChaosParams, Cluster, ElasticParams, PrefillElastic, PrefillJob, Role, SimParams, SimRequest,
+    SimResult, Simulation,
 };
 use polyserve::slo::{Slo, TimeMs};
 use polyserve::util::prop::{check, Gen, IntRange, VecOf};
@@ -1334,8 +1335,13 @@ fn indexed_run_reproduces_scan_reference_bit_for_bit() {
                 ordered.events_processed, res.events_processed,
                 "{label}/{path}: event schedule diverged"
             );
+            assert_eq!(ordered.chaos, res.chaos, "{label}/{path}: chaos stats diverged");
         }
         assert_eq!(ordered.unfinished, 0, "{label}");
+        // The chaos machinery is compiled into every one of these cells
+        // but `[chaos]` is disabled: the layer must stay perfectly
+        // quiet — all-zero stats on every engine combination.
+        assert_eq!(ordered.chaos, ChaosStats::default(), "{label}: chaos must be off");
     }
 }
 
@@ -1381,4 +1387,184 @@ fn elastic_migration_run_completes_with_exact_token_counts() {
         );
     }
     assert!(res.cost.goodput_tokens <= res.cost.tokens_total);
+}
+
+// ---------------------------------------------------------------------
+// Fault injection & spot preemption (the `[chaos]` layer).
+// ---------------------------------------------------------------------
+
+/// The long-decode fixture under an explicit chaos schedule: 6 requests
+/// with 3000-token outputs on a 1-prefill + 2-decode PD fleet (ids 0 /
+/// 1, 2), no autoscaler — every lifecycle transition in the run is the
+/// chaos schedule's doing.
+fn chaos_fixture_run(chaos: Option<ChaosParams>, elastic: Option<ElasticParams>) -> SimResult {
+    let cm = CostModel::h200_llama8b();
+    let profile = ProfileTable::from_cost_model(&cm);
+    let cfg = SimConfig {
+        mode: ServingMode::PdDisaggregated,
+        ..Default::default()
+    };
+    let workload = Workload {
+        requests: (0..6u64)
+            .map(|i| Request {
+                id: i,
+                arrival_ms: i * 20,
+                prefill_len: 256,
+                decode_len: 3_000,
+                slo: Slo::new(5_000, 100),
+                model: 0,
+            })
+            .collect(),
+    };
+    let cluster = Cluster::build(ServingMode::PdDisaggregated, 3, 0.34, cfg.tiers.len(), &cm, true);
+    let params = SimParams {
+        mode: ServingMode::PdDisaggregated,
+        elastic,
+        chaos,
+        ..Default::default()
+    };
+    let sim = Simulation::new(params, cm.clone(), &profile, &workload, cluster, &cfg.tiers);
+    let mut router = PolyServeRouter::new(&cfg, workload.avg_decode_len());
+    sim.run_elastic(&mut router, None)
+}
+
+/// The elastic params the spot-preemption fixtures drain under —
+/// migration on, so a notice's grace window evicts residents instead of
+/// waiting their 3000-token outputs out.
+fn chaos_elastic() -> ElasticParams {
+    ElasticParams {
+        min_instances: 1,
+        max_instances: 4,
+        provision_delay_ms: 1_000,
+        scale_eval_ms: 500,
+        migration: true,
+        migration_batching: false,
+        model_swap_delay_ms: 20_000,
+        prefill: None,
+    }
+}
+
+/// Token conservation across an instance failure: the hard kill at
+/// t=2 s discards decode instance 2's KV mid-stream, its residents
+/// re-enter placement for a full re-prefill — and every request still
+/// emits exactly 3000 tokens, with the already-streamed prefix neither
+/// lost nor re-emitted. The failed instance's bill stops at the failure
+/// event (the satellite billing fix): the other two instances bill the
+/// whole span, the dead one exactly its 2 s of life.
+#[test]
+fn instance_failure_conserves_tokens_and_bills_to_the_failure() {
+    let res = chaos_fixture_run(
+        Some(ChaosParams {
+            fail_at: vec![(2_000, 2)],
+            ..Default::default()
+        }),
+        None,
+    );
+    assert_eq!(res.unfinished, 0, "victims must finish on the surviving fleet");
+    for o in &res.outcomes {
+        assert_eq!(
+            o.tokens, 3_000,
+            "request {} emitted {} of 3000 tokens across the failure",
+            o.id, o.tokens
+        );
+    }
+    assert_eq!(res.chaos.failures, 1);
+    assert_eq!(res.chaos.preempt_notices, 0);
+    assert!(
+        res.chaos.replaced_requests >= 1,
+        "the killed decode server must have held residents at t=2 s"
+    );
+    assert!(res.chaos.lost_kv_tokens > 0, "discarded KV must be accounted");
+    // Billing regression: before the force-retire fix a failed instance
+    // kept billing to the end of the run.
+    assert_eq!(
+        res.cost.active_instance_ms,
+        2 * res.sim_span_ms + 2_000,
+        "failed instance must bill exactly its 2 s of life"
+    );
+}
+
+/// Disabled chaos is the seed path bit-for-bit: `ChaosParams` with no
+/// schedule, no MTBF process and no spot fraction constructs no runtime
+/// — zero events, zero RNG draws, identical outcomes to `chaos: None`.
+#[test]
+fn disabled_chaos_params_change_nothing() {
+    let a = chaos_fixture_run(None, None);
+    let b = chaos_fixture_run(
+        Some(ChaosParams {
+            seed: 0xDEAD_BEEF, // an enabled run would draw from this
+            ..Default::default()
+        }),
+        None,
+    );
+    assert_eq!(a.outcomes, b.outcomes);
+    assert_eq!(a.cost, b.cost);
+    assert_eq!(a.sim_span_ms, b.sim_span_ms);
+    assert_eq!(a.events_processed, b.events_processed);
+    assert_eq!(b.chaos, ChaosStats::default());
+}
+
+/// Token conservation across a spot preemption that drains in time: the
+/// notice at t=2 s starts a migration drain with a 30 s grace; the
+/// residents' KV streams to the peer decode server, the instance
+/// retires before the deadline, and the deadline event records a
+/// graceful `preempt_drained` — no failure, no kill, every token
+/// delivered exactly once.
+#[test]
+fn spot_preemption_drains_via_migration_and_conserves_tokens() {
+    let res = chaos_fixture_run(
+        Some(ChaosParams {
+            preempt_at: vec![(2_000, 2)],
+            preempt_grace_ms: 30_000,
+            ..Default::default()
+        }),
+        Some(chaos_elastic()),
+    );
+    assert_eq!(res.unfinished, 0);
+    for o in &res.outcomes {
+        assert_eq!(
+            o.tokens, 3_000,
+            "request {} emitted {} of 3000 tokens across the preemption",
+            o.id, o.tokens
+        );
+    }
+    assert_eq!(res.chaos.preempt_notices, 1);
+    assert_eq!(res.chaos.preempt_drained, 1, "the drain must beat the 30 s grace");
+    assert_eq!(res.chaos.preempt_deadline_kills, 0);
+    assert_eq!(res.chaos.failures, 0);
+    assert_eq!(res.chaos.replaced_requests, 0, "a graceful drain replaces no one");
+    assert!(
+        res.migration.migrated_requests > 0,
+        "the grace window must evict residents via migration, not wait"
+    );
+}
+
+/// A preemption whose grace is hopeless (500 ms against 3000-token
+/// wait-drain residents) must hit the hard deadline: the instance fails
+/// at t=2.5 s, counts as both a failure and a deadline kill, and its
+/// residents still finish elsewhere with exact token counts.
+#[test]
+fn spot_preemption_deadline_kill_replaces_residents() {
+    let res = chaos_fixture_run(
+        Some(ChaosParams {
+            preempt_at: vec![(2_000, 2)],
+            preempt_grace_ms: 500,
+            ..Default::default()
+        }),
+        None, // no elastic config: the drain falls back to wait-drain
+    );
+    assert_eq!(res.unfinished, 0, "killed residents must finish on the survivor");
+    for o in &res.outcomes {
+        assert_eq!(
+            o.tokens, 3_000,
+            "request {} emitted {} of 3000 tokens across the kill",
+            o.id, o.tokens
+        );
+    }
+    assert_eq!(res.chaos.preempt_notices, 1);
+    assert_eq!(res.chaos.preempt_deadline_kills, 1);
+    assert_eq!(res.chaos.failures, 1, "a deadline kill is a failure");
+    assert_eq!(res.chaos.preempt_drained, 0);
+    assert!(res.chaos.replaced_requests >= 1);
+    assert_eq!(res.migration.migrated_requests, 0, "wait-drain migrates nothing");
 }

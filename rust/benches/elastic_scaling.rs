@@ -31,13 +31,26 @@
 //! per-request token conservation against the workload's ground-truth
 //! decode lengths.
 //!
+//! The overload grid sweeps arrival rate from 0.5× to 3× of the peak
+//! fleet's optimal goodput for {fifo, edf, edf+reject,
+//! edf+reject+retry} × all three scalers, emitting the rejection-rate ×
+//! tail-attainment × goodput curves of the `[overload]` layer: FIFO
+//! pending queues collapse past saturation, EDF ordering holds the
+//! tail, the arrival-edge admission gate sheds provably-infeasible
+//! requests with typed `Rejected` outcomes, and retry-with-backoff
+//! clients distinguish shed load from merely deferred load.
+//!
 //! `POLYSERVE_SMOKE=1` runs a tiny workload and asserts the invariants
 //! (every request finishes; migration counters move only when enabled;
 //! the prefill fleet moves only in `+pf` cells; both registry models
 //! serve and bill; the flash crowd forces ≥ 1 model hot-swap; the
 //! chaos cells see ≥ 1 failure and ≥ 1 deadline kill with zero token
-//! violations) so a regression fails CI outright. The `model-mix smoke
-//! OK` and `chaos smoke OK` marker lines are grep-gated in CI.
+//! violations; the reject cells shed ≥ 1 request at 2× saturation with
+//! zero SLO violations among accepted requests, EDF never worsens the
+//! FIFO TTFT tail, and edf+reject beats FIFO on accepted-request
+//! attainment) so a regression fails CI outright. The `model-mix smoke
+//! OK`, `chaos smoke OK` and `overload smoke OK` marker lines are
+//! grep-gated in CI.
 
 use polyserve::analysis::ServingMode;
 use polyserve::config::{DiurnalSpec, Policy, ScalerKind, SimConfig};
@@ -409,6 +422,125 @@ fn run_chaos_cell(
     }
 }
 
+/// The queue-discipline × admission-control axis of the overload grid.
+#[derive(Clone, Copy, PartialEq)]
+enum OverloadPolicy {
+    /// Pre-EDF reference: FIFO pending queues, no gate, no retries.
+    Fifo,
+    /// Deadline-ordered pending queues only.
+    Edf,
+    /// EDF + SLO-feasibility admission control at the arrival edge.
+    EdfReject,
+    /// EDF + admission control + retry-with-backoff clients.
+    EdfRejectRetry,
+}
+
+impl OverloadPolicy {
+    const ALL: [OverloadPolicy; 4] = [
+        OverloadPolicy::Fifo,
+        OverloadPolicy::Edf,
+        OverloadPolicy::EdfReject,
+        OverloadPolicy::EdfRejectRetry,
+    ];
+
+    fn name(self) -> &'static str {
+        match self {
+            OverloadPolicy::Fifo => "fifo",
+            OverloadPolicy::Edf => "edf",
+            OverloadPolicy::EdfReject => "edf+reject",
+            OverloadPolicy::EdfRejectRetry => "edf+reject+retry",
+        }
+    }
+
+    fn reject(self) -> bool {
+        matches!(self, OverloadPolicy::EdfReject | OverloadPolicy::EdfRejectRetry)
+    }
+}
+
+struct OverloadCellResult {
+    /// Fraction of all arrivals terminally shed.
+    rejection_rate: f64,
+    /// DSLO attainment among *accepted* requests (== overall attainment
+    /// for the gate-free policies, which accept everything).
+    accepted_attain: f64,
+    /// Accepted requests that finished but missed their SLO — the
+    /// reject-mode smoke gate demands zero.
+    accepted_violations: usize,
+    p99_ttft_ms: f64,
+    goodput_tokens: u64,
+    goodput_tok_per_s: f64,
+    shed_tokens: u64,
+    retries: u64,
+    /// Requests admitted on a backoff re-arrival.
+    retry_admitted: u64,
+    retry_exhausted: u64,
+    aged_past_patience: u64,
+    max_pend_ms: u64,
+    unfinished: usize,
+}
+
+/// One overload cell: colocated fleet prepared at peak capacity so
+/// `rate_frac` is a true multiple of the fleet's optimal goodput, then
+/// run elastic from the floor under the given queue/admission policy.
+fn run_overload_cell(
+    policy: OverloadPolicy,
+    scaler: ScalerKind,
+    rate_frac: f64,
+    n_peak: usize,
+    requests: usize,
+) -> OverloadCellResult {
+    let cfg = SimConfig {
+        trace: TraceKind::ShareGpt,
+        mode: ServingMode::Colocated,
+        policy: Policy::PolyServe,
+        instances: n_peak,
+        requests,
+        rate_frac_of_optimal: rate_frac,
+        ..Default::default()
+    };
+    // Prepare against the peak fleet (pins the arrival stream every
+    // policy faces at this saturation multiple), then retune the
+    // cluster config on the shared Experiment — the run_cell pattern.
+    let mut exp = Experiment::prepare(&cfg);
+    let cfg = &mut exp.cfg;
+    cfg.elastic.scaler = scaler;
+    cfg.elastic.provision_delay_ms = 3_000;
+    cfg.elastic.scale_eval_ms = 1_000;
+    cfg.elastic.migration = true;
+    cfg.elastic.min_instances = (n_peak / 4).max(2);
+    cfg.elastic.max_instances = n_peak;
+    cfg.instances = cfg.elastic.min_instances;
+    cfg.overload.enabled = true;
+    cfg.overload.reject = policy.reject();
+    cfg.overload.retry = policy == OverloadPolicy::EdfRejectRetry;
+    cfg.overload.retry_base_ms = 500;
+    cfg.overload.retry_max_attempts = 3;
+    exp.fifo_reference = policy == OverloadPolicy::Fifo;
+    let res = exp.run();
+    let accepted_violations = res
+        .outcomes
+        .iter()
+        .filter(|o| !o.rejected && o.finish_ms.is_some() && !o.attained)
+        .count();
+    let (ttft, _) = polyserve::metrics::latency_summary(&res.outcomes);
+    let span_s = (res.sim_span_ms as f64 / 1000.0).max(1e-9);
+    OverloadCellResult {
+        rejection_rate: res.overload.rejection_rate(res.outcomes.len() as u64),
+        accepted_attain: res.attainment.overall(),
+        accepted_violations,
+        p99_ttft_ms: ttft.map(|s| s.p99()).unwrap_or(f64::NAN),
+        goodput_tokens: res.cost.goodput_tokens,
+        goodput_tok_per_s: res.cost.goodput_tokens as f64 / span_s,
+        shed_tokens: res.overload.shed_tokens,
+        retries: res.overload.retries,
+        retry_admitted: res.overload.retry_histogram.iter().sum(),
+        retry_exhausted: res.overload.retry_exhausted,
+        aged_past_patience: res.overload.aged_past_patience,
+        max_pend_ms: res.overload.max_pend_ms,
+        unfinished: res.unfinished,
+    }
+}
+
 fn main() {
     let mut bench = Bench::new("elastic_scaling");
     let full = full_scale();
@@ -640,6 +772,73 @@ fn main() {
         &chaos_rows,
     );
 
+    // Overload grid: arrival rate from half to 3× the peak fleet's
+    // optimal goodput × queue/admission policy × scaler — the
+    // rejection-rate × tail-attainment × goodput curves.
+    let rates: &[f64] = if full {
+        &[0.5, 1.0, 1.5, 2.0, 3.0]
+    } else if smoke {
+        &[0.5, 2.0]
+    } else {
+        &[0.5, 1.0, 2.0, 3.0]
+    };
+    let mut ol_grid = Vec::new();
+    for &rate in rates {
+        for scaler in [ScalerKind::Gradient, ScalerKind::Threshold, ScalerKind::Predictive] {
+            for policy in OverloadPolicy::ALL {
+                ol_grid.push((rate, scaler, policy));
+            }
+        }
+    }
+    let ol_results = par_map(ol_grid, threads, move |_, (rate, scaler, policy)| {
+        (rate, scaler, policy, run_overload_cell(policy, scaler, rate, n_peak, requests))
+    });
+    let ol_rows: Vec<Vec<String>> = ol_results
+        .iter()
+        .map(|(rate, scaler, policy, r)| {
+            vec![
+                f(*rate, 2),
+                scaler.name().to_string(),
+                policy.name().to_string(),
+                f(r.rejection_rate, 3),
+                f(r.accepted_attain, 3),
+                r.accepted_violations.to_string(),
+                f(r.p99_ttft_ms, 0),
+                r.goodput_tokens.to_string(),
+                f(r.goodput_tok_per_s, 0),
+                r.shed_tokens.to_string(),
+                r.retries.to_string(),
+                r.retry_admitted.to_string(),
+                r.retry_exhausted.to_string(),
+                r.aged_past_patience.to_string(),
+                r.max_pend_ms.to_string(),
+                r.unfinished.to_string(),
+            ]
+        })
+        .collect();
+    bench.table(
+        "Overload: rejection-rate x tail-attainment x goodput past saturation (queue/admission policy x scaler)",
+        &[
+            "rate_x_optimal",
+            "scaler",
+            "policy",
+            "rejection_rate",
+            "attain_accepted",
+            "accepted_violations",
+            "p99_ttft_ms",
+            "goodput_tok",
+            "goodput_tok_per_s",
+            "shed_tok",
+            "retries",
+            "retry_admitted",
+            "retry_exhausted",
+            "aged_past_patience",
+            "max_pend_ms",
+            "unfinished",
+        ],
+        &ol_rows,
+    );
+
     // Smoke invariants (CI): every request must finish in every cell
     // (the predictive cells included), migration counters move only
     // when migration is on, and the prefill fleet moves only in `+pf`
@@ -752,6 +951,64 @@ fn main() {
         let failures: u64 = chaos_results.iter().map(|(_, _, r)| r.failures).sum();
         println!(
             "chaos smoke OK: {failures} failures, {kills} deadline kills, 0 token violations"
+        );
+        // Overload gates at 2× saturation, per scaler: the reject cells
+        // actually shed, accepted requests never miss their SLO in
+        // reject mode, EDF never worsens the FIFO TTFT tail (small
+        // slack for reordering noise), and edf+reject strictly beats
+        // FIFO on accepted-request attainment.
+        let ol_cell = |rate: f64, scaler: ScalerKind, policy: OverloadPolicy| {
+            ol_results
+                .iter()
+                .find(|(rt, s, p, _)| (rt - rate).abs() < 1e-9 && *s == scaler && *p == policy)
+                .map(|(_, _, _, r)| r)
+                .expect("overload grid cell missing")
+        };
+        let mut shed_at_2x = 0u64;
+        for scaler in [ScalerKind::Gradient, ScalerKind::Threshold, ScalerKind::Predictive] {
+            let fifo = ol_cell(2.0, scaler, OverloadPolicy::Fifo);
+            let edf = ol_cell(2.0, scaler, OverloadPolicy::Edf);
+            let rej = ol_cell(2.0, scaler, OverloadPolicy::EdfReject);
+            let rr = ol_cell(2.0, scaler, OverloadPolicy::EdfRejectRetry);
+            for (p, r) in
+                [("fifo", fifo), ("edf", edf), ("edf+reject", rej), ("edf+reject+retry", rr)]
+            {
+                assert_eq!(
+                    r.unfinished, 0,
+                    "{}/{p}: overload cell left requests unfinished",
+                    scaler.name()
+                );
+            }
+            assert!(
+                rej.rejection_rate > 0.0 && rr.rejection_rate > 0.0,
+                "{}: no rejections at 2x saturation (reject {:.3}, retry {:.3})",
+                scaler.name(),
+                rej.rejection_rate,
+                rr.rejection_rate,
+            );
+            assert_eq!(
+                rej.accepted_violations, 0,
+                "{}: admitted requests missed their SLO in reject mode",
+                scaler.name()
+            );
+            assert!(
+                edf.p99_ttft_ms <= fifo.p99_ttft_ms * 1.10 + 5.0,
+                "{}: EDF worsened the FIFO TTFT tail at 2x: {:.0} ms vs {:.0} ms",
+                scaler.name(),
+                edf.p99_ttft_ms,
+                fifo.p99_ttft_ms,
+            );
+            assert!(
+                rej.accepted_attain > fifo.accepted_attain,
+                "{}: edf+reject accepted attainment {:.3} must strictly beat fifo {:.3} at 2x",
+                scaler.name(),
+                rej.accepted_attain,
+                fifo.accepted_attain,
+            );
+            shed_at_2x += (rej.rejection_rate * requests as f64) as u64;
+        }
+        println!(
+            "overload smoke OK: {shed_at_2x} rejections at 2x saturation, 0 accepted-SLO violations, fifo->edf tail non-increasing"
         );
         println!("smoke invariants OK ({} cells)", results.len());
     }

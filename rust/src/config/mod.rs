@@ -255,6 +255,70 @@ impl ChaosConfig {
     }
 }
 
+/// Overload-handling knobs (`[overload]`): graceful degradation past
+/// saturation. With `enabled = "on"` the PolyServe router orders its
+/// per-(model, tier) pending queues by absolute deadline (EDF) instead
+/// of FIFO; `reject` adds SLO-feasibility admission control at the
+/// arrival edge (provably unattainable requests get a typed `Rejected`
+/// outcome instead of blowing out every tier's tail), and `retry` lets
+/// rejected clients re-arrive after a capped exponential backoff with
+/// seeded jitter. All-off by default — then the simulator constructs no
+/// overload machinery and the run is bit-for-bit the seed path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OverloadConfig {
+    /// Master switch (`enabled = "off"|"on"`): EDF pending queues plus
+    /// whatever sub-features are selected below.
+    pub enabled: bool,
+    /// Early rejection at the arrival edge (`reject = "off"|"on"`):
+    /// requests whose SLO is infeasible against the profile table are
+    /// rejected instead of queued.
+    pub reject: bool,
+    /// Retry-with-backoff clients (`retry = "off"|"on"`): rejected
+    /// requests re-arrive through the event queue after
+    /// `retry_base_ms * 2^(attempt-1)` plus seeded jitter.
+    pub retry: bool,
+    /// Backoff base for the first retry, ms.
+    pub retry_base_ms: u64,
+    /// Give up (final `Rejected` outcome) after this many retries.
+    pub retry_max_attempts: u32,
+    /// Seed of the retry-jitter RNG stream (independent of the
+    /// workload and chaos seeds).
+    pub seed: u64,
+    /// Runtime reference mode (not a TOML knob): keep the pending
+    /// queues FIFO even with overload on — the pre-EDF engine, used by
+    /// the digest-identity harness and the bench's fifo policy axis.
+    pub fifo_reference: bool,
+}
+
+impl Default for OverloadConfig {
+    fn default() -> OverloadConfig {
+        OverloadConfig {
+            enabled: false,
+            reject: false,
+            retry: false,
+            retry_base_ms: 500,
+            retry_max_attempts: 3,
+            seed: 0x0E71,
+            fifo_reference: false,
+        }
+    }
+}
+
+impl OverloadConfig {
+    /// Does this config engage any overload handling? `false` keeps the
+    /// simulator's overload machinery entirely unconstructed (the seed
+    /// path) and the router's queues FIFO.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// EDF pending-queue ordering is active (overload on and not
+    /// pinned to the FIFO reference engine).
+    pub fn edf(&self) -> bool {
+        self.enabled && !self.fifo_reference
+    }
+}
+
 /// Diurnal demand-curve spec: when set, arrivals follow a sinusoid-
 /// approximating piecewise `RateSchedule` with this peak:trough ratio
 /// and period, instead of constant-rate Poisson.
@@ -306,6 +370,8 @@ pub struct SimConfig {
     pub diurnal: Option<DiurnalSpec>,
     /// Fault-injection / spot knobs (default: fully off).
     pub chaos: ChaosConfig,
+    /// Overload-handling knobs (default: fully off).
+    pub overload: OverloadConfig,
 }
 
 /// PolyServe mechanism toggles — each maps to a §4 subsection, and the
@@ -360,6 +426,7 @@ impl Default for SimConfig {
             models: ModelsConfig::default(),
             diurnal: None,
             chaos: ChaosConfig::default(),
+            overload: OverloadConfig::default(),
         }
     }
 }
@@ -510,6 +577,32 @@ impl SimConfig {
         ch.spot_fraction = doc.f64_or("chaos.spot_fraction", ch.spot_fraction);
         ch.spot_price_frac = doc.f64_or("chaos.spot_price_frac", ch.spot_price_frac);
         ch.seed = doc.f64_or("chaos.seed", ch.seed as f64) as u64;
+        let ol = &mut cfg.overload;
+        for (key, field) in [
+            ("overload.enabled", 0usize),
+            ("overload.reject", 1),
+            ("overload.retry", 2),
+        ] {
+            if let Some(v) = doc.get(key) {
+                let on = match (v.as_str(), v.as_bool()) {
+                    (Some("on"), _) => true,
+                    (Some("off"), _) => false,
+                    (None, Some(b)) => b,
+                    (Some(other), _) => anyhow::bail!("unknown {key} '{other}' (off|on)"),
+                    _ => anyhow::bail!("{key} must be \"off\"|\"on\""),
+                };
+                match field {
+                    0 => ol.enabled = on,
+                    1 => ol.reject = on,
+                    _ => ol.retry = on,
+                }
+            }
+        }
+        ol.retry_base_ms =
+            doc.usize_or("overload.retry_base_ms", ol.retry_base_ms as usize) as u64;
+        ol.retry_max_attempts =
+            doc.usize_or("overload.retry_max_attempts", ol.retry_max_attempts as usize) as u32;
+        ol.seed = doc.f64_or("overload.seed", ol.seed as f64) as u64;
         let f = &mut cfg.features;
         f.load_gradient = doc.bool_or("features.load_gradient", f.load_gradient);
         f.lazy_promotion = doc.bool_or("features.lazy_promotion", f.lazy_promotion);
@@ -575,8 +668,8 @@ impl SimConfig {
             }
         }
         anyhow::ensure!(
-            (1..=2).contains(&self.models.mix.len()),
-            "models.mix must list 1 or 2 weights (the registry ships 2 built-in models)"
+            !self.models.mix.is_empty(),
+            "models.mix must list at least one weight"
         );
         anyhow::ensure!(
             self.models.mix.iter().all(|w| w.is_finite() && *w > 0.0),
@@ -621,6 +714,28 @@ impl SimConfig {
             anyhow::ensure!(
                 ch.preempt_grace_ms >= 1,
                 "chaos.preempt_grace_ms must be >= 1 when preemptions are on"
+            );
+        }
+        let ol = &self.overload;
+        if ol.retry {
+            anyhow::ensure!(
+                ol.enabled && ol.reject,
+                "overload.retry needs overload.enabled and overload.reject (only rejected \
+                 requests retry)"
+            );
+            anyhow::ensure!(
+                ol.retry_base_ms >= 1,
+                "overload.retry_base_ms must be >= 1 when retries are on"
+            );
+            anyhow::ensure!(
+                ol.retry_max_attempts >= 1,
+                "overload.retry_max_attempts must be >= 1 when retries are on"
+            );
+        }
+        if ol.reject {
+            anyhow::ensure!(
+                ol.enabled,
+                "overload.reject needs overload.enabled = \"on\""
             );
         }
         Ok(())
@@ -814,15 +929,24 @@ swap_delay_ms = 5000
             "[elastic]\nscaler = \"predictive\"\nmin_instances = 2\nmax_instances = 8\nprefill_elastic = \"on\"\nprefill_min = 0\nprefill_max = 4",
             "[diurnal]\npeak_to_trough = 0.5",
             "[elastic]\nmigration_batching = \"nope\"",
-            // The registry ships exactly two built-in models.
-            "[models]\nmix = [0.5, 0.3, 0.2]",
+            // Empty or non-positive mixes stay rejected; any length of
+            // positive weights is accepted (N-model registries).
+            "[models]\nmix = []",
             "[models]\nmix = [1.0, 0.0]",
+            "[models]\nmix = [0.5, -0.5, 1.0]",
             "[chaos]\nfail_mtbf_s = -1.0",
             "[chaos]\nspot_fraction = 1.5",
             "[chaos]\nspot_price_frac = -0.1",
             // Preemptions without spot capacity would be a silent no-op.
             "[chaos]\npreempt_mtbf_s = 60.0",
             "[chaos]\npreempt_mtbf_s = 60.0\nspot_fraction = 0.5\npreempt_grace_ms = 0",
+            // Overload sub-features without the master switch (or retry
+            // without reject) would be silent no-ops — reject loudly.
+            "[overload]\nreject = \"on\"",
+            "[overload]\nenabled = \"on\"\nretry = \"on\"",
+            "[overload]\nenabled = \"on\"\nreject = \"on\"\nretry = \"on\"\nretry_base_ms = 0",
+            "[overload]\nenabled = \"on\"\nreject = \"on\"\nretry = \"on\"\nretry_max_attempts = 0",
+            "[overload]\nenabled = \"nope\"",
         ] {
             let doc = tomlish::parse(bad).unwrap();
             assert!(SimConfig::from_doc(&doc).is_err(), "should reject: {bad}");
@@ -855,6 +979,52 @@ seed = 7
         let d = SimConfig::default();
         assert!(!d.chaos.enabled());
         d.validate().unwrap();
+    }
+
+    #[test]
+    fn parses_overload() {
+        let doc = tomlish::parse(
+            r#"
+[overload]
+enabled = "on"
+reject = "on"
+retry = "on"
+retry_base_ms = 250
+retry_max_attempts = 5
+seed = 11
+"#,
+        )
+        .unwrap();
+        let c = SimConfig::from_doc(&doc).unwrap();
+        assert!(c.overload.enabled());
+        assert!(c.overload.edf());
+        assert!(c.overload.reject);
+        assert!(c.overload.retry);
+        assert_eq!(c.overload.retry_base_ms, 250);
+        assert_eq!(c.overload.retry_max_attempts, 5);
+        assert_eq!(c.overload.seed, 11);
+        // Default: fully off — the overload-free seed path.
+        let d = SimConfig::default();
+        assert!(!d.overload.enabled());
+        assert!(!d.overload.edf());
+        d.validate().unwrap();
+        // The FIFO reference pin disables EDF but keeps overload on.
+        let mut f = SimConfig::default();
+        f.overload.enabled = true;
+        f.overload.fifo_reference = true;
+        assert!(f.overload.enabled());
+        assert!(!f.overload.edf());
+        f.validate().unwrap();
+    }
+
+    #[test]
+    fn accepts_n_model_mixes() {
+        // The PR-9 satellite: any positive-weight list is valid — the
+        // registry derives variants past the built-in pair.
+        let doc = tomlish::parse("[models]\nmix = [0.5, 0.3, 0.2]").unwrap();
+        let c = SimConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.models.mix.len(), 3);
+        assert!(c.models.is_multi());
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! length using the average decode length", §4.5).
 
 use crate::profile::ProfileTable;
-use crate::sim::{Instance, SimRequest};
+use crate::sim::{Instance, Role, SimRequest};
 use crate::slo::TimeMs;
 
 /// Admission safety margin: predicted iteration times must stay under
@@ -294,6 +294,79 @@ pub fn admit_coloc(
     )
 }
 
+/// Arrival-edge SLO feasibility (the `[overload]` admission gate): can
+/// `inst` plausibly serve a *fresh* request under `tier_tpot_ms`
+/// without breaking deadlines? One predicate per role:
+///
+/// * `Coloc` — the full §4.7 co-location admission (prefill backlog +
+///   TTFT headroom + post-prefill decode admission): exactly the check
+///   `place_coloc` runs, so an accepted request is immediately
+///   placeable on this instance.
+/// * `Prefill` (PD) — backlog drain time: the queued prefill tokens
+///   plus this prompt, drained at the packed-budget rate, must finish
+///   inside the TTFT headroom. Optimistic relative to the exact EDF
+///   queue simulation the placement path runs — a backlog that fails
+///   even this bound is provably infeasible.
+/// * `Decode` (PD) — decode-slot availability: the steady-state §4.5
+///   batch/KV/TPOT admission with the prompt's KV as the newcomer.
+///
+/// Rejection must be *provable*: the check mirrors the placement
+/// admission rather than approximating it, so `[overload] reject`
+/// sheds only requests the router could not have served here anyway.
+#[allow(clippy::too_many_arguments)]
+pub fn feasible_at_arrival(
+    inst: &Instance,
+    requests: &[SimRequest],
+    profile: &ProfileTable,
+    tier_tpot_ms: u64,
+    prefill_len: u64,
+    ttft_deadline: TimeMs,
+    next_token_deadline: TimeMs,
+    now: TimeMs,
+    avg_decode_len: f64,
+    pf_token_ratio: f64,
+    prefill_budget: u64,
+    wait_aware: bool,
+    continuous_prediction: bool,
+) -> bool {
+    match inst.role {
+        Role::Coloc => admit_coloc(
+            inst,
+            requests,
+            profile,
+            tier_tpot_ms,
+            prefill_len,
+            ttft_deadline,
+            next_token_deadline,
+            now,
+            avg_decode_len,
+            pf_token_ratio,
+            wait_aware,
+            continuous_prediction,
+        ),
+        Role::Prefill => {
+            let wait = if wait_aware { inst.wait_ms(now) } else { 0 };
+            let backlog = inst.queued_prefill_tokens(requests) + prefill_len;
+            let eff = (prefill_budget as f64 * pf_token_ratio).ceil() as u64;
+            let chunk_ms = profile.iter_ms(eff.max(1), prefill_budget);
+            let ms_per_token = chunk_ms / prefill_budget.max(1) as f64;
+            now as f64 + wait as f64 + backlog as f64 * ms_per_token
+                <= ttft_deadline as f64
+        }
+        Role::Decode => admit_decode(
+            inst,
+            requests,
+            profile,
+            tier_tpot_ms,
+            prefill_len,
+            next_token_deadline,
+            now,
+            avg_decode_len,
+            wait_aware,
+        ),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -420,6 +493,39 @@ mod tests {
         let yes = admit_coloc(&inst, &reqs, &prof, 30, 8000, 10_000, 10_030, 0, 150.0, 0.25, true, true);
         assert!(!no);
         assert!(yes);
+    }
+
+    #[test]
+    fn arrival_feasibility_dispatches_by_role() {
+        let prof = profile();
+        let cm = CostModel::h200_llama8b();
+        // Empty coloc server: generous TTFT feasible, impossible TTFT not.
+        let coloc = Instance::new(0, Role::Coloc, cm.kv_capacity_tokens, cm.max_token_batch);
+        assert!(feasible_at_arrival(
+            &coloc, &[], &prof, 50, 2_000, 10_000, 10_050, 0, 150.0, 0.25, 2_048, true, true,
+        ));
+        assert!(!feasible_at_arrival(
+            &coloc, &[], &prof, 50, 8_000, 10, 60, 0, 150.0, 0.25, 2_048, true, true,
+        ));
+        // Prefill server: the backlog drain-time bound prices the
+        // prompt itself too — a huge prompt can't drain by a tight TTFT.
+        let pf = Instance::new(1, Role::Prefill, cm.kv_capacity_tokens, cm.max_token_batch);
+        assert!(feasible_at_arrival(
+            &pf, &[], &prof, 50, 2_000, 1_000, 1_050, 0, 150.0, 0.25, 2_048, true, true,
+        ));
+        assert!(!feasible_at_arrival(
+            &pf, &[], &prof, 50, 400_000, 200, 250, 0, 150.0, 0.25, 2_048, true, true,
+        ));
+        // Decode: steady-state slot availability mirrors admit_decode.
+        let (inst, reqs) = loaded_instance(100, 2800, 100);
+        assert!(feasible_at_arrival(
+            &inst, &reqs, &prof, 50, 2_800, u64::MAX >> 1, u64::MAX >> 1, 0, 150.0, 0.25,
+            2_048, false, false,
+        ));
+        assert!(!feasible_at_arrival(
+            &inst, &reqs, &prof, 20, 2_800, u64::MAX >> 1, u64::MAX >> 1, 0, 150.0, 0.25,
+            2_048, false, false,
+        ));
     }
 
     #[test]

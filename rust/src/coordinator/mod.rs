@@ -95,6 +95,24 @@ pub trait Router {
     fn diagnostics(&self) -> String {
         String::new()
     }
+
+    /// Arrival-edge admission gate (the `[overload]` layer): is
+    /// `req_idx`'s SLO feasible right now? Consulted by the simulator
+    /// only when `[overload] reject` is on; `false` sheds the request
+    /// with a typed `Rejected` outcome before it ever reaches
+    /// [`Router::route_new`]. The default accepts everything —
+    /// baselines never shed.
+    fn admit_at_arrival(&self, now: TimeMs, req_idx: usize, ctx: &RouteCtx) -> bool {
+        let _ = (now, req_idx, ctx);
+        true
+    }
+
+    /// Pending-queue aging diagnostics: `(dispatches whose pend
+    /// exceeded the relaxed-admission patience, max observed pend ms)`.
+    /// `None` for policies without a pending queue.
+    fn queue_aging(&self) -> Option<(u64, u64)> {
+        None
+    }
 }
 
 /// Build the router described by a [`SimConfig`].

@@ -17,18 +17,23 @@ use crate::model::ModelId;
 use crate::profile::ProfileTable;
 use crate::sim::{Role, TierAssign};
 use crate::slo::{TierSet, TimeMs};
-use std::collections::VecDeque;
+use std::collections::BTreeSet;
 
 /// How long a late pending request may keep failing relaxed admission
 /// before the liveness backstop places it unconditionally.
 const FORCED_GRACE_MS: u64 = 2_000;
 
-/// A request waiting for capacity in some tier.
-#[derive(Debug, Clone, Copy)]
+/// A request waiting for capacity in some tier. The ordering derives
+/// exist only so entries can live in the deadline-keyed ordered set —
+/// the `(deadline, seq)` key prefix is unique per entry, so the derived
+/// order is never load-bearing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 struct Pending {
     req_idx: usize,
     /// true = needs decode placement (PD); false = needs full placement.
     decode_phase: bool,
+    /// When the request was parked (queue-aging diagnostics).
+    pended_at: TimeMs,
 }
 
 /// The PolyServe router (§4). One struct serves both modes
@@ -46,7 +51,20 @@ pub struct PolyServeRouter {
     /// axis keeps one model's head-of-line block from stalling
     /// another's dispatch). Single-model: exactly the per-tier layout.
     /// Grown lazily to the fleet's model count on first routing call.
-    pending: Vec<VecDeque<Pending>>,
+    ///
+    /// Entries are keyed `(deadline, seq, pending)`. With `[overload]`
+    /// EDF on, `deadline` is the request's least-headroom key (TTFT
+    /// deadline for fresh requests, next-token deadline for decode
+    /// handoffs) frozen at park time — keys are immutable while queued,
+    /// so the set order never goes stale. With EDF off every key is
+    /// `(0, seq)` and iteration order is exactly the old FIFO
+    /// insertion order, bit for bit.
+    pending: Vec<BTreeSet<(TimeMs, u64, Pending)>>,
+    /// Monotone tie-breaker for pending keys (also the FIFO order).
+    seq: u64,
+    /// Deadline-ordered (EDF) pending dispatch — `[overload]` on and
+    /// not running the FIFO reference.
+    edf: bool,
     /// Requests currently parked across all pending queues — lets
     /// `drain_pending` (called on every iteration end and tick) return
     /// in O(1) on the common all-placed fast path.
@@ -86,6 +104,11 @@ pub struct RouterStats {
     pub releases: u64,
     /// Instances moved to the §4.4 pending state.
     pub marked_pending: u64,
+    /// Dispatches whose pending wait exceeded the relaxed-admission
+    /// patience window ([`FORCED_GRACE_MS`]) — queue-aging diagnostic.
+    pub aged_past_patience: u64,
+    /// Longest observed pend→dispatch wait, ms.
+    pub max_pend_ms: u64,
 }
 
 impl Drop for RouterStats {
@@ -122,8 +145,10 @@ impl PolyServeRouter {
             features: cfg.features.clone(),
             avg_decode_len,
             profiles: Vec::new(),
-            pending: (0..n_tiers).map(|_| VecDeque::new()).collect(),
+            pending: (0..n_tiers).map(|_| BTreeSet::new()).collect(),
             pending_total: 0,
+            seq: 0,
+            edf: cfg.overload.edf(),
             order,
             mode: cfg.mode,
             prefill_budget: DEFAULT_PREFILL_BUDGET,
@@ -160,7 +185,57 @@ impl PolyServeRouter {
     fn ensure_models(&mut self, ctx: &RouteCtx) {
         let need = ctx.cluster.num_models * self.tiers.len();
         if self.pending.len() < need {
-            self.pending.resize_with(need, VecDeque::new);
+            self.pending.resize_with(need, BTreeSet::new);
+        }
+    }
+
+    /// Ordering key for a request about to be parked: `(deadline, seq)`.
+    /// EDF keys on the least-headroom deadline *frozen at park time* —
+    /// TTFT deadline for fresh requests, next-token deadline for decode
+    /// handoffs; both are immutable while the request waits (nothing
+    /// advances its tracker), so the set order cannot go stale. FIFO
+    /// mode keys everything at deadline 0, leaving `seq` (monotone
+    /// insertion order) as the sole order — exactly the old VecDeque.
+    fn pend_key(&mut self, req_idx: usize, decode_phase: bool, ctx: &RouteCtx) -> (TimeMs, u64) {
+        let deadline = if self.edf {
+            let r = &ctx.requests[req_idx];
+            if decode_phase {
+                r.tracker.next_deadline()
+            } else {
+                r.ttft_deadline()
+            }
+        } else {
+            0
+        };
+        let s = self.seq;
+        self.seq += 1;
+        (deadline, s)
+    }
+
+    /// Park a request in its (model, tier) pending queue.
+    fn park(&mut self, now: TimeMs, req_idx: usize, decode_phase: bool, ctx: &RouteCtx) {
+        let r = &ctx.requests[req_idx];
+        let q = self.pending_idx(r.req.model, r.tier);
+        let (deadline, s) = self.pend_key(req_idx, decode_phase, ctx);
+        self.stats.pends += 1;
+        self.pending_total += 1;
+        self.pending[q].insert((
+            deadline,
+            s,
+            Pending {
+                req_idx,
+                decode_phase,
+                pended_at: now,
+            },
+        ));
+    }
+
+    /// Queue-aging bookkeeping on every pending dispatch.
+    fn note_dispatch(&mut self, now: TimeMs, pended_at: TimeMs) {
+        let waited = now.saturating_sub(pended_at);
+        self.stats.max_pend_ms = self.stats.max_pend_ms.max(waited);
+        if waited > FORCED_GRACE_MS {
+            self.stats.aged_past_patience += 1;
         }
     }
 
@@ -298,7 +373,7 @@ impl PolyServeRouter {
         let (ttft_deadline, next_token_deadline) = if relaxed {
             (TimeMs::MAX / 4, TimeMs::MAX / 4)
         } else {
-            let t = r.req.arrival_ms + r.req.slo.ttft_ms;
+            let t = r.ttft_deadline();
             (t, t + r.req.slo.tpot_ms)
         };
         let prof = self.profile_for(ctx.profile, model);
@@ -450,7 +525,7 @@ impl PolyServeRouter {
             // the tier index itself.
             let k = q % n_tiers;
             loop {
-                let Some(&head) = self.pending[q].front() else { break };
+                let Some(&(dkey, skey, head)) = self.pending[q].first() else { break };
                 let placed = self.placement_ladder(now, head.req_idx, head.decode_phase, ctx);
                 let placed = match placed {
                     Some(id) => Some(id),
@@ -463,7 +538,7 @@ impl PolyServeRouter {
                         let deadline = if head.decode_phase {
                             r.tracker.next_deadline()
                         } else {
-                            r.req.arrival_ms + r.req.slo.ttft_ms
+                            r.ttft_deadline()
                         };
                         if now >= deadline {
                             let relaxed = self.place_in(
@@ -500,11 +575,14 @@ impl PolyServeRouter {
                 };
                 match placed {
                     Some(id) => {
-                        self.pending[q].pop_front();
+                        self.pending[q].remove(&(dkey, skey, head));
                         self.pending_total -= 1;
+                        self.note_dispatch(now, head.pended_at);
                         self.enqueue_on(id, head, now, ctx);
                     }
-                    None => break, // head blocked; FIFO per (model, tier)
+                    // Head blocked: EDF head-of-line per (model, tier)
+                    // (FIFO head when the reference mode keys at 0).
+                    None => break,
                 }
             }
         }
@@ -577,7 +655,7 @@ impl PolyServeRouter {
             );
         } else {
             let r = &ctx.requests[p.req_idx];
-            let deadline = r.req.arrival_ms + r.req.slo.ttft_ms;
+            let deadline = r.ttft_deadline();
             ctx.cluster.instances[id].push_prefill(
                 crate::sim::PrefillJob {
                     req_idx: p.req_idx,
@@ -694,8 +772,7 @@ impl PolyServeRouter {
         let r = &ctx.requests[req_idx];
         let model = r.req.model;
         let own_tokens = r.req.prefill_len as u64;
-        let deadline =
-            (r.req.arrival_ms + r.req.slo.ttft_ms).saturating_sub(r.req.slo.tpot_ms);
+        let deadline = r.ttft_deadline().saturating_sub(r.req.slo.tpot_ms);
         // Collect-free: the role view feeds the scoring loop directly
         // (same ascending id order as the old materialized list). The
         // first candidate always seeds the fallback, so the old
@@ -751,14 +828,7 @@ impl Router for PolyServeRouter {
                 if let Some(id) = self.placement_ladder(now, req_idx, false, ctx) {
                     return Some(id);
                 }
-                let r = &ctx.requests[req_idx];
-                let q = self.pending_idx(r.req.model, r.tier);
-                self.stats.pends += 1;
-                self.pending_total += 1;
-                self.pending[q].push_back(Pending {
-                    req_idx,
-                    decode_phase: false,
-                });
+                self.park(now, req_idx, false, ctx);
                 None
             }
         }
@@ -772,14 +842,7 @@ impl Router for PolyServeRouter {
         if let Some(id) = self.placement_ladder(now, req_idx, true, ctx) {
             return Some(id);
         }
-        let r = &ctx.requests[req_idx];
-        let q = self.pending_idx(r.req.model, r.tier);
-        self.stats.pends += 1;
-        self.pending_total += 1;
-        self.pending[q].push_back(Pending {
-            req_idx,
-            decode_phase: true,
-        });
+        self.park(now, req_idx, true, ctx);
         None
     }
 
@@ -863,5 +926,99 @@ impl Router for PolyServeRouter {
 
     fn diagnostics(&self) -> String {
         format!("{:?}", self.stats)
+    }
+
+    /// The `[overload]` arrival-edge feasibility check: price the
+    /// request against its model's profile table across its whole tier
+    /// ladder (own tier + promotion order). Accept iff some serving
+    /// instance passes the role-matched §4.5/§4.6 predictor
+    /// ([`admission::feasible_at_arrival`]) — or the tier can still
+    /// grow (an adoptable Pending instance or a claimable best-effort
+    /// server), in which case the placement ladder will scale up and
+    /// the request is not hopeless. Best-effort requests always pass:
+    /// they have no deadline to protect.
+    fn admit_at_arrival(&self, now: TimeMs, req_idx: usize, ctx: &RouteCtx) -> bool {
+        let r = &ctx.requests[req_idx];
+        if r.req.slo.is_best_effort() {
+            return true;
+        }
+        let model = r.req.model;
+        let k = r.tier;
+        let prof = self.profile_for(ctx.profile, model);
+        let prefill_len = (r.req.prefill_len - r.prefill_done) as u64;
+        let ttft_deadline = r.ttft_deadline();
+        let can_grow = |ctx: &RouteCtx| {
+            ctx.cluster.pending_pool_of(model).next().is_some()
+                || ctx.cluster.best_effort_pool_of(model).next().is_some()
+        };
+        match self.mode {
+            ServingMode::Colocated => {
+                for &tier in self.tier_order(k) {
+                    let tpot = self.tiers.tier(tier).tpot_ms;
+                    let ok = ctx.cluster.in_tier_of(model, tier).any(|id| {
+                        admission::feasible_at_arrival(
+                            &ctx.cluster.instances[id],
+                            ctx.requests,
+                            prof,
+                            tpot,
+                            prefill_len,
+                            ttft_deadline,
+                            ttft_deadline + r.req.slo.tpot_ms,
+                            now,
+                            self.avg_decode_len,
+                            PF_TOKEN_RATIO,
+                            self.prefill_budget,
+                            self.features.wait_time_aware,
+                            self.features.continuous_chunk_prediction,
+                        )
+                    });
+                    if ok {
+                        return true;
+                    }
+                }
+                can_grow(ctx)
+            }
+            ServingMode::PdDisaggregated => {
+                // Prefill side: some prefill server's whole EDF queue
+                // (with this request inserted) still meets every TTFT.
+                let deadline = ttft_deadline.saturating_sub(r.req.slo.tpot_ms);
+                let prefill_ok = ctx.cluster.with_role_of(model, Role::Prefill).any(|id| {
+                    self.prefill_queue_feasible(now, id, prefill_len, deadline, ctx)
+                        .is_some()
+                });
+                if !prefill_ok {
+                    return false;
+                }
+                // Decode side: after prefill the whole context is KV —
+                // some ladder-tier server must admit that load (the
+                // wait-time check is moot this far ahead of the
+                // handoff), or the tier must still be growable.
+                let kv_start = r.req.prefill_len as u64;
+                for &tier in self.tier_order(k) {
+                    let tpot = self.tiers.tier(tier).tpot_ms;
+                    let ok = ctx.cluster.in_tier_of(model, tier).any(|id| {
+                        admission::admit_decode(
+                            &ctx.cluster.instances[id],
+                            ctx.requests,
+                            prof,
+                            tpot,
+                            kv_start,
+                            ttft_deadline + r.req.slo.tpot_ms,
+                            now,
+                            self.avg_decode_len,
+                            false,
+                        )
+                    });
+                    if ok {
+                        return true;
+                    }
+                }
+                can_grow(ctx)
+            }
+        }
+    }
+
+    fn queue_aging(&self) -> Option<(u64, u64)> {
+        Some((self.stats.aged_past_patience, self.stats.max_pend_ms))
     }
 }

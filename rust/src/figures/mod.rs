@@ -8,7 +8,8 @@ use crate::metrics::AttainmentCurve;
 use crate::model::{CostModel, ModelRegistry};
 use crate::profile::ProfileTable;
 use crate::sim::{
-    ChaosParams, Cluster, ElasticParams, PrefillElastic, SimParams, SimResult, Simulation,
+    ChaosParams, Cluster, ElasticParams, OverloadParams, PrefillElastic, SimParams, SimResult,
+    Simulation,
 };
 use crate::util::rng::Rng;
 use crate::util::threadpool::par_map;
@@ -30,7 +31,8 @@ pub struct Experiment {
     /// Model catalog of the run. Single-entry (`default_single`) for
     /// the classic configuration — which keeps every decision
     /// bit-for-bit identical to the pre-registry harness — or the
-    /// built-in pair when `cfg.models.mix` lists two weights.
+    /// built-in N-model cycle when `cfg.models.mix` lists N ≥ 2
+    /// weights (N = 2 is exactly the built-in pair).
     pub models: ModelRegistry,
     /// Generated request stream.
     pub workload: Workload,
@@ -64,6 +66,12 @@ pub struct Experiment {
     /// timing cells disable it so the bench doesn't measure the audit's
     /// own scans.
     pub debug_audit: bool,
+    /// Keep the router's pending queues FIFO-ordered even with
+    /// `[overload]` on (`OverloadConfig::fifo_reference`) — the pre-EDF
+    /// reference engine for digest-identity runs and the bench's `fifo`
+    /// policy axis. A no-op with overload off (the queues are FIFO
+    /// either way, bit for bit).
+    pub fifo_reference: bool,
 }
 
 impl Experiment {
@@ -71,7 +79,7 @@ impl Experiment {
     /// `rate_frac_of_optimal × optimal` unless `rate_rps` overrides.
     pub fn prepare(cfg: &SimConfig) -> Experiment {
         let models = if cfg.models.is_multi() {
-            ModelRegistry::builtin_pair()
+            ModelRegistry::builtin(cfg.models.mix.len())
         } else {
             ModelRegistry::default_single()
         };
@@ -147,6 +155,7 @@ impl Experiment {
             indexed_reference: false,
             heap_reference: false,
             debug_audit: true,
+            fifo_reference: false,
         }
     }
 
@@ -237,6 +246,18 @@ impl Experiment {
                 spot_price_frac: self.cfg.chaos.spot_price_frac,
                 seed: self.cfg.chaos.seed,
             }),
+            // Simulator-side overload machinery exists only when the
+            // arrival gate is on; EDF-only configs are purely a router
+            // ordering change with nothing to construct here.
+            overload: (self.cfg.overload.enabled() && self.cfg.overload.reject).then(|| {
+                OverloadParams {
+                    reject: true,
+                    retry: self.cfg.overload.retry,
+                    retry_base_ms: self.cfg.overload.retry_base_ms,
+                    retry_max_attempts: self.cfg.overload.retry_max_attempts,
+                    seed: self.cfg.overload.seed,
+                }
+            }),
             ..Default::default()
         };
         let mut sim = Simulation::new(
@@ -253,8 +274,12 @@ impl Experiment {
         } else {
             Vec::new()
         };
+        // The FIFO reference flag is runtime-only (not a TOML knob):
+        // thread it to the router through a config copy.
+        let mut router_cfg = self.cfg.clone();
+        router_cfg.overload.fifo_reference = self.fifo_reference;
         let mut router =
-            make_router_with_models(&self.cfg, self.workload.avg_decode_len(), &profiles);
+            make_router_with_models(&router_cfg, self.workload.avg_decode_len(), &profiles);
         let mut scaler = if elastic {
             make_autoscaler_with_models(&self.cfg, &profiles)
         } else {

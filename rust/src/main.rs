@@ -54,6 +54,12 @@ fn main() {
                 .opt("spot-fraction", "", "fraction of provisioned instances that are spot")
                 .opt("spot-price-frac", "", "spot price as a fraction of on-demand")
                 .opt("chaos-seed", "", "rng seed for the chaos schedule")
+                .flag("overload", "EDF pending queues (the [overload] master switch)")
+                .flag("overload-reject", "SLO-feasibility admission control at the arrival edge (implies --overload)")
+                .flag("overload-retry", "rejected clients re-arrive after capped backoff (implies --overload-reject)")
+                .opt("retry-base-ms", "", "backoff base for the first retry")
+                .opt("retry-max-attempts", "", "terminal rejection after this many shed arrivals")
+                .opt("overload-seed", "", "rng seed for the retry-jitter stream")
                 .flag("verbose", "per-tier breakdown"),
         )
         .command(
@@ -200,6 +206,28 @@ fn sim_config_from(args: &Args) -> Result<SimConfig, String> {
     if !args.str_or("chaos-seed", "").is_empty() {
         cfg.chaos.seed = args.u64_or("chaos-seed", cfg.chaos.seed);
     }
+    if args.flag("overload") {
+        cfg.overload.enabled = true;
+    }
+    if args.flag("overload-reject") {
+        cfg.overload.enabled = true;
+        cfg.overload.reject = true;
+    }
+    if args.flag("overload-retry") {
+        cfg.overload.enabled = true;
+        cfg.overload.reject = true;
+        cfg.overload.retry = true;
+    }
+    if !args.str_or("retry-base-ms", "").is_empty() {
+        cfg.overload.retry_base_ms = args.u64_or("retry-base-ms", cfg.overload.retry_base_ms);
+    }
+    if !args.str_or("retry-max-attempts", "").is_empty() {
+        cfg.overload.retry_max_attempts =
+            args.u64_or("retry-max-attempts", u64::from(cfg.overload.retry_max_attempts)) as u32;
+    }
+    if !args.str_or("overload-seed", "").is_empty() {
+        cfg.overload.seed = args.u64_or("overload-seed", cfg.overload.seed);
+    }
     cfg.validate().map_err(|e| e.to_string())?;
     Ok(cfg)
 }
@@ -340,7 +368,29 @@ fn cmd_simulate(args: &Args) -> i32 {
             );
         }
     }
+    if !res.overload.is_quiet() {
+        let admitted_on_retry: u64 = res.overload.retry_histogram.iter().sum();
+        println!(
+            "overload: {} rejected ({:.1}% of {} arrivals), {} retries scheduled, {} admitted on retry, {} exhausted; {} decode tokens shed",
+            res.overload.rejected_total,
+            100.0 * res.overload.rejection_rate(res.outcomes.len() as u64),
+            res.outcomes.len(),
+            res.overload.retries,
+            admitted_on_retry,
+            res.overload.retry_exhausted,
+            res.overload.shed_tokens,
+        );
+    }
+    println!(
+        "pending-queue aging: max wait {} ms, {} dispatches aged past patience",
+        res.overload.max_pend_ms, res.overload.aged_past_patience,
+    );
     if args.flag("verbose") {
+        if res.overload.rejected_total > 0 {
+            for &(tpot, n) in &res.overload.rejected_per_tier {
+                println!("  tier {tpot:>4} ms: {n:>6} rejected");
+            }
+        }
         if res.migration.drains() > 0 {
             println!(
                 "  drain latency histogram (1 s buckets, last = overflow): {:?}",

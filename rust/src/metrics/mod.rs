@@ -28,6 +28,10 @@ pub struct RequestOutcome {
     pub attained: bool,
     /// Worst slack over all tokens (ms; negative = violation).
     pub min_slack_ms: i64,
+    /// Shed by admission control (`[overload] reject`): the request
+    /// was never served, billed zero tokens, and is excluded from
+    /// attainment denominators. Always `false` with overload off.
+    pub rejected: bool,
 }
 
 impl RequestOutcome {
@@ -74,6 +78,9 @@ impl AttainmentReport {
         for o in outcomes {
             if o.slo.is_best_effort() {
                 continue; // BE requests don't count toward SLO attainment
+            }
+            if o.rejected {
+                continue; // shed at admission: attainment counts accepted work
             }
             total += 1;
             per_model[o.model].0 += 1;
@@ -496,6 +503,70 @@ impl ChaosStats {
     }
 }
 
+/// Overload accounting: admission-control rejections, retry traffic,
+/// shed vs. served tokens, and pending-queue aging. The rejection and
+/// retry counters stay zero unless `[overload]` enabled them — the
+/// digest-identity tests pin that; the aging counters move on any run
+/// that ever pended a request.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct OverloadStats {
+    /// Requests shed with a typed `Rejected` outcome (final — retry
+    /// re-arrivals that were later admitted don't count).
+    pub rejected_total: u64,
+    /// Final rejections per SLO tier, sorted by TPOT:
+    /// `(tpot_ms, rejected)`.
+    pub rejected_per_tier: Vec<(u64, u64)>,
+    /// Final rejections per registry model, indexed by [`ModelId`].
+    pub rejected_per_model: Vec<u64>,
+    /// Retry re-arrivals scheduled through the calendar queue.
+    pub retries: u64,
+    /// Retried-then-admitted requests by rejection count:
+    /// `retry_histogram[k]` = requests admitted after exactly `k+1`
+    /// rejections (i.e. on their `k+1`-th retry re-arrival). Requests
+    /// admitted on first contact never appear.
+    pub retry_histogram: Vec<u64>,
+    /// Requests that exhausted `retry_max_attempts` and were shed for
+    /// good.
+    pub retry_exhausted: u64,
+    /// Output tokens the shed requests *would* have decoded — demand
+    /// deliberately not served.
+    pub shed_tokens: u64,
+    /// Output tokens from SLO-attaining served requests (mirrors
+    /// `CostAccount::goodput_tokens` for the shed-vs-served ratio).
+    pub served_tokens: u64,
+    /// Pended requests that waited past the router's relaxed-admission
+    /// patience before dispatch (queue-aging signal; moves on normal
+    /// runs too).
+    pub aged_past_patience: u64,
+    /// Longest observed pend, ms (0 if nothing ever pended).
+    pub max_pend_ms: u64,
+}
+
+impl OverloadStats {
+    /// True when admission control never shed, retried, or deferred
+    /// anything — the aging counters are *excluded*, since FIFO pend
+    /// queues age under plain load with `[overload]` off.
+    pub fn is_quiet(&self) -> bool {
+        self.rejected_total == 0
+            && self.retries == 0
+            && self.retry_exhausted == 0
+            && self.shed_tokens == 0
+            && self.rejected_per_tier.is_empty()
+            && self.rejected_per_model.iter().all(|&r| r == 0)
+            && self.retry_histogram.is_empty()
+    }
+
+    /// Fraction of all arrivals that ended shed (0.0 when nothing
+    /// arrived).
+    pub fn rejection_rate(&self, arrivals: u64) -> f64 {
+        if arrivals == 0 {
+            0.0
+        } else {
+            self.rejected_total as f64 / arrivals as f64
+        }
+    }
+}
+
 /// Latency summary across outcomes (TTFT and mean-TPOT distributions).
 pub fn latency_summary(outcomes: &[RequestOutcome]) -> (Option<Summary>, Option<Summary>) {
     let ttfts: Vec<f64> = outcomes
@@ -524,6 +595,7 @@ mod tests {
             tokens: 101,
             attained,
             min_slack_ms: if attained { 5 } else { -3 },
+            rejected: false,
         }
     }
 
@@ -603,6 +675,40 @@ mod tests {
         assert!(empty.active_cost_per_request_s().is_infinite());
         assert!(empty.cost_per_1k_goodput_tokens_s().is_infinite());
         assert_eq!(empty.discounted_bill_ms(0.3), 0.0);
+    }
+
+    #[test]
+    fn rejected_excluded_from_attainment() {
+        let mut shed = outcome(20, false);
+        shed.rejected = true;
+        shed.first_token_ms = None;
+        shed.finish_ms = None;
+        shed.tokens = 0;
+        let outcomes = vec![outcome(20, true), outcome(20, false), shed];
+        let r = AttainmentReport::from_outcomes(&outcomes);
+        assert_eq!(r.total, 2);
+        assert_eq!(r.attained, 1);
+        assert_eq!(r.tier_attainment(20), Some(0.5));
+        assert_eq!(r.per_model, vec![(2, 1)]);
+    }
+
+    #[test]
+    fn overload_stats_quiet() {
+        assert!(OverloadStats::default().is_quiet());
+        // Aging moves on plain runs — it must not break quietness.
+        let aged = OverloadStats {
+            aged_past_patience: 7,
+            max_pend_ms: 1234,
+            ..OverloadStats::default()
+        };
+        assert!(aged.is_quiet());
+        let shedding = OverloadStats {
+            rejected_total: 1,
+            ..OverloadStats::default()
+        };
+        assert!(!shedding.is_quiet());
+        assert!((shedding.rejection_rate(4) - 0.25).abs() < 1e-9);
+        assert_eq!(OverloadStats::default().rejection_rate(0), 0.0);
     }
 
     #[test]

@@ -79,6 +79,37 @@ impl ModelRegistry {
         }
     }
 
+    /// A registry of `n ≥ 1` models cycling the two built-in
+    /// calibrations (even ids = LLaMA-3.1-8B, odd ids = Qwen2.5-32B)
+    /// with distinct display names — the N-model mix fleet.
+    /// `builtin(1)`/`builtin(2)` are exactly [`Self::default_single`] /
+    /// [`Self::builtin_pair`], so existing mixes resolve unchanged.
+    pub fn builtin(n: usize) -> ModelRegistry {
+        assert!(n >= 1, "a fleet serves at least one model");
+        match n {
+            1 => ModelRegistry::default_single(),
+            2 => ModelRegistry::builtin_pair(),
+            _ => ModelRegistry {
+                entries: (0..n)
+                    .map(|i| {
+                        let mut e = if i % 2 == 0 {
+                            ModelEntry::new(ModelSpec::llama31_8b(), CostModel::h200_llama8b())
+                        } else {
+                            ModelEntry::new(ModelSpec::qwen25_32b(), CostModel::h200_qwen32b())
+                        };
+                        if i >= 2 {
+                            // Cycled replicas are distinct deployments
+                            // of the same architecture: distinct names,
+                            // identical calibration.
+                            e.spec.name = format!("{}-v{}", e.spec.name, i / 2 + 1);
+                        }
+                        e
+                    })
+                    .collect(),
+            },
+        }
+    }
+
     /// Number of registered models.
     pub fn len(&self) -> usize {
         self.entries.len()
@@ -143,6 +174,26 @@ mod tests {
         assert_ne!(reg.entry(0).spec.name, reg.entry(1).spec.name);
         let caps = reg.instance_caps();
         assert!(caps[1].0 < caps[0].0, "32B model has tighter KV: {caps:?}");
+    }
+
+    #[test]
+    fn builtin_n_cycles_the_pair_with_distinct_names() {
+        assert_eq!(ModelRegistry::builtin(1).len(), 1);
+        assert_eq!(
+            ModelRegistry::builtin(2).entry(1).spec.name,
+            ModelRegistry::builtin_pair().entry(1).spec.name
+        );
+        let reg = ModelRegistry::builtin(5);
+        assert_eq!(reg.len(), 5);
+        // Calibration cycles, names don't collide.
+        assert_eq!(reg.entry(0).cost_model, reg.entry(2).cost_model);
+        assert_eq!(reg.entry(1).cost_model, reg.entry(3).cost_model);
+        let mut names: Vec<&str> =
+            reg.entries().iter().map(|e| e.spec.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 5, "model names must be distinct");
+        assert_eq!(reg.instance_caps().len(), 5);
     }
 
     #[test]

@@ -567,7 +567,9 @@ impl Cluster {
 
     /// The pre-PR unplaced-demand reconstruction: scan every instance's
     /// queues to mark resident requests, then count the arrived,
-    /// unfinished, unmarked ones. O(total requests + residents) per
+    /// unfinished, unmarked ones (admission-shed requests are excluded:
+    /// they were never counted as arrived and are demand the fleet
+    /// deliberately refused). O(total requests + residents) per
     /// call — kept as the debug-audit oracle for the O(1) counter and
     /// as the reference-mode path.
     pub fn unplaced_demand_scan(&self, requests: &[SimRequest], now: TimeMs) -> usize {
@@ -587,7 +589,7 @@ impl Cluster {
             .iter()
             .enumerate()
             .filter(|(idx, r)| {
-                r.req.arrival_ms <= now && r.finish_ms.is_none() && !placed[*idx]
+                r.req.arrival_ms <= now && r.finish_ms.is_none() && !r.shed && !placed[*idx]
             })
             .count()
     }
@@ -619,6 +621,7 @@ impl Cluster {
                 r.req.model == model
                     && r.req.arrival_ms <= now
                     && r.finish_ms.is_none()
+                    && !r.shed
                     && !placed[*idx]
             })
             .count()

@@ -81,6 +81,23 @@
 //! source failure: the stream carries a KV snapshot, not live device
 //! references.
 //!
+//! # Overload admission & retry (the `[overload]` layer)
+//!
+//! With [`SimParams::overload`] set, every arrival is first priced
+//! against the router's arrival-edge feasibility gate
+//! ([`Router::admit_at_arrival`]): an infeasible request is *rejected*
+//! — a typed [`RequestOutcome::rejected`] outcome billed zero tokens,
+//! never a silent drop — or, with `[overload] retry`, re-arrives
+//! through the ordinary event queue after capped exponential backoff
+//! with seeded jitter. A retry re-arrival re-anchors the request's SLO
+//! clock at the re-arrival time (the client resubmitted; the backoff
+//! wait is not held against the new deadlines) — every deadline the
+//! scheduler prices thereafter comes from
+//! [`SimRequest::ttft_deadline`], which keys on the *effective*
+//! arrival. `None` params (overload off) constructs no runtime,
+//! schedules no events and draws no RNG — bit-for-bit the seed path,
+//! exactly like a disabled `[chaos]`.
+//!
 //! # Load-ordered fleet indices and the re-key discipline
 //!
 //! The cluster keeps every tier (and the best-effort pool) in a
@@ -176,7 +193,7 @@ use crate::coordinator::{
 };
 use crate::metrics::{
     AttainmentReport, ChaosStats, CostAccount, FleetSample, FleetSeries, MigrationStats,
-    RequestOutcome,
+    OverloadStats, RequestOutcome,
 };
 use crate::model::{CostModel, ModelId};
 use crate::profile::ProfileTable;
@@ -211,6 +228,15 @@ pub struct SimRequest<'w> {
     pub finish_ms: Option<TimeMs>,
     /// Instance currently hosting the request's decode phase.
     pub decode_instance: Option<usize>,
+    /// Arrival time the SLO clock is anchored at: the workload arrival,
+    /// until an `[overload] retry` re-arrival re-anchors it (the client
+    /// resubmitted — the backoff wait is not held against the new
+    /// deadlines).
+    pub effective_arrival_ms: TimeMs,
+    /// Shed by admission control (`[overload] reject`): never placed,
+    /// zero tokens, reported as a typed `Rejected` outcome. Always
+    /// false with overload off.
+    pub shed: bool,
 }
 
 impl<'w> SimRequest<'w> {
@@ -225,7 +251,16 @@ impl<'w> SimRequest<'w> {
             first_token_ms: None,
             finish_ms: None,
             decode_instance: None,
+            effective_arrival_ms: req.arrival_ms,
+            shed: false,
         }
+    }
+
+    /// The TTFT deadline every scheduling decision prices — keyed on
+    /// the *effective* arrival, so a retry re-arrival shifts it with
+    /// the re-anchored SLO clock.
+    pub fn ttft_deadline(&self) -> TimeMs {
+        self.effective_arrival_ms + self.req.slo.ttft_ms
     }
 
     /// Has the request emitted its full output?
@@ -270,6 +305,11 @@ pub struct SimResult {
     /// Fault-injection counters; all-zeros unless [`SimParams::chaos`]
     /// was enabled (the digest-identity tests pin this).
     pub chaos: ChaosStats,
+    /// Overload accounting (rejections, retries, shed tokens, queue
+    /// aging). The rejection/retry counters stay zero unless
+    /// [`SimParams::overload`] was set; the aging counters move on any
+    /// run that ever pended a request.
+    pub overload: OverloadStats,
 }
 
 /// Per-role bounds for the elastic PD prefill tier.
@@ -363,6 +403,23 @@ impl ChaosParams {
     }
 }
 
+/// Arrival-edge admission control and client retry behaviour (the
+/// `[overload]` layer; see the module docs). `None` on
+/// [`SimParams::overload`] is the gate-free seed path bit-for-bit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OverloadParams {
+    /// Shed infeasible arrivals with a typed `Rejected` outcome.
+    pub reject: bool,
+    /// Rejected clients resubmit after capped exponential backoff.
+    pub retry: bool,
+    /// Backoff base: retry `k` waits `base·2^(k-1) + jitter(base)` ms.
+    pub retry_base_ms: u64,
+    /// Give up (shed for good) after this many rejections.
+    pub retry_max_attempts: u32,
+    /// Seed of the retry-jitter RNG stream.
+    pub seed: u64,
+}
+
 /// Environment knobs (not policy).
 #[derive(Debug, Clone)]
 pub struct SimParams {
@@ -390,6 +447,9 @@ pub struct SimParams {
     /// Fault-injection schedule; `None` or a disabled schedule is the
     /// chaos-free seed path bit-for-bit.
     pub chaos: Option<ChaosParams>,
+    /// Arrival-edge admission control + client retries; `None` is the
+    /// gate-free seed path bit-for-bit.
+    pub overload: Option<OverloadParams>,
 }
 
 impl Default for SimParams {
@@ -403,6 +463,7 @@ impl Default for SimParams {
             debug_audit: true,
             heap_reference: false,
             chaos: None,
+            overload: None,
         }
     }
 }
@@ -431,6 +492,9 @@ enum EventKey {
     ChaosFail,
     /// Self-rescheduling MTBF spot-preemption process (`[chaos]` only).
     ChaosPreempt,
+    /// A rejected client's backoff expired: the request re-arrives with
+    /// a re-anchored SLO clock (`[overload] retry` only).
+    RetryArrival(usize),
 }
 
 /// Live fault-injection state: the schedule, its dedicated RNG stream,
@@ -472,6 +536,30 @@ impl ChaosRuntime {
     }
 }
 
+/// Live overload-admission state: the knobs, the retry-jitter RNG
+/// stream, and per-request rejection counts. Constructed only when
+/// [`SimParams::overload`] is set — its absence is what keeps the
+/// overload-off path bit-for-bit identical to the seed (no gate calls,
+/// no RNG draws, no events).
+struct OverloadRuntime {
+    params: OverloadParams,
+    /// Retry-jitter RNG; drawn only when a retry is scheduled.
+    rng: Rng,
+    /// `attempts[i]` = times request `i` was refused at the arrival
+    /// edge (0 = admitted on first contact).
+    attempts: Vec<u32>,
+}
+
+impl OverloadRuntime {
+    fn new(params: OverloadParams, n_requests: usize) -> OverloadRuntime {
+        OverloadRuntime {
+            rng: Rng::new(params.seed),
+            attempts: vec![0; n_requests],
+            params,
+        }
+    }
+}
+
 /// The event-driven simulation.
 pub struct Simulation<'a> {
     /// Environment knobs.
@@ -507,6 +595,13 @@ pub struct Simulation<'a> {
     /// disabled — then no chaos event is ever scheduled and no RNG is
     /// ever drawn.
     chaos: Option<ChaosRuntime>,
+    /// Overload-admission runtime; `None` whenever `[overload]` is
+    /// absent — then the gate is never consulted and no RNG is drawn.
+    overload: Option<OverloadRuntime>,
+    /// Overload accounting, always present: the rejection/retry fields
+    /// stay zero without a runtime, the queue-aging fields are copied
+    /// from the router at finalization on every run.
+    ol_stats: OverloadStats,
 }
 
 impl<'a> Simulation<'a> {
@@ -547,6 +642,10 @@ impl<'a> Simulation<'a> {
             .clone()
             .filter(|c| c.enabled())
             .map(ChaosRuntime::new);
+        let overload = params
+            .overload
+            .clone()
+            .map(|p| OverloadRuntime::new(p, requests.len()));
         let mut sim = Simulation {
             params,
             cost_model,
@@ -563,6 +662,8 @@ impl<'a> Simulation<'a> {
             events_processed: 0,
             tick_scratch: Vec::new(),
             chaos,
+            overload,
+            ol_stats: OverloadStats::default(),
         };
         sim.push_event(tick, EventKey::Tick);
         sim
@@ -681,7 +782,15 @@ impl<'a> Simulation<'a> {
             self.now = t;
             self.events_processed += 1;
             match key {
-                EventKey::Arrival(idx) => self.handle_arrival(idx, router),
+                // Both arrival flavours count terminal rejections into
+                // `completed`: a shed request will never finish, so the
+                // loop must not wait for it.
+                EventKey::Arrival(idx) => {
+                    completed += self.handle_arrival(idx, router);
+                }
+                EventKey::RetryArrival(idx) => {
+                    completed += self.handle_retry_arrival(idx, router);
+                }
                 EventKey::IterEnd(inst) => {
                     // Chaos-gated stale guard: a hard kill mid-iteration
                     // leaves this event in the queue; the dead instance
@@ -816,11 +925,21 @@ impl<'a> Simulation<'a> {
                     .iter()
                     .filter(|r| r.req.arrival_ms <= self.now)
                     .count();
+                // Admission-gated requests never called `note_arrival`:
+                // shed ones are also filtered out of the scan oracle
+                // (debug-only recount here), while retry-waiting ones
+                // appear on both sides of the equation and cancel.
+                let shed_count = if self.overload.is_some() {
+                    self.requests.iter().filter(|r| r.shed).count()
+                } else {
+                    0
+                };
                 assert!(
-                    self.cluster.arrived_total() <= arrived_scan,
+                    self.cluster.arrived_total() + shed_count <= arrived_scan,
                     "arrival counter overran the workload"
                 );
-                let pending_arrivals = arrived_scan - self.cluster.arrived_total();
+                let pending_arrivals =
+                    arrived_scan - self.cluster.arrived_total() - shed_count;
                 assert_eq!(
                     self.cluster.unplaced_demand() + pending_arrivals,
                     self.cluster.unplaced_demand_scan(&self.requests, self.now),
@@ -835,6 +954,12 @@ impl<'a> Simulation<'a> {
         // for non-predictive scalers) before outcome collection.
         if let Some(sc) = scaler.as_deref_mut() {
             self.fleet.rates = sc.take_rate_series();
+        }
+        // Queue-aging diagnostics come from the router (policies
+        // without a pending queue report `None` and leave the zeros).
+        if let Some((aged, max_pend)) = router.queue_aging() {
+            self.ol_stats.aged_past_patience = aged;
+            self.ol_stats.max_pend_ms = max_pend;
         }
         self.finalize(completed)
     }
@@ -1329,14 +1454,28 @@ impl<'a> Simulation<'a> {
         self.fleet.samples.push(sample);
     }
 
-    fn handle_arrival(&mut self, idx: usize, router: &mut dyn Router) {
+    /// Process an arrival (or a retry re-arrival). Returns 1 iff the
+    /// request was terminally shed by the admission gate — it then
+    /// counts as completed for loop accounting, since it will never
+    /// finish.
+    fn handle_arrival(&mut self, idx: usize, router: &mut dyn Router) -> usize {
+        // Arrival-edge admission gate (`[overload] reject`): consult
+        // the router's feasibility check *before* the request is
+        // counted as arrived — a rejected request never touches the
+        // unplaced-demand counter, pends nowhere, and bills nothing.
+        if self.overload.as_ref().is_some_and(|o| o.params.reject) {
+            let now = self.now;
+            let admitted = router.admit_at_arrival(now, idx, &self.ctx());
+            if !admitted {
+                return self.reject_arrival(idx);
+            }
+        }
         // Feed the O(1) unplaced-demand counter before routing: the
         // request exists (and may pend) from this event on.
         self.cluster.note_arrival(self.requests[idx].req.model);
         let chosen = router.route_new(self.now, idx, &mut self.ctx());
         if let Some(inst) = chosen {
-            let deadline =
-                self.requests[idx].req.arrival_ms + self.requests[idx].req.slo.ttft_ms;
+            let deadline = self.requests[idx].ttft_deadline();
             self.cluster.instances[inst]
                 .push_prefill(PrefillJob { req_idx: idx, deadline }, &self.requests);
             self.cluster.refresh_load(inst);
@@ -1344,6 +1483,68 @@ impl<'a> Simulation<'a> {
         }
         self.restart_fed_instances(router);
         // None: the router holds it pending and dispatches later.
+        0
+    }
+
+    /// A rejected client's backoff expired: re-anchor the SLO clock at
+    /// the re-arrival (the client resubmitted — deadlines restart from
+    /// now, not from the original arrival) and run the ordinary arrival
+    /// path, admission gate included.
+    fn handle_retry_arrival(&mut self, idx: usize, router: &mut dyn Router) -> usize {
+        debug_assert!(
+            !self.requests[idx].shed && !self.requests[idx].is_finished(),
+            "retry re-arrival for a settled request"
+        );
+        let r = &mut self.requests[idx];
+        r.effective_arrival_ms = self.now;
+        r.tracker = DsloTracker::new(self.now, r.req.slo);
+        self.handle_arrival(idx, router)
+    }
+
+    /// The admission gate refused `idx`: schedule a client retry
+    /// (capped exponential backoff with seeded jitter) while attempts
+    /// remain, else shed the request for good with a typed `Rejected`
+    /// outcome. Returns 1 on the terminal shed.
+    fn reject_arrival(&mut self, idx: usize) -> usize {
+        let (attempt, retry, base, max_attempts) = {
+            let ol = self
+                .overload
+                .as_mut()
+                .expect("admission gate fired without an overload runtime");
+            ol.attempts[idx] += 1;
+            (
+                ol.attempts[idx],
+                ol.params.retry,
+                ol.params.retry_base_ms,
+                ol.params.retry_max_attempts,
+            )
+        };
+        if retry && attempt <= max_attempts {
+            let jitter = self
+                .overload
+                .as_mut()
+                .expect("checked above")
+                .rng
+                .below(base.max(1));
+            let backoff = base
+                .saturating_mul(1u64 << u64::from(attempt - 1).min(16))
+                .saturating_add(jitter)
+                .max(1);
+            self.ol_stats.retries += 1;
+            self.push_event(self.now + backoff, EventKey::RetryArrival(idx));
+            log::debug!(
+                "t={} overload: reject req {idx} (attempt {attempt}), retry in {backoff} ms",
+                self.now
+            );
+            0
+        } else {
+            self.requests[idx].shed = true;
+            log::debug!(
+                "t={} overload: shed req {idx} after {attempt} rejection(s)",
+                self.now
+            );
+            1
+        }
     }
 
     /// Start an iteration on `inst` if it's idle and has work.
@@ -1458,8 +1659,7 @@ impl<'a> Simulation<'a> {
     fn place_prefill_handoff(&mut self, req_idx: usize, router: &mut dyn Router) {
         let chosen = router.route_new(self.now, req_idx, &mut self.ctx());
         if let Some(inst) = chosen {
-            let deadline =
-                self.requests[req_idx].req.arrival_ms + self.requests[req_idx].req.slo.ttft_ms;
+            let deadline = self.requests[req_idx].ttft_deadline();
             self.cluster.instances[inst]
                 .push_prefill(PrefillJob { req_idx, deadline }, &self.requests);
             self.cluster.refresh_load(inst);
@@ -1534,6 +1734,7 @@ impl<'a> Simulation<'a> {
                 tokens: r.tracker.tokens_emitted(),
                 attained,
                 min_slack_ms: r.tracker.min_slack_ms(),
+                rejected: r.shed,
             });
             if let Some(f) = r.finish_ms {
                 span = span.max(f);
@@ -1602,6 +1803,48 @@ impl<'a> Simulation<'a> {
         } else {
             0.0
         };
+        // Overload accounting: terminal sheds by tier (keyed by the
+        // request's own TPOT) and model, the would-have-been decode
+        // demand, and the retry fate of every gated request. All-zero
+        // (and `is_quiet`) without a runtime — the aging fields were
+        // copied from the router before finalization either way.
+        let mut ol = std::mem::take(&mut self.ol_stats);
+        ol.rejected_per_model = vec![0; self.cluster.num_models];
+        for r in &self.requests {
+            if !r.shed {
+                continue;
+            }
+            ol.rejected_total += 1;
+            ol.rejected_per_model[r.req.model] += 1;
+            ol.shed_tokens += r.req.decode_len as u64;
+            let key = r.req.slo.tpot_ms;
+            match ol.rejected_per_tier.binary_search_by_key(&key, |&(t, _)| t) {
+                Ok(i) => ol.rejected_per_tier[i].1 += 1,
+                Err(i) => ol.rejected_per_tier.insert(i, (key, 1)),
+            }
+        }
+        if let Some(rt) = &self.overload {
+            for (i, &a) in rt.attempts.iter().enumerate() {
+                if a == 0 {
+                    continue;
+                }
+                if self.requests[i].shed {
+                    // Shed with >1 rejection ⇒ its retries ran out
+                    // (a == 1 is a plain no-retry shed).
+                    if a > 1 {
+                        ol.retry_exhausted += 1;
+                    }
+                } else {
+                    // Admitted after `a` rejections ⇒ on retry `a`.
+                    let k = (a - 1) as usize;
+                    if ol.retry_histogram.len() <= k {
+                        ol.retry_histogram.resize(k + 1, 0);
+                    }
+                    ol.retry_histogram[k] += 1;
+                }
+            }
+        }
+        ol.served_tokens = cost.goodput_tokens;
         SimResult {
             unfinished: outcomes.len() - completed.min(outcomes.len()),
             outcomes,
@@ -1613,6 +1856,7 @@ impl<'a> Simulation<'a> {
             throughput_rps,
             events_processed: self.events_processed,
             chaos: self.chaos.map(|c| c.stats).unwrap_or_default(),
+            overload: ol,
         }
     }
 }

@@ -16,8 +16,8 @@ use polyserve::model::{CostModel, ModelRegistry};
 use polyserve::profile::ProfileTable;
 use polyserve::metrics::ChaosStats;
 use polyserve::sim::{
-    ChaosParams, Cluster, ElasticParams, PrefillElastic, PrefillJob, Role, SimParams, SimRequest,
-    SimResult, Simulation,
+    ChaosParams, Cluster, ElasticParams, OverloadParams, PrefillElastic, PrefillJob, Role,
+    SimParams, SimRequest, SimResult, Simulation,
 };
 use polyserve::slo::{Slo, TimeMs};
 use polyserve::util::prop::{check, Gen, IntRange, VecOf};
@@ -1288,12 +1288,34 @@ fn indexed_run_reproduces_scan_reference_bit_for_bit() {
     multi.elastic.provision_delay_ms = 5_000;
     multi.elastic.scale_eval_ms = 1_000;
 
+    // The `[overload]` machinery live on a deliberately saturated fixed
+    // fleet: EDF queue ordering, the arrival-edge gate and the
+    // retry-with-backoff clients (seeded-jitter RNG included) are part
+    // of the decision stream and must replay identically on every
+    // queue × index cell — rejections, backoff re-arrivals and all.
+    let mut overload = SimConfig {
+        trace: TraceKind::ShareGpt,
+        policy: Policy::PolyServe,
+        mode: ServingMode::Colocated,
+        instances: 4,
+        requests: 400,
+        rate_frac_of_optimal: 2.0,
+        seed: 53,
+        ..Default::default()
+    };
+    overload.overload.enabled = true;
+    overload.overload.reject = true;
+    overload.overload.retry = true;
+    overload.overload.retry_base_ms = 200;
+    overload.overload.retry_max_attempts = 2;
+
     for (label, cfg) in [
         ("pd_elastic", pd),
         ("coloc_elastic", co),
         ("pd_fixed", fixed),
         ("pd_no_gradient", ablated),
         ("pd_multi_model", multi),
+        ("co_overload", overload),
     ] {
         // Baseline cell: calendar queue + ordered indices (the default
         // hot path). Every other (queue, index) combination must match.
@@ -1336,12 +1358,27 @@ fn indexed_run_reproduces_scan_reference_bit_for_bit() {
                 "{label}/{path}: event schedule diverged"
             );
             assert_eq!(ordered.chaos, res.chaos, "{label}/{path}: chaos stats diverged");
+            assert_eq!(
+                ordered.overload, res.overload,
+                "{label}/{path}: overload stats diverged"
+            );
         }
         assert_eq!(ordered.unfinished, 0, "{label}");
         // The chaos machinery is compiled into every one of these cells
         // but `[chaos]` is disabled: the layer must stay perfectly
         // quiet — all-zero stats on every engine combination.
         assert_eq!(ordered.chaos, ChaosStats::default(), "{label}: chaos must be off");
+        if label == "co_overload" {
+            // 2× saturation on a pinned 4-instance fleet must actually
+            // engage the gate, or the cell tests nothing.
+            assert!(
+                ordered.overload.rejected_total > 0,
+                "{label}: no rejections at 2× saturation: {:?}",
+                ordered.overload
+            );
+        } else {
+            assert!(ordered.overload.rejected_total == 0, "{label}: phantom rejections");
+        }
     }
 }
 
@@ -1567,4 +1604,210 @@ fn spot_preemption_deadline_kill_replaces_residents() {
     assert_eq!(res.chaos.preempt_drained, 0);
     assert!(res.chaos.replaced_requests >= 1);
     assert_eq!(res.migration.migrated_requests, 0, "wait-drain migrates nothing");
+}
+
+// ---------------------------------------------------------------------
+// Overload admission, EDF pending queues & retry clients.
+// ---------------------------------------------------------------------
+
+/// `[overload]` off — and the FIFO reference engine — is the seed path
+/// bit-for-bit: with the master switch off the BTreeSet pending queues
+/// key on `(0, seq)` (insertion order, exactly the old `VecDeque`), no
+/// admission gate constructs and no retry RNG is drawn; pinning
+/// `fifo_reference` (with or without `enabled = "on"`, on either event
+/// engine) must change nothing either.
+#[test]
+fn overload_off_and_fifo_reference_are_seed_path_bit_for_bit() {
+    let mut cfg = SimConfig {
+        trace: TraceKind::ShareGpt,
+        policy: Policy::PolyServe,
+        mode: ServingMode::Colocated,
+        instances: 6,
+        requests: 400,
+        rate_frac_of_optimal: 0.6,
+        seed: 59,
+        ..Default::default()
+    };
+    cfg.diurnal = Some(DiurnalSpec { peak_to_trough: 3.0, period_s: 120.0 });
+    cfg.elastic.scaler = ScalerKind::Gradient;
+    cfg.elastic.min_instances = 2;
+    cfg.elastic.max_instances = 10;
+    cfg.elastic.provision_delay_ms = 5_000;
+    cfg.elastic.scale_eval_ms = 1_000;
+    cfg.elastic.migration = true;
+    let baseline = Experiment::prepare(&cfg).run();
+    assert_eq!(baseline.unfinished, 0);
+    assert!(
+        baseline.overload.is_quiet(),
+        "overload-off run must stay quiet: {:?}",
+        baseline.overload
+    );
+
+    // `enabled = "on"` pinned to the FIFO reference with rejection off:
+    // `edf()` gates off and no sim-side machinery constructs — provably
+    // the seed path, not merely close to it.
+    let mut on_cfg = cfg.clone();
+    on_cfg.overload.enabled = true;
+    let cells: [(&str, &SimConfig, bool, bool); 3] = [
+        ("fifo_ref/overload_off", &cfg, true, false),
+        ("fifo_ref/overload_on", &on_cfg, true, false),
+        ("heap+fifo_ref", &cfg, true, true),
+    ];
+    for (label, cell_cfg, fifo, heap) in cells {
+        let mut exp = Experiment::prepare(cell_cfg);
+        exp.fifo_reference = fifo;
+        exp.heap_reference = heap;
+        let res = exp.run();
+        assert_eq!(baseline.outcomes, res.outcomes, "{label}: outcomes diverged");
+        assert_eq!(baseline.attainment, res.attainment, "{label}");
+        assert_eq!(baseline.cost, res.cost, "{label}: cost diverged");
+        assert_eq!(baseline.fleet, res.fleet, "{label}: fleet series diverged");
+        assert_eq!(baseline.migration, res.migration, "{label}");
+        assert_eq!(baseline.sim_span_ms, res.sim_span_ms, "{label}");
+        assert_eq!(
+            baseline.events_processed, res.events_processed,
+            "{label}: event schedule diverged"
+        );
+        assert_eq!(baseline.overload, res.overload, "{label}: overload stats diverged");
+    }
+}
+
+/// The admission gate composed with a mid-storm instance failure: a
+/// brutally overloaded prefill tier (3000-token prompts against a
+/// 600 ms TTFT, arriving every 10 ms) sheds most arrivals, and chaos
+/// hard-kills decode server 2 while accepted requests stream. The books
+/// must still balance exactly: every accepted request emits its full 50
+/// tokens across the replacement, every rejected request emits zero
+/// tokens and never bills, and the retry ledger reconciles against the
+/// rejection count — no token leaks in either direction.
+#[test]
+fn rejection_composes_with_instance_failure_and_conserves_tokens() {
+    // The fixture's retry cap, shared between the params and the
+    // backoff-ledger reconciliation below.
+    const RETRY_MAX: u32 = 2;
+    let cm = CostModel::h200_llama8b();
+    let profile = ProfileTable::from_cost_model(&cm);
+    let cfg = SimConfig {
+        mode: ServingMode::PdDisaggregated,
+        ..Default::default()
+    };
+    let workload = Workload {
+        requests: (0..24u64)
+            .map(|i| Request {
+                id: i,
+                arrival_ms: i * 10,
+                prefill_len: 3_000,
+                decode_len: 50,
+                slo: Slo::new(600, 100),
+                model: 0,
+            })
+            .collect(),
+    };
+    let cluster =
+        Cluster::build(ServingMode::PdDisaggregated, 3, 0.34, cfg.tiers.len(), &cm, true);
+    let params = SimParams {
+        mode: ServingMode::PdDisaggregated,
+        chaos: Some(ChaosParams {
+            fail_at: vec![(500, 2)],
+            ..Default::default()
+        }),
+        overload: Some(OverloadParams {
+            reject: true,
+            retry: true,
+            retry_base_ms: 100,
+            retry_max_attempts: RETRY_MAX,
+            seed: 0x0E71,
+        }),
+        ..Default::default()
+    };
+    let sim = Simulation::new(params, cm.clone(), &profile, &workload, cluster, &cfg.tiers);
+    let mut router = PolyServeRouter::new(&cfg, workload.avg_decode_len());
+    let res = sim.run_elastic(&mut router, None);
+
+    assert_eq!(res.unfinished, 0, "accepted requests must all finish");
+    assert_eq!(res.chaos.failures, 1, "the kill must land");
+    let ol = &res.overload;
+    assert!(ol.rejected_total > 0, "an overloaded prefill tier must shed");
+    let rejected = res.outcomes.iter().filter(|o| o.rejected).count() as u64;
+    assert_eq!(rejected, ol.rejected_total, "typed outcomes must match the ledger");
+    let mut served = 0u64;
+    for o in &res.outcomes {
+        if o.rejected {
+            assert_eq!(o.tokens, 0, "rejected request {} emitted tokens", o.id);
+            assert!(
+                o.finish_ms.is_none() && o.first_token_ms.is_none() && !o.attained,
+                "rejected request {} carries service marks",
+                o.id
+            );
+        } else {
+            assert_eq!(
+                o.tokens, 50,
+                "request {} emitted {} of 50 tokens across the failure",
+                o.id, o.tokens
+            );
+            served += 1;
+        }
+    }
+    // Zero leakage either way: the bill counts exactly the accepted
+    // tokens, the shed ledger exactly the rejected decode demand.
+    assert_eq!(res.cost.tokens_total, served * 50);
+    assert_eq!(ol.shed_tokens, ol.rejected_total * 50);
+    assert_eq!(ol.rejected_per_model, vec![ol.rejected_total]);
+    assert_eq!(
+        ol.rejected_per_tier.iter().map(|&(_, n)| n).sum::<u64>(),
+        ol.rejected_total
+    );
+    // Retry ledger: with retry on, every terminal shed burned exactly
+    // `retry_max_attempts` backoffs before giving up, and every late
+    // admit on retry `k+1` burned `k+1`.
+    assert_eq!(ol.retry_exhausted, ol.rejected_total, "retry-on sheds all exhaust");
+    let admitted_retries: u64 = ol
+        .retry_histogram
+        .iter()
+        .enumerate()
+        .map(|(k, &n)| (k as u64 + 1) * n)
+        .sum();
+    assert_eq!(
+        ol.retries,
+        admitted_retries + u64::from(RETRY_MAX) * ol.rejected_total,
+        "the backoff ledger must reconcile"
+    );
+}
+
+/// The `[models] mix` cap is lifted: a 3-model fleet splits instances
+/// by largest-remainder quota, prepares the cycled builtin registry,
+/// and serves every model to completion through a full elastic run.
+#[test]
+fn three_model_mix_splits_and_serves_every_model() {
+    let counts = polyserve::figures::split_mix(12, &[0.5, 0.3, 0.2]);
+    assert_eq!(counts.len(), 3);
+    assert_eq!(counts.iter().sum::<usize>(), 12);
+    assert!(counts.iter().all(|&c| c >= 2), "every model needs a PD pair: {counts:?}");
+    assert!(counts[0] >= counts[1] && counts[1] >= counts[2], "{counts:?}");
+
+    let mut cfg = SimConfig {
+        trace: TraceKind::ShareGpt,
+        policy: Policy::PolyServe,
+        mode: ServingMode::PdDisaggregated,
+        instances: 12,
+        requests: 300,
+        rate_frac_of_optimal: 0.3,
+        seed: 47,
+        ..Default::default()
+    };
+    cfg.models.mix = vec![0.5, 0.3, 0.2];
+    cfg.models.swap_delay_ms = 2_000;
+    cfg.elastic.scaler = ScalerKind::Gradient;
+    cfg.elastic.min_instances = 3;
+    cfg.elastic.max_instances = 14;
+    cfg.elastic.provision_delay_ms = 5_000;
+    cfg.elastic.scale_eval_ms = 1_000;
+    cfg.elastic.migration = true;
+    let exp = Experiment::prepare(&cfg);
+    assert_eq!(exp.models.len(), 3, "the registry must cycle to 3 models");
+    let res = exp.run();
+    assert_eq!(res.unfinished, 0);
+    let served = &res.cost.requests_served_per_model;
+    assert_eq!(served.len(), 3);
+    assert!(served.iter().all(|&n| n > 0), "one model served nothing: {served:?}");
 }

@@ -31,6 +31,15 @@
 //! per-request token conservation against the workload's ground-truth
 //! decode lengths.
 //!
+//! Three recovery cells put correlated rack/zone kills (a 2 × 2
+//! failure-domain stripe under a domain-kill MTBF process) against the
+//! recovery layer: bare, with the periodic KV-checkpoint sweep
+//! (suffix-only re-prefill), and with the chaos-adaptive predictive
+//! scaler on top (churn padding + the spot/on-demand policy flip).
+//! The smoke gate asserts checkpointing strictly reduces lost-KV
+//! tokens and the adaptive scaler holds attainment — the `recovery
+//! smoke OK` marker is grep-gated in CI.
+//!
 //! The overload grid sweeps arrival rate from 0.5× to 3× of the peak
 //! fleet's optimal goodput for {fifo, edf, edf+reject,
 //! edf+reject+retry} × all three scalers, emitting the rejection-rate ×
@@ -49,8 +58,8 @@
 //! zero SLO violations among accepted requests, EDF never worsens the
 //! FIFO TTFT tail, and edf+reject beats FIFO on accepted-request
 //! attainment) so a regression fails CI outright. The `model-mix smoke
-//! OK`, `chaos smoke OK` and `overload smoke OK` marker lines are
-//! grep-gated in CI.
+//! OK`, `chaos smoke OK`, `recovery smoke OK` and `overload smoke OK`
+//! marker lines are grep-gated in CI.
 
 use polyserve::analysis::ServingMode;
 use polyserve::config::{DiurnalSpec, Policy, ScalerKind, SimConfig};
@@ -422,6 +431,91 @@ fn run_chaos_cell(
     }
 }
 
+/// One recovery cell: correlated rack/zone kills against the PR 10
+/// recovery layer, with the KV-checkpoint sweep and the chaos-adaptive
+/// predictive scaler toggled independently.
+struct RecoveryCellResult {
+    attain: f64,
+    bill_s: f64,
+    failures: u64,
+    domain_kills: u64,
+    checkpoints: u64,
+    checkpoint_tokens: u64,
+    checkpoint_cost_ms: u64,
+    recovered_kv_tokens: u64,
+    reprefill_tokens: u64,
+    lost_kv_tokens: u64,
+    replaced_requests: u64,
+    unfinished: usize,
+    token_violations: usize,
+}
+
+/// Correlated-kill recovery cell: a 2-zone × 2-rack fleet stripe under
+/// an aggressive domain-kill MTBF process (one draw fails a whole rack
+/// — or occasionally a zone — at once), served by the predictive
+/// scaler with migration on so replacements land and victims re-place
+/// away from the blast radius. `checkpoint` turns the periodic KV
+/// snapshot sweep on (suffix-only re-prefill after a kill), `adaptive`
+/// lets the scaler consume `ChaosStats` online (churn padding + the
+/// spot/on-demand policy flip). All three cells share one workload
+/// seed, so their ledgers compare like-for-like.
+fn run_recovery_cell(
+    checkpoint: bool,
+    adaptive: bool,
+    n_peak: usize,
+    requests: usize,
+) -> RecoveryCellResult {
+    let mut cfg = SimConfig {
+        trace: TraceKind::ShareGpt,
+        mode: ServingMode::Colocated,
+        policy: Policy::PolyServe,
+        instances: n_peak,
+        requests,
+        rate_frac_of_optimal: 0.6,
+        diurnal: Some(DiurnalSpec { peak_to_trough: 3.0, period_s: 600.0 }),
+        ..Default::default()
+    };
+    cfg.elastic.scaler = ScalerKind::Predictive;
+    cfg.elastic.provision_delay_ms = 3_000;
+    cfg.elastic.scale_eval_ms = 1_000;
+    cfg.elastic.migration = true;
+    cfg.elastic.min_instances = (n_peak / 4).max(2);
+    cfg.elastic.max_instances = n_peak * 2;
+    cfg.chaos.zones = 2;
+    cfg.chaos.racks_per_zone = 2;
+    cfg.chaos.domain_fail_mtbf_s = 8.0;
+    cfg.chaos.checkpoint_period_ms = if checkpoint { 500 } else { 0 };
+    cfg.chaos.adaptive = adaptive;
+    // Half the elastic replacements land on spot so the adaptive cell
+    // exercises the churn-vs-discount policy flip too.
+    cfg.chaos.spot_fraction = 0.5;
+    cfg.chaos.spot_price_frac = 0.4;
+    let exp = Experiment::prepare(&cfg);
+    let decode_len: HashMap<u64, u32> =
+        exp.workload.requests.iter().map(|r| (r.id, r.decode_len)).collect();
+    let res = exp.run();
+    let token_violations = res
+        .outcomes
+        .iter()
+        .filter(|o| o.tokens != decode_len[&o.id] as u64)
+        .count();
+    RecoveryCellResult {
+        attain: res.attainment.overall(),
+        bill_s: res.cost.discounted_bill_ms(cfg.chaos.spot_price_frac) / 1000.0,
+        failures: res.chaos.failures,
+        domain_kills: res.chaos.domain_kills,
+        checkpoints: res.chaos.checkpoints,
+        checkpoint_tokens: res.chaos.checkpoint_tokens,
+        checkpoint_cost_ms: res.chaos.checkpoint_cost_ms,
+        recovered_kv_tokens: res.chaos.recovered_kv_tokens,
+        reprefill_tokens: res.chaos.reprefill_tokens,
+        lost_kv_tokens: res.chaos.lost_kv_tokens,
+        replaced_requests: res.chaos.replaced_requests,
+        unfinished: res.unfinished,
+        token_violations,
+    }
+}
+
 /// The queue-discipline × admission-control axis of the overload grid.
 #[derive(Clone, Copy, PartialEq)]
 enum OverloadPolicy {
@@ -772,6 +866,59 @@ fn main() {
         &chaos_rows,
     );
 
+    // Recovery cells: correlated rack/zone kills × {bare, +checkpoint,
+    // +checkpoint+adaptive} — the PR 10 failure-domain / KV-snapshot /
+    // chaos-adaptive-provisioning ledger on one shared workload.
+    let recovery_cells: Vec<(&str, bool, bool)> = vec![
+        ("rack_kill", false, false),
+        ("rack_kill+ckpt", true, false),
+        ("rack_kill+ckpt+adaptive", true, true),
+    ];
+    let recovery_results = par_map(recovery_cells, threads, move |_, (name, ckpt, adaptive)| {
+        (name, run_recovery_cell(ckpt, adaptive, n_peak, requests))
+    });
+    let recovery_rows: Vec<Vec<String>> = recovery_results
+        .iter()
+        .map(|(name, r)| {
+            vec![
+                name.to_string(),
+                f(r.attain, 3),
+                f(r.bill_s, 1),
+                r.domain_kills.to_string(),
+                r.failures.to_string(),
+                r.replaced_requests.to_string(),
+                r.checkpoints.to_string(),
+                r.checkpoint_tokens.to_string(),
+                r.checkpoint_cost_ms.to_string(),
+                r.recovered_kv_tokens.to_string(),
+                r.reprefill_tokens.to_string(),
+                r.lost_kv_tokens.to_string(),
+                r.token_violations.to_string(),
+                r.unfinished.to_string(),
+            ]
+        })
+        .collect();
+    bench.table(
+        "Recovery: correlated rack/zone kills x KV checkpointing x chaos-adaptive provisioning",
+        &[
+            "cell",
+            "attain",
+            "bill_s",
+            "domain_kills",
+            "failures",
+            "replaced",
+            "checkpoints",
+            "ckpt_tok",
+            "ckpt_cost_ms",
+            "recovered_kv_tok",
+            "reprefill_tok",
+            "lost_kv_tok",
+            "token_violations",
+            "unfinished",
+        ],
+        &recovery_rows,
+    );
+
     // Overload grid: arrival rate from half to 3× the peak fleet's
     // optimal goodput × queue/admission policy × scaler — the
     // rejection-rate × tail-attainment × goodput curves.
@@ -951,6 +1098,58 @@ fn main() {
         let failures: u64 = chaos_results.iter().map(|(_, _, r)| r.failures).sum();
         println!(
             "chaos smoke OK: {failures} failures, {kills} deadline kills, 0 token violations"
+        );
+        // Recovery gates: every cell conserves tokens exactly under
+        // correlated kills; the checkpoint cell actually snapshots,
+        // bills the transfer, restores KV on failure and loses strictly
+        // fewer KV tokens than the bare cell; the chaos-adaptive cell
+        // holds attainment (small slack for placement reordering noise
+        // — padding can only add capacity).
+        let rec = |name: &str| {
+            recovery_results
+                .iter()
+                .find(|(n, _)| *n == name)
+                .map(|(_, r)| r)
+                .expect("recovery cell missing")
+        };
+        for (name, r) in &recovery_results {
+            assert_eq!(r.unfinished, 0, "{name}: recovery cell left requests unfinished");
+            assert_eq!(r.token_violations, 0, "{name}: token conservation violated");
+            assert!(r.domain_kills >= 1, "{name}: no correlated kill ever fired");
+            assert!(r.failures >= r.domain_kills, "{name}: a domain kill fails >= 1 instance");
+        }
+        let bare = rec("rack_kill");
+        let ckpt = rec("rack_kill+ckpt");
+        let adaptive = rec("rack_kill+ckpt+adaptive");
+        assert_eq!(bare.checkpoints, 0, "checkpointing off must never snapshot");
+        assert!(ckpt.checkpoints >= 1, "the checkpoint sweep never fired");
+        assert!(ckpt.checkpoint_cost_ms >= 1, "snapshot transfer must be billed");
+        assert!(
+            ckpt.recovered_kv_tokens >= 1,
+            "kills under a live sweep must restore some KV"
+        );
+        assert!(
+            ckpt.lost_kv_tokens < bare.lost_kv_tokens,
+            "checkpointing must strictly reduce lost KV: {} vs bare {}",
+            ckpt.lost_kv_tokens,
+            bare.lost_kv_tokens,
+        );
+        assert!(
+            adaptive.attain >= ckpt.attain - 0.01,
+            "chaos-adaptive provisioning worsened attainment under correlated kills: \
+             {:.3} vs {:.3}",
+            adaptive.attain,
+            ckpt.attain,
+        );
+        println!(
+            "recovery smoke OK: {} domain kills, {} KV tokens restored (lost {} -> {}), \
+             adaptive attain {:.3} vs {:.3}",
+            bare.domain_kills + ckpt.domain_kills + adaptive.domain_kills,
+            ckpt.recovered_kv_tokens,
+            bare.lost_kv_tokens,
+            ckpt.lost_kv_tokens,
+            adaptive.attain,
+            ckpt.attain,
         );
         // Overload gates at 2× saturation, per scaler: the reject cells
         // actually shed, accepted requests never miss their SLO in

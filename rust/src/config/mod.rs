@@ -230,6 +230,37 @@ pub struct ChaosConfig {
     /// Spot price as a fraction of the on-demand rate (discounted-bill
     /// reporting only; the attainment math never sees it).
     pub spot_price_frac: f64,
+    /// Failure-domain zones the fleet is striped across. 0 = no domain
+    /// model (every instance in zone 0, rack 0; correlated kills
+    /// unavailable).
+    pub zones: u32,
+    /// Racks per zone (the inner stripe). Only meaningful with
+    /// `zones > 0`; must be >= 1 then.
+    pub racks_per_zone: u32,
+    /// Mean time between correlated domain kills, seconds: each draw
+    /// picks a zone (and usually a rack inside it) and hard-kills every
+    /// live instance in that blast radius at once. 0 = off; requires
+    /// `zones > 0`.
+    pub domain_fail_mtbf_s: f64,
+    /// KV checkpoint period, ms: snapshot every resident request's
+    /// committed prefill watermark so an `InstanceFail` rewinds to the
+    /// last checkpoint instead of zero (suffix-only re-prefill).
+    /// Snapshots bill a transfer cost per delta token. 0 = off.
+    pub checkpoint_period_ms: u64,
+    /// Stepwise spot price curve: flattened `(t_s, price_frac)` pairs,
+    /// times strictly increasing. Before the first step the flat
+    /// `spot_price_frac` applies; empty = flat pricing only
+    /// (bit-for-bit the single-step default).
+    pub spot_price_schedule: Vec<f64>,
+    /// Stepwise spot availability curve: flattened `(t_s, multiplier)`
+    /// pairs scaling the preempt-MTBF gap (multiplier < 1 = scarcer
+    /// spot capacity, preemptions come faster). Empty = off.
+    pub spot_avail_schedule: Vec<f64>,
+    /// Chaos-adaptive provisioning: the predictive scaler reads
+    /// `ChaosStats` online, pads the plan by the observed kill rate and
+    /// forces the spot split on-demand when realized churn makes the
+    /// discounted bill worse than on-demand.
+    pub adaptive: bool,
     /// Seed of the chaos RNG stream (independent of the workload seed).
     pub seed: u64,
 }
@@ -242,6 +273,13 @@ impl Default for ChaosConfig {
             preempt_grace_ms: 30_000,
             spot_fraction: 0.0,
             spot_price_frac: 0.3,
+            zones: 0,
+            racks_per_zone: 1,
+            domain_fail_mtbf_s: 0.0,
+            checkpoint_period_ms: 0,
+            spot_price_schedule: Vec::new(),
+            spot_avail_schedule: Vec::new(),
+            adaptive: false,
             seed: 0xC1A05,
         }
     }
@@ -249,9 +287,15 @@ impl Default for ChaosConfig {
 
 impl ChaosConfig {
     /// Does this config inject anything? `false` keeps the simulator's
-    /// chaos machinery entirely unconstructed (the seed path).
+    /// chaos machinery entirely unconstructed (the seed path). Domain
+    /// striping (`zones`) alone does not enable chaos — it only labels
+    /// instances; something must inject or checkpoint.
     pub fn enabled(&self) -> bool {
-        self.fail_mtbf_s > 0.0 || self.preempt_mtbf_s > 0.0 || self.spot_fraction > 0.0
+        self.fail_mtbf_s > 0.0
+            || self.preempt_mtbf_s > 0.0
+            || self.spot_fraction > 0.0
+            || self.domain_fail_mtbf_s > 0.0
+            || self.checkpoint_period_ms > 0
     }
 }
 
@@ -281,6 +325,12 @@ pub struct OverloadConfig {
     pub retry_base_ms: u64,
     /// Give up (final `Rejected` outcome) after this many retries.
     pub retry_max_attempts: u32,
+    /// Client-side deadline propagation (`propagate_deadline =
+    /// "off"|"on"`): a retry re-arrives with the *remaining*
+    /// end-to-end budget — its SLO clock stays anchored at the original
+    /// arrival instead of resetting at the retry. Default off
+    /// (digest-pinned to the PR 9 reset-clock behavior).
+    pub propagate_deadline: bool,
     /// Seed of the retry-jitter RNG stream (independent of the
     /// workload and chaos seeds).
     pub seed: u64,
@@ -298,6 +348,7 @@ impl Default for OverloadConfig {
             retry: false,
             retry_base_ms: 500,
             retry_max_attempts: 3,
+            propagate_deadline: false,
             seed: 0x0E71,
             fifo_reference: false,
         }
@@ -576,12 +627,37 @@ impl SimConfig {
             doc.usize_or("chaos.preempt_grace_ms", ch.preempt_grace_ms as usize) as u64;
         ch.spot_fraction = doc.f64_or("chaos.spot_fraction", ch.spot_fraction);
         ch.spot_price_frac = doc.f64_or("chaos.spot_price_frac", ch.spot_price_frac);
+        ch.zones = doc.usize_or("chaos.zones", ch.zones as usize) as u32;
+        ch.racks_per_zone = doc.usize_or("chaos.racks_per_zone", ch.racks_per_zone as usize) as u32;
+        ch.domain_fail_mtbf_s = doc.f64_or("chaos.domain_fail_mtbf_s", ch.domain_fail_mtbf_s);
+        ch.checkpoint_period_ms =
+            doc.usize_or("chaos.checkpoint_period_ms", ch.checkpoint_period_ms as usize) as u64;
+        if let Some(v) = doc.get("chaos.spot_price_schedule") {
+            ch.spot_price_schedule = v.to_f64s().ok_or_else(|| {
+                anyhow::anyhow!("chaos.spot_price_schedule must be an array of (t_s, frac) pairs")
+            })?;
+        }
+        if let Some(v) = doc.get("chaos.spot_avail_schedule") {
+            ch.spot_avail_schedule = v.to_f64s().ok_or_else(|| {
+                anyhow::anyhow!("chaos.spot_avail_schedule must be an array of (t_s, mult) pairs")
+            })?;
+        }
+        if let Some(v) = doc.get("chaos.adaptive") {
+            ch.adaptive = match (v.as_str(), v.as_bool()) {
+                (Some("on"), _) => true,
+                (Some("off"), _) => false,
+                (None, Some(b)) => b,
+                (Some(other), _) => anyhow::bail!("unknown chaos.adaptive '{other}' (off|on)"),
+                _ => anyhow::bail!("chaos.adaptive must be \"off\"|\"on\""),
+            };
+        }
         ch.seed = doc.f64_or("chaos.seed", ch.seed as f64) as u64;
         let ol = &mut cfg.overload;
         for (key, field) in [
             ("overload.enabled", 0usize),
             ("overload.reject", 1),
             ("overload.retry", 2),
+            ("overload.propagate_deadline", 3),
         ] {
             if let Some(v) = doc.get(key) {
                 let on = match (v.as_str(), v.as_bool()) {
@@ -594,7 +670,8 @@ impl SimConfig {
                 match field {
                     0 => ol.enabled = on,
                     1 => ol.reject = on,
-                    _ => ol.retry = on,
+                    2 => ol.retry = on,
+                    _ => ol.propagate_deadline = on,
                 }
             }
         }
@@ -716,6 +793,65 @@ impl SimConfig {
                 "chaos.preempt_grace_ms must be >= 1 when preemptions are on"
             );
         }
+        anyhow::ensure!(
+            ch.domain_fail_mtbf_s.is_finite() && ch.domain_fail_mtbf_s >= 0.0,
+            "chaos.domain_fail_mtbf_s must be >= 0"
+        );
+        if ch.domain_fail_mtbf_s > 0.0 {
+            anyhow::ensure!(
+                ch.zones > 0,
+                "chaos.domain_fail_mtbf_s needs chaos.zones > 0 (domain kills need a domain \
+                 model)"
+            );
+        }
+        if ch.zones > 0 {
+            anyhow::ensure!(
+                ch.racks_per_zone >= 1,
+                "chaos.racks_per_zone must be >= 1 when chaos.zones > 0"
+            );
+        }
+        if ch.adaptive {
+            anyhow::ensure!(
+                ch.enabled(),
+                "chaos.adaptive needs some chaos injection enabled (nothing to adapt to)"
+            );
+        }
+        for (name, sched, lo_ok) in [
+            ("spot_price_schedule", &ch.spot_price_schedule, false),
+            ("spot_avail_schedule", &ch.spot_avail_schedule, true),
+        ] {
+            if sched.is_empty() {
+                continue;
+            }
+            anyhow::ensure!(
+                ch.spot_fraction > 0.0,
+                "chaos.{name} needs chaos.spot_fraction > 0 (no spot instances to price)"
+            );
+            anyhow::ensure!(
+                sched.len() % 2 == 0,
+                "chaos.{name} must be flattened (t_s, value) pairs (even length)"
+            );
+            let mut prev_t = f64::NEG_INFINITY;
+            for pair in sched.chunks(2) {
+                let (t, v) = (pair[0], pair[1]);
+                anyhow::ensure!(
+                    t.is_finite() && t >= 0.0 && t > prev_t,
+                    "chaos.{name} times must be >= 0 and strictly increasing"
+                );
+                prev_t = t;
+                if lo_ok {
+                    anyhow::ensure!(
+                        v.is_finite() && v > 0.0,
+                        "chaos.{name} multipliers must be > 0"
+                    );
+                } else {
+                    anyhow::ensure!(
+                        (0.0..=1.0).contains(&v),
+                        "chaos.{name} prices must be in [0,1]"
+                    );
+                }
+            }
+        }
         let ol = &self.overload;
         if ol.retry {
             anyhow::ensure!(
@@ -736,6 +872,12 @@ impl SimConfig {
             anyhow::ensure!(
                 ol.enabled,
                 "overload.reject needs overload.enabled = \"on\""
+            );
+        }
+        if ol.propagate_deadline {
+            anyhow::ensure!(
+                ol.retry,
+                "overload.propagate_deadline needs overload.retry (only retries re-arrive)"
             );
         }
         Ok(())
@@ -947,6 +1089,21 @@ swap_delay_ms = 5000
             "[overload]\nenabled = \"on\"\nreject = \"on\"\nretry = \"on\"\nretry_base_ms = 0",
             "[overload]\nenabled = \"on\"\nreject = \"on\"\nretry = \"on\"\nretry_max_attempts = 0",
             "[overload]\nenabled = \"nope\"",
+            // Domain kills without a domain model (or a zoned fleet
+            // with no racks) would be silent no-ops — reject loudly.
+            "[chaos]\ndomain_fail_mtbf_s = 60.0",
+            "[chaos]\nzones = 3\nracks_per_zone = 0",
+            "[chaos]\ndomain_fail_mtbf_s = -1.0",
+            // Adaptive provisioning with nothing injected has nothing
+            // to adapt to; schedules need spot capacity and sane shape.
+            "[chaos]\nadaptive = \"on\"",
+            "[chaos]\nspot_price_schedule = [0.0, 0.5]",
+            "[chaos]\nspot_fraction = 0.5\nspot_price_schedule = [0.0, 0.5, 10.0]",
+            "[chaos]\nspot_fraction = 0.5\nspot_price_schedule = [10.0, 0.5, 10.0, 0.6]",
+            "[chaos]\nspot_fraction = 0.5\nspot_price_schedule = [0.0, 1.5]",
+            "[chaos]\nspot_fraction = 0.5\nspot_avail_schedule = [0.0, 0.0]",
+            // Deadline propagation without retries never fires.
+            "[overload]\nenabled = \"on\"\npropagate_deadline = \"on\"",
         ] {
             let doc = tomlish::parse(bad).unwrap();
             assert!(SimConfig::from_doc(&doc).is_err(), "should reject: {bad}");
@@ -963,6 +1120,13 @@ preempt_mtbf_s = 90.0
 preempt_grace_ms = 5000
 spot_fraction = 0.5
 spot_price_frac = 0.25
+zones = 3
+racks_per_zone = 4
+domain_fail_mtbf_s = 45.0
+checkpoint_period_ms = 2000
+spot_price_schedule = [0.0, 0.25, 60.0, 0.8]
+spot_avail_schedule = [0.0, 1.0, 30.0, 0.5]
+adaptive = "on"
 seed = 7
 "#,
         )
@@ -973,12 +1137,31 @@ seed = 7
         assert_eq!(c.chaos.preempt_grace_ms, 5_000);
         assert_eq!(c.chaos.spot_fraction, 0.5);
         assert_eq!(c.chaos.spot_price_frac, 0.25);
+        assert_eq!(c.chaos.zones, 3);
+        assert_eq!(c.chaos.racks_per_zone, 4);
+        assert_eq!(c.chaos.domain_fail_mtbf_s, 45.0);
+        assert_eq!(c.chaos.checkpoint_period_ms, 2_000);
+        assert_eq!(c.chaos.spot_price_schedule, vec![0.0, 0.25, 60.0, 0.8]);
+        assert_eq!(c.chaos.spot_avail_schedule, vec![0.0, 1.0, 30.0, 0.5]);
+        assert!(c.chaos.adaptive);
         assert_eq!(c.chaos.seed, 7);
         assert!(c.chaos.enabled());
         // Default: fully off — the chaos-free seed path.
         let d = SimConfig::default();
         assert!(!d.chaos.enabled());
         d.validate().unwrap();
+        // Zone striping alone only labels instances — nothing injects,
+        // so the chaos machinery must stay unconstructed.
+        let mut z = SimConfig::default();
+        z.chaos.zones = 4;
+        assert!(!z.chaos.enabled());
+        z.validate().unwrap();
+        // Checkpointing alone does enable (snapshots cost something
+        // even if nothing ever fails).
+        let mut k = SimConfig::default();
+        k.chaos.checkpoint_period_ms = 1_000;
+        assert!(k.chaos.enabled());
+        k.validate().unwrap();
     }
 
     #[test]
@@ -991,6 +1174,7 @@ reject = "on"
 retry = "on"
 retry_base_ms = 250
 retry_max_attempts = 5
+propagate_deadline = "on"
 seed = 11
 "#,
         )
@@ -1002,6 +1186,7 @@ seed = 11
         assert!(c.overload.retry);
         assert_eq!(c.overload.retry_base_ms, 250);
         assert_eq!(c.overload.retry_max_attempts, 5);
+        assert!(c.overload.propagate_deadline);
         assert_eq!(c.overload.seed, 11);
         // Default: fully off — the overload-free seed path.
         let d = SimConfig::default();

@@ -46,7 +46,7 @@ use super::sizing;
 use super::RouteCtx;
 use crate::analysis::ServingMode;
 use crate::config::{ScalerKind, SimConfig};
-use crate::metrics::RateSample;
+use crate::metrics::{ChaosStats, RateSample};
 use crate::model::ModelId;
 use crate::profile::ProfileTable;
 use crate::sim::{Lifecycle, Role};
@@ -98,6 +98,17 @@ pub enum ScaleAction {
         inst: usize,
         /// Registry id of the model to load after the drain.
         model: ModelId,
+    },
+    /// Switch the chaos layer's spot/on-demand provisioning split.
+    /// With `on_demand`, the `[chaos] spot_fraction` stride is *held*
+    /// (every new instance provisions on-demand; the stride counter
+    /// keeps advancing so lifting the hold resumes the original
+    /// sequence). Emitted only by the chaos-adaptive predictive scaler
+    /// when churn makes the discounted spot bill worse than on-demand;
+    /// a no-op on runs without a chaos layer.
+    SpotPolicy {
+        /// `true` holds the spot stride; `false` restores it.
+        on_demand: bool,
     },
 }
 
@@ -164,6 +175,24 @@ pub trait Autoscaler {
     /// attaches it to `SimResult::fleet`.
     fn take_rate_series(&mut self) -> Vec<RateSample> {
         Vec::new()
+    }
+
+    /// Chaos telemetry feed: the simulator calls this immediately
+    /// before [`Autoscaler::evaluate`] on every `ScaleEval` epoch of a
+    /// chaos-enabled run, handing the cumulative [`ChaosStats`], the
+    /// live spot-instance count, and the spot price currently in
+    /// effect (the `[chaos] spot_price_schedule` step at `now`, or the
+    /// flat `spot_price_frac`). Policies may fold it into their sizing
+    /// (churn padding) or spot/on-demand split. The default ignores it
+    /// — every scaler without an opt-in stays bit-identical.
+    fn observe_chaos(
+        &mut self,
+        now: TimeMs,
+        stats: &ChaosStats,
+        spot_active: usize,
+        spot_price: f64,
+    ) {
+        let _ = (now, stats, spot_active, spot_price);
     }
 }
 
@@ -973,6 +1002,23 @@ const MAX_DRAIN_STEP: usize = 2;
 /// Bins a seasonal period is divided into for the per-bin rate EWMAs
 /// of [`PredictiveAutoscaler::with_seasonal`].
 const SEASON_BINS: usize = 16;
+/// Smoothing factor for the chaos-adaptive kill-rate EWMA (per
+/// `ScaleEval` epoch with fresh [`ChaosStats`]).
+const KILL_EWMA_ALPHA: f64 = 0.35;
+/// Billable work a spot preemption wastes, ms-equivalents: the cold
+/// start of the replacement plus the victims' re-prefill. The
+/// chaos-adaptive scaler prices churn as
+/// `per-spot-instance kill rate (per ms) × CHURN_RECOVERY_MS` and adds
+/// it to the spot price before comparing against on-demand.
+const CHURN_RECOVERY_MS: f64 = 60_000.0;
+/// Effective spot price (discounted rate + churn tax) above which the
+/// chaos-adaptive scaler holds the spot stride and provisions
+/// on-demand only.
+const SPOT_POLICY_HI: f64 = 1.0;
+/// Effective spot price below which a held stride is restored —
+/// strictly under [`SPOT_POLICY_HI`] so the policy can't flap on a
+/// boundary-hugging price curve.
+const SPOT_POLICY_LO: f64 = 0.8;
 
 /// Profile-driven predictive fleet scaler: provisions for the arrival
 /// rate projected `provision_lead_ms` ahead instead of reacting to
@@ -1035,6 +1081,21 @@ pub struct PredictiveAutoscaler {
     /// Pad the required fleet by a fraction of the active spot capacity
     /// (preemptible instances can vanish on a deadline).
     spot_aware: bool,
+    /// `[chaos] adaptive`: consume [`ChaosStats`] online — pad the plan
+    /// by expected imminent kills and steer the spot/on-demand split.
+    chaos_adaptive: bool,
+    /// Fleet-wide instance-kill EWMA, kills per ms (failures +
+    /// deadline-expired preemptions, from the cumulative counters).
+    kill_rate_per_ms: f64,
+    /// Cumulative kill count at the last `observe_chaos`.
+    last_kills: u64,
+    /// Epoch time of the last `observe_chaos` (rate-window anchor).
+    last_chaos_ms: Option<TimeMs>,
+    /// Current spot-policy decision (`true` = hold the stride).
+    spot_on_demand: bool,
+    /// A [`ScaleAction::SpotPolicy`] flip awaiting emission by the next
+    /// `evaluate`.
+    spot_policy_dirty: bool,
 }
 
 impl PredictiveAutoscaler {
@@ -1065,6 +1126,12 @@ impl PredictiveAutoscaler {
             season_rates: vec![0.0; SEASON_BINS],
             season_seeded: vec![false; SEASON_BINS],
             spot_aware: false,
+            chaos_adaptive: false,
+            kill_rate_per_ms: 0.0,
+            last_kills: 0,
+            last_chaos_ms: None,
+            spot_on_demand: false,
+            spot_policy_dirty: false,
         }
     }
 
@@ -1103,6 +1170,18 @@ impl PredictiveAutoscaler {
     /// default (bit-identical sizing).
     pub fn spot_aware(mut self, enabled: bool) -> Self {
         self.spot_aware = enabled;
+        self
+    }
+
+    /// Enable chaos-adaptive provisioning (`[chaos] adaptive`): track a
+    /// kill-rate EWMA from the [`ChaosStats`] feed, pad the required
+    /// fleet by the kills expected inside the anticipation lead
+    /// ([`sizing::churn_pad`]), and hold the spot stride
+    /// ([`ScaleAction::SpotPolicy`]) while churn prices spot capacity
+    /// above on-demand. Off by default — without the opt-in the
+    /// telemetry feed is ignored and every decision stays bit-identical.
+    pub fn chaos_adaptive(mut self, enabled: bool) -> Self {
+        self.chaos_adaptive = enabled;
         self
     }
 
@@ -1265,6 +1344,13 @@ impl PredictiveAutoscaler {
                 .count();
             required += spot_active.div_ceil(4);
         }
+        if self.chaos_adaptive {
+            // Churn pad: capacity the observed kill rate is expected to
+            // claim inside the anticipation lead must already be
+            // cold-starting now, or every correlated kill re-opens the
+            // provisioning-delay gap the lead exists to close.
+            required += sizing::churn_pad(self.kill_rate_per_ms, self.lead_ms);
+        }
         // Reactive backstop: visible unplaced demand means the model
         // under-sized (length misprediction, burst inside the window) —
         // grow past the plan rather than strand requests. The demand
@@ -1351,7 +1437,7 @@ impl PredictiveAutoscaler {
 
 impl Autoscaler for PredictiveAutoscaler {
     fn evaluate(&mut self, now: TimeMs, ctx: &mut RouteCtx) -> Vec<ScaleAction> {
-        if let Some(p) = self.planner.as_mut() {
+        let mut actions = if let Some(p) = self.planner.as_mut() {
             let mut actions = p.evaluate(now, ctx);
             if self.prefill_elastic && ctx.mode == ServingMode::PdDisaggregated {
                 actions.extend(prefill_pressure_actions(
@@ -1360,9 +1446,17 @@ impl Autoscaler for PredictiveAutoscaler {
                     self.patience,
                 ));
             }
-            return actions;
+            actions
+        } else {
+            self.scale_single(now, ctx)
+        };
+        if self.spot_policy_dirty {
+            self.spot_policy_dirty = false;
+            actions.push(ScaleAction::SpotPolicy {
+                on_demand: self.spot_on_demand,
+            });
         }
-        self.scale_single(now, ctx)
+        actions
     }
 
     fn name(&self) -> String {
@@ -1371,6 +1465,48 @@ impl Autoscaler for PredictiveAutoscaler {
 
     fn take_rate_series(&mut self) -> Vec<RateSample> {
         std::mem::take(&mut self.rates)
+    }
+
+    fn observe_chaos(
+        &mut self,
+        now: TimeMs,
+        stats: &ChaosStats,
+        spot_active: usize,
+        spot_price: f64,
+    ) {
+        if !self.chaos_adaptive {
+            return;
+        }
+        // Kill-rate EWMA off the cumulative hard-kill counter (explicit
+        // schedules, MTBF draws, domain kills and blown preemption
+        // deadlines all land in `failures`).
+        let kills = stats.failures;
+        if let Some(prev) = self.last_chaos_ms.replace(now) {
+            if now > prev {
+                let rate =
+                    kills.saturating_sub(self.last_kills) as f64 / (now - prev) as f64;
+                self.kill_rate_per_ms = KILL_EWMA_ALPHA * rate
+                    + (1.0 - KILL_EWMA_ALPHA) * self.kill_rate_per_ms;
+            }
+        }
+        self.last_kills = kills;
+        // Spot/on-demand split: price churn as the per-spot-instance
+        // kill rate times the wasted-work cost; when the discounted
+        // rate plus that tax beats on-demand (1.0) the stride is held,
+        // and restored only once the effective price falls back under
+        // the hysteresis floor.
+        let churn_tax =
+            self.kill_rate_per_ms / spot_active.max(1) as f64 * CHURN_RECOVERY_MS;
+        let effective = spot_price + churn_tax;
+        let want = if self.spot_on_demand {
+            effective >= SPOT_POLICY_LO
+        } else {
+            effective > SPOT_POLICY_HI
+        };
+        if want != self.spot_on_demand {
+            self.spot_on_demand = want;
+            self.spot_policy_dirty = true;
+        }
     }
 }
 
@@ -1421,6 +1557,7 @@ pub fn make_autoscaler_with_models(
                     // `[chaos]` actually provisions spot capacity.
                     .with_seasonal(cfg.diurnal.map(|d| (d.period_s * 1000.0) as u64))
                     .spot_aware(cfg.chaos.spot_fraction > 0.0)
+                    .chaos_adaptive(cfg.chaos.adaptive)
                     .with_planner(planner),
             ))
         }
@@ -1659,6 +1796,7 @@ mod tests {
                         cluster.begin_drain(inst, now);
                         cluster.retire_if_drained(inst, now);
                     }
+                    _ => {}
                 }
             }
         }
@@ -1695,6 +1833,7 @@ mod tests {
                         cluster.begin_drain(inst, now);
                         cluster.retire_if_drained(inst, now);
                     }
+                    _ => {}
                 }
             }
         }

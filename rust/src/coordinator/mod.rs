@@ -113,6 +113,17 @@ pub trait Router {
     fn queue_aging(&self) -> Option<(u64, u64)> {
         None
     }
+
+    /// Failure-domain steering (the `[chaos]` zones layer): while set,
+    /// placements should *prefer* instances outside `zone` — two-pass,
+    /// never a hard filter; if only the avoided zone has capacity it is
+    /// still used. The simulator brackets a failed instance's victim
+    /// re-placements with the victim's zone and resets to `None`
+    /// after. The default ignores the hint — baselines (and every run
+    /// without a domain model) are untouched.
+    fn set_avoid_zone(&mut self, zone: Option<u32>) {
+        let _ = zone;
+    }
 }
 
 /// Build the router described by a [`SimConfig`].

@@ -79,6 +79,12 @@ pub struct PolyServeRouter {
     mode: ServingMode,
     /// PD prefill static budget (dynamic chunking modulates it).
     prefill_budget: u64,
+    /// Failure-domain steering hint ([`Router::set_avoid_zone`]): while
+    /// set, placements prefer instances outside this zone (two-pass
+    /// with the full fleet as fallback — never a hard filter). `None`
+    /// on every run without a `[chaos]` domain model, leaving the
+    /// placement walks bit-for-bit untouched.
+    avoid_zone: Option<u32>,
     /// Diagnostics (logged at drop in debug level).
     pub stats: RouterStats,
 }
@@ -152,6 +158,7 @@ impl PolyServeRouter {
             order,
             mode: cfg.mode,
             prefill_budget: DEFAULT_PREFILL_BUDGET,
+            avoid_zone: None,
             stats: RouterStats::default(),
         }
     }
@@ -272,6 +279,31 @@ impl PolyServeRouter {
     /// O(1) load reads underneath), scan mode does the same over the
     /// full-scan membership views with rescanning load accessors.
     fn pick_by_gradient(
+        &self,
+        ctx: &RouteCtx,
+        model: ModelId,
+        tier: usize,
+        admit: impl Fn(&RouteCtx, usize) -> bool,
+    ) -> Option<usize> {
+        // Failure-domain steering: with an avoid-zone hint active (only
+        // ever during victim re-placement after a kill, with `[chaos]
+        // zones` set), prefer a target outside the blast radius — the
+        // unmodified full walk is the fallback, so a fleet with
+        // capacity only inside the avoided zone still places.
+        if let Some(z) = self.avoid_zone {
+            let found = self.pick_in_tier(ctx, model, tier, |c, id| {
+                c.cluster.instances[id].domain.0 != z && admit(c, id)
+            });
+            if found.is_some() {
+                return found;
+            }
+        }
+        self.pick_in_tier(ctx, model, tier, admit)
+    }
+
+    /// The unhinted §4.3 walk behind [`Self::pick_by_gradient`] (which
+    /// layers the avoid-zone pass on top).
+    fn pick_in_tier(
         &self,
         ctx: &RouteCtx,
         model: ModelId,
@@ -769,6 +801,27 @@ impl PolyServeRouter {
     /// meets every TTFT (§4.2 + §4.3 + §4.7 "reroutes to other machines
     /// if PolyServe predicts a TTFT violation").
     fn place_prefill_pd(&self, now: TimeMs, req_idx: usize, ctx: &mut RouteCtx) -> usize {
+        // Failure-domain steering, same two-pass shape as
+        // [`Self::pick_by_gradient`]: prefer prefill servers outside
+        // the avoided zone, full cluster as fallback.
+        if let Some(z) = self.avoid_zone {
+            if let Some(id) = self.place_prefill_pd_pass(now, req_idx, Some(z), ctx) {
+                return id;
+            }
+        }
+        self.place_prefill_pd_pass(now, req_idx, None, ctx)
+            .expect("PD cluster without prefill servers")
+    }
+
+    /// One scoring pass of [`Self::place_prefill_pd`], optionally
+    /// skipping a failure zone (`None` = the unhinted full walk).
+    fn place_prefill_pd_pass(
+        &self,
+        now: TimeMs,
+        req_idx: usize,
+        skip_zone: Option<u32>,
+        ctx: &mut RouteCtx,
+    ) -> Option<usize> {
         let r = &ctx.requests[req_idx];
         let model = r.req.model;
         let own_tokens = r.req.prefill_len as u64;
@@ -781,6 +834,9 @@ impl PolyServeRouter {
         let mut best_feasible: Option<(u64, usize)> = None; // (load, id)
         let mut best_fallback: Option<(f64, usize)> = None; // (finish/est, id)
         for id in ctx.cluster.with_role_of(model, Role::Prefill) {
+            if skip_zone.is_some_and(|z| ctx.cluster.instances[id].domain.0 == z) {
+                continue;
+            }
             let queued = ctx.cluster.instances[id].queued_prefill_tokens(ctx.requests);
             let fallback_est = best_fallback.map_or(f64::INFINITY, |(e, _)| e);
             match self.prefill_queue_feasible(now, id, own_tokens, deadline, ctx) {
@@ -815,11 +871,14 @@ impl PolyServeRouter {
         best_feasible
             .map(|(_, id)| id)
             .or_else(|| best_fallback.map(|(_, id)| id))
-            .expect("PD cluster without prefill servers")
     }
 }
 
 impl Router for PolyServeRouter {
+    fn set_avoid_zone(&mut self, zone: Option<u32>) {
+        self.avoid_zone = zone;
+    }
+
     fn route_new(&mut self, now: TimeMs, req_idx: usize, ctx: &mut RouteCtx) -> Option<usize> {
         self.ensure_models(ctx);
         match self.mode {

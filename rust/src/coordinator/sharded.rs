@@ -167,6 +167,12 @@ impl Router for ShardedRouter {
             .collect::<Vec<_>>()
             .join(" | ")
     }
+
+    fn set_avoid_zone(&mut self, zone: Option<u32>) {
+        for s in &mut self.shards {
+            s.set_avoid_zone(zone);
+        }
+    }
 }
 
 #[cfg(test)]

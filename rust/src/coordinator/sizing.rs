@@ -177,6 +177,19 @@ pub fn required_prefill_fleet(
         .max(1)
 }
 
+/// Chaos-churn provisioning pad: instances the observed kill rate is
+/// expected to claim inside the anticipation lead, rounded up —
+/// capacity that must already be cold-starting *now* to land when the
+/// kills do. Capped at 8 (the predictive scaler's per-epoch provision
+/// step) so a transient kill-rate spike can't demand an unbounded
+/// fleet; a zero rate pads nothing (bit-identical sizing).
+pub fn churn_pad(kill_rate_per_ms: f64, lead_ms: u64) -> usize {
+    if kill_rate_per_ms <= 0.0 {
+        return 0;
+    }
+    ((kill_rate_per_ms * lead_ms as f64).ceil() as usize).min(8)
+}
+
 /// Split a peak PD fleet of `n_peak` into its static prefill share
 /// (`peak_prefill_frac`, clamped so both sides keep at least one
 /// server) and the scalable decode remainder.
@@ -260,6 +273,16 @@ mod tests {
         let four = required_prefill_fleet(&t, 40.0, 1_000.0, 2_048);
         assert!(four >= 4 * one - 3, "one={one} four={four}");
         assert_eq!(required_prefill_fleet(&t, 0.0, 1_000.0, 2_048), 1);
+    }
+
+    #[test]
+    fn churn_pad_rounds_up_and_caps() {
+        assert_eq!(churn_pad(0.0, 30_000), 0);
+        assert_eq!(churn_pad(-1.0, 30_000), 0);
+        // 1 kill / 20 s over a 30 s lead → expect 1.5 → pad 2.
+        assert_eq!(churn_pad(1.0 / 20_000.0, 30_000), 2);
+        // A spike can never demand more than one provision step.
+        assert_eq!(churn_pad(1.0, 30_000), 8);
     }
 
     #[test]

@@ -19,6 +19,13 @@ use crate::workload::{RateSchedule, TraceGenerator, Workload};
 // predictive autoscaler too; benches keep importing it from here.
 pub use crate::coordinator::sizing::size_elastic_pd_cell;
 
+/// Flattened `[chaos]` schedule pairs `(t_s, value, t_s, value, …)` →
+/// the simulator's `(TimeMs, value)` steps (config validation already
+/// guaranteed even length and ascending times).
+fn schedule_pairs(flat: &[f64]) -> Vec<(u64, f64)> {
+    flat.chunks_exact(2).map(|c| ((c[0] * 1000.0) as u64, c[1])).collect()
+}
+
 /// Everything needed to run one simulation cell, pre-computed.
 pub struct Experiment {
     /// The (auto-resolved) configuration of the cell.
@@ -244,6 +251,13 @@ impl Experiment {
                 preempt_grace_ms: self.cfg.chaos.preempt_grace_ms,
                 spot_fraction: self.cfg.chaos.spot_fraction,
                 spot_price_frac: self.cfg.chaos.spot_price_frac,
+                zones: self.cfg.chaos.zones,
+                racks_per_zone: self.cfg.chaos.racks_per_zone,
+                domain_fail_at: Vec::new(),
+                domain_fail_mtbf_ms: (self.cfg.chaos.domain_fail_mtbf_s * 1000.0) as u64,
+                checkpoint_period_ms: self.cfg.chaos.checkpoint_period_ms,
+                spot_price_schedule: schedule_pairs(&self.cfg.chaos.spot_price_schedule),
+                spot_avail_schedule: schedule_pairs(&self.cfg.chaos.spot_avail_schedule),
                 seed: self.cfg.chaos.seed,
             }),
             // Simulator-side overload machinery exists only when the
@@ -255,6 +269,7 @@ impl Experiment {
                     retry: self.cfg.overload.retry,
                     retry_base_ms: self.cfg.overload.retry_base_ms,
                     retry_max_attempts: self.cfg.overload.retry_max_attempts,
+                    propagate_deadline: self.cfg.overload.propagate_deadline,
                     seed: self.cfg.overload.seed,
                 }
             }),

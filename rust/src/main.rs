@@ -54,12 +54,18 @@ fn main() {
                 .opt("spot-fraction", "", "fraction of provisioned instances that are spot")
                 .opt("spot-price-frac", "", "spot price as a fraction of on-demand")
                 .opt("chaos-seed", "", "rng seed for the chaos schedule")
+                .opt("chaos-zones", "", "failure zones the fleet is striped across")
+                .opt("chaos-racks-per-zone", "", "racks inside each failure zone")
+                .opt("chaos-domain-mtbf-s", "", "mean time between correlated rack/zone kills")
+                .opt("checkpoint-period-ms", "", "KV-watermark snapshot period (0 = off)")
+                .flag("chaos-adaptive", "scaler consumes chaos stats: churn pad + spot/on-demand split")
                 .flag("overload", "EDF pending queues (the [overload] master switch)")
                 .flag("overload-reject", "SLO-feasibility admission control at the arrival edge (implies --overload)")
                 .flag("overload-retry", "rejected clients re-arrive after capped backoff (implies --overload-reject)")
                 .opt("retry-base-ms", "", "backoff base for the first retry")
                 .opt("retry-max-attempts", "", "terminal rejection after this many shed arrivals")
                 .opt("overload-seed", "", "rng seed for the retry-jitter stream")
+                .flag("propagate-deadline", "retries keep the original end-to-end deadline")
                 .flag("verbose", "per-tier breakdown"),
         )
         .command(
@@ -206,6 +212,24 @@ fn sim_config_from(args: &Args) -> Result<SimConfig, String> {
     if !args.str_or("chaos-seed", "").is_empty() {
         cfg.chaos.seed = args.u64_or("chaos-seed", cfg.chaos.seed);
     }
+    if !args.str_or("chaos-zones", "").is_empty() {
+        cfg.chaos.zones = args.u64_or("chaos-zones", u64::from(cfg.chaos.zones)) as u32;
+    }
+    if !args.str_or("chaos-racks-per-zone", "").is_empty() {
+        cfg.chaos.racks_per_zone =
+            args.u64_or("chaos-racks-per-zone", u64::from(cfg.chaos.racks_per_zone)) as u32;
+    }
+    if !args.str_or("chaos-domain-mtbf-s", "").is_empty() {
+        cfg.chaos.domain_fail_mtbf_s =
+            args.f64_or("chaos-domain-mtbf-s", cfg.chaos.domain_fail_mtbf_s);
+    }
+    if !args.str_or("checkpoint-period-ms", "").is_empty() {
+        cfg.chaos.checkpoint_period_ms =
+            args.u64_or("checkpoint-period-ms", cfg.chaos.checkpoint_period_ms);
+    }
+    if args.flag("chaos-adaptive") {
+        cfg.chaos.adaptive = true;
+    }
     if args.flag("overload") {
         cfg.overload.enabled = true;
     }
@@ -227,6 +251,12 @@ fn sim_config_from(args: &Args) -> Result<SimConfig, String> {
     }
     if !args.str_or("overload-seed", "").is_empty() {
         cfg.overload.seed = args.u64_or("overload-seed", cfg.overload.seed);
+    }
+    if args.flag("propagate-deadline") {
+        cfg.overload.enabled = true;
+        cfg.overload.reject = true;
+        cfg.overload.retry = true;
+        cfg.overload.propagate_deadline = true;
     }
     cfg.validate().map_err(|e| e.to_string())?;
     Ok(cfg)
@@ -358,6 +388,30 @@ fn cmd_simulate(args: &Args) -> i32 {
             res.chaos.replaced_requests,
             res.chaos.lost_kv_tokens,
         );
+        if res.chaos.domain_kills > 0 {
+            let per_zone: Vec<String> = res
+                .chaos
+                .kills_per_zone
+                .iter()
+                .enumerate()
+                .map(|(z, n)| format!("z{z}:{n}"))
+                .collect();
+            println!(
+                "domains: {} correlated kills ({})",
+                res.chaos.domain_kills,
+                per_zone.join(" "),
+            );
+        }
+        if res.chaos.checkpoints > 0 {
+            println!(
+                "checkpoints: {} snapshots, {} KV tokens covered ({} ms transfer); {} tokens restored on failure, {} re-prefilled",
+                res.chaos.checkpoints,
+                res.chaos.checkpoint_tokens,
+                res.chaos.checkpoint_cost_ms,
+                res.chaos.recovered_kv_tokens,
+                res.chaos.reprefill_tokens,
+            );
+        }
         if res.cost.spot_instance_ms > 0 {
             println!(
                 "spot: {:.1} of {:.1} active inst·s on spot; bill {:.1} inst·s at {:.0}% spot price",
@@ -366,6 +420,12 @@ fn cmd_simulate(args: &Args) -> i32 {
                 res.cost.discounted_bill_ms(cfg.chaos.spot_price_frac) / 1000.0,
                 100.0 * cfg.chaos.spot_price_frac,
             );
+            if let Some(bill) = res.cost.spot_curve_bill_ms {
+                println!(
+                    "spot curve: bill {:.1} inst·s under the stepwise price schedule",
+                    bill as f64 / 1000.0,
+                );
+            }
         }
     }
     if !res.overload.is_quiet() {

@@ -207,6 +207,12 @@ pub struct CostAccount {
     /// (provision → retire/fail). 0 unless `[chaos]` provisioned spot
     /// capacity.
     pub spot_instance_ms: u64,
+    /// On-demand-equivalent bill (ms, rounded) with the spot slice
+    /// priced by the stepwise `[chaos] spot_price_schedule` instead of
+    /// the flat `spot_price_frac`. `None` unless the run declared a
+    /// price curve — flat-discount runs keep using
+    /// [`CostAccount::discounted_bill_ms`].
+    pub spot_curve_bill_ms: Option<u64>,
 }
 
 impl CostAccount {
@@ -492,8 +498,32 @@ pub struct ChaosStats {
     /// that re-entered placement for a full re-prefill.
     pub replaced_requests: u64,
     /// KV tokens (prefill-done + decoded context) lost to failures —
-    /// the prefill slice of it is recomputed from scratch.
+    /// the prefill slice of it is recomputed from scratch. With
+    /// checkpointing on, only the *un*-checkpointed suffix counts here;
+    /// the protected prefix lands in `recovered_kv_tokens`.
     pub lost_kv_tokens: u64,
+    /// Correlated domain kills executed (one per `DomainFail` draw that
+    /// hit ≥ 0 live instances — rack and zone kills both count once).
+    pub domain_kills: u64,
+    /// Instances killed per zone by domain-correlated draws, indexed by
+    /// zone id (empty unless `[chaos] zones` partitioned the fleet).
+    pub kills_per_zone: Vec<u64>,
+    /// KV-watermark snapshots taken by the periodic checkpointer.
+    pub checkpoints: u64,
+    /// Prefill tokens newly covered by snapshots (sum of per-snapshot
+    /// watermark deltas — the transfer volume billed to the
+    /// interconnect).
+    pub checkpoint_tokens: u64,
+    /// Total snapshot transfer time billed, ms (`checkpoint_tokens`
+    /// over the migration interconnect rate, per snapshot).
+    pub checkpoint_cost_ms: u64,
+    /// Checkpointed prefill tokens restored instead of recomputed when
+    /// their instance failed — KV the snapshots saved.
+    pub recovered_kv_tokens: u64,
+    /// Prefill tokens actually recomputed after failures
+    /// (`prefill_done − checkpointed` summed over victims; equals the
+    /// victims' full `prefill_done` when checkpointing is off).
+    pub reprefill_tokens: u64,
 }
 
 impl ChaosStats {
@@ -662,6 +692,7 @@ mod tests {
             active_instance_ms_per_model: vec![20_000],
             requests_served_per_model: vec![5],
             spot_instance_ms: 8_000,
+            spot_curve_bill_ms: None,
         };
         assert!((c.cost_per_request_s() - 2.0).abs() < 1e-9);
         assert!((c.active_cost_per_request_s() - 4.0).abs() < 1e-9);

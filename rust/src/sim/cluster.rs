@@ -1049,6 +1049,21 @@ impl Cluster {
         victims
     }
 
+    /// Live instance ids inside failure zone `zone` — and, when `rack`
+    /// is set, only the instances on that rack. Ascending id order (the
+    /// deterministic kill order for a `ChaosFailDomain` draw).
+    pub fn live_in_domain(&self, zone: u32, rack: Option<u32>) -> Vec<usize> {
+        self.instances
+            .iter()
+            .filter(|i| {
+                i.lifecycle.is_live()
+                    && i.domain.0 == zone
+                    && rack.map(|r| i.domain.1 == r).unwrap_or(true)
+            })
+            .map(|i| i.id)
+            .collect()
+    }
+
     // ---- model hot-swap lifecycle ----
 
     /// Start swapping `id` to registry model `target`: the instance

@@ -121,6 +121,12 @@ pub struct Instance {
     /// false without a `[chaos]` spot fraction; the initial fleet is
     /// on-demand.
     pub spot: bool,
+    /// Failure domain `(zone, rack)` this instance lives in. Assigned
+    /// by a deterministic stride over instance ids when `[chaos]
+    /// zones` > 0 (see `Simulation`); `(0, 0)` otherwise. A
+    /// `ChaosFailDomain` draw kills every live instance sharing the
+    /// drawn rack or zone in one event.
+    pub domain: (u32, u32),
     /// Decode-phase requests resident (their KV lives here).
     pub running: Vec<RunningReq>,
     /// Requests queued for (chunked) prefill on this instance.
@@ -187,6 +193,7 @@ impl Instance {
             lifecycle: Lifecycle::Active,
             born_ms: 0,
             spot: false,
+            domain: (0, 0),
             running: Vec::new(),
             prefill_queue: VecDeque::new(),
             decode_queue: VecDeque::new(),
@@ -375,6 +382,17 @@ impl Instance {
         self.kv_handoff_tokens = 0;
         self.kv_prefill_done_tokens = 0;
         self.queued_prefill_rem_tokens = 0;
+        out
+    }
+
+    /// Resident request indices, non-destructively, in the same
+    /// deterministic order [`Instance::fail_residents`] would return
+    /// them (running batch, decode handoffs, prefill queue). The
+    /// periodic KV-checkpoint sweep walks this.
+    pub fn resident_reqs(&self) -> Vec<usize> {
+        let mut out: Vec<usize> = self.running.iter().map(|s| s.req_idx).collect();
+        out.extend(self.decode_queue.iter().map(|&(r, _)| r));
+        out.extend(self.prefill_queue.iter().map(|j| j.req_idx));
         out
     }
 

@@ -72,7 +72,25 @@
 //!   instances receive notices. Spot instances are assigned
 //!   deterministically at provision time by `spot_fraction` and bill
 //!   at `spot_price_frac` of the on-demand rate
-//!   ([`crate::metrics::CostAccount::discounted_bill_ms`]).
+//!   ([`crate::metrics::CostAccount::discounted_bill_ms`]) — or over a
+//!   stepwise `spot_price_schedule` into
+//!   [`crate::metrics::CostAccount::spot_curve_bill_ms`] when a curve
+//!   is declared; a `spot_avail_schedule` scales the preempt-MTBF gaps
+//!   the same way (scarcer capacity → faster reclamation).
+//! * **`DomainFail` / `ChaosFailDomain`** — correlated kills: with
+//!   `[chaos] zones` set, every instance carries a deterministic
+//!   `(zone, rack)` failure domain ([`domain_of`]) and one draw kills
+//!   every live instance in a rack (or, rarer, a whole zone) at once.
+//!   Victim re-placement steers away from the blast radius: the router
+//!   is handed the failed zone ([`crate::coordinator::Router::set_avoid_zone`])
+//!   and prefers survivors outside it, falling back to the full fleet.
+//! * **`Checkpoint`** — periodic KV snapshots (`[chaos]
+//!   checkpoint_period_ms`): every resident's committed prefill
+//!   watermark is checkpointed (billing the delta tokens as transfer
+//!   time, [`crate::metrics::ChaosStats::checkpoint_cost_ms`]), and an
+//!   `InstanceFail` rewinds victims to the last checkpoint instead of
+//!   zero — re-prefill pays only the suffix, never re-emitting decoded
+//!   tokens.
 //!
 //! A disabled `[chaos]` block schedules zero events and draws zero
 //! RNG, so the machinery's presence is bit-for-bit invisible — the
@@ -207,6 +225,55 @@ use crate::workload::Workload;
 /// The per-request transfer time is `max(kv_transfer_ms, kv_now / this)`.
 pub const MIGRATION_TOKENS_PER_MS: u64 = 400;
 
+/// Deterministic failure-domain stride: instance `id` lands in
+/// `(id mod zones, (id / zones) mod racks)`. Zone-first striping means
+/// consecutive ids spread across zones before doubling up on a rack —
+/// any contiguous id range is maximally blast-radius-diverse.
+pub fn domain_of(id: usize, zones: u32, racks_per_zone: u32) -> (u32, u32) {
+    let z = zones.max(1) as usize;
+    let r = racks_per_zone.max(1) as usize;
+    ((id % z) as u32, ((id / z) % r) as u32)
+}
+
+/// Value of a stepwise `(t, value)` schedule at time `t`: the last
+/// step at or before `t`, or `before_first` ahead of the first step.
+fn schedule_value_at(sched: &[(TimeMs, f64)], t: TimeMs, before_first: f64) -> f64 {
+    let mut v = before_first;
+    for &(tk, vk) in sched {
+        if tk <= t {
+            v = vk;
+        } else {
+            break;
+        }
+    }
+    v
+}
+
+/// Integrate a stepwise price curve over `[start, end)` ms: the sum of
+/// `segment_ms * price` over the curve's steps, with `flat` as the
+/// price ahead of the first step. Returns price-weighted milliseconds.
+fn integrate_spot_price(sched: &[(TimeMs, f64)], flat: f64, start: TimeMs, end: TimeMs) -> f64 {
+    if end <= start {
+        return 0.0;
+    }
+    let mut total = 0.0;
+    let mut t = start;
+    let mut price = flat;
+    for &(tk, pk) in sched {
+        if tk <= t {
+            price = pk;
+            continue;
+        }
+        if tk >= end {
+            break;
+        }
+        total += (tk - t) as f64 * price;
+        t = tk;
+        price = pk;
+    }
+    total + (end - t) as f64 * price
+}
+
 /// Simulator-side request state: the mutable half of the request
 /// arena. The immutable prompt/SLO data is only *borrowed* from the
 /// workload (`'w`) — `Simulation::new` clones nothing per request.
@@ -228,6 +295,13 @@ pub struct SimRequest<'w> {
     pub finish_ms: Option<TimeMs>,
     /// Instance currently hosting the request's decode phase.
     pub decode_instance: Option<usize>,
+    /// Committed prefill watermark as of the last KV checkpoint
+    /// (`[chaos] checkpoint_period_ms`): an `InstanceFail` rewinds
+    /// `prefill_done` here instead of to zero, so re-prefill pays only
+    /// the un-checkpointed suffix. Stays 0 (the PR 8 cold-restart
+    /// semantics) with checkpointing off. Monotone, never past
+    /// `prefill_done`.
+    pub checkpointed: u32,
     /// Arrival time the SLO clock is anchored at: the workload arrival,
     /// until an `[overload] retry` re-arrival re-anchors it (the client
     /// resubmitted — the backoff wait is not held against the new
@@ -251,6 +325,7 @@ impl<'w> SimRequest<'w> {
             first_token_ms: None,
             finish_ms: None,
             decode_instance: None,
+            checkpointed: 0,
             effective_arrival_ms: req.arrival_ms,
             shed: false,
         }
@@ -358,6 +433,28 @@ pub struct ElasticParams {
     pub model_swap_delay_ms: TimeMs,
 }
 
+/// A correlated-failure blast radius: one `ChaosFailDomain` draw (or
+/// an explicit [`ChaosParams::domain_fail_at`] entry) hard-kills every
+/// live instance inside it in a single event. Domains are assigned to
+/// instances by a deterministic stride at build/provision time when
+/// `[chaos] zones` > 0 (see [`Instance::domain`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum FailDomain {
+    /// One rack inside a zone — the common blast radius (top-of-rack
+    /// switch or PDU loss).
+    Rack {
+        /// The zone the rack lives in.
+        zone: u32,
+        /// Rack index inside the zone.
+        rack: u32,
+    },
+    /// A whole zone — the rare, wide outage (every rack in it dies).
+    Zone {
+        /// The zone that goes dark.
+        zone: u32,
+    },
+}
+
 /// Fault-injection and spot-preemption schedule (the `[chaos]` layer;
 /// see the module docs). `Default` is fully disabled —
 /// [`ChaosParams::enabled`] is `false` and the simulation constructs
@@ -386,6 +483,37 @@ pub struct ChaosParams {
     /// Spot price as a fraction of the on-demand rate, reported through
     /// [`crate::metrics::CostAccount::discounted_bill_ms`].
     pub spot_price_frac: f64,
+    /// Failure-domain zones the fleet is striped across (`(zone, rack)`
+    /// by deterministic stride over instance ids). 0 = no domain model:
+    /// every instance stays in `(0, 0)` and correlated kills are
+    /// unavailable.
+    pub zones: u32,
+    /// Racks per zone (the inner stripe); must be >= 1 when `zones > 0`.
+    pub racks_per_zone: u32,
+    /// Explicit correlated kills: `(t_ms, domain)` — every live
+    /// instance inside the domain fails at `t` in one event.
+    pub domain_fail_at: Vec<(TimeMs, FailDomain)>,
+    /// Mean time between seeded correlated domain kills, ms: each draw
+    /// picks a uniform zone, then either one of its racks or (one draw
+    /// in `racks_per_zone + 1`) the whole zone. 0 disables the process;
+    /// needs `zones > 0` to have a target.
+    pub domain_fail_mtbf_ms: u64,
+    /// KV checkpoint period, ms: snapshot every resident request's
+    /// committed prefill watermark so an `InstanceFail` rewinds there
+    /// instead of to zero (suffix-only re-prefill). Each snapshot bills
+    /// its delta tokens over [`MIGRATION_TOKENS_PER_MS`] into
+    /// [`crate::metrics::ChaosStats::checkpoint_cost_ms`]. 0 = off.
+    pub checkpoint_period_ms: u64,
+    /// Stepwise spot price curve: `(t_ms, price_frac)` steps, times
+    /// strictly increasing; the flat `spot_price_frac` applies before
+    /// the first step. Empty = flat pricing only (bit-for-bit the
+    /// single-step default; `spot_curve_bill_ms` stays `None`).
+    pub spot_price_schedule: Vec<(TimeMs, f64)>,
+    /// Stepwise spot availability curve: `(t_ms, multiplier)` steps
+    /// scaling the preempt-MTBF inter-event gap (multiplier < 1 =
+    /// scarcer capacity, preemptions come faster). The RNG draw stream
+    /// is unchanged — only the drawn gap is scaled. Empty = off.
+    pub spot_avail_schedule: Vec<(TimeMs, f64)>,
     /// Seed of the MTBF processes' dedicated RNG stream.
     pub seed: u64,
 }
@@ -393,13 +521,18 @@ pub struct ChaosParams {
 impl ChaosParams {
     /// Does this schedule inject anything at all? `false` means the
     /// run schedules zero chaos events and draws zero RNG — bit-for-bit
-    /// the chaos-free path.
+    /// the chaos-free path. Zone striping alone (`zones > 0` with no
+    /// injection and no checkpointing) does not enable: it only labels
+    /// instances.
     pub fn enabled(&self) -> bool {
         !self.fail_at.is_empty()
             || !self.preempt_at.is_empty()
             || self.fail_mtbf_ms > 0
             || self.preempt_mtbf_ms > 0
             || self.spot_fraction > 0.0
+            || !self.domain_fail_at.is_empty()
+            || self.domain_fail_mtbf_ms > 0
+            || self.checkpoint_period_ms > 0
     }
 }
 
@@ -416,6 +549,11 @@ pub struct OverloadParams {
     pub retry_base_ms: u64,
     /// Give up (shed for good) after this many rejections.
     pub retry_max_attempts: u32,
+    /// Client-side deadline propagation: a retry re-arrives with the
+    /// *remaining* end-to-end budget — the SLO clock stays anchored at
+    /// the original arrival instead of re-anchoring at the re-arrival.
+    /// `false` is the PR 9 reset-clock behaviour bit-for-bit.
+    pub propagate_deadline: bool,
     /// Seed of the retry-jitter RNG stream.
     pub seed: u64,
 }
@@ -495,6 +633,15 @@ enum EventKey {
     /// A rejected client's backoff expired: the request re-arrives with
     /// a re-anchored SLO clock (`[overload] retry` only).
     RetryArrival(usize),
+    /// Explicit correlated kill: every live instance in the domain
+    /// fails in one event (`[chaos]` only).
+    DomainFail(FailDomain),
+    /// Self-rescheduling MTBF correlated-kill process (`[chaos]` only).
+    ChaosFailDomain,
+    /// Self-rescheduling KV checkpoint sweep: snapshot every resident
+    /// request's committed prefill watermark (`[chaos]
+    /// checkpoint_period_ms` only).
+    Checkpoint,
 }
 
 /// Live fault-injection state: the schedule, its dedicated RNG stream,
@@ -515,6 +662,12 @@ struct ChaosRuntime {
     /// Elastic provisions seen so far — the deterministic spot-class
     /// stride counter.
     provisioned: u64,
+    /// Chaos-adaptive spot policy: when a scaler's `SpotPolicy` action
+    /// judged realized churn to be eating the spot discount, new
+    /// provisions skip the spot stride (the counter still advances) —
+    /// until a later action restores it. Never set without
+    /// `[chaos] adaptive`.
+    force_on_demand: bool,
 }
 
 impl ChaosRuntime {
@@ -524,6 +677,7 @@ impl ChaosRuntime {
             stats: ChaosStats::default(),
             preempt_pending: BTreeSet::new(),
             provisioned: 0,
+            force_on_demand: false,
             params,
         }
     }
@@ -665,6 +819,18 @@ impl<'a> Simulation<'a> {
             overload,
             ol_stats: OverloadStats::default(),
         };
+        // Failure-domain striping over the built fleet: instance id
+        // striding `(id mod zones, (id div zones) mod racks)` spreads
+        // adjacent ids across zones first, then racks — so any
+        // contiguous slice of the fleet is maximally domain-diverse.
+        // Elastic provisions get the same stride in `apply_provision`.
+        if let Some((zones, racks)) = sim.chaos.as_ref().and_then(|ch| {
+            (ch.params.zones > 0).then_some((ch.params.zones, ch.params.racks_per_zone.max(1)))
+        }) {
+            for i in &mut sim.cluster.instances {
+                i.domain = domain_of(i.id, zones, racks);
+            }
+        }
         sim.push_event(tick, EventKey::Tick);
         sim
     }
@@ -744,6 +910,21 @@ impl<'a> Simulation<'a> {
             if preempt_mtbf > 0 {
                 let gap = ch.next_gap(preempt_mtbf);
                 chaos_seed.push((gap, EventKey::ChaosPreempt));
+            }
+            // PR 10 additions append strictly after the PR 8 seeds, so
+            // a schedule without them reproduces the old seq stream
+            // bit-for-bit.
+            for &(t, d) in &ch.params.domain_fail_at {
+                chaos_seed.push((t, EventKey::DomainFail(d)));
+            }
+            let domain_mtbf = ch.params.domain_fail_mtbf_ms;
+            if domain_mtbf > 0 {
+                let gap = ch.next_gap(domain_mtbf);
+                chaos_seed.push((gap, EventKey::ChaosFailDomain));
+            }
+            let ckpt = ch.params.checkpoint_period_ms;
+            if ckpt > 0 {
+                chaos_seed.push((ckpt, EventKey::Checkpoint));
             }
         }
         for (t, key) in chaos_seed {
@@ -838,6 +1019,9 @@ impl<'a> Simulation<'a> {
                 }
                 EventKey::ChaosFail => self.handle_chaos_fail(router),
                 EventKey::ChaosPreempt => self.handle_chaos_preempt(router),
+                EventKey::DomainFail(d) => self.handle_domain_fail(d, router),
+                EventKey::ChaosFailDomain => self.handle_chaos_domain_fail(router),
+                EventKey::Checkpoint => self.handle_checkpoint(),
                 EventKey::MigrationArrive(req_idx) => {
                     debug_assert!(
                         !self.requests[req_idx].is_finished(),
@@ -975,6 +1159,26 @@ impl<'a> Simulation<'a> {
         ep: &ElasticParams,
         router: &mut dyn Router,
     ) {
+        // Chaos telemetry feed (only when a chaos runtime exists, so
+        // the chaos-free control flow is untouched): the scaler sees
+        // the realized kill/preempt counters and the *current* spot
+        // price before it plans. The default hook is a no-op; only a
+        // chaos-adaptive scaler acts on it.
+        if self.chaos.is_some() {
+            let spot_active = self
+                .cluster
+                .instances
+                .iter()
+                .filter(|i| i.spot && i.lifecycle.is_live())
+                .count();
+            let ch = self.chaos.as_ref().expect("checked above");
+            let price = schedule_value_at(
+                &ch.params.spot_price_schedule,
+                self.now,
+                ch.params.spot_price_frac,
+            );
+            scaler.observe_chaos(self.now, &ch.stats, spot_active, price);
+        }
         let actions = scaler.evaluate(self.now, &mut self.ctx());
         for action in actions {
             match action {
@@ -1044,6 +1248,22 @@ impl<'a> Simulation<'a> {
                         self.finish_drain(inst);
                     }
                 }
+                ScaleAction::SpotPolicy { on_demand } => {
+                    // Chaos-adaptive spot/on-demand shift: subsequent
+                    // provisions skip (or resume) the spot stride. Only
+                    // ever emitted by a chaos-adaptive scaler, so the
+                    // knobs-off path never reaches here.
+                    if let Some(ch) = self.chaos.as_mut() {
+                        if ch.force_on_demand != on_demand {
+                            ch.force_on_demand = on_demand;
+                            log::debug!(
+                                "t={} chaos-adaptive: provisions now {}",
+                                self.now,
+                                if on_demand { "on-demand" } else { "spot-eligible" }
+                            );
+                        }
+                    }
+                }
             }
         }
         self.sample_fleet();
@@ -1081,9 +1301,16 @@ impl<'a> Simulation<'a> {
                 if frac > 0.0 {
                     let k = ch.provisioned as f64;
                     ch.provisioned += 1;
-                    if ((k + 1.0) * frac).floor() > (k * frac).floor() {
+                    // The stride counter advances even under a
+                    // `SpotPolicy` on-demand hold, so lifting the hold
+                    // resumes the original class sequence.
+                    if ((k + 1.0) * frac).floor() > (k * frac).floor() && !ch.force_on_demand {
                         self.cluster.instances[id].spot = true;
                     }
+                }
+                if ch.params.zones > 0 {
+                    self.cluster.instances[id].domain =
+                        domain_of(id, ch.params.zones, ch.params.racks_per_zone.max(1));
                 }
             }
             self.push_event(ready, EventKey::InstanceReady(id));
@@ -1157,24 +1384,153 @@ impl<'a> Simulation<'a> {
             victims.len()
         );
         for &req_idx in &victims {
-            let lost = self.requests[req_idx].kv_now();
+            let (kv, ckpt, reprefill) = {
+                let r = &self.requests[req_idx];
+                debug_assert!(r.checkpointed <= r.prefill_done, "checkpoint past the watermark");
+                (
+                    r.kv_now(),
+                    r.checkpointed as u64,
+                    (r.prefill_done - r.checkpointed) as u64,
+                )
+            };
             if let Some(ch) = self.chaos.as_mut() {
-                ch.stats.lost_kv_tokens += lost;
+                // Only the un-checkpointed suffix of the KV dies with
+                // the device; the checkpointed prefix restores from the
+                // snapshot. Without checkpointing `ckpt` is 0 and this
+                // is exactly the PR 8 full-loss accounting.
+                ch.stats.lost_kv_tokens += kv.saturating_sub(ckpt);
+                ch.stats.recovered_kv_tokens += ckpt;
+                ch.stats.reprefill_tokens += reprefill;
                 ch.stats.replaced_requests += 1;
             }
-            // Rewind to a cold start: the prompt must re-prefill from
-            // scratch. `decoded` (and the tracker) keep the tokens the
-            // client already received — they are never re-emitted.
+            // Rewind to the last checkpoint (zero without checkpointing
+            // — the PR 8 cold restart): only the suffix re-prefills.
+            // `decoded` (and the tracker) keep the tokens the client
+            // already received — they are never re-emitted.
             let r = &mut self.requests[req_idx];
-            r.prefill_done = 0;
+            r.prefill_done = r.checkpointed;
             r.decode_instance = None;
         }
         // Re-placement only after the dead instance is `Retired`, so
-        // `route_new` can never choose it.
+        // `route_new` can never choose it. With a domain model, steer
+        // the router away from the victim's zone for the replacement
+        // placements (two-pass: survivors outside the blast radius are
+        // preferred, with the full fleet as fallback).
+        let avoid = self
+            .chaos
+            .as_ref()
+            .and_then(|ch| (ch.params.zones > 0).then_some(self.cluster.instances[inst].domain.0));
+        if avoid.is_some() {
+            router.set_avoid_zone(avoid);
+        }
         for &req_idx in &victims {
-            self.place_prefill_handoff(req_idx, router);
+            // A checkpoint at the full prompt resumes decode directly —
+            // there is nothing left to re-prefill.
+            if self.requests[req_idx].prefill_done < self.requests[req_idx].req.prefill_len {
+                self.place_prefill_handoff(req_idx, router);
+            } else {
+                self.place_decode_handoff(req_idx, router);
+            }
+        }
+        if avoid.is_some() {
+            router.set_avoid_zone(None);
         }
         self.restart_fed_instances(router);
+    }
+
+    /// Correlated kill (`[chaos]` only): hard-fail every live instance
+    /// inside `domain` in one event — the rack/zone blast radius. Each
+    /// victim goes through the ordinary [`Simulation::handle_instance_fail`]
+    /// path (checkpoint rewind, domain-avoiding re-placement), in
+    /// ascending instance-id order.
+    fn handle_domain_fail(&mut self, domain: FailDomain, router: &mut dyn Router) {
+        let (zone, rack) = match domain {
+            FailDomain::Rack { zone, rack } => (zone, Some(rack)),
+            FailDomain::Zone { zone } => (zone, None),
+        };
+        let victims = self.cluster.live_in_domain(zone, rack);
+        if victims.is_empty() {
+            return;
+        }
+        if let Some(ch) = self.chaos.as_mut() {
+            ch.stats.domain_kills += 1;
+            let z = zone as usize;
+            if ch.stats.kills_per_zone.len() <= z {
+                ch.stats.kills_per_zone.resize(z + 1, 0);
+            }
+            ch.stats.kills_per_zone[z] += victims.len() as u64;
+        }
+        log::debug!(
+            "t={} chaos: domain {domain:?} failed, {} instances down",
+            self.now,
+            victims.len()
+        );
+        for inst in victims {
+            self.handle_instance_fail(inst, router);
+        }
+    }
+
+    /// One firing of the MTBF correlated-kill process: draw a uniform
+    /// zone, then either one of its racks or — one draw in
+    /// `racks_per_zone + 1` — the whole zone, and reschedule with a
+    /// fresh exponential gap. The draw sequence depends only on the
+    /// seed (fixed three draws per firing, targets or not).
+    fn handle_chaos_domain_fail(&mut self, router: &mut dyn Router) {
+        let (domain, gap) = {
+            let Some(ch) = self.chaos.as_mut() else { return };
+            let zones = ch.params.zones.max(1);
+            let racks = ch.params.racks_per_zone.max(1);
+            let zone = ch.rng.below(zones as u64) as u32;
+            let r = ch.rng.below(racks as u64 + 1) as u32;
+            let domain = if r == racks {
+                FailDomain::Zone { zone }
+            } else {
+                FailDomain::Rack { zone, rack: r }
+            };
+            let mtbf = ch.params.domain_fail_mtbf_ms;
+            (domain, ch.next_gap(mtbf))
+        };
+        self.handle_domain_fail(domain, router);
+        self.push_event(self.now + gap, EventKey::ChaosFailDomain);
+    }
+
+    /// One firing of the periodic KV-checkpoint sweep (`[chaos]
+    /// checkpoint_period_ms` only): snapshot every live instance's
+    /// residents' committed prefill watermarks, bill each snapshot's
+    /// delta tokens as transfer time over the migration interconnect
+    /// rate, and reschedule. Snapshots are asynchronous — they never
+    /// stall the instance — so the cost lands in
+    /// [`crate::metrics::ChaosStats::checkpoint_cost_ms`], not in the
+    /// iteration timeline.
+    fn handle_checkpoint(&mut self) {
+        let period = match self.chaos.as_ref() {
+            Some(ch) if ch.params.checkpoint_period_ms > 0 => ch.params.checkpoint_period_ms,
+            _ => return,
+        };
+        let mut snaps = 0u64;
+        let mut toks = 0u64;
+        for id in 0..self.cluster.instances.len() {
+            if !self.cluster.instances[id].lifecycle.is_live() {
+                continue;
+            }
+            for req_idx in self.cluster.instances[id].resident_reqs() {
+                let r = &mut self.requests[req_idx];
+                let delta = r.prefill_done.saturating_sub(r.checkpointed);
+                if delta > 0 {
+                    r.checkpointed = r.prefill_done;
+                    snaps += 1;
+                    toks += delta as u64;
+                }
+            }
+        }
+        if let Some(ch) = self.chaos.as_mut() {
+            if snaps > 0 {
+                ch.stats.checkpoints += snaps;
+                ch.stats.checkpoint_tokens += toks;
+                ch.stats.checkpoint_cost_ms += toks.div_ceil(MIGRATION_TOKENS_PER_MS);
+            }
+        }
+        self.push_event(self.now + period, EventKey::Checkpoint);
     }
 
     /// Spot reclamation notice (`[chaos]` only): start an ordinary
@@ -1262,6 +1618,7 @@ impl<'a> Simulation<'a> {
             .filter(|i| i.spot && i.lifecycle.accepts_work())
             .map(|i| i.id)
             .collect();
+        let now = self.now;
         let (victim, gap) = {
             let Some(ch) = self.chaos.as_mut() else { return };
             let victim = if spot.is_empty() {
@@ -1270,7 +1627,16 @@ impl<'a> Simulation<'a> {
                 Some(spot[ch.rng.below(spot.len() as u64) as usize])
             };
             let mtbf = ch.params.preempt_mtbf_ms;
-            (victim, ch.next_gap(mtbf))
+            let mut gap = ch.next_gap(mtbf);
+            // Spot availability curve: scale the *drawn* gap (the RNG
+            // stream itself is untouched — an empty schedule is
+            // bit-for-bit the flat path). Multiplier < 1 means scarcer
+            // capacity: the next preemption comes sooner.
+            if !ch.params.spot_avail_schedule.is_empty() {
+                let mult = schedule_value_at(&ch.params.spot_avail_schedule, now, 1.0);
+                gap = ((gap as f64) * mult).max(1.0) as TimeMs;
+            }
+            (victim, gap)
         };
         if let Some(v) = victim {
             self.handle_preempt_notice(v, router);
@@ -1489,15 +1855,24 @@ impl<'a> Simulation<'a> {
     /// A rejected client's backoff expired: re-anchor the SLO clock at
     /// the re-arrival (the client resubmitted — deadlines restart from
     /// now, not from the original arrival) and run the ordinary arrival
-    /// path, admission gate included.
+    /// path, admission gate included. With `[overload]
+    /// propagate_deadline`, the re-anchor is skipped: the clock stays
+    /// at the original arrival, so the retry carries only the
+    /// *remaining* end-to-end budget into every feasibility check.
     fn handle_retry_arrival(&mut self, idx: usize, router: &mut dyn Router) -> usize {
         debug_assert!(
             !self.requests[idx].shed && !self.requests[idx].is_finished(),
             "retry re-arrival for a settled request"
         );
-        let r = &mut self.requests[idx];
-        r.effective_arrival_ms = self.now;
-        r.tracker = DsloTracker::new(self.now, r.req.slo);
+        let propagate = self
+            .overload
+            .as_ref()
+            .is_some_and(|o| o.params.propagate_deadline);
+        if !propagate {
+            let r = &mut self.requests[idx];
+            r.effective_arrival_ms = self.now;
+            r.tracker = DsloTracker::new(self.now, r.req.slo);
+        }
         self.handle_arrival(idx, router)
     }
 
@@ -1782,6 +2157,28 @@ impl<'a> Simulation<'a> {
                 cost.spot_instance_ms += i.active_span_ms(span);
             }
         }
+        // Spot price *curve* billing: only when the run declared a
+        // stepwise schedule (`None` otherwise — the flat-discount
+        // default path is untouched). The on-demand slice bills at full
+        // rate; each spot instance's active span is integrated over the
+        // stepwise price, with the flat `spot_price_frac` applying
+        // ahead of the first step.
+        if let Some(ch) = self.chaos.as_ref() {
+            if !ch.params.spot_price_schedule.is_empty() {
+                let sched = &ch.params.spot_price_schedule;
+                let flat = ch.params.spot_price_frac;
+                let mut bill = (cost.active_instance_ms - cost.spot_instance_ms) as f64;
+                for i in &self.cluster.instances {
+                    if !i.spot {
+                        continue;
+                    }
+                    let start = i.born_ms;
+                    let end = start + i.active_span_ms(span);
+                    bill += integrate_spot_price(sched, flat, start, end);
+                }
+                cost.spot_curve_bill_ms = Some(bill.round() as u64);
+            }
+        }
         // Drain latencies: recorded at retirement; drains still open at
         // the end of the run are censored at the span (they cost at
         // least that long — keeps wait-drain tails honest).
@@ -1858,5 +2255,56 @@ impl<'a> Simulation<'a> {
             chaos: self.chaos.map(|c| c.stats).unwrap_or_default(),
             overload: ol,
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn domain_stride_is_zone_first() {
+        // zones=2, racks=2 over 8 ids: zone alternates, rack doubles.
+        let d: Vec<(u32, u32)> = (0..8).map(|id| domain_of(id, 2, 2)).collect();
+        assert_eq!(
+            d,
+            vec![(0, 0), (1, 0), (0, 1), (1, 1), (0, 0), (1, 0), (0, 1), (1, 1)]
+        );
+        // Degenerate inputs clamp to a single (0, 0) domain.
+        assert_eq!(domain_of(7, 0, 0), (0, 0));
+        // zones=1: the rack stripe is plain id % racks.
+        assert_eq!(domain_of(2, 1, 2), (0, 0));
+        assert_eq!(domain_of(3, 1, 2), (0, 1));
+    }
+
+    #[test]
+    fn schedule_value_steps_hold_until_the_next_edge() {
+        let sched = [(1_000, 0.3), (5_000, 0.9)];
+        assert_eq!(schedule_value_at(&sched, 0, 0.5), 0.5);
+        assert_eq!(schedule_value_at(&sched, 999, 0.5), 0.5);
+        assert_eq!(schedule_value_at(&sched, 1_000, 0.5), 0.3);
+        assert_eq!(schedule_value_at(&sched, 4_999, 0.5), 0.3);
+        assert_eq!(schedule_value_at(&sched, 5_000, 0.5), 0.9);
+        assert_eq!(schedule_value_at(&sched, u64::MAX, 0.5), 0.9);
+        assert_eq!(schedule_value_at(&[], 123, 0.5), 0.5);
+    }
+
+    #[test]
+    fn spot_price_integral_matches_piecewise_sum() {
+        let sched = [(1_000, 0.2), (3_000, 1.0)];
+        // [0, 4000): 1000 ms flat 0.5 + 2000 ms at 0.2 + 1000 ms at 1.0.
+        let got = integrate_spot_price(&sched, 0.5, 0, 4_000);
+        assert!((got - (500.0 + 400.0 + 1_000.0)).abs() < 1e-9, "{got}");
+        // A window entirely past the last step bills at the last price.
+        let tail = integrate_spot_price(&sched, 0.5, 10_000, 12_000);
+        assert!((tail - 2_000.0).abs() < 1e-9, "{tail}");
+        // Empty window bills nothing.
+        assert_eq!(integrate_spot_price(&sched, 0.5, 4_000, 4_000), 0.0);
+        // The flat-price satellite guarantee: a single step at t=0 with
+        // the flat price is bit-for-bit the flat bill.
+        let frac = 0.4;
+        let single = integrate_spot_price(&[(0, frac)], frac, 2_345, 9_876);
+        let flat = integrate_spot_price(&[], frac, 2_345, 9_876);
+        assert_eq!(single.to_bits(), flat.to_bits());
     }
 }

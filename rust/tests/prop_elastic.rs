@@ -16,8 +16,8 @@ use polyserve::model::{CostModel, ModelRegistry};
 use polyserve::profile::ProfileTable;
 use polyserve::metrics::ChaosStats;
 use polyserve::sim::{
-    ChaosParams, Cluster, ElasticParams, OverloadParams, PrefillElastic, PrefillJob, Role,
-    SimParams, SimRequest, SimResult, Simulation,
+    ChaosParams, Cluster, ElasticParams, FailDomain, OverloadParams, PrefillElastic, PrefillJob,
+    Role, SimParams, SimRequest, SimResult, Simulation,
 };
 use polyserve::slo::{Slo, TimeMs};
 use polyserve::util::prop::{check, Gen, IntRange, VecOf};
@@ -1309,6 +1309,44 @@ fn indexed_run_reproduces_scan_reference_bit_for_bit() {
     overload.overload.retry_base_ms = 200;
     overload.overload.retry_max_attempts = 2;
 
+    // The full PR 10 recovery layer live: failure domains with a
+    // correlated-kill MTBF process, periodic KV checkpoints, stepwise
+    // spot price/availability curves and the chaos-adaptive predictive
+    // scaler. Chaos draws, sweep order, avoid-zone re-placements and
+    // the SpotPolicy hysteresis are all part of the decision stream —
+    // every queue × index cell must replay them bit-for-bit.
+    let mut chaos = SimConfig {
+        trace: TraceKind::ShareGpt,
+        policy: Policy::PolyServe,
+        mode: ServingMode::PdDisaggregated,
+        instances: 6,
+        requests: 300,
+        rate_frac_of_optimal: 0.5,
+        seed: 61,
+        ..Default::default()
+    };
+    chaos.elastic.scaler = ScalerKind::Predictive;
+    chaos.elastic.min_instances = 2;
+    chaos.elastic.max_instances = 10;
+    chaos.elastic.provision_delay_ms = 3_000;
+    chaos.elastic.scale_eval_ms = 1_000;
+    chaos.elastic.migration = true;
+    chaos.elastic.prefill_elastic = true;
+    chaos.elastic.prefill_min = 1;
+    chaos.elastic.prefill_max = 4;
+    chaos.chaos.fail_mtbf_s = 40.0;
+    chaos.chaos.preempt_mtbf_s = 50.0;
+    chaos.chaos.preempt_grace_ms = 5_000;
+    chaos.chaos.spot_fraction = 0.5;
+    chaos.chaos.spot_price_frac = 0.4;
+    chaos.chaos.zones = 2;
+    chaos.chaos.racks_per_zone = 2;
+    chaos.chaos.domain_fail_mtbf_s = 80.0;
+    chaos.chaos.checkpoint_period_ms = 1_000;
+    chaos.chaos.spot_price_schedule = vec![0.0, 0.3, 60.0, 0.9];
+    chaos.chaos.spot_avail_schedule = vec![0.0, 1.0, 60.0, 0.5];
+    chaos.chaos.adaptive = true;
+
     for (label, cfg) in [
         ("pd_elastic", pd),
         ("coloc_elastic", co),
@@ -1316,6 +1354,7 @@ fn indexed_run_reproduces_scan_reference_bit_for_bit() {
         ("pd_no_gradient", ablated),
         ("pd_multi_model", multi),
         ("co_overload", overload),
+        ("pd_chaos_recovery", chaos),
     ] {
         // Baseline cell: calendar queue + ordered indices (the default
         // hot path). Every other (queue, index) combination must match.
@@ -1364,10 +1403,23 @@ fn indexed_run_reproduces_scan_reference_bit_for_bit() {
             );
         }
         assert_eq!(ordered.unfinished, 0, "{label}");
-        // The chaos machinery is compiled into every one of these cells
-        // but `[chaos]` is disabled: the layer must stay perfectly
-        // quiet — all-zero stats on every engine combination.
-        assert_eq!(ordered.chaos, ChaosStats::default(), "{label}: chaos must be off");
+        if label == "pd_chaos_recovery" {
+            // The chaos cell must actually exercise the recovery layer
+            // — the periodic sweep is deterministic, so at least the
+            // snapshots are guaranteed regardless of how the MTBF
+            // draws land on this seed.
+            assert!(
+                ordered.chaos.checkpoints > 0,
+                "{label}: the checkpoint sweep never fired: {:?}",
+                ordered.chaos
+            );
+        } else {
+            // The chaos machinery is compiled into every one of these
+            // cells but `[chaos]` is disabled: the layer must stay
+            // perfectly quiet — all-zero stats on every engine
+            // combination.
+            assert_eq!(ordered.chaos, ChaosStats::default(), "{label}: chaos must be off");
+        }
         if label == "co_overload" {
             // 2× saturation on a pinned 4-instance fleet must actually
             // engage the gate, or the cell tests nothing.
@@ -1524,21 +1576,32 @@ fn instance_failure_conserves_tokens_and_bills_to_the_failure() {
 /// Disabled chaos is the seed path bit-for-bit: `ChaosParams` with no
 /// schedule, no MTBF process and no spot fraction constructs no runtime
 /// — zero events, zero RNG draws, identical outcomes to `chaos: None`.
+/// A domain *model* alone (zones/racks striping, no kill process and
+/// no checkpoint period) must not enable it either: labelling the
+/// fleet is free until something can actually fail.
 #[test]
 fn disabled_chaos_params_change_nothing() {
     let a = chaos_fixture_run(None, None);
-    let b = chaos_fixture_run(
-        Some(ChaosParams {
+    let cells = [
+        ChaosParams {
             seed: 0xDEAD_BEEF, // an enabled run would draw from this
             ..Default::default()
-        }),
-        None,
-    );
-    assert_eq!(a.outcomes, b.outcomes);
-    assert_eq!(a.cost, b.cost);
-    assert_eq!(a.sim_span_ms, b.sim_span_ms);
-    assert_eq!(a.events_processed, b.events_processed);
-    assert_eq!(b.chaos, ChaosStats::default());
+        },
+        ChaosParams {
+            zones: 4,
+            racks_per_zone: 2,
+            seed: 0x5EED,
+            ..Default::default()
+        },
+    ];
+    for chaos in cells {
+        let b = chaos_fixture_run(Some(chaos), None);
+        assert_eq!(a.outcomes, b.outcomes);
+        assert_eq!(a.cost, b.cost);
+        assert_eq!(a.sim_span_ms, b.sim_span_ms);
+        assert_eq!(a.events_processed, b.events_processed);
+        assert_eq!(b.chaos, ChaosStats::default());
+    }
 }
 
 /// Token conservation across a spot preemption that drains in time: the
@@ -1604,6 +1667,321 @@ fn spot_preemption_deadline_kill_replaces_residents() {
     assert_eq!(res.chaos.preempt_drained, 0);
     assert!(res.chaos.replaced_requests >= 1);
     assert_eq!(res.migration.migrated_requests, 0, "wait-drain migrates nothing");
+}
+
+// ---------------------------------------------------------------------
+// Failure domains, KV checkpoints & recovery (the PR 10 layer).
+// ---------------------------------------------------------------------
+
+/// The exact checkpoint-restore ledger: the same hard kill replayed
+/// with and without periodic KV snapshots. The sweep is scheduling-
+/// neutral (it only writes watermarks and stats), so both runs kill
+/// the *same* victims with the *same* progress at t=2 s — which makes
+/// the conservation equations exact, not statistical:
+///
+/// * `reprefill_on + recovered_on == reprefill_off` — the re-prefilled
+///   suffix is exactly `prefill_done − checkpointed` per victim;
+/// * `lost_on + recovered_on == lost_off` — every KV token is either
+///   restored from a snapshot or billed as lost, never both.
+///
+/// With a 300 ms period against a t=2 s kill (300 ∤ 2000 — no same-ms
+/// sweep/kill tie) every victim's full 256-token prompt is covered, so
+/// the on-run re-prefills *nothing* and resumes decode directly.
+#[test]
+fn checkpoint_restore_reprefills_only_the_suffix() {
+    let off = chaos_fixture_run(
+        Some(ChaosParams {
+            fail_at: vec![(2_000, 2)],
+            ..Default::default()
+        }),
+        None,
+    );
+    let on = chaos_fixture_run(
+        Some(ChaosParams {
+            fail_at: vec![(2_000, 2)],
+            checkpoint_period_ms: 300,
+            ..Default::default()
+        }),
+        None,
+    );
+    for (label, res) in [("off", &off), ("on", &on)] {
+        assert_eq!(res.unfinished, 0, "{label}: victims must finish");
+        for o in &res.outcomes {
+            assert_eq!(
+                o.tokens, 3_000,
+                "{label}: request {} emitted {} of 3000 tokens across the kill",
+                o.id, o.tokens
+            );
+        }
+        assert_eq!(res.chaos.failures, 1, "{label}");
+        assert!(res.chaos.replaced_requests >= 1, "{label}: the kill must hit residents");
+    }
+    // Without a period the snapshot machinery never runs.
+    assert_eq!(off.chaos.checkpoints, 0);
+    assert_eq!(off.chaos.checkpoint_tokens, 0);
+    assert_eq!(off.chaos.recovered_kv_tokens, 0);
+    // With it, sweeps snapshot and bill their transfer cost.
+    assert!(on.chaos.checkpoints > 0, "sweeps must find residents to snapshot");
+    assert!(on.chaos.checkpoint_tokens > 0);
+    assert!(on.chaos.checkpoint_cost_ms > 0, "snapshot transfer must be billed");
+    // Scheduling neutrality: the same victims die either way.
+    assert_eq!(on.chaos.replaced_requests, off.chaos.replaced_requests);
+    // The exact conservation ledger.
+    assert_eq!(
+        on.chaos.reprefill_tokens + on.chaos.recovered_kv_tokens,
+        off.chaos.reprefill_tokens,
+        "the re-prefilled suffix must be exactly prefill_done - checkpointed"
+    );
+    assert_eq!(
+        on.chaos.lost_kv_tokens + on.chaos.recovered_kv_tokens,
+        off.chaos.lost_kv_tokens,
+        "every KV token is either restored or lost, never both"
+    );
+    // Checkpointing must strictly help, and here it covers everything:
+    // each victim's 256-token prompt was swept long before the kill, so
+    // the rewind lands at the full watermark and decode resumes without
+    // touching a prefill server.
+    assert!(on.chaos.recovered_kv_tokens > 0);
+    assert_eq!(off.chaos.reprefill_tokens, 256 * off.chaos.replaced_requests);
+    assert_eq!(on.chaos.reprefill_tokens, 0, "full coverage resumes decode directly");
+    assert_eq!(on.chaos.recovered_kv_tokens, 256 * on.chaos.replaced_requests);
+    assert!(on.chaos.lost_kv_tokens < off.chaos.lost_kv_tokens);
+}
+
+/// A correlated rack kill through the checkpoint layer: with `zones =
+/// 1, racks_per_zone = 2` the zone-first stripe puts instances {0, 2}
+/// in rack (0, 0) — the fleet's only prefill server *and* one of its
+/// two decode servers. The scheduled `FailDomain::Rack` draw kills
+/// both in one event. The run can only finish because every victim's
+/// prompt was checkpointed: with the prefill tier dead, a victim
+/// needing even one token of re-prefill would strand, so completion
+/// itself proves the snapshot restore (and the domain-spread fallback:
+/// with a single zone the avoid-zone pass has nowhere else to go and
+/// must still place on decode server 1).
+#[test]
+fn full_rack_kill_recovers_through_checkpoints() {
+    let res = chaos_fixture_run(
+        Some(ChaosParams {
+            zones: 1,
+            racks_per_zone: 2,
+            domain_fail_at: vec![(2_000, FailDomain::Rack { zone: 0, rack: 0 })],
+            checkpoint_period_ms: 500,
+            ..Default::default()
+        }),
+        None,
+    );
+    assert_eq!(res.unfinished, 0, "victims must finish on the surviving decode server");
+    for o in &res.outcomes {
+        assert_eq!(
+            o.tokens, 3_000,
+            "request {} emitted {} of 3000 tokens across the rack kill",
+            o.id, o.tokens
+        );
+    }
+    assert_eq!(res.chaos.domain_kills, 1, "one correlated draw");
+    assert_eq!(res.chaos.failures, 2, "the draw kills both rack members");
+    assert_eq!(res.chaos.kills_per_zone, vec![2]);
+    assert_eq!(res.chaos.preempt_notices, 0);
+    assert!(res.chaos.replaced_requests >= 1, "decode server 2 must have held residents");
+    assert_eq!(
+        res.chaos.reprefill_tokens, 0,
+        "full checkpoint coverage: nothing re-prefills (nothing could — prefill is dead)"
+    );
+    assert_eq!(
+        res.chaos.recovered_kv_tokens,
+        256 * res.chaos.replaced_requests,
+        "every victim restores its full 256-token prompt from the snapshot"
+    );
+    assert!(res.chaos.lost_kv_tokens > 0, "the un-checkpointed decode suffix still dies");
+}
+
+/// The avoid-zone hint is a preference, never a filter: with the hint
+/// set the gradient walk lands outside the avoided zone, and when the
+/// *whole fleet* sits inside it the fallback pass still places.
+#[test]
+fn avoid_zone_steers_placement_without_hard_filtering() {
+    let cm = CostModel::h200_llama8b();
+    let profile = ProfileTable::from_cost_model(&cm);
+    let cfg = SimConfig {
+        mode: ServingMode::Colocated,
+        ..Default::default()
+    };
+    let fresh_request = || {
+        let req: &'static Request = Box::leak(Box::new(Request {
+            id: 0,
+            arrival_ms: 0,
+            prefill_len: 64,
+            decode_len: 50,
+            slo: Slo::new(10_000, 100),
+            model: 0,
+        }));
+        SimRequest::new(req, 3)
+    };
+    let build = |domains: [(u32, u32); 4]| {
+        let mut cluster =
+            Cluster::build(ServingMode::Colocated, 4, 0.0, cfg.tiers.len(), &cm, true);
+        for (i, d) in domains.into_iter().enumerate() {
+            cluster.instances[i].domain = d;
+        }
+        cluster
+    };
+    let split = [(0, 0), (0, 1), (1, 0), (1, 1)];
+
+    // (a) Unhinted baseline: note which zone the walk picks.
+    let mut router = PolyServeRouter::new(&cfg, 300.0);
+    let mut cluster = build(split);
+    let mut reqs = vec![fresh_request()];
+    let za = {
+        let mut ctx = RouteCtx {
+            now: 0,
+            cluster: &mut cluster,
+            requests: &mut reqs,
+            profile: &profile,
+            mode: ServingMode::Colocated,
+            kv_transfer_ms: 2,
+        };
+        let a = router.route_new(0, 0, &mut ctx).expect("an idle fleet must place");
+        ctx.cluster.instances[a].domain.0
+    };
+
+    // (b) Same fleet, avoiding that zone: the steered walk must land in
+    // the other one.
+    let mut router = PolyServeRouter::new(&cfg, 300.0);
+    router.set_avoid_zone(Some(za));
+    let mut cluster = build(split);
+    let mut reqs = vec![fresh_request()];
+    {
+        let mut ctx = RouteCtx {
+            now: 0,
+            cluster: &mut cluster,
+            requests: &mut reqs,
+            profile: &profile,
+            mode: ServingMode::Colocated,
+            kv_transfer_ms: 2,
+        };
+        let b = router.route_new(0, 0, &mut ctx).expect("steering must not lose placements");
+        assert_ne!(
+            ctx.cluster.instances[b].domain.0, za,
+            "with capacity outside the blast radius the hint must steer there"
+        );
+    }
+
+    // (c) Every instance inside the avoided zone: the two-pass fallback
+    // still places — capacity beats the hint.
+    let mut router = PolyServeRouter::new(&cfg, 300.0);
+    router.set_avoid_zone(Some(0));
+    let mut cluster = build([(0, 0), (0, 0), (0, 1), (0, 1)]);
+    let mut reqs = vec![fresh_request()];
+    {
+        let mut ctx = RouteCtx {
+            now: 0,
+            cluster: &mut cluster,
+            requests: &mut reqs,
+            profile: &profile,
+            mode: ServingMode::Colocated,
+            kv_transfer_ms: 2,
+        };
+        let c = router
+            .route_new(0, 0, &mut ctx)
+            .expect("a fleet with capacity only inside the avoided zone must still place");
+        assert_eq!(ctx.cluster.instances[c].domain.0, 0);
+    }
+}
+
+/// `[overload] propagate_deadline` flips what a retry's feasibility
+/// check sees. The brutal 24-request storm sheds a wave of arrivals;
+/// with a 3 s retry base every backoff lands *after* the prefill queue
+/// has drained — and after every original TTFT deadline has passed.
+/// Re-anchored (default), the first-landing retry sees an empty queue
+/// and a fresh 600 ms budget: it must be admitted. Propagated, the
+/// remaining budget is already negative at re-arrival, so *every*
+/// retry is re-rejected and sheds. The two runs are bit-identical up
+/// to the first `RetryArrival` event (the flag is only read there), so
+/// the first-wave rejection sets are the same and the totals compare
+/// exactly; both runs must still conserve tokens to the ledger.
+#[test]
+fn propagated_deadline_rejects_what_reanchoring_admits() {
+    let run = |propagate: bool| {
+        let cm = CostModel::h200_llama8b();
+        let profile = ProfileTable::from_cost_model(&cm);
+        let cfg = SimConfig {
+            mode: ServingMode::PdDisaggregated,
+            ..Default::default()
+        };
+        let workload = Workload {
+            requests: (0..24u64)
+                .map(|i| Request {
+                    id: i,
+                    arrival_ms: i * 10,
+                    prefill_len: 3_000,
+                    decode_len: 50,
+                    slo: Slo::new(600, 100),
+                    model: 0,
+                })
+                .collect(),
+        };
+        let cluster =
+            Cluster::build(ServingMode::PdDisaggregated, 3, 0.34, cfg.tiers.len(), &cm, true);
+        let params = SimParams {
+            mode: ServingMode::PdDisaggregated,
+            overload: Some(OverloadParams {
+                reject: true,
+                retry: true,
+                retry_base_ms: 3_000,
+                retry_max_attempts: 1,
+                propagate_deadline: propagate,
+                seed: 0x0E71,
+            }),
+            ..Default::default()
+        };
+        let sim = Simulation::new(params, cm.clone(), &profile, &workload, cluster, &cfg.tiers);
+        let mut router = PolyServeRouter::new(&cfg, workload.avg_decode_len());
+        sim.run_elastic(&mut router, None)
+    };
+    let anchored = run(false);
+    let propagated = run(true);
+
+    for (label, res) in [("re-anchored", &anchored), ("propagated", &propagated)] {
+        assert_eq!(res.unfinished, 0, "{label}: accepted requests must all finish");
+        assert!(res.overload.rejected_total > 0, "{label}: the storm must shed");
+        let mut served = 0u64;
+        for o in &res.outcomes {
+            if o.rejected {
+                assert_eq!(o.tokens, 0, "{label}: rejected request {} emitted tokens", o.id);
+            } else {
+                assert_eq!(o.tokens, 50, "{label}: request {} lost tokens", o.id);
+                served += 1;
+            }
+        }
+        assert_eq!(res.cost.tokens_total, served * 50, "{label}: token ledger");
+        assert_eq!(
+            res.overload.shed_tokens,
+            res.overload.rejected_total * 50,
+            "{label}: shed ledger"
+        );
+    }
+    // Re-anchored: the retries land on a drained queue with a fresh
+    // budget — at least the first one is admitted late.
+    let admitted_retries = |r: &SimResult| r.overload.retry_histogram.iter().sum::<u64>();
+    assert!(
+        admitted_retries(&anchored) > 0,
+        "a re-anchored retry onto an empty queue must be admitted: {:?}",
+        anchored.overload
+    );
+    // Propagated: every retry re-arrives past its original deadline —
+    // the remaining budget is gone, so none can be admitted.
+    assert_eq!(
+        admitted_retries(&propagated),
+        0,
+        "a propagated deadline in the past must never re-admit: {:?}",
+        propagated.overload
+    );
+    assert!(
+        propagated.overload.rejected_total > anchored.overload.rejected_total,
+        "propagation must shed strictly more: {} vs {}",
+        propagated.overload.rejected_total,
+        anchored.overload.rejected_total
+    );
 }
 
 // ---------------------------------------------------------------------
@@ -1716,6 +2094,7 @@ fn rejection_composes_with_instance_failure_and_conserves_tokens() {
             retry: true,
             retry_base_ms: 100,
             retry_max_attempts: RETRY_MAX,
+            propagate_deadline: false,
             seed: 0x0E71,
         }),
         ..Default::default()
